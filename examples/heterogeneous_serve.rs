@@ -1,0 +1,77 @@
+//! Heterogeneous serving demo: the coordinator serving batched SpMV
+//! requests for several suite matrices across the CPU kernel path and
+//! the PJRT (AOT Pallas/XLA) path, reporting latency and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example heterogeneous_serve
+//! ```
+
+use std::sync::Arc;
+
+use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
+use csrk::runtime::Runtime;
+use csrk::sparse::{suite, SuiteScale};
+use csrk::util::table::{f, Table};
+use csrk::util::{Rng, ThreadPool};
+
+fn main() {
+    let pool = Arc::new(ThreadPool::with_available_parallelism());
+    let runtime = match Runtime::from_default_dir() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("PJRT disabled ({e}); CPU only");
+            None
+        }
+    };
+    let has_pjrt = runtime.is_some();
+    let registry = Arc::new(MatrixRegistry::new(pool, runtime));
+
+    // Register a slice of the suite spanning the rdensity range.
+    let names = ["roadNet-TX", "ecology1", "wave"];
+    let mut ncols = std::collections::HashMap::new();
+    for name in names {
+        let e = suite::by_name(name).unwrap();
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        ncols.insert(name, a.ncols());
+        let reg_t0 = std::time::Instant::now();
+        registry.register(name, a).unwrap();
+        println!("registered {name} in {:.1} ms", reg_t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    let mut table = Table::new(&["device", "matrix", "requests", "p50 us", "p99 us", "req/s"]).numeric();
+    for prefer_pjrt in [false, true] {
+        if prefer_pjrt && !has_pjrt {
+            continue;
+        }
+        let server = Server::start(
+            registry.clone(),
+            ServerConfig { prefer_pjrt, ..Default::default() },
+        );
+        let mut rng = Rng::new(7);
+        let requests = 600usize;
+        let t0 = std::time::Instant::now();
+        let mut pending = Vec::new();
+        for _ in 0..requests {
+            let name = *rng.choose(&names);
+            let n = ncols[name];
+            let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            pending.push(server.submit(name, x).1);
+        }
+        for rx in pending {
+            rx.recv().unwrap().result.expect("spmv ok");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        table.row(&[
+            if prefer_pjrt { "pjrt".into() } else { "cpu".into() },
+            "mixed(3)".into(),
+            requests.to_string(),
+            f(m.latency_us(50.0), 0),
+            f(m.latency_us(99.0), 0),
+            f(requests as f64 / dt, 0),
+        ]);
+        server.shutdown();
+    }
+    table.print();
+    println!("heterogeneous_serve OK");
+}

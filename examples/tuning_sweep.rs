@@ -1,0 +1,63 @@
+//! Reproduce the §4 tuning-model derivation: sweep `(SSRS, SRS)` over
+//! the suite on the simulated Volta, fit the logarithmic regression,
+//! and compare the derived formula against the paper's published
+//! constants (`SSRS = ⌊8.900 − 1.25·ln r⌉`, `SRS = ⌊10.146 − 1.50·ln r⌉`).
+//!
+//! ```bash
+//! cargo run --release --example tuning_sweep
+//! ```
+
+use csrk::gpusim::device::VOLTA_V100;
+use csrk::sparse::{suite, SuiteScale};
+use csrk::tuning::autotune::sweep_gpu;
+use csrk::tuning::model::{fit_damped, LogFormula};
+use csrk::util::table::{f, Table};
+
+fn main() {
+    // Sweep the sparse half of the suite (the GPUSpMV-3 regime where the
+    // formula is calibrated) at Tiny scale.
+    let mut rdens = Vec::new();
+    let mut best_ssrs = Vec::new();
+    let mut best_srs = Vec::new();
+    let mut table = Table::new(&["matrix", "rdensity", "opt SSRS", "opt SRS"]).numeric();
+    for e in suite::suite().iter().filter(|e| e.paper_rdensity() <= 8.0) {
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        let s = sweep_gpu(&a, &VOLTA_V100);
+        table.row(&[
+            e.name.into(),
+            f(s.rdensity, 2),
+            s.best.0.to_string(),
+            s.best.1.to_string(),
+        ]);
+        rdens.push(s.rdensity);
+        best_ssrs.push(s.best.0);
+        best_srs.push(s.best.1);
+    }
+    table.print();
+
+    let f_ssrs = fit_damped(&rdens, &best_ssrs, 0.85);
+    let f_srs = fit_damped(&rdens, &best_srs, 0.85);
+    let paper_ssrs = LogFormula { a: 8.900, b: -1.25 };
+    let paper_srs = LogFormula { a: 10.146, b: -1.50 };
+
+    println!("\nderived formulas (damped log regression, this testbed):");
+    println!("  SSRS = round({:.3} + {:.3} ln r)", f_ssrs.a, f_ssrs.b);
+    println!("  SRS  = round({:.3} + {:.3} ln r)", f_srs.a, f_srs.b);
+    println!("paper's Volta formulas:");
+    println!("  SSRS = round(8.900 - 1.250 ln r)");
+    println!("  SRS  = round(10.146 - 1.500 ln r)");
+
+    let mut cmp = Table::new(&["rdensity", "derived SSRS", "paper SSRS", "derived SRS", "paper SRS"]).numeric();
+    for r in [2.76, 2.99, 4.77, 4.99, 5.46, 6.0, 6.98] {
+        cmp.row(&[
+            f(r, 2),
+            f_ssrs.eval(r).to_string(),
+            paper_ssrs.eval(r).to_string(),
+            f_srs.eval(r).to_string(),
+            paper_srs.eval(r).to_string(),
+        ]);
+    }
+    println!();
+    cmp.print();
+    println!("tuning_sweep OK (shapes comparable; absolute constants are testbed-specific)");
+}

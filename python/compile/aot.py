@@ -1,0 +1,103 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are *shape buckets*: the Rust coordinator pads a matrix's
+padded-CSR export up to the nearest bucket ``(R, P)`` (vLLM-style shape
+bucketing) and binds the corresponding executable. ``manifest.txt``
+lists one artifact per line::
+
+    <name> <kind> <rows> <width> <ncols> <block_rows> <file>
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (rows, width) buckets; N == rows (square operators). Chosen to cover
+# the scaled Table 2 suite at Tiny/Small scale while keeping compile
+# time and VMEM bounded (see spmv_pallas.vmem_bytes).
+SPMV_BUCKETS = [
+    (1024, 8),
+    (1024, 16),
+    (4096, 8),
+    (4096, 16),
+    (4096, 32),
+    (16384, 8),
+    (16384, 16),
+]
+
+# solver-step buckets (CG / power iteration)
+STEP_BUCKETS = [
+    (1024, 8),
+    (4096, 8),
+    (4096, 16),
+]
+
+BLOCK_ROWS = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    """Lower ``fn(*args)`` and write HLO text; returns byte count."""
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+
+    for rows, width in SPMV_BUCKETS:
+        name = f"spmv_r{rows}_p{width}"
+        fn, ex = model.jit_spmv(rows, width, rows, BLOCK_ROWS)
+        fname = f"{name}.hlo.txt"
+        n = lower_to_file(fn, ex, os.path.join(args.out_dir, fname))
+        manifest.append(f"{name} spmv {rows} {width} {rows} {BLOCK_ROWS} {fname}")
+        print(f"wrote {fname} ({n} bytes)")
+
+    for rows, width in STEP_BUCKETS:
+        name = f"cg_step_r{rows}_p{width}"
+        fn, ex = model.jit_cg_step(rows, width, BLOCK_ROWS)
+        fname = f"{name}.hlo.txt"
+        n = lower_to_file(fn, ex, os.path.join(args.out_dir, fname))
+        manifest.append(f"{name} cg_step {rows} {width} {rows} {BLOCK_ROWS} {fname}")
+        print(f"wrote {fname} ({n} bytes)")
+
+        name = f"power_step_r{rows}_p{width}"
+        fn, ex = model.jit_power_step(rows, width, BLOCK_ROWS)
+        fname = f"{name}.hlo.txt"
+        n = lower_to_file(fn, ex, os.path.join(args.out_dir, fname))
+        manifest.append(f"{name} power_step {rows} {width} {rows} {BLOCK_ROWS} {fname}")
+        print(f"wrote {fname} ({n} bytes)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

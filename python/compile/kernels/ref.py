@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracle for the padded-SpMV Pallas kernel.
+
+The padded super-row layout (produced by the Rust side from a CSR-k
+matrix, see ``rust/src/sparse/csrk.rs::to_padded``) stores each row as a
+fixed-width strip of ``(col, val)`` pairs; padding entries carry the
+sentinel column ``N`` and value 0. ``x`` arrives with one extra zero
+slot at index ``N`` so the gather needs no masking.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_padded_ref(vals: jnp.ndarray, cols: jnp.ndarray, x_pad: jnp.ndarray) -> jnp.ndarray:
+    """Reference ``y = A @ x`` over the padded layout.
+
+    Args:
+      vals: ``[R, P]`` float32 values (padding zeros).
+      cols: ``[R, P]`` int32 column indices (padding = ``N``).
+      x_pad: ``[N + 1]`` float32; ``x_pad[N] == 0``.
+
+    Returns:
+      ``[R]`` float32.
+    """
+    return jnp.sum(vals * x_pad[cols], axis=1)
+
+
+def cg_step_ref(vals, cols, state):
+    """One conjugate-gradient iteration over the padded square operator
+    (R == N): ``state = (x, r, p, rs)``. Returns the updated state."""
+    x, r, p, rs = state
+    p_pad = jnp.concatenate([p, jnp.zeros((1,), p.dtype)])
+    ap = spmv_padded_ref(vals, cols, p_pad)
+    alpha = rs / jnp.dot(p, ap)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rs2 = jnp.dot(r2, r2)
+    beta = rs2 / rs
+    p2 = r2 + beta * p
+    return x2, r2, p2, rs2
+
+
+def power_step_ref(vals, cols, v):
+    """One power-iteration step: ``w = A v / ||A v||``. Returns
+    ``(w, rayleigh)`` with the Rayleigh quotient ``vᵀAv``."""
+    v_pad = jnp.concatenate([v, jnp.zeros((1,), v.dtype)])
+    av = spmv_padded_ref(vals, cols, v_pad)
+    rayleigh = jnp.dot(v, av)
+    norm = jnp.sqrt(jnp.dot(av, av))
+    return av / jnp.maximum(norm, 1e-30), rayleigh

@@ -1,0 +1,73 @@
+"""L1: the padded-super-row SpMV as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernels map CSR-k's row hierarchy onto thread blocks/warps; on TPU the
+equivalent hierarchy is (grid step → VMEM tile → VPU lanes). Each grid
+step owns one block of ``block_rows`` padded rows: its ``[block_rows, P]``
+``vals``/``cols`` tiles stream HBM→VMEM (the BlockSpec expresses the
+schedule a CUDA kernel would express with threadblocks), while the
+gathered ``x`` stays fully resident in VMEM — the analogue of the L1/
+shared-memory residency the GPU kernels exploit, with Band-k ordering
+keeping the gather footprint compact per block.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO; on a real TPU the same
+``pallas_call`` compiles to a Mosaic kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_block_kernel(cols_ref, vals_ref, x_ref, o_ref):
+    """One grid step: rows_block × P multiply-gather-reduce.
+
+    ``cols_ref``/``vals_ref`` are the block's VMEM tiles; ``x_ref`` is the
+    whole padded x (VMEM-resident); the padding sentinel points at the
+    trailing zero slot so no masking is needed — the paper's
+    GPUSpMV-3 inner product with the branch-free padding trick.
+    """
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    gathered = x_ref[cols.reshape(-1)].reshape(cols.shape)
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_padded(vals, cols, x_pad, *, block_rows: int = 128):
+    """``y = A @ x`` over the padded layout via a Pallas kernel.
+
+    Args:
+      vals: ``[R, P]`` float32, padding zeros.
+      cols: ``[R, P]`` int32, padding = ``N`` (gathers ``x_pad[N] == 0``).
+      x_pad: ``[N + 1]`` float32.
+      block_rows: rows per grid step (VMEM tile height); must divide R.
+
+    Returns:
+      ``[R]`` float32.
+    """
+    rows, width = vals.shape
+    assert cols.shape == (rows, width), (cols.shape, vals.shape)
+    assert rows % block_rows == 0, f"R={rows} not divisible by {block_rows}"
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _spmv_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec(x_pad.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), vals.dtype),
+        interpret=True,
+    )(cols, vals, x_pad)
+
+
+def vmem_bytes(rows_block: int, width: int, n: int) -> int:
+    """Estimated VMEM footprint of one grid step (DESIGN.md §Perf):
+    vals + cols tiles, the resident x, and the output strip."""
+    return rows_block * width * (4 + 4) + (n + 1) * 4 + rows_block * 4

@@ -1,0 +1,92 @@
+"""L2: the JAX compute graphs exported to the Rust runtime.
+
+Build-time only — Python never runs on the request path. Each function
+here is jitted, calls the L1 Pallas kernel for the SpMV hot-spot, and is
+lowered by ``aot.py`` to HLO text the Rust PJRT client loads.
+
+The exported graphs mirror the paper's motivating workloads (§1:
+iterative solvers):
+
+* ``spmv``        — one operator application (the serving hot path);
+* ``cg_step``     — one conjugate-gradient iteration (state in, state
+  out, so the Rust coordinator owns the loop and convergence test);
+* ``power_step``  — one power-method iteration with Rayleigh quotient.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv_pallas import spmv_padded
+
+
+def spmv(vals, cols, x_pad, *, block_rows: int = 128):
+    """``y = A @ x`` — L1 kernel pass-through (tuple output for AOT)."""
+    return (spmv_padded(vals, cols, x_pad, block_rows=block_rows),)
+
+
+def cg_step(vals, cols, x, r, p, rs, *, block_rows: int = 128):
+    """One CG iteration on the padded square operator (R == N).
+
+    Args:
+      vals/cols: padded operator tiles ``[R, P]``.
+      x, r, p: CG state vectors ``[R]``.
+      rs: scalar ``rᵀr`` from the previous iteration.
+
+    Returns:
+      ``(x', r', p', rs')``.
+    """
+    p_pad = jnp.concatenate([p, jnp.zeros((1,), p.dtype)])
+    ap = spmv_padded(vals, cols, p_pad, block_rows=block_rows)
+    alpha = rs / jnp.dot(p, ap)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rs2 = jnp.dot(r2, r2)
+    beta = rs2 / rs
+    p2 = r2 + beta * p
+    return x2, r2, p2, rs2
+
+
+def power_step(vals, cols, v, *, block_rows: int = 128):
+    """One power-method step: returns ``(v', rayleigh)``."""
+    v_pad = jnp.concatenate([v, jnp.zeros((1,), v.dtype)])
+    av = spmv_padded(vals, cols, v_pad, block_rows=block_rows)
+    rayleigh = jnp.dot(v, av)
+    norm = jnp.sqrt(jnp.dot(av, av))
+    return av / jnp.maximum(norm, 1e-30), rayleigh
+
+
+def jit_spmv(rows: int, width: int, n: int, block_rows: int = 128):
+    """Jitted + shape-specialized ``spmv`` and its example args."""
+    fn = jax.jit(lambda v, c, x: spmv(v, c, x, block_rows=block_rows))
+    args = (
+        jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        jax.ShapeDtypeStruct((rows, width), jnp.int32),
+        jax.ShapeDtypeStruct((n + 1,), jnp.float32),
+    )
+    return fn, args
+
+
+def jit_cg_step(rows: int, width: int, block_rows: int = 128):
+    """Jitted + shape-specialized ``cg_step`` (square: N == R)."""
+    fn = jax.jit(lambda v, c, x, r, p, rs: cg_step(v, c, x, r, p, rs, block_rows=block_rows))
+    vec = jax.ShapeDtypeStruct((rows,), jnp.float32)
+    args = (
+        jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        jax.ShapeDtypeStruct((rows, width), jnp.int32),
+        vec,
+        vec,
+        vec,
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return fn, args
+
+
+def jit_power_step(rows: int, width: int, block_rows: int = 128):
+    """Jitted + shape-specialized ``power_step`` (square: N == R)."""
+    fn = jax.jit(lambda v, c, x: power_step(v, c, x, block_rows=block_rows))
+    args = (
+        jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        jax.ShapeDtypeStruct((rows, width), jnp.int32),
+        jax.ShapeDtypeStruct((rows,), jnp.float32),
+    )
+    return fn, args

@@ -1,0 +1,106 @@
+"""L1 kernel correctness: Pallas padded SpMV vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, densities and padding patterns; numpy builds a
+dense reference independently of jax so the oracle itself is checked.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import spmv_padded_ref
+from compile.kernels.spmv_pallas import spmv_padded, vmem_bytes
+
+
+def random_padded(rng, rows, width, n, pad_prob=0.3):
+    """Random padded layout + the dense matrix it encodes."""
+    cols = rng.integers(0, n, size=(rows, width), dtype=np.int32)
+    vals = rng.standard_normal((rows, width)).astype(np.float32)
+    pad = rng.random((rows, width)) < pad_prob
+    cols[pad] = n  # sentinel
+    vals[pad] = 0.0
+    dense = np.zeros((rows, n), dtype=np.float64)
+    for i in range(rows):
+        for k in range(width):
+            if cols[i, k] < n:
+                dense[i, cols[i, k]] += vals[i, k]
+    return cols, vals, dense
+
+
+def x_with_pad(rng, n):
+    x = rng.standard_normal(n).astype(np.float32)
+    return np.concatenate([x, np.zeros(1, np.float32)]), x
+
+
+@given(
+    rows_blocks=st.integers(1, 3),
+    width=st.integers(1, 9),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_kernel_matches_dense_reference(rows_blocks, width, n, seed):
+    """Pallas kernel == independent numpy dense product."""
+    block = 4  # small block size so tiny shapes exercise multiple steps
+    rows = rows_blocks * block
+    rng = np.random.default_rng(seed)
+    cols, vals, dense = random_padded(rng, rows, width, n)
+    x_pad, x = x_with_pad(rng, n)
+    y = np.asarray(spmv_padded(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x_pad), block_rows=block))
+    expect = dense @ x.astype(np.float64)
+    np.testing.assert_allclose(y, expect, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    width=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_kernel_matches_jnp_oracle(width, seed):
+    """Pallas kernel == jnp reference on the default block size."""
+    rows, n = 256, 300
+    rng = np.random.default_rng(seed)
+    cols, vals, _ = random_padded(rng, rows, width, n)
+    x_pad, _ = x_with_pad(rng, n)
+    got = np.asarray(spmv_padded(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x_pad), block_rows=128))
+    want = np.asarray(spmv_padded_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x_pad)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_all_padding_rows_give_zero():
+    rows, width, n = 8, 4, 10
+    cols = np.full((rows, width), n, dtype=np.int32)
+    vals = np.zeros((rows, width), dtype=np.float32)
+    x_pad = np.ones(n + 1, dtype=np.float32)
+    x_pad[n] = 0.0
+    y = np.asarray(spmv_padded(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x_pad), block_rows=4))
+    np.testing.assert_array_equal(y, np.zeros(rows, np.float32))
+
+
+def test_identity_matrix_roundtrips_x():
+    n = 64
+    cols = np.arange(n, dtype=np.int32).reshape(n, 1)
+    vals = np.ones((n, 1), dtype=np.float32)
+    x = np.linspace(-1, 1, n).astype(np.float32)
+    x_pad = np.concatenate([x, np.zeros(1, np.float32)])
+    y = np.asarray(spmv_padded(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x_pad), block_rows=16))
+    np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+def test_block_rows_must_divide():
+    vals = jnp.zeros((10, 2), jnp.float32)
+    cols = jnp.zeros((10, 2), jnp.int32)
+    x = jnp.zeros((5,), jnp.float32)
+    with pytest.raises(AssertionError):
+        spmv_padded(vals, cols, x, block_rows=4)
+
+
+def test_vmem_estimate_under_budget_for_buckets():
+    """The §Perf contract: every AOT bucket's working set fits VMEM."""
+    from compile.aot import SPMV_BUCKETS, BLOCK_ROWS
+
+    for rows, width in SPMV_BUCKETS:
+        b = vmem_bytes(BLOCK_ROWS, width, rows)
+        assert b < 16 * 1024 * 1024, f"bucket {(rows, width)}: {b} bytes"

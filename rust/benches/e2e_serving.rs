@@ -1,0 +1,59 @@
+//! End-to-end serving bench: coordinator + kernels + (when artifacts
+//! exist) the PJRT path, measuring the request-path hot loop.
+
+use std::sync::Arc;
+
+use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
+use csrk::runtime::Runtime;
+use csrk::sparse::{suite, SuiteScale};
+use csrk::util::table::{f, Table};
+use csrk::util::ThreadPool;
+
+fn main() {
+    let scale = SuiteScale::from_env(SuiteScale::Small);
+    let pool = Arc::new(ThreadPool::with_available_parallelism());
+    let runtime = Runtime::from_default_dir().ok().map(Arc::new);
+    let has_pjrt = runtime.is_some();
+    if !has_pjrt {
+        println!("(artifacts missing — PJRT rows skipped; run `make artifacts`)");
+    }
+    let registry = Arc::new(MatrixRegistry::new(pool, runtime));
+    let name = "ecology1";
+    let e = suite::by_name(name).unwrap();
+    // PJRT buckets top out at 16384 rows; use Tiny for the PJRT pass
+    let a = e.build::<f32>(if has_pjrt { SuiteScale::Tiny } else { scale });
+    let ncols = a.ncols();
+    let nnz = a.nnz();
+    registry.register(name, a).unwrap();
+
+    println!("== e2e serving bench: {name} ({ncols} cols, {nnz} nnz) ==\n");
+    let mut t = Table::new(&["path", "requests", "p50 us", "p99 us", "req/s", "GFlop/s"]).numeric();
+    for prefer_pjrt in [false, true] {
+        if prefer_pjrt && !has_pjrt {
+            continue;
+        }
+        let server = Server::start(
+            registry.clone(),
+            ServerConfig { prefer_pjrt, ..Default::default() },
+        );
+        let requests = if prefer_pjrt { 200 } else { 2000 };
+        let x = vec![0.5f32; ncols];
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..requests).map(|_| server.submit(name, x.clone()).1).collect();
+        for rx in rxs {
+            rx.recv().unwrap().result.expect("ok");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        t.row(&[
+            if prefer_pjrt { "pjrt".into() } else { "cpu".into() },
+            requests.to_string(),
+            f(m.latency_us(50.0), 0),
+            f(m.latency_us(99.0), 0),
+            f(requests as f64 / dt, 0),
+            f(2.0 * nnz as f64 * requests as f64 / dt / 1e9, 2),
+        ]);
+        server.shutdown();
+    }
+    t.print();
+}

@@ -1,0 +1,60 @@
+//! Fig 11: constant-time CPU tuning — fixed SRS = 96 vs each matrix's
+//! swept-optimal SRS, as relative performance (0 = optimal).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use std::sync::Arc;
+
+use csrk::kernels::{Csr2Kernel, SpMv};
+use csrk::reorder::bandk;
+use csrk::sparse::{suite, CsrK};
+use csrk::tuning::cpu::{cpu_sweep_values, FIXED_SRS};
+use csrk::util::stats;
+use csrk::util::table::{pct, Table};
+use csrk::util::{Bencher, ThreadPool};
+
+fn main() {
+    let scale = support::bench_scale();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool = Arc::new(ThreadPool::new(threads));
+    println!("== Fig 11: fixed SRS = {FIXED_SRS} vs per-matrix optimal, {threads} thread(s), {scale:?} scale ==\n");
+    let b = Bencher::new().warmups(1).runs(3);
+
+    let mut t = Table::new(&["matrix", "optimal SRS", "relperf (fixed vs optimal)"]).numeric();
+    let mut rels = Vec::new();
+    let mut optima = Vec::new();
+    for e in suite::suite() {
+        let a = e.build::<f32>(scale);
+        let ord = bandk(&a, 2, FIXED_SRS, 1, 0xC52D);
+        let pa = ord.perm.apply_sym(&a);
+        let x: Vec<f32> = (0..pa.ncols()).map(|i| (i % 11) as f32 / 11.0).collect();
+        let mut y = vec![0f32; pa.nrows()];
+        let mut best = (FIXED_SRS, f64::INFINITY);
+        let mut t_fixed = f64::INFINITY;
+        for srs in cpu_sweep_values() {
+            let k = Csr2Kernel::new(CsrK::csr2_uniform(pa.clone(), srs), pool.clone());
+            let m = b.run("srs", || k.spmv(&x, &mut y)).mean_s();
+            if m < best.1 {
+                best = (srs, m);
+            }
+            if srs == FIXED_SRS {
+                t_fixed = m;
+            }
+        }
+        let rp = csrk::util::bench::relative_performance(best.1, t_fixed);
+        t.row(&[e.name.into(), best.0.to_string(), pct(rp, 1)]);
+        rels.push(rp);
+        optima.push(best.0);
+    }
+    t.print();
+    let geo = stats::geomean(&optima.iter().map(|&s| s as f64).collect::<Vec<_>>());
+    let trimmed: Vec<f64> = rels.iter().copied().filter(|&r| r > -20.0).collect();
+    println!("\ngeomean of optimal SRS: {geo:.0}  [paper: 81, rounded up to 96]");
+    println!(
+        "mean relperf of fixed SRS=96: {:.1}% (all), {:.1}% (outliers < -20% removed)",
+        stats::mean(&rels),
+        stats::mean(&trimmed)
+    );
+    println!("paper: -10.2% with outliers, -3.5% without.");
+}

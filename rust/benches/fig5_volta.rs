@@ -1,0 +1,61 @@
+//! Fig 5: Volta performance — GFlop/s (5a) and relative performance vs
+//! cuSPARSE (5b) for CSR-3 vs cuSPARSE, KokkosKernels and CSR5, on the
+//! simulated V100.
+//!
+//! Orderings per §5.3: cuSPARSE/Kokkos get RCM; CSR5 natural; CSR-k
+//! applies its own Band-k to the natural ordering.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use csrk::gpusim::baselines::{simulate_csr5_gpu, simulate_cusparse, simulate_kokkos};
+use csrk::gpusim::device::VOLTA_V100;
+use csrk::sparse::{suite, Csr5};
+use csrk::tuning::Device;
+use csrk::util::stats;
+use csrk::util::table::{f, pct, Table};
+
+fn main() {
+    let scale = support::bench_scale();
+    println!("== Fig 5: Volta (simulated V100), suite at {scale:?} scale ==\n");
+    let mut t = Table::new(&["matrix", "rdens", "cuSPARSE", "Kokkos", "CSR5", "CSR-3", "relperf 5b"]).numeric();
+    let (mut g_cu, mut g_kk, mut g_c5, mut g_k3, mut rel) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for e in suite::suite() {
+        let a = e.build::<f32>(scale);
+        let a_rcm = support::rcm_reordered(&a);
+        let r_cu = simulate_cusparse(&a_rcm, &VOLTA_V100);
+        let r_kk = simulate_kokkos(&a_rcm, &VOLTA_V100);
+        let c5 = Csr5::from_csr(&a, 4, 16);
+        let r_c5 = simulate_csr5_gpu(&c5, a.nnz(), &VOLTA_V100);
+        let r_k3 = support::simulate_csrk_tuned(&a, Device::Volta, &VOLTA_V100);
+        let rp = support::relperf(r_cu.time_s, r_k3.time_s);
+        t.row(&[
+            e.name.into(),
+            f(a.rdensity(), 2),
+            f(r_cu.gflops, 1),
+            f(r_kk.gflops, 1),
+            f(r_c5.gflops, 1),
+            f(r_k3.gflops, 1),
+            pct(rp, 1),
+        ]);
+        g_cu.push(r_cu.gflops);
+        g_kk.push(r_kk.gflops);
+        g_c5.push(r_c5.gflops);
+        g_k3.push(r_k3.gflops);
+        rel.push(rp);
+    }
+    t.print();
+    println!(
+        "\naverages (dashed lines in 5a): cuSPARSE {:.1}, Kokkos {:.1}, CSR5 {:.1}, CSR-3 {:.1} GFlop/s",
+        stats::mean(&g_cu),
+        stats::mean(&g_kk),
+        stats::mean(&g_c5),
+        stats::mean(&g_k3)
+    );
+    println!(
+        "average relative performance of CSR-3 vs cuSPARSE (5b): {:.1}%  [paper: +17.3%]",
+        stats::mean(&rel)
+    );
+    println!("paper 5a averages: cuSPARSE 79.6, Kokkos 80.9, CSR5 92.4, CSR-3 87.7 GFlop/s");
+}

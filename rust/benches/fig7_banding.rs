@@ -1,0 +1,68 @@
+//! Fig 7: banding analysis — is CSR-k's win due to a superior banding
+//! algorithm? (Paper's answer: no; its Band-k is *worse* than RCM.)
+//!
+//! Configurations, all relative to KokkosKernels(RCM) = 0:
+//!   Kokkos(natural), Kokkos(Band-k-as-CSR), Kokkos(RCM),
+//!   CSR-k(Band-k), CSR-k(RCM then Band-k).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use csrk::gpusim::baselines::simulate_kokkos;
+use csrk::gpusim::csrk_sim::{simulate_gpuspmv3, simulate_gpuspmv35};
+use csrk::gpusim::device::VOLTA_V100;
+use csrk::reorder::bandk;
+use csrk::sparse::suite;
+use csrk::tuning::{csr3_params, Device};
+use csrk::util::stats;
+use csrk::util::table::{pct, Table};
+
+fn main() {
+    let scale = support::bench_scale();
+    println!("== Fig 7: banding analysis (simulated V100), suite at {scale:?} scale ==\n");
+    let mut rels: [Vec<f64>; 5] = Default::default();
+    let labels = [
+        "Kokkos (natural)",
+        "Kokkos (Band-k)",
+        "Kokkos (RCM)",
+        "CSR-k (Band-k)",
+        "CSR-k (RCM + Band-k)",
+    ];
+    for e in suite::suite() {
+        let a = e.build::<f32>(scale);
+        let p = csr3_params(Device::Volta, a.rdensity());
+        let ord = bandk(&a, 3, p.srs.max(2), p.ssrs.max(2), 0xC52D);
+        let a_bandk_csr = ord.perm.apply_sym(&a); // Band-k reduced to CSR
+        let a_rcm = support::rcm_reordered(&a);
+
+        let base = simulate_kokkos(&a_rcm, &VOLTA_V100).time_s; // Kokkos(RCM)
+        let t_nat = simulate_kokkos(&a, &VOLTA_V100).time_s;
+        let t_bk = simulate_kokkos(&a_bandk_csr, &VOLTA_V100).time_s;
+
+        let sim_k = |m: &csrk::sparse::Csr<f32>| {
+            let ord = bandk(m, 3, p.srs.max(2), p.ssrs.max(2), 0xC52D);
+            let k = ord.apply(m);
+            if p.use_35 {
+                simulate_gpuspmv35(&k, &VOLTA_V100, p.dims).time_s
+            } else {
+                simulate_gpuspmv3(&k, &VOLTA_V100, p.dims).time_s
+            }
+        };
+        let t_csrk = sim_k(&a);
+        let t_csrk_rcm = sim_k(&a_rcm); // RCM first, then Band-k
+
+        for (i, t) in [t_nat, t_bk, base, t_csrk, t_csrk_rcm].iter().enumerate() {
+            rels[i].push(support::relperf(base, *t));
+        }
+    }
+    let mut t = Table::new(&["configuration", "mean relperf vs Kokkos(RCM)"]).numeric();
+    for (label, r) in labels.iter().zip(&rels) {
+        t.row(&[label.to_string(), pct(stats::mean(r), 1)]);
+    }
+    t.print();
+    println!(
+        "\npaper's shape: all CSR-k configs > 0; Kokkos(Band-k) is the worst\n\
+         (below even natural) — Band-k is a worse pure-banding algorithm, so\n\
+         CSR-k's advantage is the format, not the ordering."
+    );
+}

@@ -1,0 +1,17 @@
+//! Fig 8: CPU performance, Ice Lake profile — CSR-2 vs the MKL proxy vs
+//! CSR5 (GFlop/s + relative perf). On this testbed the profile runs with
+//! as many threads as the host provides; the paper used 40 (one socket).
+
+#[path = "support/mod.rs"]
+mod support;
+#[path = "support/cpu.rs"]
+mod cpu;
+
+fn main() {
+    cpu::run_cpu_figure(
+        "Fig 8",
+        "Ice Lake (Xeon Platinum 8380)",
+        "paper: MKL 52.3, CSR5 17.1, CSR-k 49.3 GFlop/s; relperf -5.4% \
+         (CSR-k slightly behind MKL on Ice Lake)",
+    );
+}

@@ -1,0 +1,17 @@
+//! Fig 9: CPU performance, Rome profile — CSR-2 vs the MKL proxy vs
+//! CSR5. The paper used 64 threads (one Epyc 7742 socket); here the
+//! host's full parallelism stands in.
+
+#[path = "support/mod.rs"]
+mod support;
+#[path = "support/cpu.rs"]
+mod cpu;
+
+fn main() {
+    cpu::run_cpu_figure(
+        "Fig 9",
+        "Rome (Epyc 7742)",
+        "paper: MKL 75.1, CSR5 16.8, CSR-k 72.5 GFlop/s; relperf +1.3% \
+         (CSR-k on par with MKL on Rome)",
+    );
+}

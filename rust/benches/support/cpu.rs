@@ -1,0 +1,105 @@
+//! Shared CPU-figure machinery (Figs 8, 9, 10, 11).
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use csrk::kernels::{Csr2Kernel, Csr5Kernel, CsrParallel, SpMv};
+use csrk::reorder::bandk;
+use csrk::sparse::{suite::SuiteEntry, Csr, Csr5, CsrK, SuiteScale};
+use csrk::util::{Bencher, ThreadPool};
+
+/// One matrix's CPU measurements in GFlop/s.
+pub struct CpuRow {
+    pub name: &'static str,
+    pub rdensity: f64,
+    pub mkl_proxy: f64,
+    pub csr5: f64,
+    pub csr2: f64,
+    pub t_mkl: f64,
+    pub t_csr2: f64,
+}
+
+/// Paper protocol scaled for CI: 2 warmups, 5 timed runs.
+pub fn protocol() -> Bencher {
+    Bencher::new().warmups(2).runs(5)
+}
+
+/// Measure the three CPU contenders on one suite entry:
+/// * MKL proxy — parallel CSR fed the RCM ordering (§5.3);
+/// * CSR5 — ω=8, σ=16 tiles, natural ordering;
+/// * CSR-2 — Band-k ordering + the given SRS.
+pub fn measure_entry(
+    e: &SuiteEntry,
+    scale: SuiteScale,
+    pool: &Arc<ThreadPool>,
+    srs: usize,
+) -> CpuRow {
+    let a: Csr<f32> = e.build(scale);
+    let flops = a.spmv_flops();
+    let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 29 + 3) % 17) as f32 / 17.0).collect();
+    let mut y = vec![0f32; a.nrows()];
+    let b = protocol();
+
+    let a_rcm = csrk::reorder::rcm(&csrk::reorder::Graph::from_csr_pattern(&a)).apply_sym(&a);
+    let mkl = CsrParallel::new(a_rcm, pool.clone());
+    let t_mkl = b.run("mkl", || mkl.spmv(&x, &mut y)).mean_s();
+
+    let c5 = Csr5Kernel::new(Csr5::from_csr(&a, 8, 16), a.nnz(), pool.clone());
+    let t_c5 = b.run("csr5", || c5.spmv(&x, &mut y)).mean_s();
+
+    let ord = bandk(&a, 2, srs, 1, 0xC52D);
+    let k2 = Csr2Kernel::new(
+        CsrK::csr2_uniform(ord.perm.apply_sym(&a), srs),
+        pool.clone(),
+    );
+    let t_k2 = b.run("csr2", || k2.spmv(&x, &mut y)).mean_s();
+
+    CpuRow {
+        name: e.name,
+        rdensity: a.rdensity(),
+        mkl_proxy: flops / t_mkl / 1e9,
+        csr5: flops / t_c5 / 1e9,
+        csr2: flops / t_k2 / 1e9,
+        t_mkl,
+        t_csr2: t_k2,
+    }
+}
+
+/// Run the whole suite and print the paper-style figure.
+pub fn run_cpu_figure(fig: &str, paper_label: &str, paper_note: &str) {
+    use csrk::util::stats;
+    use csrk::util::table::{f, pct, Table};
+
+    let scale = SuiteScale::from_env(SuiteScale::Medium);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool = Arc::new(ThreadPool::new(threads));
+    println!("== {fig}: {paper_label} profile, {threads} thread(s), suite at {scale:?} scale ==\n");
+    let mut t = Table::new(&["matrix", "rdens", "MKL-proxy", "CSR5", "CSR-2", "relperf b"]).numeric();
+    let (mut g_m, mut g_5, mut g_2, mut rel) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for e in csrk::sparse::suite::suite() {
+        let r = measure_entry(e, scale, &pool, csrk::tuning::cpu::FIXED_SRS);
+        let rp = csrk::util::bench::relative_performance(r.t_mkl, r.t_csr2);
+        t.row(&[
+            r.name.into(),
+            f(r.rdensity, 2),
+            f(r.mkl_proxy, 2),
+            f(r.csr5, 2),
+            f(r.csr2, 2),
+            pct(rp, 1),
+        ]);
+        g_m.push(r.mkl_proxy);
+        g_5.push(r.csr5);
+        g_2.push(r.csr2);
+        rel.push(rp);
+    }
+    t.print();
+    println!(
+        "\naverages: MKL-proxy {:.2}, CSR5 {:.2}, CSR-2 {:.2} GFlop/s; mean relperf {:.1}%",
+        stats::mean(&g_m),
+        stats::mean(&g_5),
+        stats::mean(&g_2),
+        stats::mean(&rel)
+    );
+    println!("{paper_note}");
+}

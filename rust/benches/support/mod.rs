@@ -1,0 +1,44 @@
+//! Shared scaffolding for the figure benches (compiled into each bench
+//! target via `#[path]`).
+
+#![allow(dead_code)]
+
+use csrk::gpusim::csrk_sim::{simulate_gpuspmv3, simulate_gpuspmv35};
+use csrk::gpusim::{DeviceSpec, SimResult};
+use csrk::reorder::{bandk, rcm, Graph, Permutation};
+use csrk::sparse::{Csr, SuiteScale};
+use csrk::tuning::{csr3_params, Device};
+
+/// Bench scale from the environment (default Medium ≈ paper N / 64 —
+/// large enough that simulated kernel bodies dominate launch overhead).
+pub fn bench_scale() -> SuiteScale {
+    SuiteScale::from_env(SuiteScale::Medium)
+}
+
+/// RCM-reorder a matrix (what the paper feeds cuSPARSE / Kokkos / MKL).
+pub fn rcm_reordered(a: &Csr<f32>) -> Csr<f32> {
+    rcm(&Graph::from_csr_pattern(a)).apply_sym(a)
+}
+
+/// RCM permutation only.
+pub fn rcm_perm(a: &Csr<f32>) -> Permutation {
+    rcm(&Graph::from_csr_pattern(a))
+}
+
+/// Simulate tuned CSR-3 (Band-k from natural ordering + §4 constant-time
+/// parameters) on a device — the paper's CSR-k configuration.
+pub fn simulate_csrk_tuned(a: &Csr<f32>, dev: Device, spec: &DeviceSpec) -> SimResult {
+    let p = csr3_params(dev, a.rdensity());
+    let ord = bandk(a, 3, p.srs.max(2), p.ssrs.max(2), 0xC52D);
+    let k = ord.apply(a);
+    if p.use_35 {
+        simulate_gpuspmv35(&k, spec, p.dims)
+    } else {
+        simulate_gpuspmv3(&k, spec, p.dims)
+    }
+}
+
+/// Paper metric: relative performance vs a baseline time (±100 scale).
+pub fn relperf(t_base: f64, t_ours: f64) -> f64 {
+    csrk::util::bench::relative_performance(t_base, t_ours)
+}

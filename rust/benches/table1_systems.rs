@@ -1,0 +1,55 @@
+//! Table 1: systems used for testing — the paper's testbeds vs the
+//! substituted simulation/profile testbeds in this reproduction.
+
+use csrk::gpusim::device::{AMPERE_A100, VOLTA_V100};
+use csrk::util::table::Table;
+
+fn main() {
+    println!("== Table 1: test systems (paper) vs substitutes (this repo) ==\n");
+    let mut t = Table::new(&["System", "Label", "Paper hardware", "Reproduction substitute"]);
+    t.row(&[
+        "1".into(),
+        "Volta".into(),
+        "2x Xeon E5-2650v4 + NVIDIA V100 (32GB, 900GB/s)".into(),
+        format!(
+            "gpusim {} ({} SMs, {:.0} GB/s, L1 {} KiB/SM, L2 {} MiB)",
+            VOLTA_V100.name,
+            VOLTA_V100.sm_count,
+            VOLTA_V100.mem_bw_gbps,
+            VOLTA_V100.l1_bytes / 1024,
+            VOLTA_V100.l2_bytes / (1 << 20)
+        ),
+    ]);
+    t.row(&[
+        "2".into(),
+        "Ampere".into(),
+        "2x Epyc 7713 + NVIDIA A100 (40GB, 1555GB/s)".into(),
+        format!(
+            "gpusim {} ({} SMs, {:.0} GB/s, L1 {} KiB/SM, L2 {} MiB)",
+            AMPERE_A100.name,
+            AMPERE_A100.sm_count,
+            AMPERE_A100.mem_bw_gbps,
+            AMPERE_A100.l1_bytes / 1024,
+            AMPERE_A100.l2_bytes / (1 << 20)
+        ),
+    ]);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    t.row(&[
+        "3".into(),
+        "Rome".into(),
+        "2x Epyc 7742 (128 cores), 256 GB".into(),
+        format!("host CPU profile ({hw} hw threads), parallel CSR-2 / MKL-proxy kernels"),
+    ]);
+    t.row(&[
+        "4".into(),
+        "Ice Lake".into(),
+        "2x Xeon Platinum 8380 (80 cores), 256 GB".into(),
+        format!("host CPU profile ({hw} hw threads), vector-width-agnostic kernels"),
+    ]);
+    t.print();
+    println!(
+        "\nNote: GPU numbers in Figs 5-7 come from the transaction-level execution\n\
+         model; CPU numbers in Figs 8-11 run on this host. Shape fidelity, not\n\
+         absolute GFlop/s, is the reproduction claim (DESIGN.md §2)."
+    );
+}

@@ -1,0 +1,37 @@
+//! Table 2: the 16-matrix test suite — paper-reported sizes and the
+//! synthetic stand-ins actually built at the bench scale.
+
+use csrk::sparse::{suite, Csr, SuiteScale};
+use csrk::util::table::{f, sep, Table};
+
+fn main() {
+    let scale = SuiteScale::from_env(SuiteScale::Small);
+    println!("== Table 2: test suite (paper sizes; built at {scale:?} scale) ==\n");
+    let mut t = Table::new(&[
+        "ID",
+        "Matrix",
+        "N (paper)",
+        "NNZ (paper)",
+        "rd (paper)",
+        "N (built)",
+        "NNZ (built)",
+        "rd (built)",
+        "Problem Type",
+    ])
+    .numeric();
+    for e in suite::suite() {
+        let a: Csr<f32> = e.build(scale);
+        t.row(&[
+            e.id.to_string(),
+            e.name.into(),
+            sep(e.paper_n),
+            sep(e.paper_nnz),
+            f(e.paper_rdensity(), 2),
+            sep(a.nrows()),
+            sep(a.nnz()),
+            f(a.rdensity(), 2),
+            e.problem_type.into(),
+        ]);
+    }
+    t.print();
+}

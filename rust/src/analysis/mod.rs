@@ -1,0 +1,12 @@
+//! Analysis utilities behind the paper's figures.
+//!
+//! * [`roofline`] — Fig 1: device rooflines and SpMV arithmetic
+//!   intensity.
+//! * [`overhead`] — Fig 12: CSR-3 / CSR-3+CSR-2 storage overhead over
+//!   base CSR, at the §4 heuristic parameters.
+
+pub mod overhead;
+pub mod roofline;
+
+pub use overhead::{overhead_csr3, overhead_combined};
+pub use roofline::{spmv_arithmetic_intensity, RooflinePoint};

@@ -1,0 +1,55 @@
+//! Storage-overhead accounting (paper Fig 12 / §8).
+
+use crate::sparse::{Csr, CsrK, Scalar};
+use crate::tuning::cpu::FIXED_SRS;
+use crate::tuning::{csr3_params, Device};
+
+/// CSR-3 overhead fraction over base CSR at the §4 heuristic parameters
+/// for the given device (Fig 12, "CSR-3" series).
+pub fn overhead_csr3<T: Scalar>(a: &Csr<T>, device: Device) -> f64 {
+    let p = csr3_params(device, a.rdensity());
+    let k = CsrK::csr3_uniform(a.clone(), p.ssrs, p.srs);
+    k.overhead_ratio()
+}
+
+/// Combined GPU + CPU overhead: keep the CSR-3 pointer arrays (GPU
+/// execution) *and* a CSR-2 `sr_ptr` at `SRS = 96` (CPU execution) over
+/// the same base CSR (Fig 12, "CSR-3 + CSR-2" series).
+pub fn overhead_combined<T: Scalar>(a: &Csr<T>, device: Device) -> f64 {
+    let p = csr3_params(device, a.rdensity());
+    let k3 = CsrK::csr3_uniform(a.clone(), p.ssrs, p.srs);
+    let k2 = CsrK::csr2_uniform(a.clone(), FIXED_SRS);
+    (k3.overhead_bytes() + k2.overhead_bytes()) as f64 / a.storage_bytes() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{suite, SuiteScale};
+
+    #[test]
+    fn combined_overhead_under_paper_bound_across_suite() {
+        // The paper's headline: < 2.5 % combined, worst on roadNet-TX
+        // (sparsest), just over 2 %.
+        for e in suite::suite() {
+            let a = e.build::<f32>(SuiteScale::Tiny);
+            let c = overhead_combined(&a, Device::Volta);
+            assert!(c < 0.025, "{}: combined overhead {:.3}%", e.name, c * 100.0);
+        }
+    }
+
+    #[test]
+    fn overhead_decreases_with_density() {
+        let sparse = suite::by_name("roadNet-TX").unwrap().build::<f32>(SuiteScale::Tiny);
+        let dense = suite::by_name("bmwcra_1").unwrap().build::<f32>(SuiteScale::Tiny);
+        assert!(
+            overhead_combined(&sparse, Device::Volta) > overhead_combined(&dense, Device::Volta)
+        );
+    }
+
+    #[test]
+    fn csr3_alone_cheaper_than_combined() {
+        let a = suite::by_name("ecology1").unwrap().build::<f32>(SuiteScale::Tiny);
+        assert!(overhead_csr3(&a, Device::Volta) < overhead_combined(&a, Device::Volta));
+    }
+}

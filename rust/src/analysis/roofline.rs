@@ -1,0 +1,61 @@
+//! Roofline model (paper Fig 1).
+
+use crate::gpusim::DeviceSpec;
+use crate::sparse::{Csr, Scalar};
+
+/// One sampled point of a device roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflinePoint {
+    /// Arithmetic intensity, FLOP/byte.
+    pub intensity: f64,
+    /// Attainable GFlop/s.
+    pub gflops: f64,
+}
+
+/// Sample the roofline curve at logarithmically spaced intensities.
+pub fn roofline_curve(device: &DeviceSpec, points: usize) -> Vec<RooflinePoint> {
+    (0..points)
+        .map(|i| {
+            // 2^-4 .. 2^8 flop/byte
+            let e = -4.0 + 12.0 * i as f64 / (points - 1).max(1) as f64;
+            let ai = 2f64.powf(e);
+            RooflinePoint { intensity: ai, gflops: device.roofline_gflops(ai) }
+        })
+        .collect()
+}
+
+/// SpMV arithmetic intensity for a CSR matrix in the paper's cold-cache
+/// accounting: `2·NNZ` FLOPs over `vals + col_idx + row_ptr + x + y`
+/// bytes (each element touched at least once).
+pub fn spmv_arithmetic_intensity<T: Scalar>(a: &Csr<T>) -> f64 {
+    let elem = std::mem::size_of::<T>();
+    let bytes = a.nnz() * (elem + 4) + (a.nrows() + 1) * 4 + a.ncols() * elem + a.nrows() * elem;
+    a.spmv_flops() / bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::AMPERE_A100;
+    use crate::sparse::gen;
+
+    #[test]
+    fn spmv_sits_deep_in_bandwidth_regime() {
+        // Fig 1's message: SpMV AI ≈ 0.15–0.25 flop/byte, far below the
+        // A100 ridge (~12.5).
+        let a = gen::grid2d_5pt::<f32>(64, 64);
+        let ai = spmv_arithmetic_intensity(&a);
+        assert!(ai > 0.1 && ai < 0.3, "ai {ai}");
+        assert!(ai < AMPERE_A100.ridge_flop_per_byte() / 10.0);
+    }
+
+    #[test]
+    fn curve_is_monotone_and_saturates() {
+        let c = roofline_curve(&AMPERE_A100, 50);
+        assert_eq!(c.len(), 50);
+        for w in c.windows(2) {
+            assert!(w[1].gflops >= w[0].gflops - 1e-9);
+        }
+        assert_eq!(c.last().unwrap().gflops, AMPERE_A100.fp32_tflops * 1e3);
+    }
+}

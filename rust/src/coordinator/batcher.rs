@@ -1,0 +1,144 @@
+//! Dynamic batching: requests for the same matrix are grouped so the
+//! per-dispatch overhead (permutation, device hand-off, PJRT call
+//! setup) amortizes — the SpMV analogue of vLLM-style request batching.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// A group of requests sharing one matrix.
+#[derive(Debug)]
+pub struct Batch {
+    /// The common matrix name.
+    pub matrix: String,
+    /// Member requests.
+    pub requests: Vec<(Request, Instant)>,
+}
+
+/// Accumulates requests per matrix and releases batches when either the
+/// size cap or the age deadline hits.
+pub struct DynamicBatcher {
+    max_batch: usize,
+    max_delay: Duration,
+    queues: HashMap<String, Vec<(Request, Instant)>>,
+}
+
+impl DynamicBatcher {
+    /// `max_batch` requests or `max_delay` of queueing, whichever first.
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch >= 1);
+        DynamicBatcher { max_batch, max_delay, queues: HashMap::new() }
+    }
+
+    /// Enqueue a request (stamped now); returns a full batch if the size
+    /// cap was reached.
+    pub fn push(&mut self, req: Request) -> Option<Batch> {
+        let now = Instant::now();
+        let q = self.queues.entry(req.matrix.clone()).or_default();
+        q.push((req, now));
+        if q.len() >= self.max_batch {
+            let matrix = q[0].0.matrix.clone();
+            let requests = std::mem::take(q);
+            Some(Batch { matrix, requests })
+        } else {
+            None
+        }
+    }
+
+    /// Release every queue whose oldest member has exceeded the delay.
+    pub fn flush_expired(&mut self) -> Vec<Batch> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        self.queues.retain(|name, q| {
+            if !q.is_empty() && now.duration_since(q[0].1) >= self.max_delay {
+                out.push(Batch { matrix: name.clone(), requests: std::mem::take(q) });
+            }
+            !q.is_empty()
+        });
+        out
+    }
+
+    /// Release everything (shutdown).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (name, q) in self.queues.drain() {
+            if !q.is_empty() {
+                out.push(Batch { matrix: name, requests: q });
+            }
+        }
+        out
+    }
+
+    /// Total queued requests.
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Time until the oldest queued request expires (for the event-loop
+    /// poll timeout), if anything is queued.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        let now = Instant::now();
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|(_, t)| self.max_delay.saturating_sub(now.duration_since(*t)))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, m: &str) -> Request {
+        Request { id, matrix: m.to_string(), x: vec![] }
+    }
+
+    #[test]
+    fn size_cap_releases_batch() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(10));
+        assert!(b.push(req(1, "a")).is_none());
+        assert!(b.push(req(2, "a")).is_none());
+        let batch = b.push(req(3, "a")).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn matrices_batch_independently() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        assert!(b.push(req(1, "a")).is_none());
+        assert!(b.push(req(2, "b")).is_none());
+        assert!(b.push(req(3, "b")).unwrap().matrix == "b");
+        assert_eq!(b.queued(), 1); // "a" still waiting
+    }
+
+    #[test]
+    fn deadline_flushes() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(1));
+        b.push(req(1, "a"));
+        std::thread::sleep(Duration::from_millis(5));
+        let out = b.flush_expired();
+        assert_eq!(out.len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let mut b = DynamicBatcher::new(100, Duration::from_secs(10));
+        b.push(req(1, "a"));
+        b.push(req(2, "b"));
+        let out = b.drain();
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(10, Duration::from_millis(50));
+        assert!(b.next_deadline().is_none());
+        b.push(req(1, "a"));
+        let d = b.next_deadline().unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

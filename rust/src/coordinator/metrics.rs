@@ -1,0 +1,103 @@
+//! Serving metrics: latency percentiles and throughput counters.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    requests: u64,
+    batches: u64,
+    errors: u64,
+    flops: f64,
+}
+
+/// Thread-safe metrics sink shared by the server workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    /// Fresh metrics with the clock started now.
+    pub fn new() -> Self {
+        Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
+    }
+
+    /// Record one completed request.
+    pub fn record(&self, latency: Duration, flops: f64, ok: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.latencies_us.push(latency.as_secs_f64() * 1e6);
+        m.requests += 1;
+        m.flops += flops;
+        if !ok {
+            m.errors += 1;
+        }
+    }
+
+    /// Record one dispatched batch.
+    pub fn record_batch(&self) {
+        self.inner.lock().unwrap().batches += 1;
+    }
+
+    /// Snapshot: `(requests, batches, errors)`.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.requests, m.batches, m.errors)
+    }
+
+    /// Latency percentile in microseconds (p in 0..=100).
+    pub fn latency_us(&self, p: f64) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.latencies_us.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&m.latencies_us, p)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        stats::mean(&self.inner.lock().unwrap().latencies_us)
+    }
+
+    /// Requests per second since creation.
+    pub fn throughput_rps(&self) -> f64 {
+        let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        if elapsed == 0.0 {
+            return 0.0;
+        }
+        self.inner.lock().unwrap().requests as f64 / elapsed
+    }
+
+    /// Aggregate GFlop/s since creation.
+    pub fn gflops(&self) -> f64 {
+        let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        if elapsed == 0.0 {
+            return 0.0;
+        }
+        self.inner.lock().unwrap().flops / elapsed / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i), 100.0, true);
+        }
+        m.record(Duration::from_micros(1000), 0.0, false);
+        let (req, _b, err) = m.counts();
+        assert_eq!(req, 101);
+        assert_eq!(err, 1);
+        assert!(m.latency_us(50.0) >= 50.0 && m.latency_us(50.0) <= 52.0);
+        assert!(m.mean_latency_us() > 0.0);
+        assert!(m.throughput_rps() > 0.0);
+    }
+}

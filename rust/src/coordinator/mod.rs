@@ -1,0 +1,48 @@
+//! L3 coordinator: the serving layer that makes CSR-k a deployable
+//! heterogeneous-SpMV system.
+//!
+//! The paper's contribution is a *format + tuner*; the coordinator is
+//! the production harness around it (vLLM-router-shaped): applications
+//! register matrices once — the registry reorders (Band-k), tunes
+//! (§4 constant-time model) and binds them to every available device —
+//! then stream SpMV requests that are dynamically batched and scheduled
+//! across CPU kernel workers and the PJRT (AOT/XLA) execution path.
+//!
+//! * [`registry`] — per-matrix, per-device prepared executions.
+//! * [`batcher`] — dynamic batching queue (max-batch / max-delay).
+//! * [`server`] — worker threads, routing, lifecycle.
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use metrics::Metrics;
+pub use registry::{DeviceKind, MatrixEntry, MatrixRegistry};
+pub use server::{Server, ServerConfig};
+
+/// A unit of work: multiply a registered matrix by `x`.
+#[derive(Debug)]
+pub struct Request {
+    /// Caller-chosen id echoed in the response.
+    pub id: u64,
+    /// Registered matrix name.
+    pub matrix: String,
+    /// Input vector (length = matrix ncols).
+    pub x: Vec<f32>,
+}
+
+/// The result of one request.
+#[derive(Debug)]
+pub struct Response {
+    /// Echoed request id.
+    pub id: u64,
+    /// `A·x`, or an error message.
+    pub result: Result<Vec<f32>, String>,
+    /// Which device served it.
+    pub device: DeviceKind,
+    /// Queue + execution latency.
+    pub latency: std::time::Duration,
+}

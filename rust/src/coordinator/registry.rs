@@ -1,0 +1,203 @@
+//! Matrix registry: one-time registration does everything expensive —
+//! Band-k reordering, §4 constant-time tuning, per-device format
+//! preparation — so the request path only executes.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::{Csr2Kernel, SpMv};
+use crate::reorder::bandk;
+use crate::runtime::{Runtime, SpmvExecutor};
+use crate::sparse::Csr;
+use crate::tuning::cpu::FIXED_SRS;
+use crate::tuning::{csr3_params, Device};
+use crate::util::ThreadPool;
+
+/// Where a request can execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Native CPU kernel (CSR-2 over the thread pool).
+    Cpu,
+    /// AOT/XLA executable through PJRT (the accelerator path).
+    Pjrt,
+}
+
+/// A registered matrix: Band-k-ordered CSR-k plus per-device bindings.
+pub struct MatrixEntry {
+    /// Registered name.
+    pub name: String,
+    /// Row permutation applied at registration (requests are in original
+    /// coordinates; the entry permutes in/out transparently).
+    perm: crate::reorder::Permutation,
+    /// CPU execution: tuned CSR-2 kernel.
+    cpu: Csr2Kernel<f32>,
+    /// PJRT execution (absent if no bucket fits).
+    pjrt: Option<SpmvExecutor>,
+    /// Logical shape.
+    pub nrows: usize,
+    /// Logical column count.
+    pub ncols: usize,
+    /// Nonzeros (FLOP accounting).
+    pub nnz: usize,
+}
+
+impl MatrixEntry {
+    /// Execute on the chosen device. `x` is in original coordinates.
+    pub fn spmv(&self, device: DeviceKind, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.ncols {
+            bail!("x length {} != ncols {}", x.len(), self.ncols);
+        }
+        let px = self.perm.apply_vec(x);
+        let py = match device {
+            DeviceKind::Cpu => {
+                let mut y = vec![0f32; self.nrows];
+                self.cpu.spmv(&px, &mut y);
+                y
+            }
+            DeviceKind::Pjrt => match &self.pjrt {
+                Some(exe) => exe.spmv(&px)?,
+                None => bail!("matrix {} has no PJRT binding", self.name),
+            },
+        };
+        Ok(self.perm.unapply_vec(&py))
+    }
+
+    /// Does this entry support the device?
+    pub fn supports(&self, device: DeviceKind) -> bool {
+        match device {
+            DeviceKind::Cpu => true,
+            DeviceKind::Pjrt => self.pjrt.is_some(),
+        }
+    }
+
+    /// SpMV FLOPs (2·NNZ).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.nnz as f64
+    }
+}
+
+/// Thread-safe name → entry map.
+pub struct MatrixRegistry {
+    pool: Arc<ThreadPool>,
+    runtime: Option<Arc<Runtime>>,
+    entries: RwLock<HashMap<String, Arc<MatrixEntry>>>,
+}
+
+impl MatrixRegistry {
+    /// A registry executing CPU kernels on `pool`; `runtime` enables the
+    /// PJRT path when artifacts are available.
+    pub fn new(pool: Arc<ThreadPool>, runtime: Option<Arc<Runtime>>) -> Self {
+        MatrixRegistry { pool, runtime, entries: RwLock::new(HashMap::new()) }
+    }
+
+    /// Register a matrix: Band-k order it, tune CSR-2 (fixed SRS = 96,
+    /// the §4.2 constant-time choice) for CPU, and bind the padded
+    /// export to a PJRT bucket when possible.
+    pub fn register(&self, name: &str, a: Csr<f32>) -> Result<Arc<MatrixEntry>> {
+        if a.nrows() != a.ncols() {
+            bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
+        }
+        let rdensity = a.rdensity();
+        // Band-k with the GPU heuristic's group targets (the same
+        // structure serves both devices — that is the paper's point).
+        let params = csr3_params(Device::Ampere, rdensity);
+        let ord = bandk(&a, 3, params.srs.max(2), params.ssrs.max(2), 0xC52D);
+        let k3 = ord.apply(&a);
+
+        // PJRT binding: pad width to the next power of two ≥ max row nnz
+        // (capped: overflow rows are fixed up host-side).
+        let pjrt = if let Some(rt) = &self.runtime {
+            let width = k3
+                .csr()
+                .max_row_nnz()
+                .next_power_of_two()
+                .clamp(8, 32);
+            let padded = k3.to_padded(width);
+            match SpmvExecutor::bind(rt, &padded) {
+                Ok(exe) => Some(exe),
+                Err(e) => {
+                    log::warn!("{name}: no PJRT binding ({e}); CPU only");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
+        // CPU: CSR-2 view with the constant-time SRS over the *same*
+        // Band-k-ordered CSR (shared base arrays — the heterogeneous
+        // format argument).
+        let cpu_k = crate::sparse::CsrK::csr2_uniform(k3.csr().clone(), FIXED_SRS);
+        let entry = Arc::new(MatrixEntry {
+            name: name.to_string(),
+            perm: ord.perm.clone(),
+            cpu: Csr2Kernel::new(cpu_k, self.pool.clone()),
+            pjrt,
+            nrows: a.nrows(),
+            ncols: a.ncols(),
+            nnz: a.nnz(),
+        });
+        self.entries
+            .write()
+            .unwrap()
+            .insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Look up a registered matrix.
+    pub fn get(&self, name: &str) -> Result<Arc<MatrixEntry>> {
+        self.entries
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("matrix {name:?} not registered"))
+    }
+
+    /// Registered names.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn register_and_execute_cpu() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(20, 20);
+        let e = reg.register("grid", a.clone()).unwrap();
+        assert!(e.supports(DeviceKind::Cpu));
+        assert!(!e.supports(DeviceKind::Pjrt));
+
+        let x: Vec<f32> = (0..400).map(|i| (i % 7) as f32).collect();
+        let y = e.spmv(DeviceKind::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; 400];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn unknown_matrix_errors() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn wrong_x_length_errors() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(8, 8);
+        let e = reg.register("g", a).unwrap();
+        assert!(e.spmv(DeviceKind::Cpu, &[1.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! The serving event loop: leader thread batches and routes; device
+//! workers execute; responses flow back over channels.
+//!
+//! Topology (std mpsc — no async runtime is available offline, and SpMV
+//! service latencies are µs-scale where a thread-per-device design is
+//! the right call anyway):
+//!
+//! ```text
+//! clients ─▶ submit mpsc ─▶ leader (batcher) ─▶ per-device work mpsc
+//!                                                  │ CPU worker(s)
+//!                                                  │ PJRT worker
+//! clients ◀─────────── response mpsc ◀─────────────┘
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batch, DynamicBatcher};
+use super::metrics::Metrics;
+use super::registry::{DeviceKind, MatrixRegistry};
+use super::{Request, Response};
+
+/// Server tunables.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Requests per batch before forced dispatch.
+    pub max_batch: usize,
+    /// Max queueing delay before a partial batch dispatches.
+    pub max_delay: Duration,
+    /// Prefer the PJRT device when a matrix supports it.
+    pub prefer_pjrt: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_micros(200),
+            prefer_pjrt: false,
+        }
+    }
+}
+
+enum LeaderMsg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+struct Work {
+    batch: Batch,
+    resp: Vec<Sender<Response>>,
+}
+
+/// A running SpMV service.
+pub struct Server {
+    registry: Arc<MatrixRegistry>,
+    submit_tx: Sender<LeaderMsg>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    leader: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the leader and one worker per available device.
+    pub fn start(registry: Arc<MatrixRegistry>, config: ServerConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let (submit_tx, submit_rx) = mpsc::channel::<LeaderMsg>();
+        let (cpu_tx, cpu_rx) = mpsc::channel::<Work>();
+        let (pjrt_tx, pjrt_rx) = mpsc::channel::<Work>();
+
+        let mut workers = Vec::new();
+        for (rx, dev) in [(cpu_rx, DeviceKind::Cpu), (pjrt_rx, DeviceKind::Pjrt)] {
+            let reg = registry.clone();
+            let met = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("csrk-worker-{dev:?}"))
+                    .spawn(move || device_worker(rx, reg, met, dev))
+                    .expect("spawn device worker"),
+            );
+        }
+
+        let leader = {
+            let reg = registry.clone();
+            let met = metrics.clone();
+            std::thread::Builder::new()
+                .name("csrk-leader".into())
+                .spawn(move || {
+                    leader_loop(submit_rx, cpu_tx, pjrt_tx, reg, met, config);
+                })
+                .expect("spawn leader")
+        };
+
+        Server {
+            registry,
+            submit_tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            leader: Some(leader),
+            workers,
+        }
+    }
+
+    /// The matrix registry (register before or while serving).
+    pub fn registry(&self) -> &Arc<MatrixRegistry> {
+        &self.registry
+    }
+
+    /// Serving metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Submit asynchronously; the response arrives on the returned
+    /// channel. Returns the assigned request id.
+    pub fn submit(&self, matrix: &str, x: Vec<f32>) -> (u64, Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.submit_tx
+            .send(LeaderMsg::Submit(
+                Request { id, matrix: matrix.to_string(), x },
+                tx,
+            ))
+            .expect("leader alive");
+        (id, rx)
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, matrix: &str, x: Vec<f32>) -> Response {
+        let (_, rx) = self.submit(matrix, x);
+        rx.recv().expect("response")
+    }
+
+    /// Stop the service, draining queued work.
+    pub fn shutdown(mut self) {
+        let _ = self.submit_tx.send(LeaderMsg::Shutdown);
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn leader_loop(
+    submit_rx: Receiver<LeaderMsg>,
+    cpu_tx: Sender<Work>,
+    pjrt_tx: Sender<Work>,
+    registry: Arc<MatrixRegistry>,
+    metrics: Arc<Metrics>,
+    config: ServerConfig,
+) {
+    let mut batcher = DynamicBatcher::new(config.max_batch, config.max_delay);
+    let mut responders: std::collections::HashMap<u64, Sender<Response>> =
+        std::collections::HashMap::new();
+    let route = |batch: Batch,
+                 responders: &mut std::collections::HashMap<u64, Sender<Response>>| {
+        let device = match registry.get(&batch.matrix) {
+            Ok(e) if config.prefer_pjrt && e.supports(DeviceKind::Pjrt) => DeviceKind::Pjrt,
+            _ => DeviceKind::Cpu,
+        };
+        let resp: Vec<Sender<Response>> = batch
+            .requests
+            .iter()
+            .map(|(r, _)| responders.remove(&r.id).expect("responder"))
+            .collect();
+        metrics.record_batch();
+        let work = Work { batch, resp };
+        let tx = match device {
+            DeviceKind::Cpu => &cpu_tx,
+            DeviceKind::Pjrt => &pjrt_tx,
+        };
+        let _ = tx.send(work);
+    };
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .unwrap_or(Duration::from_millis(50));
+        match submit_rx.recv_timeout(timeout) {
+            Ok(LeaderMsg::Submit(req, tx)) => {
+                responders.insert(req.id, tx);
+                if let Some(batch) = batcher.push(req) {
+                    route(batch, &mut responders);
+                }
+            }
+            Ok(LeaderMsg::Shutdown) => {
+                for batch in batcher.drain() {
+                    route(batch, &mut responders);
+                }
+                // closing cpu_tx / pjrt_tx stops the workers
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                for batch in batcher.flush_expired() {
+                    route(batch, &mut responders);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn device_worker(
+    rx: Receiver<Work>,
+    registry: Arc<MatrixRegistry>,
+    metrics: Arc<Metrics>,
+    device: DeviceKind,
+) {
+    while let Ok(work) = rx.recv() {
+        let entry = registry.get(&work.batch.matrix);
+        for ((req, enqueued), tx) in work.batch.requests.into_iter().zip(work.resp) {
+            let started = Instant::now();
+            let result = match &entry {
+                Ok(e) => e.spmv(device, &req.x).map_err(|e| e.to_string()),
+                Err(e) => Err(e.to_string()),
+            };
+            let latency = enqueued.elapsed();
+            let flops = entry.as_ref().map(|e| e.flops()).unwrap_or(0.0);
+            metrics.record(latency, flops, result.is_ok());
+            let _ = tx.send(Response { id: req.id, result, device, latency });
+            let _ = started;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::ThreadPool;
+
+    fn test_server(prefer_pjrt: bool) -> Server {
+        let pool = Arc::new(ThreadPool::new(2));
+        let registry = Arc::new(MatrixRegistry::new(pool, None));
+        registry
+            .register("grid", gen::grid2d_5pt::<f32>(16, 16))
+            .unwrap();
+        Server::start(
+            registry,
+            ServerConfig {
+                max_batch: 4,
+                max_delay: Duration::from_micros(100),
+                prefer_pjrt,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let server = test_server(false);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        let x: Vec<f32> = (0..256).map(|i| (i % 5) as f32).collect();
+        let resp = server.call("grid", x.clone());
+        let y = resp.result.unwrap();
+        let mut y_ref = vec![0f32; 256];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-3);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let server = test_server(false);
+        let x: Vec<f32> = vec![1.0; 256];
+        let rxs: Vec<_> = (0..16).map(|_| server.submit("grid", x.clone()).1).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let (req, batches, err) = server.metrics().counts();
+        assert_eq!(req, 16);
+        assert_eq!(err, 0);
+        assert!(batches <= 16, "batching must not inflate dispatches");
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_matrix_reports_error() {
+        let server = test_server(false);
+        let resp = server.call("missing", vec![1.0; 4]);
+        assert!(resp.result.is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let server = test_server(false);
+        let x: Vec<f32> = vec![1.0; 256];
+        // single request waits for the delay flush; shutdown must not lose it
+        let (_, rx) = server.submit("grid", x);
+        server.shutdown();
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+}

@@ -1,0 +1,298 @@
+//! GPU baseline kernel models: cuSPARSE-like CSR, KokkosKernels-like
+//! team SpMV, CSR5's tiled kernel, and a TileSpMV-like format-dispatch
+//! kernel. All run through the same memory hierarchy and warp-divergence
+//! machinery as the CSR-k kernels, differing only in their lane→work
+//! mappings — which is exactly how the real libraries differ.
+
+use super::assemble;
+use super::device::DeviceSpec;
+use super::memsim::MemSim;
+use super::SimResult;
+use crate::sparse::{Csr, Csr5, Scalar};
+
+/// Shared engine: simulate a kernel where each row is processed by `vl`
+/// consecutive lanes (`vl = 1` ⇒ CSR-scalar / thread-per-row; `vl = 32`
+/// ⇒ CSR-vector / warp-per-row). Rows are assigned to lanes in matrix
+/// order; blocks of `block_rows` rows map round-robin to SMs.
+fn simulate_row_vector<T: Scalar>(
+    a: &Csr<T>,
+    device: &DeviceSpec,
+    vl: usize,
+    extra_cycles_per_warp: u64,
+    kernel_eff: f64,
+) -> SimResult {
+    assert!(vl >= 1 && vl <= device.warp_size);
+    let elem = std::mem::size_of::<T>() as u64;
+    let row_ptr = a.row_ptr();
+    let mut mem = MemSim::new(device);
+    let mut warp_iters = 0u64;
+    let mut useful_lanes = 0u64;
+    let mut reduction = 0u64;
+    let mut total_warps = 0u64;
+    let mut scratch = Vec::with_capacity(64);
+    let x_base = 1u64 << 40;
+    let rows_per_warp = (device.warp_size / vl).max(1);
+    let log2v = (usize::BITS - (vl.max(1) - 1).leading_zeros()) as u64;
+    // ~128 warps per "block" for SM assignment purposes
+    let rows_per_block = rows_per_warp * 128;
+
+    let n = a.nrows();
+    let mut r0 = 0usize;
+    let mut block = 0usize;
+    while r0 < n {
+        let sm = block % device.sm_count;
+        let r1 = (r0 + rows_per_block).min(n);
+        let mut r = r0;
+        while r < r1 {
+            let rows: Vec<usize> = (r..(r + rows_per_warp).min(r1)).collect();
+            total_warps += 1;
+            let iters = rows
+                .iter()
+                .map(|&i| ((row_ptr[i + 1] - row_ptr[i]) as usize).div_ceil(vl))
+                .max()
+                .unwrap();
+            // fused vals+cols records through the cache (see csrk_sim)
+            let mut x_addrs: Vec<u64> = Vec::with_capacity(32);
+            let mut vc_addrs: Vec<u64> = Vec::with_capacity(32);
+            for t in 0..iters {
+                x_addrs.clear();
+                vc_addrs.clear();
+                for &i in &rows {
+                    let lo = row_ptr[i] as usize;
+                    let hi = row_ptr[i + 1] as usize;
+                    for l in 0..vl {
+                        let s = lo + t * vl + l;
+                        if s < hi {
+                            vc_addrs.push(crate::gpusim::csrk_sim::VC_BASE + s as u64 * (elem + 4));
+                            x_addrs.push(x_base + a.col_idx()[s] as u64 * elem);
+                        }
+                    }
+                }
+                if x_addrs.is_empty() {
+                    continue;
+                }
+                useful_lanes += x_addrs.len() as u64;
+                mem.gather(sm, &vc_addrs);
+                mem.gather(sm, &x_addrs);
+            }
+            warp_iters += iters as u64;
+            if vl > 1 {
+                reduction += log2v * 2;
+            }
+            reduction += extra_cycles_per_warp;
+            let rows64: Vec<u64> = rows.iter().map(|&i| i as u64).collect();
+            mem.stream(count_sectors(&mut scratch, &rows64, elem) * 32);
+            r += rows_per_warp;
+        }
+        r0 = r1;
+        block += 1;
+    }
+    assemble(device, a.spmv_flops(), warp_iters, reduction, total_warps, useful_lanes, kernel_eff, mem.stats)
+}
+
+#[inline]
+fn count_sectors(scratch: &mut Vec<u64>, idxs: &[u64], elem: u64) -> u64 {
+    scratch.clear();
+    for &i in idxs {
+        let s = (i * elem) / 32;
+        if !scratch.contains(&s) {
+            scratch.push(s);
+        }
+    }
+    scratch.len() as u64
+}
+
+/// cuSPARSE-like CSR SpMV: adaptive between the scalar (thread-per-row)
+/// kernel for sparse rows and the vector (warp-per-row) kernel for
+/// dense rows — the standard csrmv structure.
+pub fn simulate_cusparse<T: Scalar>(a: &Csr<T>, device: &DeviceSpec) -> SimResult {
+    // Calibrated issue efficiencies (EXPERIMENTS.md §Calibration): the
+    // warp-per-row vector kernel is cuSPARSE's best case and runs near
+    // roofline on dense rows (this is why the paper's dense tail, ids
+    // 14-16, goes to cuSPARSE); the scalar kernel on short irregular
+    // rows is its weak case (paper Fig 5 average 79.6 GF vs CSR-3's
+    // 87.7 at 0.93).
+    if a.rdensity() >= 16.0 {
+        simulate_row_vector(a, device, 32, 0, 0.95)
+    } else if a.rdensity() >= 6.0 {
+        simulate_row_vector(a, device, 8, 0, 0.80)
+    } else {
+        simulate_row_vector(a, device, 1, 0, 0.72)
+    }
+}
+
+/// KokkosKernels-like team SpMV: vector length chosen as the power of
+/// two nearest the row density (the Kokkos heuristic), teams of rows.
+pub fn simulate_kokkos<T: Scalar>(a: &Csr<T>, device: &DeviceSpec) -> SimResult {
+    let mut vl = 1usize;
+    while (vl * 2) as f64 <= a.rdensity() && vl < device.warp_size {
+        vl *= 2;
+    }
+    // 0.78: calibrated (Fig 5 average 80.9 GF); Kokkos's density-matched
+    // vector length gives it the edge on the very sparse DIMACS entries.
+    simulate_row_vector(a, device, vl, 0, 0.78)
+}
+
+/// CSR5-like tiled kernel: tile storage is column-major, so vals /
+/// col_idx are perfectly coalesced streams regardless of row structure;
+/// the x gather still pays for locality, and a small per-tile descriptor
+/// + segmented-sum overhead is charged.
+pub fn simulate_csr5_gpu<T: Scalar>(c5: &Csr5<T>, nnz: usize, device: &DeviceSpec) -> SimResult {
+    let elem = std::mem::size_of::<T>() as u64;
+    let mut mem = MemSim::new(device);
+    let mut warp_iters = 0u64;
+    let mut reduction = 0u64;
+    let per_tile = c5.omega * c5.sigma;
+    let ntiles = c5.ntiles();
+    let total_warps = (ntiles as u64).max(1);
+    let x_base = 1u64 << 40;
+    let mut addrs: Vec<u64> = Vec::with_capacity(c5.omega);
+    for t in 0..ntiles {
+        let sm = t % device.sm_count;
+        // perfectly coalesced tile streams: vals + cols + descriptors
+        mem.stream(per_tile as u64 * (elem + 4) + 16);
+        // gather x per slot-row of the tile (ω lanes at a time)
+        for s in 0..c5.sigma {
+            addrs.clear();
+            for lane in 0..c5.omega {
+                let col = c5.tile_col_at(t, s, lane);
+                addrs.push(x_base + col as u64 * elem);
+            }
+            mem.gather(sm, &addrs);
+        }
+        warp_iters += c5.sigma as u64;
+        // segmented-sum bookkeeping
+        reduction += 8;
+    }
+    // scalar tail
+    let tail = nnz - ntiles * per_tile;
+    mem.stream(tail as u64 * (elem + 4 + elem));
+    warp_iters += tail.div_ceil(device.warp_size) as u64;
+    assemble(device, 2.0 * nnz as f64, warp_iters, reduction, total_warps, warp_iters * device.warp_size as u64, 0.92, mem.stats)
+}
+
+/// TileSpMV-like kernel: 16×16 spatial tiles each dispatched to a
+/// per-format device kernel. The paper measured it far below the other
+/// libraries in their configuration (§6: 23.3 avg GFlop/s vs 131.7 for
+/// cuSPARSE on Ampere); the dominating cost it models here is per-tile
+/// dispatch/descriptor overhead on matrices whose tiles are mostly
+/// near-empty — exactly the very sparse suite entries.
+pub fn simulate_tilespmv<T: Scalar>(a: &Csr<T>, device: &DeviceSpec) -> SimResult {
+    let elem = std::mem::size_of::<T>() as u64;
+    const TILE: usize = 16;
+    let mut mem = MemSim::new(device);
+    let mut warp_iters = 0u64;
+    let mut reduction = 0u64;
+    let mut total_warps = 0u64;
+    let x_base = 1u64 << 40;
+    let n = a.nrows();
+    let mut scratch = Vec::with_capacity(64);
+    // count occupied tiles per tile-row via column buckets
+    let mut addrs: Vec<u64> = Vec::with_capacity(32);
+    let mut tr = 0usize;
+    let mut block = 0usize;
+    while tr * TILE < n {
+        let sm = block % device.sm_count;
+        let r_lo = tr * TILE;
+        let r_hi = (r_lo + TILE).min(n);
+        // occupied tile columns in this tile row
+        let mut tiles: Vec<(u32, u32)> = Vec::new(); // (tile_col, count)
+        for i in r_lo..r_hi {
+            for &c in a.row(i).0 {
+                let tc = c / TILE as u32;
+                match tiles.binary_search_by_key(&tc, |&(t, _)| t) {
+                    Ok(p) => tiles[p].1 += 1,
+                    Err(p) => tiles.insert(p, (tc, 1)),
+                }
+            }
+        }
+        for &(tc, cnt) in &tiles {
+            // Per-tile descriptor fetch + format-dispatch overhead. The
+            // 2000-cycle charge is *calibrated*, not mechanistic: the
+            // paper measures TileSpMV at ≈ 4–5× the cuSPARSE time on the
+            // sparse suite (§6: 23.3 vs 131.7 avg GFlop/s on Ampere),
+            // and per-tile format decode + divergent kernel dispatch is
+            // where that time goes on near-empty 16×16 tiles.
+            mem.stream(256);
+            reduction += 2000;
+            total_warps += 1;
+            // payload: the tile's entries streamed (partially coalesced)
+            mem.stream(cnt as u64 * (elem + 2)); // 16-bit local indices
+            let iters = (cnt as usize).div_ceil(device.warp_size).max(1);
+            warp_iters += iters as u64;
+            // x gather for the tile's column range
+            addrs.clear();
+            for l in 0..TILE.min(cnt as usize) {
+                addrs.push(x_base + (tc as u64 * TILE as u64 + l as u64) * elem);
+            }
+            mem.gather(sm, &addrs);
+        }
+        let rows64: Vec<u64> = (r_lo as u64..r_hi as u64).collect();
+        mem.stream(count_sectors(&mut scratch, &rows64, elem) * 32);
+        tr += 1;
+        block += 1;
+    }
+    assemble(device, a.spmv_flops(), warp_iters, reduction, total_warps, warp_iters * device.warp_size as u64, 1.0, mem.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::{AMPERE_A100, VOLTA_V100};
+    use crate::sparse::gen;
+
+    #[test]
+    fn cusparse_adapts_kernel_by_density() {
+        // both paths must produce sane bandwidth-bound results
+        let sparse = gen::honeycomb::<f32>(192, 192);
+        let dense = gen::fem3d::<f32>(10, 10, 10, 3, gen::OFFSETS_26, 1);
+        let rs = simulate_cusparse(&sparse, &VOLTA_V100);
+        let rd = simulate_cusparse(&dense, &VOLTA_V100);
+        assert!(rs.gflops > 0.5 && rd.gflops > 0.5);
+        // dense rows achieve higher GFlop/s (higher intensity + coalescing)
+        assert!(rd.gflops > rs.gflops);
+    }
+
+    #[test]
+    fn vector_kernel_coalesces_better_on_dense_rows() {
+        // x exceeds one SM's L1 so the gather pattern matters: the
+        // warp-per-row kernel's 32-consecutive-nnz gathers coalesce,
+        // thread-per-row's 32-different-rows gathers do not.
+        let dense = gen::fem3d::<f32>(16, 16, 16, 3, gen::OFFSETS_26, 1);
+        let scalar = simulate_row_vector(&dense, &VOLTA_V100, 1, 0, 1.0);
+        let vector = simulate_row_vector(&dense, &VOLTA_V100, 32, 0, 1.0);
+        assert!(
+            vector.time_s <= scalar.time_s,
+            "vector {} vs scalar {}",
+            vector.time_s,
+            scalar.time_s
+        );
+    }
+
+    #[test]
+    fn ampere_outruns_volta() {
+        let a = gen::grid3d_7pt::<f32>(24, 24, 24);
+        let v = simulate_cusparse(&a, &VOLTA_V100);
+        let am = simulate_cusparse(&a, &AMPERE_A100);
+        assert!(am.time_s < v.time_s);
+    }
+
+    #[test]
+    fn csr5_gpu_is_competitive() {
+        let a = gen::grid2d_5pt::<f32>(96, 96);
+        let c5 = crate::sparse::Csr5::from_csr(&a, 4, 16);
+        let r5 = simulate_csr5_gpu(&c5, a.nnz(), &VOLTA_V100);
+        let rc = simulate_cusparse(&a, &VOLTA_V100);
+        // CSR5 must be at least in the same league (paper: usually ahead)
+        assert!(r5.time_s < rc.time_s * 1.5, "csr5 {} cusparse {}", r5.time_s, rc.time_s);
+    }
+
+    #[test]
+    fn tilespmv_underperforms_on_sparse() {
+        // the paper's observation: TileSpMV far below cuSPARSE
+        let a = gen::honeycomb::<f32>(128, 128);
+        let rt = simulate_tilespmv(&a, &AMPERE_A100);
+        let rc = simulate_cusparse(&a, &AMPERE_A100);
+        assert!(rt.time_s > rc.time_s, "tile {} cusparse {}", rt.time_s, rc.time_s);
+    }
+}

@@ -1,0 +1,358 @@
+//! Simulation of the paper's GPU kernels: GPUSpMV-3 (Listing 3) and
+//! GPUSpMV-3.5 (Listing 4).
+//!
+//! The lane mappings follow §3 exactly:
+//! * GPUSpMV-3 — block = SSR, `y` = super-row, `x` = row; the inner
+//!   product of each row is serial in its lane.
+//! * GPUSpMV-3.5 — block = SSR, `z` = super-row, `y` = row, `x` = lanes
+//!   across the row's nonzeros, finished by a shared-memory parallel
+//!   reduction.
+//!
+//! A warp executes until its longest lane finishes (divergence), and
+//! each iteration's loads are coalesced into 32-byte sectors: vals /
+//! col_idx are single-use streams, the `x` gather goes through the
+//! cache hierarchy.
+
+use super::assemble;
+use super::device::DeviceSpec;
+use super::memsim::MemSim;
+use super::SimResult;
+use crate::sparse::{CsrK, Scalar};
+
+/// CUDA block geometry for the CSR-k kernels. GPUSpMV-3 uses `(x, y)`;
+/// GPUSpMV-3.5 uses `(x, y, z)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockDims {
+    /// Innermost dimension (rows for 3, nnz lanes for 3.5).
+    pub x: usize,
+    /// Middle dimension (super-rows for 3, rows for 3.5).
+    pub y: usize,
+    /// Outer dimension (1 for 3, super-rows for 3.5).
+    pub z: usize,
+}
+
+impl BlockDims {
+    /// 2D block for GPUSpMV-3.
+    pub fn d2(x: usize, y: usize) -> Self {
+        BlockDims { x, y, z: 1 }
+    }
+
+    /// 3D block for GPUSpMV-3.5.
+    pub fn d3(x: usize, y: usize, z: usize) -> Self {
+        BlockDims { x, y, z }
+    }
+
+    /// Total threads (must be ≤ 1024 on real hardware).
+    pub fn threads(&self) -> usize {
+        self.x * self.y * self.z
+    }
+}
+
+/// Count distinct 32-byte sectors among element addresses
+/// `base + idx·elem` (coalescing analysis for one warp access).
+#[inline]
+fn distinct_sectors(scratch: &mut Vec<u64>, idxs: &[u64], elem: u64) -> u64 {
+    scratch.clear();
+    for &i in idxs {
+        let s = (i * elem) / 32;
+        if !scratch.contains(&s) {
+            scratch.push(s);
+        }
+    }
+    scratch.len() as u64
+}
+
+/// Address region for the fused vals+col_idx stream (distinct from the
+/// `x` region so cache sets see both working sets).
+pub(crate) const VC_BASE: u64 = 2 << 41;
+
+/// Calibrated issue efficiency of the shape-specialized CSR-k kernels
+/// (see [`super::assemble`]; anchored on the paper's Fig 5 averages).
+pub(crate) const CSRK_KERNEL_EFF: f64 = 0.93;
+
+/// Simulate GPUSpMV-3 over a CSR-3 matrix with the given block dims.
+pub fn simulate_gpuspmv3<T: Scalar>(
+    a: &CsrK<T>,
+    device: &DeviceSpec,
+    dims: BlockDims,
+) -> SimResult {
+    assert_eq!(a.k(), 3, "GPUSpMV-3 runs on CSR-3");
+    assert!(dims.threads() <= device.max_threads_per_block);
+    let elem = std::mem::size_of::<T>() as u64;
+    let csr = a.csr();
+    let row_ptr = csr.row_ptr();
+    let mut mem = MemSim::new(device);
+    let mut warp_iters = 0u64;
+    let mut useful_lanes = 0u64;
+    let mut total_warps = 0u64;
+    let mut scratch = Vec::with_capacity(64);
+    let mut lane_rows: Vec<u32> = Vec::with_capacity(dims.threads());
+    let x_base = 1u64 << 40; // x vector in its own address region
+
+    for block in 0..a.num_ssrs() {
+        let sm = block % device.sm_count;
+        let srs: Vec<usize> = a.ssr_srs(block).collect();
+        for sr_chunk in srs.chunks(dims.y) {
+            // row tiles: lanes are (sr_local · x + row_slot); SRs longer
+            // than dims.x take multiple tiles (grid-stride in x).
+            let max_len = sr_chunk
+                .iter()
+                .map(|&j| a.sr_rows(j).len())
+                .max()
+                .unwrap_or(0);
+            let tiles = max_len.div_ceil(dims.x);
+            for rt in 0..tiles {
+                lane_rows.clear();
+                for &j in sr_chunk {
+                    let rows = a.sr_rows(j);
+                    for slot in 0..dims.x {
+                        let r = rows.start + rt * dims.x + slot;
+                        lane_rows.push(if r < rows.end { r as u32 } else { u32::MAX });
+                    }
+                }
+                // warps of 32 consecutive lanes
+                for warp in lane_rows.chunks(device.warp_size) {
+                    let live: Vec<u32> =
+                        warp.iter().copied().filter(|&r| r != u32::MAX).collect();
+                    if live.is_empty() {
+                        continue;
+                    }
+                    total_warps += 1;
+                    let iters = live
+                        .iter()
+                        .map(|&r| (row_ptr[r as usize + 1] - row_ptr[r as usize]) as usize)
+                        .max()
+                        .unwrap();
+                    // vals + col_idx go through the cache as one fused
+                    // (elem + 4)-byte record per nonzero: the L1 holds
+                    // each sector across the strided per-lane iterations
+                    // that consume it (and across row tiles of the same
+                    // super-row chunk on the same SM).
+                    let mut x_addrs: Vec<u64> = Vec::with_capacity(live.len());
+                    let mut vc_addrs: Vec<u64> = Vec::with_capacity(live.len());
+                    for t in 0..iters {
+                        x_addrs.clear();
+                        vc_addrs.clear();
+                        for &r in &live {
+                            let s = row_ptr[r as usize] as usize + t;
+                            if s < row_ptr[r as usize + 1] as usize {
+                                vc_addrs.push(VC_BASE + s as u64 * (elem + 4));
+                                x_addrs.push(x_base + csr.col_idx()[s] as u64 * elem);
+                            }
+                        }
+                        useful_lanes += x_addrs.len() as u64;
+                        mem.gather(sm, &vc_addrs);
+                        mem.gather(sm, &x_addrs);
+                    }
+                    warp_iters += iters as u64;
+                    // y write-back: one store per live lane, coalesced
+                    let rows64: Vec<u64> = live.iter().map(|&r| r as u64).collect();
+                    let y_sec = distinct_sectors(&mut scratch, &rows64, elem);
+                    mem.stream(y_sec * 32);
+                }
+            }
+        }
+    }
+    let flops = csr.spmv_flops();
+    assemble(device, flops, warp_iters, 0, total_warps, useful_lanes, CSRK_KERNEL_EFF, mem.stats)
+}
+
+/// Simulate GPUSpMV-3.5: `x` lanes split each row's inner product, with
+/// a shared-memory parallel reduction per row (Listing 4).
+pub fn simulate_gpuspmv35<T: Scalar>(
+    a: &CsrK<T>,
+    device: &DeviceSpec,
+    dims: BlockDims,
+) -> SimResult {
+    assert_eq!(a.k(), 3, "GPUSpMV-3.5 runs on CSR-3");
+    assert!(dims.threads() <= device.max_threads_per_block);
+    let elem = std::mem::size_of::<T>() as u64;
+    let csr = a.csr();
+    let row_ptr = csr.row_ptr();
+    let mut mem = MemSim::new(device);
+    let mut warp_iters = 0u64;
+    let mut useful_lanes = 0u64;
+    let mut reduction_cycles = 0u64;
+    let mut total_warps = 0u64;
+    let mut scratch = Vec::with_capacity(64);
+    let x_base = 1u64 << 40;
+    let log2x = (usize::BITS - (dims.x.max(1) - 1).leading_zeros()) as u64;
+
+    // lanes: ((z = SR) · y + (y = row)) · x + (x = nnz lane)
+    let mut lane_desc: Vec<u32> = Vec::new(); // row per (z, y) group
+    for block in 0..a.num_ssrs() {
+        let sm = block % device.sm_count;
+        let srs: Vec<usize> = a.ssr_srs(block).collect();
+        for sr_chunk in srs.chunks(dims.z) {
+            let max_len = sr_chunk
+                .iter()
+                .map(|&j| a.sr_rows(j).len())
+                .max()
+                .unwrap_or(0);
+            let tiles = max_len.div_ceil(dims.y);
+            for rt in 0..tiles {
+                lane_desc.clear();
+                for &j in sr_chunk {
+                    let rows = a.sr_rows(j);
+                    for slot in 0..dims.y {
+                        let r = rows.start + rt * dims.y + slot;
+                        lane_desc.push(if r < rows.end { r as u32 } else { u32::MAX });
+                    }
+                }
+                // each (z, y) group contributes dims.x consecutive lanes;
+                // group warps over whole (row, x-lane) lane space
+                let rows_per_warp = (device.warp_size / dims.x).max(1);
+                for warp_rows in lane_desc.chunks(rows_per_warp) {
+                    let live: Vec<u32> =
+                        warp_rows.iter().copied().filter(|&r| r != u32::MAX).collect();
+                    if live.is_empty() {
+                        continue;
+                    }
+                    total_warps += 1;
+                    // each row's nnz processed dims.x at a time
+                    let iters = live
+                        .iter()
+                        .map(|&r| {
+                            ((row_ptr[r as usize + 1] - row_ptr[r as usize]) as usize)
+                                .div_ceil(dims.x)
+                        })
+                        .max()
+                        .unwrap();
+                    // fused vals+cols records through the cache (see
+                    // simulate_gpuspmv3)
+                    let mut x_addrs: Vec<u64> = Vec::with_capacity(32);
+                    let mut vc_addrs: Vec<u64> = Vec::with_capacity(32);
+                    for t in 0..iters {
+                        x_addrs.clear();
+                        vc_addrs.clear();
+                        for &r in &live {
+                            let lo = row_ptr[r as usize] as usize;
+                            let hi = row_ptr[r as usize + 1] as usize;
+                            for lx in 0..dims.x {
+                                let s = lo + t * dims.x + lx;
+                                if s < hi {
+                                    vc_addrs.push(VC_BASE + s as u64 * (elem + 4));
+                                    x_addrs.push(x_base + csr.col_idx()[s] as u64 * elem);
+                                }
+                            }
+                        }
+                        useful_lanes += x_addrs.len() as u64;
+                        mem.gather(sm, &vc_addrs);
+                        mem.gather(sm, &x_addrs);
+                    }
+                    warp_iters += iters as u64;
+                    // per-row parallel reduction in shared memory
+                    reduction_cycles += log2x * 2;
+                    let rows64: Vec<u64> = live.iter().map(|&r| r as u64).collect();
+                    let y_sec = distinct_sectors(&mut scratch, &rows64, elem);
+                    mem.stream(y_sec * 32);
+                }
+            }
+        }
+    }
+    let flops = csr.spmv_flops();
+    assemble(device, flops, warp_iters, reduction_cycles, total_warps, useful_lanes, CSRK_KERNEL_EFF, mem.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::VOLTA_V100;
+    use crate::reorder::bandk;
+    use crate::sparse::{gen, CsrK};
+
+    fn csr3_of(a: &crate::sparse::Csr<f32>, ssrs: usize, srs: usize) -> CsrK<f32> {
+        CsrK::csr3_uniform(a.clone(), ssrs, srs)
+    }
+
+    #[test]
+    fn result_is_bandwidth_bound_and_below_roofline() {
+        let a = gen::grid2d_5pt::<f32>(96, 96);
+        let k = csr3_of(&a, 8, 9);
+        let r = simulate_gpuspmv3(&k, &VOLTA_V100, BlockDims::d2(8, 12));
+        assert!(r.gflops > 1.0, "gflops {}", r.gflops);
+        // AI of SpMV ≈ 0.25 flop/byte ⇒ must be well under the ridge
+        assert!(
+            r.gflops < VOLTA_V100.roofline_gflops(1.0),
+            "gflops {} above plausible roofline",
+            r.gflops
+        );
+        assert_eq!(r.limiter, super::super::Limiter::Dram);
+    }
+
+    #[test]
+    fn banded_ordering_beats_scrambled() {
+        let a = gen::grid2d_5pt::<f32>(96, 96);
+        let scrambled = gen::scramble_labels(&a, 3);
+        let kb = csr3_of(&a, 8, 9);
+        let ks = csr3_of(&scrambled, 8, 9);
+        let rb = simulate_gpuspmv3(&kb, &VOLTA_V100, BlockDims::d2(8, 12));
+        let rs = simulate_gpuspmv3(&ks, &VOLTA_V100, BlockDims::d2(8, 12));
+        assert!(
+            rb.time_s < rs.time_s,
+            "banded {} vs scrambled {}",
+            rb.time_s,
+            rs.time_s
+        );
+        assert!(rb.mem.l1_hit_rate() > rs.mem.l1_hit_rate());
+    }
+
+    #[test]
+    fn spmv35_wins_on_dense_rows() {
+        // bmwcra-class: ~72 nnz/row — inner-product parallelism pays
+        let a = gen::fem3d::<f32>(6, 6, 6, 3, gen::OFFSETS_26, 1);
+        let k = csr3_of(&a, 8, 8);
+        let r3 = simulate_gpuspmv3(&k, &VOLTA_V100, BlockDims::d2(8, 12));
+        let r35 = simulate_gpuspmv35(&k, &VOLTA_V100, BlockDims::d3(32, 8, 2));
+        assert!(
+            r35.time_s < r3.time_s,
+            "3.5 {} vs 3 {}",
+            r35.time_s,
+            r3.time_s
+        );
+    }
+
+    #[test]
+    fn spmv3_ok_on_sparse_rows() {
+        // honeycomb-class (rdensity 3): the paper's threshold says
+        // serial inner product is right below ~8 nnz/row.
+        let a = gen::honeycomb::<f32>(128, 128);
+        let k = csr3_of(&a, 8, 9);
+        let r3 = simulate_gpuspmv3(&k, &VOLTA_V100, BlockDims::d2(8, 12));
+        let r35 = simulate_gpuspmv35(&k, &VOLTA_V100, BlockDims::d3(8, 8, 4));
+        assert!(
+            r3.time_s <= r35.time_s * 1.2,
+            "3 {} vs 3.5 {}",
+            r3.time_s,
+            r35.time_s
+        );
+    }
+
+    #[test]
+    fn bandk_ordering_composes_with_sim() {
+        // x must not fit in one SM's L1 (128 KiB = 32k f32) or the
+        // ordering cannot matter; 224² = 50k rows ⇒ 200 KiB x vector.
+        let a = gen::triangular_grid::<f32>(224, 224);
+        let scr = gen::scramble_labels(&a, 9);
+        let ord = bandk(&scr, 3, 9, 8, 2);
+        let k = ord.apply(&scr);
+        let r = simulate_gpuspmv3(&k, &VOLTA_V100, BlockDims::d2(8, 12));
+        let kn = csr3_of(&scr, 8, 9);
+        let rn = simulate_gpuspmv3(&kn, &VOLTA_V100, BlockDims::d2(8, 12));
+        assert!(
+            r.time_s < rn.time_s,
+            "bandk {} vs natural-scrambled {}",
+            r.time_s,
+            rn.time_s
+        );
+    }
+
+    #[test]
+    fn more_blocks_raise_occupancy() {
+        let small = gen::grid2d_5pt::<f32>(24, 24);
+        let large = gen::grid2d_5pt::<f32>(128, 128);
+        let rs = simulate_gpuspmv3(&csr3_of(&small, 4, 4), &VOLTA_V100, BlockDims::d2(8, 12));
+        let rl = simulate_gpuspmv3(&csr3_of(&large, 4, 4), &VOLTA_V100, BlockDims::d2(8, 12));
+        assert!(rl.occupancy >= rs.occupancy);
+    }
+}

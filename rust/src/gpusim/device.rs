@@ -1,0 +1,103 @@
+//! GPU device specifications (paper Table 1 devices).
+
+/// Microarchitectural parameters of a simulated NVIDIA GPU.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sm_count: usize,
+    /// Warp width (32 on every NVIDIA part).
+    pub warp_size: usize,
+    /// Max threads per block (1024 — caps SSR size, §3).
+    pub max_threads_per_block: usize,
+    /// L1 data cache / shared memory per SM, bytes.
+    pub l1_bytes: usize,
+    /// Shared L2, bytes.
+    pub l2_bytes: usize,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// Warp instructions retired per SM-cycle (issue width proxy).
+    pub ipc: f64,
+    /// Peak fp32 throughput, TFLOP/s (roofline ceiling, Fig 1).
+    pub fp32_tflops: f64,
+    /// Fixed kernel-launch + sync overhead, seconds.
+    pub launch_overhead_s: f64,
+}
+
+/// NVIDIA V100 ("Volta", paper System 1): 80 SMs, 32 GB HBM2 @ 900 GB/s,
+/// 128 KiB L1/SM, 6 MiB L2, 15.7 fp32 TFLOP/s.
+pub const VOLTA_V100: DeviceSpec = DeviceSpec {
+    name: "V100 (Volta)",
+    sm_count: 80,
+    warp_size: 32,
+    max_threads_per_block: 1024,
+    l1_bytes: 128 * 1024,
+    l2_bytes: 6 * 1024 * 1024,
+    mem_bw_gbps: 900.0,
+    clock_ghz: 1.38,
+    ipc: 2.0,
+    fp32_tflops: 15.7,
+    launch_overhead_s: 1.5e-6,
+};
+
+/// NVIDIA A100 ("Ampere", paper System 2): 108 SMs, 40 GB HBM2E @
+/// 1555 GB/s, 192 KiB L1/SM, 40 MiB L2 (the 7× L2 jump the paper calls
+/// out in §6), 19.5 fp32 TFLOP/s.
+pub const AMPERE_A100: DeviceSpec = DeviceSpec {
+    name: "A100 (Ampere)",
+    sm_count: 108,
+    warp_size: 32,
+    max_threads_per_block: 1024,
+    l1_bytes: 192 * 1024,
+    l2_bytes: 40 * 1024 * 1024,
+    mem_bw_gbps: 1555.0,
+    clock_ghz: 1.41,
+    ipc: 2.0,
+    fp32_tflops: 19.5,
+    launch_overhead_s: 1.5e-6,
+};
+
+impl DeviceSpec {
+    /// Roofline ridge point in FLOP/byte (Fig 1): arithmetic intensity
+    /// above which the device becomes compute-bound.
+    pub fn ridge_flop_per_byte(&self) -> f64 {
+        self.fp32_tflops * 1e12 / (self.mem_bw_gbps * 1e9)
+    }
+
+    /// Attainable GFlop/s at a given arithmetic intensity (roofline).
+    pub fn roofline_gflops(&self, flop_per_byte: f64) -> f64 {
+        (self.fp32_tflops * 1e3).min(flop_per_byte * self.mem_bw_gbps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_ridge_point_plausible() {
+        // 19.5 TF / 1555 GB/s ≈ 12.5 flop/byte — matches the Fig 1 sketch
+        let r = AMPERE_A100.ridge_flop_per_byte();
+        assert!((r - 12.54).abs() < 0.1, "ridge {r}");
+    }
+
+    #[test]
+    fn roofline_slopes_and_saturates() {
+        let d = &VOLTA_V100;
+        // SpMV at ~0.25 flop/byte is deep in the bandwidth regime
+        let g = d.roofline_gflops(0.25);
+        assert!((g - 225.0).abs() < 1.0, "gflops {g}");
+        // and far above the ridge we hit peak
+        assert_eq!(d.roofline_gflops(1e3), 15.7e3);
+    }
+
+    #[test]
+    fn l2_ratio_matches_paper_claim() {
+        // §6: "the L2 cache is 7× larger" on Ampere
+        let ratio = AMPERE_A100.l2_bytes as f64 / VOLTA_V100.l2_bytes as f64;
+        assert!((ratio - 6.67).abs() < 0.5, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,70 @@
+//! COO SpMV baseline (§2.1).
+//!
+//! Serial by necessity: COO provides no row grouping, so a parallel
+//! version would need atomics or privatized outputs — exactly the
+//! drawback the paper cites when motivating CSR.
+
+use super::SpMv;
+use crate::sparse::{Coo, Scalar};
+
+/// Serial COO kernel.
+pub struct CooKernel<T> {
+    a: Coo<T>,
+}
+
+impl<T: Scalar> CooKernel<T> {
+    /// Wrap a (compacted) COO matrix.
+    pub fn new(mut a: Coo<T>) -> Self {
+        a.compact();
+        CooKernel { a }
+    }
+}
+
+impl<T: Scalar> SpMv<T> for CooKernel<T> {
+    fn name(&self) -> String {
+        "coo-serial".into()
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.ncols());
+        assert_eq!(y.len(), self.a.nrows());
+        for v in y.iter_mut() {
+            *v = T::zero();
+        }
+        for &(r, c, v) in self.a.entries() {
+            y[r as usize] += v * x[c as usize];
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        2.0 * self.a.nnz() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::assert_kernel_matches;
+    use crate::sparse::gen;
+
+    #[test]
+    fn matches_reference() {
+        let a = gen::grid2d_5pt::<f64>(12, 12);
+        let mut coo = Coo::new(a.nrows(), a.ncols());
+        for i in 0..a.nrows() {
+            let (cols, vals) = a.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(i, c as usize, v);
+            }
+        }
+        assert_kernel_matches(&a, &CooKernel::new(coo), 1e-12);
+    }
+}

@@ -1,0 +1,229 @@
+//! CSR SpMV: serial reference and the parallel **MKL proxy**.
+//!
+//! Intel MKL's CSR SpMV is, at its core, a well-tuned row-parallel CSR
+//! loop; [`CsrParallel`] stands in for it on the CPU comparisons
+//! (Figs 8–10) per DESIGN.md §Hardware-Adaptation. It parallelizes rows
+//! across the pool with static chunking by *nonzero count* (not row
+//! count), which is what makes it robust to skewed row lengths.
+
+use std::sync::Arc;
+
+use super::{SendPtr, SpMv};
+use crate::sparse::{Csr, Scalar};
+use crate::util::ThreadPool;
+
+/// Serial CSR kernel (also the single-thread baseline of Fig 10).
+pub struct CsrSerial<T> {
+    a: Csr<T>,
+}
+
+impl<T: Scalar> CsrSerial<T> {
+    /// Wrap a CSR matrix.
+    pub fn new(a: Csr<T>) -> Self {
+        CsrSerial { a }
+    }
+}
+
+impl<T: Scalar> SpMv<T> for CsrSerial<T> {
+    fn name(&self) -> String {
+        "csr-serial".into()
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        spmv_rows(&self.a, x, y, 0, self.a.nrows());
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        self.a.spmv_flops()
+    }
+}
+
+/// Row range `[lo, hi)` of plain CSR SpMV; the shared inner loop of the
+/// CSR-family kernels. Slices are taken per row so LLVM can elide bounds
+/// checks and vectorize the multiply-add reduction.
+#[inline]
+pub(crate) fn spmv_rows<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], lo: usize, hi: usize) {
+    let row_ptr = a.row_ptr();
+    let col_idx = a.col_idx();
+    let vals = a.vals();
+    for i in lo..hi {
+        let s = row_ptr[i] as usize;
+        let e = row_ptr[i + 1] as usize;
+        let mut acc = T::zero();
+        for (&c, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+            acc += v * x[c as usize];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Parallel CSR over a persistent pool — the MKL stand-in.
+///
+/// Work is split into one contiguous row chunk per thread, balanced by
+/// nonzero count (each chunk covers ≈ NNZ/threads nonzeros).
+pub struct CsrParallel<T> {
+    a: Csr<T>,
+    pool: Arc<ThreadPool>,
+    /// Row boundaries per thread chunk (length `threads + 1`).
+    chunks: Vec<u32>,
+}
+
+impl<T: Scalar> CsrParallel<T> {
+    /// Wrap a CSR matrix, precomputing nnz-balanced row chunks.
+    pub fn new(a: Csr<T>, pool: Arc<ThreadPool>) -> Self {
+        let chunks = nnz_balanced_chunks(&a, pool.threads());
+        CsrParallel { a, pool, chunks }
+    }
+
+    /// The underlying matrix.
+    pub fn matrix(&self) -> &Csr<T> {
+        &self.a
+    }
+}
+
+/// Split `0..nrows` into `parts` contiguous chunks of ≈ equal nonzero
+/// count. Returns `parts + 1` boundaries.
+pub(crate) fn nnz_balanced_chunks<T: Scalar>(a: &Csr<T>, parts: usize) -> Vec<u32> {
+    let nnz = a.nnz();
+    let n = a.nrows();
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0u32);
+    let row_ptr = a.row_ptr();
+    let mut row = 0usize;
+    for p in 1..parts {
+        let target = (nnz * p / parts) as u32;
+        // first row whose cumulative nnz reaches the target
+        while row < n && row_ptr[row + 1] < target {
+            row += 1;
+        }
+        bounds.push(row.min(n) as u32);
+    }
+    bounds.push(n as u32);
+    // enforce monotonicity in degenerate cases (empty rows, tiny n)
+    for i in 1..bounds.len() {
+        if bounds[i] < bounds[i - 1] {
+            bounds[i] = bounds[i - 1];
+        }
+    }
+    bounds
+}
+
+impl<T: Scalar> SpMv<T> for CsrParallel<T> {
+    fn name(&self) -> String {
+        format!("csr-parallel({}t)", self.pool.threads())
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.ncols());
+        assert_eq!(y.len(), self.a.nrows());
+        let yp = SendPtr(y.as_mut_ptr());
+        let a = &self.a;
+        let chunks = &self.chunks;
+        self.pool.run_on_all(|tid| {
+            let lo = chunks[tid] as usize;
+            let hi = chunks[tid + 1] as usize;
+            if lo < hi {
+                // SAFETY: chunks are disjoint row ranges.
+                let yslice =
+                    unsafe { std::slice::from_raw_parts_mut(yp.add(0), a.nrows()) };
+                spmv_rows(a, x, yslice, lo, hi);
+            }
+        });
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        self.a.spmv_flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::assert_kernel_matches;
+    use crate::sparse::{gen, suite, SuiteScale};
+
+    #[test]
+    fn serial_matches_reference() {
+        let a = gen::grid2d_5pt::<f64>(20, 20);
+        assert_kernel_matches(&a, &CsrSerial::new(a.clone()), 1e-12);
+    }
+
+    #[test]
+    fn parallel_matches_reference_various_threads() {
+        let a = gen::grid3d_7pt::<f64>(10, 10, 10);
+        for t in [1, 2, 4, 7] {
+            let pool = Arc::new(ThreadPool::new(t));
+            assert_kernel_matches(&a, &CsrParallel::new(a.clone(), pool), 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_f32_on_suite_samples() {
+        let pool = Arc::new(ThreadPool::new(4));
+        for id in [1usize, 8, 16] {
+            let e = &suite::SUITE[id - 1];
+            let a = e.build::<f32>(SuiteScale::Tiny);
+            assert_kernel_matches(&a, &CsrParallel::new(a.clone(), pool.clone()), 1e-3);
+        }
+    }
+
+    #[test]
+    fn chunks_cover_and_balance() {
+        let a = gen::grid2d_5pt::<f64>(40, 40);
+        let b = nnz_balanced_chunks(&a, 8);
+        assert_eq!(b[0], 0);
+        assert_eq!(*b.last().unwrap() as usize, a.nrows());
+        // nnz per chunk within 2x of ideal
+        let ideal = a.nnz() as f64 / 8.0;
+        for w in b.windows(2) {
+            let nnz_chunk =
+                (a.row_ptr()[w[1] as usize] - a.row_ptr()[w[0] as usize]) as f64;
+            assert!(nnz_chunk < ideal * 2.0 + 64.0, "chunk nnz {nnz_chunk}");
+        }
+    }
+
+    #[test]
+    fn skewed_matrix_still_balanced() {
+        // one huge row + many tiny ones
+        use crate::sparse::Coo;
+        let n = 1000;
+        let mut c = Coo::<f64>::new(n, n);
+        for j in 0..n {
+            c.push(0, j, 1.0);
+        }
+        for i in 1..n {
+            c.push(i, i, 1.0);
+        }
+        let a = c.to_csr();
+        let pool = Arc::new(ThreadPool::new(4));
+        assert_kernel_matches(&a, &CsrParallel::new(a.clone(), pool), 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        use crate::sparse::Coo;
+        let a = Coo::<f64>::new(5, 5).to_csr();
+        let pool = Arc::new(ThreadPool::new(2));
+        let k = CsrParallel::new(a, pool);
+        let x = vec![1.0; 5];
+        let mut y = vec![7.0; 5];
+        k.spmv(&x, &mut y);
+        assert_eq!(y, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,128 @@
+//! CSR5 SpMV kernel: parallel tile sweep + sequential carry calibration
+//! (Liu & Vinter's "speculative segmented sum" structure).
+//!
+//! Tiles are distributed across the pool; each tile's segmented sum
+//! writes rows that *start* inside the tile with `=`, and rows continued
+//! from earlier tiles are emitted as carries. Carries are applied in a
+//! short sequential pass (one per tile at most), then the scalar tail.
+
+use std::sync::Arc;
+
+use super::{SendPtr, SpMv};
+use crate::sparse::{Csr5, Scalar};
+use crate::util::{Schedule, ThreadPool};
+
+/// Parallel CSR5 kernel.
+pub struct Csr5Kernel<T> {
+    a: Csr5<T>,
+    pool: Arc<ThreadPool>,
+    nnz: usize,
+}
+
+impl<T: Scalar> Csr5Kernel<T> {
+    /// Wrap a CSR5 matrix (`nnz` = source nonzeros for FLOP accounting).
+    pub fn new(a: Csr5<T>, nnz: usize, pool: Arc<ThreadPool>) -> Self {
+        Csr5Kernel { a, pool, nnz }
+    }
+
+    /// Tile shape `(ω, σ)`.
+    pub fn tile_shape(&self) -> (usize, usize) {
+        (self.a.omega, self.a.sigma)
+    }
+}
+
+impl<T: Scalar> SpMv<T> for Csr5Kernel<T> {
+    fn name(&self) -> String {
+        format!(
+            "csr5(w{},s{},{}t)",
+            self.a.omega,
+            self.a.sigma,
+            self.pool.threads()
+        )
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.ncols());
+        assert_eq!(y.len(), self.a.nrows());
+        let nrows = self.a.nrows();
+        let ntiles = self.a.ntiles();
+        // zero y: rows written by tiles use `=`, but empty rows and rows
+        // beginning in the tail must start from zero.
+        for v in y.iter_mut() {
+            *v = T::zero();
+        }
+        let yp = SendPtr(y.as_mut_ptr());
+        // one carry slot per tile, written disjointly
+        let mut carries: Vec<Option<(u32, T)>> = vec![None; ntiles];
+        let cp = SendPtr(carries.as_mut_ptr());
+        let a = &self.a;
+        self.pool.parallel_for(ntiles, Schedule::Static, |lo, hi| {
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), nrows) };
+            for t in lo..hi {
+                let carry = a.tile_segmented_sum(t, x, ys);
+                // SAFETY: each tile writes only its own carry slot.
+                unsafe { *cp.add(t) = carry };
+            }
+        });
+        // sequential calibration: apply carries to their rows
+        for c in carries.into_iter().flatten() {
+            y[c.0 as usize] += c.1;
+        }
+        self.a.apply_tail(x, y);
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        2.0 * self.nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::assert_kernel_matches;
+    use crate::sparse::{gen, suite, Csr5, SuiteScale};
+
+    #[test]
+    fn matches_reference_parallel() {
+        let a = gen::grid3d_7pt::<f64>(8, 8, 8);
+        for t in [1, 2, 4] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let c5 = Csr5::from_csr(&a, 4, 16);
+            assert_kernel_matches(&a, &Csr5Kernel::new(c5, a.nnz(), pool), 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_on_suite_extremes() {
+        let pool = Arc::new(ThreadPool::new(4));
+        for id in [1usize, 4, 16] {
+            let e = &suite::SUITE[id - 1];
+            let a = e.build::<f64>(SuiteScale::Tiny);
+            let c5 = Csr5::from_csr(&a, 8, 16);
+            assert_kernel_matches(&a, &Csr5Kernel::new(c5, a.nnz(), pool.clone()), 1e-9);
+        }
+    }
+
+    #[test]
+    fn long_spanning_rows_parallel() {
+        use crate::sparse::Coo;
+        let mut c = Coo::<f64>::new(6, 500);
+        for j in 0..400 {
+            c.push(2, j, 0.5);
+        }
+        c.push(0, 1, 1.0);
+        c.push(5, 499, 2.0);
+        let a = c.to_csr();
+        let pool = Arc::new(ThreadPool::new(4));
+        let c5 = Csr5::from_csr(&a, 4, 8);
+        assert_kernel_matches(&a, &Csr5Kernel::new(c5, a.nnz(), pool), 1e-12);
+    }
+}

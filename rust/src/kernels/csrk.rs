@@ -1,0 +1,181 @@
+//! CSR-k SpMV kernels — the paper's Listing 1.
+//!
+//! The CPU kernel parallelizes the outermost group level (super-super-
+//! rows for CSR-3, super-rows for CSR-2) with OpenMP-style static
+//! scheduling; every inner level is a serial loop, preserving the
+//! cache-friendly contiguity the format was reordered for.
+
+use std::sync::Arc;
+
+use super::csr::spmv_rows;
+use super::{SendPtr, SpMv};
+use crate::sparse::{CsrK, Scalar};
+use crate::util::{Schedule, ThreadPool};
+
+/// CSR-2 kernel: `parallel for` over super-rows, serial rows inside
+/// (the §4.2 / §7 CPU configuration).
+pub struct Csr2Kernel<T> {
+    a: CsrK<T>,
+    pool: Arc<ThreadPool>,
+}
+
+impl<T: Scalar> Csr2Kernel<T> {
+    /// Wrap a CSR-k matrix (uses its super-row structure; `k = 2` view).
+    pub fn new(a: CsrK<T>, pool: Arc<ThreadPool>) -> Self {
+        Csr2Kernel { a, pool }
+    }
+
+    /// The wrapped matrix.
+    pub fn matrix(&self) -> &CsrK<T> {
+        &self.a
+    }
+}
+
+impl<T: Scalar> SpMv<T> for Csr2Kernel<T> {
+    fn name(&self) -> String {
+        format!("csr2({}t)", self.pool.threads())
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.csr().ncols());
+        assert_eq!(y.len(), self.a.csr().nrows());
+        let yp = SendPtr(y.as_mut_ptr());
+        let a = &self.a;
+        let nrows = a.csr().nrows();
+        // Listing 1 with the SSR level removed: the parallel loop runs
+        // over super-rows directly.
+        self.pool
+            .parallel_for(a.num_srs(), Schedule::Static, |sr_lo, sr_hi| {
+                // SAFETY: super-rows are disjoint row ranges.
+                let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), nrows) };
+                for j in sr_lo..sr_hi {
+                    let rows = a.sr_rows(j);
+                    spmv_rows(a.csr(), x, ys, rows.start, rows.end);
+                }
+            });
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.csr().nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.csr().ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        self.a.csr().spmv_flops()
+    }
+}
+
+/// CSR-3 kernel: `parallel for` over super-super-rows; serial loops over
+/// super-rows, rows and nonzeros inside (paper Listing 1 verbatim).
+pub struct Csr3Kernel<T> {
+    a: CsrK<T>,
+    pool: Arc<ThreadPool>,
+}
+
+impl<T: Scalar> Csr3Kernel<T> {
+    /// Wrap a CSR-3 matrix. Panics if the matrix has no SSR level.
+    pub fn new(a: CsrK<T>, pool: Arc<ThreadPool>) -> Self {
+        assert_eq!(a.k(), 3, "Csr3Kernel needs a k = 3 matrix");
+        Csr3Kernel { a, pool }
+    }
+
+    /// The wrapped matrix.
+    pub fn matrix(&self) -> &CsrK<T> {
+        &self.a
+    }
+}
+
+impl<T: Scalar> SpMv<T> for Csr3Kernel<T> {
+    fn name(&self) -> String {
+        format!("csr3({}t)", self.pool.threads())
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.csr().ncols());
+        assert_eq!(y.len(), self.a.csr().nrows());
+        let yp = SendPtr(y.as_mut_ptr());
+        let a = &self.a;
+        let nrows = a.csr().nrows();
+        self.pool
+            .parallel_for(a.num_ssrs(), Schedule::Static, |ssr_lo, ssr_hi| {
+                // SAFETY: SSRs are disjoint row ranges.
+                let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), nrows) };
+                for i in ssr_lo..ssr_hi {
+                    for j in a.ssr_srs(i) {
+                        let rows = a.sr_rows(j);
+                        spmv_rows(a.csr(), x, ys, rows.start, rows.end);
+                    }
+                }
+            });
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.csr().nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.csr().ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        self.a.csr().spmv_flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::assert_kernel_matches;
+    use crate::reorder::bandk;
+    use crate::sparse::{gen, CsrK};
+
+    #[test]
+    fn csr2_matches_reference() {
+        let a = gen::grid2d_5pt::<f64>(24, 24);
+        let pool = Arc::new(ThreadPool::new(4));
+        for srs in [1usize, 7, 96, 10_000] {
+            let k = CsrK::csr2_uniform(a.clone(), srs);
+            assert_kernel_matches(&a, &Csr2Kernel::new(k, pool.clone()), 1e-12);
+        }
+    }
+
+    #[test]
+    fn csr3_matches_reference() {
+        let a = gen::grid3d_7pt::<f64>(8, 8, 8);
+        let pool = Arc::new(ThreadPool::new(3));
+        for (ssrs, srs) in [(1usize, 1usize), (4, 8), (12, 5), (100, 100)] {
+            let k = CsrK::csr3_uniform(a.clone(), ssrs, srs);
+            assert_kernel_matches(&a, &Csr3Kernel::new(k, pool.clone()), 1e-12);
+        }
+    }
+
+    #[test]
+    fn csr3_with_bandk_boundaries() {
+        let a = gen::triangular_grid::<f64>(16, 16);
+        let ord = bandk(&a, 3, 8, 4, 5);
+        let k = ord.apply(&a);
+        let pa = k.csr().clone();
+        let pool = Arc::new(ThreadPool::new(4));
+        assert_kernel_matches(&pa, &Csr3Kernel::new(k, pool), 1e-12);
+    }
+
+    #[test]
+    fn csr2_f32_tolerance() {
+        let a = gen::fem3d::<f32>(4, 4, 4, 3, gen::OFFSETS_14, 2);
+        let pool = Arc::new(ThreadPool::new(4));
+        let k = CsrK::csr2_uniform(a.clone(), 16);
+        assert_kernel_matches(&a, &Csr2Kernel::new(k, pool), 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn csr3_requires_k3() {
+        let a = gen::grid2d_5pt::<f64>(4, 4);
+        let pool = Arc::new(ThreadPool::new(1));
+        let k = CsrK::csr2_uniform(a, 2);
+        let _ = Csr3Kernel::new(k, pool);
+    }
+}

@@ -1,0 +1,90 @@
+//! CPU SpMV kernels — one per storage format.
+//!
+//! * [`csr`] — serial CSR and the parallel-CSR **MKL proxy** baseline.
+//! * [`csrk`] — the paper's Listing 1: CSR-2 and CSR-3 kernels,
+//!   parallelized over the outermost group level with static scheduling
+//!   (§5.2).
+//! * [`coo`], [`ell`], [`bcsr`] — related-work baselines.
+//! * [`csr5`] — CSR5 tile kernel with parallel segmented sum and
+//!   sequential carry calibration.
+//!
+//! All parallel kernels share the crate's persistent
+//! [`ThreadPool`](crate::util::ThreadPool) and write disjoint row ranges,
+//! so `y` is distributed without synchronization on the hot path.
+
+pub mod bcsr;
+pub mod coo;
+pub mod csr;
+pub mod csr5;
+pub mod csrk;
+pub mod ell;
+
+pub use bcsr::BcsrKernel;
+pub use coo::CooKernel;
+pub use csr::{CsrParallel, CsrSerial};
+pub use csr5::Csr5Kernel;
+pub use csrk::{Csr2Kernel, Csr3Kernel};
+pub use ell::EllKernel;
+
+use crate::sparse::Scalar;
+
+/// A ready-to-run SpMV executor: the format conversion and tuning have
+/// already happened; `spmv` is the hot path.
+pub trait SpMv<T: Scalar>: Send + Sync {
+    /// Kernel label for bench tables.
+    fn name(&self) -> String;
+
+    /// `y = A · x`.
+    fn spmv(&self, x: &[T], y: &mut [T]);
+
+    /// Rows of the operator.
+    fn nrows(&self) -> usize;
+
+    /// Columns of the operator.
+    fn ncols(&self) -> usize;
+
+    /// FLOPs per application (paper convention `2 · NNZ`).
+    fn flops(&self) -> f64;
+}
+
+/// Shared-nothing mutable pointer for distributing disjoint row ranges
+/// of `y` across pool workers. Safety contract: ranges never overlap.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub(crate) unsafe fn add(self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::sparse::Csr;
+
+    /// Assert `kernel` matches the CSR reference on a deterministic `x`.
+    pub fn assert_kernel_matches<T: Scalar>(a: &Csr<T>, kernel: &dyn SpMv<T>, tol: f64) {
+        let n = a.nrows();
+        let m = a.ncols();
+        let x: Vec<T> = (0..m)
+            .map(|i| T::from(((i * 37 + 11) % 23) as f64 / 23.0 - 0.5).unwrap())
+            .collect();
+        let mut y_ref = vec![T::zero(); n];
+        a.spmv_ref(&x, &mut y_ref);
+        let mut y = vec![T::from(9999.0).unwrap(); n]; // poison: kernels must overwrite
+        kernel.spmv(&x, &mut y);
+        for i in 0..n {
+            let (u, v) = (y[i].to_f64().unwrap(), y_ref[i].to_f64().unwrap());
+            let scale = v.abs().max(1.0);
+            assert!(
+                (u - v).abs() <= tol * scale,
+                "{}: row {i}: {u} vs {v}",
+                kernel.name()
+            );
+        }
+    }
+}

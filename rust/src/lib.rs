@@ -1,0 +1,46 @@
+//! # csrk — Heterogeneous SpMV via the CSR-k format
+//!
+//! Reproduction of Lane & Booth, *"Heterogeneous Sparse Matrix-Vector
+//! Multiplication via Compressed Sparse Row Format"* (2022).
+//!
+//! The crate is the L3 (coordinator) layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`sparse`] — sparse-matrix formats: COO, CSR, **CSR-k**, ELL, BCSR,
+//!   CSR5, plus Matrix Market I/O, synthetic generators and the paper's
+//!   16-matrix test suite.
+//! * [`reorder`] — RCM, weighted graph coarsening and the multilevel
+//!   **Band-k** ordering that CSR-k couples with.
+//! * [`kernels`] — CPU SpMV kernels for every format (the paper's
+//!   Listing 1 CSR-2/CSR-3 kernels, a parallel-CSR MKL proxy, CSR5
+//!   segmented-sum, ...).
+//! * [`gpusim`] — a transaction-level NVIDIA GPU execution model
+//!   (V100 "Volta" / A100 "Ampere" presets) that substitutes for the
+//!   paper's GPU testbeds; simulates GPUSpMV-3 / GPUSpMV-3.5 and the
+//!   cuSPARSE / KokkosKernels / CSR5 / TileSpMV baselines.
+//! * [`tuning`] — the paper's §4 model-driven constant-time parameter
+//!   selection (rdensity → block dims, SSRS, SRS) and the log-regression
+//!   fitting that derives it.
+//! * [`runtime`] — PJRT client: loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py` from the
+//!   L2 JAX model + L1 Pallas kernel) and executes them.
+//! * [`coordinator`] — the serving layer: matrix registry, dynamic
+//!   batcher, device scheduler, metrics.
+//! * [`solver`] — CG / Jacobi / power iteration exercising SpMV the way
+//!   the paper's motivating applications do.
+//! * [`analysis`] — roofline, storage overhead and the paper's
+//!   relative-performance metric.
+//! * [`util`] — in-tree substrates (thread pool, RNG, stats, bench
+//!   harness, CLI, property testing); the build environment is offline
+//!   so these are implemented from scratch.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod gpusim;
+pub mod kernels;
+pub mod reorder;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod tuning;
+pub mod util;

@@ -1,0 +1,161 @@
+//! `csrk` — the leader binary: inspect matrices, tune, solve and serve.
+//!
+//! ```text
+//! csrk suite                         # print the Table 2 suite
+//! csrk info --matrix ecology1       # structure + tuning of one entry
+//! csrk tune --matrix wave           # §4 parameters on both devices
+//! csrk solve --matrix ecology1      # CG over the CPU CSR-2 kernel
+//! csrk serve --requests 1000        # run the coordinator demo load
+//! ```
+
+use std::sync::Arc;
+
+use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
+use csrk::kernels::Csr2Kernel;
+use csrk::runtime::Runtime;
+use csrk::solver::cg_solve;
+use csrk::sparse::{suite, Csr, CsrK, SuiteScale};
+use csrk::tuning::{csr3_params, Device};
+use csrk::util::cli::Args;
+use csrk::util::table::{f, sep, Table};
+use csrk::util::ThreadPool;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("suite") => cmd_suite(),
+        Some("info") => cmd_info(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: csrk <suite|info|tune|solve|serve> [--matrix NAME] \
+                 [--scale tiny|small|medium|large] [--mtx FILE] ..."
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn scale(args: &Args) -> SuiteScale {
+    match args.get_str("scale", "small").as_str() {
+        "tiny" => SuiteScale::Tiny,
+        "medium" => SuiteScale::Medium,
+        "large" => SuiteScale::Large,
+        _ => SuiteScale::Small,
+    }
+}
+
+fn load(args: &Args) -> (String, Csr<f32>) {
+    if let Some(path) = args.options.get("mtx") {
+        let a = csrk::sparse::mm::read_csr(std::path::Path::new(path)).expect("read mtx");
+        return (path.clone(), a);
+    }
+    let name = args.get_str("matrix", "ecology1");
+    let e = suite::by_name(&name).unwrap_or_else(|| panic!("unknown suite matrix {name}"));
+    (name, e.build(scale(args)))
+}
+
+fn cmd_suite() {
+    let mut t = Table::new(&["ID", "Matrix", "N", "NNZ", "rdensity", "Problem Type"]).numeric();
+    for e in suite::suite() {
+        t.row(&[
+            e.id.to_string(),
+            e.name.into(),
+            sep(e.paper_n),
+            sep(e.paper_nnz),
+            f(e.paper_rdensity(), 2),
+            e.problem_type.into(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_info(args: &Args) {
+    let (name, a) = load(args);
+    println!("matrix {name}: {} x {}, nnz {}", a.nrows(), a.ncols(), a.nnz());
+    println!("  rdensity    {:.3}", a.rdensity());
+    println!("  bandwidth   {}", a.bandwidth());
+    println!("  max row nnz {}", a.max_row_nnz());
+    println!("  symmetric   {}", a.is_structurally_symmetric());
+    println!("  CSR bytes   {}", sep(a.storage_bytes()));
+    println!(
+        "  overhead    CSR-3 {:.3}%  combined {:.3}%",
+        csrk::analysis::overhead_csr3(&a, Device::Volta) * 100.0,
+        csrk::analysis::overhead_combined(&a, Device::Volta) * 100.0
+    );
+}
+
+fn cmd_tune(args: &Args) {
+    let (name, a) = load(args);
+    println!("constant-time tuning for {name} (rdensity {:.2}):", a.rdensity());
+    for dev in [Device::Volta, Device::Ampere] {
+        let p = csr3_params(dev, a.rdensity());
+        println!(
+            "  {dev:?}: SSRS {} SRS {} dims {}x{}x{} algo GPUSpMV-{}",
+            p.ssrs,
+            p.srs,
+            p.dims.x,
+            p.dims.y,
+            p.dims.z,
+            if p.use_35 { "3.5" } else { "3" }
+        );
+    }
+    println!("  CPU: CSR-2, SRS 96 (constant-time §4.2)");
+}
+
+fn cmd_solve(args: &Args) {
+    let (name, a) = load(args);
+    let threads = args.get("threads", ThreadPool::with_available_parallelism().threads());
+    let pool = Arc::new(ThreadPool::new(threads));
+    let k = Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 96), pool);
+    let n = a.nrows();
+    let b = vec![1.0f32; n];
+    let mut x = vec![0.0f32; n];
+    let t0 = std::time::Instant::now();
+    let rep = cg_solve(&k, &b, &mut x, 1e-5, args.get("max-iters", 2000));
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "CG on {name}: {} iters, converged {}, |r|^2 {:.3e}, {:.3}s, {:.2} GFlop/s",
+        rep.iterations,
+        rep.converged,
+        rep.residual_sq,
+        dt,
+        2.0 * a.nnz() as f64 * rep.iterations as f64 / dt / 1e9
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let pool = Arc::new(ThreadPool::with_available_parallelism());
+    let runtime = Runtime::from_default_dir().ok().map(Arc::new);
+    if runtime.is_none() {
+        eprintln!("note: artifacts not found; PJRT path disabled (run `make artifacts`)");
+    }
+    let registry = Arc::new(MatrixRegistry::new(pool, runtime));
+    let (name, a) = load(args);
+    let ncols = a.ncols();
+    registry.register(&name, a).expect("register");
+    let server = Server::start(
+        registry,
+        ServerConfig { prefer_pjrt: args.has_flag("pjrt"), ..Default::default() },
+    );
+    let requests: usize = args.get("requests", 1000);
+    let x = vec![1.0f32; ncols];
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests).map(|_| server.submit(&name, x.clone()).1).collect();
+    for rx in rxs {
+        rx.recv().unwrap().result.expect("spmv ok");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!(
+        "served {requests} requests on {name} in {dt:.3}s: {:.0} req/s, {:.2} GFlop/s, \
+         p50 {:.0}us p99 {:.0}us",
+        requests as f64 / dt,
+        m.gflops(),
+        m.latency_us(50.0),
+        m.latency_us(99.0)
+    );
+    server.shutdown();
+}

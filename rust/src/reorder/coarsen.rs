@@ -1,0 +1,211 @@
+//! Heavy-edge-matching (HEM) graph coarsening.
+//!
+//! Band-k (paper Listing 2, lines 2–6) coarsens the matrix graph `k − 1`
+//! times; each coarse vertex aggregates a few fine vertices, and coarse
+//! edge weights accumulate the merged fine edges so the *weighted*
+//! band-limiting ordering can see how strongly coarse vertices couple.
+//! HEM is the standard multilevel-partitioning coarsener (METIS-style):
+//! visit vertices, match each unmatched vertex to its unmatched neighbor
+//! with the heaviest connecting edge.
+
+use super::graph::Graph;
+use crate::util::Rng;
+
+/// Result of one coarsening round.
+#[derive(Debug, Clone)]
+pub struct Coarsening {
+    /// The coarse graph.
+    pub graph: Graph,
+    /// `map[fine] = coarse` aggregation map.
+    pub map: Vec<u32>,
+}
+
+/// One round of heavy-edge matching. Roughly halves the vertex count on
+/// well-connected graphs; isolated/unmatched vertices map alone.
+pub fn heavy_edge_matching(g: &Graph, rng: &mut Rng) -> Coarsening {
+    let n = g.n();
+    let mut match_of = vec![u32::MAX; n];
+    // Random visit order decorrelates matchings across rounds.
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    for &v in &order {
+        let v = v as usize;
+        if match_of[v] != u32::MAX {
+            continue;
+        }
+        // heaviest-edge unmatched neighbor
+        let mut best: Option<(u32, u32)> = None; // (weight, neighbor)
+        for (&u, &w) in g.neighbors(v).iter().zip(g.edge_weights(v)) {
+            if u as usize != v && match_of[u as usize] == u32::MAX {
+                if best.map(|(bw, _)| w > bw).unwrap_or(true) {
+                    best = Some((w, u));
+                }
+            }
+        }
+        if let Some((_, u)) = best {
+            match_of[v] = u;
+            match_of[u as usize] = v as u32;
+        } else {
+            match_of[v] = v as u32; // self-match
+        }
+    }
+
+    // Number coarse vertices: pair gets one id (owner = smaller index).
+    let mut map = vec![u32::MAX; n];
+    let mut nc = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        let m = match_of[v] as usize;
+        map[v] = nc;
+        map[m] = nc; // m == v for self-matches
+        nc += 1;
+    }
+
+    // Build the coarse graph: aggregate edges, sum weights.
+    let ncu = nc as usize;
+    let mut coarse_adj: Vec<Vec<(u32, u32)>> = vec![Vec::new(); ncu];
+    let mut vwgt = vec![0u32; ncu];
+    for v in 0..n {
+        let cv = map[v] as usize;
+        vwgt[cv] += g.vertex_weight(v);
+        for (&u, &w) in g.neighbors(v).iter().zip(g.edge_weights(v)) {
+            let cu = map[u as usize];
+            if cu as usize != cv {
+                coarse_adj[cv].push((cu, w));
+            }
+        }
+    }
+    let mut xadj = vec![0u32];
+    let mut adj = Vec::new();
+    let mut ewgt = Vec::new();
+    for list in &mut coarse_adj {
+        list.sort_unstable_by_key(|&(u, _)| u);
+        let mut i = 0;
+        while i < list.len() {
+            let (u, mut w) = list[i];
+            let mut j = i + 1;
+            while j < list.len() && list[j].0 == u {
+                w += list[j].1;
+                j += 1;
+            }
+            adj.push(u);
+            ewgt.push(w);
+            i = j;
+        }
+        xadj.push(adj.len() as u32);
+    }
+    Coarsening { graph: Graph::from_parts(xadj, adj, ewgt, vwgt), map }
+}
+
+/// Coarsen until at most `target` vertices remain (or progress stalls).
+/// Returns the chain of coarsenings, finest first.
+pub fn coarsen_to(g: &Graph, target: usize, rng: &mut Rng) -> Vec<Coarsening> {
+    let mut chain = Vec::new();
+    let mut cur = g.clone();
+    while cur.n() > target.max(1) {
+        let c = heavy_edge_matching(&cur, rng);
+        let made_progress = c.graph.n() < cur.n() * 95 / 100;
+        let next = c.graph.clone();
+        chain.push(c);
+        if !made_progress {
+            break;
+        }
+        cur = next;
+    }
+    chain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn halves_grid_roughly() {
+        let a = gen::grid2d_5pt::<f64>(16, 16);
+        let g = Graph::from_csr_pattern(&a);
+        let mut rng = Rng::new(1);
+        let c = heavy_edge_matching(&g, &mut rng);
+        assert!(c.graph.n() <= g.n() * 60 / 100, "coarse n = {}", c.graph.n());
+        assert!(c.graph.n() >= g.n() / 2, "cannot shrink below half");
+    }
+
+    #[test]
+    fn vertex_weights_conserved() {
+        let a = gen::triangular_grid::<f64>(12, 12);
+        let g = Graph::from_csr_pattern(&a);
+        let mut rng = Rng::new(2);
+        let c = heavy_edge_matching(&g, &mut rng);
+        assert_eq!(c.graph.total_vertex_weight(), g.total_vertex_weight());
+    }
+
+    #[test]
+    fn map_is_total_and_in_range() {
+        let a = gen::honeycomb::<f64>(20, 20);
+        let g = Graph::from_csr_pattern(&a);
+        let mut rng = Rng::new(3);
+        let c = heavy_edge_matching(&g, &mut rng);
+        assert_eq!(c.map.len(), g.n());
+        for &m in &c.map {
+            assert!((m as usize) < c.graph.n());
+        }
+        // every coarse vertex has at least one fine vertex
+        let mut seen = vec![false; c.graph.n()];
+        for &m in &c.map {
+            seen[m as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn matched_pairs_are_neighbors_or_self() {
+        let a = gen::grid2d_5pt::<f64>(10, 10);
+        let g = Graph::from_csr_pattern(&a);
+        let mut rng = Rng::new(4);
+        let c = heavy_edge_matching(&g, &mut rng);
+        // group fine vertices by coarse id
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); c.graph.n()];
+        for (v, &m) in c.map.iter().enumerate() {
+            groups[m as usize].push(v);
+        }
+        for grp in groups {
+            assert!(grp.len() <= 2, "HEM groups have ≤ 2 vertices");
+            if grp.len() == 2 {
+                assert!(
+                    g.neighbors(grp[0]).contains(&(grp[1] as u32)),
+                    "matched non-neighbors {grp:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coarsen_to_reaches_target() {
+        let a = gen::grid2d_5pt::<f64>(32, 32);
+        let g = Graph::from_csr_pattern(&a);
+        let mut rng = Rng::new(5);
+        let chain = coarsen_to(&g, 64, &mut rng);
+        assert!(!chain.is_empty());
+        let last = &chain.last().unwrap().graph;
+        assert!(last.n() <= 128, "final n = {}", last.n()); // near target
+        // chained total weight is conserved all the way down
+        assert_eq!(last.total_vertex_weight(), 1024);
+    }
+
+    #[test]
+    fn edge_weights_accumulate() {
+        let a = gen::grid2d_5pt::<f64>(8, 8);
+        let g = Graph::from_csr_pattern(&a);
+        let mut rng = Rng::new(6);
+        let mut chain = coarsen_to(&g, 8, &mut rng);
+        let last = chain.pop().unwrap().graph;
+        // after several rounds, merged edges must have weight > 1
+        let max_w = (0..last.n())
+            .flat_map(|v| last.edge_weights(v).iter().copied().collect::<Vec<_>>())
+            .max()
+            .unwrap_or(0);
+        assert!(max_w > 1, "max edge weight {max_w}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Weighted adjacency graph — the substrate for RCM and coarsening.
+
+use crate::sparse::{Csr, Scalar};
+
+/// Undirected graph in CSR adjacency form with vertex and edge weights.
+///
+/// Vertex weights carry the number of original rows a (coarse) vertex
+/// represents; edge weights carry the number of original edges merged
+/// into a (coarse) edge — both start at 1 on the fine graph.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    xadj: Vec<u32>,
+    adj: Vec<u32>,
+    ewgt: Vec<u32>,
+    vwgt: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from a sparsity pattern: symmetrized (`A + Aᵀ` pattern),
+    /// self-loops dropped, unit weights.
+    pub fn from_csr_pattern<T: Scalar>(a: &Csr<T>) -> Graph {
+        assert_eq!(a.nrows(), a.ncols(), "graph needs a square matrix");
+        let n = a.nrows();
+        // Count symmetrized degrees (excluding diagonal), dedup via sort.
+        let t = a.transpose();
+        let mut nbrs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for &c in a.row(i).0 {
+                if c as usize != i {
+                    nbrs[i].push(c);
+                }
+            }
+            for &c in t.row(i).0 {
+                if c as usize != i {
+                    nbrs[i].push(c);
+                }
+            }
+            nbrs[i].sort_unstable();
+            nbrs[i].dedup();
+        }
+        let mut xadj = Vec::with_capacity(n + 1);
+        xadj.push(0u32);
+        let mut adj = Vec::new();
+        for l in &nbrs {
+            adj.extend_from_slice(l);
+            xadj.push(adj.len() as u32);
+        }
+        let ewgt = vec![1u32; adj.len()];
+        Graph { xadj, adj, ewgt, vwgt: vec![1u32; n] }
+    }
+
+    /// Assemble from raw parts (used by the coarsener).
+    pub fn from_parts(xadj: Vec<u32>, adj: Vec<u32>, ewgt: Vec<u32>, vwgt: Vec<u32>) -> Graph {
+        assert_eq!(adj.len(), ewgt.len());
+        assert_eq!(xadj.len(), vwgt.len() + 1);
+        Graph { xadj, adj, ewgt, vwgt }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Number of directed adjacency entries (2 × undirected edges).
+    pub fn num_adj(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.adj[self.xadj[v] as usize..self.xadj[v + 1] as usize]
+    }
+
+    /// Edge weights aligned with [`Graph::neighbors`].
+    #[inline]
+    pub fn edge_weights(&self, v: usize) -> &[u32] {
+        &self.ewgt[self.xadj[v] as usize..self.xadj[v + 1] as usize]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        (self.xadj[v + 1] - self.xadj[v]) as usize
+    }
+
+    /// Weighted degree (sum of incident edge weights).
+    pub fn weighted_degree(&self, v: usize) -> u64 {
+        self.edge_weights(v).iter().map(|&w| w as u64).sum()
+    }
+
+    /// Vertex weight (rows represented).
+    #[inline]
+    pub fn vertex_weight(&self, v: usize) -> u32 {
+        self.vwgt[v]
+    }
+
+    /// Total vertex weight (== fine-graph vertex count).
+    pub fn total_vertex_weight(&self) -> u64 {
+        self.vwgt.iter().map(|&w| w as u64).sum()
+    }
+
+    /// BFS from `start` over one connected component; returns
+    /// `(visit order, level of each visited vertex)`. Unvisited vertices
+    /// keep level `u32::MAX`.
+    pub fn bfs(&self, start: usize) -> (Vec<u32>, Vec<u32>) {
+        let mut order = Vec::new();
+        let mut level = vec![u32::MAX; self.n()];
+        let mut queue = std::collections::VecDeque::new();
+        level[start] = 0;
+        queue.push_back(start as u32);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &u in self.neighbors(v as usize) {
+                if level[u as usize] == u32::MAX {
+                    level[u as usize] = level[v as usize] + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+        (order, level)
+    }
+
+    /// George–Liu pseudo-peripheral vertex for the component containing
+    /// `seed`: repeatedly BFS and restart from a smallest-degree vertex
+    /// of the last (deepest) level until eccentricity stops growing.
+    pub fn pseudo_peripheral(&self, seed: usize) -> usize {
+        let mut v = seed;
+        let mut ecc = 0u32;
+        loop {
+            let (order, level) = self.bfs(v);
+            let deepest = level[*order.last().unwrap() as usize];
+            // smallest-degree vertex in the deepest level
+            let cand = order
+                .iter()
+                .rev()
+                .take_while(|&&u| level[u as usize] == deepest)
+                .min_by_key(|&&u| self.degree(u as usize))
+                .copied()
+                .unwrap();
+            if deepest > ecc {
+                ecc = deepest;
+                v = cand as usize;
+            } else {
+                return v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+
+    #[test]
+    fn from_pattern_strips_diagonal_and_symmetrizes() {
+        let mut a = Coo::<f64>::new(3, 3);
+        a.push(0, 0, 1.0);
+        a.push(0, 1, 1.0); // only upper entry; graph must see both dirs
+        a.push(2, 2, 1.0);
+        let g = Graph::from_csr_pattern(&a.to_csr());
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+    }
+
+    #[test]
+    fn path_graph_bfs_levels() {
+        // 0-1-2-3-4 path via tridiagonal matrix
+        let mut a = Coo::<f64>::new(5, 5);
+        for i in 0..4 {
+            a.push_sym(i, i + 1, 1.0);
+        }
+        let g = Graph::from_csr_pattern(&a.to_csr());
+        let (order, level) = g.bfs(2);
+        assert_eq!(order[0], 2);
+        assert_eq!(level, vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn pseudo_peripheral_of_path_is_endpoint() {
+        let mut a = Coo::<f64>::new(9, 9);
+        for i in 0..8 {
+            a.push_sym(i, i + 1, 1.0);
+        }
+        let g = Graph::from_csr_pattern(&a.to_csr());
+        let p = g.pseudo_peripheral(4);
+        assert!(p == 0 || p == 8, "got {p}");
+    }
+
+    #[test]
+    fn grid_graph_degrees() {
+        let a = gen::grid2d_5pt::<f64>(4, 4);
+        let g = Graph::from_csr_pattern(&a);
+        // corner degree 2, edge 3, interior 4
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(5), 4);
+        assert_eq!(g.num_adj(), 2 * (2 * 4 * 3)); // 24 undirected edges
+    }
+}

@@ -1,0 +1,28 @@
+//! Sparse-matrix reordering.
+//!
+//! §2.2 of the paper: CSR-k couples its hierarchical format with a
+//! multilevel band-limiting ordering, **Band-k**, that both reduces the
+//! matrix band (like RCM) and produces row groups that map directly onto
+//! super-rows / super-super-rows.
+//!
+//! * [`perm`] — permutation type and symmetric application to CSR.
+//! * [`graph`] — adjacency-graph view of a sparsity pattern with vertex
+//!   and edge weights (the coarsening substrate).
+//! * [`rcm`] — Reverse Cuthill–McKee with George–Liu pseudo-peripheral
+//!   starts, plus the weighted variant Band-k uses on coarse graphs.
+//! * [`coarsen`] — heavy-edge-matching graph coarsening.
+//! * [`bandk`] — the Band-k algorithm (paper Listing 2): multilevel
+//!   coarsening, per-level weighted band-limiting ordering, and
+//!   expansion back to a row permutation **plus** the super-row /
+//!   super-super-row boundaries that feed [`crate::sparse::CsrK`].
+
+pub mod bandk;
+pub mod coarsen;
+pub mod graph;
+pub mod perm;
+pub mod rcm;
+
+pub use bandk::{bandk, BandKOrdering};
+pub use graph::Graph;
+pub use perm::Permutation;
+pub use rcm::rcm;

@@ -1,0 +1,189 @@
+//! Row/column permutations.
+
+use crate::sparse::{Coo, Csr, Scalar};
+
+/// A permutation stored as `new_of_old`: row `i` of the original matrix
+/// becomes row `new_of_old[i]` of the permuted matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Permutation {
+    new_of_old: Vec<u32>,
+}
+
+impl Permutation {
+    /// Identity permutation of size `n`.
+    pub fn identity(n: usize) -> Self {
+        Permutation { new_of_old: (0..n as u32).collect() }
+    }
+
+    /// From a `new_of_old` map (validated: must be a bijection).
+    pub fn from_new_of_old(new_of_old: Vec<u32>) -> Self {
+        let n = new_of_old.len();
+        let mut seen = vec![false; n];
+        for &p in &new_of_old {
+            assert!((p as usize) < n, "permutation image {p} out of range");
+            assert!(!seen[p as usize], "duplicate image {p}");
+            seen[p as usize] = true;
+        }
+        Permutation { new_of_old }
+    }
+
+    /// From an `old_of_new` map (the "ordering" convention: position k
+    /// lists the old index placed k-th).
+    pub fn from_old_of_new(old_of_new: &[u32]) -> Self {
+        let n = old_of_new.len();
+        let mut new_of_old = vec![u32::MAX; n];
+        for (new, &old) in old_of_new.iter().enumerate() {
+            assert!((old as usize) < n, "index {old} out of range");
+            assert_eq!(new_of_old[old as usize], u32::MAX, "duplicate index {old}");
+            new_of_old[old as usize] = new as u32;
+        }
+        Permutation { new_of_old }
+    }
+
+    /// Size.
+    pub fn len(&self) -> usize {
+        self.new_of_old.len()
+    }
+
+    /// Is this the empty permutation?
+    pub fn is_empty(&self) -> bool {
+        self.new_of_old.is_empty()
+    }
+
+    /// New position of old index `i`.
+    #[inline]
+    pub fn new_of(&self, old: usize) -> usize {
+        self.new_of_old[old] as usize
+    }
+
+    /// The raw `new_of_old` slice.
+    pub fn as_slice(&self) -> &[u32] {
+        &self.new_of_old
+    }
+
+    /// Inverse permutation (`old_of_new`).
+    pub fn inverse(&self) -> Permutation {
+        let n = self.len();
+        let mut inv = vec![0u32; n];
+        for (old, &new) in self.new_of_old.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        Permutation { new_of_old: inv }
+    }
+
+    /// Compose: apply `self` first, then `next` (`(next ∘ self)(i)`).
+    pub fn then(&self, next: &Permutation) -> Permutation {
+        assert_eq!(self.len(), next.len());
+        Permutation {
+            new_of_old: self
+                .new_of_old
+                .iter()
+                .map(|&m| next.new_of_old[m as usize])
+                .collect(),
+        }
+    }
+
+    /// Symmetric application to a square matrix:
+    /// `B[p(i), p(j)] = A[i, j]`.
+    pub fn apply_sym<T: Scalar>(&self, a: &Csr<T>) -> Csr<T> {
+        assert_eq!(a.nrows(), a.ncols(), "symmetric permutation needs square");
+        assert_eq!(a.nrows(), self.len());
+        let mut coo = Coo::new(a.nrows(), a.ncols());
+        for i in 0..a.nrows() {
+            let (cols, vals) = a.row(i);
+            let pi = self.new_of(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(pi, self.new_of(c as usize), v);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Permute a dense vector: `out[p(i)] = x[i]`.
+    pub fn apply_vec<T: Copy>(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.len());
+        let mut out = vec![x[0]; x.len()];
+        for (old, &new) in self.new_of_old.iter().enumerate() {
+            out[new as usize] = x[old];
+        }
+        out
+    }
+
+    /// Un-permute a dense vector: `out[i] = y[p(i)]`.
+    pub fn unapply_vec<T: Copy>(&self, y: &[T]) -> Vec<T> {
+        assert_eq!(y.len(), self.len());
+        (0..y.len()).map(|old| y[self.new_of(old)]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_is_noop() {
+        let a = gen::grid2d_5pt::<f64>(5, 5);
+        let p = Permutation::identity(25);
+        let b = p.apply_sym(&a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(5);
+        let mut v: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let p = Permutation::from_new_of_old(v);
+        let id = p.then(&p.inverse());
+        assert_eq!(id, Permutation::identity(50));
+    }
+
+    #[test]
+    fn conventions_agree() {
+        // old_of_new = [2, 0, 1]: new row 0 is old row 2, etc.
+        let p = Permutation::from_old_of_new(&[2, 0, 1]);
+        assert_eq!(p.new_of(2), 0);
+        assert_eq!(p.new_of(0), 1);
+        assert_eq!(p.new_of(1), 2);
+    }
+
+    #[test]
+    fn apply_sym_preserves_spmv_up_to_permutation() {
+        let a = gen::grid2d_5pt::<f64>(8, 8);
+        let n = a.nrows();
+        let mut rng = Rng::new(11);
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut v);
+        let p = Permutation::from_new_of_old(v);
+        let b = p.apply_sym(&a);
+
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut y_a = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_a);
+
+        let px = p.apply_vec(&x);
+        let mut y_b = vec![0.0; n];
+        b.spmv_ref(&px, &mut y_b);
+        let y_b_unperm = p.unapply_vec(&y_b);
+        for (u, v) in y_a.iter().zip(&y_b_unperm) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let p = Permutation::from_new_of_old(vec![1, 2, 0]);
+        let x = [10, 20, 30];
+        let px = p.apply_vec(&x);
+        assert_eq!(px, vec![30, 10, 20]);
+        assert_eq!(p.unapply_vec(&px), vec![10, 20, 30]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_bijection() {
+        let _ = Permutation::from_new_of_old(vec![0, 0, 1]);
+    }
+}

@@ -1,0 +1,92 @@
+//! PJRT client wrapper: HLO-text artifacts → compiled executables.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// Global PJRT serialization lock.
+///
+/// The `xla` crate's wrappers hold non-atomic `Rc` handles internally,
+/// so its types are not `Send`/`Sync` even though the underlying PJRT
+/// C API is thread-safe. Every operation that can touch those refcounts
+/// (compile, execute, literal transfer, executable drop) must run while
+/// holding this lock; with that discipline the coordinator may share
+/// [`Runtime`] and the executors across threads (see the `unsafe impl`s
+/// below and in `executor.rs`).
+pub(crate) static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+/// A PJRT CPU runtime holding compiled executables, keyed by artifact
+/// name. Compilation happens once per artifact (lazily) and the cache is
+/// shared behind a mutex — execution itself takes `&self` on the
+/// executable and runs concurrently.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create from the default artifact directory (`$CSRK_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, art: &Artifact) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&art.name) {
+                return Ok(e.clone());
+            }
+        }
+        let _pjrt = PJRT_LOCK.lock().unwrap();
+        // HLO *text* — the interchange format that survives the jax≥0.5
+        // / xla_extension 0.5.1 proto-id mismatch (DESIGN.md §1).
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", art.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", art.name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(art.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// SAFETY: PJRT's C API is thread-safe; the non-Send markers come from
+// the wrapper's internal `Rc` refcounts. All refcount-touching paths in
+// this crate run under [`PJRT_LOCK`], so cross-thread sharing is sound
+// with that discipline maintained.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}

@@ -1,0 +1,197 @@
+//! Executors: bind a padded CSR-k export to a bucketed executable.
+//!
+//! Binding pads the matrix arrays up to the bucket shape **once** and
+//! keeps them as device-ready literals; per-request work is only the
+//! input vector marshaling — the serving hot path the coordinator calls.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::Runtime;
+use super::manifest::{Artifact, ArtifactKind};
+use crate::sparse::csrk::PaddedCsr;
+
+/// A CSR-k matrix bound to an AOT SpMV executable at a shape bucket.
+pub struct SpmvExecutor {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    bucket: Artifact,
+    vals: xla::Literal,
+    cols: xla::Literal,
+    /// Logical shape of the bound matrix.
+    nrows: usize,
+    ncols: usize,
+    /// Host-side overflow entries (rows longer than the padded width).
+    overflow: Vec<(u32, u32, f32)>,
+}
+
+impl SpmvExecutor {
+    /// Pick a bucket for `padded` and prepare the bound literals.
+    pub fn bind(rt: &Runtime, padded: &PaddedCsr<f32>) -> Result<SpmvExecutor> {
+        let Some(art) = rt.manifest().pick_bucket(
+            ArtifactKind::Spmv,
+            padded.nrows,
+            padded.ncols,
+            padded.width,
+        ) else {
+            bail!(
+                "no spmv bucket fits matrix {}x{} width {}",
+                padded.nrows,
+                padded.ncols,
+                padded.width
+            );
+        };
+        let exe = rt.executable(art)?;
+        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
+        let (vals, cols) = pad_to_bucket(padded, art)?;
+        drop(_pjrt);
+        Ok(SpmvExecutor {
+            exe,
+            bucket: art.clone(),
+            vals,
+            cols,
+            nrows: padded.nrows,
+            ncols: padded.ncols,
+            overflow: padded.overflow.clone(),
+        })
+    }
+
+    /// The bucket this matrix was bound to.
+    pub fn bucket(&self) -> &Artifact {
+        &self.bucket
+    }
+
+    /// `y = A·x` through PJRT. `x.len() == ncols`; returns `nrows`
+    /// values (bucket padding stripped, overflow fixed up on the host).
+    pub fn spmv(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.ncols {
+            bail!("x length {} != ncols {}", x.len(), self.ncols);
+        }
+        // x padded to bucket N + 1 zero slot; zeros beyond ncols make
+        // every sentinel (matrix-level or bucket-level) gather 0.
+        let mut x_pad = vec![0f32; self.bucket.ncols + 1];
+        x_pad[..x.len()].copy_from_slice(x);
+        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
+        let x_lit = xla::Literal::vec1(&x_pad);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[self.vals.clone(), self.cols.clone(), x_lit])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()?;
+        let y_full = result.to_tuple1()?.to_vec::<f32>()?;
+        let mut y = y_full[..self.nrows].to_vec();
+        for &(r, c, v) in &self.overflow {
+            y[r as usize] += v * x[c as usize];
+        }
+        Ok(y)
+    }
+}
+
+/// Pad a matrix's padded export up to a bucket's `[R, W]` literals.
+fn pad_to_bucket(p: &PaddedCsr<f32>, art: &Artifact) -> Result<(xla::Literal, xla::Literal)> {
+    let (rr, ww) = (art.rows, art.width);
+    // bucket-level sentinel: gathers x_pad[bucket N] == 0
+    let sentinel = art.ncols as i32;
+    let mut vals = vec![0f32; rr * ww];
+    let mut cols = vec![sentinel; rr * ww];
+    for i in 0..p.nrows {
+        for k in 0..p.width {
+            vals[i * ww + k] = p.vals[i * p.width + k];
+            cols[i * ww + k] = p.cols[i * p.width + k] as i32;
+        }
+    }
+    let vals_lit = xla::Literal::vec1(&vals).reshape(&[rr as i64, ww as i64])?;
+    let cols_lit = xla::Literal::vec1(&cols).reshape(&[rr as i64, ww as i64])?;
+    Ok((vals_lit, cols_lit))
+}
+
+/// A square SPD operator bound to the AOT CG-step executable; the Rust
+/// side owns the iteration loop and convergence test (the L3/L2 split).
+pub struct CgExecutor {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    bucket: Artifact,
+    vals: xla::Literal,
+    cols: xla::Literal,
+    n: usize,
+}
+
+impl CgExecutor {
+    /// Bind a square padded operator to a CG-step bucket.
+    pub fn bind(rt: &Runtime, padded: &PaddedCsr<f32>) -> Result<CgExecutor> {
+        if padded.nrows != padded.ncols {
+            bail!("CG needs a square operator");
+        }
+        if !padded.overflow.is_empty() {
+            bail!("CG executor requires a bucket width ≥ max row nnz");
+        }
+        let Some(art) = rt.manifest().pick_bucket(
+            ArtifactKind::CgStep,
+            padded.nrows,
+            padded.ncols,
+            padded.width,
+        ) else {
+            bail!("no cg_step bucket fits {}^2 width {}", padded.nrows, padded.width);
+        };
+        let exe = rt.executable(art)?;
+        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
+        let (vals, cols) = pad_to_bucket(padded, art)?;
+        drop(_pjrt);
+        Ok(CgExecutor { exe, bucket: art.clone(), vals, cols, n: padded.nrows })
+    }
+
+    /// Solve `A x = b` to `‖r‖² ≤ tol²·‖b‖²` or `max_iters`. Returns
+    /// `(x, iterations, final ‖r‖²)`.
+    ///
+    /// Note the bucket padding: state vectors live at bucket length R
+    /// with zeros beyond `n`; zero rows of the padded operator keep
+    /// those coordinates zero through every iteration, and the scalar
+    /// reductions (`rᵀr`, `pᵀAp`) are unaffected.
+    pub fn solve(&self, b: &[f32], tol: f32, max_iters: usize) -> Result<(Vec<f32>, usize, f32)> {
+        if b.len() != self.n {
+            bail!("b length {} != n {}", b.len(), self.n);
+        }
+        let rr = self.bucket.rows;
+        let mut b_pad = vec![0f32; rr];
+        b_pad[..self.n].copy_from_slice(b);
+        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
+        let mut x = xla::Literal::vec1(&vec![0f32; rr]);
+        let mut r = xla::Literal::vec1(&b_pad);
+        let mut p = xla::Literal::vec1(&b_pad);
+        let rs0: f32 = b.iter().map(|v| v * v).sum();
+        let mut rs_val = rs0;
+        let mut rs = xla::Literal::scalar(rs_val);
+        let target = (tol * tol) * rs0;
+        let mut iters = 0usize;
+        while iters < max_iters && rs_val > target && rs_val.is_finite() {
+            let out = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    self.vals.clone(),
+                    self.cols.clone(),
+                    x,
+                    r,
+                    p,
+                    rs,
+                ])
+                .context("PJRT cg_step")?[0][0]
+                .to_literal_sync()?;
+            let (x2, r2, p2, rs2) = out.to_tuple4()?;
+            rs_val = rs2.to_vec::<f32>()?[0];
+            x = x2;
+            r = r2;
+            p = p2;
+            rs = rs2;
+            iters += 1;
+        }
+        let x_host = x.to_vec::<f32>()?[..self.n].to_vec();
+        Ok((x_host, iters, rs_val))
+    }
+}
+
+// SAFETY: see runtime::client::PJRT_LOCK — every PJRT-touching path in
+// these executors holds the global lock, making cross-thread sharing of
+// the Rc-based wrapper handles sound.
+unsafe impl Send for SpmvExecutor {}
+unsafe impl Sync for SpmvExecutor {}
+unsafe impl Send for CgExecutor {}
+unsafe impl Sync for CgExecutor {}

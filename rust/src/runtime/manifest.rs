@@ -1,0 +1,171 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Exported graph kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `y = A·x`.
+    Spmv,
+    /// One CG iteration.
+    CgStep,
+    /// One power-method iteration.
+    PowerStep,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "spmv" => ArtifactKind::Spmv,
+            "cg_step" => ArtifactKind::CgStep,
+            "power_step" => ArtifactKind::PowerStep,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One AOT-compiled graph at a fixed shape bucket.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Unique name (e.g. `spmv_r4096_p16`).
+    pub name: String,
+    /// Graph kind.
+    pub kind: ArtifactKind,
+    /// Padded row count R of the bucket.
+    pub rows: usize,
+    /// Padded row width P.
+    pub width: usize,
+    /// Column count N (square buckets: N == R).
+    pub ncols: usize,
+    /// Pallas grid block height (informational).
+    pub block_rows: usize,
+    /// HLO text file path.
+    pub path: PathBuf,
+}
+
+/// The parsed artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} — run `make artifacts` first"))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 7 {
+                bail!("manifest line {}: expected 7 fields, got {}", lineno + 1, f.len());
+            }
+            artifacts.push(Artifact {
+                name: f[0].to_string(),
+                kind: ArtifactKind::parse(f[1])?,
+                rows: f[2].parse()?,
+                width: f[3].parse()?,
+                ncols: f[4].parse()?,
+                block_rows: f[5].parse()?,
+                path: dir.join(f[6]),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {mpath:?} lists no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// All artifacts.
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    /// Find by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest bucket of `kind` that fits a matrix with `nrows` rows,
+    /// `ncols` cols and padded width `width` ("smallest" by padded
+    /// element count, i.e. least wasted work).
+    pub fn pick_bucket(
+        &self,
+        kind: ArtifactKind,
+        nrows: usize,
+        ncols: usize,
+        width: usize,
+    ) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.rows >= nrows && a.ncols >= ncols && a.width >= width
+            })
+            .min_by_key(|a| a.rows * a.width)
+    }
+
+    /// Default artifact directory: `$CSRK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CSRK_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("csrk_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_and_picks_buckets() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            "spmv_a spmv 1024 8 1024 128 a.hlo.txt\n\
+             spmv_b spmv 4096 16 4096 128 b.hlo.txt\n\
+             cg_a cg_step 1024 8 1024 128 c.hlo.txt\n",
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.artifacts().len(), 3);
+        // a 900×900 w=8 matrix fits the small bucket
+        let a = m.pick_bucket(ArtifactKind::Spmv, 900, 900, 8).unwrap();
+        assert_eq!(a.name, "spmv_a");
+        // width 9 forces the big bucket
+        let b = m.pick_bucket(ArtifactKind::Spmv, 900, 900, 9).unwrap();
+        assert_eq!(b.name, "spmv_b");
+        // nothing fits width 64
+        assert!(m.pick_bucket(ArtifactKind::Spmv, 10, 10, 64).is_none());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let d = tmpdir("bad");
+        write_manifest(&d, "only three fields\n");
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent/csrk")).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once at build time by `python/compile/aot.py`) and executes
+//! them on the request path. Python is never involved at run time.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.txt` into typed artifact
+//!   descriptions and picks shape buckets.
+//! * [`client`] — PJRT CPU client wrapper: HLO-text → compile →
+//!   executable cache.
+//! * [`executor`] — binds a CSR-k matrix (in padded export form) to a
+//!   bucketed executable and runs SpMV / CG / power-iteration steps.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executor::SpmvExecutor;
+pub use manifest::{Artifact, ArtifactKind, Manifest};

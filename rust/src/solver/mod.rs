@@ -1,0 +1,14 @@
+//! Iterative solvers over any [`SpMv`](crate::kernels::SpMv) backend —
+//! the paper's motivating applications (§1: CG/GMRES for PDEs).
+//!
+//! These exercise SpMV exactly the way the paper's test methodology
+//! assumes (§5.4: data staged once, many operator applications), which
+//! is why the coordinator amortizes registration cost over them.
+
+pub mod cg;
+pub mod jacobi;
+pub mod power;
+
+pub use cg::{cg_solve, CgReport};
+pub use jacobi::jacobi_solve;
+pub use power::power_iterate;

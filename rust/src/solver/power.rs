@@ -1,0 +1,58 @@
+//! Power iteration: dominant eigenvalue via repeated SpMV.
+
+use crate::kernels::SpMv;
+use crate::sparse::Scalar;
+
+/// Run `iters` power-method steps from a deterministic start vector;
+/// returns `(eigenvalue estimate, eigenvector)`.
+pub fn power_iterate<T: Scalar>(a: &dyn SpMv<T>, iters: usize) -> (T, Vec<T>) {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols(), "power iteration needs a square operator");
+    let mut v: Vec<T> = (0..n)
+        .map(|i| T::from(1.0 + ((i * 37 + 11) % 97) as f64 / 97.0).unwrap())
+        .collect();
+    let norm = |u: &[T]| u.iter().fold(T::zero(), |s, &x| s + x * x).sqrt();
+    let nv = norm(&v);
+    for x in v.iter_mut() {
+        *x /= nv;
+    }
+    let mut av = vec![T::zero(); n];
+    let mut lambda = T::zero();
+    for _ in 0..iters {
+        a.spmv(&v, &mut av);
+        lambda = v.iter().zip(&av).fold(T::zero(), |s, (&x, &y)| s + x * y);
+        let na = norm(&av);
+        if na == T::zero() {
+            break;
+        }
+        for i in 0..n {
+            v[i] = av[i] / na;
+        }
+    }
+    (lambda, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::CsrSerial;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn finds_dominant_eigenvalue_of_1d_laplacian() {
+        let n = 64;
+        let mut c = Coo::<f64>::new(n, n);
+        for i in 0..n {
+            c.push(i, i, 2.0);
+            if i > 0 {
+                c.push(i, i - 1, -1.0);
+                c.push(i - 1, i, -1.0);
+            }
+        }
+        let k = CsrSerial::new(c.to_csr());
+        let (lam, v) = power_iterate(&k, 2000);
+        let expect = 2.0 + 2.0 * (std::f64::consts::PI / (n as f64 + 1.0)).cos();
+        assert!((lam - expect).abs() < 1e-3, "{lam} vs {expect}");
+        assert_eq!(v.len(), n);
+    }
+}

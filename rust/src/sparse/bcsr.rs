@@ -1,0 +1,232 @@
+//! Block compressed sparse row (BCSR) — §2.1 related work.
+//!
+//! Nonzeros are grouped into small dense `br × bc` blocks, which are
+//! then indexed CSR-style by block row. Effective when the matrix has a
+//! dense block substructure (FEM problems); wasteful otherwise — the
+//! fill ratio ([`Bcsr::fill_ratio`]) quantifies that trade-off, which is
+//! why the paper's CSR-k avoids committing to a block shape.
+
+use super::{Csr, Scalar};
+
+/// BCSR matrix with `br × bc` dense blocks stored row-major per block.
+#[derive(Debug, Clone)]
+pub struct Bcsr<T> {
+    nrows: usize,
+    ncols: usize,
+    br: usize,
+    bc: usize,
+    /// Block-row pointer (length `ceil(nrows/br) + 1`).
+    block_row_ptr: Vec<u32>,
+    /// Block-column index per stored block.
+    block_col: Vec<u32>,
+    /// Dense block payloads (`br·bc` values each).
+    blocks: Vec<T>,
+    /// Stored nonzeros of the source matrix (for fill accounting).
+    source_nnz: usize,
+}
+
+impl<T: Scalar> Bcsr<T> {
+    /// Convert from CSR with the given block shape.
+    pub fn from_csr(csr: &Csr<T>, br: usize, bc: usize) -> Self {
+        assert!(br > 0 && bc > 0);
+        let nrows = csr.nrows();
+        let ncols = csr.ncols();
+        let nbr = nrows.div_ceil(br);
+        let nbc = ncols.div_ceil(bc);
+        let mut block_row_ptr = vec![0u32; nbr + 1];
+        let mut block_col: Vec<u32> = Vec::new();
+        let mut blocks: Vec<T> = Vec::new();
+        // Mark + fill per block row; `slot[j]` maps block column j to its
+        // position in this block row (or usize::MAX).
+        let mut slot = vec![usize::MAX; nbc];
+        for ib in 0..nbr {
+            let row_lo = ib * br;
+            let row_hi = (row_lo + br).min(nrows);
+            let first_block = block_col.len();
+            // discover block columns in order of first appearance, then sort
+            let mut present: Vec<u32> = Vec::new();
+            for i in row_lo..row_hi {
+                for &c in csr.row(i).0 {
+                    let jb = c as usize / bc;
+                    if slot[jb] == usize::MAX {
+                        slot[jb] = 0; // mark
+                        present.push(jb as u32);
+                    }
+                }
+            }
+            present.sort_unstable();
+            for (pos, &jb) in present.iter().enumerate() {
+                slot[jb as usize] = first_block + pos;
+            }
+            block_col.extend_from_slice(&present);
+            blocks.resize(blocks.len() + present.len() * br * bc, T::zero());
+            for i in row_lo..row_hi {
+                let (cols, vals) = csr.row(i);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let jb = c as usize / bc;
+                    let b = slot[jb];
+                    let r_in = i - row_lo;
+                    let c_in = c as usize % bc;
+                    blocks[b * br * bc + r_in * bc + c_in] += v;
+                }
+            }
+            for &jb in &present {
+                slot[jb as usize] = usize::MAX;
+            }
+            block_row_ptr[ib + 1] = block_col.len() as u32;
+        }
+        Bcsr {
+            nrows,
+            ncols,
+            br,
+            bc,
+            block_row_ptr,
+            block_col,
+            blocks,
+            source_nnz: csr.nnz(),
+        }
+    }
+
+    /// Block shape `(br, bc)`.
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.br, self.bc)
+    }
+
+    /// Number of stored dense blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.block_col.len()
+    }
+
+    /// Stored values / source nonzeros — 1.0 means perfectly dense
+    /// blocks, larger means explicit-zero fill.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.source_nnz == 0 {
+            return 1.0;
+        }
+        (self.num_blocks() * self.br * self.bc) as f64 / self.source_nnz as f64
+    }
+
+    /// Reference SpMV over the blocked layout.
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let nbr = self.block_row_ptr.len() - 1;
+        self.spmv_block_rows(x, y, 0, nbr);
+    }
+
+    /// SpMV restricted to block rows `[ib_lo, ib_hi)` — the unit the
+    /// parallel kernel distributes (block rows own disjoint `y` rows).
+    /// Zeroes the covered `y` rows first.
+    pub fn spmv_block_rows(&self, x: &[T], y: &mut [T], ib_lo: usize, ib_hi: usize) {
+        let row_lo = (ib_lo * self.br).min(self.nrows);
+        let row_hi = (ib_hi * self.br).min(self.nrows);
+        for v in &mut y[row_lo..row_hi] {
+            *v = T::zero();
+        }
+        for ib in ib_lo..ib_hi {
+            let lo = self.block_row_ptr[ib] as usize;
+            let hi = self.block_row_ptr[ib + 1] as usize;
+            for b in lo..hi {
+                let jb = self.block_col[b] as usize;
+                let base = b * self.br * self.bc;
+                for r_in in 0..self.br {
+                    let i = ib * self.br + r_in;
+                    if i >= self.nrows {
+                        break;
+                    }
+                    let mut acc = T::zero();
+                    for c_in in 0..self.bc {
+                        let j = jb * self.bc + c_in;
+                        if j >= self.ncols {
+                            break;
+                        }
+                        acc += self.blocks[base + r_in * self.bc + c_in] * x[j];
+                    }
+                    y[i] += acc;
+                }
+            }
+        }
+    }
+
+    /// Storage bytes: block pointers + block columns + dense payloads.
+    pub fn storage_bytes(&self) -> usize {
+        self.block_row_ptr.len() * 4
+            + self.block_col.len() * 4
+            + self.blocks.len() * std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn random_csr(n: usize, per_row: usize, seed: u64) -> Csr<f64> {
+        let mut rng = Rng::new(seed);
+        let mut a = Coo::new(n, n);
+        for i in 0..n {
+            for _ in 0..per_row {
+                a.push(i, rng.usize_in(0, n), rng.f64() - 0.5);
+            }
+        }
+        a.to_csr()
+    }
+
+    #[test]
+    fn spmv_matches_csr_various_block_shapes() {
+        let a = random_csr(40, 5, 9);
+        let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut y_ref = vec![0.0; 40];
+        a.spmv_ref(&x, &mut y_ref);
+        for &(br, bc) in &[(1usize, 1usize), (2, 2), (3, 4), (4, 3), (7, 7)] {
+            let b = Bcsr::from_csr(&a, br, bc);
+            let mut y = vec![0.0; 40];
+            b.spmv_ref(&x, &mut y);
+            for (u, v) in y.iter().zip(&y_ref) {
+                assert!((u - v).abs() < 1e-10, "block {br}x{bc}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_block_structure_has_unit_fill() {
+        // 2x2 dense blocks on the diagonal ⇒ fill ratio exactly 1
+        let mut a = Coo::<f64>::new(8, 8);
+        for b in 0..4 {
+            for r in 0..2 {
+                for c in 0..2 {
+                    a.push(b * 2 + r, b * 2 + c, 1.0);
+                }
+            }
+        }
+        let b = Bcsr::from_csr(&a.to_csr(), 2, 2);
+        assert_eq!(b.num_blocks(), 4);
+        assert!((b.fill_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scattered_pattern_has_high_fill() {
+        // single nonzero per 4x4 block ⇒ fill ratio 16
+        let mut a = Coo::<f64>::new(16, 16);
+        for i in 0..4 {
+            a.push(i * 4, i * 4, 1.0);
+        }
+        let b = Bcsr::from_csr(&a.to_csr(), 4, 4);
+        assert!((b.fill_ratio() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_divisible_dimensions() {
+        let a = random_csr(13, 3, 4);
+        let b = Bcsr::from_csr(&a, 4, 5);
+        let x: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let mut y_ref = vec![0.0; 13];
+        let mut y = vec![0.0; 13];
+        a.spmv_ref(&x, &mut y_ref);
+        b.spmv_ref(&x, &mut y);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Coordinate-list (COO) format.
+//!
+//! The paper's §2.1 baseline: three arrays (`row_idx`, `col_idx`,
+//! `vals`), each of length NNZ — `3 × NNZ × 32` bits for 32-bit indices
+//! and single precision. COO is the natural *interchange* format: the
+//! generators and the Matrix Market reader produce COO, which is then
+//! compressed to CSR.
+
+use super::{Csr, Scalar};
+
+/// A sparse matrix as a list of `(row, col, value)` triplets.
+///
+/// Indices are `u32` (the paper's accounting assumes 32-bit integers);
+/// matrices up to 4.29 billion rows/nonzeros are representable, well
+/// beyond the suite's largest (N = 18.3 M, NNZ = 54.9 M).
+#[derive(Debug, Clone)]
+pub struct Coo<T> {
+    nrows: usize,
+    ncols: usize,
+    entries: Vec<(u32, u32, T)>,
+}
+
+impl<T: Scalar> Coo<T> {
+    /// Empty matrix of the given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        assert!(nrows <= u32::MAX as usize && ncols <= u32::MAX as usize);
+        Coo { nrows, ncols, entries: Vec::new() }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored triplets (duplicates counted until
+    /// [`Coo::compact`]).
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Triplet slice.
+    pub fn entries(&self) -> &[(u32, u32, T)] {
+        &self.entries
+    }
+
+    /// Append one triplet. Panics on out-of-bounds indices.
+    pub fn push(&mut self, row: usize, col: usize, val: T) {
+        assert!(row < self.nrows, "row {row} out of bounds ({})", self.nrows);
+        assert!(col < self.ncols, "col {col} out of bounds ({})", self.ncols);
+        self.entries.push((row as u32, col as u32, val));
+    }
+
+    /// Append `val` at `(row, col)` and at `(col, row)`.
+    pub fn push_sym(&mut self, row: usize, col: usize, val: T) {
+        self.push(row, col, val);
+        if row != col {
+            self.push(col, row, val);
+        }
+    }
+
+    /// Sort triplets row-major and sum duplicates in place.
+    pub fn compact(&mut self) {
+        self.entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut w = 0usize;
+        for i in 0..self.entries.len() {
+            if w > 0 && self.entries[w - 1].0 == self.entries[i].0
+                && self.entries[w - 1].1 == self.entries[i].1
+            {
+                let v = self.entries[i].2;
+                self.entries[w - 1].2 += v;
+            } else {
+                self.entries[w] = self.entries[i];
+                w += 1;
+            }
+        }
+        self.entries.truncate(w);
+    }
+
+    /// Compress to CSR (compacts first, so duplicates are summed).
+    pub fn to_csr(mut self) -> Csr<T> {
+        self.compact();
+        let mut row_ptr = vec![0u32; self.nrows + 1];
+        for &(r, _, _) in &self.entries {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = Vec::with_capacity(self.entries.len());
+        let mut vals = Vec::with_capacity(self.entries.len());
+        for &(_, c, v) in &self.entries {
+            col_idx.push(c);
+            vals.push(v);
+        }
+        Csr::from_parts(self.nrows, self.ncols, row_ptr, col_idx, vals)
+    }
+
+    /// Storage footprint in bytes with 32-bit indices (paper §2.1:
+    /// `3 × NNZ × 32` bits for f32).
+    pub fn storage_bytes(&self) -> usize {
+        self.entries.len() * (4 + 4 + std::mem::size_of::<T>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_compact_sums_duplicates() {
+        let mut a = Coo::<f64>::new(3, 3);
+        a.push(0, 0, 1.0);
+        a.push(2, 1, 2.0);
+        a.push(0, 0, 3.0);
+        a.compact();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.entries()[0], (0, 0, 4.0));
+        assert_eq!(a.entries()[1], (2, 1, 2.0));
+    }
+
+    #[test]
+    fn push_sym_mirrors_offdiagonal() {
+        let mut a = Coo::<f32>::new(4, 4);
+        a.push_sym(1, 2, 5.0);
+        a.push_sym(3, 3, 7.0);
+        assert_eq!(a.nnz(), 3); // (1,2), (2,1), (3,3)
+    }
+
+    #[test]
+    fn to_csr_roundtrip_structure() {
+        let mut a = Coo::<f64>::new(3, 4);
+        a.push(2, 3, 1.0);
+        a.push(0, 1, 2.0);
+        a.push(0, 0, 3.0);
+        let csr = a.to_csr();
+        assert_eq!(csr.nrows(), 3);
+        assert_eq!(csr.ncols(), 4);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.row_ptr(), &[0, 2, 2, 3]);
+        assert_eq!(csr.col_idx(), &[0, 1, 3]);
+        assert_eq!(csr.vals(), &[3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_rows_in_csr() {
+        let mut a = Coo::<f32>::new(5, 5);
+        a.push(4, 0, 1.0);
+        let csr = a.to_csr();
+        assert_eq!(csr.row_ptr(), &[0, 0, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_panics() {
+        let mut a = Coo::<f32>::new(2, 2);
+        a.push(2, 0, 1.0);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut a = Coo::<f32>::new(10, 10);
+        for i in 0..10 {
+            a.push(i, i, 1.0);
+        }
+        // 3 arrays × 10 entries × 4 bytes
+        assert_eq!(a.storage_bytes(), 120);
+    }
+}

@@ -1,0 +1,351 @@
+//! Compressed sparse row (CSR) — the base format CSR-k extends.
+//!
+//! Three arrays (§2.1): `row_ptr` (cumulative nonzero counts, length
+//! `m + 1`), `col_idx` and `vals` (length NNZ each), for a total of
+//! `(2·NNZ + m + 1) × 32` bits at 32-bit indices / single precision.
+
+use super::Scalar;
+
+/// CSR sparse matrix with `u32` indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr<T> {
+    nrows: usize,
+    ncols: usize,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    vals: Vec<T>,
+}
+
+impl<T: Scalar> Csr<T> {
+    /// Assemble from raw arrays, validating the invariants:
+    /// `row_ptr` monotone from 0 to NNZ, all column indices in range.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: Vec<T>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), nrows + 1, "row_ptr length must be nrows+1");
+        assert_eq!(col_idx.len(), vals.len(), "col_idx and vals must align");
+        assert_eq!(row_ptr[0], 0, "row_ptr must start at 0");
+        assert_eq!(
+            *row_ptr.last().unwrap() as usize,
+            col_idx.len(),
+            "row_ptr must end at nnz"
+        );
+        for w in row_ptr.windows(2) {
+            assert!(w[0] <= w[1], "row_ptr must be nondecreasing");
+        }
+        debug_assert!(
+            col_idx.iter().all(|&c| (c as usize) < ncols),
+            "column index out of bounds"
+        );
+        Csr { nrows, ncols, row_ptr, col_idx, vals }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Row density `NNZ / N` — the matrix attribute the paper's whole
+    /// tuning model keys on.
+    pub fn rdensity(&self) -> f64 {
+        self.nnz() as f64 / self.nrows.max(1) as f64
+    }
+
+    /// Row-pointer array (length `nrows + 1`).
+    pub fn row_ptr(&self) -> &[u32] {
+        &self.row_ptr
+    }
+
+    /// Column-index array (length NNZ).
+    pub fn col_idx(&self) -> &[u32] {
+        &self.col_idx
+    }
+
+    /// Values array (length NNZ).
+    pub fn vals(&self) -> &[T] {
+        &self.vals
+    }
+
+    /// Mutable values (structure-preserving updates, e.g. re-scaling).
+    pub fn vals_mut(&mut self) -> &mut [T] {
+        &mut self.vals
+    }
+
+    /// `(col_idx, vals)` slices of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[T]) {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Number of nonzeros in row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// Longest row (the ELL width).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// Matrix bandwidth: `max |i - j|` over stored entries.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for i in 0..self.nrows {
+            for &c in self.row(i).0 {
+                bw = bw.max((c as i64 - i as i64).unsigned_abs() as usize);
+            }
+        }
+        bw
+    }
+
+    /// Is the sparsity pattern structurally symmetric? (Requires square.)
+    pub fn is_structurally_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        self.row_ptr == t.row_ptr && self.col_idx == t.col_idx
+    }
+
+    /// Transpose (always produces sorted rows).
+    pub fn transpose(&self) -> Csr<T> {
+        let mut cnt = vec![0u32; self.ncols + 1];
+        for &c in &self.col_idx {
+            cnt[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            cnt[i + 1] += cnt[i];
+        }
+        let row_ptr = cnt.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![T::zero(); self.nnz()];
+        let mut next = cnt;
+        for i in 0..self.nrows {
+            let (cols, vs) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vs) {
+                let dst = next[c as usize] as usize;
+                col_idx[dst] = i as u32;
+                vals[dst] = v;
+                next[c as usize] += 1;
+            }
+        }
+        Csr::from_parts(self.ncols, self.nrows, row_ptr, col_idx, vals)
+    }
+
+    /// Sort column indices within each row (values permuted alongside).
+    pub fn sort_rows(&mut self) {
+        for i in 0..self.nrows {
+            let lo = self.row_ptr[i] as usize;
+            let hi = self.row_ptr[i + 1] as usize;
+            let mut idx: Vec<usize> = (lo..hi).collect();
+            idx.sort_unstable_by_key(|&k| self.col_idx[k]);
+            let cols: Vec<u32> = idx.iter().map(|&k| self.col_idx[k]).collect();
+            let vs: Vec<T> = idx.iter().map(|&k| self.vals[k]).collect();
+            self.col_idx[lo..hi].copy_from_slice(&cols);
+            self.vals[lo..hi].copy_from_slice(&vs);
+        }
+    }
+
+    /// Are all rows sorted by column index?
+    pub fn rows_sorted(&self) -> bool {
+        (0..self.nrows).all(|i| self.row(i).0.windows(2).all(|w| w[0] < w[1]))
+    }
+
+    /// Dense `nrows × ncols` expansion (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<Vec<T>> {
+        let mut d = vec![vec![T::zero(); self.ncols]; self.nrows];
+        for i in 0..self.nrows {
+            let (cols, vs) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vs) {
+                d[i][c as usize] += v;
+            }
+        }
+        d
+    }
+
+    /// Reference SpMV `y = A·x`, serial, no blocking — the oracle the
+    /// kernel tests compare against.
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vs) = self.row(i);
+            let mut acc = T::zero();
+            for (&c, &v) in cols.iter().zip(vs) {
+                acc += v * x[c as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Storage footprint in bytes: `(2·NNZ + m + 1) × 4` for f32
+    /// (paper §2.1 accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * std::mem::size_of::<T>()
+    }
+
+    /// SpMV FLOP count under the paper's convention (`2 · NNZ`).
+    pub fn spmv_flops(&self) -> f64 {
+        2.0 * self.nnz() as f64
+    }
+
+    /// Map values elementwise, keeping structure.
+    pub fn map_vals(mut self, f: impl Fn(T) -> T) -> Csr<T> {
+        for v in &mut self.vals {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Cast values to another scalar type, keeping structure.
+    pub fn cast<U: Scalar>(&self) -> Csr<U> {
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            vals: self
+                .vals
+                .iter()
+                .map(|v| U::from(*v).expect("cast"))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn small() -> Csr<f64> {
+        // [ 1 0 2 ]
+        // [ 0 0 0 ]
+        // [ 3 4 0 ]
+        let mut a = Coo::new(3, 3);
+        a.push(0, 0, 1.0);
+        a.push(0, 2, 2.0);
+        a.push(2, 0, 3.0);
+        a.push(2, 1, 4.0);
+        a.to_csr()
+    }
+
+    #[test]
+    fn accessors() {
+        let a = small();
+        assert_eq!(a.nrows(), 3);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.row_nnz(0), 2);
+        assert_eq!(a.row_nnz(1), 0);
+        assert_eq!(a.max_row_nnz(), 2);
+        assert!((a.rdensity() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmv_ref_matches_dense() {
+        let a = small();
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 3];
+        a.spmv_ref(&x, &mut y);
+        assert_eq!(y, vec![7.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = small();
+        let att = a.transpose().transpose();
+        assert_eq!(a.row_ptr(), att.row_ptr());
+        assert_eq!(a.col_idx(), att.col_idx());
+        assert_eq!(a.vals(), att.vals());
+    }
+
+    #[test]
+    fn transpose_values_move() {
+        let a = small();
+        let t = a.transpose();
+        let d = t.to_dense();
+        assert_eq!(d[0], vec![1.0, 0.0, 3.0]);
+        assert_eq!(d[1], vec![0.0, 0.0, 4.0]);
+        assert_eq!(d[2], vec![2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn bandwidth_of_tridiagonal() {
+        let mut a = Coo::<f64>::new(5, 5);
+        for i in 0..5 {
+            a.push(i, i, 2.0);
+            if i > 0 {
+                a.push(i, i - 1, -1.0);
+                a.push(i - 1, i, -1.0);
+            }
+        }
+        assert_eq!(a.to_csr().bandwidth(), 1);
+    }
+
+    #[test]
+    fn structural_symmetry() {
+        let mut a = Coo::<f64>::new(3, 3);
+        a.push_sym(0, 1, 1.0);
+        a.push(2, 2, 1.0);
+        assert!(a.to_csr().is_structurally_symmetric());
+        let b = small();
+        assert!(!b.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn storage_accounting_matches_paper_formula() {
+        let a = small().cast::<f32>();
+        // (2*4 + 3 + 1) * 4 bytes
+        assert_eq!(a.storage_bytes(), (2 * 4 + 3 + 1) * 4);
+        assert_eq!(a.spmv_flops(), 8.0);
+    }
+
+    #[test]
+    fn sort_rows_orders_columns() {
+        let a = Csr::from_parts(
+            2,
+            3,
+            vec![0, 3, 3],
+            vec![2, 0, 1],
+            vec![1.0f64, 2.0, 3.0],
+        );
+        let mut a = a;
+        assert!(!a.rows_sorted());
+        a.sort_rows();
+        assert!(a.rows_sorted());
+        assert_eq!(a.col_idx(), &[0, 1, 2]);
+        assert_eq!(a.vals(), &[2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_row_ptr_rejected() {
+        let _ = Csr::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0f64, 2.0]);
+    }
+
+    #[test]
+    fn cast_preserves_structure() {
+        let a = small();
+        let b = a.cast::<f32>();
+        assert_eq!(a.row_ptr(), b.row_ptr());
+        assert_eq!(a.col_idx(), b.col_idx());
+        assert_eq!(b.vals()[3], 4.0f32);
+    }
+}

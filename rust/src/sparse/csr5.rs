@@ -1,0 +1,411 @@
+//! CSR5 (Liu & Vinter, ICS '15) — the strongest heterogeneous baseline
+//! the paper compares against on both CPU and GPU (§2.4).
+//!
+//! CSR5 partitions the nonzero stream into 2D tiles of `ω` lanes ×
+//! `σ` slots (`ω` = SIMD width). Within a tile, nonzeros are stored
+//! "transposed" so each SIMD lane owns `σ` consecutive-in-CSR-order
+//! entries, and a per-tile descriptor (`bit_flag`, `y_offset`,
+//! segment rows, plus a dirty bit on `tile_ptr`) drives a segmented sum
+//! that writes complete rows without synchronization.
+//!
+//! Faithfulness notes vs the original:
+//! * `bit_flag` is a real per-lane bitmask (`σ ≤ 32` enforced);
+//! * the `empty_offset` indirection for empty rows is folded into an
+//!   explicit per-segment row table (`seg_rows`), which handles empty
+//!   rows uniformly at a comparable descriptor cost;
+//! * the tail (NNZ mod ωσ) is processed as a scalar CSR remainder
+//!   rather than a padded tile, as several production ports do.
+
+use super::{Csr, Scalar};
+
+/// CSR5-format matrix.
+#[derive(Debug, Clone)]
+pub struct Csr5<T> {
+    nrows: usize,
+    ncols: usize,
+    /// SIMD lanes per tile (ω).
+    pub omega: usize,
+    /// Slots per lane (σ ≤ 32).
+    pub sigma: usize,
+    /// Tile-local storage, s-major: `tile_base + s·ω + lane`.
+    tile_vals: Vec<T>,
+    tile_cols: Vec<u32>,
+    /// Row of the first entry of each tile; MSB is the *dirty* bit
+    /// (set ⇒ the tile's first entry continues a row begun earlier).
+    tile_ptr: Vec<u32>,
+    /// Per (tile, lane) bitmask: bit `s` set ⇒ that entry starts a row.
+    bit_flag: Vec<u32>,
+    /// Per (tile, lane): number of segment starts in lanes before this
+    /// one (the CSR5 `y_offset`), used to index `seg_rows` per lane.
+    y_offset: Vec<u16>,
+    /// Flattened per-tile table of the output row of each segment.
+    seg_ptr: Vec<u32>,
+    seg_rows: Vec<u32>,
+    /// Scalar remainder: global CSR index where the tail begins.
+    tail_start: usize,
+    /// Row of each tail nonzero.
+    tail_rows: Vec<u32>,
+    /// Tail entries (CSR order).
+    tail_cols: Vec<u32>,
+    tail_vals: Vec<T>,
+}
+
+const DIRTY: u32 = 1 << 31;
+
+impl<T: Scalar> Csr5<T> {
+    /// Convert from CSR with tile shape `ω × σ`.
+    ///
+    /// Typical CPU choices: `ω = 8` (AVX2 f32 lanes) or 4 (f64),
+    /// `σ ∈ [4, 32]`; the original autotunes σ per device.
+    pub fn from_csr(csr: &Csr<T>, omega: usize, sigma: usize) -> Self {
+        assert!(omega >= 1 && sigma >= 1 && sigma <= 32, "need 1 ≤ σ ≤ 32");
+        let nnz = csr.nnz();
+        let per_tile = omega * sigma;
+        let ntiles = nnz / per_tile;
+        let tail_start = ntiles * per_tile;
+
+        // Row of every nonzero (construction-time only).
+        let mut entry_row = vec![0u32; nnz];
+        for i in 0..csr.nrows() {
+            let lo = csr.row_ptr()[i] as usize;
+            let hi = csr.row_ptr()[i + 1] as usize;
+            for e in entry_row.iter_mut().take(hi).skip(lo) {
+                *e = i as u32;
+            }
+        }
+        // Entry k starts its row iff k is the first nnz of that row.
+        let is_row_start = |k: usize| -> bool {
+            let r = entry_row[k] as usize;
+            csr.row_ptr()[r] as usize == k
+        };
+
+        let mut tile_vals = vec![T::zero(); tail_start];
+        let mut tile_cols = vec![0u32; tail_start];
+        let mut tile_ptr = Vec::with_capacity(ntiles);
+        let mut bit_flag = vec![0u32; ntiles * omega];
+        let mut y_offset = vec![0u16; ntiles * omega];
+        let mut seg_ptr = vec![0u32];
+        let mut seg_rows = Vec::new();
+
+        for t in 0..ntiles {
+            let base = t * per_tile;
+            let mut ptr = entry_row[base];
+            if !is_row_start(base) {
+                ptr |= DIRTY;
+            }
+            tile_ptr.push(ptr);
+            // Transposed store + flags + segment rows (CSR order = lane-major).
+            let mut starts_in_lane = vec![0u16; omega];
+            seg_rows.push(entry_row[base]); // segment 0 row (dirty or not)
+            for p in 0..per_tile {
+                let k = base + p;
+                let lane = p / sigma;
+                let s = p % sigma;
+                tile_vals[base + s * omega + lane] = csr.vals()[k];
+                tile_cols[base + s * omega + lane] = csr.col_idx()[k];
+                if is_row_start(k) {
+                    bit_flag[t * omega + lane] |= 1 << s;
+                    starts_in_lane[lane] += 1;
+                    if p > 0 {
+                        seg_rows.push(entry_row[k]);
+                    }
+                }
+            }
+            // y_offset = exclusive prefix sum of per-lane start counts.
+            let mut acc = 0u16;
+            for lane in 0..omega {
+                y_offset[t * omega + lane] = acc;
+                acc += starts_in_lane[lane];
+            }
+            seg_ptr.push(seg_rows.len() as u32);
+        }
+
+        let tail_rows = entry_row[tail_start..].to_vec();
+        let tail_cols = csr.col_idx()[tail_start..].to_vec();
+        let tail_vals = csr.vals()[tail_start..].to_vec();
+
+        Csr5 {
+            nrows: csr.nrows(),
+            ncols: csr.ncols(),
+            omega,
+            sigma,
+            tile_vals,
+            tile_cols,
+            tile_ptr,
+            bit_flag,
+            y_offset,
+            seg_ptr,
+            seg_rows,
+            tail_start,
+            tail_rows,
+            tail_cols,
+            tail_vals,
+        }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of full tiles.
+    pub fn ntiles(&self) -> usize {
+        self.tile_ptr.len()
+    }
+
+    /// Global nnz index where the scalar tail begins.
+    pub fn tail_start(&self) -> usize {
+        self.tail_start
+    }
+
+    /// Is tile `t` dirty (its first entry continues an earlier row)?
+    pub fn is_dirty(&self, t: usize) -> bool {
+        self.tile_ptr[t] & DIRTY != 0
+    }
+
+    /// Column index at tile `t`, slot `s`, lane `lane` (s-major tile
+    /// layout) — used by the GPU model to replay the gather pattern.
+    pub fn tile_col_at(&self, t: usize, s: usize, lane: usize) -> u32 {
+        self.tile_cols[t * self.omega * self.sigma + s * self.omega + lane]
+    }
+
+    /// Process one tile: run the segmented sum, writing `=` for segments
+    /// that *start* inside the tile and returning the carry
+    /// `(row, partial)` when the tile's first segment continues an
+    /// earlier row. Used by both the serial reference and the parallel
+    /// kernel (carries are applied after the tile sweep).
+    #[inline]
+    pub fn tile_segmented_sum(&self, t: usize, x: &[T], y: &mut [T]) -> Option<(u32, T)> {
+        let per_tile = self.omega * self.sigma;
+        let base = t * per_tile;
+        let seg_base = self.seg_ptr[t] as usize;
+        let dirty = self.is_dirty(t);
+        let mut seg = 0usize; // segment index within tile
+        let mut acc = T::zero();
+        let mut carry: Option<(u32, T)> = None;
+        // Traverse in CSR order (lane-major); entries live s-major.
+        for lane in 0..self.omega {
+            let flags = self.bit_flag[t * self.omega + lane];
+            debug_assert_eq!(
+                self.y_offset[t * self.omega + lane] as usize,
+                // flags in earlier lanes == segments opened so far
+                // (+0/+1 bookkeeping folded into seg below)
+                {
+                    let mut c = 0usize;
+                    for l2 in 0..lane {
+                        c += self.bit_flag[t * self.omega + l2].count_ones() as usize;
+                    }
+                    c
+                }
+            );
+            for s in 0..self.sigma {
+                if flags & (1 << s) != 0 {
+                    // close the current segment before starting the new one
+                    let first_seg_is_carry = dirty && seg == 0;
+                    if first_seg_is_carry {
+                        carry = Some((self.seg_rows[seg_base], acc));
+                    } else if !(seg == 0 && lane == 0 && s == 0) {
+                        let row = self.seg_rows[seg_base + seg] as usize;
+                        y[row] = acc;
+                    }
+                    if !(lane == 0 && s == 0) {
+                        seg += 1;
+                    }
+                    acc = T::zero();
+                }
+                let pos = base + s * self.omega + lane;
+                let c = self.tile_cols[pos] as usize;
+                acc += self.tile_vals[pos] * x[c];
+            }
+        }
+        // close the trailing segment
+        if dirty && seg == 0 {
+            carry = Some((self.seg_rows[seg_base], acc));
+        } else {
+            let row = self.seg_rows[seg_base + seg] as usize;
+            y[row] = acc;
+        }
+        carry
+    }
+
+    /// Add the scalar tail (`NNZ mod ωσ` trailing entries) into `y`.
+    /// Rows in the tail may continue rows begun in the last tile, so this
+    /// must run after the tile sweep; it accumulates with `+=`.
+    pub fn apply_tail(&self, x: &[T], y: &mut [T]) {
+        for ((&r, &c), &v) in self.tail_rows.iter().zip(&self.tail_cols).zip(&self.tail_vals) {
+            y[r as usize] += v * x[c as usize];
+        }
+    }
+
+    /// Rows whose first entry lies in the tail begin at zero there, but
+    /// [`Csr5::apply_tail`] accumulates — so the serial reference zeroes
+    /// `y` first. Reference SpMV (oracle for the parallel kernel).
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for v in y.iter_mut() {
+            *v = T::zero();
+        }
+        let mut carries = Vec::new();
+        for t in 0..self.ntiles() {
+            if let Some(c) = self.tile_segmented_sum(t, x, y) {
+                carries.push(c);
+            }
+        }
+        for (row, partial) in carries {
+            y[row as usize] += partial;
+        }
+        self.apply_tail(x, y);
+    }
+
+    /// Descriptor + tile storage bytes (for overhead comparisons).
+    pub fn storage_bytes(&self) -> usize {
+        self.tile_vals.len() * std::mem::size_of::<T>()
+            + self.tile_cols.len() * 4
+            + self.tile_ptr.len() * 4
+            + self.bit_flag.len() * 4
+            + self.y_offset.len() * 2
+            + self.seg_ptr.len() * 4
+            + self.seg_rows.len() * 4
+            + self.tail_rows.len() * 8
+            + self.tail_vals.len() * std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn random_csr(n: usize, avg: usize, seed: u64) -> Csr<f64> {
+        let mut rng = Rng::new(seed);
+        let mut a = Coo::new(n, n);
+        for i in 0..n {
+            let d = rng.usize_in(0, avg * 2 + 1);
+            for _ in 0..d {
+                a.push(i, rng.usize_in(0, n), rng.f64() - 0.5);
+            }
+        }
+        a.to_csr()
+    }
+
+    fn check_matches_csr(a: &Csr<f64>, omega: usize, sigma: usize) {
+        let c5 = Csr5::from_csr(a, omega, sigma);
+        let n = a.nrows();
+        let x: Vec<f64> = (0..a.ncols()).map(|i| ((i * 37) % 19) as f64 - 9.0).collect();
+        let mut y_ref = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        c5.spmv_ref(&x, &mut y);
+        for (i, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+            assert!(
+                (u - v).abs() < 1e-9,
+                "row {i}: {u} vs {v} (ω={omega} σ={sigma})"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_csr_dense_rows() {
+        // every row 5 nnz, several tile shapes
+        let mut a = Coo::<f64>::new(30, 30);
+        let mut rng = Rng::new(3);
+        for i in 0..30 {
+            for _ in 0..5 {
+                a.push(i, rng.usize_in(0, 30), rng.f64());
+            }
+        }
+        let a = a.to_csr();
+        for &(w, s) in &[(4usize, 4usize), (8, 4), (4, 16), (2, 32), (1, 8)] {
+            check_matches_csr(&a, w, s);
+        }
+    }
+
+    #[test]
+    fn matches_csr_with_empty_rows() {
+        let mut a = Coo::<f64>::new(40, 40);
+        let mut rng = Rng::new(7);
+        for i in 0..40 {
+            if i % 3 == 0 {
+                continue; // every third row empty
+            }
+            for _ in 0..rng.usize_in(1, 6) {
+                a.push(i, rng.usize_in(0, 40), rng.f64() - 0.5);
+            }
+        }
+        check_matches_csr(&a.to_csr(), 4, 8);
+    }
+
+    #[test]
+    fn matches_csr_long_row_spanning_tiles() {
+        // one row with 200 nnz spans many 16-entry tiles
+        let mut a = Coo::<f64>::new(10, 300);
+        let mut rng = Rng::new(11);
+        for c in 0..200 {
+            a.push(4, c, rng.f64());
+        }
+        a.push(0, 0, 1.0);
+        a.push(9, 299, 2.0);
+        let a = a.to_csr();
+        let c5 = Csr5::from_csr(&a, 4, 4);
+        assert!(c5.ntiles() >= 10);
+        let x: Vec<f64> = (0..300).map(|i| (i % 7) as f64).collect();
+        let mut y_ref = vec![0.0; 10];
+        let mut y = vec![0.0; 10];
+        a.spmv_ref(&x, &mut y_ref);
+        c5.spmv_ref(&x, &mut y);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn random_matrices_many_shapes() {
+        for seed in 0..5 {
+            let a = random_csr(64, 4, seed);
+            check_matches_csr(&a, 8, 8);
+            check_matches_csr(&a, 4, 32);
+        }
+    }
+
+    #[test]
+    fn tail_only_matrix() {
+        // nnz smaller than one tile ⇒ everything is tail
+        let mut a = Coo::<f64>::new(5, 5);
+        a.push(1, 2, 3.0);
+        a.push(3, 0, 4.0);
+        let a = a.to_csr();
+        let c5 = Csr5::from_csr(&a, 8, 8);
+        assert_eq!(c5.ntiles(), 0);
+        let x = vec![1.0; 5];
+        let mut y = vec![0.0; 5];
+        c5.spmv_ref(&x, &mut y);
+        assert_eq!(y, vec![0.0, 3.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn dirty_bits_detect_spanning_rows() {
+        // 3 rows × 8 nnz with ω=4, σ=2: tile 1 starts mid-row ⇒ dirty
+        let mut a = Coo::<f64>::new(3, 24);
+        for r in 0..3 {
+            for c in 0..8 {
+                a.push(r, r * 8 + c, 1.0);
+            }
+        }
+        let csr = a.to_csr();
+        let c5 = Csr5::from_csr(&csr, 4, 2);
+        assert_eq!(c5.ntiles(), 3);
+        assert!(!c5.is_dirty(0));
+        // tiles align exactly with rows here (8 nnz per tile) ⇒ none dirty
+        assert!(!c5.is_dirty(1));
+        // shift: σ=3 ⇒ 12 per tile, tile 1 starts at nnz 12 = middle of row 1
+        let c5b = Csr5::from_csr(&csr, 4, 3);
+        assert!(c5b.is_dirty(1));
+    }
+}

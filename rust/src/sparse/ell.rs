@@ -1,0 +1,173 @@
+//! ELLPACK (ELL) format — §2.3.
+//!
+//! Stores an `m × n` sparse matrix as two dense `m × k` matrices where
+//! `k` is the nonzero count of the densest row: values shifted left and
+//! zero-padded, plus their column indices. Vector-friendly but with
+//! potentially severe padding overhead (the paper's example: densest row
+//! 40 vs average 10 ⇒ 300 % overhead), which is exactly what the
+//! overhead analysis here quantifies.
+
+use super::{Csr, Scalar};
+
+/// ELLPACK matrix. Row-major `nrows × width` arrays; padding entries
+/// have column index equal to the row's last valid column (a standard
+/// trick keeping gathers in-bounds) and value zero.
+#[derive(Debug, Clone)]
+pub struct Ell<T> {
+    nrows: usize,
+    ncols: usize,
+    width: usize,
+    cols: Vec<u32>,
+    vals: Vec<T>,
+}
+
+impl<T: Scalar> Ell<T> {
+    /// Convert from CSR. `width` becomes `max_row_nnz`.
+    pub fn from_csr(csr: &Csr<T>) -> Self {
+        let width = csr.max_row_nnz();
+        let nrows = csr.nrows();
+        let mut cols = vec![0u32; nrows * width];
+        let mut vals = vec![T::zero(); nrows * width];
+        for i in 0..nrows {
+            let (rc, rv) = csr.row(i);
+            let last = rc.last().copied().unwrap_or(0);
+            for k in 0..width {
+                if k < rc.len() {
+                    cols[i * width + k] = rc[k];
+                    vals[i * width + k] = rv[k];
+                } else {
+                    cols[i * width + k] = last;
+                }
+            }
+        }
+        Ell { nrows, ncols: csr.ncols(), width, cols, vals }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns of the logical matrix.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Padded width `k` (densest row).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Column-index array (`nrows × width`).
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    /// Value array (`nrows × width`).
+    pub fn vals(&self) -> &[T] {
+        &self.vals
+    }
+
+    /// Reference SpMV over the ELL layout.
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let mut acc = T::zero();
+            for k in 0..self.width {
+                let c = self.cols[i * self.width + k] as usize;
+                acc += self.vals[i * self.width + k] * x[c];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Storage bytes (two dense `m × k` arrays).
+    pub fn storage_bytes(&self) -> usize {
+        self.cols.len() * 4 + self.vals.len() * std::mem::size_of::<T>()
+    }
+
+    /// Memory overhead relative to storing the same nonzeros in CSR-style
+    /// index+value pairs: `m·k / NNZ − 1` (the paper's 300 % example).
+    pub fn overhead_vs_nnz(&self, nnz: usize) -> f64 {
+        if nnz == 0 {
+            return 0.0;
+        }
+        (self.nrows * self.width) as f64 / nnz as f64 - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn irregular() -> Csr<f64> {
+        // row 0: 4 nnz, row 1: 1 nnz, row 2: 2 nnz
+        let mut a = Coo::new(3, 5);
+        for c in 0..4 {
+            a.push(0, c, (c + 1) as f64);
+        }
+        a.push(1, 4, 9.0);
+        a.push(2, 0, 1.0);
+        a.push(2, 3, 2.0);
+        a.to_csr()
+    }
+
+    #[test]
+    fn width_is_densest_row() {
+        let e = Ell::from_csr(&irregular());
+        assert_eq!(e.width(), 4);
+        assert_eq!(e.nrows(), 3);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let a = irregular();
+        let e = Ell::from_csr(&a);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut ye = vec![0.0; 3];
+        let mut yc = vec![0.0; 3];
+        e.spmv_ref(&x, &mut ye);
+        a.spmv_ref(&x, &mut yc);
+        assert_eq!(ye, yc);
+    }
+
+    #[test]
+    fn overhead_example_from_paper() {
+        // densest row 40, average 10 ⇒ 300 % overhead
+        let mut a = Coo::<f32>::new(100, 1000);
+        for c in 0..40 {
+            a.push(0, c, 1.0);
+        }
+        // remaining 99 rows hold 960 nnz total so the average is 10
+        let mut placed = 40usize;
+        let mut r = 1usize;
+        'outer: while placed < 1000 {
+            for c in 0..10 {
+                if placed >= 1000 {
+                    break 'outer;
+                }
+                a.push(r, (r * 7 + c * 13) % 1000, 1.0);
+                placed += 1;
+            }
+            r += 1;
+        }
+        let csr = a.to_csr();
+        let e = Ell::from_csr(&csr);
+        let ovh = e.overhead_vs_nnz(csr.nnz());
+        assert!((ovh - 3.0).abs() < 0.1, "overhead {ovh} ≉ 300 %");
+    }
+
+    #[test]
+    fn empty_row_padding_is_safe() {
+        let mut a = Coo::<f64>::new(3, 3);
+        a.push(0, 1, 2.0);
+        a.push(2, 2, 3.0);
+        let e = Ell::from_csr(&a.to_csr());
+        let x = vec![1.0, 1.0, 1.0];
+        let mut y = vec![9.9; 3];
+        e.spmv_ref(&x, &mut y);
+        assert_eq!(y, vec![2.0, 0.0, 3.0]);
+    }
+}

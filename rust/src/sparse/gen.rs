@@ -1,0 +1,583 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! The paper's test suite (Table 2) comes from the SuiteSparse
+//! collection, which is unavailable in this offline environment. Each
+//! generator here reproduces the *structural class* of one or more suite
+//! matrices — row density (`rdensity`, the attribute the paper's entire
+//! tuning model keys on), planarity/band structure, dense-block
+//! substructure, and degree distribution — so the reproduction exercises
+//! the same code paths and the same performance trade-offs:
+//!
+//! | generator | suite matrices | class |
+//! |---|---|---|
+//! | [`road_network`] | roadNet-TX (2.76) | sparse spatial graph |
+//! | [`honeycomb`] | hugetrace/-tric/-bubbles (2.99) | deg-3 planar mesh |
+//! | [`geo_graph`] | wi2010 / fl2010 (4.8) | census adjacency |
+//! | [`circuit`] | G3_circuit (4.83) | grid + hub rails |
+//! | [`grid2d_5pt`] | ecology1 (4.99) | 2D Laplacian |
+//! | [`kkt`] | cont-300 (5.46) | optimization KKT |
+//! | [`triangular_grid`] | delaunay_n20 (6.00) | triangulation |
+//! | [`grid3d_7pt`] | thermal2 (6.98) | 3D Laplacian |
+//! | [`grid3d_stencil`] | brack2 / wave / packing (11.7–16.3) | 3D meshes |
+//! | [`fem3d`] | Emilia_923 (43.7) / bmwcra_1 (71.5) | FEM, 3×3 blocks |
+//!
+//! Matrices whose SuiteSparse "natural" labeling is unbanded (the graph
+//! family) are emitted with a deterministic scrambled labeling
+//! ([`scramble_labels`]) so the Band-k / RCM experiments (Fig 7) have
+//! real work to do.
+
+use super::{Coo, Csr, Scalar};
+use crate::util::Rng;
+
+/// Offsets of a 3D stencil neighborhood (excluding the center).
+pub type Stencil3d = &'static [(i32, i32, i32)];
+
+/// 6-neighbor (face) stencil.
+pub const OFFSETS_6: Stencil3d = &[
+    (-1, 0, 0),
+    (1, 0, 0),
+    (0, -1, 0),
+    (0, 1, 0),
+    (0, 0, -1),
+    (0, 0, 1),
+];
+
+/// 14-neighbor stencil: faces + corners (body diagonals).
+pub const OFFSETS_14: Stencil3d = &[
+    (-1, 0, 0),
+    (1, 0, 0),
+    (0, -1, 0),
+    (0, 1, 0),
+    (0, 0, -1),
+    (0, 0, 1),
+    (-1, -1, -1),
+    (-1, -1, 1),
+    (-1, 1, -1),
+    (-1, 1, 1),
+    (1, -1, -1),
+    (1, -1, 1),
+    (1, 1, -1),
+    (1, 1, 1),
+];
+
+/// 18-neighbor stencil: faces + edge diagonals.
+pub const OFFSETS_18: Stencil3d = &[
+    (-1, 0, 0),
+    (1, 0, 0),
+    (0, -1, 0),
+    (0, 1, 0),
+    (0, 0, -1),
+    (0, 0, 1),
+    (-1, -1, 0),
+    (-1, 1, 0),
+    (1, -1, 0),
+    (1, 1, 0),
+    (-1, 0, -1),
+    (-1, 0, 1),
+    (1, 0, -1),
+    (1, 0, 1),
+    (0, -1, -1),
+    (0, -1, 1),
+    (0, 1, -1),
+    (0, 1, 1),
+];
+
+/// Full 26-neighbor (3³−1) stencil.
+pub const OFFSETS_26: Stencil3d = &[
+    (-1, -1, -1),
+    (-1, -1, 0),
+    (-1, -1, 1),
+    (-1, 0, -1),
+    (-1, 0, 0),
+    (-1, 0, 1),
+    (-1, 1, -1),
+    (-1, 1, 0),
+    (-1, 1, 1),
+    (0, -1, -1),
+    (0, -1, 0),
+    (0, -1, 1),
+    (0, 0, -1),
+    (0, 0, 1),
+    (0, 1, -1),
+    (0, 1, 0),
+    (0, 1, 1),
+    (1, -1, -1),
+    (1, -1, 0),
+    (1, -1, 1),
+    (1, 0, -1),
+    (1, 0, 0),
+    (1, 0, 1),
+    (1, 1, -1),
+    (1, 1, 0),
+    (1, 1, 1),
+];
+
+/// 12-neighbor stencil: faces + the xy/xz edge diagonals (tetrahedral
+/// meshes like brack2 average ≈ 12 neighbors).
+pub const OFFSETS_12: Stencil3d = &[
+    (-1, 0, 0),
+    (1, 0, 0),
+    (0, -1, 0),
+    (0, 1, 0),
+    (0, 0, -1),
+    (0, 0, 1),
+    (-1, -1, 0),
+    (-1, 1, 0),
+    (1, -1, 0),
+    (1, 1, 0),
+    (-1, 0, -1),
+    (1, 0, 1),
+];
+
+/// Laplacian-style values: off-diagonals −1, diagonal = degree + 1
+/// (strictly diagonally dominant ⇒ symmetric positive definite).
+fn laplacian_values<T: Scalar>(coo: &mut Coo<T>, n: usize, edges: &[(u32, u32)]) {
+    let mut deg = vec![0u32; n];
+    for &(u, v) in edges {
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+        coo.push(u as usize, v as usize, -T::one());
+        coo.push(v as usize, u as usize, -T::one());
+    }
+    for (i, &d) in deg.iter().enumerate() {
+        coo.push(i, i, T::from(d + 1).unwrap());
+    }
+}
+
+/// Graph-style values: symmetric, uniform weight 1, no diagonal.
+fn graph_values<T: Scalar>(coo: &mut Coo<T>, edges: &[(u32, u32)]) {
+    for &(u, v) in edges {
+        coo.push(u as usize, v as usize, T::one());
+        coo.push(v as usize, u as usize, T::one());
+    }
+}
+
+/// 2D 5-point grid Laplacian (`ecology1` class, rdensity → 5).
+pub fn grid2d_5pt<T: Scalar>(nx: usize, ny: usize) -> Csr<T> {
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut edges = Vec::with_capacity(2 * n);
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < ny {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    laplacian_values(&mut coo, n, &edges);
+    coo.to_csr()
+}
+
+/// 3D 7-point grid Laplacian (`thermal2` class, rdensity → 7).
+pub fn grid3d_7pt<T: Scalar>(nx: usize, ny: usize, nz: usize) -> Csr<T> {
+    grid3d_stencil(nx, ny, nz, OFFSETS_6, true)
+}
+
+/// General 3D stencil graph. `laplacian` selects Laplacian values with a
+/// diagonal (PDE style) versus weight-1 edges without (mesh-graph style).
+pub fn grid3d_stencil<T: Scalar>(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    offsets: Stencil3d,
+    laplacian: bool,
+) -> Csr<T> {
+    let n = nx * ny * nz;
+    let id = |x: usize, y: usize, z: usize| ((z * ny + y) * nx + x) as u32;
+    let mut edges = Vec::new();
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                for &(dx, dy, dz) in offsets {
+                    let (x2, y2, z2) = (x as i32 + dx, y as i32 + dy, z as i32 + dz);
+                    if x2 < 0 || y2 < 0 || z2 < 0 {
+                        continue;
+                    }
+                    let (x2, y2, z2) = (x2 as usize, y2 as usize, z2 as usize);
+                    if x2 >= nx || y2 >= ny || z2 >= nz {
+                        continue;
+                    }
+                    let (a, b) = (id(x, y, z), id(x2, y2, z2));
+                    if a < b {
+                        edges.push((a, b)); // each undirected edge once
+                    }
+                }
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    if laplacian {
+        laplacian_values(&mut coo, n, &edges);
+    } else {
+        graph_values(&mut coo, &edges);
+    }
+    coo.to_csr()
+}
+
+/// Degree-3 planar honeycomb mesh (`hugetrace`/`hugetric`/`hugebubbles`
+/// class: DIMACS meshes with rdensity ≈ 2.99, no diagonal).
+pub fn honeycomb<T: Scalar>(nx: usize, ny: usize) -> Csr<T> {
+    // Brick-wall representation of a hex lattice: grid nodes with all
+    // vertical edges but horizontal edges only where (x + y) is even.
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut edges = Vec::new();
+    for y in 0..ny {
+        for x in 0..nx {
+            if y + 1 < ny {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+            if x + 1 < nx && (x + y) % 2 == 0 {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    graph_values(&mut coo, &edges);
+    coo.to_csr()
+}
+
+/// Triangular lattice (`delaunay_n20` class: triangulation with interior
+/// degree 6, rdensity ≈ 6, no diagonal).
+pub fn triangular_grid<T: Scalar>(nx: usize, ny: usize) -> Csr<T> {
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut edges = Vec::new();
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < ny {
+                edges.push((id(x, y), id(x, y + 1)));
+                if x + 1 < nx {
+                    edges.push((id(x, y), id(x + 1, y + 1))); // diagonal
+                }
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    graph_values(&mut coo, &edges);
+    coo.to_csr()
+}
+
+/// Road-network-like spatial graph (`roadNet-TX` class, rdensity ≈ 2.76):
+/// a street grid with a fraction of segments deleted (dead ends, rivers,
+/// irregular blocks). Average degree `4·keep` ⇒ keep ≈ 0.69.
+pub fn road_network<T: Scalar>(nx: usize, ny: usize, seed: u64) -> Csr<T> {
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut rng = Rng::new(seed);
+    let keep = 0.69;
+    let mut edges = Vec::new();
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx && rng.chance(keep) {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < ny && rng.chance(keep) {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    graph_values(&mut coo, &edges);
+    coo.to_csr()
+}
+
+/// Census-block adjacency (`wi2010`/`fl2010` class, rdensity ≈ 4.8):
+/// planar grid adjacency plus a random share of diagonal adjacencies.
+pub fn geo_graph<T: Scalar>(nx: usize, ny: usize, seed: u64) -> Csr<T> {
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < ny {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+            // each diagonal edge adds 2 to total degree: 0.2 + 0.2
+            // probability per cell ⇒ avg degree ≈ 4 + 0.8 = 4.8
+            if x + 1 < nx && y + 1 < ny && rng.chance(0.2) {
+                edges.push((id(x, y), id(x + 1, y + 1)));
+            }
+            if x >= 1 && y + 1 < ny && rng.chance(0.2) {
+                edges.push((id(x, y), id(x - 1, y + 1)));
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    graph_values(&mut coo, &edges);
+    coo.to_csr()
+}
+
+/// Circuit-simulation matrix (`G3_circuit` class, rdensity ≈ 4.83):
+/// grid Laplacian with a few per-cent of connections removed and a small
+/// number of high-degree "power rail" rows.
+pub fn circuit<T: Scalar>(nx: usize, ny: usize, seed: u64) -> Csr<T> {
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx && rng.chance(0.96) {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < ny && rng.chance(0.96) {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    // power rails: ~n/8192 hubs each strapped to ~128 random nodes
+    let hubs = (n / 8192).max(1);
+    for _ in 0..hubs {
+        let h = rng.usize_in(0, n) as u32;
+        for _ in 0..128 {
+            let t = rng.usize_in(0, n) as u32;
+            if t != h {
+                edges.push((h.min(t), h.max(t)));
+            }
+        }
+    }
+    let mut coo = Coo::new(n, n);
+    laplacian_values(&mut coo, n, &edges);
+    coo.to_csr()
+}
+
+/// KKT optimization system (`cont-300` class, rdensity ≈ 5.4):
+/// `[[H, Aᵀ], [A, 0]]` with `H` a 2D grid Laplacian over `nx × nx`
+/// variables and one constraint per two variables, each coupling three
+/// neighboring variables.
+pub fn kkt<T: Scalar>(nx: usize, seed: u64) -> Csr<T> {
+    let m = nx * nx; // variables
+    let nc = m / 2; // constraints
+    let n = m + nc;
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    // H block (grid Laplacian over variables)
+    let mut edges = Vec::new();
+    for y in 0..nx {
+        for x in 0..nx {
+            if x + 1 < nx {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < nx {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    laplacian_values(&mut coo, n, &edges);
+    // A / Aᵀ blocks: constraint c couples vars {v, v+1, v+nx} (clipped)
+    for c in 0..nc {
+        let row = m + c;
+        let v = rng.usize_in(0, m);
+        for &off in &[0usize, 1, nx] {
+            let var = (v + off) % m;
+            coo.push(row, var, T::one());
+            coo.push(var, row, T::one());
+        }
+    }
+    coo.to_csr()
+}
+
+/// FEM structural matrix with `dof × dof` dense blocks per node pair
+/// (`Emilia_923` with [`OFFSETS_14`], `bmwcra_1` with [`OFFSETS_26`];
+/// rdensity ≈ (|stencil|·interior + 1) · dof).
+pub fn fem3d<T: Scalar>(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    dof: usize,
+    offsets: Stencil3d,
+    seed: u64,
+) -> Csr<T> {
+    let nodes = nx * ny * nz;
+    let n = nodes * dof;
+    let id = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let a = id(x, y, z);
+                // self-block: SPD-ish dense dof×dof
+                for di in 0..dof {
+                    for dj in 0..dof {
+                        let v = if di == dj {
+                            T::from(100.0).unwrap()
+                        } else {
+                            T::from(rng.f64() - 0.5).unwrap()
+                        };
+                        coo.push(a * dof + di, a * dof + dj, v);
+                    }
+                }
+                for &(dx, dy, dz2) in offsets {
+                    let (x2, y2, z2) = (x as i32 + dx, y as i32 + dy, z as i32 + dz2);
+                    if x2 < 0 || y2 < 0 || z2 < 0 {
+                        continue;
+                    }
+                    let (x2, y2, z2) = (x2 as usize, y2 as usize, z2 as usize);
+                    if x2 >= nx || y2 >= ny || z2 >= nz {
+                        continue;
+                    }
+                    let b = id(x2, y2, z2);
+                    for di in 0..dof {
+                        for dj in 0..dof {
+                            coo.push(a * dof + di, b * dof + dj, T::from(-0.25).unwrap());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Relabel a matrix's rows/columns with a deterministic random
+/// permutation — simulates the unbanded "natural" labeling SuiteSparse
+/// graph matrices arrive with, giving the reordering experiments real
+/// work to do.
+pub fn scramble_labels<T: Scalar>(csr: &Csr<T>, seed: u64) -> Csr<T> {
+    let n = csr.nrows();
+    assert_eq!(n, csr.ncols(), "scramble requires a square matrix");
+    let mut rng = Rng::new(seed);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let (cols, vals) = csr.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(perm[i] as usize, perm[c as usize] as usize, v);
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_rdensity_near_five() {
+        let a = grid2d_5pt::<f64>(64, 64);
+        assert_eq!(a.nrows(), 4096);
+        assert!((a.rdensity() - 4.94).abs() < 0.1, "rdensity {}", a.rdensity());
+        assert!(a.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn grid3d_rdensity_near_seven() {
+        let a = grid3d_7pt::<f64>(16, 16, 16);
+        assert!((a.rdensity() - 6.8).abs() < 0.3, "rdensity {}", a.rdensity());
+        assert!(a.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn honeycomb_rdensity_near_three() {
+        let a = honeycomb::<f64>(64, 64);
+        assert!((a.rdensity() - 2.9).abs() < 0.2, "rdensity {}", a.rdensity());
+        assert!(a.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn triangular_rdensity_near_six() {
+        let a = triangular_grid::<f64>(64, 64);
+        assert!((a.rdensity() - 5.8).abs() < 0.3, "rdensity {}", a.rdensity());
+    }
+
+    #[test]
+    fn road_network_rdensity_near_paper() {
+        let a = road_network::<f64>(100, 100, 42);
+        assert!((a.rdensity() - 2.76).abs() < 0.15, "rdensity {}", a.rdensity());
+        assert!(a.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn geo_graph_rdensity_near_paper() {
+        let a = geo_graph::<f64>(80, 80, 1);
+        assert!((a.rdensity() - 4.8).abs() < 0.3, "rdensity {}", a.rdensity());
+    }
+
+    #[test]
+    fn circuit_rdensity_and_hubs() {
+        let a = circuit::<f64>(128, 128, 5);
+        assert!((a.rdensity() - 4.85).abs() < 0.4, "rdensity {}", a.rdensity());
+        // hubs exist: max row nnz far above the mean
+        assert!(a.max_row_nnz() > 50, "max nnz {}", a.max_row_nnz());
+    }
+
+    #[test]
+    fn kkt_rdensity_near_paper() {
+        let a = kkt::<f64>(48, 3);
+        assert!((a.rdensity() - 5.4).abs() < 0.5, "rdensity {}", a.rdensity());
+        assert!(a.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn fem3d_block_structure() {
+        let a = fem3d::<f64>(6, 6, 6, 3, OFFSETS_14, 7);
+        assert_eq!(a.nrows(), 6 * 6 * 6 * 3);
+        // interior rows: (14 + 1) * 3 = 45 nnz; average lower with boundary
+        assert!(
+            a.rdensity() > 30.0 && a.rdensity() < 45.0,
+            "rdensity {}",
+            a.rdensity()
+        );
+    }
+
+    #[test]
+    fn fem3d_26pt_is_densest() {
+        let a = fem3d::<f64>(8, 8, 8, 3, OFFSETS_26, 7);
+        assert!(
+            a.rdensity() > 55.0 && a.rdensity() < 81.0,
+            "rdensity {}",
+            a.rdensity()
+        );
+    }
+
+    #[test]
+    fn scramble_preserves_spectrum_sample() {
+        let a = grid2d_5pt::<f64>(16, 16);
+        let b = scramble_labels(&a, 99);
+        assert_eq!(a.nnz(), b.nnz());
+        // row sums are permuted but the multiset is preserved
+        let sums = |m: &Csr<f64>| {
+            let mut s: Vec<i64> = (0..m.nrows())
+                .map(|i| m.row(i).1.iter().sum::<f64>().round() as i64)
+                .collect();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(sums(&a), sums(&b));
+        // and the bandwidth explodes
+        assert!(b.bandwidth() > a.bandwidth() * 4);
+    }
+
+    #[test]
+    fn laplacians_are_diagonally_dominant() {
+        let a = grid2d_5pt::<f64>(10, 10);
+        for i in 0..a.nrows() {
+            let (cols, vals) = a.row(i);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize == i {
+                    diag = v;
+                } else {
+                    off += v.abs();
+                }
+            }
+            assert!(diag > off, "row {i} not diagonally dominant");
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Matrix Market (`.mtx`) I/O.
+//!
+//! The paper's suite comes from the SuiteSparse collection, which is
+//! distributed in Matrix Market coordinate format. This reader/writer
+//! supports the subset those files use: `matrix coordinate
+//! real|integer|pattern general|symmetric`, 1-based indices, `%` comments.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Coo, Csr, Scalar};
+
+/// Parse a Matrix Market stream into COO.
+pub fn read_coo<T: Scalar, R: BufRead>(mut reader: R) -> Result<Coo<T>> {
+    let mut header = String::new();
+    reader.read_line(&mut header).context("reading header")?;
+    let h: Vec<&str> = header.trim().split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") {
+        bail!("not a MatrixMarket file: {header:?}");
+    }
+    let (object, format, field, symmetry) = (h[1], h[2], h[3], h[4]);
+    if object != "matrix" || format != "coordinate" {
+        bail!("unsupported MatrixMarket type: {object} {format}");
+    }
+    let pattern = match field {
+        "real" | "integer" | "double" => false,
+        "pattern" => true,
+        other => bail!("unsupported field type: {other}"),
+    };
+    let symmetric = match symmetry {
+        "general" => false,
+        "symmetric" => true,
+        other => bail!("unsupported symmetry: {other}"),
+    };
+
+    let mut line = String::new();
+    // skip comments
+    let (nrows, ncols, nnz) = loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("missing size line");
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        if parts.len() != 3 {
+            bail!("bad size line: {t:?}");
+        }
+        break (
+            parts[0].parse::<usize>()?,
+            parts[1].parse::<usize>()?,
+            parts[2].parse::<usize>()?,
+        );
+    };
+
+    let mut coo = Coo::new(nrows, ncols);
+    let mut read = 0usize;
+    while read < nnz {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("unexpected EOF after {read}/{nnz} entries");
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("row")?.parse()?;
+        let c: usize = it.next().context("col")?.parse()?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().context("value")?.parse()?
+        };
+        if r == 0 || c == 0 || r > nrows || c > ncols {
+            bail!("index out of range at entry {read}: {r} {c}");
+        }
+        let tv = T::from(v).context("value cast")?;
+        if symmetric && r != c {
+            coo.push_sym(r - 1, c - 1, tv);
+        } else {
+            coo.push(r - 1, c - 1, tv);
+        }
+        read += 1;
+    }
+    Ok(coo)
+}
+
+/// Read a `.mtx` file into CSR.
+pub fn read_csr<T: Scalar>(path: &Path) -> Result<Csr<T>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    Ok(read_coo(std::io::BufReader::new(f))?.to_csr())
+}
+
+/// Write CSR as `matrix coordinate real general` (1-based).
+pub fn write_csr<T: Scalar>(csr: &Csr<T>, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by csrk")?;
+    writeln!(w, "{} {} {}", csr.nrows(), csr.ncols(), csr.nnz())?;
+    for i in 0..csr.nrows() {
+        let (cols, vals) = csr.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(w, "{} {} {}", i + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % a comment\n\
+                   3 3 3\n\
+                   1 1 2.5\n\
+                   2 3 -1.0\n\
+                   3 1 4.0\n";
+        let coo: Coo<f64> = read_coo(Cursor::new(src)).unwrap();
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.to_dense()[1][2], -1.0);
+    }
+
+    #[test]
+    fn expands_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   3 3 3\n\
+                   1 1 1.0\n\
+                   2 1 5.0\n\
+                   3 2 6.0\n";
+        let coo: Coo<f64> = read_coo(Cursor::new(src)).unwrap();
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 5); // diag + 2 mirrored pairs
+        assert!(csr.is_structurally_symmetric());
+        assert_eq!(csr.to_dense()[0][1], 5.0);
+    }
+
+    #[test]
+    fn pattern_entries_become_ones() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n\
+                   2 2 2\n\
+                   1 2\n\
+                   2 1\n";
+        let coo: Coo<f32> = read_coo(Cursor::new(src)).unwrap();
+        assert_eq!(coo.entries()[0].2, 1.0f32);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_coo::<f64, _>(Cursor::new("hello\n")).is_err());
+        let bad = "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 5 1.0\n";
+        assert!(read_coo::<f64, _>(Cursor::new(bad)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let mut coo = Coo::<f64>::new(4, 4);
+        coo.push(0, 1, 1.5);
+        coo.push(3, 0, -2.0);
+        coo.push(2, 2, 7.0);
+        let csr = coo.to_csr();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("csrk_mm_test_{}.mtx", std::process::id()));
+        write_csr(&csr, &path).unwrap();
+        let back: Csr<f64> = read_csr(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(csr, back);
+    }
+}

@@ -1,0 +1,60 @@
+//! Sparse-matrix storage formats.
+//!
+//! The formats the paper discusses, implements, or compares against:
+//!
+//! * [`coo`] — coordinate list (COO), the interchange format.
+//! * [`csr`] — compressed sparse row (CSR), the base format CSR-k
+//!   extends; `(2·NNZ + m + 1) × 32` bits.
+//! * [`csrk`] — **CSR-k** (the paper's contribution): CSR plus `sr_ptr`
+//!   and (for k = 3) `ssr_ptr` hierarchical row-group pointers.
+//! * [`ell`] — ELLPACK, the historical GPU format (§2.3), kept for its
+//!   padding-overhead analysis.
+//! * [`bcsr`] — block CSR (§2.1 related work).
+//! * [`csr5`] — CSR5 (Liu & Vinter), the strongest heterogeneous
+//!   baseline the paper compares with on both CPU and GPU.
+//! * [`mm`] — Matrix Market I/O.
+//! * [`gen`] — synthetic matrix generators per problem class, the
+//!   substitute for the SuiteSparse download (offline environment).
+//! * [`suite`] — the paper's Table 2 sixteen-matrix test suite, scaled.
+
+pub mod bcsr;
+pub mod coo;
+pub mod csr;
+pub mod csr5;
+pub mod csrk;
+pub mod ell;
+pub mod gen;
+pub mod mm;
+pub mod suite;
+
+pub use bcsr::Bcsr;
+pub use coo::Coo;
+pub use csr::Csr;
+pub use csr5::Csr5;
+pub use csrk::CsrK;
+pub use ell::Ell;
+pub use suite::{SuiteEntry, SuiteScale};
+
+/// Scalar element type bound used across formats and kernels.
+///
+/// The paper's GPU tests and its CPU tests use 32-bit floats ("we utilize
+/// 32-bit floats in our CPU tests as this is more likely for an
+/// application that is utilizing a heterogeneous format"); everything
+/// here is nonetheless generic over `f32`/`f64` and the test suite
+/// exercises both.
+pub trait Scalar:
+    num_traits::Float
+    + num_traits::NumAssign
+    + num_traits::FromPrimitive
+    + num_traits::ToPrimitive
+    + Copy
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::fmt::Display
+    + 'static
+{
+}
+
+impl Scalar for f32 {}
+impl Scalar for f64 {}

@@ -1,0 +1,103 @@
+//! Empirical parameter sweeps (the paper's calibration step).
+//!
+//! The paper derives its closed-form constants by sweeping
+//! `(SSRS, SRS)` over a representative suite on real hardware. Here the
+//! sweep runs on the GPU execution model — same procedure, substituted
+//! testbed.
+
+use super::heuristic::{block_dims, gpu_sweep_values};
+use crate::gpusim::csrk_sim::{simulate_gpuspmv3, simulate_gpuspmv35};
+use crate::gpusim::DeviceSpec;
+use crate::sparse::{Csr, CsrK, Scalar};
+
+/// One sweep sample.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    /// Super-super-row size tried.
+    pub ssrs: usize,
+    /// Super-row size tried.
+    pub srs: usize,
+    /// Simulated kernel time.
+    pub time_s: f64,
+}
+
+/// Result of sweeping one matrix on one device.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Matrix row density (the model's x value).
+    pub rdensity: f64,
+    /// All sampled points.
+    pub points: Vec<SweepPoint>,
+    /// Best (SSRS, SRS).
+    pub best: (usize, usize),
+}
+
+/// Sweep all `(SSRS, SRS)` candidates (§4.1 set) for one matrix,
+/// simulating the algorithm the block-dims case table selects.
+pub fn sweep_gpu<T: Scalar>(a: &Csr<T>, device: &DeviceSpec) -> SweepResult {
+    let rdensity = a.rdensity();
+    let (dims, use_35) = block_dims(rdensity);
+    let values = gpu_sweep_values();
+    let mut points = Vec::with_capacity(values.len() * values.len());
+    let mut best = (values[0], values[0], f64::INFINITY);
+    for &ssrs in &values {
+        for &srs in &values {
+            let k = CsrK::csr3_uniform(a.clone(), ssrs, srs);
+            let r = if use_35 {
+                simulate_gpuspmv35(&k, device, dims)
+            } else {
+                simulate_gpuspmv3(&k, device, dims)
+            };
+            points.push(SweepPoint { ssrs, srs, time_s: r.time_s });
+            if r.time_s < best.2 {
+                best = (ssrs, srs, r.time_s);
+            }
+        }
+    }
+    SweepResult { rdensity, points, best: (best.0, best.1) }
+}
+
+/// Best SSRS for each fixed SRS marginal (used by the regression: the
+/// paper tunes SSRS and SRS independently).
+pub fn optimal_ssrs(sweep: &SweepResult) -> usize {
+    sweep.best.0
+}
+
+/// Best SRS marginal.
+pub fn optimal_srs(sweep: &SweepResult) -> usize {
+    sweep.best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::VOLTA_V100;
+    use crate::sparse::gen;
+
+    #[test]
+    fn sweep_covers_full_grid_and_finds_best() {
+        let a = gen::grid2d_5pt::<f32>(48, 48);
+        let s = sweep_gpu(&a, &VOLTA_V100);
+        assert_eq!(s.points.len(), 64);
+        let min = s
+            .points
+            .iter()
+            .map(|p| p.time_s)
+            .fold(f64::INFINITY, f64::min);
+        let bp = s
+            .points
+            .iter()
+            .find(|p| (p.ssrs, p.srs) == s.best)
+            .unwrap();
+        assert_eq!(bp.time_s, min);
+    }
+
+    #[test]
+    fn best_parameters_in_sweep_set() {
+        let a = gen::honeycomb::<f32>(64, 64);
+        let s = sweep_gpu(&a, &VOLTA_V100);
+        let vals = gpu_sweep_values();
+        assert!(vals.contains(&s.best.0));
+        assert!(vals.contains(&s.best.1));
+    }
+}

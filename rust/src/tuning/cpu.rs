@@ -1,0 +1,109 @@
+//! CPU-side CSR-2 tuning (§4.2).
+//!
+//! On CPU the paper uses CSR-2 and finds no clean closed form: the ideal
+//! path is a per-matrix sweep over `SRS ∈ ⋃_{i=3..11} {2^i, 1.5·2^i}`
+//! (8..3072); the constant-time fallback is the geometric mean of the
+//! optimal sizes over a representative suite, which lands near
+//! **SRS = 96** (§7 / Fig 11).
+
+use std::sync::Arc;
+
+use crate::kernels::{Csr2Kernel, SpMv};
+use crate::sparse::{Csr, CsrK, Scalar};
+use crate::util::{stats, Bencher, ThreadPool};
+
+/// The §4.2 sweep set: `{2^i, 1.5·2^i}` for `i = 3..=11` →
+/// {8, 12, 16, 24, ..., 2048, 3072}.
+pub fn cpu_sweep_values() -> Vec<usize> {
+    let mut v = Vec::new();
+    for i in 3..=11u32 {
+        v.push(1usize << i);
+        v.push(3 * (1usize << i) / 2);
+    }
+    v.sort_unstable();
+    v
+}
+
+/// The paper's constant-time CPU choice.
+pub const FIXED_SRS: usize = 96;
+
+/// Result of a CPU SRS sweep for one matrix.
+#[derive(Debug, Clone)]
+pub struct CpuSweep {
+    /// `(srs, mean seconds)` per candidate.
+    pub samples: Vec<(usize, f64)>,
+    /// Fastest SRS.
+    pub best_srs: usize,
+    /// Fastest time.
+    pub best_time_s: f64,
+}
+
+/// Measure every candidate SRS with the given protocol and return the
+/// sweep. `x`/`y` scratch is allocated once.
+pub fn sweep_cpu<T: Scalar>(
+    a: &Csr<T>,
+    pool: Arc<ThreadPool>,
+    bencher: Bencher,
+) -> CpuSweep {
+    let x: Vec<T> = (0..a.ncols())
+        .map(|i| T::from((i % 13) as f64 / 13.0).unwrap())
+        .collect();
+    let mut y = vec![T::zero(); a.nrows()];
+    let mut samples = Vec::new();
+    let mut best = (FIXED_SRS, f64::INFINITY);
+    for srs in cpu_sweep_values() {
+        let k = Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), srs), pool.clone());
+        let t = bencher.run(&format!("srs{srs}"), || k.spmv(&x, &mut y));
+        let m = t.mean_s();
+        samples.push((srs, m));
+        if m < best.1 {
+            best = (srs, m);
+        }
+    }
+    CpuSweep { samples, best_srs: best.0, best_time_s: best.1 }
+}
+
+/// Geometric mean of per-matrix optimal SRS — the paper's recipe for the
+/// constant-time value ("we take the geometric mean ... which is 81; we
+/// round this up to 96, which was in our super-row test set").
+pub fn constant_time_srs(optimal: &[usize]) -> usize {
+    let g = stats::geomean(&optimal.iter().map(|&s| s as f64).collect::<Vec<_>>());
+    // round up to the nearest sweep candidate
+    for v in cpu_sweep_values() {
+        if v as f64 >= g {
+            return v;
+        }
+    }
+    *cpu_sweep_values().last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn sweep_set_matches_paper() {
+        let v = cpu_sweep_values();
+        assert_eq!(v.first(), Some(&8));
+        assert_eq!(v.last(), Some(&3072));
+        assert!(v.contains(&96));
+        assert_eq!(v.len(), 18);
+    }
+
+    #[test]
+    fn paper_geomean_example() {
+        // "geometric mean ... is 81. We round this up to 96"
+        assert_eq!(constant_time_srs(&[81]), 96);
+    }
+
+    #[test]
+    fn sweep_runs_and_picks_a_candidate() {
+        let a = gen::grid2d_5pt::<f32>(40, 40);
+        let pool = Arc::new(ThreadPool::new(2));
+        let s = sweep_cpu(&a, pool, Bencher::new().warmups(0).runs(1));
+        assert_eq!(s.samples.len(), 18);
+        assert!(cpu_sweep_values().contains(&s.best_srs));
+        assert!(s.best_time_s.is_finite());
+    }
+}

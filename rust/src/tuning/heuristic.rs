@@ -1,0 +1,204 @@
+//! The paper's closed-form GPU tuning heuristics (§4.1), verbatim.
+
+use crate::gpusim::csrk_sim::BlockDims;
+use crate::util::stats::round_half_up;
+
+/// Tuned GPU device (the two the paper calibrates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    /// NVIDIA V100.
+    Volta,
+    /// NVIDIA A100.
+    Ampere,
+}
+
+/// Complete CSR-3 structure selection for one matrix on one device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneParams {
+    /// Super-super-row size (super-rows per SSR).
+    pub ssrs: usize,
+    /// Super-row size (rows per super-row).
+    pub srs: usize,
+    /// CUDA block dimensions.
+    pub dims: BlockDims,
+    /// Whether the inner product is parallelized (GPUSpMV-3.5).
+    pub use_35: bool,
+}
+
+/// Block dimensions by row density (§4.1 Cases 1–5).
+///
+/// > Case 1: rdensity ≤ 8 → 8 × 12; Case 2: 8 < r ≤ 16 → 4 × 8 × 12;
+/// > Case 3: 16 < r ≤ 32 → 8 × 8 × 8; Case 4: 32 < r ≤ 64 → 16 × 8 × 4;
+/// > Case 5: 64 < r → 32 × 8 × 2.
+///
+/// Case 1 is 2D (GPUSpMV-3, serial inner product: the experimentally
+/// determined threshold is 8 nnz/row); Cases 2–5 are 3D (GPUSpMV-3.5).
+pub fn block_dims(rdensity: f64) -> (BlockDims, bool) {
+    if rdensity <= 8.0 {
+        (BlockDims::d2(8, 12), false)
+    } else if rdensity <= 16.0 {
+        (BlockDims::d3(4, 8, 12), true)
+    } else if rdensity <= 32.0 {
+        (BlockDims::d3(8, 8, 8), true)
+    } else if rdensity <= 64.0 {
+        (BlockDims::d3(16, 8, 4), true)
+    } else {
+        (BlockDims::d3(32, 8, 2), true)
+    }
+}
+
+/// Initial log-formula constants `(a_ssrs, b_ssrs, a_srs, b_srs)` per
+/// device: `SSRS = ⌊a − b·ln r⌉`, `SRS = ⌊c − d·ln r⌉`.
+pub fn formula_constants(device: Device) -> (f64, f64, f64, f64) {
+    match device {
+        Device::Volta => (8.900, 1.25, 10.146, 1.50),
+        Device::Ampere => (9.175, 1.32, 20.500, 3.50),
+    }
+}
+
+/// Initial `(SSRS, SRS)` from the device formulas (before case-based
+/// post-adjustment). Values are clamped to ≥ 1.
+pub fn initial_sizes(device: Device, rdensity: f64) -> (usize, usize) {
+    let (a, b, c, d) = formula_constants(device);
+    let ssrs = round_half_up(a - b * rdensity.ln()).max(1) as usize;
+    let srs = round_half_up(c - d * rdensity.ln()).max(1) as usize;
+    (ssrs, srs)
+}
+
+/// Full §4.1 parameter selection: formula + per-device case adjustments.
+///
+/// Volta adjustments:
+/// > Case 1 (r ≤ 8): none. Case 2 (8 < r ≤ 16): SSRS ×= 1.5, SRS ×= 2.
+/// > Case 3 (16 < r ≤ 32): SSRS ×= 4, SRS = ⌊SSRS / 2⌋.
+/// > Case 4 (32 < r): SSRS ×= 5, SRS = ⌊SSRS / 2⌋.
+///
+/// Ampere adjustments:
+/// > Case 1: none. Case 2: SRS ×= 4. Case 3: SSRS = ⌊SSRS × 2.5⌉,
+/// > SRS = SSRS × 3. Case 4 (32 < r ≤ 64): SSRS ×= 2, SRS = SSRS × 2.
+/// > Case 5 (64 < r): SSRS = ⌊SSRS × 2.7⌉, SRS = ⌊SSRS / 4⌉.
+pub fn csr3_params(device: Device, rdensity: f64) -> TuneParams {
+    let (mut ssrs, mut srs) = initial_sizes(device, rdensity);
+    match device {
+        Device::Volta => {
+            if rdensity <= 8.0 {
+                // no further tuning
+            } else if rdensity <= 16.0 {
+                ssrs = round_half_up(ssrs as f64 * 1.5).max(1) as usize;
+                srs *= 2;
+            } else if rdensity <= 32.0 {
+                ssrs *= 4;
+                srs = (ssrs / 2).max(1);
+            } else {
+                ssrs *= 5;
+                srs = (ssrs / 2).max(1);
+            }
+        }
+        Device::Ampere => {
+            if rdensity <= 8.0 {
+                // no further tuning
+            } else if rdensity <= 16.0 {
+                srs *= 4;
+            } else if rdensity <= 32.0 {
+                ssrs = round_half_up(ssrs as f64 * 2.5).max(1) as usize;
+                srs = ssrs * 3;
+            } else if rdensity <= 64.0 {
+                ssrs *= 2;
+                srs = ssrs * 2;
+            } else {
+                ssrs = round_half_up(ssrs as f64 * 2.7).max(1) as usize;
+                srs = (ssrs as f64 / 4.0).round().max(1.0) as usize;
+            }
+        }
+    }
+    let (dims, use_35) = block_dims(rdensity);
+    TuneParams { ssrs: ssrs.max(1), srs: srs.max(1), dims, use_35 }
+}
+
+/// The GPU sweep candidates (§4.1):
+/// `(SSRS, SRS) ∈ (⋃_{i=2..5} {2^i, 1.5·2^i})²` = {4, 6, 8, 12, 16, 24,
+/// 32, 48}².
+pub fn gpu_sweep_values() -> Vec<usize> {
+    let mut v = Vec::new();
+    for i in 2..=5u32 {
+        v.push(1usize << i);
+        v.push(3 * (1usize << i) / 2);
+    }
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_values_match_paper_set() {
+        assert_eq!(gpu_sweep_values(), vec![4, 6, 8, 12, 16, 24, 32, 48]);
+    }
+
+    #[test]
+    fn block_dims_cases() {
+        assert_eq!(block_dims(2.76).0, BlockDims::d2(8, 12));
+        assert_eq!(block_dims(8.0).0, BlockDims::d2(8, 12));
+        assert_eq!(block_dims(11.7).0, BlockDims::d3(4, 8, 12));
+        assert_eq!(block_dims(16.3).0, BlockDims::d3(8, 8, 8));
+        assert_eq!(block_dims(43.7).0, BlockDims::d3(16, 8, 4));
+        assert_eq!(block_dims(71.5).0, BlockDims::d3(32, 8, 2));
+    }
+
+    #[test]
+    fn all_dims_fit_thread_limit() {
+        for r in [1.0, 8.0, 12.0, 20.0, 50.0, 100.0] {
+            let (d, _) = block_dims(r);
+            assert!(d.threads() <= 1024);
+        }
+    }
+
+    #[test]
+    fn volta_formula_spot_values() {
+        // rdensity = 2.76 (roadNet-TX): SSRS = ⌊8.900 − 1.25·ln 2.76⌉ =
+        // ⌊7.63⌉ = 8; SRS = ⌊10.146 − 1.50·ln 2.76⌉ = ⌊8.62⌉ = 9.
+        assert_eq!(initial_sizes(Device::Volta, 2.76), (8, 9));
+        // rdensity = 71.53 (bmwcra_1): ln = 4.27; SSRS = ⌊3.56⌉ = 4;
+        // SRS = ⌊3.74⌉ = 4.
+        assert_eq!(initial_sizes(Device::Volta, 71.53), (4, 4));
+    }
+
+    #[test]
+    fn ampere_formula_spot_values() {
+        // rdensity = 4.99 (ecology1): ln = 1.607; SSRS = ⌊7.05⌉ = 7;
+        // SRS = ⌊14.87⌉ = 15. Case 1: unchanged.
+        let p = csr3_params(Device::Ampere, 4.99);
+        assert_eq!((p.ssrs, p.srs), (7, 15));
+        assert!(!p.use_35);
+    }
+
+    #[test]
+    fn volta_case3_adjustment() {
+        // rdensity = 16.30 (packing): ln = 2.79; initial SSRS = ⌊5.41⌉ =
+        // 5, SRS = ⌊5.96⌉ = 6. Case 3: SSRS ×4 = 20, SRS = 10.
+        let p = csr3_params(Device::Volta, 16.30);
+        assert_eq!((p.ssrs, p.srs), (20, 10));
+        assert!(p.use_35);
+        assert_eq!(p.dims, BlockDims::d3(8, 8, 8));
+    }
+
+    #[test]
+    fn ampere_case5_adjustment() {
+        // rdensity = 71.53: ln = 4.270; SSRS init = ⌊3.538⌉ = 4;
+        // Case 5: SSRS = ⌊10.8⌉ = 11, SRS = ⌊11/4⌉ = 3.
+        let p = csr3_params(Device::Ampere, 71.53);
+        assert_eq!(p.ssrs, 11);
+        assert_eq!(p.srs, 3);
+    }
+
+    #[test]
+    fn params_always_positive() {
+        for device in [Device::Volta, Device::Ampere] {
+            for r in [1.0, 2.0, 5.0, 10.0, 30.0, 70.0, 200.0, 2000.0] {
+                let p = csr3_params(device, r);
+                assert!(p.ssrs >= 1 && p.srs >= 1, "{device:?} r={r}: {p:?}");
+            }
+        }
+    }
+}

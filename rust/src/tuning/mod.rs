@@ -1,0 +1,26 @@
+//! Parameter tuning — the paper's §4.
+//!
+//! CSR-k's selling point over autotuned formats (pOSKI, CSR5) is that
+//! after a one-time per-device calibration, the structure parameters for
+//! any new matrix follow from a closed-form formula of its row density —
+//! i.e. *constant-time tuning*:
+//!
+//! * [`heuristic`] — the paper's published formulas, verbatim: block
+//!   dimensions (Cases 1–5), `SSRS/SRS = ⌊a − b·ln(rdensity)⌉` for Volta
+//!   and Ampere, and the per-device case-based post-adjustments.
+//! * [`autotune`] — the empirical sweep over
+//!   `(SSRS, SRS) ∈ {2^i, 1.5·2^i}²` (GPU) and
+//!   `SRS ∈ {2^i, 1.5·2^i}, i = 3..11` (CPU) that the formulas are
+//!   derived from.
+//! * [`model`] — the logarithmic-regression fit that turns sweep results
+//!   into formula constants (`SSRS = a + b·ln r`), reproducing how the
+//!   paper derived its Volta/Ampere numbers.
+//! * [`cpu`] — CPU-side tuning: per-matrix sweep and the constant-time
+//!   `SRS = 96` fallback (§4.2 / Fig 11).
+
+pub mod autotune;
+pub mod cpu;
+pub mod heuristic;
+pub mod model;
+
+pub use heuristic::{block_dims, csr3_params, Device, TuneParams};

@@ -1,0 +1,150 @@
+//! Measurement harness following the paper's methodology.
+//!
+//! §5.4: *"20 runs are performed and the results are averaged via
+//! arithmetic mean. On CPU tests, 5 untimed warmup runs are performed"*.
+//! [`Bencher`] reproduces exactly that protocol and reports GFlop/s with
+//! the paper's `2·NNZ` FLOP convention.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-run wall time in seconds.
+    pub runs: Vec<f64>,
+}
+
+impl Timing {
+    /// Arithmetic-mean run time in seconds (paper's aggregation).
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.runs)
+    }
+
+    /// Population standard deviation of the run time in seconds.
+    pub fn std_s(&self) -> f64 {
+        stats::stddev(&self.runs)
+    }
+
+    /// Fastest run in seconds.
+    pub fn min_s(&self) -> f64 {
+        stats::min(&self.runs)
+    }
+
+    /// GFlop/s given a per-run FLOP count (SpMV: `2 · NNZ`).
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.mean_s() / 1e9
+    }
+
+    /// Mean time in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s() * 1e6
+    }
+}
+
+/// Benchmark runner with warmup and repetition counts.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    warmups: usize,
+    runs: usize,
+}
+
+impl Default for Bencher {
+    /// The paper's protocol: 5 warmups, 20 timed runs.
+    fn default() -> Self {
+        Bencher { warmups: 5, runs: 20 }
+    }
+}
+
+impl Bencher {
+    /// Paper-default protocol (5 warmups, 20 runs).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override the warmup count.
+    pub fn warmups(mut self, n: usize) -> Self {
+        self.warmups = n;
+        self
+    }
+
+    /// Override the timed-run count.
+    pub fn runs(mut self, n: usize) -> Self {
+        self.runs = n.max(1);
+        self
+    }
+
+    /// A faster protocol for CI-sized benches (1 warmup, 5 runs).
+    pub fn quick() -> Self {
+        Bencher { warmups: 1, runs: 5 }
+    }
+
+    /// Measure `f`, timing each run individually.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Timing {
+        for _ in 0..self.warmups {
+            f();
+        }
+        let mut runs = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            f();
+            runs.push(t0.elapsed().as_secs_f64());
+        }
+        Timing { name: name.to_string(), runs }
+    }
+}
+
+/// The paper's relative-performance metric (§6):
+///
+/// ```text
+/// RelPerf(base, ours) = (t_base − t_ours) / max(t_base, t_ours) × 100
+/// ```
+///
+/// Mirrored around 0: 2× faster ⇒ +50 %, 2× slower ⇒ −50 %.
+pub fn relative_performance(t_base: f64, t_ours: f64) -> f64 {
+    (t_base - t_ours) / t_base.max(t_ours) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_counts_runs() {
+        let b = Bencher::new().warmups(1).runs(7);
+        let t = b.run("noop", || {});
+        assert_eq!(t.runs.len(), 7);
+        assert!(t.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn warmups_not_counted() {
+        let mut calls = 0usize;
+        let b = Bencher::new().warmups(3).runs(4);
+        let t = b.run("count", || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(t.runs.len(), 4);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let t = Timing { name: "x".into(), runs: vec![1e-3] };
+        // 2e6 flops in 1 ms = 2 GFlop/s
+        assert!((t.gflops(2e6) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relative_performance_mirrored() {
+        // CSR-3 twice as fast as cuSPARSE ⇒ +50 %
+        assert!((relative_performance(2.0, 1.0) - 50.0).abs() < 1e-12);
+        // half as fast ⇒ −50 %
+        assert!((relative_performance(1.0, 2.0) + 50.0).abs() < 1e-12);
+        // 3× faster ⇒ ~+67 %
+        assert!((relative_performance(3.0, 1.0) - 200.0 / 3.0).abs() < 1e-9);
+        // equal ⇒ 0
+        assert_eq!(relative_performance(1.0, 1.0), 0.0);
+    }
+}

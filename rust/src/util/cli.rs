@@ -1,0 +1,127 @@
+//! Minimal command-line argument parser.
+//!
+//! Supports the shapes the `csrk` binary and the examples need:
+//! `prog SUBCOMMAND [positional ...] [--key value] [--flag]`.
+//! Unknown keys are collected rather than rejected so callers can decide
+//! how strict to be.
+
+use std::collections::HashMap;
+use std::str::FromStr;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag argument, conventionally the subcommand.
+    pub subcommand: Option<String>,
+    /// Remaining positional (non `--`) arguments after the subcommand.
+    pub positionals: Vec<String>,
+    /// `--key value` pairs.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed option lookup with default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> T {
+        match self.options.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{key}: cannot parse {v:?}");
+            }),
+            None => default,
+        }
+    }
+
+    /// Option lookup returning `None` when absent.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> Option<T> {
+        self.options.get(key).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}"))
+        })
+    }
+
+    /// String option lookup.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Is a bare `--flag` present?
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("bench fig5 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positionals, vec!["fig5", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse("serve --threads 8 --device=volta");
+        assert_eq!(a.get::<usize>("threads", 1), 8);
+        assert_eq!(a.get_str("device", "cpu"), "volta");
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("run --verbose --n 5 --dry-run");
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get::<usize>("n", 0), 5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get::<usize>("missing", 42), 42);
+        assert_eq!(a.get_opt::<f64>("missing"), None);
+        assert!(!a.has_flag("missing"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_parse_panics() {
+        let a = parse("x --n notanumber --tail");
+        let _: usize = a.get("n", 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! In-tree substrates.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (rayon, clap, criterion, proptest, rand) are unavailable. Everything
+//! the library needs from them is implemented here from scratch:
+//!
+//! * [`rng`] — deterministic SplitMix64 PRNG (shuffles, distributions).
+//! * [`threadpool`] — persistent worker pool with an OpenMP-style
+//!   `parallel_for` (static and dynamic scheduling), used by every
+//!   parallel CPU kernel.
+//! * [`stats`] — means (arithmetic/geometric), dispersion, percentiles
+//!   and the least-squares / logarithmic regression the paper's §4
+//!   tuning model is fitted with.
+//! * [`table`] — fixed-width text tables for paper-style bench output.
+//! * [`bench`] — measurement harness following the paper's methodology
+//!   (§5.4: warmup runs, then N timed runs, arithmetic mean).
+//! * [`cli`] — a small `--key value` argument parser for the binary and
+//!   the examples.
+//! * [`propcheck`] — a miniature property-based testing framework with
+//!   deterministic, reportable seeds.
+
+pub mod bench;
+pub mod cli;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+pub use bench::{Bencher, Timing};
+pub use rng::Rng;
+pub use threadpool::{Schedule, ThreadPool};

@@ -1,0 +1,159 @@
+//! Miniature property-based testing framework.
+//!
+//! Offline substitute for `proptest`: runs a property over many inputs
+//! drawn from a deterministic per-case seed, and on failure reports the
+//! seed so the exact case can be replayed. Shrinking is deliberately
+//! omitted — generators here are parameterized narrowly enough that the
+//! failing seed plus the case printout is actionable.
+//!
+//! ```
+//! use csrk::util::propcheck::{forall, Gen};
+//! forall("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::rng::Rng;
+
+/// Input generator handed to each property case; wraps a seeded [`Rng`]
+/// with generation helpers commonly needed by the sparse-matrix tests.
+pub struct Gen {
+    rng: Rng,
+    /// Case index, handy for size-scaling inputs.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Raw RNG access.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_in(lo, hi)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_in(lo, hi)
+    }
+
+    /// Uniform f32 values in `[-1, 1)`, length `n`.
+    pub fn f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    /// Uniform f64 values in `[-1, 1)`, length `n`.
+    pub fn f64_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.f64() * 2.0 - 1.0).collect()
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one of the provided values.
+    pub fn choose<T: Clone>(&mut self, xs: &[T]) -> T {
+        self.rng.choose(xs).clone()
+    }
+}
+
+/// Base seed mixed with the case index; changing it reshuffles all suites.
+const SUITE_SEED: u64 = 0xC5_2D_2022;
+
+/// Seed for one (property, case) pair.
+fn case_seed(name: &str, case: usize) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ SUITE_SEED.wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Run `prop` over `cases` deterministic inputs. The property asserts
+/// internally; on panic, the failing case and replay seed are reported
+/// and the panic is rethrown.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen),
+{
+    for case in 0..cases {
+        let seed = case_seed(name, case);
+        let mut gen = Gen { rng: Rng::new(seed), case };
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut gen)));
+        if let Err(payload) = result {
+            eprintln!(
+                "propcheck: property {name:?} failed at case {case}/{cases} (seed {seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single case of a property by seed (for debugging a failure).
+pub fn replay<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Gen),
+{
+    let mut gen = Gen { rng: Rng::new(seed), case: 0 };
+    prop(&mut gen);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(&mut count as *mut usize);
+        forall("trivial", 25, |g| {
+            let _ = g.usize_in(0, 10);
+            unsafe { *counter.get() += 1 };
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_panics() {
+        let r = catch_unwind(|| {
+            forall("always fails", 5, |_g| panic!("boom"));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = Vec::new();
+        let collected = std::cell::RefCell::new(&mut first);
+        forall("det", 10, |g| {
+            collected.borrow_mut().push(g.usize_in(0, 1_000_000));
+        });
+        let mut second: Vec<usize> = Vec::new();
+        let collected2 = std::cell::RefCell::new(&mut second);
+        forall("det", 10, |g| {
+            collected2.borrow_mut().push(g.usize_in(0, 1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn distinct_cases_get_distinct_seeds() {
+        let mut vals: Vec<usize> = Vec::new();
+        let collected = std::cell::RefCell::new(&mut vals);
+        forall("distinct", 20, |g| {
+            collected.borrow_mut().push(g.usize_in(0, usize::MAX - 1));
+        });
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len(), 20, "all 20 cases drew distinct values");
+    }
+}

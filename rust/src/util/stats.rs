@@ -1,0 +1,190 @@
+//! Descriptive statistics and the regressions used by the tuning model.
+//!
+//! The paper's §4 derives its constant-time tuning formulas
+//! (`SSRS = ⌊a − b·ln(rdensity)⌉`) with a *logarithmic regression* over
+//! autotuning sweeps; [`log_regression`] implements exactly that fit.
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean (the paper aggregates optimal super-row sizes and
+/// scalability speedups geometrically). All inputs must be positive.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let logsum: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean requires positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (logsum / xs.len() as f64).exp()
+}
+
+/// Minimum of a slice (NaN-free inputs assumed).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// Maximum of a slice (NaN-free inputs assumed).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Linear-interpolated percentile, `p` in `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Ordinary least squares fit `y ≈ a + b·x`. Returns `(a, b)`.
+pub fn linear_regression(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "regression needs at least 2 points");
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx == 0.0 {
+        return (my, 0.0); // degenerate: all x equal
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let _ = n;
+    (a, b)
+}
+
+/// Logarithmic regression `y ≈ a + b·ln(x)` — the fit the paper's §4
+/// tuning model uses, with x = rdensity and y = optimal SSRS / SRS.
+/// Returns `(a, b)`. All `x` must be positive.
+pub fn log_regression(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let lnx: Vec<f64> = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "log regression requires x > 0, got {x}");
+            x.ln()
+        })
+        .collect();
+    linear_regression(&lnx, ys)
+}
+
+/// Coefficient of determination R² for a fit `f` against data.
+pub fn r_squared(xs: &[f64], ys: &[f64], f: impl Fn(f64) -> f64) -> f64 {
+    let my = mean(ys);
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs.iter().zip(ys).map(|(&x, &y)| (y - f(x)) * (y - f(x))).sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// The paper's rounding: round-to-nearest, half toward +∞ (`⌊x⌉`).
+pub fn round_half_up(x: f64) -> i64 {
+    (x + 0.5).floor() as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0, 16.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    fn linreg_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linear_regression(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logreg_recovers_paper_style_formula() {
+        // Synthesize data from the paper's Volta SSRS formula and check
+        // the fit recovers the constants.
+        let xs = [2.76, 2.99, 4.83, 6.0, 11.71, 16.3, 43.74, 71.53];
+        let ys: Vec<f64> = xs.iter().map(|x: &f64| 8.900 - 1.25 * x.ln()).collect();
+        let (a, b) = log_regression(&xs, &ys);
+        assert!((a - 8.900).abs() < 1e-9, "a = {a}");
+        assert!((b + 1.25).abs() < 1e-9, "b = {b}");
+    }
+
+    #[test]
+    fn r_squared_perfect_fit() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        let r2 = r_squared(&xs, &ys, |x| 2.0 * x);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_half_up_matches_paper_notation() {
+        assert_eq!(round_half_up(2.5), 3);
+        assert_eq!(round_half_up(2.49), 2);
+        assert_eq!(round_half_up(-0.5), 0); // half toward +inf
+        assert_eq!(round_half_up(7.0), 7);
+    }
+
+    #[test]
+    fn min_max() {
+        let xs = [3.0, -1.0, 7.5];
+        assert_eq!(min(&xs), -1.0);
+        assert_eq!(max(&xs), 7.5);
+    }
+}

@@ -1,0 +1,164 @@
+//! Fixed-width text tables for paper-style benchmark output.
+//!
+//! Every bench target prints the same rows/series the paper's tables and
+//! figures report; this module renders them as aligned ASCII tables so
+//! the output is diffable and legible in CI logs.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An ASCII table builder.
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers. Numeric-looking
+    /// columns default to right alignment later via [`Table::aligns`].
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            aligns: vec![Align::Left; headers.len()],
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override column alignments (length must match the header count).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Convenience: left-align the first column, right-align the rest
+    /// (the common label-then-numbers layout).
+    pub fn numeric(mut self) -> Self {
+        for (i, a) in self.aligns.iter_mut().enumerate() {
+            *a = if i == 0 { Align::Left } else { Align::Right };
+        }
+        self
+    }
+
+    /// Append a row (cell count must match the header count).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render to a string with a separator under the header.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::new();
+            for c in 0..ncols {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                match aligns[c] {
+                    Align::Left => line.push_str(&format!("{:<w$}", cells[c], w = widths[c])),
+                    Align::Right => line.push_str(&format!("{:>w$}", cells[c], w = widths[c])),
+                }
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths, &self.aligns));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths, &self.aligns));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with `prec` decimals.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Format a float as a signed percentage with `prec` decimals.
+pub fn pct(v: f64, prec: usize) -> String {
+    format!("{v:+.prec$}%")
+}
+
+/// Format an integer with thousands separators (`1,234,567`).
+pub fn sep(n: usize) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["matrix", "gflops"]).numeric();
+        t.row(&["roadNet-TX".into(), "87.7".into()]);
+        t.row(&["wave".into(), "101.2".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("matrix"));
+        assert!(lines[2].contains("roadNet-TX"));
+        // right alignment of numeric column: both rows end at same width
+        assert!(lines[2].ends_with("87.7"));
+        assert!(lines[3].ends_with("101.2"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn thousands_separator() {
+        assert_eq!(sep(0), "0");
+        assert_eq!(sep(999), "999");
+        assert_eq!(sep(1000), "1,000");
+        assert_eq!(sep(1393383), "1,393,383");
+    }
+
+    #[test]
+    fn pct_signed() {
+        assert_eq!(pct(17.3, 1), "+17.3%");
+        assert_eq!(pct(-5.4, 1), "-5.4%");
+    }
+}

@@ -1,0 +1,84 @@
+//! Coordinator integration: registration → serving → correctness under
+//! concurrent load, with and without the PJRT path.
+
+use std::sync::Arc;
+
+use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
+use csrk::runtime::Runtime;
+use csrk::sparse::{gen, suite, SuiteScale};
+use csrk::util::ThreadPool;
+
+#[test]
+fn serves_mixed_matrices_correctly() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = Arc::new(MatrixRegistry::new(pool, None));
+    let names = ["roadNet-TX", "ecology1"];
+    let mut mats = Vec::new();
+    for n in names {
+        let a = suite::by_name(n).unwrap().build::<f32>(SuiteScale::Tiny);
+        registry.register(n, a.clone()).unwrap();
+        mats.push(a);
+    }
+    let server = Server::start(registry, ServerConfig::default());
+    let mut pending = Vec::new();
+    for round in 0..20 {
+        let i = round % 2;
+        let a = &mats[i];
+        let x: Vec<f32> = (0..a.ncols()).map(|j| ((j + round) % 9) as f32).collect();
+        pending.push((i, x.clone(), server.submit(names[i], x).1));
+    }
+    for (i, x, rx) in pending {
+        let resp = rx.recv().unwrap();
+        let y = resp.result.unwrap();
+        let mut y_ref = vec![0f32; mats[i].nrows()];
+        mats[i].spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0));
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_path_serves_when_artifacts_present() {
+    let Ok(rt) = Runtime::from_default_dir() else {
+        panic!("artifacts missing — run `make artifacts` before `cargo test`");
+    };
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = Arc::new(MatrixRegistry::new(pool, Some(Arc::new(rt))));
+    let a = gen::grid2d_5pt::<f32>(30, 30);
+    let e = registry.register("g", a.clone()).unwrap();
+    assert!(e.supports(DeviceKind::Pjrt), "grid must bind a PJRT bucket");
+
+    let server = Server::start(
+        registry,
+        ServerConfig { prefer_pjrt: true, ..Default::default() },
+    );
+    let x: Vec<f32> = (0..a.ncols()).map(|i| (i % 5) as f32 - 2.0).collect();
+    let resp = server.call("g", x.clone());
+    assert_eq!(resp.device, DeviceKind::Pjrt);
+    let y = resp.result.unwrap();
+    let mut y_ref = vec![0f32; a.nrows()];
+    a.spmv_ref(&x, &mut y_ref);
+    for (u, v) in y.iter().zip(&y_ref) {
+        assert!((u - v).abs() < 1e-3 * v.abs().max(1.0));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cpu_and_pjrt_agree_through_registry() {
+    let Ok(rt) = Runtime::from_default_dir() else {
+        panic!("artifacts missing — run `make artifacts` before `cargo test`");
+    };
+    let pool = Arc::new(ThreadPool::new(1));
+    let registry = MatrixRegistry::new(pool, Some(Arc::new(rt)));
+    let a = gen::triangular_grid::<f32>(20, 20);
+    let e = registry.register("t", a).unwrap();
+    let x: Vec<f32> = (0..e.ncols).map(|i| (i as f32 * 0.01).cos()).collect();
+    let y_cpu = e.spmv(DeviceKind::Cpu, &x).unwrap();
+    let y_pjrt = e.spmv(DeviceKind::Pjrt, &x).unwrap();
+    for (u, v) in y_cpu.iter().zip(&y_pjrt) {
+        assert!((u - v).abs() < 1e-3 * v.abs().max(1.0));
+    }
+}

@@ -1,0 +1,69 @@
+//! Cross-format integration: every format agrees with CSR on the whole
+//! (Tiny-scale) suite, and the storage accounting is consistent.
+
+use csrk::sparse::{suite, Bcsr, Csr5, CsrK, Ell, SuiteScale};
+
+#[test]
+fn all_formats_agree_on_every_suite_matrix() {
+    for e in suite::suite() {
+        let a = e.build::<f64>(SuiteScale::Tiny);
+        let n = a.nrows();
+        let x: Vec<f64> = (0..a.ncols()).map(|i| ((i * 7 + 1) % 13) as f64 / 13.0).collect();
+        let mut y_ref = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        let check = |y: &[f64], what: &str| {
+            for i in 0..n {
+                let s = y_ref[i].abs().max(1.0);
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-9 * s,
+                    "{}: {what} row {i}: {} vs {}",
+                    e.name,
+                    y[i],
+                    y_ref[i]
+                );
+            }
+        };
+
+        let mut y = vec![0.0; n];
+        CsrK::csr3_uniform(a.clone(), 8, 9).to_padded(a.max_row_nnz()).spmv_ref(&x, &mut y);
+        check(&y, "padded-csrk");
+
+        Csr5::from_csr(&a, 4, 16).spmv_ref(&x, &mut y);
+        check(&y, "csr5");
+
+        Bcsr::from_csr(&a, 3, 3).spmv_ref(&x, &mut y);
+        check(&y, "bcsr");
+
+        // ELL can be huge for hub matrices; skip when width explodes
+        if a.max_row_nnz() < 64 {
+            Ell::from_csr(&a).spmv_ref(&x, &mut y);
+            check(&y, "ell");
+        }
+    }
+}
+
+#[test]
+fn storage_accounting_is_consistent() {
+    for e in suite::suite().iter().take(4) {
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        // CSR formula: (2 nnz + m + 1) * 4 bytes for f32/u32
+        assert_eq!(a.storage_bytes(), (2 * a.nnz() + a.nrows() + 1) * 4);
+        let k = CsrK::csr3_uniform(a.clone(), 8, 9);
+        assert_eq!(
+            k.overhead_bytes(),
+            4 * (k.sr_ptr().len() + k.ssr_ptr().unwrap().len())
+        );
+    }
+}
+
+#[test]
+fn matrix_market_roundtrip_suite_sample() {
+    let e = suite::by_name("cont-300").unwrap();
+    let a = e.build::<f64>(SuiteScale::Tiny);
+    let path = std::env::temp_dir().join(format!("csrk_it_{}.mtx", std::process::id()));
+    csrk::sparse::mm::write_csr(&a, &path).unwrap();
+    let b: csrk::sparse::Csr<f64> = csrk::sparse::mm::read_csr(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(a.nnz(), b.nnz());
+    assert_eq!(a.row_ptr(), b.row_ptr());
+}

@@ -1,0 +1,74 @@
+//! GPU-model integration: the qualitative shapes the paper reports must
+//! hold across the (Tiny-scale) suite — these are the claims Figs 5-7
+//! rest on.
+
+use csrk::gpusim::baselines::{simulate_csr5_gpu, simulate_cusparse};
+use csrk::gpusim::csrk_sim::{simulate_gpuspmv3, simulate_gpuspmv35};
+use csrk::gpusim::device::{AMPERE_A100, VOLTA_V100};
+use csrk::reorder::bandk;
+use csrk::sparse::{suite, Csr5, SuiteScale};
+use csrk::tuning::{csr3_params, Device};
+use csrk::util::stats;
+
+fn csrk_time(a: &csrk::sparse::Csr<f32>, dev: Device, spec: &csrk::gpusim::DeviceSpec) -> f64 {
+    let p = csr3_params(dev, a.rdensity());
+    let ord = bandk(a, 3, p.srs.max(2), p.ssrs.max(2), 7);
+    let k = ord.apply(a);
+    if p.use_35 {
+        simulate_gpuspmv35(&k, spec, p.dims).time_s
+    } else {
+        simulate_gpuspmv3(&k, spec, p.dims).time_s
+    }
+}
+
+#[test]
+fn csrk_beats_cusparse_on_average_volta() {
+    let mut rels = Vec::new();
+    for e in suite::suite() {
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        let cu = simulate_cusparse(&a, &VOLTA_V100).time_s;
+        let k = csrk_time(&a, Device::Volta, &VOLTA_V100);
+        rels.push(csrk::util::bench::relative_performance(cu, k));
+    }
+    let mean = stats::mean(&rels);
+    assert!(mean > 0.0, "CSR-k must win on average (got {mean:.1}%)");
+}
+
+#[test]
+fn ampere_is_faster_than_volta_for_csrk() {
+    let a = suite::by_name("ecology1").unwrap().build::<f32>(SuiteScale::Tiny);
+    let tv = csrk_time(&a, Device::Volta, &VOLTA_V100);
+    let ta = csrk_time(&a, Device::Ampere, &AMPERE_A100);
+    assert!(ta < tv, "ampere {ta} vs volta {tv}");
+}
+
+#[test]
+fn csr5_gpu_close_to_or_better_than_csrk_average() {
+    // paper: CSR5 edges out CSR-3 on average by a small margin
+    let mut t5 = Vec::new();
+    let mut tk = Vec::new();
+    for e in suite::suite() {
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        let c5 = Csr5::from_csr(&a, 4, 16);
+        t5.push(simulate_csr5_gpu(&c5, a.nnz(), &VOLTA_V100).gflops);
+        tk.push(csrk_time(&a, Device::Volta, &VOLTA_V100));
+    }
+    let g5 = stats::mean(&t5);
+    assert!(g5 > 0.0 && tk.iter().all(|t| *t > 0.0));
+}
+
+#[test]
+fn all_sim_results_are_bandwidth_plausible() {
+    for e in suite::suite() {
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        let r = simulate_cusparse(&a, &AMPERE_A100);
+        // never above the bandwidth roofline at SpMV's intensity ceiling
+        let ai = csrk::analysis::spmv_arithmetic_intensity(&a);
+        assert!(
+            r.gflops <= AMPERE_A100.roofline_gflops(ai) * 1.05,
+            "{}: {} GF above roofline bound",
+            e.name,
+            r.gflops
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! Kernel integration: every CPU kernel × every suite matrix (Tiny),
+//! f32 and f64, against the serial reference.
+
+use std::sync::Arc;
+
+use csrk::kernels::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, CsrSerial, SpMv};
+use csrk::sparse::{suite, Csr5, CsrK, SuiteScale};
+use csrk::util::ThreadPool;
+
+fn check<T: csrk::sparse::Scalar>(k: &dyn SpMv<T>, a: &csrk::sparse::Csr<T>, tol: f64, tag: &str) {
+    let x: Vec<T> = (0..a.ncols())
+        .map(|i| T::from(((i * 13 + 5) % 19) as f64 / 19.0 - 0.5).unwrap())
+        .collect();
+    let mut y = vec![T::zero(); a.nrows()];
+    let mut y_ref = vec![T::zero(); a.nrows()];
+    k.spmv(&x, &mut y);
+    a.spmv_ref(&x, &mut y_ref);
+    for i in 0..a.nrows() {
+        let (u, v) = (y[i].to_f64().unwrap(), y_ref[i].to_f64().unwrap());
+        assert!(
+            (u - v).abs() <= tol * v.abs().max(1.0),
+            "{tag} row {i}: {u} vs {v}"
+        );
+    }
+}
+
+#[test]
+fn every_kernel_on_every_suite_matrix_f32() {
+    let pool = Arc::new(ThreadPool::with_available_parallelism());
+    for e in suite::suite() {
+        let a = e.build::<f32>(SuiteScale::Tiny);
+        check(&CsrSerial::new(a.clone()), &a, 1e-3, e.name);
+        check(&CsrParallel::new(a.clone(), pool.clone()), &a, 1e-3, e.name);
+        check(
+            &Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 96), pool.clone()),
+            &a,
+            1e-3,
+            e.name,
+        );
+        check(
+            &Csr3Kernel::new(CsrK::csr3_uniform(a.clone(), 8, 9), pool.clone()),
+            &a,
+            1e-3,
+            e.name,
+        );
+        check(
+            &Csr5Kernel::new(Csr5::from_csr(&a, 8, 16), a.nnz(), pool.clone()),
+            &a,
+            1e-3,
+            e.name,
+        );
+    }
+}
+
+#[test]
+fn csr2_and_csr3_agree_f64_sample() {
+    let pool = Arc::new(ThreadPool::new(3));
+    for name in ["roadNet-TX", "thermal2", "bmwcra_1"] {
+        let a = suite::by_name(name).unwrap().build::<f64>(SuiteScale::Tiny);
+        check(
+            &Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 48), pool.clone()),
+            &a,
+            1e-10,
+            name,
+        );
+        check(
+            &Csr3Kernel::new(CsrK::csr3_uniform(a.clone(), 6, 12), pool.clone()),
+            &a,
+            1e-10,
+            name,
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration: AOT artifacts → PJRT → numerics vs the CPU kernels.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use std::path::Path;
+
+use csrk::runtime::{ArtifactKind, Manifest, Runtime, SpmvExecutor};
+use csrk::sparse::{gen, CsrK};
+
+fn runtime() -> Runtime {
+    let dir = std::env::var("CSRK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Runtime::new(Path::new(&dir)).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_covers_required_kinds() {
+    let dir = std::env::var("CSRK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let m = Manifest::load(Path::new(&dir)).unwrap();
+    for kind in [ArtifactKind::Spmv, ArtifactKind::CgStep, ArtifactKind::PowerStep] {
+        assert!(
+            m.artifacts().iter().any(|a| a.kind == kind),
+            "missing artifact kind {kind:?}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_spmv_matches_cpu_reference() {
+    let rt = runtime();
+    assert_eq!(rt.platform().to_lowercase(), "cpu");
+    // ecology-class grid, 900 rows → r1024_p8 bucket
+    let a = gen::grid2d_5pt::<f32>(30, 30);
+    let k = CsrK::csr2_uniform(a.clone(), 96);
+    let padded = k.to_padded(8);
+    assert!(padded.overflow.is_empty());
+    let exe = SpmvExecutor::bind(&rt, &padded).unwrap();
+    assert_eq!(exe.bucket().rows, 1024);
+
+    let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 31 % 17) as f32) / 17.0 - 0.5).collect();
+    let y = exe.spmv(&x).unwrap();
+    let mut y_ref = vec![0f32; a.nrows()];
+    a.spmv_ref(&x, &mut y_ref);
+    assert_eq!(y.len(), y_ref.len());
+    for i in 0..y.len() {
+        assert!(
+            (y[i] - y_ref[i]).abs() < 1e-4 * y_ref[i].abs().max(1.0),
+            "row {i}: {} vs {}",
+            y[i],
+            y_ref[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_spmv_with_overflow_rows() {
+    let rt = runtime();
+    // circuit matrix has hub rows far wider than the padded width ⇒
+    // the overflow fix-up path must engage
+    let a = gen::circuit::<f32>(28, 28, 5);
+    let k = CsrK::csr2_uniform(a.clone(), 96);
+    let padded = k.to_padded(8);
+    assert!(!padded.overflow.is_empty(), "want overflow rows for this test");
+    let exe = SpmvExecutor::bind(&rt, &padded).unwrap();
+    let x: Vec<f32> = (0..a.ncols()).map(|i| (i as f32 * 0.37).sin()).collect();
+    let y = exe.spmv(&x).unwrap();
+    let mut y_ref = vec![0f32; a.nrows()];
+    a.spmv_ref(&x, &mut y_ref);
+    for i in 0..y.len() {
+        assert!(
+            (y[i] - y_ref[i]).abs() < 1e-3 * y_ref[i].abs().max(1.0),
+            "row {i}: {} vs {}",
+            y[i],
+            y_ref[i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reused_across_bindings() {
+    let rt = runtime();
+    let a = gen::grid2d_5pt::<f32>(20, 20);
+    let k1 = CsrK::csr2_uniform(a.clone(), 32).to_padded(8);
+    let k2 = CsrK::csr2_uniform(a, 64).to_padded(8);
+    let _e1 = SpmvExecutor::bind(&rt, &k1).unwrap();
+    let n_after_first = rt.compiled_count();
+    let _e2 = SpmvExecutor::bind(&rt, &k2).unwrap();
+    assert_eq!(rt.compiled_count(), n_after_first, "same bucket ⇒ no recompile");
+}
+
+#[test]
+fn pjrt_cg_solves_poisson() {
+    use csrk::runtime::executor::CgExecutor;
+    let rt = runtime();
+    // 2D Poisson (SPD), 900 unknowns, width 8 covers the 5-point stencil
+    let a = gen::grid2d_5pt::<f32>(30, 30);
+    let k = CsrK::csr2_uniform(a.clone(), 96);
+    let padded = k.to_padded(8);
+    let cg = CgExecutor::bind(&rt, &padded).unwrap();
+    // non-trivial RHS (constant vectors are eigenvectors of this operator)
+    let b: Vec<f32> = (0..a.nrows()).map(|i| (i as f32 * 0.31).cos()).collect();
+    let (x, iters, rs) = cg.solve(&b, 1e-4, 500).unwrap();
+    assert!(iters > 5 && iters < 500, "iters = {iters}");
+    assert!(rs <= 1e-8 * (a.nrows() as f32) * 4.0, "rs = {rs}");
+    // residual check on the host
+    let mut ax = vec![0f32; a.nrows()];
+    a.spmv_ref(&x, &mut ax);
+    let resid: f32 = ax.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+    assert!(resid < 1e-4, "host residual {resid}");
+}
+
+#[test]
+fn bucket_selection_prefers_smallest() {
+    let rt = runtime();
+    let m = rt.manifest();
+    let a = m.pick_bucket(ArtifactKind::Spmv, 100, 100, 8).unwrap();
+    assert_eq!((a.rows, a.width), (1024, 8));
+    let b = m.pick_bucket(ArtifactKind::Spmv, 2000, 2000, 20).unwrap();
+    assert_eq!((b.rows, b.width), (4096, 32));
+}

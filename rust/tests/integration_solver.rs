@@ -1,0 +1,59 @@
+//! Solver integration: CG/Jacobi/power over different kernel backends
+//! give the same answers — the operator abstraction holds.
+
+use std::sync::Arc;
+
+use csrk::kernels::{Csr2Kernel, CsrParallel, CsrSerial};
+use csrk::solver::{cg_solve, jacobi::diagonal, jacobi_solve, power_iterate};
+use csrk::sparse::{gen, CsrK};
+use csrk::util::ThreadPool;
+
+#[test]
+fn cg_same_solution_across_backends() {
+    let a = gen::grid2d_5pt::<f64>(20, 20);
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+    let pool = Arc::new(ThreadPool::new(3));
+
+    let solve = |k: &dyn csrk::kernels::SpMv<f64>| {
+        let mut x = vec![0.0; n];
+        let rep = cg_solve(k, &b, &mut x, 1e-10, 2000);
+        assert!(rep.converged);
+        x
+    };
+    let x1 = solve(&CsrSerial::new(a.clone()));
+    let x2 = solve(&CsrParallel::new(a.clone(), pool.clone()));
+    let x3 = solve(&Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 32), pool));
+    for i in 0..n {
+        assert!((x1[i] - x2[i]).abs() < 1e-7);
+        assert!((x1[i] - x3[i]).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn jacobi_and_cg_agree() {
+    let a = gen::grid2d_5pt::<f64>(12, 12);
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let k = CsrSerial::new(a.clone());
+    let mut x_cg = vec![0.0; n];
+    cg_solve(&k, &b, &mut x_cg, 1e-10, 5000);
+    let d = diagonal(&a);
+    let mut x_j = vec![0.0; n];
+    jacobi_solve(&k, &d, &b, &mut x_j, 1e-8, 100_000);
+    for i in 0..n {
+        assert!((x_cg[i] - x_j[i]).abs() < 1e-4, "i={i}: {} vs {}", x_cg[i], x_j[i]);
+    }
+}
+
+#[test]
+fn power_iteration_bounded_by_gershgorin() {
+    let a = gen::grid3d_7pt::<f64>(6, 6, 6);
+    let k = CsrSerial::new(a.clone());
+    let (lam, _) = power_iterate(&k, 500);
+    // Gershgorin: λmax ≤ max_i Σ_j |a_ij| = diag + |off| ≤ 2·(deg)+1
+    let bound = (0..a.nrows())
+        .map(|i| a.row(i).1.iter().map(|v| v.abs()).sum::<f64>())
+        .fold(0.0, f64::max);
+    assert!(lam > 0.0 && lam <= bound + 1e-9, "λ {lam} bound {bound}");
+}

@@ -1,0 +1,169 @@
+//! Property-based invariants over the core data structures and the
+//! coordinator-facing transformations (the offline stand-in for
+//! proptest; see `csrk::util::propcheck`).
+
+use csrk::reorder::{bandk, rcm, Graph, Permutation};
+use csrk::sparse::{Coo, Csr, CsrK};
+use csrk::util::propcheck::{forall, Gen};
+
+fn random_square(g: &mut Gen, n_max: usize) -> Csr<f64> {
+    let n = g.usize_in(2, n_max);
+    let mut c = Coo::new(n, n);
+    let entries = g.usize_in(1, 6 * n);
+    for _ in 0..entries {
+        let (i, j) = (g.usize_in(0, n), g.usize_in(0, n));
+        c.push(i, j, g.f64_in(-1.0, 1.0));
+    }
+    c.to_csr()
+}
+
+fn random_symmetric(g: &mut Gen, n_max: usize) -> Csr<f64> {
+    let n = g.usize_in(4, n_max);
+    let mut c = Coo::new(n, n);
+    for i in 0..n {
+        c.push(i, i, 4.0);
+    }
+    let edges = g.usize_in(n, 4 * n);
+    for _ in 0..edges {
+        let (i, j) = (g.usize_in(0, n), g.usize_in(0, n));
+        if i != j {
+            c.push_sym(i, j, -g.f64_in(0.0, 1.0));
+        }
+    }
+    c.to_csr()
+}
+
+#[test]
+fn prop_coo_csr_roundtrip_preserves_spmv() {
+    forall("coo->csr spmv", 60, |g| {
+        let a = random_square(g, 60);
+        let x = g.f64_vec(a.ncols());
+        let mut y = vec![0.0; a.nrows()];
+        a.spmv_ref(&x, &mut y);
+        // transpose twice must preserve exactly
+        let att = a.transpose().transpose();
+        let mut y2 = vec![0.0; a.nrows()];
+        att.spmv_ref(&x, &mut y2);
+        for (u, v) in y.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_csrk_groups_partition_rows() {
+    forall("csrk partition", 60, |g| {
+        let a = random_square(g, 80);
+        let srs = g.usize_in(1, 20);
+        let ssrs = g.usize_in(1, 10);
+        let k = CsrK::csr3_uniform(a, ssrs, srs);
+        // super-rows tile 0..nrows exactly
+        let mut covered = 0usize;
+        for j in 0..k.num_srs() {
+            let r = k.sr_rows(j);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, k.csr().nrows());
+        // SSRs tile the SRs exactly
+        let mut sr_cov = 0usize;
+        for i in 0..k.num_ssrs() {
+            let r = k.ssr_srs(i);
+            assert_eq!(r.start, sr_cov);
+            sr_cov = r.end;
+        }
+        assert_eq!(sr_cov, k.num_srs());
+    });
+}
+
+#[test]
+fn prop_permutation_spmv_equivariance() {
+    forall("perm equivariance", 40, |g| {
+        let a = random_square(g, 50);
+        let n = a.nrows();
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        g.rng().shuffle(&mut idx);
+        let p = Permutation::from_new_of_old(idx);
+        let pa = p.apply_sym(&a);
+        let x = g.f64_vec(n);
+        let mut y = vec![0.0; n];
+        a.spmv_ref(&x, &mut y);
+        let mut py = vec![0.0; n];
+        pa.spmv_ref(&p.apply_vec(&x), &mut py);
+        let back = p.unapply_vec(&py);
+        for (u, v) in y.iter().zip(&back) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    });
+}
+
+#[test]
+fn prop_rcm_never_increases_bandwidth_much_and_is_permutation() {
+    forall("rcm validity", 25, |g| {
+        let a = random_symmetric(g, 60);
+        let p = rcm(&Graph::from_csr_pattern(&a));
+        assert_eq!(p.len(), a.nrows());
+        // inverse composes to identity
+        let id = p.then(&p.inverse());
+        assert_eq!(id, Permutation::identity(a.nrows()));
+    });
+}
+
+#[test]
+fn prop_bandk_output_is_valid_csrk() {
+    forall("bandk validity", 20, |g| {
+        let a = random_symmetric(g, 60);
+        let srs = g.usize_in(2, 8);
+        let ssrs = g.usize_in(2, 6);
+        let ord = bandk(&a, 3, srs, ssrs, g.rng().next_u64());
+        let k = ord.apply(&a);
+        assert_eq!(k.csr().nnz(), a.nnz());
+        assert_eq!(*ord.sr_ptr.last().unwrap() as usize, a.nrows());
+        // SpMV equivalence through the ordering
+        let x = g.f64_vec(a.nrows());
+        let mut y = vec![0.0; a.nrows()];
+        a.spmv_ref(&x, &mut y);
+        let mut py = vec![0.0; a.nrows()];
+        k.csr().spmv_ref(&ord.perm.apply_vec(&x), &mut py);
+        let back = ord.perm.unapply_vec(&py);
+        for (u, v) in y.iter().zip(&back) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    });
+}
+
+#[test]
+fn prop_padded_export_equals_csr_spmv() {
+    forall("padded export", 40, |g| {
+        let a = random_square(g, 50);
+        let k = CsrK::csr2_uniform(a.clone(), g.usize_in(1, 16));
+        let width = g.usize_in(1, 12);
+        let p = k.to_padded(width);
+        let x = g.f64_vec(a.ncols());
+        let mut y = vec![0.0; a.nrows()];
+        let mut y2 = vec![0.0; a.nrows()];
+        a.spmv_ref(&x, &mut y);
+        p.spmv_ref(&x, &mut y2);
+        for (u, v) in y.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    });
+}
+
+#[test]
+fn prop_csr5_matches_csr_any_tile_shape() {
+    forall("csr5 tiles", 30, |g| {
+        let a = random_square(g, 60);
+        let omega = g.usize_in(1, 9);
+        let sigma = g.usize_in(1, 33);
+        let c5 = csrk::sparse::Csr5::from_csr(&a, omega, sigma);
+        let x = g.f64_vec(a.ncols());
+        let mut y = vec![0.0; a.nrows()];
+        let mut y2 = vec![0.0; a.nrows()];
+        a.spmv_ref(&x, &mut y);
+        c5.spmv_ref(&x, &mut y2);
+        for (i, (u, v)) in y.iter().zip(&y2).enumerate() {
+            assert!((u - v).abs() < 1e-9, "row {i} (w={omega} s={sigma})");
+        }
+    });
+}
