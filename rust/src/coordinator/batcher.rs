@@ -1,19 +1,42 @@
-//! Dynamic batching: requests for the same matrix are grouped so the
-//! per-dispatch overhead (permutation, device hand-off, PJRT call
-//! setup) amortizes — the SpMV analogue of vLLM-style request batching.
+//! Dynamic batching: requests for the same matrix are grouped so they
+//! execute as **one blocked SpMM** (`Y = A·X`, see
+//! `kernels::SpMv::spmv_multi`) — the matrix streams from memory once
+//! per batch instead of once per request, on top of the amortized
+//! dispatch overhead (permutation, device hand-off, PJRT call setup).
+//! The SpMV analogue of vLLM-style request batching, except that here
+//! batching changes the kernel's roofline point, not just the overhead.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::Request;
 
-/// A group of requests sharing one matrix.
+/// A group of requests sharing one matrix; the members' input vectors
+/// are the columns of the SpMM block the executor dispatches.
 #[derive(Debug)]
 pub struct Batch {
     /// The common matrix name.
     pub matrix: String,
     /// Member requests.
     pub requests: Vec<(Request, Instant)>,
+}
+
+impl Batch {
+    /// Number of member requests (the SpMM block width).
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True when the batch has no members.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Borrow the member input vectors, in request order, as the
+    /// operand list of one multi-RHS dispatch.
+    pub fn x_block(&self) -> Vec<&[f32]> {
+        self.requests.iter().map(|(r, _)| r.x.as_slice()).collect()
+    }
 }
 
 /// Accumulates requests per matrix and releases batches when either the
@@ -32,21 +55,25 @@ impl DynamicBatcher {
     }
 
     /// Enqueue a request (stamped now); returns a full batch if the size
-    /// cap was reached.
+    /// cap was reached. A released queue is removed outright — long-tail
+    /// matrix names must not leave empty shells growing the map.
     pub fn push(&mut self, req: Request) -> Option<Batch> {
         let now = Instant::now();
         let q = self.queues.entry(req.matrix.clone()).or_default();
         q.push((req, now));
         if q.len() >= self.max_batch {
-            let matrix = q[0].0.matrix.clone();
-            let requests = std::mem::take(q);
+            // clone the key only when a batch actually releases
+            let key = q[0].0.matrix.clone();
+            let (matrix, requests) = self.queues.remove_entry(&key).expect("queue just filled");
             Some(Batch { matrix, requests })
         } else {
             None
         }
     }
 
-    /// Release every queue whose oldest member has exceeded the delay.
+    /// Release every queue whose oldest member has exceeded the delay,
+    /// ordered oldest-queue-first (HashMap iteration order must not
+    /// leak into dispatch order when several matrices expire together).
     pub fn flush_expired(&mut self) -> Vec<Batch> {
         let now = Instant::now();
         let mut out = Vec::new();
@@ -56,10 +83,11 @@ impl DynamicBatcher {
             }
             !q.is_empty()
         });
+        out.sort_by_key(|b| b.requests[0].1);
         out
     }
 
-    /// Release everything (shutdown).
+    /// Release everything (shutdown), oldest queue first.
     pub fn drain(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
         for (name, q) in self.queues.drain() {
@@ -67,6 +95,7 @@ impl DynamicBatcher {
                 out.push(Batch { matrix: name, requests: q });
             }
         }
+        out.sort_by_key(|b| b.requests[0].1);
         out
     }
 
@@ -140,5 +169,62 @@ mod tests {
         b.push(req(1, "a"));
         let d = b.next_deadline().unwrap();
         assert!(d <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn full_batch_leaves_no_empty_queue_behind() {
+        let mut b = DynamicBatcher::new(2, Duration::from_millis(0));
+        b.push(req(1, "a"));
+        assert!(b.push(req(2, "a")).is_some());
+        // the drained "a" queue must be gone, not an empty shell: no
+        // deadline to poll on, and nothing for flush_expired to emit
+        // (max_delay = 0 would expire any surviving entry immediately)
+        assert_eq!(b.queued(), 0);
+        assert!(b.next_deadline().is_none());
+        assert!(b.flush_expired().is_empty());
+        // and the queue rebuilds cleanly on the next push
+        assert!(b.push(req(3, "a")).is_none());
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn flush_expired_releases_oldest_queue_first() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(1));
+        b.push(req(1, "zzz")); // enqueued first, name sorts last
+        std::thread::sleep(Duration::from_millis(3));
+        b.push(req(2, "aaa"));
+        b.push(req(3, "mmm"));
+        std::thread::sleep(Duration::from_millis(3));
+        let out = b.flush_expired();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].matrix, "zzz", "oldest queue must release first");
+        let stamps: Vec<_> = out.iter().map(|x| x.requests[0].1).collect();
+        assert!(stamps.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn max_batch_one_releases_every_push_immediately() {
+        let mut b = DynamicBatcher::new(1, Duration::from_secs(10));
+        for id in 0..5 {
+            let batch = b.push(req(id, "a")).expect("degenerate batcher must not queue");
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch.requests[0].0.id, id);
+            assert_eq!(b.queued(), 0);
+            assert!(b.next_deadline().is_none());
+        }
+        assert!(b.drain().is_empty());
+    }
+
+    #[test]
+    fn x_block_borrows_in_request_order() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        b.push(Request { id: 1, matrix: "a".into(), x: vec![1.0, 2.0] });
+        let batch = b
+            .push(Request { id: 2, matrix: "a".into(), x: vec![3.0, 4.0] })
+            .unwrap();
+        let xs = batch.x_block();
+        assert_eq!(xs, vec![&[1.0f32, 2.0][..], &[3.0, 4.0][..]]);
+        assert_eq!(batch.len(), 2);
+        assert!(!batch.is_empty());
     }
 }

@@ -8,9 +8,25 @@
 //! then stream SpMV requests that are dynamically batched and scheduled
 //! across CPU kernel workers and the PJRT (AOT/XLA) execution path.
 //!
+//! # Batches execute as SpMM
+//!
+//! Batching here is not only a dispatch-overhead amortizer: a batch of
+//! requests against the same matrix executes as **one blocked
+//! `Y = A·X`** ([`crate::kernels::SpMv::spmv_multi`]). SpMV is
+//! bandwidth-bound, so a loop of `spmv` calls re-streams the entire
+//! matrix per request; the blocked dispatch reads each row once and
+//! streams it against the whole request block, raising arithmetic
+//! intensity ≈ `batch`-fold. Tuning shifts with the block width too —
+//! wider blocks behave like proportionally denser rows, so the
+//! registry's Band-k group targets come from the §4.1 heuristic at the
+//! *effective* density ([`crate::tuning::csr3_params_multi`]); register
+//! matrices with [`MatrixRegistry::register_hinted`] when the expected
+//! traffic is batched. `benches/e2e_spmm.rs` measures the resulting
+//! batched-vs-looped throughput gap.
+//!
 //! * [`registry`] — per-matrix, per-device prepared executions.
 //! * [`batcher`] — dynamic batching queue (max-batch / max-delay).
-//! * [`server`] — worker threads, routing, lifecycle.
+//! * [`server`] — worker threads, SpMM dispatch, routing, lifecycle.
 //! * [`metrics`] — latency/throughput accounting.
 
 pub mod batcher;

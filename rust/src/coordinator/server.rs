@@ -1,5 +1,7 @@
 //! The serving event loop: leader thread batches and routes; device
-//! workers execute; responses flow back over channels.
+//! workers execute each batch as one multi-RHS SpMM dispatch
+//! ([`crate::kernels::SpMv::spmv_multi`]) and scatter the per-request
+//! results back over channels.
 //!
 //! Topology (std mpsc — no async runtime is available offline, and SpMV
 //! service latencies are µs-scale where a thread-per-device design is
@@ -205,6 +207,13 @@ fn leader_loop(
     }
 }
 
+/// Executes batches: the whole batch runs as **one** multi-RHS dispatch
+/// (`MatrixEntry::spmv_multi`), so the matrix streams from memory once
+/// per batch rather than once per request; results scatter back to the
+/// per-request response channels afterwards. Requests whose vector
+/// length doesn't match the matrix are answered individually with an
+/// error and excluded from the block, so one malformed request cannot
+/// fail its batchmates.
 fn device_worker(
     rx: Receiver<Work>,
     registry: Arc<MatrixRegistry>,
@@ -212,20 +221,59 @@ fn device_worker(
     device: DeviceKind,
 ) {
     while let Ok(work) = rx.recv() {
-        let entry = registry.get(&work.batch.matrix);
-        for ((req, enqueued), tx) in work.batch.requests.into_iter().zip(work.resp) {
-            let started = Instant::now();
-            let result = match &entry {
-                Ok(e) => e.spmv(device, &req.x).map_err(|e| e.to_string()),
-                Err(e) => Err(e.to_string()),
-            };
-            let latency = enqueued.elapsed();
-            let flops = entry.as_ref().map(|e| e.flops()).unwrap_or(0.0);
-            metrics.record(latency, flops, result.is_ok());
-            let _ = tx.send(Response { id: req.id, result, device, latency });
-            let _ = started;
+        let entry = match registry.get(&work.batch.matrix) {
+            Ok(e) => e,
+            Err(e) => {
+                let msg = e.to_string();
+                for (member, tx) in work.batch.requests.into_iter().zip(work.resp) {
+                    respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
+                }
+                continue;
+            }
+        };
+        // Partition exactly once on the well-formedness predicate:
+        // malformed requests are answered immediately with their own
+        // diagnostic, and the block dispatch (plus the result zip
+        // below) sees only the well-formed remainder — results can
+        // never pair up with the wrong request.
+        let mut valid: Vec<((Request, Instant), Sender<Response>)> = Vec::new();
+        for (member, tx) in work.batch.requests.into_iter().zip(work.resp) {
+            if member.0.x.len() == entry.ncols {
+                valid.push((member, tx));
+            } else {
+                let msg = format!("x length {} != ncols {}", member.0.x.len(), entry.ncols);
+                respond(member, tx, Err(msg), &metrics, device, 0.0);
+            }
+        }
+        let xs: Vec<&[f32]> = valid.iter().map(|((r, _), _)| r.x.as_slice()).collect();
+        match entry.spmv_multi(device, &xs).map_err(|e| e.to_string()) {
+            Ok(ys) => {
+                debug_assert_eq!(ys.len(), valid.len());
+                for (y, (member, tx)) in ys.into_iter().zip(valid) {
+                    respond(member, tx, Ok(y), &metrics, device, entry.flops());
+                }
+            }
+            Err(msg) => {
+                for (member, tx) in valid {
+                    respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
+                }
+            }
         }
     }
+}
+
+/// Record metrics for one served request and send its response.
+fn respond(
+    (req, enqueued): (Request, Instant),
+    tx: Sender<Response>,
+    result: Result<Vec<f32>, String>,
+    metrics: &Metrics,
+    device: DeviceKind,
+    flops: f64,
+) {
+    let latency = enqueued.elapsed();
+    metrics.record(latency, if result.is_ok() { flops } else { 0.0 }, result.is_ok());
+    let _ = tx.send(Response { id: req.id, result, device, latency });
 }
 
 #[cfg(test)]
@@ -296,5 +344,46 @@ mod tests {
         let (_, rx) = server.submit("grid", x);
         server.shutdown();
         assert!(rx.recv().unwrap().result.is_ok());
+    }
+
+    #[test]
+    fn batched_dispatch_matches_reference_per_request() {
+        let server = test_server(false);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        // distinct vectors so a block-path indexing bug cannot hide
+        let xs: Vec<Vec<f32>> = (0..12)
+            .map(|j| (0..256).map(|i| ((i + 3 * j) % 7) as f32 - 3.0).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| server.submit("grid", x.clone()).1).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let y = rx.recv().unwrap().result.unwrap();
+            let mut y_ref = vec![0f32; 256];
+            a.spmv_ref(x, &mut y_ref);
+            for (u, v) in y.iter().zip(&y_ref) {
+                assert!((u - v).abs() < 1e-3 * v.abs().max(1.0));
+            }
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_fails_alone_not_its_batchmates() {
+        let server = test_server(false);
+        let good: Vec<f32> = vec![1.0; 256];
+        let bad: Vec<f32> = vec![1.0; 3];
+        // fill one batch (max_batch = 4) with a bad vector in the middle
+        let rx_a = server.submit("grid", good.clone()).1;
+        let rx_bad = server.submit("grid", bad).1;
+        let rx_b = server.submit("grid", good.clone()).1;
+        let rx_c = server.submit("grid", good).1;
+        assert!(rx_a.recv().unwrap().result.is_ok());
+        let err = rx_bad.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("x length"), "{err}");
+        assert!(rx_b.recv().unwrap().result.is_ok());
+        assert!(rx_c.recv().unwrap().result.is_ok());
+        let (req, _, errors) = server.metrics().counts();
+        assert_eq!(req, 4);
+        assert_eq!(errors, 1);
+        server.shutdown();
     }
 }

@@ -4,10 +4,17 @@
 //! rows for CSR-3, super-rows for CSR-2) with OpenMP-style static
 //! scheduling; every inner level is a serial loop, preserving the
 //! cache-friendly contiguity the format was reordered for.
+//!
+//! The multi-RHS path (`spmv_multi`) runs the same group structure with
+//! the blocked inner loop (`csr::spmm_rows`): CSR-k's contiguous
+//! super-rows make the blocked sweep especially natural — each
+//! super-row's rows stream their nonzeros once against the whole RHS
+//! block while the Band-k ordering keeps the gathered `x` block slices
+//! cache-resident across the group.
 
 use std::sync::Arc;
 
-use super::csr::spmv_rows;
+use super::csr::{spmm_rows, spmv_rows};
 use super::{SendPtr, SpMv};
 use crate::sparse::{CsrK, Scalar};
 use crate::util::{Schedule, ThreadPool};
@@ -66,6 +73,25 @@ impl<T: Scalar> SpMv<T> for Csr2Kernel<T> {
     fn flops(&self) -> f64 {
         self.a.csr().spmv_flops()
     }
+
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        assert!(nvec > 0);
+        assert_eq!(x.len(), self.a.csr().ncols() * nvec);
+        assert_eq!(y.len(), self.a.csr().nrows() * nvec);
+        let ylen = y.len();
+        let yp = SendPtr(y.as_mut_ptr());
+        let a = &self.a;
+        self.pool
+            .parallel_for(a.num_srs(), Schedule::Static, |sr_lo, sr_hi| {
+                // SAFETY: super-rows are disjoint row ranges, hence
+                // disjoint `row*nvec` block slices.
+                let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), ylen) };
+                for j in sr_lo..sr_hi {
+                    let rows = a.sr_rows(j);
+                    spmm_rows(a.csr(), x, ys, nvec, rows.start, rows.end);
+                }
+            });
+    }
 }
 
 /// CSR-3 kernel: `parallel for` over super-super-rows; serial loops over
@@ -123,6 +149,27 @@ impl<T: Scalar> SpMv<T> for Csr3Kernel<T> {
     fn flops(&self) -> f64 {
         self.a.csr().spmv_flops()
     }
+
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        assert!(nvec > 0);
+        assert_eq!(x.len(), self.a.csr().ncols() * nvec);
+        assert_eq!(y.len(), self.a.csr().nrows() * nvec);
+        let ylen = y.len();
+        let yp = SendPtr(y.as_mut_ptr());
+        let a = &self.a;
+        self.pool
+            .parallel_for(a.num_ssrs(), Schedule::Static, |ssr_lo, ssr_hi| {
+                // SAFETY: SSRs are disjoint row ranges, hence disjoint
+                // `row*nvec` block slices.
+                let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), ylen) };
+                for i in ssr_lo..ssr_hi {
+                    for j in a.ssr_srs(i) {
+                        let rows = a.sr_rows(j);
+                        spmm_rows(a.csr(), x, ys, nvec, rows.start, rows.end);
+                    }
+                }
+            });
+    }
 }
 
 #[cfg(test)]
@@ -177,5 +224,72 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(1));
         let k = CsrK::csr2_uniform(a, 2);
         let _ = Csr3Kernel::new(k, pool);
+    }
+
+    #[test]
+    fn csr2_spmm_matches_per_vector_spmv() {
+        use crate::kernels::testutil::assert_spmm_matches;
+        let a = gen::grid2d_5pt::<f64>(20, 20);
+        let pool = Arc::new(ThreadPool::new(4));
+        for srs in [1usize, 13, 96] {
+            let k = Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), srs), pool.clone());
+            for nvec in [1usize, 2, 4, 5, 8, 16] {
+                assert_spmm_matches(&k, nvec, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn csr3_spmm_matches_per_vector_spmv() {
+        use crate::kernels::testutil::assert_spmm_matches;
+        let a = gen::grid3d_7pt::<f64>(7, 7, 7);
+        let pool = Arc::new(ThreadPool::new(3));
+        for (ssrs, srs) in [(1usize, 1usize), (4, 8), (12, 5)] {
+            let k = Csr3Kernel::new(CsrK::csr3_uniform(a.clone(), ssrs, srs), pool.clone());
+            for nvec in [2usize, 3, 8, 16] {
+                assert_spmm_matches(&k, nvec, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_row_matrix_through_both_kernels() {
+        use crate::sparse::Coo;
+        let a = Coo::<f64>::new(0, 0).to_csr();
+        let pool = Arc::new(ThreadPool::new(2));
+        let k2 = CsrK::csr2_uniform(a.clone(), 4);
+        assert_eq!(k2.num_srs(), 0);
+        let kern2 = Csr2Kernel::new(k2, pool.clone());
+        kern2.spmv(&[], &mut []);
+        kern2.spmv_multi(&[], &mut [], 3);
+
+        let k3 = CsrK::csr3_uniform(a, 2, 4);
+        assert_eq!(k3.num_ssrs(), 0);
+        let kern3 = Csr3Kernel::new(k3, pool);
+        kern3.spmv(&[], &mut []);
+        kern3.spmv_multi(&[], &mut [], 2);
+    }
+
+    #[test]
+    fn one_row_matrix_through_both_kernels() {
+        use crate::sparse::Coo;
+        let mut c = Coo::<f64>::new(1, 1);
+        c.push(0, 0, 2.5);
+        let a = c.to_csr();
+        let pool = Arc::new(ThreadPool::new(2));
+        // group sizes far larger than the matrix must clamp to one group
+        let k2 = CsrK::csr2_uniform(a.clone(), 100);
+        assert_eq!(k2.sr_ptr(), &[0, 1]);
+        let kern2 = Csr2Kernel::new(k2, pool.clone());
+        let mut y = vec![0.0];
+        kern2.spmv(&[2.0], &mut y);
+        assert_eq!(y, vec![5.0]);
+
+        let k3 = CsrK::csr3_uniform(a, 100, 100);
+        assert_eq!(k3.ssr_ptr().unwrap(), &[0, 1]);
+        let kern3 = Csr3Kernel::new(k3, pool);
+        let mut yb = vec![0.0; 2];
+        kern3.spmv_multi(&[3.0, -1.0], &mut yb, 2);
+        assert_eq!(yb, vec![7.5, -2.5]);
     }
 }

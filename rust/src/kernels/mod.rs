@@ -11,6 +11,29 @@
 //! All parallel kernels share the crate's persistent
 //! [`ThreadPool`](crate::util::ThreadPool) and write disjoint row ranges,
 //! so `y` is distributed without synchronization on the hot path.
+//!
+//! # Multi-vector products (SpMM)
+//!
+//! Every kernel also exposes [`SpMv::spmv_multi`], the blocked
+//! `Y = A·X` product over `nvec` right-hand sides at once. Plain SpMV
+//! is bandwidth-bound (see `analysis::roofline`): at one RHS the matrix
+//! stream (`col_idx` + `vals`) dominates traffic, so serving `nvec`
+//! concurrent requests as `nvec` independent `spmv` calls re-reads the
+//! whole matrix `nvec` times. The blocked kernels read each row **once**
+//! and stream its nonzeros against the entire RHS block, multiplying the
+//! arithmetic intensity by ≈`nvec` — this is why the coordinator's
+//! dynamic batches dispatch as a single `spmv_multi` (see
+//! `coordinator::server`) and why the tuning point shifts with block
+//! width (`tuning::heuristic::csr3_params_multi`).
+//!
+//! The block layout is **vector-interleaved**: element `c` of vector `j`
+//! lives at `x[c * nvec + j]`. The `nvec` operands a gathered column
+//! feeds are therefore contiguous, which keeps the blocked inner loop a
+//! unit-stride multiply-add that LLVM vectorizes across the block.
+//! [`pack_block`]/[`unpack_block`] convert between this layout and
+//! per-request vectors. CSR-family kernels (`CsrSerial`, `CsrParallel`,
+//! `Csr2Kernel`, `Csr3Kernel`) implement the genuinely blocked loop;
+//! the baseline formats fall back to a correct per-vector loop.
 
 pub mod bcsr;
 pub mod coo;
@@ -45,6 +68,65 @@ pub trait SpMv<T: Scalar>: Send + Sync {
 
     /// FLOPs per application (paper convention `2 · NNZ`).
     fn flops(&self) -> f64;
+
+    /// `Y = A · X` over a block of `nvec` right-hand sides (SpMM).
+    ///
+    /// `x` is the RHS block in vector-interleaved layout — element `c`
+    /// of vector `j` at `x[c * nvec + j]`, length `ncols · nvec` — and
+    /// `y` receives the result block in the same layout (`y[r * nvec +
+    /// j]`, length `nrows · nvec`). See [`pack_block`]/[`unpack_block`].
+    ///
+    /// The default implementation is a correct but unamortized
+    /// fallback: it de-interleaves one vector at a time through
+    /// [`SpMv::spmv`], re-streaming the matrix per vector. Blocked
+    /// kernels override it to read each matrix row once per block.
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        assert!(nvec > 0, "spmv_multi needs at least one vector");
+        assert_eq!(x.len(), self.ncols() * nvec);
+        assert_eq!(y.len(), self.nrows() * nvec);
+        let (n, m) = (self.nrows(), self.ncols());
+        let mut xj = vec![T::zero(); m];
+        let mut yj = vec![T::zero(); n];
+        for j in 0..nvec {
+            for c in 0..m {
+                xj[c] = x[c * nvec + j];
+            }
+            self.spmv(&xj, &mut yj);
+            for r in 0..n {
+                y[r * nvec + j] = yj[r];
+            }
+        }
+    }
+}
+
+/// Interleave per-request vectors into the [`SpMv::spmv_multi`] block
+/// layout: `out[c * nvec + j] = xs[j][c]`. All vectors must share one
+/// length.
+pub fn pack_block<T: Scalar>(xs: &[&[T]]) -> Vec<T> {
+    let nvec = xs.len();
+    if nvec == 0 {
+        return Vec::new();
+    }
+    let m = xs[0].len();
+    let mut out = vec![T::zero(); m * nvec];
+    for (j, x) in xs.iter().enumerate() {
+        assert_eq!(x.len(), m, "all block vectors must have equal length");
+        for (c, &v) in x.iter().enumerate() {
+            out[c * nvec + j] = v;
+        }
+    }
+    out
+}
+
+/// De-interleave a result block back into per-request vectors:
+/// `out[j][r] = y[r * nvec + j]`.
+pub fn unpack_block<T: Scalar>(y: &[T], nvec: usize) -> Vec<Vec<T>> {
+    assert!(nvec > 0);
+    assert_eq!(y.len() % nvec, 0, "block length must be a multiple of nvec");
+    let n = y.len() / nvec;
+    (0..nvec)
+        .map(|j| (0..n).map(|r| y[r * nvec + j]).collect())
+        .collect()
 }
 
 /// Shared-nothing mutable pointer for distributing disjoint row ranges
@@ -86,5 +168,56 @@ pub(crate) mod testutil {
                 kernel.name()
             );
         }
+    }
+
+    /// Assert `kernel.spmv_multi` over `nvec` deterministic vectors
+    /// agrees with `nvec` independent `spmv` calls.
+    pub fn assert_spmm_matches<T: Scalar>(kernel: &dyn SpMv<T>, nvec: usize, tol: f64) {
+        let (n, m) = (kernel.nrows(), kernel.ncols());
+        let xs: Vec<Vec<T>> = (0..nvec)
+            .map(|j| {
+                (0..m)
+                    .map(|i| T::from(((i * 29 + j * 7 + 3) % 31) as f64 / 31.0 - 0.5).unwrap())
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[T]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xb = pack_block(&refs);
+        let mut yb = vec![T::from(9999.0).unwrap(); n * nvec]; // poison
+        kernel.spmv_multi(&xb, &mut yb, nvec);
+        let ys = unpack_block(&yb, nvec);
+        let mut y1 = vec![T::zero(); n];
+        for (j, x) in xs.iter().enumerate() {
+            kernel.spmv(x, &mut y1);
+            for i in 0..n {
+                let (u, v) = (ys[j][i].to_f64().unwrap(), y1[i].to_f64().unwrap());
+                assert!(
+                    (u - v).abs() <= tol * v.abs().max(1.0),
+                    "{} nvec={nvec}: vec {j} row {i}: {u} vs {v}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = [1.0f64, 2.0, 3.0];
+        let b = [4.0f64, 5.0, 6.0];
+        let block = pack_block(&[&a, &b]);
+        assert_eq!(block, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        let back = unpack_block(&block, 2);
+        assert_eq!(back, vec![a.to_vec(), b.to_vec()]);
+    }
+
+    #[test]
+    fn pack_empty_is_empty() {
+        let xs: [&[f32]; 0] = [];
+        assert!(pack_block::<f32>(&xs).is_empty());
     }
 }

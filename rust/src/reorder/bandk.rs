@@ -125,16 +125,15 @@ pub fn bandk<T: Scalar>(a: &Csr<T>, k: usize, srs: usize, ssrs: usize, seed: u64
     BandKOrdering { perm: row_perm, sr_ptr, ssr_ptr }
 }
 
-/// `0, g, 2g, ..., n` boundaries.
+/// `0, g, 2g, ..., n` boundaries. `n == 0` yields `[0]` — zero groups
+/// — matching `sparse::csrk::uniform_groups` so both construction
+/// paths agree that an empty matrix has no super-rows.
 fn uniform_groups(n: usize, g: usize) -> Vec<u32> {
     let mut ptr = vec![0u32];
     let mut i = 0usize;
     while i < n {
         i = (i + g).min(n);
         ptr.push(i as u32);
-    }
-    if n == 0 {
-        ptr.push(0);
     }
     ptr
 }

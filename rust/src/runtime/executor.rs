@@ -67,11 +67,35 @@ impl SpmvExecutor {
         if x.len() != self.ncols {
             bail!("x length {} != ncols {}", x.len(), self.ncols);
         }
+        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
+        self.spmv_locked(x)
+    }
+
+    /// A batch of products through PJRT: `out[j] = A · xs[j]`.
+    ///
+    /// The bound executable is single-vector (the AOT buckets are
+    /// `[R, W] × [N + 1]` graphs), so the block executes as a loop —
+    /// but under **one** acquisition of the global PJRT lock, so a
+    /// batch pays the client synchronization once instead of per
+    /// request. Matrix literals stay device-resident across the loop
+    /// either way; a true multi-RHS bucket graph is the logical
+    /// follow-up on the artifact side.
+    pub fn spmv_multi(&self, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        for x in xs {
+            if x.len() != self.ncols {
+                bail!("x length {} != ncols {}", x.len(), self.ncols);
+            }
+        }
+        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
+        xs.iter().map(|x| self.spmv_locked(x)).collect()
+    }
+
+    /// One product; the caller must hold [`super::client::PJRT_LOCK`].
+    fn spmv_locked(&self, x: &[f32]) -> Result<Vec<f32>> {
         // x padded to bucket N + 1 zero slot; zeros beyond ncols make
         // every sentinel (matrix-level or bucket-level) gather 0.
         let mut x_pad = vec![0f32; self.bucket.ncols + 1];
         x_pad[..x.len()].copy_from_slice(x);
-        let _pjrt = super::client::PJRT_LOCK.lock().unwrap();
         let x_lit = xla::Literal::vec1(&x_pad);
         let result = self
             .exe

@@ -210,7 +210,10 @@ impl<T: Scalar> PaddedCsr<T> {
     }
 }
 
-/// `0, g, 2g, ..., n` group boundaries.
+/// `0, g, 2g, ..., n` group boundaries. `n == 0` yields `[0]` — zero
+/// groups — so empty matrices report `num_srs() == 0` instead of one
+/// phantom empty super-row (and the group-parallel kernels dispatch
+/// nothing).
 fn uniform_groups(n: usize, g: usize) -> Vec<u32> {
     let mut ptr = Vec::with_capacity(n / g + 2);
     let mut i = 0usize;
@@ -219,16 +222,14 @@ fn uniform_groups(n: usize, g: usize) -> Vec<u32> {
         i = (i + g).min(n);
         ptr.push(i as u32);
     }
-    if n == 0 {
-        // keep the invariant ptr = [0, 0]? No: empty matrix has one
-        // boundary only; normalize to [0] plus terminal 0 already pushed.
-        ptr = vec![0, 0];
-    }
     ptr
 }
 
 fn validate_groups(ptr: &[u32], n: usize, what: &str) {
-    assert!(ptr.len() >= 2, "{what} needs at least [0, n]");
+    assert!(
+        ptr.len() >= 2 || (n == 0 && !ptr.is_empty()),
+        "{what} needs at least [0, n]"
+    );
     assert_eq!(ptr[0], 0, "{what} must start at 0");
     assert_eq!(*ptr.last().unwrap() as usize, n, "{what} must end at {n}");
     for w in ptr.windows(2) {
@@ -340,6 +341,50 @@ mod tests {
     fn bad_boundaries_rejected() {
         let a = nine_row_matrix();
         let _ = CsrK::from_boundaries(a, vec![0, 5, 4, 9], None);
+    }
+
+    #[test]
+    fn empty_matrix_has_zero_groups() {
+        let a = Coo::<f64>::new(0, 0).to_csr();
+        let k2 = CsrK::csr2_uniform(a.clone(), 7);
+        assert_eq!(k2.sr_ptr(), &[0]);
+        assert_eq!(k2.num_srs(), 0);
+        assert_eq!(k2.num_ssrs(), 0);
+
+        let k3 = CsrK::csr3_uniform(a.clone(), 3, 7);
+        assert_eq!(k3.sr_ptr(), &[0]);
+        assert_eq!(k3.ssr_ptr().unwrap(), &[0]);
+        assert_eq!(k3.num_srs(), 0);
+        assert_eq!(k3.num_ssrs(), 0);
+
+        // explicit zero-group boundaries are accepted too
+        let k0 = CsrK::from_boundaries(a, vec![0], None);
+        assert_eq!(k0.num_srs(), 0);
+    }
+
+    #[test]
+    fn one_row_matrix_has_one_group() {
+        let mut c = Coo::<f64>::new(1, 1);
+        c.push(0, 0, 1.0);
+        let a = c.to_csr();
+        for srs in [1usize, 2, 1000] {
+            let k = CsrK::csr2_uniform(a.clone(), srs);
+            assert_eq!(k.sr_ptr(), &[0, 1]);
+            assert_eq!(k.sr_rows(0), 0..1);
+        }
+        let k3 = CsrK::csr3_uniform(a, 5, 5);
+        assert_eq!(k3.sr_ptr(), &[0, 1]);
+        assert_eq!(k3.ssr_ptr().unwrap(), &[0, 1]);
+        assert_eq!(k3.ssr_srs(0), 0..1);
+    }
+
+    #[test]
+    fn empty_padded_export_is_empty() {
+        let a = Coo::<f64>::new(0, 0).to_csr();
+        let p = CsrK::csr2_uniform(a, 4).to_padded(8);
+        assert_eq!(p.nrows, 0);
+        assert!(p.cols.is_empty() && p.vals.is_empty() && p.overflow.is_empty());
+        assert_eq!(p.padding_ratio, 0.0);
     }
 
     #[test]

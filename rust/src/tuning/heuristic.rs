@@ -1,4 +1,16 @@
-//! The paper's closed-form GPU tuning heuristics (§4.1), verbatim.
+//! The paper's closed-form GPU tuning heuristics (§4.1), verbatim,
+//! plus the block-width extension for multi-RHS (SpMM) dispatch.
+//!
+//! The §4.1 formulas key everything off row density because, for one
+//! RHS, row density is what fixes a kernel's operating point on the
+//! roofline (work per row vs. index traffic per row). A blocked
+//! `Y = A·X` over `nvec` right-hand sides multiplies the per-row work
+//! by `nvec` while leaving the `row_ptr`/`col_idx` traffic unchanged —
+//! exactly the shift a ×`nvec` row density would produce. The SpMM
+//! entry points below ([`effective_rdensity`], [`csr3_params_multi`])
+//! therefore reuse the paper's calibration unchanged at the *effective*
+//! density, so the SSRS/SRS choice (and the serial-vs-parallel inner
+//! product split) tracks the batch width the coordinator serves.
 
 use crate::gpusim::csrk_sim::BlockDims;
 use crate::util::stats::round_half_up;
@@ -114,6 +126,25 @@ pub fn csr3_params(device: Device, rdensity: f64) -> TuneParams {
     TuneParams { ssrs: ssrs.max(1), srs: srs.max(1), dims, use_35 }
 }
 
+/// Effective row density of a blocked SpMM: `nvec` right-hand sides
+/// multiply the useful work per row by `nvec` at unchanged pointer and
+/// index traffic, moving the arithmetic-intensity point on the roofline
+/// the same way a ×`nvec` density would.
+pub fn effective_rdensity(rdensity: f64, nvec: usize) -> f64 {
+    rdensity * nvec.max(1) as f64
+}
+
+/// §4.1 parameter selection for a blocked `Y = A·X` with `nvec`
+/// right-hand sides: the single-vector formulas evaluated at the
+/// [`effective_rdensity`]. `nvec = 1` reduces exactly to
+/// [`csr3_params`]. Wider blocks look "denser", so the log-formula
+/// shrinks SSRS/SRS (smaller groups keep the per-group working set —
+/// now `nvec`× larger in `x`/`y` — cache-resident) and the case table
+/// flips to the parallel inner product sooner.
+pub fn csr3_params_multi(device: Device, rdensity: f64, nvec: usize) -> TuneParams {
+    csr3_params(device, effective_rdensity(rdensity, nvec))
+}
+
 /// The GPU sweep candidates (§4.1):
 /// `(SSRS, SRS) ∈ (⋃_{i=2..5} {2^i, 1.5·2^i})²` = {4, 6, 8, 12, 16, 24,
 /// 32, 48}².
@@ -190,6 +221,38 @@ mod tests {
         let p = csr3_params(Device::Ampere, 71.53);
         assert_eq!(p.ssrs, 11);
         assert_eq!(p.srs, 3);
+    }
+
+    #[test]
+    fn spmm_width_one_is_identity() {
+        for device in [Device::Volta, Device::Ampere] {
+            for r in [2.76, 8.0, 16.3, 71.53] {
+                assert_eq!(csr3_params_multi(device, r, 1), csr3_params(device, r));
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_width_shifts_group_sizes_down() {
+        // ecology1-class density: at one RHS the Volta formula gives
+        // SSRS = 7; at 8 RHS the effective density is 39.9 (Case 4
+        // territory) and the initial log-formula sizes must shrink.
+        let r = 4.99;
+        let (s1, _) = initial_sizes(Device::Volta, effective_rdensity(r, 1));
+        let (s8, _) = initial_sizes(Device::Volta, effective_rdensity(r, 8));
+        assert!(s8 < s1, "SSRS {s8} !< {s1}");
+    }
+
+    #[test]
+    fn spmm_width_flips_inner_product_case() {
+        // rdensity 5 is Case 1 (serial inner product) for SpMV but a
+        // 4-wide block crosses the experimentally determined 8-nnz
+        // threshold and must select GPUSpMV-3.5.
+        let p1 = csr3_params_multi(Device::Ampere, 5.0, 1);
+        assert!(!p1.use_35);
+        let p4 = csr3_params_multi(Device::Ampere, 5.0, 4);
+        assert!(p4.use_35);
+        assert_eq!(p4.dims, BlockDims::d3(8, 8, 8));
     }
 
     #[test]

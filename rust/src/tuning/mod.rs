@@ -7,7 +7,10 @@
 //!
 //! * [`heuristic`] — the paper's published formulas, verbatim: block
 //!   dimensions (Cases 1–5), `SSRS/SRS = ⌊a − b·ln(rdensity)⌉` for Volta
-//!   and Ampere, and the per-device case-based post-adjustments.
+//!   and Ampere, and the per-device case-based post-adjustments; plus
+//!   the multi-RHS (SpMM) extension that evaluates the same formulas at
+//!   the block-width-scaled *effective* density
+//!   ([`heuristic::csr3_params_multi`]).
 //! * [`autotune`] — the empirical sweep over
 //!   `(SSRS, SRS) ∈ {2^i, 1.5·2^i}²` (GPU) and
 //!   `SRS ∈ {2^i, 1.5·2^i}, i = 3..11` (CPU) that the formulas are
@@ -23,4 +26,6 @@ pub mod cpu;
 pub mod heuristic;
 pub mod model;
 
-pub use heuristic::{block_dims, csr3_params, Device, TuneParams};
+pub use heuristic::{
+    block_dims, csr3_params, csr3_params_multi, effective_rdensity, Device, TuneParams,
+};

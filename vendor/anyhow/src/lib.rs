@@ -1,0 +1,162 @@
+//! Offline in-tree subset of `anyhow`.
+//!
+//! Provides the pieces `csrk` uses — [`Error`], [`Result`], the
+//! [`Context`] extension trait and the [`bail!`]/[`anyhow!`]/[`ensure!`]
+//! macros. Error values are a flattened message chain (context layers
+//! join the chain with `": "`), which is what the serving layer's
+//! `err.to_string()` reporting needs; downcasting and backtraces are
+//! deliberately out of scope.
+
+use std::fmt::{self, Debug, Display};
+
+/// A type-erased error: the context chain flattened into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prefix the message with a context layer.
+    fn wrap<C: Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` intentionally does NOT implement `std::error::Error`,
+// exactly like the real crate — that is what keeps the blanket
+// conversion below coherent alongside the identity `From` impl.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("parsing number")?;
+        if v == 0 {
+            bail!("zero is not allowed (got {s:?})");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing number: "), "{e}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse("0").unwrap_err();
+        assert_eq!(e.to_string(), "zero is not allowed (got \"0\")");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let e2: Result<u32> = None.with_context(|| format!("missing {}", "thing"));
+        assert_eq!(e2.unwrap_err().to_string(), "missing thing");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(v: i32) -> Result<()> {
+            ensure!(v > 0, "need positive, got {v}");
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        assert_eq!(check(-2).unwrap_err().to_string(), "need positive, got -2");
+    }
+}

@@ -1,0 +1,45 @@
+//! Offline in-tree logging facade.
+//!
+//! Same macro surface as the `log` crate (`error!` … `trace!`) with a
+//! fixed stderr backend: messages print as `[LEVEL csrk] …`. `debug!`
+//! and `trace!` are compiled in but gated behind the `CSRK_LOG` env var
+//! (any non-empty value) so hot paths stay quiet by default.
+
+/// Backend for the level macros. Not part of the public API contract.
+#[doc(hidden)]
+pub fn __log(level: &str, verbose_only: bool, args: std::fmt::Arguments<'_>) {
+    if verbose_only && std::env::var("CSRK_LOG").map_or(true, |v| v.is_empty()) {
+        return;
+    }
+    eprintln!("[{level} csrk] {args}");
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log("ERROR", false, format_args!($($arg)*)) };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log("WARN", false, format_args!($($arg)*)) };
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log("INFO", false, format_args!($($arg)*)) };
+}
+
+/// Log at debug level (silent unless `CSRK_LOG` is set).
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log("DEBUG", true, format_args!($($arg)*)) };
+}
+
+/// Log at trace level (silent unless `CSRK_LOG` is set).
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log("TRACE", true, format_args!($($arg)*)) };
+}

@@ -1,0 +1,399 @@
+//! Offline in-tree subset of `num-traits`.
+//!
+//! The build environment has no network access, so this crate vendors
+//! exactly the trait surface `csrk` relies on — `Float`, `NumAssign`,
+//! `FromPrimitive`, `ToPrimitive`, `NumCast` and their supertraits —
+//! implemented for `f32`/`f64` (plus `ToPrimitive` for the common
+//! integer widths so `NumCast::from` accepts them). Semantics match the
+//! real crate for these types; nothing else is provided.
+
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Rem, RemAssign, Sub, SubAssign};
+
+/// Additive identity.
+pub trait Zero: Sized {
+    /// The value `0`.
+    fn zero() -> Self;
+    /// Is this the additive identity?
+    fn is_zero(&self) -> bool;
+}
+
+/// Multiplicative identity.
+pub trait One: Sized {
+    /// The value `1`.
+    fn one() -> Self;
+}
+
+/// Base numeric trait: identities plus the closed arithmetic ops.
+pub trait Num:
+    Zero
+    + One
+    + PartialEq
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Rem<Output = Self>
+{
+}
+
+/// `Num` with the compound-assignment operators.
+pub trait NumAssign:
+    Num + AddAssign + SubAssign + MulAssign + DivAssign + RemAssign
+{
+}
+
+/// Lossy conversion out to primitive types.
+pub trait ToPrimitive {
+    /// As `f64`.
+    fn to_f64(&self) -> Option<f64>;
+    /// As `f32`.
+    fn to_f32(&self) -> Option<f32>;
+    /// As `i64`.
+    fn to_i64(&self) -> Option<i64>;
+    /// As `u64`.
+    fn to_u64(&self) -> Option<u64>;
+    /// As `usize`.
+    fn to_usize(&self) -> Option<usize>;
+}
+
+/// Conversion in from primitive types.
+pub trait FromPrimitive: Sized {
+    /// From `f64`.
+    fn from_f64(n: f64) -> Option<Self>;
+    /// From `f32`.
+    fn from_f32(n: f32) -> Option<Self> {
+        Self::from_f64(n as f64)
+    }
+    /// From `i64`.
+    fn from_i64(n: i64) -> Option<Self> {
+        Self::from_f64(n as f64)
+    }
+    /// From `u64`.
+    fn from_u64(n: u64) -> Option<Self> {
+        Self::from_f64(n as f64)
+    }
+    /// From `usize`.
+    fn from_usize(n: usize) -> Option<Self> {
+        Self::from_f64(n as f64)
+    }
+}
+
+/// Generic numeric cast (`T::from(x)` for any `x: ToPrimitive`).
+pub trait NumCast: Sized + ToPrimitive {
+    /// Cast from any primitive-convertible value.
+    fn from<N: ToPrimitive>(n: N) -> Option<Self>;
+}
+
+/// Floating-point numbers (the `f32`/`f64` method surface).
+pub trait Float: Num + NumCast + Copy + PartialOrd + Neg<Output = Self> {
+    /// Not-a-number.
+    fn nan() -> Self;
+    /// Positive infinity.
+    fn infinity() -> Self;
+    /// Negative infinity.
+    fn neg_infinity() -> Self;
+    /// Machine epsilon.
+    fn epsilon() -> Self;
+    /// Smallest finite value.
+    fn min_value() -> Self;
+    /// Smallest positive normal value.
+    fn min_positive_value() -> Self;
+    /// Largest finite value.
+    fn max_value() -> Self;
+    /// Is NaN?
+    fn is_nan(self) -> bool;
+    /// Is ±∞?
+    fn is_infinite(self) -> bool;
+    /// Is neither NaN nor ±∞?
+    fn is_finite(self) -> bool;
+    /// Is normal (not zero, subnormal, NaN or ±∞)?
+    fn is_normal(self) -> bool;
+    /// Largest integer ≤ self.
+    fn floor(self) -> Self;
+    /// Smallest integer ≥ self.
+    fn ceil(self) -> Self;
+    /// Nearest integer, ties away from zero.
+    fn round(self) -> Self;
+    /// Integer part.
+    fn trunc(self) -> Self;
+    /// Fractional part.
+    fn fract(self) -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Sign (±1, NaN for NaN).
+    fn signum(self) -> Self;
+    /// Positive sign bit?
+    fn is_sign_positive(self) -> bool;
+    /// Negative sign bit?
+    fn is_sign_negative(self) -> bool;
+    /// Fused multiply-add.
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    /// `1 / self`.
+    fn recip(self) -> Self;
+    /// Integer power.
+    fn powi(self, n: i32) -> Self;
+    /// Float power.
+    fn powf(self, n: Self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// `e^self`.
+    fn exp(self) -> Self;
+    /// `2^self`.
+    fn exp2(self) -> Self;
+    /// Natural log.
+    fn ln(self) -> Self;
+    /// Log in `base`.
+    fn log(self, base: Self) -> Self;
+    /// Log base 2.
+    fn log2(self) -> Self;
+    /// Log base 10.
+    fn log10(self) -> Self;
+    /// Cube root.
+    fn cbrt(self) -> Self;
+    /// `sqrt(self² + other²)`.
+    fn hypot(self, other: Self) -> Self;
+    /// Maximum (NaN-ignoring).
+    fn max(self, other: Self) -> Self;
+    /// Minimum (NaN-ignoring).
+    fn min(self, other: Self) -> Self;
+    /// Sine.
+    fn sin(self) -> Self;
+    /// Cosine.
+    fn cos(self) -> Self;
+    /// Tangent.
+    fn tan(self) -> Self;
+    /// `e^self − 1`.
+    fn exp_m1(self) -> Self;
+    /// `ln(1 + self)`.
+    fn ln_1p(self) -> Self;
+}
+
+macro_rules! impl_float {
+    ($t:ty) => {
+        impl Zero for $t {
+            fn zero() -> $t {
+                0.0
+            }
+            fn is_zero(&self) -> bool {
+                *self == 0.0
+            }
+        }
+        impl One for $t {
+            fn one() -> $t {
+                1.0
+            }
+        }
+        impl Num for $t {}
+        impl NumAssign for $t {}
+        impl ToPrimitive for $t {
+            fn to_f64(&self) -> Option<f64> {
+                Some(*self as f64)
+            }
+            fn to_f32(&self) -> Option<f32> {
+                Some(*self as f32)
+            }
+            fn to_i64(&self) -> Option<i64> {
+                Some(*self as i64)
+            }
+            fn to_u64(&self) -> Option<u64> {
+                Some(*self as u64)
+            }
+            fn to_usize(&self) -> Option<usize> {
+                Some(*self as usize)
+            }
+        }
+        impl FromPrimitive for $t {
+            fn from_f64(n: f64) -> Option<$t> {
+                Some(n as $t)
+            }
+        }
+        impl NumCast for $t {
+            fn from<N: ToPrimitive>(n: N) -> Option<$t> {
+                n.to_f64().map(|v| v as $t)
+            }
+        }
+        impl Float for $t {
+            fn nan() -> $t {
+                <$t>::NAN
+            }
+            fn infinity() -> $t {
+                <$t>::INFINITY
+            }
+            fn neg_infinity() -> $t {
+                <$t>::NEG_INFINITY
+            }
+            fn epsilon() -> $t {
+                <$t>::EPSILON
+            }
+            fn min_value() -> $t {
+                <$t>::MIN
+            }
+            fn min_positive_value() -> $t {
+                <$t>::MIN_POSITIVE
+            }
+            fn max_value() -> $t {
+                <$t>::MAX
+            }
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            fn is_infinite(self) -> bool {
+                <$t>::is_infinite(self)
+            }
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            fn is_normal(self) -> bool {
+                <$t>::is_normal(self)
+            }
+            fn floor(self) -> $t {
+                <$t>::floor(self)
+            }
+            fn ceil(self) -> $t {
+                <$t>::ceil(self)
+            }
+            fn round(self) -> $t {
+                <$t>::round(self)
+            }
+            fn trunc(self) -> $t {
+                <$t>::trunc(self)
+            }
+            fn fract(self) -> $t {
+                <$t>::fract(self)
+            }
+            fn abs(self) -> $t {
+                <$t>::abs(self)
+            }
+            fn signum(self) -> $t {
+                <$t>::signum(self)
+            }
+            fn is_sign_positive(self) -> bool {
+                <$t>::is_sign_positive(self)
+            }
+            fn is_sign_negative(self) -> bool {
+                <$t>::is_sign_negative(self)
+            }
+            fn mul_add(self, a: $t, b: $t) -> $t {
+                <$t>::mul_add(self, a, b)
+            }
+            fn recip(self) -> $t {
+                <$t>::recip(self)
+            }
+            fn powi(self, n: i32) -> $t {
+                <$t>::powi(self, n)
+            }
+            fn powf(self, n: $t) -> $t {
+                <$t>::powf(self, n)
+            }
+            fn sqrt(self) -> $t {
+                <$t>::sqrt(self)
+            }
+            fn exp(self) -> $t {
+                <$t>::exp(self)
+            }
+            fn exp2(self) -> $t {
+                <$t>::exp2(self)
+            }
+            fn ln(self) -> $t {
+                <$t>::ln(self)
+            }
+            fn log(self, base: $t) -> $t {
+                <$t>::log(self, base)
+            }
+            fn log2(self) -> $t {
+                <$t>::log2(self)
+            }
+            fn log10(self) -> $t {
+                <$t>::log10(self)
+            }
+            fn cbrt(self) -> $t {
+                <$t>::cbrt(self)
+            }
+            fn hypot(self, other: $t) -> $t {
+                <$t>::hypot(self, other)
+            }
+            fn max(self, other: $t) -> $t {
+                <$t>::max(self, other)
+            }
+            fn min(self, other: $t) -> $t {
+                <$t>::min(self, other)
+            }
+            fn sin(self) -> $t {
+                <$t>::sin(self)
+            }
+            fn cos(self) -> $t {
+                <$t>::cos(self)
+            }
+            fn tan(self) -> $t {
+                <$t>::tan(self)
+            }
+            fn exp_m1(self) -> $t {
+                <$t>::exp_m1(self)
+            }
+            fn ln_1p(self) -> $t {
+                <$t>::ln_1p(self)
+            }
+        }
+    };
+}
+
+impl_float!(f32);
+impl_float!(f64);
+
+macro_rules! impl_to_primitive_int {
+    ($($t:ty),*) => {$(
+        impl ToPrimitive for $t {
+            fn to_f64(&self) -> Option<f64> {
+                Some(*self as f64)
+            }
+            fn to_f32(&self) -> Option<f32> {
+                Some(*self as f32)
+            }
+            fn to_i64(&self) -> Option<i64> {
+                Some(*self as i64)
+            }
+            fn to_u64(&self) -> Option<u64> {
+                Some(*self as u64)
+            }
+            fn to_usize(&self) -> Option<usize> {
+                Some(*self as usize)
+            }
+        }
+    )*};
+}
+
+impl_to_primitive_int!(i8, i16, i32, i64, isize, u8, u16, u32, u64, usize);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cast<T: Float>(v: f64) -> T {
+        T::from(v).unwrap()
+    }
+
+    #[test]
+    fn numcast_roundtrips() {
+        let x: f32 = cast(0.5);
+        assert_eq!(x, 0.5f32);
+        let y: f64 = NumCast::from(7u32).unwrap();
+        assert_eq!(y, 7.0);
+        assert_eq!(3.25f64.to_f64(), Some(3.25));
+    }
+
+    #[test]
+    fn float_methods_delegate() {
+        assert_eq!(Float::sqrt(9.0f64), 3.0);
+        assert_eq!(Float::max(1.0f32, 2.0), 2.0);
+        assert!(Float::is_finite(1.0f64));
+        assert!(!Float::is_finite(f64::infinity()));
+        assert!((Float::ln(std::f64::consts::E) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn identities() {
+        assert_eq!(f64::zero(), 0.0);
+        assert_eq!(f32::one(), 1.0);
+        assert!(0.0f32.is_zero());
+    }
+}

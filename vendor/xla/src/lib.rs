@@ -1,0 +1,147 @@
+//! Stub of the `xla-rs` PJRT surface used by `csrk::runtime`.
+//!
+//! The offline build environment has no PJRT plugin, so this crate
+//! provides the exact types and signatures `csrk` compiles against
+//! while [`PjRtClient::cpu`] fails with a recognizable error. Every
+//! higher layer already treats a failed client construction as "no PJRT
+//! device" (`Runtime::from_default_dir().ok()`), so the CPU serving
+//! path is unaffected. Swapping this stub for the real bindings is a
+//! Cargo.toml change, not a code change.
+
+use std::fmt::{self, Display};
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT backend not available (csrk built with the offline xla stub)"
+        ))
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tensor) handle.
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    /// Copy out to a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    /// Unwrap a 1-tuple result.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    /// Unwrap a 4-tuple result.
+    pub fn to_tuple4(self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple4"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Transfer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Run the executable over the given arguments.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub — callers treat
+    /// this as "no PJRT device present".
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name (unreachable through the failing constructor).
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    /// Compile a computation (unreachable through the failing
+    /// constructor).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT backend not available"), "{e}");
+    }
+}
