@@ -8,9 +8,9 @@
 
 use std::sync::Arc;
 
-use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
+use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::runtime::Runtime;
-use csrk::sparse::{suite, SuiteScale};
+use csrk::sparse::{gen, suite, SuiteScale};
 use csrk::util::table::{f, Table};
 use csrk::util::{Rng, ThreadPool};
 
@@ -26,36 +26,55 @@ fn main() {
     let has_pjrt = runtime.is_some();
     let registry = Arc::new(MatrixRegistry::new(pool, runtime));
 
-    // Register a slice of the suite spanning the rdensity range.
-    let names = ["roadNet-TX", "ecology1", "wave"];
+    // Register a slice of the suite spanning the rdensity range, plus
+    // an irregular power-law matrix the planner routes around CSR-2.
+    let names = ["roadNet-TX", "ecology1", "wave", "power-law"];
     let mut ncols = std::collections::HashMap::new();
     for name in names {
-        let e = suite::by_name(name).unwrap();
-        let a = e.build::<f32>(SuiteScale::Tiny);
+        let a = match name {
+            "power-law" => gen::power_law::<f32>(4096, 8, 1.0, 0xF00D),
+            _ => suite::by_name(name).unwrap().build::<f32>(SuiteScale::Tiny),
+        };
         ncols.insert(name, a.ncols());
         let reg_t0 = std::time::Instant::now();
         registry.register(name, a).unwrap();
         println!("registered {name} in {:.1} ms", reg_t0.elapsed().as_secs_f64() * 1e3);
     }
+    for line in registry.describe() {
+        println!("  {line}");
+    }
 
-    let mut table = Table::new(&["device", "matrix", "requests", "p50 us", "p99 us", "req/s"]).numeric();
-    for prefer_pjrt in [false, true] {
-        if prefer_pjrt && !has_pjrt {
+    let mut table = Table::new(&["route", "matrix", "requests", "p50 us", "p99 us", "req/s"]).numeric();
+    // First pass: cost-based routing (the default). Second pass: every
+    // request pinned to the PJRT path — restricted to matrices that
+    // actually bound one (the irregular plan deliberately skips the
+    // padded export, and a bucket-miss at registration leaves an entry
+    // CPU-only), since a pinned request fails rather than falls back.
+    for pinned in [None, Some(DeviceKind::Pjrt)] {
+        if pinned.is_some() && !has_pjrt {
             continue;
         }
-        let server = Server::start(
-            registry.clone(),
-            ServerConfig { prefer_pjrt, ..Default::default() },
-        );
+        let served: Vec<&str> = match pinned {
+            None => names.to_vec(),
+            Some(d) => names
+                .iter()
+                .copied()
+                .filter(|n| registry.get(n).map_or(false, |e| e.supports(d)))
+                .collect(),
+        };
+        if served.is_empty() {
+            continue;
+        }
+        let server = Server::start(registry.clone(), ServerConfig::default());
         let mut rng = Rng::new(7);
         let requests = 600usize;
         let t0 = std::time::Instant::now();
         let mut pending = Vec::new();
         for _ in 0..requests {
-            let name = *rng.choose(&names);
+            let name = *rng.choose(&served);
             let n = ncols[name];
             let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
-            pending.push(server.submit(name, x).1);
+            pending.push(server.submit_on(name, x, pinned).1);
         }
         for rx in pending {
             rx.recv().unwrap().result.expect("spmv ok");
@@ -63,8 +82,8 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64();
         let m = server.metrics();
         table.row(&[
-            if prefer_pjrt { "pjrt".into() } else { "cpu".into() },
-            "mixed(3)".into(),
+            if pinned.is_some() { "pinned-pjrt".into() } else { "cost-based".into() },
+            format!("mixed({})", served.len()),
             requests.to_string(),
             f(m.latency_us(50.0), 0),
             f(m.latency_us(99.0), 0),

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
+use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::runtime::Runtime;
 use csrk::sparse::{suite, SuiteScale};
 use csrk::util::table::{f, Table};
@@ -28,25 +28,30 @@ fn main() {
 
     println!("== e2e serving bench: {name} ({ncols} cols, {nnz} nnz) ==\n");
     let mut t = Table::new(&["path", "requests", "p50 us", "p99 us", "req/s", "GFlop/s"]).numeric();
-    for prefer_pjrt in [false, true] {
-        if prefer_pjrt && !has_pjrt {
-            continue;
+    // row 1: cost-based routing (the default); row 2: every request
+    // pinned to the PJRT path via the per-request override — skipped
+    // unless the matrix actually bound one, since pinned requests fail
+    // rather than fall back
+    for pinned in [None, Some(DeviceKind::Pjrt)] {
+        if let Some(d) = pinned {
+            if !registry.get(name).map_or(false, |e| e.supports(d)) {
+                continue;
+            }
         }
-        let server = Server::start(
-            registry.clone(),
-            ServerConfig { prefer_pjrt, ..Default::default() },
-        );
-        let requests = if prefer_pjrt { 200 } else { 2000 };
+        let server = Server::start(registry.clone(), ServerConfig::default());
+        let requests = if pinned.is_some() { 200 } else { 2000 };
         let x = vec![0.5f32; ncols];
         let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = (0..requests).map(|_| server.submit(name, x.clone()).1).collect();
+        let rxs: Vec<_> = (0..requests)
+            .map(|_| server.submit_on(name, x.clone(), pinned).1)
+            .collect();
         for rx in rxs {
             rx.recv().unwrap().result.expect("ok");
         }
         let dt = t0.elapsed().as_secs_f64();
         let m = server.metrics();
         t.row(&[
-            if prefer_pjrt { "pjrt".into() } else { "cpu".into() },
+            if pinned.is_some() { "pinned-pjrt".into() } else { "cost-based".into() },
             requests.to_string(),
             f(m.latency_us(50.0), 0),
             f(m.latency_us(99.0), 0),

@@ -13,9 +13,11 @@
 use std::sync::Arc;
 
 use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
-use csrk::kernels::{pack_block, Csr2Kernel, CsrParallel, SpMv};
-use csrk::sparse::{suite, CsrK, SuiteScale};
+use csrk::kernels::{build_kernel, pack_block, Csr2Kernel, CsrParallel, SpMv};
+use csrk::reorder::bandk;
+use csrk::sparse::{gen, suite, Csr, CsrK, SuiteScale};
 use csrk::tuning::cpu::FIXED_SRS;
+use csrk::tuning::planner;
 use csrk::util::table::{f, Table};
 use csrk::util::{Bencher, ThreadPool};
 
@@ -27,15 +29,34 @@ fn main() {
         "matrix", "kernel", "nvec", "loop GF/s", "spmm GF/s", "speedup",
     ])
     .numeric();
-    for name in ["ecology1", "thermal2", "bmwcra_1"] {
-        let a = suite::by_name(name).unwrap().build::<f32>(scale);
+    // three regular suite profiles plus the irregular power-law class;
+    // the "planned" kernel row is whatever the format planner picks
+    // (CSR-2 for the regular rows, CSR5 for the power-law row)
+    let mut cases: Vec<(&str, Csr<f32>)> = ["ecology1", "thermal2", "bmwcra_1"]
+        .iter()
+        .map(|&name| (name, suite::by_name(name).unwrap().build::<f32>(scale)))
+        .collect();
+    cases.push(("power-law", gen::power_law::<f32>(50_000, 8, 1.0, 0xF00D)));
+    for &(name, ref a) in &cases {
         let (n, m) = (a.nrows(), a.ncols());
+        // the planned row reproduces registration: Band-k when the plan
+        // reorders (regular rows), native order otherwise — throughput
+        // is permutation-covariant, so benching in plan order is exact
+        let planned: Box<dyn SpMv<f32>> = {
+            let plan = planner::plan(a);
+            let ordered = match plan.reorder {
+                Some(r) => bandk(a, r.k, r.srs, r.ssrs, r.seed).perm.apply_sym(a),
+                None => a.clone(),
+            };
+            build_kernel(&plan, ordered, pool.clone())
+        };
         let kernels: Vec<Box<dyn SpMv<f32>>> = vec![
             Box::new(CsrParallel::new(a.clone(), pool.clone())),
             Box::new(Csr2Kernel::new(
                 CsrK::csr2_uniform(a.clone(), FIXED_SRS),
                 pool.clone(),
             )),
+            planned,
         ];
         for k in &kernels {
             for nvec in [1usize, 4, 8, 16] {

@@ -9,14 +9,20 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+use super::registry::DeviceKind;
 use super::Request;
 
-/// A group of requests sharing one matrix; the members' input vectors
-/// are the columns of the SpMM block the executor dispatches.
+/// A group of requests sharing one matrix **and** one device override;
+/// the members' input vectors are the columns of the SpMM block the
+/// executor dispatches. Requests pinned to different devices must not
+/// share a batch — a batch executes as one dispatch on one device — so
+/// the override is part of the batching key.
 #[derive(Debug)]
 pub struct Batch {
     /// The common matrix name.
     pub matrix: String,
+    /// The common explicit device override (`None` = route by cost).
+    pub device: Option<DeviceKind>,
     /// Member requests.
     pub requests: Vec<(Request, Instant)>,
 }
@@ -39,12 +45,12 @@ impl Batch {
     }
 }
 
-/// Accumulates requests per matrix and releases batches when either the
-/// size cap or the age deadline hits.
+/// Accumulates requests per `(matrix, device override)` and releases
+/// batches when either the size cap or the age deadline hits.
 pub struct DynamicBatcher {
     max_batch: usize,
     max_delay: Duration,
-    queues: HashMap<String, Vec<(Request, Instant)>>,
+    queues: HashMap<(String, Option<DeviceKind>), Vec<(Request, Instant)>>,
 }
 
 impl DynamicBatcher {
@@ -59,13 +65,17 @@ impl DynamicBatcher {
     /// matrix names must not leave empty shells growing the map.
     pub fn push(&mut self, req: Request) -> Option<Batch> {
         let now = Instant::now();
-        let q = self.queues.entry(req.matrix.clone()).or_default();
+        let q = self
+            .queues
+            .entry((req.matrix.clone(), req.device))
+            .or_default();
         q.push((req, now));
         if q.len() >= self.max_batch {
             // clone the key only when a batch actually releases
-            let key = q[0].0.matrix.clone();
-            let (matrix, requests) = self.queues.remove_entry(&key).expect("queue just filled");
-            Some(Batch { matrix, requests })
+            let key = (q[0].0.matrix.clone(), q[0].0.device);
+            let ((matrix, device), requests) =
+                self.queues.remove_entry(&key).expect("queue just filled");
+            Some(Batch { matrix, device, requests })
         } else {
             None
         }
@@ -77,9 +87,13 @@ impl DynamicBatcher {
     pub fn flush_expired(&mut self) -> Vec<Batch> {
         let now = Instant::now();
         let mut out = Vec::new();
-        self.queues.retain(|name, q| {
+        self.queues.retain(|(name, device), q| {
             if !q.is_empty() && now.duration_since(q[0].1) >= self.max_delay {
-                out.push(Batch { matrix: name.clone(), requests: std::mem::take(q) });
+                out.push(Batch {
+                    matrix: name.clone(),
+                    device: *device,
+                    requests: std::mem::take(q),
+                });
             }
             !q.is_empty()
         });
@@ -90,9 +104,9 @@ impl DynamicBatcher {
     /// Release everything (shutdown), oldest queue first.
     pub fn drain(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        for (name, q) in self.queues.drain() {
+        for ((name, device), q) in self.queues.drain() {
             if !q.is_empty() {
-                out.push(Batch { matrix: name, requests: q });
+                out.push(Batch { matrix: name, device, requests: q });
             }
         }
         out.sort_by_key(|b| b.requests[0].1);
@@ -121,7 +135,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64, m: &str) -> Request {
-        Request { id, matrix: m.to_string(), x: vec![] }
+        Request { id, matrix: m.to_string(), x: vec![], device: None }
+    }
+
+    fn req_on(id: u64, m: &str, device: Option<DeviceKind>) -> Request {
+        Request { id, matrix: m.to_string(), x: vec![], device }
     }
 
     #[test]
@@ -141,6 +159,21 @@ mod tests {
         assert!(b.push(req(2, "b")).is_none());
         assert!(b.push(req(3, "b")).unwrap().matrix == "b");
         assert_eq!(b.queued(), 1); // "a" still waiting
+    }
+
+    #[test]
+    fn device_overrides_do_not_share_a_batch() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        // same matrix, three different overrides ⇒ three queues
+        assert!(b.push(req_on(1, "a", None)).is_none());
+        assert!(b.push(req_on(2, "a", Some(DeviceKind::Pjrt))).is_none());
+        assert!(b.push(req_on(3, "a", Some(DeviceKind::Cpu))).is_none());
+        assert_eq!(b.queued(), 3);
+        // the pjrt queue fills independently and carries its override
+        let batch = b.push(req_on(4, "a", Some(DeviceKind::Pjrt))).unwrap();
+        assert_eq!(batch.device, Some(DeviceKind::Pjrt));
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.queued(), 2);
     }
 
     #[test]
@@ -218,9 +251,9 @@ mod tests {
     #[test]
     fn x_block_borrows_in_request_order() {
         let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
-        b.push(Request { id: 1, matrix: "a".into(), x: vec![1.0, 2.0] });
+        b.push(Request { id: 1, matrix: "a".into(), x: vec![1.0, 2.0], device: None });
         let batch = b
-            .push(Request { id: 2, matrix: "a".into(), x: vec![3.0, 4.0] })
+            .push(Request { id: 2, matrix: "a".into(), x: vec![3.0, 4.0], device: None })
             .unwrap();
         let xs = batch.x_block();
         assert_eq!(xs, vec![&[1.0f32, 2.0][..], &[3.0, 4.0][..]]);

@@ -1,12 +1,27 @@
 //! L3 coordinator: the serving layer that makes CSR-k a deployable
 //! heterogeneous-SpMV system.
 //!
-//! The paper's contribution is a *format + tuner*; the coordinator is
-//! the production harness around it (vLLM-router-shaped): applications
-//! register matrices once — the registry reorders (Band-k), tunes
-//! (§4 constant-time model) and binds them to every available device —
-//! then stream SpMV requests that are dynamically batched and scheduled
-//! across CPU kernel workers and the PJRT (AOT/XLA) execution path.
+//! The paper's contribution is a *format + tuner* whose performance
+//! claim is **conditional on structure** (§6: regular matrices, row-nnz
+//! variance ≤ 10); the coordinator is the production harness around
+//! that conditionality. Registration runs a three-stage pipeline:
+//!
+//! 1. **Plan** — [`crate::tuning::planner`] measures the matrix and
+//!    decides format, reordering, padded-export width, and per-device
+//!    roofline cost estimates. Regular structure plans the paper's
+//!    path (Band-k + CSR-k, §4 heuristics unchanged); irregular
+//!    structure skips reordering and plans CSR5 or nnz-balanced
+//!    parallel CSR.
+//! 2. **Build** — [`crate::kernels::build_kernel`] constructs the
+//!    planned kernel as a `Box<dyn SpMv<f32>>`; [`MatrixEntry`] holds
+//!    that trait object (plus the Band-k permutation when one exists),
+//!    never a concrete kernel type.
+//! 3. **Bind / route** — the padded PJRT export happens at the plan's
+//!    width and binds to an AOT bucket when available. At serve time
+//!    each batch routes to the **cheapest bound device by the plan's
+//!    cost estimates**; a request's explicit [`Request::device`]
+//!    override always wins (and fails loudly if that device is
+//!    unbound, rather than silently downgrading).
 //!
 //! # Batches execute as SpMM
 //!
@@ -48,6 +63,12 @@ pub struct Request {
     pub matrix: String,
     /// Input vector (length = matrix ncols).
     pub x: Vec<f32>,
+    /// Explicit device override. `None` (the default) routes to the
+    /// cheapest bound device by the registration plan's cost
+    /// estimates; `Some(d)` pins execution to `d` and surfaces an
+    /// error if the matrix has no binding there. Part of the batching
+    /// key: requests pinned to different devices never share a batch.
+    pub device: Option<DeviceKind>,
 }
 
 /// The result of one request.

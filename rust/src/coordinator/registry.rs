@@ -1,39 +1,50 @@
-//! Matrix registry: one-time registration does everything expensive —
-//! Band-k reordering, §4 constant-time tuning, per-device format
-//! preparation — so the request path only executes.
+//! Matrix registry: one-time registration runs the **plan → build →
+//! bind** pipeline so the request path only executes.
+//!
+//! * **Plan** — [`tuning::planner`](crate::tuning::planner) measures
+//!   the matrix (row-nnz variance, density, longest row) and decides
+//!   format, reordering, padded-export width and per-device cost
+//!   estimates. Regular matrices (§6: variance ≤ 10) get Band-k +
+//!   CSR-k with the paper's §4 heuristics; irregular matrices skip
+//!   reordering and plan CSR5 or nnz-balanced parallel CSR.
+//! * **Build** — [`kernels::build_kernel`](crate::kernels::build_kernel)
+//!   constructs whatever kernel the plan names, as a `Box<dyn SpMv>`;
+//!   the entry never holds a concrete kernel type.
+//! * **Bind** — the padded PJRT export happens at the plan's width (a
+//!   plan decision, not an inline clamp) and binds to an AOT bucket
+//!   when the runtime has one; the plan's cost estimates then drive
+//!   per-request routing ([`MatrixEntry::route`]).
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::kernels::{Csr2Kernel, SpMv};
-use crate::reorder::bandk;
+use crate::kernels::{build_kernel, pack_block, unpack_block, SpMv};
+use crate::reorder::{bandk, Permutation};
 use crate::runtime::{Runtime, SpmvExecutor};
+use crate::sparse::csrk::PaddedCsr;
 use crate::sparse::Csr;
-use crate::tuning::cpu::FIXED_SRS;
-use crate::tuning::{csr3_params_multi, Device};
+use crate::tuning::planner::{self, FormatPlan};
 use crate::util::ThreadPool;
 
-/// Where a request can execute.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum DeviceKind {
-    /// Native CPU kernel (CSR-2 over the thread pool).
-    Cpu,
-    /// AOT/XLA executable through PJRT (the accelerator path).
-    Pjrt,
-}
+pub use crate::tuning::planner::DeviceKind;
 
-/// A registered matrix: Band-k-ordered CSR-k plus per-device bindings.
+/// A registered matrix: the chosen plan, the built kernel, and the
+/// per-device bindings.
 pub struct MatrixEntry {
     /// Registered name.
     pub name: String,
-    /// Row permutation applied at registration (requests are in original
-    /// coordinates; the entry permutes in/out transparently).
-    perm: crate::reorder::Permutation,
-    /// CPU execution: tuned CSR-2 kernel.
-    cpu: Csr2Kernel<f32>,
-    /// PJRT execution (absent if no bucket fits).
+    /// The plan registration executed (exposed for observability and
+    /// routing; see [`MatrixEntry::plan`]).
+    plan: FormatPlan,
+    /// Row permutation applied at registration. `None` is the
+    /// no-reorder path (irregular plans): requests run in original
+    /// coordinates with no permute on the hot path.
+    perm: Option<Permutation>,
+    /// CPU execution: whatever kernel the plan called for.
+    cpu: Box<dyn SpMv<f32>>,
+    /// PJRT execution (absent if the plan skipped it or no bucket fits).
     pjrt: Option<SpmvExecutor>,
     /// Logical shape.
     pub nrows: usize,
@@ -49,31 +60,44 @@ impl MatrixEntry {
         if x.len() != self.ncols {
             bail!("x length {} != ncols {}", x.len(), self.ncols);
         }
-        let px = self.perm.apply_vec(x);
-        let py = match device {
+        match device {
             DeviceKind::Cpu => {
                 let mut y = vec![0f32; self.nrows];
-                self.cpu.spmv(&px, &mut y);
-                y
+                match &self.perm {
+                    Some(p) => {
+                        let px = p.apply_vec(x);
+                        self.cpu.spmv(&px, &mut y);
+                        Ok(p.unapply_vec(&y))
+                    }
+                    None => {
+                        self.cpu.spmv(x, &mut y);
+                        Ok(y)
+                    }
+                }
             }
-            DeviceKind::Pjrt => match &self.pjrt {
-                Some(exe) => exe.spmv(&px)?,
-                None => bail!("matrix {} has no PJRT binding", self.name),
-            },
-        };
-        Ok(self.perm.unapply_vec(&py))
+            DeviceKind::Pjrt => {
+                let exe = self
+                    .pjrt
+                    .as_ref()
+                    .with_context(|| format!("matrix {} has no PJRT binding", self.name))?;
+                match &self.perm {
+                    Some(p) => Ok(p.unapply_vec(&exe.spmv(&p.apply_vec(x))?)),
+                    None => exe.spmv(x),
+                }
+            }
+        }
     }
 
     /// Execute a whole batch on the chosen device: `out[j] = A · xs[j]`.
     /// All inputs are in original coordinates.
     ///
     /// On CPU the batch runs as **one blocked SpMM**: the operands are
-    /// permuted into a vector-interleaved block and the CSR-2 kernel
-    /// streams every matrix row once against the whole block
-    /// ([`SpMv::spmv_multi`]), instead of re-reading the matrix per
-    /// request. On PJRT the bound executable is single-vector, so the
-    /// batch loops inside the executor under one client lock
-    /// acquisition (see `runtime::SpmvExecutor::spmv_multi`).
+    /// permuted (when the plan reordered) into a vector-interleaved
+    /// block and the built kernel streams every matrix row once against
+    /// the whole block ([`SpMv::spmv_multi`]), instead of re-reading
+    /// the matrix per request. On PJRT the bound executable is
+    /// single-vector, so the batch loops inside the executor under one
+    /// client lock acquisition (see `runtime::SpmvExecutor::spmv_multi`).
     pub fn spmv_multi(&self, device: DeviceKind, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if xs.is_empty() {
             return Ok(Vec::new());
@@ -86,35 +110,50 @@ impl MatrixEntry {
         let nvec = xs.len();
         match device {
             DeviceKind::Cpu => {
-                // Fused permute + interleave: each operand writes straight
-                // into its block slots (`xb[p(c)·nvec + j] = xs[j][c]`)
-                // and results read straight back out — no intermediate
-                // permuted vectors on the batch hot path.
-                let mut xb = vec![0f32; self.ncols * nvec];
-                for (j, x) in xs.iter().enumerate() {
-                    for (c, &v) in x.iter().enumerate() {
-                        xb[self.perm.new_of(c) * nvec + j] = v;
+                // Fused permute + interleave on the reordered path: each
+                // operand writes straight into its block slots
+                // (`xb[p(c)·nvec + j] = xs[j][c]`) and results read
+                // straight back out; the identity path packs directly.
+                let xb = match &self.perm {
+                    Some(p) => {
+                        let mut xb = vec![0f32; self.ncols * nvec];
+                        for (j, x) in xs.iter().enumerate() {
+                            for (c, &v) in x.iter().enumerate() {
+                                xb[p.new_of(c) * nvec + j] = v;
+                            }
+                        }
+                        xb
                     }
-                }
+                    None => pack_block(xs),
+                };
                 let mut yb = vec![0f32; self.nrows * nvec];
                 self.cpu.spmv_multi(&xb, &mut yb, nvec);
-                Ok((0..nvec)
-                    .map(|j| {
-                        (0..self.nrows)
-                            .map(|r| yb[self.perm.new_of(r) * nvec + j])
-                            .collect()
-                    })
-                    .collect())
+                Ok(match &self.perm {
+                    Some(p) => (0..nvec)
+                        .map(|j| {
+                            (0..self.nrows)
+                                .map(|r| yb[p.new_of(r) * nvec + j])
+                                .collect()
+                        })
+                        .collect(),
+                    None => unpack_block(&yb, nvec),
+                })
             }
-            DeviceKind::Pjrt => match &self.pjrt {
-                Some(exe) => {
-                    let pxs: Vec<Vec<f32>> = xs.iter().map(|x| self.perm.apply_vec(x)).collect();
-                    let prefs: Vec<&[f32]> = pxs.iter().map(|v| v.as_slice()).collect();
-                    let pys = exe.spmv_multi(&prefs)?;
-                    Ok(pys.iter().map(|py| self.perm.unapply_vec(py)).collect())
+            DeviceKind::Pjrt => {
+                let exe = self
+                    .pjrt
+                    .as_ref()
+                    .with_context(|| format!("matrix {} has no PJRT binding", self.name))?;
+                match &self.perm {
+                    Some(p) => {
+                        let pxs: Vec<Vec<f32>> = xs.iter().map(|x| p.apply_vec(x)).collect();
+                        let prefs: Vec<&[f32]> = pxs.iter().map(|v| v.as_slice()).collect();
+                        let pys = exe.spmv_multi(&prefs)?;
+                        Ok(pys.iter().map(|py| p.unapply_vec(py)).collect())
+                    }
+                    None => exe.spmv_multi(xs),
                 }
-                None => bail!("matrix {} has no PJRT binding", self.name),
-            },
+            }
         }
     }
 
@@ -124,6 +163,60 @@ impl MatrixEntry {
             DeviceKind::Cpu => true,
             DeviceKind::Pjrt => self.pjrt.is_some(),
         }
+    }
+
+    /// The plan registration executed.
+    pub fn plan(&self) -> &FormatPlan {
+        &self.plan
+    }
+
+    /// Name of the kernel the build stage constructed (e.g. `csr2(4t)`,
+    /// `csr5(w8,s16,4t)`).
+    pub fn kernel_name(&self) -> String {
+        self.cpu.name()
+    }
+
+    /// Did registration reorder the matrix? `false` is the identity
+    /// (no-reorder) path irregular plans take.
+    pub fn reordered(&self) -> bool {
+        self.perm.is_some()
+    }
+
+    /// Pick the execution device for a request. An explicit override
+    /// always wins — pinning to an unbound device surfaces an error at
+    /// execution rather than silently downgrading. With no override the
+    /// request routes to the cheapest device the plan priced that is
+    /// actually bound (CPU support is unconditional).
+    pub fn route(&self, requested: Option<DeviceKind>) -> DeviceKind {
+        if let Some(d) = requested {
+            return d;
+        }
+        let mut best = DeviceKind::Cpu;
+        let mut best_cost = f64::INFINITY;
+        for &(d, c) in &self.plan.costs {
+            if self.supports(d) && c < best_cost {
+                best = d;
+                best_cost = c;
+            }
+        }
+        best
+    }
+
+    /// One observability line: the plan, what was built, what is bound,
+    /// and where unrouted requests will execute.
+    pub fn describe(&self) -> String {
+        let bound: Vec<DeviceKind> = [DeviceKind::Cpu, DeviceKind::Pjrt]
+            .into_iter()
+            .filter(|&d| self.supports(d))
+            .collect();
+        format!(
+            "{}: {} | built {} | bound {:?} | routes to {:?}",
+            self.name,
+            self.plan.summary(),
+            self.cpu.name(),
+            bound,
+            self.route(None),
+        )
     }
 
     /// SpMV FLOPs (2·NNZ).
@@ -146,11 +239,10 @@ impl MatrixRegistry {
         MatrixRegistry { pool, runtime, entries: RwLock::new(HashMap::new()) }
     }
 
-    /// Register a matrix: Band-k order it, tune CSR-2 (fixed SRS = 96,
-    /// the §4.2 constant-time choice) for CPU, and bind the padded
-    /// export to a PJRT bucket when possible. Tunes for single-vector
-    /// requests; use [`MatrixRegistry::register_hinted`] when the
-    /// expected traffic is batched.
+    /// Register a matrix through the plan → build → bind pipeline,
+    /// planned for single-vector requests; use
+    /// [`MatrixRegistry::register_hinted`] when the expected traffic is
+    /// batched.
     pub fn register(&self, name: &str, a: Csr<f32>) -> Result<Arc<MatrixEntry>> {
         self.register_hinted(name, a, 1)
     }
@@ -158,11 +250,13 @@ impl MatrixRegistry {
     /// [`MatrixRegistry::register`] with an expected SpMM block width:
     /// `block_hint` is the typical concurrent-request count the serving
     /// layer will dispatch per batch (e.g. the server's `max_batch`).
-    /// The Band-k group targets come from the §4.1 heuristic evaluated
-    /// at the block-width-scaled effective density
+    /// Regular matrices take Band-k group targets from the §4.1
+    /// heuristic at the block-width-scaled effective density
     /// (`tuning::csr3_params_multi`), so matrices registered for
     /// batched traffic get the smaller groups their larger per-group
-    /// working set wants.
+    /// working set wants. Irregular matrices (§6: row-nnz variance
+    /// > 10) skip reordering entirely and build the plan's
+    /// skew-tolerant kernel.
     pub fn register_hinted(
         &self,
         name: &str,
@@ -172,45 +266,46 @@ impl MatrixRegistry {
         if a.nrows() != a.ncols() {
             bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
         }
-        let rdensity = a.rdensity();
-        // Band-k with the GPU heuristic's group targets (the same
-        // structure serves both devices — that is the paper's point).
-        let params = csr3_params_multi(Device::Ampere, rdensity, block_hint);
-        let ord = bandk(&a, 3, params.srs.max(2), params.ssrs.max(2), 0xC52D);
-        let k3 = ord.apply(&a);
 
-        // PJRT binding: pad width to the next power of two ≥ max row nnz
-        // (capped: overflow rows are fixed up host-side).
-        let pjrt = if let Some(rt) = &self.runtime {
-            let width = k3
-                .csr()
-                .max_row_nnz()
-                .next_power_of_two()
-                .clamp(8, 32);
-            let padded = k3.to_padded(width);
-            match SpmvExecutor::bind(rt, &padded) {
-                Ok(exe) => Some(exe),
-                Err(e) => {
-                    log::warn!("{name}: no PJRT binding ({e}); CPU only");
-                    None
-                }
+        // -- plan: structure stats → format / reorder / export / costs --
+        let plan = planner::plan_hinted(&a, block_hint);
+
+        // -- build: optional Band-k, then the planned kernel ------------
+        // (`a` moves into the no-reorder arm — shape/nnz live on in
+        // `plan.stats`, so the identity path never copies the matrix)
+        let (ordered, perm) = match plan.reorder {
+            Some(r) => {
+                let ord = bandk(&a, r.k, r.srs, r.ssrs, r.seed);
+                (ord.perm.apply_sym(&a), Some(ord.perm))
             }
-        } else {
-            None
+            None => (a, None),
         };
 
-        // CPU: CSR-2 view with the constant-time SRS over the *same*
-        // Band-k-ordered CSR (shared base arrays — the heterogeneous
-        // format argument).
-        let cpu_k = crate::sparse::CsrK::csr2_uniform(k3.csr().clone(), FIXED_SRS);
+        // -- bind: padded export at the plan's width, when planned ------
+        let pjrt = match (&self.runtime, plan.pjrt_width) {
+            (Some(rt), Some(width)) => {
+                let padded = PaddedCsr::from_csr(&ordered, width);
+                match SpmvExecutor::bind(rt, &padded) {
+                    Ok(exe) => Some(exe),
+                    Err(e) => {
+                        log::warn!("{name}: no PJRT binding ({e}); CPU only");
+                        None
+                    }
+                }
+            }
+            _ => None,
+        };
+
+        let cpu = build_kernel(&plan, ordered, self.pool.clone());
         let entry = Arc::new(MatrixEntry {
             name: name.to_string(),
-            perm: ord.perm.clone(),
-            cpu: Csr2Kernel::new(cpu_k, self.pool.clone()),
+            nrows: plan.stats.nrows,
+            ncols: plan.stats.ncols,
+            nnz: plan.stats.nnz,
+            plan,
+            perm,
+            cpu,
             pjrt,
-            nrows: a.nrows(),
-            ncols: a.ncols(),
-            nnz: a.nnz(),
         });
         self.entries
             .write()
@@ -232,6 +327,15 @@ impl MatrixRegistry {
     /// Registered names.
     pub fn names(&self) -> Vec<String> {
         self.entries.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Observability: one [`MatrixEntry::describe`] line per registered
+    /// matrix, sorted by name.
+    pub fn describe(&self) -> Vec<String> {
+        let entries = self.entries.read().unwrap();
+        let mut names: Vec<&String> = entries.keys().collect();
+        names.sort();
+        names.iter().map(|n| entries[*n].describe()).collect()
     }
 }
 
@@ -256,6 +360,69 @@ mod tests {
         for (u, v) in y.iter().zip(&y_ref) {
             assert!((u - v).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn regular_matrix_builds_reordered_csr2() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let e = reg.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        assert!(e.plan().stats.is_regular());
+        assert!(e.reordered(), "regular matrices take the Band-k path");
+        assert!(e.kernel_name().starts_with("csr2"), "{}", e.kernel_name());
+        assert_eq!(e.route(None), DeviceKind::Cpu, "no runtime ⇒ CPU");
+    }
+
+    #[test]
+    fn irregular_matrix_builds_unreordered_csr5() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
+        let e = reg.register("hubs", a.clone()).unwrap();
+        assert!(!e.plan().stats.is_regular());
+        assert!(!e.reordered(), "irregular plans keep the identity order");
+        assert!(e.kernel_name().starts_with("csr5"), "{}", e.kernel_name());
+
+        // and it still computes the right answer, spmv and spmv_multi
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+        let y = e.spmv(DeviceKind::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+        let ys = e.spmv_multi(DeviceKind::Cpu, &[&x, &x]).unwrap();
+        for yj in &ys {
+            for (u, v) in yj.iter().zip(&y) {
+                assert!((u - v).abs() < 1e-4 * v.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_route_override_wins_even_when_unbound() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        let e = reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        assert_eq!(e.route(Some(DeviceKind::Pjrt)), DeviceKind::Pjrt);
+        // ... and the pinned device then fails loudly instead of
+        // silently running elsewhere
+        assert!(e.spmv(DeviceKind::Pjrt, &vec![1.0; 64]).is_err());
+    }
+
+    #[test]
+    fn describe_reports_plan_and_routing() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        reg.register("zeta", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        reg.register("alpha", gen::power_law::<f32>(600, 8, 1.0, 3)).unwrap();
+        let lines = reg.describe();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("alpha:"), "{}", lines[0]);
+        assert!(lines[0].contains("irregular"), "{}", lines[0]);
+        assert!(lines[1].starts_with("zeta:"), "{}", lines[1]);
+        assert!(lines[1].contains("regular"), "{}", lines[1]);
+        assert!(lines[1].contains("Cpu"), "{}", lines[1]);
     }
 
     #[test]
@@ -287,6 +454,27 @@ mod tests {
         let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
         let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
         assert_eq!(ys.len(), 5);
+        for (x, y) in xs.iter().zip(&ys) {
+            let y1 = e.spmv(DeviceKind::Cpu, x).unwrap();
+            for (u, v) in y.iter().zip(&y1) {
+                assert!((u - v).abs() < 1e-4 * v.abs().max(1.0), "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_execution_on_identity_path_matches_per_request() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::power_law::<f32>(300, 8, 1.0, 0xABCD);
+        let n = a.ncols();
+        let e = reg.register("p", a).unwrap();
+        assert!(!e.reordered());
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|j| (0..n).map(|i| ((i * 5 + j * 7) % 17) as f32 - 8.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
         for (x, y) in xs.iter().zip(&ys) {
             let y1 = e.spmv(DeviceKind::Cpu, x).unwrap();
             for (u, v) in y.iter().zip(&y1) {

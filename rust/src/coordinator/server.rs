@@ -25,15 +25,16 @@ use super::metrics::Metrics;
 use super::registry::{DeviceKind, MatrixRegistry};
 use super::{Request, Response};
 
-/// Server tunables.
+/// Server tunables. Routing carries no knob here: each batch goes to
+/// the cheapest bound device by the matrix's registration-time cost
+/// estimates, and requests can pin a device explicitly
+/// ([`Server::submit_on`]).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Requests per batch before forced dispatch.
     pub max_batch: usize,
     /// Max queueing delay before a partial batch dispatches.
     pub max_delay: Duration,
-    /// Prefer the PJRT device when a matrix supports it.
-    pub prefer_pjrt: bool,
 }
 
 impl Default for ServerConfig {
@@ -41,7 +42,6 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 8,
             max_delay: Duration::from_micros(200),
-            prefer_pjrt: false,
         }
     }
 }
@@ -118,13 +118,27 @@ impl Server {
     }
 
     /// Submit asynchronously; the response arrives on the returned
-    /// channel. Returns the assigned request id.
+    /// channel. Returns the assigned request id. Routing is cost-based
+    /// (the registration plan's estimates); use [`Server::submit_on`]
+    /// to pin a device.
     pub fn submit(&self, matrix: &str, x: Vec<f32>) -> (u64, Receiver<Response>) {
+        self.submit_on(matrix, x, None)
+    }
+
+    /// [`Server::submit`] with an explicit device override: `Some(d)`
+    /// pins execution to `d` (the response carries an error if the
+    /// matrix has no binding there); `None` routes by cost.
+    pub fn submit_on(
+        &self,
+        matrix: &str,
+        x: Vec<f32>,
+        device: Option<DeviceKind>,
+    ) -> (u64, Receiver<Response>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.submit_tx
             .send(LeaderMsg::Submit(
-                Request { id, matrix: matrix.to_string(), x },
+                Request { id, matrix: matrix.to_string(), x, device },
                 tx,
             ))
             .expect("leader alive");
@@ -134,6 +148,12 @@ impl Server {
     /// Submit and wait.
     pub fn call(&self, matrix: &str, x: Vec<f32>) -> Response {
         let (_, rx) = self.submit(matrix, x);
+        rx.recv().expect("response")
+    }
+
+    /// Submit with a device override and wait.
+    pub fn call_on(&self, matrix: &str, x: Vec<f32>, device: Option<DeviceKind>) -> Response {
+        let (_, rx) = self.submit_on(matrix, x, device);
         rx.recv().expect("response")
     }
 
@@ -162,9 +182,14 @@ fn leader_loop(
         std::collections::HashMap::new();
     let route = |batch: Batch,
                  responders: &mut std::collections::HashMap<u64, Sender<Response>>| {
+        // Cost-based device selection off the registration plan; an
+        // explicit per-request override (shared by the whole batch —
+        // the override is part of the batching key) wins outright.
+        // Unknown matrices go to the CPU worker, which reports the
+        // lookup error per request.
         let device = match registry.get(&batch.matrix) {
-            Ok(e) if config.prefer_pjrt && e.supports(DeviceKind::Pjrt) => DeviceKind::Pjrt,
-            _ => DeviceKind::Cpu,
+            Ok(e) => e.route(batch.device),
+            Err(_) => DeviceKind::Cpu,
         };
         let resp: Vec<Sender<Response>> = batch
             .requests
@@ -282,7 +307,7 @@ mod tests {
     use crate::sparse::gen;
     use crate::util::ThreadPool;
 
-    fn test_server(prefer_pjrt: bool) -> Server {
+    fn test_server() -> Server {
         let pool = Arc::new(ThreadPool::new(2));
         let registry = Arc::new(MatrixRegistry::new(pool, None));
         registry
@@ -293,14 +318,13 @@ mod tests {
             ServerConfig {
                 max_batch: 4,
                 max_delay: Duration::from_micros(100),
-                prefer_pjrt,
             },
         )
     }
 
     #[test]
     fn serves_correct_results() {
-        let server = test_server(false);
+        let server = test_server();
         let a = gen::grid2d_5pt::<f32>(16, 16);
         let x: Vec<f32> = (0..256).map(|i| (i % 5) as f32).collect();
         let resp = server.call("grid", x.clone());
@@ -315,7 +339,7 @@ mod tests {
 
     #[test]
     fn batches_form_under_load() {
-        let server = test_server(false);
+        let server = test_server();
         let x: Vec<f32> = vec![1.0; 256];
         let rxs: Vec<_> = (0..16).map(|_| server.submit("grid", x.clone()).1).collect();
         for rx in rxs {
@@ -329,8 +353,55 @@ mod tests {
     }
 
     #[test]
+    fn default_routing_is_cost_based_cpu_without_runtime() {
+        let server = test_server();
+        let resp = server.call("grid", vec![1.0; 256]);
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.device, DeviceKind::Cpu, "only bound device must win");
+        server.shutdown();
+    }
+
+    #[test]
+    fn explicit_override_pins_device_and_fails_loudly_when_unbound() {
+        let server = test_server();
+        // pinning to the bound device works
+        let resp = server.call_on("grid", vec![1.0; 256], Some(DeviceKind::Cpu));
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.device, DeviceKind::Cpu);
+        // pinning to an unbound device errors instead of downgrading
+        let resp = server.call_on("grid", vec![1.0; 256], Some(DeviceKind::Pjrt));
+        let err = resp.result.unwrap_err();
+        assert!(err.contains("no PJRT binding"), "{err}");
+        assert_eq!(resp.device, DeviceKind::Pjrt);
+        server.shutdown();
+    }
+
+    #[test]
+    fn irregular_matrix_serves_through_planned_kernel() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let registry = Arc::new(MatrixRegistry::new(pool, None));
+        let a = gen::power_law::<f32>(400, 8, 1.0, 0x1D);
+        let entry = registry.register("hubs", a.clone()).unwrap();
+        assert!(
+            !entry.kernel_name().starts_with("csr2"),
+            "planner must not pick CSR-2 for {}",
+            entry.describe()
+        );
+        let server = Server::start(registry, ServerConfig::default());
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 3) % 7) as f32 - 3.0).collect();
+        let resp = server.call("hubs", x.clone());
+        let y = resp.result.unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
     fn unknown_matrix_reports_error() {
-        let server = test_server(false);
+        let server = test_server();
         let resp = server.call("missing", vec![1.0; 4]);
         assert!(resp.result.is_err());
         server.shutdown();
@@ -338,7 +409,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_pending() {
-        let server = test_server(false);
+        let server = test_server();
         let x: Vec<f32> = vec![1.0; 256];
         // single request waits for the delay flush; shutdown must not lose it
         let (_, rx) = server.submit("grid", x);
@@ -348,7 +419,7 @@ mod tests {
 
     #[test]
     fn batched_dispatch_matches_reference_per_request() {
-        let server = test_server(false);
+        let server = test_server();
         let a = gen::grid2d_5pt::<f32>(16, 16);
         // distinct vectors so a block-path indexing bug cannot hide
         let xs: Vec<Vec<f32>> = (0..12)
@@ -368,7 +439,7 @@ mod tests {
 
     #[test]
     fn malformed_request_fails_alone_not_its_batchmates() {
-        let server = test_server(false);
+        let server = test_server();
         let good: Vec<f32> = vec![1.0; 256];
         let bad: Vec<f32> = vec![1.0; 3];
         // fill one batch (max_batch = 4) with a bad vector in the middle

@@ -1,0 +1,79 @@
+//! Kernel factory — the *build* stage of the coordinator's
+//! plan → build → bind pipeline.
+//!
+//! The planner ([`crate::tuning::planner`]) decides *which* format fits
+//! a matrix's structure; this factory turns that decision plus the
+//! (possibly Band-k-reordered) CSR arrays into a ready-to-run
+//! `Box<dyn SpMv<T>>`. Keeping construction behind one function means
+//! the registry never names a concrete kernel type again — adding a
+//! format to the serving stack is a planner branch plus a match arm
+//! here.
+
+use std::sync::Arc;
+
+use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SpMv};
+use crate::sparse::{Csr, Csr5, CsrK, Scalar};
+use crate::tuning::planner::{FormatPlan, PlannedKernel};
+use crate::util::ThreadPool;
+
+/// Construct the kernel a plan calls for over `a` — which must already
+/// be in the plan's row order (Band-k-applied when `plan.reorder` is
+/// set, the native labeling otherwise; the *caller* owns the
+/// permutation bookkeeping).
+pub fn build_kernel<T: Scalar>(
+    plan: &FormatPlan,
+    a: Csr<T>,
+    pool: Arc<ThreadPool>,
+) -> Box<dyn SpMv<T>> {
+    match plan.kernel {
+        PlannedKernel::Csr2 { srs } => {
+            Box::new(Csr2Kernel::new(CsrK::csr2_uniform(a, srs), pool))
+        }
+        PlannedKernel::Csr3 { ssrs, srs } => {
+            Box::new(Csr3Kernel::new(CsrK::csr3_uniform(a, ssrs, srs), pool))
+        }
+        PlannedKernel::Csr5 { omega, sigma } => {
+            let nnz = a.nnz();
+            Box::new(Csr5Kernel::new(Csr5::from_csr(&a, omega, sigma), nnz, pool))
+        }
+        PlannedKernel::CsrParallel => Box::new(CsrParallel::new(a, pool)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{assert_kernel_matches, assert_spmm_matches};
+    use crate::sparse::gen;
+    use crate::tuning::planner;
+
+    #[test]
+    fn factory_builds_what_the_plan_says() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = gen::grid2d_5pt::<f64>(20, 20);
+        let k = build_kernel(&planner::plan(&reg), reg.clone(), pool.clone());
+        assert!(k.name().starts_with("csr2"), "{}", k.name());
+
+        let irr = gen::power_law::<f64>(600, 8, 1.0, 0x5EED);
+        let k = build_kernel(&planner::plan(&irr), irr.clone(), pool.clone());
+        assert!(k.name().starts_with("csr5"), "{}", k.name());
+    }
+
+    #[test]
+    fn every_planned_kernel_matches_reference() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let a = gen::grid3d_7pt::<f64>(6, 6, 6);
+        let mut plan = planner::plan(&a);
+        for kernel in [
+            PlannedKernel::Csr2 { srs: 17 },
+            PlannedKernel::Csr3 { ssrs: 4, srs: 9 },
+            PlannedKernel::Csr5 { omega: 4, sigma: 12 },
+            PlannedKernel::CsrParallel,
+        ] {
+            plan.kernel = kernel;
+            let k = build_kernel(&plan, a.clone(), pool.clone());
+            assert_kernel_matches(&a, k.as_ref(), 1e-12);
+            assert_spmm_matches(k.as_ref(), 4, 1e-12);
+        }
+    }
+}

@@ -7,6 +7,9 @@
 //! * [`coo`], [`ell`], [`bcsr`] — related-work baselines.
 //! * [`csr5`] — CSR5 tile kernel with parallel segmented sum and
 //!   sequential carry calibration.
+//! * [`factory`] — [`build_kernel`]: constructs whichever of the above
+//!   a [`FormatPlan`](crate::tuning::planner::FormatPlan) calls for,
+//!   as a `Box<dyn SpMv>` (the coordinator's *build* stage).
 //!
 //! All parallel kernels share the crate's persistent
 //! [`ThreadPool`](crate::util::ThreadPool) and write disjoint row ranges,
@@ -41,6 +44,7 @@ pub mod csr;
 pub mod csr5;
 pub mod csrk;
 pub mod ell;
+pub mod factory;
 
 pub use bcsr::BcsrKernel;
 pub use coo::CooKernel;
@@ -48,6 +52,7 @@ pub use csr::{CsrParallel, CsrSerial};
 pub use csr5::Csr5Kernel;
 pub use csrk::{Csr2Kernel, Csr3Kernel};
 pub use ell::EllKernel;
+pub use factory::build_kernel;
 
 use crate::sparse::Scalar;
 

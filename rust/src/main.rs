@@ -10,12 +10,12 @@
 
 use std::sync::Arc;
 
-use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
+use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::kernels::Csr2Kernel;
 use csrk::runtime::Runtime;
 use csrk::solver::cg_solve;
 use csrk::sparse::{suite, Csr, CsrK, SuiteScale};
-use csrk::tuning::{csr3_params, Device};
+use csrk::tuning::{csr3_params, planner, Device};
 use csrk::util::cli::Args;
 use csrk::util::table::{f, sep, Table};
 use csrk::util::ThreadPool;
@@ -85,6 +85,8 @@ fn cmd_info(args: &Args) {
         csrk::analysis::overhead_csr3(&a, Device::Volta) * 100.0,
         csrk::analysis::overhead_combined(&a, Device::Volta) * 100.0
     );
+    println!("  variance    {:.2}", a.row_nnz_variance());
+    println!("  plan        {}", planner::plan(&a).summary());
 }
 
 fn cmd_tune(args: &Args) {
@@ -135,15 +137,28 @@ fn cmd_serve(args: &Args) {
     let registry = Arc::new(MatrixRegistry::new(pool, runtime));
     let (name, a) = load(args);
     let ncols = a.ncols();
-    registry.register(&name, a).expect("register");
-    let server = Server::start(
-        registry,
-        ServerConfig { prefer_pjrt: args.has_flag("pjrt"), ..Default::default() },
-    );
+    let entry = registry.register(&name, a).expect("register");
+    println!("{}", entry.describe());
+    let server = Server::start(registry, ServerConfig::default());
+    // `--pjrt` pins every request to the PJRT path; the default routes
+    // each batch to the plan's cheapest bound device. Pinned requests
+    // fail rather than fall back, so refuse the flag up front when the
+    // matrix bound no PJRT bucket.
+    let device = if args.has_flag("pjrt") {
+        if !entry.supports(DeviceKind::Pjrt) {
+            eprintln!("--pjrt requested but {name} has no PJRT binding");
+            std::process::exit(1);
+        }
+        Some(DeviceKind::Pjrt)
+    } else {
+        None
+    };
     let requests: usize = args.get("requests", 1000);
     let x = vec![1.0f32; ncols];
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..requests).map(|_| server.submit(&name, x.clone()).1).collect();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| server.submit_on(&name, x.clone(), device).1)
+        .collect();
     for rx in rxs {
         rx.recv().unwrap().result.expect("spmv ok");
     }

@@ -22,6 +22,7 @@ use super::coarsen::{coarsen_to, Coarsening};
 use super::graph::Graph;
 use super::perm::Permutation;
 use super::rcm::rcm_weighted;
+use crate::sparse::csrk::uniform_groups;
 use crate::sparse::{Csr, CsrK, Scalar};
 use crate::util::Rng;
 
@@ -111,6 +112,8 @@ pub fn bandk<T: Scalar>(a: &Csr<T>, k: usize, srs: usize, ssrs: usize, seed: u64
     // tuned sizes (full lanes — the geometry the §4 block-dims table
     // assumes). The HEM cluster boundaries themselves stay available via
     // `boundaries_from_groups` if a caller wants cluster-aligned groups.
+    // `uniform_groups` is the shared `sparse::csrk` helper, so the
+    // zero-group empty-matrix contract is identical on both paths.
     let sr_ptr = uniform_groups(n, srs);
     let ssr_ptr = if k == 3 {
         Some(uniform_groups(sr_ptr.len() - 1, ssrs))
@@ -123,19 +126,6 @@ pub fn bandk<T: Scalar>(a: &Csr<T>, k: usize, srs: usize, ssrs: usize, seed: u64
     }
 
     BandKOrdering { perm: row_perm, sr_ptr, ssr_ptr }
-}
-
-/// `0, g, 2g, ..., n` boundaries. `n == 0` yields `[0]` — zero groups
-/// — matching `sparse::csrk::uniform_groups` so both construction
-/// paths agree that an empty matrix has no super-rows.
-fn uniform_groups(n: usize, g: usize) -> Vec<u32> {
-    let mut ptr = vec![0u32];
-    let mut i = 0usize;
-    while i < n {
-        i = (i + g).min(n);
-        ptr.push(i as u32);
-    }
-    ptr
 }
 
 /// Given an ordering of fine vertices and their (contiguous-in-order)

@@ -104,6 +104,25 @@ impl<T: Scalar> Csr<T> {
         (0..self.nrows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
     }
 
+    /// Population variance of the per-row nonzero counts — the paper's
+    /// §6 regularity criterion: CSR-k wins on *regular* matrices
+    /// (variance ≤ 10); above that, formats built for irregular
+    /// structure (CSR5, nnz-balanced parallel CSR) are the right call.
+    /// An empty matrix reports 0 (trivially regular).
+    pub fn row_nnz_variance(&self) -> f64 {
+        if self.nrows == 0 {
+            return 0.0;
+        }
+        let mean = self.nnz() as f64 / self.nrows as f64;
+        let ss: f64 = (0..self.nrows)
+            .map(|i| {
+                let d = self.row_nnz(i) as f64 - mean;
+                d * d
+            })
+            .sum();
+        ss / self.nrows as f64
+    }
+
     /// Matrix bandwidth: `max |i - j|` over stored entries.
     pub fn bandwidth(&self) -> usize {
         let mut bw = 0usize;
@@ -256,6 +275,20 @@ mod tests {
         assert_eq!(a.row_nnz(1), 0);
         assert_eq!(a.max_row_nnz(), 2);
         assert!((a.rdensity() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_nnz_variance_cases() {
+        // small(): row nnz {2, 0, 2}, mean 4/3 ⇒ variance
+        // ((2/3)² + (4/3)² + (2/3)²) / 3 = 8/9.
+        let a = small();
+        assert!((a.row_nnz_variance() - 8.0 / 9.0).abs() < 1e-12);
+        // perfectly uniform rows ⇒ zero variance
+        let u = Csr::from_parts(2, 2, vec![0, 2, 4], vec![0, 1, 0, 1], vec![1.0f64; 4]);
+        assert_eq!(u.row_nnz_variance(), 0.0);
+        // empty matrix is trivially regular
+        let e = Csr::<f64>::from_parts(0, 0, vec![0], vec![], vec![]);
+        assert_eq!(e.row_nnz_variance(), 0.0);
     }
 
     #[test]

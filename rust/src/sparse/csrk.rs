@@ -136,35 +136,7 @@ impl<T: Scalar> CsrK<T> {
     /// (a COO remainder the coordinator applies on the host); a good
     /// bucket width makes this empty for the whole suite.
     pub fn to_padded(&self, width: usize) -> PaddedCsr<T> {
-        let n = self.csr.nrows();
-        let pad_col = self.csr.ncols() as u32;
-        let mut cols = vec![pad_col; n * width];
-        let mut vals = vec![T::zero(); n * width];
-        let mut overflow = Vec::new();
-        let mut stored = 0usize;
-        for i in 0..n {
-            let (rc, rv) = self.csr.row(i);
-            let take = rc.len().min(width);
-            cols[i * width..i * width + take].copy_from_slice(&rc[..take]);
-            vals[i * width..i * width + take].copy_from_slice(&rv[..take]);
-            stored += take;
-            for k in take..rc.len() {
-                overflow.push((i as u32, rc[k], rv[k]));
-            }
-        }
-        PaddedCsr {
-            nrows: n,
-            ncols: self.csr.ncols(),
-            width,
-            cols,
-            vals,
-            overflow,
-            padding_ratio: if n * width == 0 {
-                0.0
-            } else {
-                1.0 - stored as f64 / (n * width) as f64
-            },
-        }
+        PaddedCsr::from_csr(&self.csr, width)
     }
 }
 
@@ -190,6 +162,42 @@ pub struct PaddedCsr<T> {
 }
 
 impl<T: Scalar> PaddedCsr<T> {
+    /// Export a plain CSR matrix to the padded layout. The padded export
+    /// is a property of the base CSR arrays alone (the group pointers
+    /// play no role), so the planner can decide the width and the
+    /// coordinator export it without constructing a CSR-k wrapper.
+    pub fn from_csr(csr: &Csr<T>, width: usize) -> PaddedCsr<T> {
+        let n = csr.nrows();
+        let pad_col = csr.ncols() as u32;
+        let mut cols = vec![pad_col; n * width];
+        let mut vals = vec![T::zero(); n * width];
+        let mut overflow = Vec::new();
+        let mut stored = 0usize;
+        for i in 0..n {
+            let (rc, rv) = csr.row(i);
+            let take = rc.len().min(width);
+            cols[i * width..i * width + take].copy_from_slice(&rc[..take]);
+            vals[i * width..i * width + take].copy_from_slice(&rv[..take]);
+            stored += take;
+            for k in take..rc.len() {
+                overflow.push((i as u32, rc[k], rv[k]));
+            }
+        }
+        PaddedCsr {
+            nrows: n,
+            ncols: csr.ncols(),
+            width,
+            cols,
+            vals,
+            overflow,
+            padding_ratio: if n * width == 0 {
+                0.0
+            } else {
+                1.0 - stored as f64 / (n * width) as f64
+            },
+        }
+    }
+
     /// Reference SpMV over the padded layout (oracle for the Pallas
     /// kernel and the PJRT path), including the overflow fix-up.
     pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
@@ -214,7 +222,12 @@ impl<T: Scalar> PaddedCsr<T> {
 /// groups — so empty matrices report `num_srs() == 0` instead of one
 /// phantom empty super-row (and the group-parallel kernels dispatch
 /// nothing).
-fn uniform_groups(n: usize, g: usize) -> Vec<u32> {
+///
+/// This is the **single** uniform-chunking helper in the crate: both
+/// the CSR-k constructors here and the Band-k boundary emission
+/// (`reorder::bandk`) call it, so the zero-group empty-matrix contract
+/// cannot diverge between the two construction paths.
+pub(crate) fn uniform_groups(n: usize, g: usize) -> Vec<u32> {
     let mut ptr = Vec::with_capacity(n / g + 2);
     let mut i = 0usize;
     ptr.push(0u32);

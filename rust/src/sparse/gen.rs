@@ -20,6 +20,12 @@
 //! | [`grid3d_7pt`] | thermal2 (6.98) | 3D Laplacian |
 //! | [`grid3d_stencil`] | brack2 / wave / packing (11.7–16.3) | 3D meshes |
 //! | [`fem3d`] | Emilia_923 (43.7) / bmwcra_1 (71.5) | FEM, 3×3 blocks |
+//! | [`power_law`] | web / social graphs (outside Table 2) | scale-free, irregular |
+//!
+//! [`power_law`] is deliberately *outside* the paper's suite: every
+//! Table 2 matrix is regular (row-nnz variance ≤ 10, the §6 criterion),
+//! and the planner's irregular branch needs a generator that violates
+//! it.
 //!
 //! Matrices whose SuiteSparse "natural" labeling is unbanded (the graph
 //! family) are emitted with a deterministic scrambled labeling
@@ -443,6 +449,59 @@ pub fn fem3d<T: Scalar>(
     coo.to_csr()
 }
 
+/// Scale-free ("power-law") matrix: row nonzero counts follow a
+/// Zipf-like rank distribution `deg(rank) ∝ (rank + 1)^(−skew)`,
+/// scaled so the average row holds ≈ `avg_row_nnz` entries, with ranks
+/// assigned to rows at random. This is the web-graph / social-network
+/// structural class the paper's suite deliberately *excludes* (§6
+/// limits CSR-k's claim to row-nnz variance ≤ 10): a handful of hub
+/// rows hold O(n) entries while the long tail holds one or two, so the
+/// row-nnz variance is far above the regularity threshold and the
+/// planner must take its irregular branch.
+///
+/// Deterministic for a fixed seed (`util::rng`); duplicate samples are
+/// summed by the COO→CSR compaction, so hub rows saturate below `n`.
+pub fn power_law<T: Scalar>(n: usize, avg_row_nnz: usize, skew: f64, seed: u64) -> Csr<T> {
+    assert!(n > 0, "power_law needs at least one row");
+    assert!(avg_row_nnz >= 1, "average row nnz must be positive");
+    assert!(skew > 0.0, "skew must be positive");
+    let mut rng = Rng::new(seed);
+    // rank → degree: weight (rank+1)^-skew normalized to n·avg total.
+    let weights: Vec<f64> = (0..n).map(|r| ((r + 1) as f64).powf(-skew)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let total = (n * avg_row_nnz) as f64;
+    // scatter the ranks so the hubs are not the first rows
+    let mut rank_of_row: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut rank_of_row);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let w = weights[rank_of_row[i] as usize];
+        let deg = ((total * w / wsum).round() as usize).clamp(1, n);
+        for _ in 0..deg {
+            coo.push(i, rng.usize_in(0, n), T::from(rng.f64_in(-1.0, 1.0)).unwrap());
+        }
+    }
+    coo.to_csr()
+}
+
+/// Rows alternating between `lo` and `hi` nonzeros (row `i` holds
+/// entries in columns `i..i+k mod n` — a wrapped band). For even `n`
+/// the row-nnz variance is *exactly* `((hi − lo) / 2)²`, which makes
+/// this the fixture for straddling the planner's §6 regularity
+/// boundary (variance ≤ 10): `lo/hi = 5/11` ⇒ variance 9 (regular),
+/// `4/12` ⇒ 16 (irregular). Fully deterministic, no RNG.
+pub fn alternating_rows<T: Scalar>(n: usize, lo: usize, hi: usize) -> Csr<T> {
+    assert!(n > 0 && lo >= 1 && hi >= lo && hi <= n);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let k = if i % 2 == 0 { lo } else { hi };
+        for j in 0..k {
+            coo.push(i, (i + j) % n, T::from(0.5 + ((i * 3 + j) % 5) as f64).unwrap());
+        }
+    }
+    coo.to_csr()
+}
+
 /// Relabel a matrix's rows/columns with a deterministic random
 /// permutation — simulates the unbanded "natural" labeling SuiteSparse
 /// graph matrices arrive with, giving the reordering experiments real
@@ -543,6 +602,49 @@ mod tests {
             "rdensity {}",
             a.rdensity()
         );
+    }
+
+    #[test]
+    fn alternating_rows_variance_is_exact() {
+        let a = alternating_rows::<f64>(64, 5, 11);
+        assert!((a.row_nnz_variance() - 9.0).abs() < 1e-12);
+        let b = alternating_rows::<f64>(64, 4, 12);
+        assert!((b.row_nnz_variance() - 16.0).abs() < 1e-12);
+        assert_eq!(a.nnz(), 32 * 5 + 32 * 11);
+    }
+
+    #[test]
+    fn power_law_is_irregular_and_deterministic() {
+        let a = power_law::<f64>(300, 8, 1.0, 0x5EED);
+        assert_eq!(a.nrows(), 300);
+        // every row keeps at least one entry
+        assert!((0..a.nrows()).all(|i| a.row_nnz(i) >= 1));
+        // density lands near the target (collisions on hub rows merge,
+        // so allow generous slack below)
+        assert!(
+            a.rdensity() > 4.0 && a.rdensity() < 10.0,
+            "rdensity {}",
+            a.rdensity()
+        );
+        // far beyond the §6 regularity criterion (variance ≤ 10)
+        assert!(
+            a.row_nnz_variance() > 50.0,
+            "variance {}",
+            a.row_nnz_variance()
+        );
+        // hub rows dwarf the mean
+        assert!(
+            a.max_row_nnz() as f64 > 8.0 * a.rdensity(),
+            "max row nnz {} vs rdensity {}",
+            a.max_row_nnz(),
+            a.rdensity()
+        );
+        // bit-for-bit deterministic for a fixed seed
+        let b = power_law::<f64>(300, 8, 1.0, 0x5EED);
+        assert_eq!(a, b);
+        // and a different seed gives a different pattern
+        let c = power_law::<f64>(300, 8, 1.0, 0x5EEE);
+        assert_ne!(a.col_idx(), c.col_idx());
     }
 
     #[test]

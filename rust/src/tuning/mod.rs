@@ -20,12 +20,20 @@
 //!   paper derived its Volta/Ampere numbers.
 //! * [`cpu`] — CPU-side tuning: per-matrix sweep and the constant-time
 //!   `SRS = 96` fallback (§4.2 / Fig 11).
+//! * [`planner`] — the *plan* stage of the coordinator's
+//!   plan → build → bind pipeline: structure stats (row-nnz variance,
+//!   the §6 regularity criterion), the regular/irregular format
+//!   decision (Band-k + CSR-k vs CSR5 / parallel CSR), the padded
+//!   PJRT export width, and roofline-style per-device cost estimates
+//!   the server routes with.
 
 pub mod autotune;
 pub mod cpu;
 pub mod heuristic;
 pub mod model;
+pub mod planner;
 
 pub use heuristic::{
     block_dims, csr3_params, csr3_params_multi, effective_rdensity, Device, TuneParams,
 };
+pub use planner::{DeviceKind, FormatPlan, MatrixStats, PlannedKernel, ReorderPlan};

@@ -1,5 +1,6 @@
 //! Coordinator integration: registration → serving → correctness under
-//! concurrent load, with and without the PJRT path.
+//! concurrent load, with and without the PJRT path, through the
+//! plan → build → bind pipeline's cost-based routing.
 
 use std::sync::Arc;
 
@@ -12,17 +13,24 @@ use csrk::util::ThreadPool;
 fn serves_mixed_matrices_correctly() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = Arc::new(MatrixRegistry::new(pool, None));
-    let names = ["roadNet-TX", "ecology1"];
+    // two regular suite matrices (Band-k + CSR-2 plans) plus one
+    // irregular power-law matrix (CSR5 plan, identity permutation) —
+    // the planner must route all three correctly side by side
+    let names = ["roadNet-TX", "ecology1", "power-law"];
     let mut mats = Vec::new();
-    for n in names {
+    for n in &names[..2] {
         let a = suite::by_name(n).unwrap().build::<f32>(SuiteScale::Tiny);
         registry.register(n, a.clone()).unwrap();
         mats.push(a);
     }
+    let p = gen::power_law::<f32>(500, 8, 1.0, 0xF00D);
+    let e = registry.register("power-law", p.clone()).unwrap();
+    assert!(!e.kernel_name().starts_with("csr2"), "{}", e.describe());
+    mats.push(p);
     let server = Server::start(registry, ServerConfig::default());
     let mut pending = Vec::new();
-    for round in 0..20 {
-        let i = round % 2;
+    for round in 0..30 {
+        let i = round % 3;
         let a = &mats[i];
         let x: Vec<f32> = (0..a.ncols()).map(|j| ((j + round) % 9) as f32).collect();
         pending.push((i, x.clone(), server.submit(names[i], x).1));
@@ -58,12 +66,11 @@ fn pjrt_path_serves_when_artifacts_present() {
     let e = registry.register("g", a.clone()).unwrap();
     assert!(e.supports(DeviceKind::Pjrt), "grid must bind a PJRT bucket");
 
-    let server = Server::start(
-        registry,
-        ServerConfig { prefer_pjrt: true, ..Default::default() },
-    );
+    let server = Server::start(registry, ServerConfig::default());
     let x: Vec<f32> = (0..a.ncols()).map(|i| (i % 5) as f32 - 2.0).collect();
-    let resp = server.call("g", x.clone());
+    // pin the request to the PJRT path (the cost model is free to
+    // prefer CPU for a matrix this small; the override must win)
+    let resp = server.call_on("g", x.clone(), Some(DeviceKind::Pjrt));
     assert_eq!(resp.device, DeviceKind::Pjrt);
     let y = resp.result.unwrap();
     let mut y_ref = vec![0f32; a.nrows()];

@@ -97,12 +97,14 @@ fn random_nonsym<T: Scalar>(n: usize, seed: u64) -> Csr<T> {
 }
 
 /// The conformance matrix table: structured grid, FEM blocks, random
-/// non-symmetric.
+/// non-symmetric, and the planner's irregular class (power-law hubs —
+/// the structure CSR5's segmented sum exists for).
 fn conformance_cases<T: Scalar>() -> Vec<(&'static str, Csr<T>)> {
     vec![
         ("grid2d_5pt(18x15)", gen::grid2d_5pt(18, 15)),
         ("fem3d(3x3x3,dof3)", gen::fem3d(3, 3, 3, 3, gen::OFFSETS_14, 2)),
         ("random_nonsym(97)", random_nonsym(97, 0xC0FFEE)),
+        ("power_law(120)", gen::power_law(120, 6, 1.0, 0x5EED)),
     ]
 }
 

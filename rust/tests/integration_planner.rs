@@ -1,0 +1,171 @@
+//! Planner integration: the plan → build → bind pipeline end to end.
+//!
+//! Covers the regularity decision at the §6 variance-10 boundary, the
+//! no-reorder (identity-permutation) path irregular plans take, the
+//! CSR5-planned entry against the CSR reference through both `spmv`
+//! and `spmv_multi`, and the server's cost-based routing with the
+//! per-request device override.
+
+use std::sync::Arc;
+
+use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
+use csrk::sparse::{gen, Csr};
+use csrk::tuning::planner::{self, PlannedKernel, REGULARITY_VARIANCE_MAX};
+use csrk::tuning::{csr3_params_multi, Device};
+use csrk::util::ThreadPool;
+
+#[test]
+fn plans_straddling_the_variance_boundary_diverge() {
+    // variance 9 ≤ 10: the paper's regular path (Band-k + CSR-2)
+    let reg = gen::alternating_rows::<f32>(64, 5, 11);
+    assert!(reg.row_nnz_variance() <= REGULARITY_VARIANCE_MAX);
+    let p = planner::plan(&reg);
+    assert!(p.reorder.is_some());
+    assert!(matches!(p.kernel, PlannedKernel::Csr2 { .. }));
+    assert!(p.pjrt_width.is_some());
+
+    // variance 16 > 10: irregular — no reorder, no padded export
+    let irr = gen::alternating_rows::<f32>(64, 4, 12);
+    assert!(irr.row_nnz_variance() > REGULARITY_VARIANCE_MAX);
+    let p = planner::plan(&irr);
+    assert!(p.reorder.is_none());
+    assert!(!matches!(p.kernel, PlannedKernel::Csr2 { .. }));
+    assert!(p.pjrt_width.is_none());
+}
+
+#[test]
+fn regular_plan_keeps_the_paper_heuristic_parameters() {
+    let a = gen::grid2d_5pt::<f32>(24, 24);
+    for hint in [1usize, 8, 16] {
+        let p = planner::plan_hinted(&a, hint);
+        let expect = csr3_params_multi(Device::Ampere, a.rdensity(), hint);
+        let r = p.reorder.expect("regular matrix must reorder");
+        assert_eq!(
+            (r.k, r.srs, r.ssrs),
+            (3, expect.srs.max(2), expect.ssrs.max(2)),
+            "hint {hint}: Band-k targets must be the unchanged §4.1 values"
+        );
+    }
+}
+
+#[test]
+fn irregular_registration_takes_the_identity_path() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = MatrixRegistry::new(pool, None);
+    let a = gen::power_law::<f32>(700, 8, 1.0, 0xD1CE);
+    let e = registry.register("hubs", a).unwrap();
+    assert!(!e.reordered(), "irregular plans must keep the native labeling");
+    assert!(e.plan().reorder.is_none());
+    assert!(
+        e.kernel_name().starts_with("csr5"),
+        "expected a CSR5 kernel, got {}",
+        e.kernel_name()
+    );
+}
+
+#[test]
+fn csr5_planned_entry_matches_reference_spmv_and_spmv_multi() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let registry = MatrixRegistry::new(pool, None);
+    let a = gen::power_law::<f32>(700, 8, 1.0, 0x5EED);
+    let e = registry.register("hubs", a.clone()).unwrap();
+    assert!(e.kernel_name().starts_with("csr5"), "{}", e.kernel_name());
+
+    let n = a.nrows();
+    let xs: Vec<Vec<f32>> = (0..6)
+        .map(|j| (0..n).map(|i| ((i * 11 + j * 5 + 1) % 19) as f32 / 19.0 - 0.5).collect())
+        .collect();
+    // spmv, one vector at a time
+    for x in &xs {
+        let y = e.spmv(DeviceKind::Cpu, x).unwrap();
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+    // spmv_multi, the whole block at once
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
+    for (x, y) in xs.iter().zip(&ys) {
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+}
+
+/// The acceptance path: a regular and an irregular matrix served side
+/// by side through the server's cost-based routing, batched (so
+/// `spmv_multi` runs) and unbatched, all matching the reference.
+#[test]
+fn cost_based_routing_serves_both_structure_classes() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = Arc::new(MatrixRegistry::new(pool, None));
+    let reg_mat = gen::grid2d_5pt::<f32>(20, 20);
+    let irr_mat = gen::power_law::<f32>(500, 8, 1.0, 0xF00D);
+    let e_reg = registry.register("grid", reg_mat.clone()).unwrap();
+    let e_irr = registry.register("hubs", irr_mat.clone()).unwrap();
+    assert!(e_reg.kernel_name().starts_with("csr2"), "{}", e_reg.describe());
+    assert!(!e_irr.kernel_name().starts_with("csr2"), "{}", e_irr.describe());
+
+    let server = Server::start(
+        registry,
+        ServerConfig { max_batch: 4, ..Default::default() },
+    );
+    let cases: Vec<(&str, &Csr<f32>)> = vec![("grid", &reg_mat), ("hubs", &irr_mat)];
+    // enough submissions per matrix to fill several max_batch=4 blocks
+    let mut pending = Vec::new();
+    for round in 0..12 {
+        for &(name, a) in &cases {
+            let x: Vec<f32> = (0..a.ncols())
+                .map(|i| ((i * 3 + round * 7) % 13) as f32 - 6.0)
+                .collect();
+            pending.push((a, x.clone(), server.submit(name, x).1));
+        }
+    }
+    for (a, x, rx) in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.device, DeviceKind::Cpu, "no runtime ⇒ CPU is cheapest bound");
+        let y = resp.result.unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn per_request_override_survives_batching() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = Arc::new(MatrixRegistry::new(pool, None));
+    registry.register("grid", gen::grid2d_5pt::<f32>(10, 10)).unwrap();
+    let server = Server::start(
+        registry,
+        ServerConfig { max_batch: 4, ..Default::default() },
+    );
+    let x = vec![1.0f32; 100];
+    // interleave unrouted requests with requests pinned to the unbound
+    // PJRT path: the pinned ones must all fail with the binding error,
+    // the unrouted ones must all succeed — no cross-contamination
+    let mut oks = Vec::new();
+    let mut errs = Vec::new();
+    for _ in 0..6 {
+        oks.push(server.submit_on("grid", x.clone(), None).1);
+        errs.push(server.submit_on("grid", x.clone(), Some(DeviceKind::Pjrt)).1);
+    }
+    for rx in oks {
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.device, DeviceKind::Cpu);
+    }
+    for rx in errs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.device, DeviceKind::Pjrt);
+        assert!(resp.result.unwrap_err().contains("no PJRT binding"));
+    }
+    server.shutdown();
+}
