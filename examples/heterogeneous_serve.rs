@@ -26,13 +26,17 @@ fn main() {
     let has_pjrt = runtime.is_some();
     let registry = Arc::new(MatrixRegistry::new(pool, runtime));
 
-    // Register a slice of the suite spanning the rdensity range, plus
-    // an irregular power-law matrix the planner routes around CSR-2.
-    let names = ["roadNet-TX", "ecology1", "wave", "power-law"];
+    // Register a slice of the suite spanning the rdensity range, an
+    // irregular power-law matrix the planner routes around CSR-2, and
+    // a hub-pattern circuit matrix the planner splits into a hybrid
+    // body + remainder entry (its describe() line below reports the
+    // per-part format/nnz breakdown).
+    let names = ["roadNet-TX", "ecology1", "wave", "power-law", "circuit-hub"];
     let mut ncols = std::collections::HashMap::new();
     for name in names {
         let a = match name {
             "power-law" => gen::power_law::<f32>(4096, 8, 1.0, 0xF00D),
+            "circuit-hub" => gen::circuit::<f32>(32, 32, 0xC1BC),
             _ => suite::by_name(name).unwrap().build::<f32>(SuiteScale::Tiny),
         };
         ncols.insert(name, a.ncols());

@@ -13,8 +13,7 @@
 use std::sync::Arc;
 
 use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
-use csrk::kernels::{build_kernel, pack_block, Csr2Kernel, CsrParallel, SpMv};
-use csrk::reorder::bandk;
+use csrk::kernels::{build_execution, pack_block, Csr2Kernel, CsrParallel, SpMv};
 use csrk::sparse::{gen, suite, Csr, CsrK, SuiteScale};
 use csrk::tuning::cpu::FIXED_SRS;
 use csrk::tuning::planner;
@@ -29,27 +28,25 @@ fn main() {
         "matrix", "kernel", "nvec", "loop GF/s", "spmm GF/s", "speedup",
     ])
     .numeric();
-    // three regular suite profiles plus the irregular power-law class;
-    // the "planned" kernel row is whatever the format planner picks
-    // (CSR-2 for the regular rows, CSR5 for the power-law row)
+    // three regular suite profiles, the irregular power-law class, and
+    // the hub-pattern circuit class (a 1k-row grid with one power rail
+    // — the scale where the rail pushes variance past §6's bound, so
+    // the planner splits it); the "planned" kernel row is whatever the
+    // format planner picks (CSR-2 for the regular rows, CSR5 for the
+    // power-law row, the hybrid composite for the circuit row)
     let mut cases: Vec<(&str, Csr<f32>)> = ["ecology1", "thermal2", "bmwcra_1"]
         .iter()
         .map(|&name| (name, suite::by_name(name).unwrap().build::<f32>(scale)))
         .collect();
     cases.push(("power-law", gen::power_law::<f32>(50_000, 8, 1.0, 0xF00D)));
+    cases.push(("circuit-hub", gen::circuit::<f32>(32, 32, 0xC1BC)));
     for &(name, ref a) in &cases {
         let (n, m) = (a.nrows(), a.ncols());
-        // the planned row reproduces registration: Band-k when the plan
-        // reorders (regular rows), native order otherwise — throughput
-        // is permutation-covariant, so benching in plan order is exact
-        let planned: Box<dyn SpMv<f32>> = {
-            let plan = planner::plan(a);
-            let ordered = match plan.reorder {
-                Some(r) => bandk(a, r.k, r.srs, r.ssrs, r.seed).perm.apply_sym(a),
-                None => a.clone(),
-            };
-            build_kernel(&plan, ordered, pool.clone())
-        };
+        // the planned row reproduces registration exactly: the build
+        // stage runs Band-k / splits / composes per the plan, and the
+        // returned composite executes in original coordinates
+        let planned: Box<dyn SpMv<f32>> =
+            Box::new(build_execution(&planner::plan(a), a.clone(), pool.clone(), false).exec);
         let kernels: Vec<Box<dyn SpMv<f32>>> = vec![
             Box::new(CsrParallel::new(a.clone(), pool.clone())),
             Box::new(Csr2Kernel::new(

@@ -24,12 +24,20 @@ pub fn roofline_curve(device: &DeviceSpec, points: usize) -> Vec<RooflinePoint> 
         .collect()
 }
 
+/// Cold-cache SpMV byte traffic of a CSR operand from raw dimensions:
+/// `vals + col_idx + row_ptr + x + y`, each element touched at least
+/// once, 4-byte indices. Exposed dimension-wise so the planner can
+/// price *parts* of a split matrix without materializing them
+/// (`tuning::planner::part_cpu_cost`) with the same accounting used
+/// here.
+pub fn spmv_bytes(nrows: usize, ncols: usize, nnz: usize, elem: usize) -> usize {
+    nnz * (elem + 4) + (nrows + 1) * 4 + ncols * elem + nrows * elem
+}
+
 /// SpMV arithmetic intensity for a CSR matrix in the paper's cold-cache
-/// accounting: `2·NNZ` FLOPs over `vals + col_idx + row_ptr + x + y`
-/// bytes (each element touched at least once).
+/// accounting: `2·NNZ` FLOPs over [`spmv_bytes`].
 pub fn spmv_arithmetic_intensity<T: Scalar>(a: &Csr<T>) -> f64 {
-    let elem = std::mem::size_of::<T>();
-    let bytes = a.nnz() * (elem + 4) + (a.nrows() + 1) * 4 + a.ncols() * elem + a.nrows() * elem;
+    let bytes = spmv_bytes(a.nrows(), a.ncols(), a.nnz(), std::mem::size_of::<T>());
     a.spmv_flops() / bytes as f64
 }
 

@@ -7,21 +7,30 @@
 //! that conditionality. Registration runs a three-stage pipeline:
 //!
 //! 1. **Plan** — [`crate::tuning::planner`] measures the matrix and
-//!    decides format, reordering, padded-export width, and per-device
-//!    roofline cost estimates. Regular structure plans the paper's
-//!    path (Band-k + CSR-k, §4 heuristics unchanged); irregular
-//!    structure skips reordering and plans CSR5 or nnz-balanced
-//!    parallel CSR.
-//! 2. **Build** — [`crate::kernels::build_kernel`] constructs the
-//!    planned kernel as a `Box<dyn SpMv<f32>>`; [`MatrixEntry`] holds
-//!    that trait object (plus the Band-k permutation when one exists),
-//!    never a concrete kernel type.
+//!    decides the plan *shape*, reordering, padded-export width, and
+//!    per-device roofline cost estimates. Regular structure plans the
+//!    paper's path (Band-k + CSR-k, §4 heuristics unchanged); a
+//!    **hub pattern** (variance > 10 explained by a few rail rows, the
+//!    `gen::circuit` class) plans a hybrid body + remainder split at a
+//!    row-nnz threshold, so 99 % of the rows keep the fast path;
+//!    wholesale-irregular structure skips reordering and plans CSR5 or
+//!    nnz-balanced parallel CSR.
+//! 2. **Build** — [`crate::kernels::build_execution`] constructs
+//!    whatever the plan names — Band-k runs, splits happen
+//!    (`sparse::split`), part kernels build, and for hybrid plans the
+//!    body permutation is composed against the split map — and
+//!    returns one composite `Box<dyn SpMv<f32>>`
+//!    (`kernels::composite`) executing in **original coordinates**.
+//!    [`MatrixEntry`] holds that trait object only: no concrete kernel
+//!    type, no permutation, no assumption the entry is one kernel.
 //! 3. **Bind / route** — the padded PJRT export happens at the plan's
-//!    width and binds to an AOT bucket when available. At serve time
-//!    each batch routes to the **cheapest bound device by the plan's
-//!    cost estimates**; a request's explicit [`Request::device`]
-//!    override always wins (and fails loudly if that device is
-//!    unbound, rather than silently downgrading).
+//!    width, in the build's row order, and binds to an AOT bucket when
+//!    available (hybrid entries stay CPU-only until multi-device part
+//!    placement lands). At serve time each batch routes to the
+//!    **cheapest bound device by the plan's cost estimates** (per-part
+//!    roofline sums for hybrid plans); a request's explicit
+//!    [`Request::device`] override always wins (and fails loudly if
+//!    that device is unbound, rather than silently downgrading).
 //!
 //! # Batches execute as SpMM
 //!

@@ -3,49 +3,60 @@
 //!
 //! * **Plan** — [`tuning::planner`](crate::tuning::planner) measures
 //!   the matrix (row-nnz variance, density, longest row) and decides
-//!   format, reordering, padded-export width and per-device cost
-//!   estimates. Regular matrices (§6: variance ≤ 10) get Band-k +
-//!   CSR-k with the paper's §4 heuristics; irregular matrices skip
+//!   the plan shape. Regular matrices (§6: variance ≤ 10) get Band-k +
+//!   CSR-k with the paper's §4 heuristics; hub-pattern matrices (a few
+//!   rail rows explain the variance) get a **hybrid** body + remainder
+//!   split with per-part kernels; wholesale-irregular matrices skip
 //!   reordering and plan CSR5 or nnz-balanced parallel CSR.
-//! * **Build** — [`kernels::build_kernel`](crate::kernels::build_kernel)
-//!   constructs whatever kernel the plan names, as a `Box<dyn SpMv>`;
-//!   the entry never holds a concrete kernel type.
+//! * **Build** — [`kernels::build_execution`](crate::kernels::build_execution)
+//!   constructs whatever the plan names — reorder, split, one kernel or
+//!   several — and returns it as one composite `Box<dyn SpMv>` that
+//!   executes in **original coordinates**. The entry holds no concrete
+//!   kernel type and no permutation: coordinate bookkeeping lives
+//!   inside the composite (`kernels::composite`), per part.
 //! * **Bind** — the padded PJRT export happens at the plan's width (a
-//!   plan decision, not an inline clamp) and binds to an AOT bucket
-//!   when the runtime has one; the plan's cost estimates then drive
-//!   per-request routing ([`MatrixEntry::route`]).
+//!   plan decision, not an inline clamp), in the build's row order, and
+//!   binds to an AOT bucket when the runtime has one; the plan's cost
+//!   estimates then drive per-request routing ([`MatrixEntry::route`]).
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::kernels::{build_kernel, pack_block, unpack_block, SpMv};
-use crate::reorder::{bandk, Permutation};
+use crate::kernels::{build_execution, CompositeExec, SpMv};
+use crate::reorder::Permutation;
 use crate::runtime::{Runtime, SpmvExecutor};
-use crate::sparse::csrk::PaddedCsr;
 use crate::sparse::Csr;
 use crate::tuning::planner::{self, FormatPlan};
 use crate::util::ThreadPool;
 
 pub use crate::tuning::planner::DeviceKind;
 
-/// A registered matrix: the chosen plan, the built kernel, and the
-/// per-device bindings.
+/// The PJRT side of an entry: the bound executable plus the row order
+/// its padded export was built in (requests marshal through it). Hybrid
+/// plans never bind one — multi-device part placement is a ROADMAP
+/// follow-up.
+struct PjrtBinding {
+    exe: SpmvExecutor,
+    perm: Option<Permutation>,
+}
+
+/// A registered matrix: the chosen plan, the built composite execution,
+/// and the per-device bindings.
 pub struct MatrixEntry {
     /// Registered name.
     pub name: String,
     /// The plan registration executed (exposed for observability and
     /// routing; see [`MatrixEntry::plan`]).
     plan: FormatPlan,
-    /// Row permutation applied at registration. `None` is the
-    /// no-reorder path (irregular plans): requests run in original
-    /// coordinates with no permute on the hot path.
-    perm: Option<Permutation>,
-    /// CPU execution: whatever kernel the plan called for.
-    cpu: Box<dyn SpMv<f32>>,
+    /// CPU execution: the composite the build stage produced — one part
+    /// per planned part, already operating in original coordinates.
+    /// Held concretely (the leaf kernels inside are the trait objects)
+    /// so batches can take the fused per-request entry point.
+    cpu: CompositeExec<f32>,
     /// PJRT execution (absent if the plan skipped it or no bucket fits).
-    pjrt: Option<SpmvExecutor>,
+    pjrt: Option<PjrtBinding>,
     /// Logical shape.
     pub nrows: usize,
     /// Logical column count.
@@ -55,7 +66,10 @@ pub struct MatrixEntry {
 }
 
 impl MatrixEntry {
-    /// Execute on the chosen device. `x` is in original coordinates.
+    /// Execute on the chosen device. `x` is in original coordinates —
+    /// and so is every kernel boundary here: the composite owns any
+    /// per-part permutation internally, so the CPU arm is a straight
+    /// dispatch.
     pub fn spmv(&self, device: DeviceKind, x: &[f32]) -> Result<Vec<f32>> {
         if x.len() != self.ncols {
             bail!("x length {} != ncols {}", x.len(), self.ncols);
@@ -63,26 +77,17 @@ impl MatrixEntry {
         match device {
             DeviceKind::Cpu => {
                 let mut y = vec![0f32; self.nrows];
-                match &self.perm {
-                    Some(p) => {
-                        let px = p.apply_vec(x);
-                        self.cpu.spmv(&px, &mut y);
-                        Ok(p.unapply_vec(&y))
-                    }
-                    None => {
-                        self.cpu.spmv(x, &mut y);
-                        Ok(y)
-                    }
-                }
+                self.cpu.spmv(x, &mut y);
+                Ok(y)
             }
             DeviceKind::Pjrt => {
-                let exe = self
+                let b = self
                     .pjrt
                     .as_ref()
                     .with_context(|| format!("matrix {} has no PJRT binding", self.name))?;
-                match &self.perm {
-                    Some(p) => Ok(p.unapply_vec(&exe.spmv(&p.apply_vec(x))?)),
-                    None => exe.spmv(x),
+                match &b.perm {
+                    Some(p) => Ok(p.unapply_vec(&b.exe.spmv(&p.apply_vec(x))?)),
+                    None => b.exe.spmv(x),
                 }
             }
         }
@@ -91,13 +96,15 @@ impl MatrixEntry {
     /// Execute a whole batch on the chosen device: `out[j] = A · xs[j]`.
     /// All inputs are in original coordinates.
     ///
-    /// On CPU the batch runs as **one blocked SpMM**: the operands are
-    /// permuted (when the plan reordered) into a vector-interleaved
-    /// block and the built kernel streams every matrix row once against
-    /// the whole block ([`SpMv::spmv_multi`]), instead of re-reading
-    /// the matrix per request. On PJRT the bound executable is
-    /// single-vector, so the batch loops inside the executor under one
-    /// client lock acquisition (see `runtime::SpmvExecutor::spmv_multi`).
+    /// On CPU the batch runs as **one blocked SpMM** per part
+    /// ([`CompositeExec::spmv_multi_vecs`]): each part's permutation
+    /// fuses into the operand interleave and its row map into the
+    /// de-interleave, and the part kernel streams every matrix row
+    /// once against the whole block — body and remainder alike —
+    /// instead of re-reading the matrix per request. On PJRT the bound
+    /// executable is single-vector, so the batch loops inside the
+    /// executor under one client lock acquisition (see
+    /// `runtime::SpmvExecutor::spmv_multi`).
     pub fn spmv_multi(&self, device: DeviceKind, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if xs.is_empty() {
             return Ok(Vec::new());
@@ -107,51 +114,21 @@ impl MatrixEntry {
                 bail!("x length {} != ncols {}", x.len(), self.ncols);
             }
         }
-        let nvec = xs.len();
         match device {
-            DeviceKind::Cpu => {
-                // Fused permute + interleave on the reordered path: each
-                // operand writes straight into its block slots
-                // (`xb[p(c)·nvec + j] = xs[j][c]`) and results read
-                // straight back out; the identity path packs directly.
-                let xb = match &self.perm {
-                    Some(p) => {
-                        let mut xb = vec![0f32; self.ncols * nvec];
-                        for (j, x) in xs.iter().enumerate() {
-                            for (c, &v) in x.iter().enumerate() {
-                                xb[p.new_of(c) * nvec + j] = v;
-                            }
-                        }
-                        xb
-                    }
-                    None => pack_block(xs),
-                };
-                let mut yb = vec![0f32; self.nrows * nvec];
-                self.cpu.spmv_multi(&xb, &mut yb, nvec);
-                Ok(match &self.perm {
-                    Some(p) => (0..nvec)
-                        .map(|j| {
-                            (0..self.nrows)
-                                .map(|r| yb[p.new_of(r) * nvec + j])
-                                .collect()
-                        })
-                        .collect(),
-                    None => unpack_block(&yb, nvec),
-                })
-            }
+            DeviceKind::Cpu => Ok(self.cpu.spmv_multi_vecs(xs)),
             DeviceKind::Pjrt => {
-                let exe = self
+                let b = self
                     .pjrt
                     .as_ref()
                     .with_context(|| format!("matrix {} has no PJRT binding", self.name))?;
-                match &self.perm {
+                match &b.perm {
                     Some(p) => {
                         let pxs: Vec<Vec<f32>> = xs.iter().map(|x| p.apply_vec(x)).collect();
                         let prefs: Vec<&[f32]> = pxs.iter().map(|v| v.as_slice()).collect();
-                        let pys = exe.spmv_multi(&prefs)?;
+                        let pys = b.exe.spmv_multi(&prefs)?;
                         Ok(pys.iter().map(|py| p.unapply_vec(py)).collect())
                     }
-                    None => exe.spmv_multi(xs),
+                    None => b.exe.spmv_multi(xs),
                 }
             }
         }
@@ -170,16 +147,18 @@ impl MatrixEntry {
         &self.plan
     }
 
-    /// Name of the kernel the build stage constructed (e.g. `csr2(4t)`,
-    /// `csr5(w8,s16,4t)`).
+    /// Name of the execution the build stage constructed (e.g.
+    /// `csr2(4t)`, `csr5(w8,s16,4t)`, or
+    /// `hybrid(csr2(4t)+csr-parallel(4t))`).
     pub fn kernel_name(&self) -> String {
         self.cpu.name()
     }
 
-    /// Did registration reorder the matrix? `false` is the identity
-    /// (no-reorder) path irregular plans take.
+    /// Did registration reorder any part of the matrix? `false` is the
+    /// identity (no-reorder) path wholesale-irregular plans take; for
+    /// hybrid entries the *body* part reorders.
     pub fn reordered(&self) -> bool {
-        self.perm.is_some()
+        self.plan.reorders()
     }
 
     /// Pick the execution device for a request. An explicit override
@@ -193,7 +172,7 @@ impl MatrixEntry {
         }
         let mut best = DeviceKind::Cpu;
         let mut best_cost = f64::INFINITY;
-        for &(d, c) in &self.plan.costs {
+        for &(d, c) in self.plan.costs() {
             if self.supports(d) && c < best_cost {
                 best = d;
                 best_cost = c;
@@ -202,7 +181,8 @@ impl MatrixEntry {
         best
     }
 
-    /// One observability line: the plan, what was built, what is bound,
+    /// One observability line: the plan (with the per-part format/nnz
+    /// breakdown for hybrid entries), what was built, what is bound,
     /// and where unrouted requests will execute.
     pub fn describe(&self) -> String {
         let bound: Vec<DeviceKind> = [DeviceKind::Cpu, DeviceKind::Pjrt]
@@ -250,13 +230,11 @@ impl MatrixRegistry {
     /// [`MatrixRegistry::register`] with an expected SpMM block width:
     /// `block_hint` is the typical concurrent-request count the serving
     /// layer will dispatch per batch (e.g. the server's `max_batch`).
-    /// Regular matrices take Band-k group targets from the §4.1
+    /// Plans that reorder take Band-k group targets from the §4.1
     /// heuristic at the block-width-scaled effective density
-    /// (`tuning::csr3_params_multi`), so matrices registered for
-    /// batched traffic get the smaller groups their larger per-group
-    /// working set wants. Irregular matrices (§6: row-nnz variance
-    /// > 10) skip reordering entirely and build the plan's
-    /// skew-tolerant kernel.
+    /// (`tuning::csr3_params_multi`) — for hybrid plans, at the *body*
+    /// density — so matrices registered for batched traffic get the
+    /// smaller groups their larger per-group working set wants.
     pub fn register_hinted(
         &self,
         name: &str,
@@ -267,44 +245,34 @@ impl MatrixRegistry {
             bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
         }
 
-        // -- plan: structure stats → format / reorder / export / costs --
+        // -- plan: structure stats → shape / format / export / costs ----
         let plan = planner::plan_hinted(&a, block_hint);
 
-        // -- build: optional Band-k, then the planned kernel ------------
-        // (`a` moves into the no-reorder arm — shape/nnz live on in
-        // `plan.stats`, so the identity path never copies the matrix)
-        let (ordered, perm) = match plan.reorder {
-            Some(r) => {
-                let ord = bandk(&a, r.k, r.srs, r.ssrs, r.seed);
-                (ord.perm.apply_sym(&a), Some(ord.perm))
-            }
-            None => (a, None),
-        };
+        // -- build: reorder / split / kernels, composed in original
+        //    coordinates; the padded export comes back alongside only
+        //    when bind will actually use it ---------------------------
+        let want_export = self.runtime.is_some() && plan.pjrt_width().is_some();
+        let built = build_execution(&plan, a, self.pool.clone(), want_export);
 
-        // -- bind: padded export at the plan's width, when planned ------
-        let pjrt = match (&self.runtime, plan.pjrt_width) {
-            (Some(rt), Some(width)) => {
-                let padded = PaddedCsr::from_csr(&ordered, width);
-                match SpmvExecutor::bind(rt, &padded) {
-                    Ok(exe) => Some(exe),
-                    Err(e) => {
-                        log::warn!("{name}: no PJRT binding ({e}); CPU only");
-                        None
-                    }
+        // -- bind: the build's padded export against an AOT bucket ------
+        let pjrt = match (&self.runtime, built.export) {
+            (Some(rt), Some(padded)) => match SpmvExecutor::bind(rt, &padded) {
+                Ok(exe) => Some(PjrtBinding { exe, perm: built.perm }),
+                Err(e) => {
+                    log::warn!("{name}: no PJRT binding ({e}); CPU only");
+                    None
                 }
-            }
+            },
             _ => None,
         };
 
-        let cpu = build_kernel(&plan, ordered, self.pool.clone());
         let entry = Arc::new(MatrixEntry {
             name: name.to_string(),
-            nrows: plan.stats.nrows,
-            ncols: plan.stats.ncols,
-            nnz: plan.stats.nnz,
+            nrows: plan.stats().nrows,
+            ncols: plan.stats().ncols,
+            nnz: plan.stats().nnz,
             plan,
-            perm,
-            cpu,
+            cpu: built.exec,
             pjrt,
         });
         self.entries
@@ -367,7 +335,7 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
         let e = reg.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
-        assert!(e.plan().stats.is_regular());
+        assert!(e.plan().stats().is_regular());
         assert!(e.reordered(), "regular matrices take the Band-k path");
         assert!(e.kernel_name().starts_with("csr2"), "{}", e.kernel_name());
         assert_eq!(e.route(None), DeviceKind::Cpu, "no runtime ⇒ CPU");
@@ -379,7 +347,8 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
         let e = reg.register("hubs", a.clone()).unwrap();
-        assert!(!e.plan().stats.is_regular());
+        assert!(!e.plan().stats().is_regular());
+        assert!(!e.plan().is_hybrid(), "heavy tail must not split");
         assert!(!e.reordered(), "irregular plans keep the identity order");
         assert!(e.kernel_name().starts_with("csr5"), "{}", e.kernel_name());
 
@@ -400,6 +369,32 @@ mod tests {
     }
 
     #[test]
+    fn hub_matrix_binds_the_hybrid_composite() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::circuit::<f32>(32, 32, 7);
+        let e = reg.register("rails", a.clone()).unwrap();
+        assert!(e.plan().is_hybrid(), "{}", e.describe());
+        assert!(e.reordered(), "the hybrid body reorders");
+        assert!(e.kernel_name().starts_with("hybrid("), "{}", e.kernel_name());
+        // describe reports the per-part breakdown
+        let d = e.describe();
+        assert!(d.contains("body[rows"), "{d}");
+        assert!(d.contains("remainder[rows"), "{d}");
+
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 5 + 1) % 9) as f32 - 4.0).collect();
+        let y = e.spmv(DeviceKind::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+        // hybrid plans never bind the padded export
+        assert!(!e.supports(DeviceKind::Pjrt));
+        assert!(e.spmv(DeviceKind::Pjrt, &x).is_err());
+    }
+
+    #[test]
     fn explicit_route_override_wins_even_when_unbound() {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
@@ -407,7 +402,7 @@ mod tests {
         assert_eq!(e.route(Some(DeviceKind::Pjrt)), DeviceKind::Pjrt);
         // ... and the pinned device then fails loudly instead of
         // silently running elsewhere
-        assert!(e.spmv(DeviceKind::Pjrt, &vec![1.0; 64]).is_err());
+        assert!(e.spmv(DeviceKind::Pjrt, &[1.0; 64]).is_err());
     }
 
     #[test]
@@ -472,6 +467,27 @@ mod tests {
         assert!(!e.reordered());
         let xs: Vec<Vec<f32>> = (0..4)
             .map(|j| (0..n).map(|i| ((i * 5 + j * 7) % 17) as f32 - 8.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let y1 = e.spmv(DeviceKind::Cpu, x).unwrap();
+            for (u, v) in y.iter().zip(&y1) {
+                assert!((u - v).abs() < 1e-4 * v.abs().max(1.0), "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_execution_on_hybrid_entry_matches_per_request() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::circuit::<f32>(32, 32, 11);
+        let n = a.ncols();
+        let e = reg.register_hinted("rails", a, 4).unwrap();
+        assert!(e.plan().is_hybrid(), "{}", e.describe());
+        let xs: Vec<Vec<f32>> = (0..6)
+            .map(|j| (0..n).map(|i| ((i * 13 + j * 3 + 2) % 19) as f32 - 9.0).collect())
             .collect();
         let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
         let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();

@@ -1,0 +1,448 @@
+//! Composite execution: N part kernels presented as one [`SpMv`] in
+//! **original coordinates**.
+//!
+//! The plan → build → bind pipeline used to hand the registry a single
+//! kernel plus "the" permutation and let the entry do the coordinate
+//! bookkeeping on every request. Hybrid plans break that shape: the
+//! body runs Band-k-reordered while the hub remainder runs in identity
+//! order, and their results interleave row-wise. [`CompositeExec`]
+//! absorbs the whole mapping instead — each [`CompositePart`] carries
+//!
+//! * its kernel (any [`SpMv`], in the part's own row/column order),
+//! * an optional **input permutation** of the shared column space
+//!   (`x` is permuted before the part kernel runs — the Band-k order
+//!   composed over the full index space), and
+//! * an optional **row scatter map** (part-local row → original row;
+//!   `None` means the part covers every row in order).
+//!
+//! A single-kernel plan is the one-part special case
+//! ([`CompositeExec::single`]): the Band-k path gets the permutation as
+//! `in_perm` and its inverse as the scatter map (exactly the old
+//! `apply_vec` / `unapply_vec` round-trip), and the identity path
+//! degenerates to a zero-overhead passthrough. Construction validates
+//! that the parts' scatter maps partition the original rows, so every
+//! output element is written by exactly one part and the parts need no
+//! accumulation discipline between them.
+//!
+//! Both [`SpMv::spmv`] and the blocked [`SpMv::spmv_multi`] are
+//! implemented per part, so hybrid entries keep the batch-amortized
+//! SpMM fast path: the body streams the block through the CSR-2
+//! blocked loop and the remainder through the blocked CSR5 sweep.
+
+use super::{pack_block, SpMv};
+use crate::reorder::Permutation;
+use crate::sparse::Scalar;
+
+/// One part of a composite execution: kernel + coordinate mapping.
+pub struct CompositePart<T> {
+    kernel: Box<dyn SpMv<T>>,
+    /// Permutation of the shared input space applied to `x` before the
+    /// kernel runs (`None` = identity).
+    in_perm: Option<Permutation>,
+    /// Part-local row → original row (`None` = the part's rows are the
+    /// original rows in order).
+    rows: Option<Vec<u32>>,
+}
+
+impl<T: Scalar> CompositePart<T> {
+    /// Wrap a kernel with its coordinate mapping. The scatter map must
+    /// be one entry per kernel row; the input permutation must cover
+    /// the kernel's column space.
+    pub fn new(
+        kernel: Box<dyn SpMv<T>>,
+        in_perm: Option<Permutation>,
+        rows: Option<Vec<u32>>,
+    ) -> Self {
+        if let Some(map) = &rows {
+            assert_eq!(map.len(), kernel.nrows(), "one scatter entry per kernel row");
+        }
+        if let Some(p) = &in_perm {
+            assert_eq!(p.len(), kernel.ncols(), "in_perm must cover the columns");
+        }
+        CompositePart { kernel, in_perm, rows }
+    }
+}
+
+/// N part kernels composed into one operator over original coordinates.
+pub struct CompositeExec<T> {
+    parts: Vec<CompositePart<T>>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl<T: Scalar> CompositeExec<T> {
+    /// Compose parts into an `nrows × ncols` operator. Panics unless
+    /// the parts' row coverage partitions `0..nrows` exactly (every
+    /// original row written by exactly one part) and every part reads
+    /// an `ncols`-sized input.
+    pub fn new(parts: Vec<CompositePart<T>>, nrows: usize, ncols: usize) -> Self {
+        assert!(!parts.is_empty(), "composite needs at least one part");
+        let mut seen = vec![false; nrows];
+        for part in &parts {
+            assert_eq!(part.kernel.ncols(), ncols, "parts share the input space");
+            match &part.rows {
+                Some(map) => {
+                    for &o in map {
+                        assert!(
+                            !std::mem::replace(&mut seen[o as usize], true),
+                            "row {o} covered by two parts"
+                        );
+                    }
+                }
+                None => {
+                    assert_eq!(part.kernel.nrows(), nrows, "identity part must cover all rows");
+                    for s in seen.iter_mut() {
+                        assert!(!std::mem::replace(s, true), "identity part overlaps another");
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "parts must cover every row");
+        CompositeExec { parts, nrows, ncols }
+    }
+
+    /// The one-part composite a [`FormatPlan::Single`] builds: with a
+    /// permutation, the kernel runs in permuted coordinates and the
+    /// composite restores original order (scatter = inverse
+    /// permutation); without one it is a passthrough.
+    ///
+    /// [`FormatPlan::Single`]: crate::tuning::planner::FormatPlan::Single
+    pub fn single(kernel: Box<dyn SpMv<T>>, perm: Option<Permutation>) -> Self {
+        let (nrows, ncols) = (kernel.nrows(), kernel.ncols());
+        let rows = perm.as_ref().map(|p| p.inverse().as_slice().to_vec());
+        CompositeExec::new(vec![CompositePart::new(kernel, perm, rows)], nrows, ncols)
+    }
+
+    /// Number of composed parts (1 for single-kernel plans).
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Kernel names per part, in part order.
+    pub fn part_names(&self) -> Vec<String> {
+        self.parts.iter().map(|p| p.kernel.name()).collect()
+    }
+
+    /// Batched execution straight from per-request vectors — the
+    /// serving entry point. Fuses each part's input permutation into
+    /// the interleave (element `c` of vector `j` writes straight to
+    /// block slot `p(c)·nvec + j`) and the row scatter into the
+    /// de-interleave, so both directions are one pass per part —
+    /// [`SpMv::spmv_multi`] over a pre-packed block would instead pay
+    /// an extra full-block permute copy each way on permuted parts.
+    /// Identity parts share one packed block, built lazily.
+    pub fn spmv_multi_vecs(&self, xs: &[&[T]]) -> Vec<Vec<T>> {
+        let nvec = xs.len();
+        if nvec == 0 {
+            return Vec::new();
+        }
+        for x in xs {
+            assert_eq!(x.len(), self.ncols, "operand length must match ncols");
+        }
+        let mut out = vec![vec![T::zero(); self.nrows]; nvec];
+        let mut identity_block: Option<Vec<T>> = None;
+        for part in &self.parts {
+            let owned;
+            let xb: &[T] = match &part.in_perm {
+                Some(p) => {
+                    // fused permute + interleave
+                    let mut b = vec![T::zero(); self.ncols * nvec];
+                    for (j, x) in xs.iter().enumerate() {
+                        for (c, &v) in x.iter().enumerate() {
+                            b[p.new_of(c) * nvec + j] = v;
+                        }
+                    }
+                    owned = b;
+                    &owned
+                }
+                None => identity_block.get_or_insert_with(|| pack_block(xs)),
+            };
+            let mut py = vec![T::zero(); part.kernel.nrows() * nvec];
+            part.kernel.spmv_multi(xb, &mut py, nvec);
+            // fused scatter + de-interleave
+            match &part.rows {
+                Some(map) => {
+                    for (l, &o) in map.iter().enumerate() {
+                        for (j, oj) in out.iter_mut().enumerate() {
+                            oj[o as usize] = py[l * nvec + j];
+                        }
+                    }
+                }
+                None => {
+                    for (r, chunk) in py.chunks_exact(nvec).enumerate() {
+                        for (j, oj) in out.iter_mut().enumerate() {
+                            oj[r] = chunk[j];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Permute a vector-interleaved block into a part's input order:
+/// `out[p(c)·nvec + j] = x[c·nvec + j]`.
+fn permute_block<T: Scalar>(p: &Permutation, x: &[T], nvec: usize) -> Vec<T> {
+    let mut out = vec![T::zero(); x.len()];
+    for c in 0..p.len() {
+        let pc = p.new_of(c);
+        out[pc * nvec..pc * nvec + nvec].copy_from_slice(&x[c * nvec..c * nvec + nvec]);
+    }
+    out
+}
+
+impl<T: Scalar> SpMv<T> for CompositeExec<T> {
+    fn name(&self) -> String {
+        if self.parts.len() == 1 {
+            self.parts[0].kernel.name()
+        } else {
+            format!("hybrid({})", self.part_names().join("+"))
+        }
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for part in &self.parts {
+            let permuted;
+            let xp: &[T] = match &part.in_perm {
+                Some(p) => {
+                    permuted = p.apply_vec(x);
+                    &permuted
+                }
+                None => x,
+            };
+            match &part.rows {
+                None => part.kernel.spmv(xp, y),
+                Some(map) => {
+                    let mut py = vec![T::zero(); part.kernel.nrows()];
+                    part.kernel.spmv(xp, &mut py);
+                    for (l, &o) in map.iter().enumerate() {
+                        y[o as usize] = py[l];
+                    }
+                }
+            }
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    fn flops(&self) -> f64 {
+        self.parts.iter().map(|p| p.kernel.flops()).sum()
+    }
+
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        assert!(nvec > 0, "spmv_multi needs at least one vector");
+        assert_eq!(x.len(), self.ncols * nvec);
+        assert_eq!(y.len(), self.nrows * nvec);
+        for part in &self.parts {
+            let permuted;
+            let xp: &[T] = match &part.in_perm {
+                Some(p) => {
+                    permuted = permute_block(p, x, nvec);
+                    &permuted
+                }
+                None => x,
+            };
+            match &part.rows {
+                None => part.kernel.spmv_multi(xp, y, nvec),
+                Some(map) => {
+                    let mut py = vec![T::zero(); part.kernel.nrows() * nvec];
+                    part.kernel.spmv_multi(xp, &mut py, nvec);
+                    for (l, &o) in map.iter().enumerate() {
+                        let o = o as usize;
+                        y[o * nvec..(o + 1) * nvec]
+                            .copy_from_slice(&py[l * nvec..(l + 1) * nvec]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::kernels::testutil::{assert_kernel_matches, assert_spmm_matches};
+    use crate::kernels::{CsrParallel, CsrSerial};
+    use crate::sparse::{gen, split_by_row_nnz};
+    use crate::util::{Rng, ThreadPool};
+
+    #[test]
+    fn single_identity_part_is_a_passthrough() {
+        let a = gen::grid2d_5pt::<f64>(10, 10);
+        let exec = CompositeExec::single(Box::new(CsrSerial::new(a.clone())), None);
+        assert_eq!(exec.num_parts(), 1);
+        assert_eq!(exec.name(), "csr-serial");
+        assert_kernel_matches(&a, &exec, 1e-12);
+        assert_spmm_matches(&exec, 4, 1e-12);
+    }
+
+    #[test]
+    fn single_permuted_part_restores_original_coordinates() {
+        let a = gen::grid2d_5pt::<f64>(8, 8);
+        let n = a.nrows();
+        let mut rng = Rng::new(17);
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut v);
+        let p = Permutation::from_new_of_old(v);
+        let pa = p.apply_sym(&a);
+        let exec = CompositeExec::single(Box::new(CsrSerial::new(pa)), Some(p));
+        // the composite must behave as the ORIGINAL operator
+        assert_kernel_matches(&a, &exec, 1e-12);
+        for nvec in [2usize, 3, 8] {
+            assert_spmm_matches(&exec, nvec, 1e-12);
+        }
+    }
+
+    #[test]
+    fn two_part_split_matches_reference() {
+        let a = gen::circuit::<f64>(24, 24, 9);
+        let pool = Arc::new(ThreadPool::new(2));
+        let s = split_by_row_nnz(&a, 12);
+        assert!(!s.remainder_rows.is_empty());
+        let parts = vec![
+            CompositePart::new(
+                Box::new(CsrParallel::new(s.body.clone(), pool.clone())),
+                None,
+                Some(s.body_rows.clone()),
+            ),
+            CompositePart::new(
+                Box::new(CsrParallel::new(s.remainder.clone(), pool)),
+                None,
+                Some(s.remainder_rows.clone()),
+            ),
+        ];
+        let exec = CompositeExec::new(parts, a.nrows(), a.ncols());
+        assert_eq!(exec.num_parts(), 2);
+        assert!(exec.name().starts_with("hybrid("), "{}", exec.name());
+        assert!((exec.flops() - a.spmv_flops()).abs() < 1e-9);
+        assert_kernel_matches(&a, &exec, 1e-12);
+        for nvec in [2usize, 5, 8] {
+            assert_spmm_matches(&exec, nvec, 1e-12);
+        }
+    }
+
+    #[test]
+    fn two_part_split_with_permuted_body_matches_reference() {
+        let a = gen::circuit::<f64>(20, 20, 5);
+        let n = a.nrows();
+        let pool = Arc::new(ThreadPool::new(3));
+        let s = split_by_row_nnz(&a, 14);
+        assert!(!s.remainder_rows.is_empty());
+        let mut rng = Rng::new(4);
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut v);
+        let p = Permutation::from_new_of_old(v);
+        let (pbody, body_map) = s.permuted_body(p.as_slice());
+        let parts = vec![
+            CompositePart::new(
+                Box::new(CsrParallel::new(pbody, pool.clone())),
+                Some(p),
+                Some(body_map),
+            ),
+            CompositePart::new(
+                Box::new(CsrParallel::new(s.remainder.clone(), pool)),
+                None,
+                Some(s.remainder_rows.clone()),
+            ),
+        ];
+        let exec = CompositeExec::new(parts, n, n);
+        assert_kernel_matches(&a, &exec, 1e-12);
+        for nvec in [2usize, 4, 7] {
+            assert_spmm_matches(&exec, nvec, 1e-12);
+        }
+    }
+
+    #[test]
+    fn fused_vec_entry_matches_block_entry() {
+        // the serving path (spmv_multi_vecs, fused permute/pack) must
+        // agree with the plain block interface on every part shape
+        let pool = Arc::new(ThreadPool::new(2));
+        let a = gen::circuit::<f64>(24, 24, 9);
+        let n = a.nrows();
+        let s = split_by_row_nnz(&a, 12);
+        let mut rng = Rng::new(21);
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut v);
+        let p = Permutation::from_new_of_old(v);
+        let (pbody, body_map) = s.permuted_body(p.as_slice());
+        let exec = CompositeExec::new(
+            vec![
+                CompositePart::new(
+                    Box::new(CsrParallel::new(pbody, pool.clone())),
+                    Some(p),
+                    Some(body_map),
+                ),
+                CompositePart::new(
+                    Box::new(CsrParallel::new(s.remainder.clone(), pool)),
+                    None,
+                    Some(s.remainder_rows.clone()),
+                ),
+            ],
+            n,
+            n,
+        );
+        let nvec = 5usize;
+        let xs: Vec<Vec<f64>> = (0..nvec)
+            .map(|j| (0..n).map(|i| ((i * 3 + j * 17 + 1) % 29) as f64 / 29.0 - 0.5).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let fused = exec.spmv_multi_vecs(&refs);
+        let xb = pack_block(&refs);
+        let mut yb = vec![0.0; n * nvec];
+        exec.spmv_multi(&xb, &mut yb, nvec);
+        for (j, yf) in fused.iter().enumerate() {
+            assert_eq!(yf.len(), n);
+            for (r, &u) in yf.iter().enumerate() {
+                let v = yb[r * nvec + j];
+                assert!((u - v).abs() < 1e-12, "vec {j} row {r}: {u} vs {v}");
+            }
+        }
+        // empty batch is empty
+        assert!(exec.spmv_multi_vecs(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn overlapping_parts_rejected() {
+        let a = gen::grid2d_5pt::<f64>(4, 4);
+        let s = split_by_row_nnz(&a, a.max_row_nnz()); // remainder empty
+        let parts = vec![
+            CompositePart::new(
+                Box::new(CsrSerial::new(s.body.clone())),
+                None,
+                Some(s.body_rows.clone()),
+            ),
+            // same rows again → overlap
+            CompositePart::new(
+                Box::new(CsrSerial::new(s.body.clone())),
+                None,
+                Some(s.body_rows.clone()),
+            ),
+        ];
+        let _ = CompositeExec::new(parts, a.nrows(), a.ncols());
+    }
+
+    #[test]
+    #[should_panic]
+    fn uncovered_rows_rejected() {
+        let a = gen::grid2d_5pt::<f64>(4, 4);
+        let s = split_by_row_nnz(&a, 0); // body empty, remainder = all
+        let parts = vec![CompositePart::new(
+            Box::new(CsrSerial::new(s.body.clone())),
+            None,
+            Some(s.body_rows.clone()),
+        )];
+        let _ = CompositeExec::new(parts, a.nrows(), a.ncols());
+    }
+}

@@ -1,31 +1,69 @@
 //! Kernel factory — the *build* stage of the coordinator's
 //! plan → build → bind pipeline.
 //!
-//! The planner ([`crate::tuning::planner`]) decides *which* format fits
-//! a matrix's structure; this factory turns that decision plus the
-//! (possibly Band-k-reordered) CSR arrays into a ready-to-run
-//! `Box<dyn SpMv<T>>`. Keeping construction behind one function means
-//! the registry never names a concrete kernel type again — adding a
-//! format to the serving stack is a planner branch plus a match arm
-//! here.
+//! The planner ([`crate::tuning::planner`]) decides *which* shape fits
+//! a matrix's structure; this factory turns that decision plus the raw
+//! CSR arrays into a ready-to-run execution in **original
+//! coordinates** ([`build_execution`]):
+//!
+//! * [`FormatPlan::Single`] — run Band-k when the plan reorders, build
+//!   the planned kernel over the (possibly permuted) matrix, and wrap
+//!   it in a one-part [`CompositeExec`] that owns the coordinate
+//!   round-trip.
+//! * [`FormatPlan::Hybrid`] — split the matrix at the plan's row-nnz
+//!   threshold (`sparse::split`), run Band-k on the *body* (ordering
+//!   over the square body graph, then composed against the split map
+//!   so the body kernel's rows scatter straight to original rows),
+//!   build each part's kernel, and compose them.
+//!
+//! Keeping construction behind one function means the registry never
+//! names a concrete kernel type — or a permutation — again: adding a
+//! format (or another part shape) to the serving stack is a planner
+//! branch plus a match arm here. The per-leaf constructor is exposed as
+//! [`build_part_kernel`] for benches and tests that want a bare kernel.
+//!
+//! [`FormatPlan::Single`]: crate::tuning::planner::FormatPlan::Single
+//! [`FormatPlan::Hybrid`]: crate::tuning::planner::FormatPlan::Hybrid
 
 use std::sync::Arc;
 
+use super::composite::{CompositeExec, CompositePart};
 use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SpMv};
-use crate::sparse::{Csr, Csr5, CsrK, Scalar};
+use crate::reorder::{bandk, Permutation};
+use crate::sparse::csrk::PaddedCsr;
+use crate::sparse::{split_by_row_nnz, Csr, Csr5, CsrK, Scalar, SplitCsr};
 use crate::tuning::planner::{FormatPlan, PlannedKernel};
 use crate::util::ThreadPool;
 
-/// Construct the kernel a plan calls for over `a` — which must already
-/// be in the plan's row order (Band-k-applied when `plan.reorder` is
-/// set, the native labeling otherwise; the *caller* owns the
-/// permutation bookkeeping).
-pub fn build_kernel<T: Scalar>(
-    plan: &FormatPlan,
+/// What the build stage hands the bind stage.
+pub struct BuiltExecution<T> {
+    /// The composite execution, operating in original coordinates.
+    /// Concrete (not `Box<dyn SpMv>`) so the serving layer can reach
+    /// the fused batched entry point
+    /// ([`CompositeExec::spmv_multi_vecs`]); the leaf kernels inside
+    /// are still trait objects.
+    pub exec: CompositeExec<T>,
+    /// The single-kernel path's row order (`None` for hybrid plans and
+    /// the identity path) — the PJRT padded export is built and
+    /// marshaled in this order.
+    pub perm: Option<Permutation>,
+    /// The padded export at the plan's width, in `perm` order —
+    /// produced only when the caller asked for one (a runtime exists
+    /// and the plan sets a padded width), and built *before* kernel
+    /// construction consumes the ordered matrix, so no CSR copy is
+    /// ever made for bind's sake.
+    pub export: Option<PaddedCsr<T>>,
+}
+
+/// Construct one leaf kernel over `a` — which must already be in the
+/// part's row order (the *caller* owns the permutation bookkeeping;
+/// [`build_execution`] is the caller that does).
+pub fn build_part_kernel<T: Scalar>(
+    kernel: &PlannedKernel,
     a: Csr<T>,
     pool: Arc<ThreadPool>,
 ) -> Box<dyn SpMv<T>> {
-    match plan.kernel {
+    match *kernel {
         PlannedKernel::Csr2 { srs } => {
             Box::new(Csr2Kernel::new(CsrK::csr2_uniform(a, srs), pool))
         }
@@ -40,6 +78,75 @@ pub fn build_kernel<T: Scalar>(
     }
 }
 
+/// Execute a plan's build stage over `a` (consumed): reorder, split,
+/// construct part kernels, compose. Set `want_export` when a padded
+/// PJRT export will follow — the ordered matrix is then cloned out
+/// before kernel construction consumes it.
+pub fn build_execution<T: Scalar>(
+    plan: &FormatPlan,
+    a: Csr<T>,
+    pool: Arc<ThreadPool>,
+    want_export: bool,
+) -> BuiltExecution<T> {
+    match plan {
+        FormatPlan::Single { reorder, kernel, pjrt_width, .. } => {
+            let (ordered, perm) = match reorder {
+                Some(r) => {
+                    let ord = bandk(&a, r.k, r.srs, r.ssrs, r.seed);
+                    (ord.perm.apply_sym(&a), Some(ord.perm))
+                }
+                None => (a, None),
+            };
+            let export = match (want_export, pjrt_width) {
+                (true, Some(w)) => Some(PaddedCsr::from_csr(&ordered, *w)),
+                _ => None,
+            };
+            let kern = build_part_kernel(kernel, ordered, pool);
+            let exec = CompositeExec::single(kern, perm.clone());
+            BuiltExecution { exec, perm, export }
+        }
+        FormatPlan::Hybrid { threshold, body, remainder, .. } => {
+            let (nrows, ncols) = (a.nrows(), a.ncols());
+            let split = split_by_row_nnz(&a, *threshold);
+            drop(a);
+            // Body ordering runs over the square body graph (hub rows
+            // empty, hub columns still present), and the resulting
+            // permutation is composed against the split map: the
+            // permuted compact body's rows scatter straight to
+            // original rows, and its columns (like its x) live in the
+            // permuted index space.
+            let ordered_body = body.reorder.as_ref().map(|r| {
+                let ord = bandk(&split.body_square(), r.k, r.srs, r.ssrs, r.seed);
+                let (pbody, map) = split.permuted_body(ord.perm.as_slice());
+                (pbody, ord.perm, map)
+            });
+            let SplitCsr { body: raw_body, body_rows, remainder: rem, remainder_rows, .. } =
+                split;
+            let (body_csr, body_perm, body_map) = match ordered_body {
+                Some((pbody, perm, map)) => (pbody, Some(perm), map),
+                None => (raw_body, None, body_rows),
+            };
+            let parts = vec![
+                CompositePart::new(
+                    build_part_kernel(&body.kernel, body_csr, pool.clone()),
+                    body_perm,
+                    Some(body_map),
+                ),
+                CompositePart::new(
+                    build_part_kernel(&remainder.kernel, rem, pool),
+                    None,
+                    Some(remainder_rows),
+                ),
+            ];
+            BuiltExecution {
+                exec: CompositeExec::new(parts, nrows, ncols),
+                perm: None,
+                export: None,
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -51,27 +158,69 @@ mod tests {
     fn factory_builds_what_the_plan_says() {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = gen::grid2d_5pt::<f64>(20, 20);
-        let k = build_kernel(&planner::plan(&reg), reg.clone(), pool.clone());
-        assert!(k.name().starts_with("csr2"), "{}", k.name());
+        let b = build_execution(&planner::plan(&reg), reg.clone(), pool.clone(), false);
+        assert!(b.exec.name().starts_with("csr2"), "{}", b.exec.name());
+        assert!(b.perm.is_some(), "regular plans reorder");
+        assert!(b.export.is_none(), "no export requested");
 
         let irr = gen::power_law::<f64>(600, 8, 1.0, 0x5EED);
-        let k = build_kernel(&planner::plan(&irr), irr.clone(), pool.clone());
-        assert!(k.name().starts_with("csr5"), "{}", k.name());
+        let b = build_execution(&planner::plan(&irr), irr.clone(), pool.clone(), false);
+        assert!(b.exec.name().starts_with("csr5"), "{}", b.exec.name());
+        assert!(b.perm.is_none(), "irregular plans keep the labeling");
+
+        let hub = gen::circuit::<f64>(32, 32, 7);
+        let plan = planner::plan(&hub);
+        assert!(plan.is_hybrid(), "{}", plan.summary());
+        let b = build_execution(&plan, hub.clone(), pool, false);
+        assert_eq!(b.exec.num_parts(), 2);
+        assert!(b.exec.name().starts_with("hybrid(csr2"), "{}", b.exec.name());
+        assert!(b.perm.is_none(), "hybrid owns its permutations per part");
+        assert!(b.export.is_none(), "hybrid plans never export");
+    }
+
+    #[test]
+    fn built_executions_match_reference_in_original_coordinates() {
+        let pool = Arc::new(ThreadPool::new(3));
+        for a in [
+            gen::grid2d_5pt::<f64>(16, 16),            // regular → bandk + csr2
+            gen::power_law::<f64>(600, 8, 1.0, 0xA1),  // irregular → csr5
+            gen::circuit::<f64>(32, 32, 7),            // hub pattern → hybrid
+        ] {
+            let plan = planner::plan(&a);
+            let b = build_execution(&plan, a.clone(), pool.clone(), false);
+            assert_kernel_matches(&a, &b.exec, 1e-9);
+            assert_spmm_matches(&b.exec, 4, 1e-9);
+        }
+    }
+
+    #[test]
+    fn export_is_padded_at_plan_width_in_plan_order() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let a = gen::grid2d_5pt::<f64>(12, 12);
+        let plan = planner::plan(&a);
+        let b = build_execution(&plan, a.clone(), pool, true);
+        let p = b.perm.expect("regular plans reorder");
+        let padded = b.export.expect("export requested on a pjrt-width plan");
+        assert_eq!(padded.width, plan.pjrt_width().unwrap());
+        assert_eq!(padded.nrows, a.nrows());
+        // the export is the padded layout of the Band-k-permuted matrix
+        let expect = PaddedCsr::from_csr(&p.apply_sym(&a), padded.width);
+        assert_eq!(padded.cols, expect.cols);
+        assert_eq!(padded.vals, expect.vals);
+        assert_eq!(padded.overflow.len(), expect.overflow.len());
     }
 
     #[test]
     fn every_planned_kernel_matches_reference() {
         let pool = Arc::new(ThreadPool::new(3));
         let a = gen::grid3d_7pt::<f64>(6, 6, 6);
-        let mut plan = planner::plan(&a);
         for kernel in [
             PlannedKernel::Csr2 { srs: 17 },
             PlannedKernel::Csr3 { ssrs: 4, srs: 9 },
             PlannedKernel::Csr5 { omega: 4, sigma: 12 },
             PlannedKernel::CsrParallel,
         ] {
-            plan.kernel = kernel;
-            let k = build_kernel(&plan, a.clone(), pool.clone());
+            let k = build_part_kernel(&kernel, a.clone(), pool.clone());
             assert_kernel_matches(&a, k.as_ref(), 1e-12);
             assert_spmm_matches(k.as_ref(), 4, 1e-12);
         }

@@ -6,10 +6,16 @@
 //!   (§5.2).
 //! * [`coo`], [`ell`], [`bcsr`] — related-work baselines.
 //! * [`csr5`] — CSR5 tile kernel with parallel segmented sum and
-//!   sequential carry calibration.
-//! * [`factory`] — [`build_kernel`]: constructs whichever of the above
-//!   a [`FormatPlan`](crate::tuning::planner::FormatPlan) calls for,
-//!   as a `Box<dyn SpMv>` (the coordinator's *build* stage).
+//!   sequential carry calibration (blocked SpMM included: one tile
+//!   sweep per batch with `nvec`-wide carries).
+//! * [`composite`] — [`CompositeExec`]: N part kernels (each with its
+//!   own input permutation and row scatter map) presented as one
+//!   [`SpMv`] in original coordinates — how hybrid body + remainder
+//!   plans (and the single-kernel special case) execute.
+//! * [`factory`] — [`build_execution`]: the coordinator's *build*
+//!   stage; turns a [`FormatPlan`](crate::tuning::planner::FormatPlan)
+//!   plus raw CSR arrays into a ready composite (reorder, split, leaf
+//!   kernels via [`build_part_kernel`]).
 //!
 //! All parallel kernels share the crate's persistent
 //! [`ThreadPool`](crate::util::ThreadPool) and write disjoint row ranges,
@@ -35,10 +41,12 @@
 //! unit-stride multiply-add that LLVM vectorizes across the block.
 //! [`pack_block`]/[`unpack_block`] convert between this layout and
 //! per-request vectors. CSR-family kernels (`CsrSerial`, `CsrParallel`,
-//! `Csr2Kernel`, `Csr3Kernel`) implement the genuinely blocked loop;
-//! the baseline formats fall back to a correct per-vector loop.
+//! `Csr2Kernel`, `Csr3Kernel`), `Csr5Kernel` and the composite
+//! implement the genuinely blocked loop; the baseline formats fall
+//! back to a correct per-vector loop.
 
 pub mod bcsr;
+pub mod composite;
 pub mod coo;
 pub mod csr;
 pub mod csr5;
@@ -47,12 +55,13 @@ pub mod ell;
 pub mod factory;
 
 pub use bcsr::BcsrKernel;
+pub use composite::{CompositeExec, CompositePart};
 pub use coo::CooKernel;
 pub use csr::{CsrParallel, CsrSerial};
 pub use csr5::Csr5Kernel;
 pub use csrk::{Csr2Kernel, Csr3Kernel};
 pub use ell::EllKernel;
-pub use factory::build_kernel;
+pub use factory::{build_execution, build_part_kernel, BuiltExecution};
 
 use crate::sparse::Scalar;
 

@@ -233,6 +233,93 @@ impl<T: Scalar> Csr5<T> {
         carry
     }
 
+    /// Blocked variant of [`Csr5::tile_segmented_sum`] over `nvec`
+    /// vector-interleaved right-hand sides (`x[c * nvec + j]`, the
+    /// `kernels::pack_block` layout): one traversal of the tile's
+    /// descriptors and entries serves the whole RHS block. Segment
+    /// closes write the `nvec`-wide accumulator into the interleaved
+    /// result block with `=`; when the tile's first segment continues a
+    /// row begun in an earlier tile, its partials are copied into
+    /// `carry_val` (length `nvec`) and the carried row is returned.
+    /// `acc` is caller-provided scratch of length `nvec`, reused across
+    /// tiles so the sweep allocates nothing per tile.
+    #[inline]
+    pub fn tile_segmented_sum_multi(
+        &self,
+        t: usize,
+        x: &[T],
+        y: &mut [T],
+        nvec: usize,
+        acc: &mut [T],
+        carry_val: &mut [T],
+    ) -> Option<u32> {
+        debug_assert_eq!(acc.len(), nvec);
+        debug_assert_eq!(carry_val.len(), nvec);
+        let per_tile = self.omega * self.sigma;
+        let base = t * per_tile;
+        let seg_base = self.seg_ptr[t] as usize;
+        let dirty = self.is_dirty(t);
+        let mut seg = 0usize; // segment index within tile
+        let mut carry_row: Option<u32> = None;
+        for q in acc.iter_mut() {
+            *q = T::zero();
+        }
+        // Traverse in CSR order (lane-major); entries live s-major —
+        // the same walk as the single-vector sweep.
+        for lane in 0..self.omega {
+            let flags = self.bit_flag[t * self.omega + lane];
+            for s in 0..self.sigma {
+                if flags & (1 << s) != 0 {
+                    let first_seg_is_carry = dirty && seg == 0;
+                    if first_seg_is_carry {
+                        carry_row = Some(self.seg_rows[seg_base]);
+                        carry_val.copy_from_slice(acc);
+                    } else if !(seg == 0 && lane == 0 && s == 0) {
+                        let row = self.seg_rows[seg_base + seg] as usize;
+                        y[row * nvec..(row + 1) * nvec].copy_from_slice(acc);
+                    }
+                    if !(lane == 0 && s == 0) {
+                        seg += 1;
+                    }
+                    for q in acc.iter_mut() {
+                        *q = T::zero();
+                    }
+                }
+                let pos = base + s * self.omega + lane;
+                let c = self.tile_cols[pos] as usize;
+                let v = self.tile_vals[pos];
+                let xb = &x[c * nvec..c * nvec + nvec];
+                for (q, &xv) in acc.iter_mut().zip(xb) {
+                    *q += v * xv;
+                }
+            }
+        }
+        // close the trailing segment
+        if dirty && seg == 0 {
+            carry_row = Some(self.seg_rows[seg_base]);
+            carry_val.copy_from_slice(acc);
+        } else {
+            let row = self.seg_rows[seg_base + seg] as usize;
+            y[row * nvec..(row + 1) * nvec].copy_from_slice(acc);
+        }
+        carry_row
+    }
+
+    /// Blocked tail fix-up: accumulate the `NNZ mod ωσ` trailing
+    /// entries into the interleaved result block. Like
+    /// [`Csr5::apply_tail`] it must run after the tile sweep (tail rows
+    /// may continue rows begun in the last tile) and accumulates with
+    /// `+=`.
+    pub fn apply_tail_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        for ((&r, &c), &v) in self.tail_rows.iter().zip(&self.tail_cols).zip(&self.tail_vals) {
+            let xb = &x[c as usize * nvec..c as usize * nvec + nvec];
+            let yb = &mut y[r as usize * nvec..(r as usize + 1) * nvec];
+            for (q, &xv) in yb.iter_mut().zip(xb) {
+                *q += v * xv;
+            }
+        }
+    }
+
     /// Add the scalar tail (`NNZ mod ωσ` trailing entries) into `y`.
     /// Rows in the tail may continue rows begun in the last tile, so this
     /// must run after the tile sweep; it accumulates with `+=`.

@@ -16,6 +16,8 @@
 //! * [`gen`] — synthetic matrix generators per problem class, the
 //!   substitute for the SuiteSparse download (offline environment).
 //! * [`suite`] — the paper's Table 2 sixteen-matrix test suite, scaled.
+//! * [`split`] — row-nnz-threshold partitioning (body + hub remainder),
+//!   the substrate for the planner's hybrid per-part execution plans.
 
 pub mod bcsr;
 pub mod coo;
@@ -25,6 +27,7 @@ pub mod csrk;
 pub mod ell;
 pub mod gen;
 pub mod mm;
+pub mod split;
 pub mod suite;
 
 pub use bcsr::Bcsr;
@@ -33,6 +36,7 @@ pub use csr::Csr;
 pub use csr5::Csr5;
 pub use csrk::CsrK;
 pub use ell::Ell;
+pub use split::{split_by_row_nnz, RowPart, SplitCsr};
 pub use suite::{SuiteEntry, SuiteScale};
 
 /// Scalar element type bound used across formats and kernels.

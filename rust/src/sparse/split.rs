@@ -1,0 +1,326 @@
+//! Row-threshold matrix splitting — the substrate for hybrid (per-part)
+//! execution plans.
+//!
+//! The §6 regularity criterion is all-or-nothing: one hub rail in an
+//! otherwise banded circuit matrix pushes the row-nnz variance past the
+//! threshold and (before hybrid plans) forfeited the Band-k + CSR-2
+//! fast path on 99 % of the rows. The standard remedy (Fukaya et al.'s
+//! partially-diagonal splitting; the hybrid ELL + COO lineage) is to
+//! partition the matrix by a row-length cutoff into a structured
+//! **body** and a skewed **remainder** and run each part with the
+//! kernel built for its structure.
+//!
+//! [`split_by_row_nnz`] produces that partition as two compact CSR
+//! matrices sharing the source column space (so the two parts read the
+//! same `x` with no column remapping) plus the row-index maps both
+//! ways: part-local → original ([`SplitCsr::body_rows`] /
+//! [`SplitCsr::remainder_rows`]) and original → (part, local)
+//! ([`SplitCsr::locate`]). Every source row lands in exactly one part
+//! and `body.nnz() + remainder.nnz() == source.nnz()` — the round-trip
+//! invariant the integration tests pin down.
+//!
+//! Reordering support: Band-k needs a square operand, so
+//! [`SplitCsr::body_square`] re-inflates the body to the source shape
+//! (remainder rows empty) for the ordering pass, and
+//! [`SplitCsr::permuted_body`] applies the resulting symmetric
+//! permutation back to the *compact* body — rows resorted into the
+//! band order, columns relabeled — returning the row map already
+//! composed with the permutation. The composite kernel scatters each
+//! part's result through these maps (`kernels::composite`).
+
+use super::{Coo, Csr, Scalar};
+
+/// Which side of the row-nnz threshold a source row landed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowPart {
+    /// Rows with at most `threshold` nonzeros (the structured part).
+    Body,
+    /// Rows with more than `threshold` nonzeros (the hubs).
+    Remainder,
+}
+
+/// A matrix partitioned by row-nnz threshold into body + remainder.
+///
+/// Both parts are compact (no empty placeholder rows) and keep the
+/// source column space, so `x` is shared between them verbatim.
+#[derive(Debug, Clone)]
+pub struct SplitCsr<T> {
+    /// Rows of the source matrix.
+    pub source_rows: usize,
+    /// Columns of the source matrix (and of both parts).
+    pub source_cols: usize,
+    /// The row-nnz cutoff: rows with `nnz > threshold` are remainder.
+    pub threshold: usize,
+    /// Rows with `nnz ≤ threshold`, in ascending source order.
+    pub body: Csr<T>,
+    /// Rows with `nnz > threshold`, in ascending source order.
+    pub remainder: Csr<T>,
+    /// Body-local row → source row (ascending).
+    pub body_rows: Vec<u32>,
+    /// Remainder-local row → source row (ascending).
+    pub remainder_rows: Vec<u32>,
+}
+
+/// Partition `a` by row-nnz: rows holding more than `threshold`
+/// nonzeros become the remainder, everything else the body.
+pub fn split_by_row_nnz<T: Scalar>(a: &Csr<T>, threshold: usize) -> SplitCsr<T> {
+    let n = a.nrows();
+    let mut body_ptr = vec![0u32];
+    let mut body_cols = Vec::new();
+    let mut body_vals = Vec::new();
+    let mut body_rows = Vec::new();
+    let mut rem_ptr = vec![0u32];
+    let mut rem_cols = Vec::new();
+    let mut rem_vals = Vec::new();
+    let mut rem_rows = Vec::new();
+    for i in 0..n {
+        let (cols, vals) = a.row(i);
+        if cols.len() > threshold {
+            rem_rows.push(i as u32);
+            rem_cols.extend_from_slice(cols);
+            rem_vals.extend_from_slice(vals);
+            rem_ptr.push(rem_cols.len() as u32);
+        } else {
+            body_rows.push(i as u32);
+            body_cols.extend_from_slice(cols);
+            body_vals.extend_from_slice(vals);
+            body_ptr.push(body_cols.len() as u32);
+        }
+    }
+    SplitCsr {
+        source_rows: n,
+        source_cols: a.ncols(),
+        threshold,
+        body: Csr::from_parts(body_rows.len(), a.ncols(), body_ptr, body_cols, body_vals),
+        remainder: Csr::from_parts(rem_rows.len(), a.ncols(), rem_ptr, rem_cols, rem_vals),
+        body_rows,
+        remainder_rows: rem_rows,
+    }
+}
+
+impl<T: Scalar> SplitCsr<T> {
+    /// The original → (part, part-local row) direction of the row map.
+    pub fn locate(&self, source_row: usize) -> (RowPart, usize) {
+        match self.body_rows.binary_search(&(source_row as u32)) {
+            Ok(local) => (RowPart::Body, local),
+            Err(_) => {
+                let local = self
+                    .remainder_rows
+                    .binary_search(&(source_row as u32))
+                    .expect("source row in neither part");
+                (RowPart::Remainder, local)
+            }
+        }
+    }
+
+    /// Re-inflate the body to the source shape (remainder rows present
+    /// but empty) — the square operand the Band-k ordering pass needs.
+    /// The hub *columns* stay: body rows keep every entry they had, so
+    /// the ordering still sees the full body connectivity.
+    pub fn body_square(&self) -> Csr<T> {
+        let mut row_ptr = Vec::with_capacity(self.source_rows + 1);
+        row_ptr.push(0u32);
+        let mut next = 0usize;
+        for r in 0..self.source_rows {
+            let mut end = *row_ptr.last().unwrap();
+            if next < self.body_rows.len() && self.body_rows[next] as usize == r {
+                end += self.body.row_nnz(next) as u32;
+                next += 1;
+            }
+            row_ptr.push(end);
+        }
+        Csr::from_parts(
+            self.source_rows,
+            self.source_cols,
+            row_ptr,
+            self.body.col_idx().to_vec(),
+            self.body.vals().to_vec(),
+        )
+    }
+
+    /// Apply a symmetric permutation of the *source* index space
+    /// (`new_of_old`, length = source rows = source cols) to the compact
+    /// body: rows are resorted by their permuted position and columns
+    /// relabeled, exactly as `Permutation::apply_sym` would act on
+    /// [`SplitCsr::body_square`] minus the empty remainder slots.
+    /// Returns the permuted body and its row map (permuted-body-local →
+    /// source row) — the split map already composed with the
+    /// permutation, which is what the composite kernel scatters through.
+    pub fn permuted_body(&self, new_of_old: &[u32]) -> (Csr<T>, Vec<u32>) {
+        assert_eq!(
+            new_of_old.len(),
+            self.source_rows,
+            "permutation must cover the source rows"
+        );
+        assert_eq!(
+            self.source_rows, self.source_cols,
+            "symmetric permutation needs a square source"
+        );
+        let nb = self.body_rows.len();
+        let mut order: Vec<u32> = (0..nb as u32).collect();
+        order.sort_by_key(|&l| new_of_old[self.body_rows[l as usize] as usize]);
+        let mut coo = Coo::new(nb, self.source_cols);
+        let mut rows = Vec::with_capacity(nb);
+        for (new_local, &l) in order.iter().enumerate() {
+            rows.push(self.body_rows[l as usize]);
+            let (cols, vals) = self.body.row(l as usize);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(new_local, new_of_old[c as usize] as usize, v);
+            }
+        }
+        (coo.to_csr(), rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn partition_invariants_on_hub_matrix() {
+        let a = gen::circuit::<f64>(32, 32, 7);
+        let t = 16;
+        let s = split_by_row_nnz(&a, t);
+        // nnz partition
+        assert_eq!(s.body.nnz() + s.remainder.nnz(), a.nnz());
+        // every row in exactly one part
+        assert_eq!(s.body_rows.len() + s.remainder_rows.len(), a.nrows());
+        assert_eq!(s.body.nrows(), s.body_rows.len());
+        assert_eq!(s.remainder.nrows(), s.remainder_rows.len());
+        for i in 0..a.nrows() {
+            let (part, local) = s.locate(i);
+            let (cols, vals) = a.row(i);
+            let (pc, pv) = match part {
+                RowPart::Body => {
+                    assert!(cols.len() <= t);
+                    s.body.row(local)
+                }
+                RowPart::Remainder => {
+                    assert!(cols.len() > t);
+                    s.remainder.row(local)
+                }
+            };
+            assert_eq!(cols, pc, "row {i} columns survive the split");
+            assert_eq!(vals, pv, "row {i} values survive the split");
+        }
+        // the circuit generator's hub rails actually land in the remainder
+        assert!(!s.remainder_rows.is_empty(), "expected hub rows above {t}");
+        assert!(s.remainder_rows.len() < a.nrows() / 50, "hubs must be few");
+    }
+
+    #[test]
+    fn scattered_part_spmv_reassembles_reference() {
+        let a = gen::circuit::<f64>(24, 24, 3);
+        let n = a.nrows();
+        let s = split_by_row_nnz(&a, 12);
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 1) % 13) as f64 - 6.0).collect();
+        let mut y_ref = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        let mut yb = vec![0.0; s.body.nrows()];
+        s.body.spmv_ref(&x, &mut yb);
+        let mut yr = vec![0.0; s.remainder.nrows()];
+        s.remainder.spmv_ref(&x, &mut yr);
+        let mut y = vec![f64::NAN; n];
+        for (l, &o) in s.body_rows.iter().enumerate() {
+            y[o as usize] = yb[l];
+        }
+        for (l, &o) in s.remainder_rows.iter().enumerate() {
+            y[o as usize] = yr[l];
+        }
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-12, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn body_square_plus_remainder_is_the_source() {
+        let a = gen::circuit::<f64>(16, 16, 11);
+        let s = split_by_row_nnz(&a, 10);
+        let sq = s.body_square();
+        assert_eq!(sq.nrows(), a.nrows());
+        assert_eq!(sq.ncols(), a.ncols());
+        assert_eq!(sq.nnz() + s.remainder.nnz(), a.nnz());
+        for i in 0..a.nrows() {
+            match s.locate(i).0 {
+                RowPart::Body => assert_eq!(sq.row(i), a.row(i)),
+                RowPart::Remainder => assert_eq!(sq.row_nnz(i), 0),
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_extremes() {
+        let a = gen::grid2d_5pt::<f64>(8, 8);
+        // everything fits: remainder empty
+        let all = split_by_row_nnz(&a, a.max_row_nnz());
+        assert_eq!(all.remainder.nnz(), 0);
+        assert_eq!(all.body.nnz(), a.nnz());
+        assert_eq!(all.body_rows.len(), a.nrows());
+        // nothing fits: every nonempty row is remainder
+        let none = split_by_row_nnz(&a, 0);
+        assert_eq!(none.body.nnz(), 0);
+        assert_eq!(none.remainder.nnz(), a.nnz());
+    }
+
+    #[test]
+    fn empty_matrix_splits_empty() {
+        let a = Coo::<f64>::new(0, 0).to_csr();
+        let s = split_by_row_nnz(&a, 4);
+        assert_eq!(s.body.nrows(), 0);
+        assert_eq!(s.remainder.nrows(), 0);
+        assert_eq!(s.body_square().nrows(), 0);
+    }
+
+    #[test]
+    fn permuted_body_matches_reference_under_scatter() {
+        let a = gen::circuit::<f64>(20, 20, 5);
+        let n = a.nrows();
+        let s = split_by_row_nnz(&a, 14);
+        assert!(!s.remainder_rows.is_empty());
+        // a random symmetric permutation of the source space
+        let mut rng = Rng::new(99);
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut p);
+        let (pb, rows) = s.permuted_body(&p);
+        assert_eq!(pb.nrows(), s.body.nrows());
+        assert_eq!(pb.nnz(), s.body.nnz());
+        assert_eq!(rows.len(), s.body.nrows());
+        // y_body via the permuted body: feed permuted x, scatter by the
+        // composed row map — must equal the body rows of the reference
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut px = vec![0.0; n];
+        for (old, &new) in p.iter().enumerate() {
+            px[new as usize] = x[old];
+        }
+        let mut py = vec![0.0; pb.nrows()];
+        pb.spmv_ref(&px, &mut py);
+        let mut y_ref = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        for (l, &o) in rows.iter().enumerate() {
+            assert!(
+                (py[l] - y_ref[o as usize]).abs() < 1e-12,
+                "row {o}: {} vs {}",
+                py[l],
+                y_ref[o as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn rows_in_permuted_body_follow_the_permutation_order() {
+        let a = gen::grid2d_5pt::<f64>(6, 6);
+        let s = split_by_row_nnz(&a, a.max_row_nnz());
+        let mut rng = Rng::new(3);
+        let mut p: Vec<u32> = (0..36).collect();
+        rng.shuffle(&mut p);
+        let (_, rows) = s.permuted_body(&p);
+        for w in rows.windows(2) {
+            assert!(
+                p[w[0] as usize] < p[w[1] as usize],
+                "permuted body rows must be sorted by permuted position"
+            );
+        }
+    }
+}

@@ -22,10 +22,11 @@
 //!   `SRS = 96` fallback (§4.2 / Fig 11).
 //! * [`planner`] — the *plan* stage of the coordinator's
 //!   plan → build → bind pipeline: structure stats (row-nnz variance,
-//!   the §6 regularity criterion), the regular/irregular format
-//!   decision (Band-k + CSR-k vs CSR5 / parallel CSR), the padded
-//!   PJRT export width, and roofline-style per-device cost estimates
-//!   the server routes with.
+//!   the §6 regularity criterion), the regular / hub-pattern /
+//!   irregular format decision (Band-k + CSR-k, a hybrid body +
+//!   remainder split, or CSR5 / parallel CSR), the padded PJRT export
+//!   width, and roofline-style per-device cost estimates the server
+//!   routes with (per-part sums for hybrid plans).
 
 pub mod autotune;
 pub mod cpu;
@@ -36,4 +37,4 @@ pub mod planner;
 pub use heuristic::{
     block_dims, csr3_params, csr3_params_multi, effective_rdensity, Device, TuneParams,
 };
-pub use planner::{DeviceKind, FormatPlan, MatrixStats, PlannedKernel, ReorderPlan};
+pub use planner::{DeviceKind, FormatPlan, MatrixStats, PartPlan, PlannedKernel, ReorderPlan};

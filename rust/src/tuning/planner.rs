@@ -7,27 +7,40 @@
 //! (Liu & Vinter's speculative segmented sum) and SELL-C-σ-style
 //! layouts as the right fallback. The planner makes that conditionality
 //! executable: given a matrix's structure statistics it decides, before
-//! anything expensive runs,
+//! anything expensive runs, which [`FormatPlan`] the build stage
+//! executes.
 //!
-//! 1. whether to reorder (Band-k with the §4.1 group targets — regular
-//!    matrices only; irregular matrices keep their labeling and an
-//!    identity permutation),
-//! 2. which CPU kernel the build stage should construct (CSR-2 at the
-//!    §4.2 constant-time SRS for regular structure; CSR5 or
-//!    nnz-balanced parallel CSR for irregular),
-//! 3. whether and at what width to export the padded PJRT layout
-//!    (regular only — padding a power-law matrix to its hub width
-//!    wastes `O(max_row_nnz / rdensity)` of the accelerator stream),
-//! 4. a roofline-style cost estimate per [`DeviceKind`] (reusing the
-//!    Fig 1 machinery in [`crate::analysis::roofline`]) that the server
-//!    routes requests with.
+//! Three structure classes map to the two plan shapes:
 //!
-//! The estimates are *relative* numbers for routing, not wall-clock
+//! 1. **Regular** (variance ≤ 10) → [`FormatPlan::Single`] on the
+//!    paper's path: Band-k with the §4.1 group targets, CSR-2 at the
+//!    §4.2 constant-time SRS, padded PJRT export at the clamped
+//!    next-power-of-two width.
+//! 2. **Hub pattern** (variance > 10, but removing at most
+//!    [`MAX_HUB_ROW_FRACTION`] of the rows — the hubs above a row-nnz
+//!    cutoff — restores body variance ≤ 10) → [`FormatPlan::Hybrid`]:
+//!    the matrix splits at the cutoff (`sparse::split`) into a body
+//!    that still earns the full Band-k + CSR-2 treatment and a hub
+//!    remainder on a skew-tolerant kernel, composed back together by
+//!    `kernels::composite`. This is the `gen::circuit` class — grids
+//!    with a few power rails — which an all-or-nothing plan would
+//!    route wholesale to CSR5, forfeiting the fast path on 99 % of the
+//!    rows.
+//! 3. **Wholesale irregular** (heavy-tailed; no small hub set explains
+//!    the variance) → [`FormatPlan::Single`] with no reorder and CSR5
+//!    or nnz-balanced parallel CSR, as before.
+//!
+//! Every plan carries a roofline-style cost estimate per
+//! [`DeviceKind`] (reusing the Fig 1 machinery in
+//! [`crate::analysis::roofline`]); a hybrid plan's estimate **sums the
+//! per-part rooflines** (each part streams its own slice of the matrix
+//! plus the shared `x`, and pays its own dispatch overhead). The
+//! estimates are *relative* numbers for routing, not wall-clock
 //! predictions: both devices are priced with the same accounting, so
 //! the cheaper one is the better bet even when the absolute scale is
 //! off.
 
-use crate::analysis::roofline::spmv_arithmetic_intensity;
+use crate::analysis::roofline::spmv_bytes;
 use crate::gpusim::device::{DeviceSpec, AMPERE_A100};
 use crate::sparse::{Csr, Scalar};
 use crate::tuning::cpu::FIXED_SRS;
@@ -48,9 +61,16 @@ pub const REGULARITY_VARIANCE_MAX: f64 = 10.0;
 
 /// Below this many nonzeros the CSR5 tile machinery (descriptors,
 /// per-tile carries, sequential calibration) costs more than the skew
-/// it fixes; irregular matrices this small plan nnz-balanced parallel
-/// CSR instead.
+/// it fixes; irregular matrices (and hybrid remainders) this small plan
+/// nnz-balanced parallel CSR instead.
 pub const CSR5_MIN_NNZ: usize = 2048;
+
+/// Hub-detection cap: a hybrid plan may classify at most this fraction
+/// of the rows as hubs. If peeling that many of the longest rows still
+/// leaves the body irregular, the skew is genuinely heavy-tailed
+/// (power-law class) and the wholesale irregular path is the right
+/// call — a split would just move the problem into the remainder.
+pub const MAX_HUB_ROW_FRACTION: f64 = 0.01;
 
 /// The deterministic Band-k seed the registration path has always used.
 pub const BANDK_SEED: u64 = 0xC52D;
@@ -122,7 +142,7 @@ impl MatrixStats {
     }
 }
 
-/// Which CPU kernel the build stage should construct.
+/// Which CPU kernel a plan (or one part of a hybrid plan) builds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlannedKernel {
     /// CSR-2 with uniform super-rows (the §4.2 CPU configuration).
@@ -162,7 +182,7 @@ impl PlannedKernel {
 }
 
 /// Reordering decision: run Band-k with these targets. Absent from a
-/// plan ⇒ keep the native labeling (identity permutation).
+/// plan (or part) ⇒ keep the native labeling (identity permutation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReorderPlan {
     /// CSR-k depth (2 or 3).
@@ -175,65 +195,184 @@ pub struct ReorderPlan {
     pub seed: u64,
 }
 
-/// The complete per-matrix decision the registration path executes:
-/// structure stats, the reorder/kernel/export choices, and per-device
-/// cost estimates for routing.
-#[derive(Debug, Clone)]
-pub struct FormatPlan {
-    /// Measured structure.
-    pub stats: MatrixStats,
-    /// Band-k targets, or `None` for the no-reorder (identity) path.
+/// One part of a hybrid plan: how many rows/nonzeros it covers, whether
+/// it reorders, and which kernel the build stage constructs for it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartPlan {
+    /// Rows this part covers.
+    pub rows: usize,
+    /// Nonzeros this part covers.
+    pub nnz: usize,
+    /// Band-k targets for this part, or `None` for identity order.
     pub reorder: Option<ReorderPlan>,
-    /// CPU kernel to build.
+    /// Kernel the build stage constructs for this part.
     pub kernel: PlannedKernel,
-    /// The §4.1 GPU parameters at the hinted block width (recorded for
-    /// observability even when no GPU runs — they are what sized the
-    /// Band-k groups).
-    pub gpu_params: TuneParams,
-    /// Padded-export width for the PJRT binding, or `None` to skip the
-    /// accelerator path for this matrix.
-    pub pjrt_width: Option<usize>,
-    /// Estimated seconds per single-vector SpMV, one entry per device
-    /// the plan considers viable. Relative numbers for routing.
-    pub costs: Vec<(DeviceKind, f64)>,
+}
+
+impl PartPlan {
+    /// One-line part description for summaries and `describe()`.
+    pub fn summary(&self) -> String {
+        let mut s = format!("rows {} nnz {} {}", self.rows, self.nnz, self.kernel.label());
+        if let Some(r) = self.reorder {
+            s.push_str(&format!(" bandk(k{} srs {} ssrs {})", r.k, r.srs, r.ssrs));
+        }
+        s
+    }
+}
+
+/// The complete per-matrix decision the registration path executes.
+///
+/// `Single` is the one-kernel-covers-everything shape both original
+/// structure classes use; `Hybrid` splits the matrix at a row-nnz
+/// threshold into composable per-part executions (`sparse::split` +
+/// `kernels::composite`).
+#[derive(Debug, Clone)]
+pub enum FormatPlan {
+    /// One kernel covers the whole matrix.
+    Single {
+        /// Measured structure.
+        stats: MatrixStats,
+        /// Band-k targets, or `None` for the no-reorder (identity) path.
+        reorder: Option<ReorderPlan>,
+        /// CPU kernel to build.
+        kernel: PlannedKernel,
+        /// The §4.1 GPU parameters at the hinted block width (recorded
+        /// for observability even when no GPU runs — they are what
+        /// sized the Band-k groups).
+        gpu_params: TuneParams,
+        /// Padded-export width for the PJRT binding, or `None` to skip
+        /// the accelerator path for this matrix.
+        pjrt_width: Option<usize>,
+        /// Estimated seconds per single-vector SpMV, one entry per
+        /// device the plan considers viable. Relative numbers for
+        /// routing.
+        costs: Vec<(DeviceKind, f64)>,
+    },
+    /// Body + hub-remainder split at a row-nnz threshold; each part
+    /// runs its own kernel and the results scatter back together.
+    Hybrid {
+        /// Measured structure (of the whole matrix).
+        stats: MatrixStats,
+        /// The row-nnz cutoff: rows with more nonzeros are remainder.
+        threshold: usize,
+        /// The structured part — still takes Band-k + CSR-2, with the
+        /// permutation composed against the split map at build time.
+        body: PartPlan,
+        /// The hub rows, on a skew-tolerant kernel, identity order.
+        remainder: PartPlan,
+        /// §4.1 GPU parameters at the *body* density (they size the
+        /// body's Band-k groups).
+        gpu_params: TuneParams,
+        /// Per-device cost estimates: the CPU entry sums the per-part
+        /// rooflines. No PJRT entry — the padded export stays off until
+        /// multi-device part placement lands (ROADMAP).
+        costs: Vec<(DeviceKind, f64)>,
+    },
 }
 
 impl FormatPlan {
+    /// Measured structure of the planned matrix.
+    pub fn stats(&self) -> &MatrixStats {
+        match self {
+            FormatPlan::Single { stats, .. } => stats,
+            FormatPlan::Hybrid { stats, .. } => stats,
+        }
+    }
+
+    /// Per-device cost estimates (seconds per single-vector SpMV).
+    pub fn costs(&self) -> &[(DeviceKind, f64)] {
+        match self {
+            FormatPlan::Single { costs, .. } => costs,
+            FormatPlan::Hybrid { costs, .. } => costs,
+        }
+    }
+
     /// Estimated cost on one device, if the plan considers it.
     pub fn cost(&self, device: DeviceKind) -> Option<f64> {
-        self.costs
+        self.costs()
             .iter()
             .find(|(d, _)| *d == device)
             .map(|&(_, c)| c)
     }
 
+    /// Padded-export width for the PJRT binding (`None` for hybrid
+    /// plans and for single plans that skip the accelerator path).
+    pub fn pjrt_width(&self) -> Option<usize> {
+        match self {
+            FormatPlan::Single { pjrt_width, .. } => *pjrt_width,
+            FormatPlan::Hybrid { .. } => None,
+        }
+    }
+
+    /// Does any part of this plan run Band-k?
+    pub fn reorders(&self) -> bool {
+        match self {
+            FormatPlan::Single { reorder, .. } => reorder.is_some(),
+            FormatPlan::Hybrid { body, remainder, .. } => {
+                body.reorder.is_some() || remainder.reorder.is_some()
+            }
+        }
+    }
+
+    /// Is this a body + remainder split?
+    pub fn is_hybrid(&self) -> bool {
+        matches!(self, FormatPlan::Hybrid { .. })
+    }
+
+    /// Short kernel label: the single kernel's, or
+    /// `hybrid(body+remainder)`.
+    pub fn kernel_label(&self) -> String {
+        match self {
+            FormatPlan::Single { kernel, .. } => kernel.label().to_string(),
+            FormatPlan::Hybrid { body, remainder, .. } => {
+                format!("hybrid({}+{})", body.kernel.label(), remainder.kernel.label())
+            }
+        }
+    }
+
     /// One-line human-readable summary (the registry's `describe()`).
-    /// Note the costs printed here are *plan-time* estimates over every
-    /// device the plan priced; actual dispatch goes through
+    /// Hybrid plans report the per-part breakdown — format, rows and
+    /// nnz of body and remainder plus the split threshold. Note the
+    /// costs printed here are *plan-time* estimates over every device
+    /// the plan priced; actual dispatch goes through
     /// `MatrixEntry::route`, which also requires the device to have
     /// bound successfully.
     pub fn summary(&self) -> String {
+        let stats = self.stats();
         let mut s = format!(
-            "{} [{}x{} nnz {} rdensity {:.2} var {:.1} maxrow {} bw {}]: {}",
-            if self.stats.is_regular() { "regular" } else { "irregular" },
-            self.stats.nrows,
-            self.stats.ncols,
-            self.stats.nnz,
-            self.stats.rdensity,
-            self.stats.row_nnz_variance,
-            self.stats.max_row_nnz,
-            self.stats.bandwidth,
-            self.kernel.label(),
+            "{} [{}x{} nnz {} rdensity {:.2} var {:.1} maxrow {} bw {}]: ",
+            if stats.is_regular() { "regular" } else { "irregular" },
+            stats.nrows,
+            stats.ncols,
+            stats.nnz,
+            stats.rdensity,
+            stats.row_nnz_variance,
+            stats.max_row_nnz,
+            stats.bandwidth,
         );
-        match self.reorder {
-            Some(r) => s.push_str(&format!(" bandk(k{} srs {} ssrs {})", r.k, r.srs, r.ssrs)),
-            None => s.push_str(" no-reorder"),
+        match self {
+            FormatPlan::Single { reorder, kernel, pjrt_width, .. } => {
+                s.push_str(kernel.label());
+                match reorder {
+                    Some(r) => {
+                        s.push_str(&format!(" bandk(k{} srs {} ssrs {})", r.k, r.srs, r.ssrs))
+                    }
+                    None => s.push_str(" no-reorder"),
+                }
+                match pjrt_width {
+                    Some(w) => s.push_str(&format!(" pjrt-width {w}")),
+                    None => s.push_str(" no-pjrt"),
+                }
+            }
+            FormatPlan::Hybrid { threshold, body, remainder, .. } => {
+                s.push_str(&format!(
+                    "hybrid split@{threshold} body[{}] + remainder[{}] no-pjrt",
+                    body.summary(),
+                    remainder.summary(),
+                ));
+            }
         }
-        match self.pjrt_width {
-            Some(w) => s.push_str(&format!(" pjrt-width {w}")),
-            None => s.push_str(" no-pjrt"),
-        }
-        for &(d, c) in &self.costs {
+        for &(d, c) in self.costs() {
             s.push_str(&format!(" {d:?} {:.1}us", c * 1e6));
         }
         s
@@ -249,16 +388,18 @@ pub fn plan<T: Scalar>(a: &Csr<T>) -> FormatPlan {
 /// Band-k group targets come from the §4.1 heuristic at the
 /// block-width-scaled effective density
 /// ([`crate::tuning::csr3_params_multi`]), exactly as
-/// `register_hinted` always chose them.
+/// `register_hinted` always chose them. For hybrid plans the heuristic
+/// runs at the *body* density — the body is what Band-k reorders.
 pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
     let stats = MatrixStats::of(a);
-    let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, block_hint.max(1));
+    let hint = block_hint.max(1);
 
-    let (reorder, kernel, pjrt_width) = if stats.is_regular() {
+    if stats.is_regular() {
         // The paper's path, with its §4 heuristics unchanged: Band-k
         // sized by the GPU group targets, CSR-2 at the constant-time
         // CPU SRS, padded export at the next power of two ≥ the longest
         // row (clamped to the AOT bucket widths).
+        let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
         let reorder = ReorderPlan {
             k: 3,
             srs: gpu_params.srs.max(2),
@@ -266,40 +407,158 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             seed: BANDK_SEED,
         };
         let width = stats.max_row_nnz.next_power_of_two().clamp(8, 32);
-        (Some(reorder), PlannedKernel::Csr2 { srs: FIXED_SRS }, Some(width))
-    } else {
-        // Irregular: reordering for band structure does not fix row
-        // skew, and the padded export would stream mostly padding (or
-        // serialize the hubs through the host-side overflow fix-up) —
-        // skip both and pick a format built for skew.
-        let kernel = if stats.nnz < CSR5_MIN_NNZ {
-            PlannedKernel::CsrParallel
-        } else {
-            // ω = 8 (AVX2 f32 lanes — the serving path is f32),
-            // σ = 16: the mid-sweep shape the CSR5 paper's CPU
-            // autotuner most often lands on.
-            PlannedKernel::Csr5 { omega: 8, sigma: 16 }
+        let costs = vec![
+            (DeviceKind::Cpu, cpu_cost(a)),
+            (DeviceKind::Pjrt, pjrt_cost(a, width)),
+        ];
+        return FormatPlan::Single {
+            stats,
+            reorder: Some(reorder),
+            kernel: PlannedKernel::Csr2 { srs: FIXED_SRS },
+            gpu_params,
+            pjrt_width: Some(width),
+            costs,
         };
-        (None, kernel, None)
-    };
-
-    let mut costs = vec![(DeviceKind::Cpu, cpu_cost(a))];
-    if let Some(width) = pjrt_width {
-        costs.push((DeviceKind::Pjrt, pjrt_cost(a, width)));
     }
 
-    FormatPlan { stats, reorder, kernel, gpu_params, pjrt_width, costs }
+    if let Some(h) = detect_hub_split(a) {
+        // Hub pattern: a small set of rail rows explains the variance.
+        // The body earns the full regular treatment (Band-k targets at
+        // the body's density); the hubs go to a skew-tolerant kernel in
+        // identity order. The cost estimate sums the per-part
+        // rooflines: each part streams its own matrix slice plus the
+        // shared x and pays its own dispatch overhead.
+        let gpu_params = csr3_params_multi(Device::Ampere, h.body_rdensity, hint);
+        let body = PartPlan {
+            rows: h.body_rows,
+            nnz: h.body_nnz,
+            reorder: Some(ReorderPlan {
+                k: 3,
+                srs: gpu_params.srs.max(2),
+                ssrs: gpu_params.ssrs.max(2),
+                seed: BANDK_SEED,
+            }),
+            kernel: PlannedKernel::Csr2 { srs: FIXED_SRS },
+        };
+        let remainder = PartPlan {
+            rows: h.hub_rows,
+            nnz: h.hub_nnz,
+            reorder: None,
+            kernel: irregular_kernel(h.hub_nnz),
+        };
+        let cost = part_cpu_cost::<T>(h.body_rows, stats.ncols, h.body_nnz)
+            + part_cpu_cost::<T>(h.hub_rows, stats.ncols, h.hub_nnz);
+        return FormatPlan::Hybrid {
+            stats,
+            threshold: h.threshold,
+            body,
+            remainder,
+            gpu_params,
+            costs: vec![(DeviceKind::Cpu, cost)],
+        };
+    }
+
+    // Wholesale irregular: reordering for band structure does not fix
+    // row skew, and the padded export would stream mostly padding (or
+    // serialize the hubs through the host-side overflow fix-up) — skip
+    // both and pick a format built for skew.
+    let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
+    let kernel = irregular_kernel(stats.nnz);
+    let costs = vec![(DeviceKind::Cpu, cpu_cost(a))];
+    FormatPlan::Single { stats, reorder: None, kernel, gpu_params, pjrt_width: None, costs }
+}
+
+/// The skew-tolerant kernel choice shared by the wholesale-irregular
+/// plan and the hybrid remainder: CSR5 (ω = 8 AVX2 f32 lanes, σ = 16 —
+/// the mid-sweep shape the CSR5 paper's CPU autotuner most often lands
+/// on) above [`CSR5_MIN_NNZ`], nnz-balanced parallel CSR below it.
+fn irregular_kernel(nnz: usize) -> PlannedKernel {
+    if nnz < CSR5_MIN_NNZ {
+        PlannedKernel::CsrParallel
+    } else {
+        PlannedKernel::Csr5 { omega: 8, sigma: 16 }
+    }
+}
+
+/// A detected hub split: peeling `hub_rows` rows (all with
+/// `nnz > threshold`) restores §6 regularity for the body.
+struct HubSplit {
+    threshold: usize,
+    hub_rows: usize,
+    hub_nnz: usize,
+    body_rows: usize,
+    body_nnz: usize,
+    body_rdensity: f64,
+}
+
+/// Look for the hub pattern in an irregular matrix: the smallest set of
+/// longest rows — at most [`MAX_HUB_ROW_FRACTION`] of all rows — whose
+/// removal drops the remaining (body) row-nnz variance to the §6
+/// threshold. Candidate cutoffs walk the distinct row-nnz values from
+/// the top; variance updates incrementally, so detection is
+/// `O(n log n)` in the sort. Returns `None` when no small hub set
+/// explains the skew (the power-law class).
+fn detect_hub_split<T: Scalar>(a: &Csr<T>) -> Option<HubSplit> {
+    let n = a.nrows();
+    if n < 2 {
+        return None;
+    }
+    let max_hubs = ((n as f64) * MAX_HUB_ROW_FRACTION).floor() as usize;
+    if max_hubs == 0 {
+        return None;
+    }
+    let mut nnz_desc: Vec<usize> = (0..n).map(|i| a.row_nnz(i)).collect();
+    nnz_desc.sort_unstable_by_key(|&d| std::cmp::Reverse(d));
+    let mut s = a.nnz(); // body nnz after peeling k rows
+    let mut q: u128 = nnz_desc.iter().map(|&d| (d as u128) * (d as u128)).sum();
+    let mut k = 0usize;
+    while k < max_hubs.min(n - 1) {
+        let d = nnz_desc[k];
+        s -= d;
+        q -= (d as u128) * (d as u128);
+        k += 1;
+        if nnz_desc[k] == nnz_desc[k - 1] {
+            // mid-group: a row-nnz cutoff cannot separate equal rows
+            continue;
+        }
+        let m = (n - k) as f64;
+        let mean = s as f64 / m;
+        let variance = q as f64 / m - mean * mean;
+        if variance <= REGULARITY_VARIANCE_MAX {
+            return Some(HubSplit {
+                // the longest *body* row: rows strictly above it are
+                // exactly the k peeled hubs
+                threshold: nnz_desc[k],
+                hub_rows: k,
+                hub_nnz: a.nnz() - s,
+                body_rows: n - k,
+                body_nnz: s,
+                body_rdensity: mean,
+            });
+        }
+    }
+    None
 }
 
 /// Roofline cost of one SpMV on the host CPU: the Fig 1 cold-cache
 /// arithmetic intensity against the CPU proxy roofline, plus the pool
 /// dispatch overhead.
 fn cpu_cost<T: Scalar>(a: &Csr<T>) -> f64 {
-    let flops = a.spmv_flops();
+    part_cpu_cost::<T>(a.nrows(), a.ncols(), a.nnz())
+}
+
+/// The same roofline priced from raw part dimensions, so hybrid plans
+/// can sum per-part estimates without materializing the split: `2·nnz`
+/// FLOPs over the part's [`spmv_bytes`] stream (each part reads the
+/// shared `x` itself — the split does not remap columns), plus one
+/// pool dispatch per part.
+fn part_cpu_cost<T: Scalar>(nrows: usize, ncols: usize, nnz: usize) -> f64 {
+    let flops = 2.0 * nnz as f64;
     if flops == 0.0 {
         return CPU_ROOFLINE.launch_overhead_s;
     }
-    let ai = spmv_arithmetic_intensity(a);
+    let bytes = spmv_bytes(nrows, ncols, nnz, std::mem::size_of::<T>());
+    let ai = flops / bytes as f64;
     flops / (CPU_ROOFLINE.roofline_gflops(ai) * 1e9) + CPU_ROOFLINE.launch_overhead_s
 }
 
@@ -335,20 +594,25 @@ mod tests {
         let a = gen::grid2d_5pt::<f32>(24, 24);
         let hint = 8;
         let p = plan_hinted(&a, hint);
-        assert!(p.stats.is_regular(), "grid variance {}", p.stats.row_nnz_variance);
+        assert!(p.stats().is_regular(), "grid variance {}", p.stats().row_nnz_variance);
         // the §4.1 group targets are exactly the pre-planner values
         let expect = csr3_params_multi(Device::Ampere, a.rdensity(), hint);
-        let r = p.reorder.expect("regular matrices reorder");
-        assert_eq!(r.k, 3);
-        assert_eq!(r.srs, expect.srs.max(2));
-        assert_eq!(r.ssrs, expect.ssrs.max(2));
-        assert_eq!(r.seed, BANDK_SEED);
-        assert_eq!(p.kernel, PlannedKernel::Csr2 { srs: FIXED_SRS });
-        // padded width: next pow2 ≥ max row nnz, clamped to [8, 32]
-        assert_eq!(
-            p.pjrt_width,
-            Some(a.max_row_nnz().next_power_of_two().clamp(8, 32))
-        );
+        match &p {
+            FormatPlan::Single { reorder, kernel, pjrt_width, .. } => {
+                let r = reorder.expect("regular matrices reorder");
+                assert_eq!(r.k, 3);
+                assert_eq!(r.srs, expect.srs.max(2));
+                assert_eq!(r.ssrs, expect.ssrs.max(2));
+                assert_eq!(r.seed, BANDK_SEED);
+                assert_eq!(*kernel, PlannedKernel::Csr2 { srs: FIXED_SRS });
+                // padded width: next pow2 ≥ max row nnz, clamped to [8, 32]
+                assert_eq!(
+                    *pjrt_width,
+                    Some(a.max_row_nnz().next_power_of_two().clamp(8, 32))
+                );
+            }
+            FormatPlan::Hybrid { .. } => panic!("regular matrices plan Single"),
+        }
         assert!(p.cost(DeviceKind::Cpu).is_some());
         assert!(p.cost(DeviceKind::Pjrt).is_some());
     }
@@ -358,23 +622,104 @@ mod tests {
         let a = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
         assert!(a.nnz() >= CSR5_MIN_NNZ, "nnz {}", a.nnz());
         let p = plan(&a);
-        assert!(!p.stats.is_regular());
-        assert!(p.reorder.is_none(), "irregular matrices keep their labeling");
-        assert_eq!(p.kernel, PlannedKernel::Csr5 { omega: 8, sigma: 16 });
-        assert_eq!(p.pjrt_width, None);
+        assert!(!p.stats().is_regular());
+        assert!(
+            !p.is_hybrid(),
+            "heavy-tailed skew must not be mistaken for a hub pattern: {}",
+            p.summary()
+        );
+        assert!(!p.reorders(), "irregular matrices keep their labeling");
+        match &p {
+            FormatPlan::Single { kernel, .. } => {
+                assert_eq!(*kernel, PlannedKernel::Csr5 { omega: 8, sigma: 16 })
+            }
+            FormatPlan::Hybrid { .. } => unreachable!(),
+        }
+        assert_eq!(p.pjrt_width(), None);
         assert_eq!(p.cost(DeviceKind::Pjrt), None);
-        assert_eq!(p.costs.len(), 1, "irregular plans price CPU only");
+        assert_eq!(p.costs().len(), 1, "irregular plans price CPU only");
     }
 
     #[test]
     fn small_irregular_matrix_plans_parallel_csr() {
         // variance ((9-1)/2)² = 16 > 10, nnz = 25·1 + 25·9 = 250 <
-        // CSR5_MIN_NNZ
+        // CSR5_MIN_NNZ; half the rows are long, so no 1 %-bounded hub
+        // set can explain the skew
         let a = gen::alternating_rows::<f32>(50, 1, 9);
         let p = plan(&a);
-        assert!(!p.stats.is_regular());
-        assert_eq!(p.kernel, PlannedKernel::CsrParallel);
-        assert!(p.reorder.is_none());
+        assert!(!p.stats().is_regular());
+        assert!(!p.is_hybrid());
+        match &p {
+            FormatPlan::Single { kernel, reorder, .. } => {
+                assert_eq!(*kernel, PlannedKernel::CsrParallel);
+                assert!(reorder.is_none());
+            }
+            FormatPlan::Hybrid { .. } => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn hub_pattern_plans_hybrid_with_regular_body() {
+        // gen::circuit at this scale: one ~128-strap power rail on a
+        // 1024-row grid ⇒ variance > 10 wholesale, but peeling the rail
+        // restores body regularity
+        let a = gen::circuit::<f32>(32, 32, 7);
+        assert!(
+            a.row_nnz_variance() > REGULARITY_VARIANCE_MAX,
+            "variance {}",
+            a.row_nnz_variance()
+        );
+        let p = plan(&a);
+        assert!(p.is_hybrid(), "{}", p.summary());
+        assert!(p.reorders(), "the hybrid body still takes Band-k");
+        assert_eq!(p.pjrt_width(), None, "hybrid plans skip the padded export");
+        match &p {
+            FormatPlan::Hybrid { threshold, body, remainder, .. } => {
+                // partition accounting
+                assert_eq!(body.rows + remainder.rows, a.nrows());
+                assert_eq!(body.nnz + remainder.nnz, a.nnz());
+                // few hubs, each genuinely above the cutoff
+                assert!(remainder.rows >= 1);
+                assert!(
+                    remainder.rows as f64 <= a.nrows() as f64 * MAX_HUB_ROW_FRACTION,
+                    "hub count {} over the cap",
+                    remainder.rows
+                );
+                assert!(*threshold < a.max_row_nnz());
+                // body gets the paper treatment, remainder skew handling
+                assert!(matches!(body.kernel, PlannedKernel::Csr2 { .. }));
+                assert!(body.reorder.is_some());
+                assert!(remainder.reorder.is_none());
+                assert!(matches!(
+                    remainder.kernel,
+                    PlannedKernel::CsrParallel | PlannedKernel::Csr5 { .. }
+                ));
+                // threshold really separates the parts
+                let hubs = (0..a.nrows()).filter(|&i| a.row_nnz(i) > *threshold).count();
+                assert_eq!(hubs, remainder.rows);
+            }
+            FormatPlan::Single { .. } => unreachable!(),
+        }
+        // per-part roofline sum prices CPU only
+        assert_eq!(p.costs().len(), 1);
+        assert!(p.cost(DeviceKind::Cpu).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn hybrid_cost_sums_per_part_rooflines() {
+        let a = gen::circuit::<f32>(32, 32, 7);
+        let p = plan(&a);
+        let (body, remainder) = match &p {
+            FormatPlan::Hybrid { body, remainder, .. } => (body, remainder),
+            FormatPlan::Single { .. } => panic!("expected hybrid"),
+        };
+        let expect = part_cpu_cost::<f32>(body.rows, a.ncols(), body.nnz)
+            + part_cpu_cost::<f32>(remainder.rows, a.ncols(), remainder.nnz);
+        let got = p.cost(DeviceKind::Cpu).unwrap();
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+        // two dispatch overheads + double-counted x stream ⇒ the sum
+        // exceeds pricing the same matrix as one part
+        assert!(got > part_cpu_cost::<f32>(a.nrows(), a.ncols(), a.nnz()));
     }
 
     #[test]
@@ -382,9 +727,17 @@ mod tests {
         let a = gen::grid3d_7pt::<f32>(8, 8, 8);
         let p1 = plan(&a);
         let p2 = plan_hinted(&a, 1);
-        assert_eq!(p1.reorder, p2.reorder);
-        assert_eq!(p1.kernel, p2.kernel);
-        assert_eq!(p1.pjrt_width, p2.pjrt_width);
+        match (&p1, &p2) {
+            (
+                FormatPlan::Single { reorder: r1, kernel: k1, pjrt_width: w1, .. },
+                FormatPlan::Single { reorder: r2, kernel: k2, pjrt_width: w2, .. },
+            ) => {
+                assert_eq!(r1, r2);
+                assert_eq!(k1, k2);
+                assert_eq!(w1, w2);
+            }
+            _ => panic!("grid plans Single"),
+        }
     }
 
     #[test]
@@ -396,7 +749,7 @@ mod tests {
             "bigger matrices must cost more"
         );
         for p in [&small, &large] {
-            for &(_, c) in &p.costs {
+            for &(_, c) in p.costs() {
                 assert!(c.is_finite() && c > 0.0);
             }
         }
@@ -413,13 +766,56 @@ mod tests {
         let s = p.summary();
         assert!(s.contains("regular"), "{s}");
         assert!(s.contains("bandk"), "{s}");
+        // hybrid summaries carry the per-part breakdown
+        let p = plan(&gen::circuit::<f32>(32, 32, 7));
+        let s = p.summary();
+        assert!(s.contains("hybrid"), "{s}");
+        assert!(s.contains("split@"), "{s}");
+        assert!(s.contains("body[rows"), "{s}");
+        assert!(s.contains("remainder[rows"), "{s}");
+        assert!(s.contains("bandk"), "{s}");
+        assert_eq!(p.kernel_label(), format!("hybrid(csr2+{})", match &p {
+            FormatPlan::Hybrid { remainder, .. } => remainder.kernel.label(),
+            FormatPlan::Single { .. } => unreachable!(),
+        }));
     }
 
     #[test]
     fn empty_matrix_plans_without_panicking() {
         let a = Coo::<f32>::new(0, 0).to_csr();
         let p = plan(&a);
-        assert!(p.stats.is_regular());
+        assert!(p.stats().is_regular());
         assert!(p.cost(DeviceKind::Cpu).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn hub_detection_respects_the_row_fraction_cap() {
+        // 300 rows with 30 hub rows of *distinct* lengths 71..=100
+        // (10 % of the rows — ten times the cap; max_hubs = 3). The
+        // variance walk genuinely runs here — every peel lands on a
+        // distinct-value boundary, so the ≤-10 check fires at k = 1, 2
+        // and 3 — but 27 hubs always remain, the body variance stays
+        // far above the threshold, and the cap must end the walk:
+        // the plan stays Single.
+        let n = 300;
+        let mut c = Coo::<f32>::new(n, n);
+        for i in 0..n {
+            let len = if i < 30 { 71 + i } else { 3 };
+            for j in 0..len {
+                c.push(i, (i + j) % n, 1.0 + (j % 4) as f32);
+            }
+        }
+        let a = c.to_csr();
+        assert!(a.row_nnz_variance() > REGULARITY_VARIANCE_MAX);
+        let p = plan(&a);
+        assert!(!p.is_hybrid(), "cap must stop the walk: {}", p.summary());
+        assert!(!p.reorders());
+
+        // degenerate small-n case: max_hubs floors to zero, detection
+        // never starts (alternating 4/12 rows, variance 16 > 10)
+        let small = gen::alternating_rows::<f32>(64, 4, 12);
+        let p = plan(&small);
+        assert!(!p.is_hybrid());
+        assert!(!p.reorders());
     }
 }

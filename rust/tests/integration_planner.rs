@@ -1,18 +1,25 @@
 //! Planner integration: the plan → build → bind pipeline end to end.
 //!
 //! Covers the regularity decision at the §6 variance-10 boundary, the
-//! no-reorder (identity-permutation) path irregular plans take, the
-//! CSR5-planned entry against the CSR reference through both `spmv`
-//! and `spmv_multi`, and the server's cost-based routing with the
-//! per-request device override.
+//! no-reorder (identity-permutation) path wholesale-irregular plans
+//! take, the hybrid body + remainder split for hub-pattern matrices
+//! (`gen::circuit`, plus a forced split over `gen::kkt` and a
+//! CSR5-remainder hub fixture) with the split round-trip invariant,
+//! conformance of every plan shape against the CSR reference through
+//! both `spmv` and `spmv_multi`, and the server's cost-based routing
+//! with the per-request device override.
 
 use std::sync::Arc;
 
 use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
-use csrk::sparse::{gen, Csr};
-use csrk::tuning::planner::{self, PlannedKernel, REGULARITY_VARIANCE_MAX};
+use csrk::kernels::{build_execution, SpMv};
+use csrk::sparse::{gen, split_by_row_nnz, Coo, Csr};
+use csrk::tuning::planner::{
+    self, FormatPlan, MatrixStats, PartPlan, PlannedKernel, ReorderPlan,
+    REGULARITY_VARIANCE_MAX,
+};
 use csrk::tuning::{csr3_params_multi, Device};
-use csrk::util::ThreadPool;
+use csrk::util::{Rng, ThreadPool};
 
 #[test]
 fn plans_straddling_the_variance_boundary_diverge() {
@@ -20,17 +27,26 @@ fn plans_straddling_the_variance_boundary_diverge() {
     let reg = gen::alternating_rows::<f32>(64, 5, 11);
     assert!(reg.row_nnz_variance() <= REGULARITY_VARIANCE_MAX);
     let p = planner::plan(&reg);
-    assert!(p.reorder.is_some());
-    assert!(matches!(p.kernel, PlannedKernel::Csr2 { .. }));
-    assert!(p.pjrt_width.is_some());
+    assert!(!p.is_hybrid());
+    assert!(p.reorders());
+    assert!(p.pjrt_width().is_some());
+    assert!(matches!(
+        p,
+        FormatPlan::Single { kernel: PlannedKernel::Csr2 { .. }, .. }
+    ));
 
-    // variance 16 > 10: irregular — no reorder, no padded export
+    // variance 16 > 10 with *half* the rows long: irregular, and no
+    // small hub set exists — no reorder, no padded export, no split
     let irr = gen::alternating_rows::<f32>(64, 4, 12);
     assert!(irr.row_nnz_variance() > REGULARITY_VARIANCE_MAX);
     let p = planner::plan(&irr);
-    assert!(p.reorder.is_none());
-    assert!(!matches!(p.kernel, PlannedKernel::Csr2 { .. }));
-    assert!(p.pjrt_width.is_none());
+    assert!(!p.is_hybrid());
+    assert!(!p.reorders());
+    assert!(p.pjrt_width().is_none());
+    assert!(!matches!(
+        p,
+        FormatPlan::Single { kernel: PlannedKernel::Csr2 { .. }, .. }
+    ));
 }
 
 #[test]
@@ -39,12 +55,17 @@ fn regular_plan_keeps_the_paper_heuristic_parameters() {
     for hint in [1usize, 8, 16] {
         let p = planner::plan_hinted(&a, hint);
         let expect = csr3_params_multi(Device::Ampere, a.rdensity(), hint);
-        let r = p.reorder.expect("regular matrix must reorder");
-        assert_eq!(
-            (r.k, r.srs, r.ssrs),
-            (3, expect.srs.max(2), expect.ssrs.max(2)),
-            "hint {hint}: Band-k targets must be the unchanged §4.1 values"
-        );
+        match p {
+            FormatPlan::Single { reorder, .. } => {
+                let r = reorder.expect("regular matrix must reorder");
+                assert_eq!(
+                    (r.k, r.srs, r.ssrs),
+                    (3, expect.srs.max(2), expect.ssrs.max(2)),
+                    "hint {hint}: Band-k targets must be the unchanged §4.1 values"
+                );
+            }
+            FormatPlan::Hybrid { .. } => panic!("regular matrices plan Single"),
+        }
     }
 }
 
@@ -55,7 +76,8 @@ fn irregular_registration_takes_the_identity_path() {
     let a = gen::power_law::<f32>(700, 8, 1.0, 0xD1CE);
     let e = registry.register("hubs", a).unwrap();
     assert!(!e.reordered(), "irregular plans must keep the native labeling");
-    assert!(e.plan().reorder.is_none());
+    assert!(!e.plan().reorders());
+    assert!(!e.plan().is_hybrid(), "heavy tails must not be split");
     assert!(
         e.kernel_name().starts_with("csr5"),
         "expected a CSR5 kernel, got {}",
@@ -70,12 +92,20 @@ fn csr5_planned_entry_matches_reference_spmv_and_spmv_multi() {
     let a = gen::power_law::<f32>(700, 8, 1.0, 0x5EED);
     let e = registry.register("hubs", a.clone()).unwrap();
     assert!(e.kernel_name().starts_with("csr5"), "{}", e.kernel_name());
+    assert_entry_matches_reference(&e, &a, 6);
+}
 
+/// Conformance helper: entry spmv (per vector) and spmv_multi (whole
+/// block) against the CSR reference, with f32 abs/rel tolerance.
+fn assert_entry_matches_reference(
+    e: &csrk::coordinator::MatrixEntry,
+    a: &Csr<f32>,
+    nvec: usize,
+) {
     let n = a.nrows();
-    let xs: Vec<Vec<f32>> = (0..6)
+    let xs: Vec<Vec<f32>> = (0..nvec)
         .map(|j| (0..n).map(|i| ((i * 11 + j * 5 + 1) % 19) as f32 / 19.0 - 0.5).collect())
         .collect();
-    // spmv, one vector at a time
     for x in &xs {
         let y = e.spmv(DeviceKind::Cpu, x).unwrap();
         let mut y_ref = vec![0f32; n];
@@ -84,7 +114,6 @@ fn csr5_planned_entry_matches_reference_spmv_and_spmv_multi() {
             assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
         }
     }
-    // spmv_multi, the whole block at once
     let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
     let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
     for (x, y) in xs.iter().zip(&ys) {
@@ -96,25 +125,212 @@ fn csr5_planned_entry_matches_reference_spmv_and_spmv_multi() {
     }
 }
 
-/// The acceptance path: a regular and an irregular matrix served side
-/// by side through the server's cost-based routing, batched (so
-/// `spmv_multi` runs) and unbatched, all matching the reference.
+/// The tentpole acceptance row: a hub-pattern `gen::circuit` matrix is
+/// planned hybrid, registers through the full pipeline, reports the
+/// per-part breakdown, and matches the reference CSR answer through
+/// `spmv` and blocked `spmv_multi`.
 #[test]
-fn cost_based_routing_serves_both_structure_classes() {
+fn hybrid_planned_circuit_matches_reference() {
+    let a = gen::circuit::<f32>(32, 32, 7);
+    assert!(a.row_nnz_variance() > REGULARITY_VARIANCE_MAX, "fixture must be irregular");
+    let p = planner::plan(&a);
+    assert!(p.is_hybrid(), "circuit rails must plan hybrid: {}", p.summary());
+
+    let pool = Arc::new(ThreadPool::new(3));
+    let registry = MatrixRegistry::new(pool, None);
+    let e = registry.register("circuit", a.clone()).unwrap();
+    assert!(e.kernel_name().starts_with("hybrid("), "{}", e.kernel_name());
+    let d = e.describe();
+    assert!(d.contains("split@"), "{d}");
+    assert!(d.contains("body[rows"), "{d}");
+    assert!(d.contains("remainder[rows"), "{d}");
+    assert_entry_matches_reference(&e, &a, 6);
+}
+
+/// Split round-trip invariant on the hybrid-planned threshold: body
+/// nnz + remainder nnz = total, every row lands in exactly one part,
+/// and the remainder is exactly the over-threshold rows.
+#[test]
+fn hybrid_split_round_trip_invariant() {
+    let a = gen::circuit::<f32>(32, 32, 7);
+    let threshold = match planner::plan(&a) {
+        FormatPlan::Hybrid { threshold, .. } => threshold,
+        FormatPlan::Single { .. } => panic!("expected a hybrid plan"),
+    };
+    let s = split_by_row_nnz(&a, threshold);
+    assert_eq!(s.body.nnz() + s.remainder.nnz(), a.nnz());
+    assert_eq!(s.body_rows.len() + s.remainder_rows.len(), a.nrows());
+    let mut covered = vec![0u8; a.nrows()];
+    for &r in s.body_rows.iter().chain(&s.remainder_rows) {
+        covered[r as usize] += 1;
+    }
+    assert!(covered.iter().all(|&c| c == 1), "every row in exactly one part");
+    for (l, &r) in s.remainder_rows.iter().enumerate() {
+        assert!(a.row_nnz(r as usize) > threshold);
+        assert_eq!(s.remainder.row_nnz(l), a.row_nnz(r as usize));
+    }
+    for (l, &r) in s.body_rows.iter().enumerate() {
+        assert!(a.row_nnz(r as usize) <= threshold);
+        assert_eq!(s.body.row_nnz(l), a.row_nnz(r as usize));
+    }
+}
+
+/// `gen::kkt` is §6-regular (its constraint rows are *shorter*, not
+/// longer), so the planner keeps it on the paper path — pin that down,
+/// then force a split plan over it anyway to conformance-test the
+/// composite machinery (CSR-2 body + CSR5 remainder) on KKT structure.
+#[test]
+fn kkt_conformance_planned_and_forced_hybrid() {
+    let a = gen::kkt::<f32>(24, 3);
+    let p = planner::plan(&a);
+    assert!(
+        p.stats().is_regular() && !p.is_hybrid(),
+        "kkt stays on the regular path: {}",
+        p.summary()
+    );
+    let pool = Arc::new(ThreadPool::new(3));
+    let registry = MatrixRegistry::new(pool.clone(), None);
+    let e = registry.register("kkt", a.clone()).unwrap();
+    assert_entry_matches_reference(&e, &a, 5);
+
+    // forced split: H-block rows (Laplacian + constraint couplings)
+    // above the median length become the "remainder"
+    let threshold = 4;
+    let s = split_by_row_nnz(&a, threshold);
+    assert!(!s.body_rows.is_empty() && !s.remainder_rows.is_empty());
+    let stats = MatrixStats::of(&a);
+    let plan = FormatPlan::Hybrid {
+        threshold,
+        body: PartPlan {
+            rows: s.body_rows.len(),
+            nnz: s.body.nnz(),
+            reorder: Some(ReorderPlan { k: 3, srs: 8, ssrs: 4, seed: 0xC52D }),
+            kernel: PlannedKernel::Csr2 { srs: 16 },
+        },
+        remainder: PartPlan {
+            rows: s.remainder_rows.len(),
+            nnz: s.remainder.nnz(),
+            reorder: None,
+            kernel: PlannedKernel::Csr5 { omega: 4, sigma: 8 },
+        },
+        gpu_params: csr3_params_multi(Device::Ampere, a.rdensity(), 1),
+        costs: vec![(DeviceKind::Cpu, 1.0)],
+        stats,
+    };
+    let built = build_execution(&plan, a.clone(), pool, false);
+    assert!(built.exec.name().contains("csr5"), "{}", built.exec.name());
+    // conformance in original coordinates, spmv and blocked spmv_multi
+    let n = a.nrows();
+    let xs: Vec<Vec<f32>> = (0..4)
+        .map(|j| (0..n).map(|i| ((i * 7 + j * 13 + 2) % 23) as f32 / 23.0 - 0.5).collect())
+        .collect();
+    for x in &xs {
+        let mut y = vec![0f32; n];
+        built.exec.spmv(x, &mut y);
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let xb = csrk::kernels::pack_block(&refs);
+    let mut yb = vec![0f32; n * xs.len()];
+    built.exec.spmv_multi(&xb, &mut yb, xs.len());
+    for (j, x) in xs.iter().enumerate() {
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (r, v) in y_ref.iter().enumerate() {
+            let u = yb[r * xs.len() + j];
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+}
+
+/// A hub fixture big enough that the planner picks a CSR5 remainder:
+/// a 64×64 grid Laplacian with 20 rail rows of ~200 straps each
+/// (~0.5 % of rows, remainder nnz ≥ the CSR5 cutoff).
+#[test]
+fn large_hub_fixture_plans_hybrid_with_csr5_remainder() {
+    let nx = 64usize;
+    let n = nx * nx;
+    let mut c = Coo::<f32>::new(n, n);
+    let id = |x: usize, y: usize| y * nx + x;
+    for y in 0..nx {
+        for x in 0..nx {
+            let i = id(x, y);
+            let mut deg = 0;
+            for (xx, yy) in [
+                (x.wrapping_sub(1), y),
+                (x + 1, y),
+                (x, y.wrapping_sub(1)),
+                (x, y + 1),
+            ] {
+                if xx < nx && yy < nx {
+                    c.push(i, id(xx, yy), -1.0);
+                    deg += 1;
+                }
+            }
+            c.push(i, i, deg as f32 + 1.0);
+        }
+    }
+    let mut rng = Rng::new(0xAB1E);
+    for h in 0..20 {
+        let hub = rng.usize_in(0, n);
+        for _ in 0..200 {
+            let t = rng.usize_in(0, n);
+            if t != hub {
+                c.push(hub, t, 0.5 + (h % 3) as f32);
+            }
+        }
+    }
+    let a: Csr<f32> = c.to_csr();
+    assert!(a.row_nnz_variance() > REGULARITY_VARIANCE_MAX);
+
+    let p = planner::plan(&a);
+    match &p {
+        FormatPlan::Hybrid { body, remainder, .. } => {
+            assert!(matches!(body.kernel, PlannedKernel::Csr2 { .. }));
+            assert!(
+                matches!(remainder.kernel, PlannedKernel::Csr5 { .. }),
+                "remainder nnz {} should take CSR5",
+                remainder.nnz
+            );
+            assert!(remainder.rows <= 20, "at most the injected hubs: {}", remainder.rows);
+        }
+        FormatPlan::Single { .. } => panic!("hub fixture must plan hybrid: {}", p.summary()),
+    }
+    let pool = Arc::new(ThreadPool::new(4));
+    let registry = MatrixRegistry::new(pool, None);
+    let e = registry.register("hub20", a.clone()).unwrap();
+    assert!(e.kernel_name().contains("csr5"), "{}", e.kernel_name());
+    assert_entry_matches_reference(&e, &a, 4);
+}
+
+/// The acceptance path: a regular, a hybrid and an irregular matrix
+/// served side by side through the server's cost-based routing,
+/// batched (so the per-part blocked `spmv_multi` runs) and unbatched,
+/// all matching the reference.
+#[test]
+fn cost_based_routing_serves_all_structure_classes() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = Arc::new(MatrixRegistry::new(pool, None));
     let reg_mat = gen::grid2d_5pt::<f32>(20, 20);
+    let hub_mat = gen::circuit::<f32>(32, 32, 7);
     let irr_mat = gen::power_law::<f32>(500, 8, 1.0, 0xF00D);
     let e_reg = registry.register("grid", reg_mat.clone()).unwrap();
+    let e_hub = registry.register("circuit", hub_mat.clone()).unwrap();
     let e_irr = registry.register("hubs", irr_mat.clone()).unwrap();
     assert!(e_reg.kernel_name().starts_with("csr2"), "{}", e_reg.describe());
+    assert!(e_hub.kernel_name().starts_with("hybrid("), "{}", e_hub.describe());
     assert!(!e_irr.kernel_name().starts_with("csr2"), "{}", e_irr.describe());
 
     let server = Server::start(
         registry,
         ServerConfig { max_batch: 4, ..Default::default() },
     );
-    let cases: Vec<(&str, &Csr<f32>)> = vec![("grid", &reg_mat), ("hubs", &irr_mat)];
+    let cases: Vec<(&str, &Csr<f32>)> =
+        vec![("grid", &reg_mat), ("circuit", &hub_mat), ("hubs", &irr_mat)];
     // enough submissions per matrix to fill several max_batch=4 blocks
     let mut pending = Vec::new();
     for round in 0..12 {
