@@ -1,6 +1,8 @@
 //! Heterogeneous serving demo: the coordinator serving batched SpMV
-//! requests for several suite matrices across the CPU kernel path and
-//! the PJRT (AOT Pallas/XLA) path, reporting latency and throughput.
+//! requests for several suite matrices across the registered execution
+//! backends (CPU kernels; PJRT/AOT when artifacts exist), reporting
+//! per-backend bindings — including the hybrid body→pjrt /
+//! remainder→cpu placement — plus latency and throughput.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example heterogeneous_serve
@@ -8,7 +10,7 @@
 
 use std::sync::Arc;
 
-use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
+use csrk::coordinator::{Backend, DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::runtime::Runtime;
 use csrk::sparse::{gen, suite, SuiteScale};
 use csrk::util::table::{f, Table};
@@ -25,12 +27,19 @@ fn main() {
     };
     let has_pjrt = runtime.is_some();
     let registry = Arc::new(MatrixRegistry::new(pool, runtime));
+    println!("backends:");
+    for b in registry.backends() {
+        println!("  {:?}: {}", b.id(), b.describe());
+    }
 
     // Register a slice of the suite spanning the rdensity range, an
     // irregular power-law matrix the planner routes around CSR-2, and
     // a hub-pattern circuit matrix the planner splits into a hybrid
-    // body + remainder entry (its describe() line below reports the
-    // per-part format/nnz breakdown).
+    // body + remainder entry. Each describe() line below reports the
+    // per-part format/nnz breakdown, every backend binding (with a
+    // live runtime the hybrid line shows body→pjrt[...] +
+    // remainder→cpu[...]), and the routing estimates that observed
+    // latencies will correct as traffic flows.
     let names = ["roadNet-TX", "ecology1", "wave", "power-law", "circuit-hub"];
     let mut ncols = std::collections::HashMap::new();
     for name in names {

@@ -45,11 +45,11 @@ fn main() {
         // the planned row reproduces registration exactly: the build
         // stage runs Band-k / splits / composes per the plan, and the
         // returned composite executes in original coordinates
-        let planned: Box<dyn SpMv<f32>> =
-            Box::new(build_execution(&planner::plan(a), a.clone(), pool.clone(), false).exec);
-        let kernels: Vec<Box<dyn SpMv<f32>>> = vec![
-            Box::new(CsrParallel::new(a.clone(), pool.clone())),
-            Box::new(Csr2Kernel::new(
+        let planned: Arc<dyn SpMv<f32>> =
+            build_execution(&planner::plan(a), a.clone(), pool.clone(), false).exec;
+        let kernels: Vec<Arc<dyn SpMv<f32>>> = vec![
+            Arc::new(CsrParallel::new(a.clone(), pool.clone())),
+            Arc::new(Csr2Kernel::new(
                 CsrK::csr2_uniform(a.clone(), FIXED_SRS),
                 pool.clone(),
             )),

@@ -1,0 +1,588 @@
+//! First-class execution backends — the *bind* stage of the
+//! plan → build → bind pipeline, behind a uniform trait API.
+//!
+//! The registry used to hard-code its two devices: a concrete CPU
+//! composite plus an `Option<PjrtBinding>`, with every method `match`ing
+//! on a closed device enum. This module decouples the format/method
+//! from the device the way the heterogeneous-SpMV literature argues for
+//! (Liu & Vinter's speculative segmented sum runs the same structure on
+//! CPUs and GPUs; SELL-C-σ is explicitly one format for all devices):
+//!
+//! * [`Backend`] — a device that can *bind* a built execution. It
+//!   answers identity ([`Backend::id`]), capability
+//!   ([`Backend::supports_plan`], [`Backend::needs_padded_export`]) and
+//!   cost-spec queries ([`Backend::static_cost`] — the routing prior),
+//!   and turns a [`BuiltExecution`] into an [`ExecutionBinding`].
+//! * [`ExecutionBinding`] — one matrix bound on one backend: `spmv` and
+//!   the blocked `spmv_multi` over per-request vectors, plus a
+//!   `describe()` line for observability. The registry keeps a map of
+//!   these keyed by [`BackendId`]; nothing above this trait knows what
+//!   a device is.
+//! * [`RoutingTable`] — per-entry cost estimates, seeded from the
+//!   plan's static roofline numbers and **continuously corrected** by
+//!   observed per-(matrix, backend) latencies (the server feeds back an
+//!   EWMA over served batches through [`crate::coordinator::Metrics`]).
+//!   The static estimates only need to be relatively right; once
+//!   traffic flows, routing follows what the hardware actually does.
+//!
+//! Two backends ship:
+//!
+//! * [`CpuBackend`] — wraps the built [`CompositeExec`] and the crate
+//!   thread pool; batches take the fused per-request entry point
+//!   ([`CompositeExec::spmv_multi_vecs`]).
+//! * [`PjrtBackend`] — absorbs the old registry-private PJRT plumbing:
+//!   it binds each **exported part** of the build to an AOT bucket
+//!   ([`crate::runtime::SpmvExecutor`]) and keeps unexported parts on
+//!   their host kernels. For a `Single` plan that is the familiar
+//!   whole-matrix binding; for a `Hybrid` plan it is **per-part
+//!   placement** — the padded Band-k/CSR-2 *body* executes on the
+//!   accelerator while the skewed *remainder* stays on the CPU kernel,
+//!   and the partial results merge through the same row scatter maps
+//!   the composite uses:
+//!
+//! ```text
+//!            x (original coords)
+//!            ├─ apply body perm ──▶ PJRT bucket ──▶ scatter body rows ─┐
+//!            └─────────────────▶ CPU remainder ──▶ scatter hub rows ──┤
+//!                                                                     ▼
+//!                                                      y (original coords)
+//! ```
+//!
+//! Adding a device (SELL-C-σ GPU kernels, a second NUMA domain, a
+//! remote worker) is now one `Backend` impl handed to
+//! [`MatrixRegistry::with_backends`] — no registry or server changes.
+//!
+//! [`MatrixRegistry::with_backends`]: crate::coordinator::MatrixRegistry::with_backends
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::{pack_block, unpack_block, BuiltExecution, CompositeExec, SpMv};
+use crate::reorder::Permutation;
+use crate::runtime::{Runtime, SpmvExecutor};
+use crate::tuning::planner::FormatPlan;
+use crate::util::ThreadPool;
+
+/// Identity of an execution backend — the preferred name for the
+/// planner's [`DeviceKind`](crate::tuning::planner::DeviceKind), which
+/// is kept as an alias for source compatibility.
+pub use crate::tuning::planner::DeviceKind as BackendId;
+
+/// A device (or device-like target) that can bind built executions.
+pub trait Backend: Send + Sync {
+    /// Stable identity — the key bindings, routing rows and batch
+    /// dispatch all share.
+    fn id(&self) -> BackendId;
+
+    /// One observability line (the example and `csrk serve` print one
+    /// per registered backend).
+    fn describe(&self) -> String;
+
+    /// Capability query: could this backend bind an execution built
+    /// from `plan`? `bind` may still fail (e.g. no AOT bucket fits),
+    /// but a `false` here skips the attempt entirely.
+    fn supports_plan(&self, plan: &FormatPlan) -> bool;
+
+    /// Does this backend consume the padded part exports? The registry
+    /// asks before running the build stage so exports are only
+    /// materialized when someone will bind them.
+    fn needs_padded_export(&self) -> bool {
+        false
+    }
+
+    /// Cost-spec query: estimated seconds per single-vector SpMV under
+    /// `plan` — the *static prior* a fresh [`RoutingTable`] row starts
+    /// from, before observed latencies correct it. Defaults to the
+    /// plan's own roofline estimate for this backend id.
+    fn static_cost(&self, plan: &FormatPlan) -> Option<f64> {
+        plan.cost(self.id())
+    }
+
+    /// Bind a built execution. Called once per registration; the
+    /// returned binding serves the request path.
+    fn bind(
+        &self,
+        built: &BuiltExecution<f32>,
+        plan: &FormatPlan,
+    ) -> Result<Box<dyn ExecutionBinding>>;
+}
+
+/// One matrix bound on one backend: the executable request path.
+pub trait ExecutionBinding: Send + Sync {
+    /// The backend that produced this binding.
+    fn backend(&self) -> BackendId;
+
+    /// One observability line; for multi-part bindings this names the
+    /// per-part placement (e.g. `body→pjrt[...] + remainder→cpu[...]`).
+    fn describe(&self) -> String;
+
+    /// `y = A·x`, both in original coordinates.
+    fn spmv(&self, x: &[f32]) -> Result<Vec<f32>>;
+
+    /// A batch of products: `out[j] = A · xs[j]`, all in original
+    /// coordinates. Implementations amortize the matrix stream across
+    /// the batch where the device allows.
+    fn spmv_multi(&self, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Seconds one single-vector dispatch just cost, as measured by the
+    /// binding's *own* clock, if it keeps one. The server prefers this
+    /// over its wall-clock measurement when feeding the routing EWMA —
+    /// device-side timers can exclude host noise, simulators report
+    /// modeled time, and tests inject deterministic latencies.
+    fn self_timed_cost(&self) -> Option<f64> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// CPU backend
+// ---------------------------------------------------------------------
+
+/// The host backend: the built composite over the crate thread pool.
+pub struct CpuBackend {
+    pool: Arc<ThreadPool>,
+}
+
+impl CpuBackend {
+    /// A CPU backend executing on `pool`.
+    pub fn new(pool: Arc<ThreadPool>) -> Self {
+        CpuBackend { pool }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn id(&self) -> BackendId {
+        BackendId::Cpu
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu({} threads)", self.pool.threads())
+    }
+
+    fn supports_plan(&self, _plan: &FormatPlan) -> bool {
+        true // every plan builds host kernels
+    }
+
+    fn bind(
+        &self,
+        built: &BuiltExecution<f32>,
+        _plan: &FormatPlan,
+    ) -> Result<Box<dyn ExecutionBinding>> {
+        Ok(Box::new(CpuBinding { exec: built.exec.clone() }))
+    }
+}
+
+struct CpuBinding {
+    exec: Arc<CompositeExec<f32>>,
+}
+
+impl ExecutionBinding for CpuBinding {
+    fn backend(&self) -> BackendId {
+        BackendId::Cpu
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu[{}]", self.exec.name())
+    }
+
+    fn spmv(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.exec.ncols() {
+            bail!("x length {} != ncols {}", x.len(), self.exec.ncols());
+        }
+        let mut y = vec![0f32; self.exec.nrows()];
+        self.exec.spmv(x, &mut y);
+        Ok(y)
+    }
+
+    /// One blocked SpMM per part through the fused entry point: each
+    /// part's permutation fuses into the operand interleave and its row
+    /// map into the de-interleave (see
+    /// [`CompositeExec::spmv_multi_vecs`]).
+    fn spmv_multi(&self, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        for x in xs {
+            if x.len() != self.exec.ncols() {
+                bail!("x length {} != ncols {}", x.len(), self.exec.ncols());
+            }
+        }
+        Ok(self.exec.spmv_multi_vecs(xs))
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------
+
+/// The accelerator backend: binds exported parts to AOT buckets through
+/// PJRT, keeping unexported parts on their host kernels (the hybrid
+/// body→device / remainder→host placement).
+pub struct PjrtBackend {
+    runtime: Arc<Runtime>,
+}
+
+impl PjrtBackend {
+    /// A PJRT backend over a loaded artifact runtime.
+    pub fn new(runtime: Arc<Runtime>) -> Self {
+        PjrtBackend { runtime }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn id(&self) -> BackendId {
+        BackendId::Pjrt
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt({} platform)", self.runtime.platform())
+    }
+
+    fn supports_plan(&self, plan: &FormatPlan) -> bool {
+        plan.pjrt_width().is_some()
+    }
+
+    fn needs_padded_export(&self) -> bool {
+        true
+    }
+
+    fn bind(
+        &self,
+        built: &BuiltExecution<f32>,
+        _plan: &FormatPlan,
+    ) -> Result<Box<dyn ExecutionBinding>> {
+        let parts = built.exec.parts();
+        let mut bound = Vec::with_capacity(parts.len());
+        let mut device_parts = 0usize;
+        for (part, export) in parts.iter().zip(&built.exports) {
+            let exec = match export {
+                Some(padded) => {
+                    // bind's own error already names the missing bucket
+                    let exe = SpmvExecutor::bind(&self.runtime, padded)?;
+                    device_parts += 1;
+                    PartExec::Device(exe)
+                }
+                // unexported parts (the hybrid remainder) ride along on
+                // their host kernels — same kernel instance the CPU
+                // composite runs, shared through the Arc
+                None => PartExec::Host(part.kernel().clone()),
+            };
+            bound.push(BoundPart {
+                exec,
+                in_perm: part.in_perm().cloned(),
+                rows: part.rows().map(|r| r.to_vec()),
+            });
+        }
+        if device_parts == 0 {
+            bail!("plan exported no part for the accelerator path");
+        }
+        Ok(Box::new(PjrtExecBinding {
+            nrows: built.exec.nrows(),
+            ncols: built.exec.ncols(),
+            parts: bound,
+        }))
+    }
+}
+
+/// How one part of a PJRT-side binding executes.
+enum PartExec {
+    /// Through a bucketed AOT executable.
+    Device(SpmvExecutor),
+    /// On the shared host kernel (unexported parts).
+    Host(Arc<dyn SpMv<f32>>),
+}
+
+/// One part of a PJRT-side binding: executor + the same coordinate maps
+/// the CPU composite scatters through.
+struct BoundPart {
+    exec: PartExec,
+    in_perm: Option<Permutation>,
+    rows: Option<Vec<u32>>,
+}
+
+impl BoundPart {
+    fn label(&self, i: usize, n: usize) -> String {
+        let place = match &self.exec {
+            PartExec::Device(exe) => format!("pjrt[{}]", exe.bucket().name),
+            PartExec::Host(k) => format!("cpu[{}]", k.name()),
+        };
+        if n == 1 {
+            place
+        } else {
+            // the factory orders hybrid parts body-first
+            let part = match (i, n) {
+                (0, 2) => "body".to_string(),
+                (1, 2) => "remainder".to_string(),
+                _ => format!("part{i}"),
+            };
+            format!("{part}→{place}")
+        }
+    }
+
+    /// Scatter one part result into the full output vector.
+    fn scatter(&self, py: &[f32], y: &mut [f32]) {
+        match &self.rows {
+            Some(map) => {
+                for (l, &o) in map.iter().enumerate() {
+                    y[o as usize] = py[l];
+                }
+            }
+            None => y.copy_from_slice(py),
+        }
+    }
+}
+
+/// A matrix bound on the PJRT backend: every part executes where it was
+/// placed, and the partial results merge through the parts' row scatter
+/// maps in original coordinates.
+struct PjrtExecBinding {
+    nrows: usize,
+    ncols: usize,
+    parts: Vec<BoundPart>,
+}
+
+impl ExecutionBinding for PjrtExecBinding {
+    fn backend(&self) -> BackendId {
+        BackendId::Pjrt
+    }
+
+    fn describe(&self) -> String {
+        let n = self.parts.len();
+        self.parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| p.label(i, n))
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+
+    fn spmv(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.ncols {
+            bail!("x length {} != ncols {}", x.len(), self.ncols);
+        }
+        let mut y = vec![0f32; self.nrows];
+        for part in &self.parts {
+            let owned;
+            let xp: &[f32] = match &part.in_perm {
+                Some(p) => {
+                    owned = p.apply_vec(x);
+                    &owned
+                }
+                None => x,
+            };
+            let py = match &part.exec {
+                PartExec::Device(exe) => exe.spmv(xp)?,
+                PartExec::Host(k) => {
+                    let mut v = vec![0f32; k.nrows()];
+                    k.spmv(xp, &mut v);
+                    v
+                }
+            };
+            part.scatter(&py, &mut y);
+        }
+        Ok(y)
+    }
+
+    fn spmv_multi(&self, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let nvec = xs.len();
+        if nvec == 0 {
+            return Ok(Vec::new());
+        }
+        for x in xs {
+            if x.len() != self.ncols {
+                bail!("x length {} != ncols {}", x.len(), self.ncols);
+            }
+        }
+        let mut out = vec![vec![0f32; self.nrows]; nvec];
+        for part in &self.parts {
+            // marshal the whole batch into the part's input order once
+            let permuted: Option<Vec<Vec<f32>>> =
+                part.in_perm.as_ref().map(|p| xs.iter().map(|x| p.apply_vec(x)).collect());
+            let prefs: Vec<&[f32]> = match &permuted {
+                Some(pxs) => pxs.iter().map(|v| v.as_slice()).collect(),
+                None => xs.to_vec(),
+            };
+            let pys: Vec<Vec<f32>> = match &part.exec {
+                // the device batch runs under one client-lock
+                // acquisition (see `runtime::SpmvExecutor::spmv_multi`)
+                PartExec::Device(exe) => exe.spmv_multi(&prefs)?,
+                // the host part streams its rows once per batch through
+                // the blocked kernel path
+                PartExec::Host(k) => {
+                    let xb = pack_block(&prefs);
+                    let mut yb = vec![0f32; k.nrows() * nvec];
+                    k.spmv_multi(&xb, &mut yb, nvec);
+                    unpack_block(&yb, nvec)
+                }
+            };
+            for (py, oj) in pys.iter().zip(out.iter_mut()) {
+                part.scatter(py, oj);
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Routing table
+// ---------------------------------------------------------------------
+
+/// Per-entry routing estimates: one row per bound backend, seeded from
+/// the static cost prior and overwritten by the latest observed EWMA
+/// (seconds per single-vector SpMV). Lock-free — estimates are f64 bits
+/// in atomics, read on every batch route and written once per served
+/// batch.
+pub struct RoutingTable {
+    rows: Vec<RouteRow>,
+}
+
+struct RouteRow {
+    id: BackendId,
+    stat: f64,
+    /// Latest fed-back EWMA estimate, `f64::NAN` bits until the first
+    /// observation arrives.
+    observed: AtomicU64,
+}
+
+impl RoutingTable {
+    /// A table seeded with `(backend, static prior)` rows. Backends a
+    /// plan did not price enter at `f64::INFINITY` — they only win
+    /// routing after observed latencies say so.
+    pub fn new(rows: Vec<(BackendId, f64)>) -> Self {
+        RoutingTable {
+            rows: rows
+                .into_iter()
+                .map(|(id, stat)| RouteRow {
+                    id,
+                    stat,
+                    observed: AtomicU64::new(f64::NAN.to_bits()),
+                })
+                .collect(),
+        }
+    }
+
+    /// Feed back an observed estimate (the metrics-side EWMA) for one
+    /// backend. Unknown ids are ignored.
+    pub fn correct(&self, id: BackendId, secs_per_vec: f64) {
+        if let Some(row) = self.rows.iter().find(|r| r.id == id) {
+            row.observed.store(secs_per_vec.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Current estimate for one backend: the observed EWMA once traffic
+    /// has flowed, the static prior before.
+    pub fn estimate(&self, id: BackendId) -> Option<f64> {
+        self.rows.iter().find(|r| r.id == id).map(|r| {
+            let obs = f64::from_bits(r.observed.load(Ordering::Relaxed));
+            if obs.is_nan() {
+                r.stat
+            } else {
+                obs
+            }
+        })
+    }
+
+    /// The static prior a row was seeded with.
+    pub fn static_cost(&self, id: BackendId) -> Option<f64> {
+        self.rows.iter().find(|r| r.id == id).map(|r| r.stat)
+    }
+
+    /// Cheapest backend among the rows `eligible` admits, by current
+    /// estimate. `None` when no row is eligible.
+    pub fn pick(&self, eligible: impl Fn(BackendId) -> bool) -> Option<BackendId> {
+        self.rows
+            .iter()
+            .filter(|r| eligible(r.id))
+            .map(|r| (r.id, self.estimate(r.id).unwrap_or(f64::INFINITY)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(id, _)| id)
+    }
+
+    /// One observability fragment: `Cpu 1.2us, Pjrt 3.4us*` (`*` marks
+    /// observation-corrected estimates).
+    pub fn summary(&self) -> String {
+        self.rows
+            .iter()
+            .map(|r| {
+                let obs = f64::from_bits(r.observed.load(Ordering::Relaxed));
+                let (est, mark) = if obs.is_nan() { (r.stat, "") } else { (obs, "*") };
+                format!("{:?} {:.1}us{}", r.id, est * 1e6, mark)
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::build_execution;
+    use crate::sparse::gen;
+    use crate::tuning::planner;
+
+    #[test]
+    fn routing_table_prefers_cheapest_then_follows_observations() {
+        let t = RoutingTable::new(vec![(BackendId::Cpu, 5e-6), (BackendId::Pjrt, 2e-6)]);
+        assert_eq!(t.pick(|_| true), Some(BackendId::Pjrt), "static prior wins cold");
+        assert_eq!(t.pick(|d| d == BackendId::Cpu), Some(BackendId::Cpu));
+        assert_eq!(t.pick(|_| false), None);
+        // observed latency says the accelerator is actually slower here
+        t.correct(BackendId::Pjrt, 50e-6);
+        assert_eq!(t.estimate(BackendId::Pjrt), Some(50e-6));
+        assert_eq!(t.static_cost(BackendId::Pjrt), Some(2e-6), "prior is kept");
+        assert_eq!(t.pick(|_| true), Some(BackendId::Cpu), "observation flips the pick");
+        assert!(t.summary().contains('*'), "{}", t.summary());
+    }
+
+    #[test]
+    fn unpriced_rows_only_win_after_observations() {
+        let t = RoutingTable::new(vec![
+            (BackendId::Cpu, 5e-6),
+            (BackendId::Pjrt, f64::INFINITY),
+        ]);
+        assert_eq!(t.pick(|_| true), Some(BackendId::Cpu));
+        t.correct(BackendId::Pjrt, 1e-6);
+        assert_eq!(t.pick(|_| true), Some(BackendId::Pjrt));
+    }
+
+    #[test]
+    fn cpu_backend_binds_every_plan_shape() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let backend = CpuBackend::new(pool.clone());
+        assert_eq!(backend.id(), BackendId::Cpu);
+        for a in [
+            gen::grid2d_5pt::<f32>(12, 12),
+            gen::power_law::<f32>(600, 8, 1.0, 0xBEEF),
+            gen::circuit::<f32>(32, 32, 7),
+        ] {
+            let plan = planner::plan(&a);
+            assert!(backend.supports_plan(&plan));
+            let built = build_execution(&plan, a.clone(), pool.clone(), false);
+            let binding = backend.bind(&built, &plan).unwrap();
+            assert_eq!(binding.backend(), BackendId::Cpu);
+            assert!(binding.describe().starts_with("cpu["), "{}", binding.describe());
+            let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 3 + 1) % 7) as f32 - 3.0).collect();
+            let y = binding.spmv(&x).unwrap();
+            let mut y_ref = vec![0f32; a.nrows()];
+            a.spmv_ref(&x, &mut y_ref);
+            for (u, v) in y.iter().zip(&y_ref) {
+                assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+            }
+            let ys = binding.spmv_multi(&[&x, &x]).unwrap();
+            for yj in &ys {
+                for (u, v) in yj.iter().zip(&y) {
+                    assert!((u - v).abs() < 1e-4 * v.abs().max(1.0));
+                }
+            }
+            assert!(binding.spmv(&[1.0; 3]).is_err(), "length validation");
+            assert!(binding.spmv_multi(&[]).unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn cpu_static_cost_defaults_to_the_plan_estimate() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let backend = CpuBackend::new(pool);
+        let plan = planner::plan(&gen::grid2d_5pt::<f32>(10, 10));
+        assert_eq!(backend.static_cost(&plan), plan.cost(BackendId::Cpu));
+    }
+}

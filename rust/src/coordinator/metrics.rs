@@ -1,9 +1,28 @@
-//! Serving metrics: latency percentiles and throughput counters.
+//! Serving metrics: latency percentiles, throughput counters, and the
+//! per-(matrix, backend) execution-latency EWMAs that feed routing.
+//!
+//! The EWMAs are the observation side of the online cost-correction
+//! loop: after every served batch the device worker reports the
+//! per-vector execution cost here ([`Metrics::observe_device`]), and
+//! the returned smoothed estimate is pushed into the entry's
+//! `RoutingTable` (`coordinator::backend`), replacing the plan's
+//! static roofline prior for that backend. Estimates only need to be
+//! *relatively* right for routing — the EWMA over served batches is
+//! exactly that: it tracks what the hardware does for this matrix
+//! without chasing single-batch noise.
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use super::backend::BackendId;
 use crate::util::stats;
+
+/// EWMA smoothing factor for observed per-backend latencies: each new
+/// batch contributes a quarter, so a mis-seeded estimate converges
+/// within a handful of batches without single-batch noise whipsawing
+/// the route.
+pub const ROUTE_EWMA_ALPHA: f64 = 0.25;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -12,6 +31,11 @@ struct Inner {
     batches: u64,
     errors: u64,
     flops: f64,
+    /// Observed seconds-per-vector EWMA per (matrix, backend), tagged
+    /// with the registration uid the observations belong to — a name
+    /// can be re-registered with a different matrix, and stale
+    /// estimates must not blend into the fresh entry's routing.
+    device_ewma: HashMap<(String, BackendId), (u64, f64)>,
 }
 
 /// Thread-safe metrics sink shared by the server workers.
@@ -41,6 +65,50 @@ impl Metrics {
     /// Record one dispatched batch.
     pub fn record_batch(&self) {
         self.inner.lock().unwrap().batches += 1;
+    }
+
+    /// Fold one observed per-vector execution cost (seconds) into the
+    /// `(matrix, backend)` EWMA and return the updated estimate — what
+    /// the server feeds back into the entry's routing table after each
+    /// served batch. `uid` is the registration id the observation
+    /// belongs to ([`MatrixEntry::uid`]): the first observation — and
+    /// the first after the name is re-registered as a different matrix
+    /// — seeds the EWMA directly instead of blending into stale state.
+    ///
+    /// [`MatrixEntry::uid`]: crate::coordinator::MatrixEntry::uid
+    pub fn observe_device(
+        &self,
+        matrix: &str,
+        uid: u64,
+        backend: BackendId,
+        secs_per_vec: f64,
+    ) -> f64 {
+        let mut m = self.inner.lock().unwrap();
+        match m.device_ewma.entry((matrix.to_string(), backend)) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let slot = o.get_mut();
+                if slot.0 == uid {
+                    slot.1 =
+                        (1.0 - ROUTE_EWMA_ALPHA) * slot.1 + ROUTE_EWMA_ALPHA * secs_per_vec;
+                } else {
+                    // same name, different registration: reseed
+                    *slot = (uid, secs_per_vec);
+                }
+                slot.1
+            }
+            std::collections::hash_map::Entry::Vacant(v) => v.insert((uid, secs_per_vec)).1,
+        }
+    }
+
+    /// Current observed-latency EWMA for a `(matrix, backend)` pair, if
+    /// any batch has been served there.
+    pub fn device_estimate(&self, matrix: &str, backend: BackendId) -> Option<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .device_ewma
+            .get(&(matrix.to_string(), backend))
+            .map(|&(_, e)| e)
     }
 
     /// Snapshot: `(requests, batches, errors)`.
@@ -99,5 +167,39 @@ mod tests {
         assert!(m.latency_us(50.0) >= 50.0 && m.latency_us(50.0) <= 52.0);
         assert!(m.mean_latency_us() > 0.0);
         assert!(m.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn device_ewma_seeds_then_smooths() {
+        let m = Metrics::new();
+        assert_eq!(m.device_estimate("a", BackendId::Cpu), None);
+        // first observation seeds directly
+        assert_eq!(m.observe_device("a", 1, BackendId::Cpu, 8e-6), 8e-6);
+        // subsequent observations blend at alpha
+        let e = m.observe_device("a", 1, BackendId::Cpu, 16e-6);
+        let expect = (1.0 - ROUTE_EWMA_ALPHA) * 8e-6 + ROUTE_EWMA_ALPHA * 16e-6;
+        assert!((e - expect).abs() < 1e-18, "{e} vs {expect}");
+        assert_eq!(m.device_estimate("a", BackendId::Cpu), Some(e));
+        // keys are per (matrix, backend)
+        assert_eq!(m.device_estimate("a", BackendId::Pjrt), None);
+        assert_eq!(m.device_estimate("b", BackendId::Cpu), None);
+        // a stream of equal observations converges to the value
+        let mut last = e;
+        for _ in 0..40 {
+            last = m.observe_device("a", 1, BackendId::Cpu, 4e-6);
+        }
+        assert!((last - 4e-6).abs() < 1e-8, "{last}");
+    }
+
+    #[test]
+    fn device_ewma_reseeds_when_the_name_is_reregistered() {
+        let m = Metrics::new();
+        // registration uid 1 serves slow batches under the name "a"
+        m.observe_device("a", 1, BackendId::Cpu, 1.0);
+        m.observe_device("a", 1, BackendId::Cpu, 1.0);
+        // "a" is re-registered (uid 2) as a much faster matrix — the
+        // first observation must seed fresh, not blend into the old 1 s
+        assert_eq!(m.observe_device("a", 2, BackendId::Cpu, 2e-6), 2e-6);
+        assert_eq!(m.device_estimate("a", BackendId::Cpu), Some(2e-6));
     }
 }

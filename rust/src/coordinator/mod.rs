@@ -8,29 +8,51 @@
 //!
 //! 1. **Plan** — [`crate::tuning::planner`] measures the matrix and
 //!    decides the plan *shape*, reordering, padded-export width, and
-//!    per-device roofline cost estimates. Regular structure plans the
+//!    per-backend roofline cost estimates. Regular structure plans the
 //!    paper's path (Band-k + CSR-k, §4 heuristics unchanged); a
-//!    **hub pattern** (variance > 10 explained by a few rail rows, the
-//!    `gen::circuit` class) plans a hybrid body + remainder split at a
-//!    row-nnz threshold, so 99 % of the rows keep the fast path;
-//!    wholesale-irregular structure skips reordering and plans CSR5 or
-//!    nnz-balanced parallel CSR.
+//!    **hub pattern** (a few rail rows explain the skew — by variance
+//!    or by the absolute longest-row trigger) plans a hybrid body +
+//!    remainder split at a row-nnz threshold, so 99 % of the rows keep
+//!    the fast path; wholesale-irregular structure skips reordering
+//!    and plans CSR5 or nnz-balanced parallel CSR.
 //! 2. **Build** — [`crate::kernels::build_execution`] constructs
 //!    whatever the plan names — Band-k runs, splits happen
-//!    (`sparse::split`), part kernels build, and for hybrid plans the
-//!    body permutation is composed against the split map — and
-//!    returns one composite `Box<dyn SpMv<f32>>`
-//!    (`kernels::composite`) executing in **original coordinates**.
-//!    [`MatrixEntry`] holds that trait object only: no concrete kernel
-//!    type, no permutation, no assumption the entry is one kernel.
-//! 3. **Bind / route** — the padded PJRT export happens at the plan's
-//!    width, in the build's row order, and binds to an AOT bucket when
-//!    available (hybrid entries stay CPU-only until multi-device part
-//!    placement lands). At serve time each batch routes to the
-//!    **cheapest bound device by the plan's cost estimates** (per-part
-//!    roofline sums for hybrid plans); a request's explicit
-//!    [`Request::device`] override always wins (and fails loudly if
-//!    that device is unbound, rather than silently downgrading).
+//!    (`sparse::split`), part kernels build — and returns one
+//!    composite (`kernels::composite`) executing in **original
+//!    coordinates**, plus per-part padded exports for accelerator
+//!    backends.
+//! 3. **Bind / route** — every registered [`Backend`] that supports
+//!    the plan is offered the build; each success becomes an
+//!    [`ExecutionBinding`] in the entry's per-backend map. The
+//!    [`PjrtBackend`](backend::PjrtBackend) binds exported parts to
+//!    AOT buckets — for hybrid plans that is **per-part placement**:
+//!    the padded Band-k/CSR-2 *body* executes on the accelerator while
+//!    the skewed *remainder* stays on the CPU kernel, partial results
+//!    merging through the composite's row scatter maps. No device is
+//!    ever `match`ed on the serving path: dispatch is a binding-map
+//!    lookup by [`BackendId`].
+//!
+//! # The bind lifecycle
+//!
+//! ```text
+//! register(A)                                      serve(x₁ … xₖ)
+//!   plan ──▶ build ──▶ for each Backend:             batch ──▶ route()
+//!                        supports_plan? ──▶ bind()     │   RoutingTable:
+//!                        static_cost  ───▶ routing row │   static prior,
+//!                                                      ▼   EWMA-corrected
+//!                                            ExecutionBinding::spmv_multi
+//!                                                      │
+//!                        Metrics::observe_device ◀─────┘ observed s/vec
+//!                        entry.correct_route  ◀── EWMA
+//! ```
+//!
+//! Routing starts from the plan's static roofline costs and is
+//! **corrected online**: after each served batch the worker folds the
+//! observed per-vector execution cost into the metrics-side
+//! `(matrix, backend)` EWMA and pushes the estimate back into the
+//! entry's [`RoutingTable`](backend::RoutingTable) — the ROADMAP's
+//! online cost correction. Estimates need only rank backends
+//! correctly; once traffic flows, ranking follows the hardware.
 //!
 //! # Batches execute as SpMM
 //!
@@ -48,16 +70,22 @@
 //! traffic is batched. `benches/e2e_spmm.rs` measures the resulting
 //! batched-vs-looped throughput gap.
 //!
-//! * [`registry`] — per-matrix, per-device prepared executions.
+//! * [`backend`] — the [`Backend`] / [`ExecutionBinding`] traits, the
+//!   CPU and PJRT implementations, and the [`RoutingTable`].
+//! * [`registry`] — per-matrix plan → build → bind, binding maps.
 //! * [`batcher`] — dynamic batching queue (max-batch / max-delay).
-//! * [`server`] — worker threads, SpMM dispatch, routing, lifecycle.
-//! * [`metrics`] — latency/throughput accounting.
+//! * [`server`] — leader + per-backend workers, SpMM dispatch, routing
+//!   feedback, lifecycle.
+//! * [`metrics`] — latency/throughput accounting and the per-(matrix,
+//!   backend) EWMAs that feed routing.
 
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod registry;
 pub mod server;
 
+pub use backend::{Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable};
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::Metrics;
 pub use registry::{DeviceKind, MatrixEntry, MatrixRegistry};
@@ -72,12 +100,12 @@ pub struct Request {
     pub matrix: String,
     /// Input vector (length = matrix ncols).
     pub x: Vec<f32>,
-    /// Explicit device override. `None` (the default) routes to the
-    /// cheapest bound device by the registration plan's cost
-    /// estimates; `Some(d)` pins execution to `d` and surfaces an
-    /// error if the matrix has no binding there. Part of the batching
-    /// key: requests pinned to different devices never share a batch.
-    pub device: Option<DeviceKind>,
+    /// Explicit backend override. `None` (the default) routes to the
+    /// cheapest bound backend by the entry's routing table; `Some(d)`
+    /// pins execution to `d` and surfaces an error if the matrix has
+    /// no binding there. Part of the batching key: requests pinned to
+    /// different backends never share a batch.
+    pub device: Option<BackendId>,
 }
 
 /// The result of one request.
@@ -87,8 +115,8 @@ pub struct Response {
     pub id: u64,
     /// `A·x`, or an error message.
     pub result: Result<Vec<f32>, String>,
-    /// Which device served it.
-    pub device: DeviceKind,
+    /// Which backend served it.
+    pub device: BackendId,
     /// Queue + execution latency.
     pub latency: std::time::Duration,
 }

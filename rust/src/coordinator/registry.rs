@@ -5,58 +5,67 @@
 //!   the matrix (row-nnz variance, density, longest row) and decides
 //!   the plan shape. Regular matrices (§6: variance ≤ 10) get Band-k +
 //!   CSR-k with the paper's §4 heuristics; hub-pattern matrices (a few
-//!   rail rows explain the variance) get a **hybrid** body + remainder
+//!   rail rows explain the skew) get a **hybrid** body + remainder
 //!   split with per-part kernels; wholesale-irregular matrices skip
 //!   reordering and plan CSR5 or nnz-balanced parallel CSR.
 //! * **Build** — [`kernels::build_execution`](crate::kernels::build_execution)
 //!   constructs whatever the plan names — reorder, split, one kernel or
-//!   several — and returns it as one composite `Box<dyn SpMv>` that
-//!   executes in **original coordinates**. The entry holds no concrete
-//!   kernel type and no permutation: coordinate bookkeeping lives
-//!   inside the composite (`kernels::composite`), per part.
-//! * **Bind** — the padded PJRT export happens at the plan's width (a
-//!   plan decision, not an inline clamp), in the build's row order, and
-//!   binds to an AOT bucket when the runtime has one; the plan's cost
-//!   estimates then drive per-request routing ([`MatrixEntry::route`]).
+//!   several — and returns one composite executing in **original
+//!   coordinates**, plus the per-part padded exports accelerator
+//!   backends consume.
+//! * **Bind** — every registered [`Backend`] that supports the plan is
+//!   offered the build ([`Backend::bind`]); each successful bind
+//!   becomes one [`ExecutionBinding`] in the entry's per-backend map.
+//!   The PJRT backend binds exported parts to AOT buckets — for hybrid
+//!   plans that is the body→device / remainder→host placement. Nothing
+//!   in this module dispatches on a concrete device: the entry routes
+//!   by id and executes through the binding trait objects.
+//!
+//! Routing starts from the plan's static roofline costs (each
+//! backend's [`Backend::static_cost`] seeds one [`RoutingTable`] row)
+//! and is corrected online: after every served batch the server folds
+//! the observed per-vector latency into the metrics-side EWMA and
+//! pushes it back through [`MatrixEntry::correct_route`].
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::kernels::{build_execution, CompositeExec, SpMv};
-use crate::reorder::Permutation;
-use crate::runtime::{Runtime, SpmvExecutor};
+use super::backend::{Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable};
+use crate::kernels::{build_execution, SpMv};
+use crate::runtime::Runtime;
 use crate::sparse::Csr;
 use crate::tuning::planner::{self, FormatPlan};
 use crate::util::ThreadPool;
 
 pub use crate::tuning::planner::DeviceKind;
 
-/// The PJRT side of an entry: the bound executable plus the row order
-/// its padded export was built in (requests marshal through it). Hybrid
-/// plans never bind one — multi-device part placement is a ROADMAP
-/// follow-up.
-struct PjrtBinding {
-    exe: SpmvExecutor,
-    perm: Option<Permutation>,
-}
+/// Process-wide registration counter backing [`MatrixEntry::uid`].
+static NEXT_UID: AtomicU64 = AtomicU64::new(1);
 
-/// A registered matrix: the chosen plan, the built composite execution,
-/// and the per-device bindings.
+/// A registered matrix: the chosen plan, the per-backend execution
+/// bindings, and the routing table that picks between them.
 pub struct MatrixEntry {
     /// Registered name.
     pub name: String,
+    /// Unique id of this *registration* — re-registering the same name
+    /// produces a fresh uid, so observation stores keyed by name (the
+    /// metrics latency EWMAs) can detect the swap and drop estimates
+    /// that belong to the matrix this entry replaced.
+    uid: u64,
     /// The plan registration executed (exposed for observability and
     /// routing; see [`MatrixEntry::plan`]).
     plan: FormatPlan,
-    /// CPU execution: the composite the build stage produced — one part
-    /// per planned part, already operating in original coordinates.
-    /// Held concretely (the leaf kernels inside are the trait objects)
-    /// so batches can take the fused per-request entry point.
-    cpu: CompositeExec<f32>,
-    /// PJRT execution (absent if the plan skipped it or no bucket fits).
-    pjrt: Option<PjrtBinding>,
+    /// What the build stage constructed (composite kernel label).
+    kernel_name: String,
+    /// Execution bindings keyed by backend id, in backend registration
+    /// order (≤ a handful of entries — a linear map keeps iteration
+    /// deterministic for `describe()`).
+    bindings: Vec<(BackendId, Box<dyn ExecutionBinding>)>,
+    /// Static-prior + observed-EWMA cost rows, one per bound backend.
+    routing: RoutingTable,
     /// Logical shape.
     pub nrows: usize,
     /// Logical column count.
@@ -66,46 +75,32 @@ pub struct MatrixEntry {
 }
 
 impl MatrixEntry {
-    /// Execute on the chosen device. `x` is in original coordinates —
-    /// and so is every kernel boundary here: the composite owns any
-    /// per-part permutation internally, so the CPU arm is a straight
-    /// dispatch.
-    pub fn spmv(&self, device: DeviceKind, x: &[f32]) -> Result<Vec<f32>> {
+    /// The binding for one backend id, or an error naming what is
+    /// missing (pinned requests surface this instead of silently
+    /// downgrading).
+    pub fn binding(&self, backend: BackendId) -> Result<&dyn ExecutionBinding> {
+        self.bindings
+            .iter()
+            .find(|(id, _)| *id == backend)
+            .map(|(_, b)| b.as_ref())
+            .with_context(|| format!("matrix {} has no {backend:?} binding", self.name))
+    }
+
+    /// Execute on the chosen backend. `x` is in original coordinates —
+    /// and so is every binding boundary: coordinate bookkeeping lives
+    /// inside the bindings, per part.
+    pub fn spmv(&self, backend: BackendId, x: &[f32]) -> Result<Vec<f32>> {
         if x.len() != self.ncols {
             bail!("x length {} != ncols {}", x.len(), self.ncols);
         }
-        match device {
-            DeviceKind::Cpu => {
-                let mut y = vec![0f32; self.nrows];
-                self.cpu.spmv(x, &mut y);
-                Ok(y)
-            }
-            DeviceKind::Pjrt => {
-                let b = self
-                    .pjrt
-                    .as_ref()
-                    .with_context(|| format!("matrix {} has no PJRT binding", self.name))?;
-                match &b.perm {
-                    Some(p) => Ok(p.unapply_vec(&b.exe.spmv(&p.apply_vec(x))?)),
-                    None => b.exe.spmv(x),
-                }
-            }
-        }
+        self.binding(backend)?.spmv(x)
     }
 
-    /// Execute a whole batch on the chosen device: `out[j] = A · xs[j]`.
-    /// All inputs are in original coordinates.
-    ///
-    /// On CPU the batch runs as **one blocked SpMM** per part
-    /// ([`CompositeExec::spmv_multi_vecs`]): each part's permutation
-    /// fuses into the operand interleave and its row map into the
-    /// de-interleave, and the part kernel streams every matrix row
-    /// once against the whole block — body and remainder alike —
-    /// instead of re-reading the matrix per request. On PJRT the bound
-    /// executable is single-vector, so the batch loops inside the
-    /// executor under one client lock acquisition (see
-    /// `runtime::SpmvExecutor::spmv_multi`).
-    pub fn spmv_multi(&self, device: DeviceKind, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    /// Execute a whole batch on the chosen backend: `out[j] = A · xs[j]`,
+    /// all in original coordinates. Bindings amortize the matrix stream
+    /// across the batch (one blocked SpMM per part on CPU; one client
+    /// lock acquisition on PJRT).
+    pub fn spmv_multi(&self, backend: BackendId, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if xs.is_empty() {
             return Ok(Vec::new());
         }
@@ -114,32 +109,17 @@ impl MatrixEntry {
                 bail!("x length {} != ncols {}", x.len(), self.ncols);
             }
         }
-        match device {
-            DeviceKind::Cpu => Ok(self.cpu.spmv_multi_vecs(xs)),
-            DeviceKind::Pjrt => {
-                let b = self
-                    .pjrt
-                    .as_ref()
-                    .with_context(|| format!("matrix {} has no PJRT binding", self.name))?;
-                match &b.perm {
-                    Some(p) => {
-                        let pxs: Vec<Vec<f32>> = xs.iter().map(|x| p.apply_vec(x)).collect();
-                        let prefs: Vec<&[f32]> = pxs.iter().map(|v| v.as_slice()).collect();
-                        let pys = b.exe.spmv_multi(&prefs)?;
-                        Ok(pys.iter().map(|py| p.unapply_vec(py)).collect())
-                    }
-                    None => b.exe.spmv_multi(xs),
-                }
-            }
-        }
+        self.binding(backend)?.spmv_multi(xs)
     }
 
-    /// Does this entry support the device?
-    pub fn supports(&self, device: DeviceKind) -> bool {
-        match device {
-            DeviceKind::Cpu => true,
-            DeviceKind::Pjrt => self.pjrt.is_some(),
-        }
+    /// Does this entry have a binding on the backend?
+    pub fn supports(&self, backend: BackendId) -> bool {
+        self.bindings.iter().any(|(id, _)| *id == backend)
+    }
+
+    /// Unique id of this registration (see the field doc).
+    pub fn uid(&self) -> u64 {
+        self.uid
     }
 
     /// The plan registration executed.
@@ -151,7 +131,7 @@ impl MatrixEntry {
     /// `csr2(4t)`, `csr5(w8,s16,4t)`, or
     /// `hybrid(csr2(4t)+csr-parallel(4t))`).
     pub fn kernel_name(&self) -> String {
-        self.cpu.name()
+        self.kernel_name.clone()
     }
 
     /// Did registration reorder any part of the matrix? `false` is the
@@ -161,40 +141,47 @@ impl MatrixEntry {
         self.plan.reorders()
     }
 
-    /// Pick the execution device for a request. An explicit override
-    /// always wins — pinning to an unbound device surfaces an error at
+    /// This entry's routing table (static priors + observed EWMAs).
+    pub fn routing(&self) -> &RoutingTable {
+        &self.routing
+    }
+
+    /// Feed back an observed per-vector latency estimate for one
+    /// backend — the server calls this after every served batch with
+    /// the metrics-side EWMA, closing the online cost-correction loop.
+    pub fn correct_route(&self, backend: BackendId, secs_per_vec: f64) {
+        self.routing.correct(backend, secs_per_vec);
+    }
+
+    /// Pick the execution backend for a request. An explicit override
+    /// always wins — pinning to an unbound backend surfaces an error at
     /// execution rather than silently downgrading. With no override the
-    /// request routes to the cheapest device the plan priced that is
-    /// actually bound (CPU support is unconditional).
-    pub fn route(&self, requested: Option<DeviceKind>) -> DeviceKind {
+    /// request routes to the cheapest *bound* backend by the routing
+    /// table's current estimates (static priors until traffic flows,
+    /// observed EWMAs after).
+    pub fn route(&self, requested: Option<BackendId>) -> BackendId {
         if let Some(d) = requested {
             return d;
         }
-        let mut best = DeviceKind::Cpu;
-        let mut best_cost = f64::INFINITY;
-        for &(d, c) in self.plan.costs() {
-            if self.supports(d) && c < best_cost {
-                best = d;
-                best_cost = c;
-            }
-        }
-        best
+        self.routing
+            .pick(|id| self.supports(id))
+            .unwrap_or(BackendId::Cpu)
     }
 
     /// One observability line: the plan (with the per-part format/nnz
-    /// breakdown for hybrid entries), what was built, what is bound,
-    /// and where unrouted requests will execute.
+    /// breakdown for hybrid entries), what was built, every binding's
+    /// own describe line (for PJRT-bound hybrids that names the
+    /// body→pjrt / remainder→cpu placement), the routing estimates and
+    /// where unrouted requests execute now.
     pub fn describe(&self) -> String {
-        let bound: Vec<DeviceKind> = [DeviceKind::Cpu, DeviceKind::Pjrt]
-            .into_iter()
-            .filter(|&d| self.supports(d))
-            .collect();
+        let bound: Vec<String> = self.bindings.iter().map(|(_, b)| b.describe()).collect();
         format!(
-            "{}: {} | built {} | bound {:?} | routes to {:?}",
+            "{}: {} | built {} | bound [{}] | est {} | routes to {:?}",
             self.name,
             self.plan.summary(),
-            self.cpu.name(),
-            bound,
+            self.kernel_name,
+            bound.join(", "),
+            self.routing.summary(),
             self.route(None),
         )
     }
@@ -205,18 +192,36 @@ impl MatrixEntry {
     }
 }
 
-/// Thread-safe name → entry map.
+/// Thread-safe name → entry map over a set of execution backends.
 pub struct MatrixRegistry {
     pool: Arc<ThreadPool>,
-    runtime: Option<Arc<Runtime>>,
+    backends: Vec<Arc<dyn Backend>>,
     entries: RwLock<HashMap<String, Arc<MatrixEntry>>>,
 }
 
 impl MatrixRegistry {
-    /// A registry executing CPU kernels on `pool`; `runtime` enables the
-    /// PJRT path when artifacts are available.
+    /// The default backend set: [`CpuBackend`] on `pool`, plus a
+    /// [`PjrtBackend`] when an artifact runtime is available.
     pub fn new(pool: Arc<ThreadPool>, runtime: Option<Arc<Runtime>>) -> Self {
-        MatrixRegistry { pool, runtime, entries: RwLock::new(HashMap::new()) }
+        let mut backends: Vec<Arc<dyn Backend>> =
+            vec![Arc::new(CpuBackend::new(pool.clone()))];
+        if let Some(rt) = runtime {
+            backends.push(Arc::new(PjrtBackend::new(rt)));
+        }
+        Self::with_backends(pool, backends)
+    }
+
+    /// A registry over an explicit backend set — the extension point
+    /// for new devices (and for tests that inject fake backends). The
+    /// build stage still runs on `pool`.
+    pub fn with_backends(pool: Arc<ThreadPool>, backends: Vec<Arc<dyn Backend>>) -> Self {
+        assert!(!backends.is_empty(), "registry needs at least one backend");
+        MatrixRegistry { pool, backends, entries: RwLock::new(HashMap::new()) }
+    }
+
+    /// The registered backends, in registration order.
+    pub fn backends(&self) -> &[Arc<dyn Backend>] {
+        &self.backends
     }
 
     /// Register a matrix through the plan → build → bind pipeline,
@@ -249,31 +254,45 @@ impl MatrixRegistry {
         let plan = planner::plan_hinted(&a, block_hint);
 
         // -- build: reorder / split / kernels, composed in original
-        //    coordinates; the padded export comes back alongside only
-        //    when bind will actually use it ---------------------------
-        let want_export = self.runtime.is_some() && plan.pjrt_width().is_some();
+        //    coordinates; part exports come back alongside only when a
+        //    registered backend will actually bind them ---------------
+        let want_export = plan.pjrt_width().is_some()
+            && self.backends.iter().any(|b| b.needs_padded_export());
         let built = build_execution(&plan, a, self.pool.clone(), want_export);
 
-        // -- bind: the build's padded export against an AOT bucket ------
-        let pjrt = match (&self.runtime, built.export) {
-            (Some(rt), Some(padded)) => match SpmvExecutor::bind(rt, &padded) {
-                Ok(exe) => Some(PjrtBinding { exe, perm: built.perm }),
-                Err(e) => {
-                    log::warn!("{name}: no PJRT binding ({e}); CPU only");
-                    None
+        // -- bind: offer the build to every backend that supports the
+        //    plan; collect the bindings and the routing priors --------
+        let mut bindings: Vec<(BackendId, Box<dyn ExecutionBinding>)> = Vec::new();
+        let mut priors: Vec<(BackendId, f64)> = Vec::new();
+        for b in &self.backends {
+            let id = b.id();
+            if bindings.iter().any(|(d, _)| *d == id) || !b.supports_plan(&plan) {
+                continue;
+            }
+            match b.bind(&built, &plan) {
+                Ok(binding) => {
+                    priors.push((id, b.static_cost(&plan).unwrap_or(f64::INFINITY)));
+                    bindings.push((id, binding));
                 }
-            },
-            _ => None,
-        };
+                Err(e) => {
+                    log::warn!("{name}: {id:?} backend did not bind ({e})");
+                }
+            }
+        }
+        if bindings.is_empty() {
+            bail!("no backend bound matrix {name}");
+        }
 
         let entry = Arc::new(MatrixEntry {
             name: name.to_string(),
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
             nrows: plan.stats().nrows,
             ncols: plan.stats().ncols,
             nnz: plan.stats().nnz,
+            kernel_name: built.exec.name(),
+            routing: RoutingTable::new(priors),
             plan,
-            cpu: built.exec,
-            pjrt,
+            bindings,
         });
         self.entries
             .write()
@@ -318,11 +337,11 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(20, 20);
         let e = reg.register("grid", a.clone()).unwrap();
-        assert!(e.supports(DeviceKind::Cpu));
-        assert!(!e.supports(DeviceKind::Pjrt));
+        assert!(e.supports(BackendId::Cpu));
+        assert!(!e.supports(BackendId::Pjrt));
 
         let x: Vec<f32> = (0..400).map(|i| (i % 7) as f32).collect();
-        let y = e.spmv(DeviceKind::Cpu, &x).unwrap();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
         let mut y_ref = vec![0f32; 400];
         a.spmv_ref(&x, &mut y_ref);
         for (u, v) in y.iter().zip(&y_ref) {
@@ -338,7 +357,7 @@ mod tests {
         assert!(e.plan().stats().is_regular());
         assert!(e.reordered(), "regular matrices take the Band-k path");
         assert!(e.kernel_name().starts_with("csr2"), "{}", e.kernel_name());
-        assert_eq!(e.route(None), DeviceKind::Cpu, "no runtime ⇒ CPU");
+        assert_eq!(e.route(None), BackendId::Cpu, "no runtime ⇒ CPU");
     }
 
     #[test]
@@ -354,13 +373,13 @@ mod tests {
 
         // and it still computes the right answer, spmv and spmv_multi
         let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
-        let y = e.spmv(DeviceKind::Cpu, &x).unwrap();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
         let mut y_ref = vec![0f32; a.nrows()];
         a.spmv_ref(&x, &mut y_ref);
         for (u, v) in y.iter().zip(&y_ref) {
             assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
         }
-        let ys = e.spmv_multi(DeviceKind::Cpu, &[&x, &x]).unwrap();
+        let ys = e.spmv_multi(BackendId::Cpu, &[&x, &x]).unwrap();
         for yj in &ys {
             for (u, v) in yj.iter().zip(&y) {
                 assert!((u - v).abs() < 1e-4 * v.abs().max(1.0));
@@ -383,15 +402,16 @@ mod tests {
         assert!(d.contains("remainder[rows"), "{d}");
 
         let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 5 + 1) % 9) as f32 - 4.0).collect();
-        let y = e.spmv(DeviceKind::Cpu, &x).unwrap();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
         let mut y_ref = vec![0f32; a.nrows()];
         a.spmv_ref(&x, &mut y_ref);
         for (u, v) in y.iter().zip(&y_ref) {
             assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
         }
-        // hybrid plans never bind the padded export
-        assert!(!e.supports(DeviceKind::Pjrt));
-        assert!(e.spmv(DeviceKind::Pjrt, &x).is_err());
+        // without a runtime the hybrid plan binds CPU only, and the
+        // pinned accelerator path fails loudly
+        assert!(!e.supports(BackendId::Pjrt));
+        assert!(e.spmv(BackendId::Pjrt, &x).is_err());
     }
 
     #[test]
@@ -399,10 +419,11 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
         let e = reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
-        assert_eq!(e.route(Some(DeviceKind::Pjrt)), DeviceKind::Pjrt);
-        // ... and the pinned device then fails loudly instead of
+        assert_eq!(e.route(Some(BackendId::Pjrt)), BackendId::Pjrt);
+        // ... and the pinned backend then fails loudly instead of
         // silently running elsewhere
-        assert!(e.spmv(DeviceKind::Pjrt, &[1.0; 64]).is_err());
+        let err = e.spmv(BackendId::Pjrt, &[1.0; 64]).unwrap_err().to_string();
+        assert!(err.contains("no Pjrt binding"), "{err}");
     }
 
     #[test]
@@ -418,6 +439,23 @@ mod tests {
         assert!(lines[1].starts_with("zeta:"), "{}", lines[1]);
         assert!(lines[1].contains("regular"), "{}", lines[1]);
         assert!(lines[1].contains("Cpu"), "{}", lines[1]);
+        assert!(lines[1].contains("bound [cpu["), "{}", lines[1]);
+    }
+
+    #[test]
+    fn routing_follows_observed_corrections() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        let e = reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        // cold: static prior, CPU is the only bound backend
+        let prior = e.routing().estimate(BackendId::Cpu).unwrap();
+        assert!(prior.is_finite() && prior > 0.0);
+        assert_eq!(e.route(None), BackendId::Cpu);
+        // observed latencies update the estimate without touching the prior
+        e.correct_route(BackendId::Cpu, 123e-6);
+        assert_eq!(e.routing().estimate(BackendId::Cpu), Some(123e-6));
+        assert_eq!(e.routing().static_cost(BackendId::Cpu), Some(prior));
+        assert!(e.describe().contains('*'), "{}", e.describe());
     }
 
     #[test]
@@ -433,7 +471,7 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(8, 8);
         let e = reg.register("g", a).unwrap();
-        assert!(e.spmv(DeviceKind::Cpu, &[1.0; 3]).is_err());
+        assert!(e.spmv(BackendId::Cpu, &[1.0; 3]).is_err());
     }
 
     #[test]
@@ -447,10 +485,10 @@ mod tests {
             .map(|j| (0..n).map(|i| ((i * 3 + j * 11) % 13) as f32 - 6.0).collect())
             .collect();
         let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
-        let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
+        let ys = e.spmv_multi(BackendId::Cpu, &refs).unwrap();
         assert_eq!(ys.len(), 5);
         for (x, y) in xs.iter().zip(&ys) {
-            let y1 = e.spmv(DeviceKind::Cpu, x).unwrap();
+            let y1 = e.spmv(BackendId::Cpu, x).unwrap();
             for (u, v) in y.iter().zip(&y1) {
                 assert!((u - v).abs() < 1e-4 * v.abs().max(1.0), "{u} vs {v}");
             }
@@ -469,9 +507,9 @@ mod tests {
             .map(|j| (0..n).map(|i| ((i * 5 + j * 7) % 17) as f32 - 8.0).collect())
             .collect();
         let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
-        let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
+        let ys = e.spmv_multi(BackendId::Cpu, &refs).unwrap();
         for (x, y) in xs.iter().zip(&ys) {
-            let y1 = e.spmv(DeviceKind::Cpu, x).unwrap();
+            let y1 = e.spmv(BackendId::Cpu, x).unwrap();
             for (u, v) in y.iter().zip(&y1) {
                 assert!((u - v).abs() < 1e-4 * v.abs().max(1.0), "{u} vs {v}");
             }
@@ -490,9 +528,9 @@ mod tests {
             .map(|j| (0..n).map(|i| ((i * 13 + j * 3 + 2) % 19) as f32 - 9.0).collect())
             .collect();
         let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
-        let ys = e.spmv_multi(DeviceKind::Cpu, &refs).unwrap();
+        let ys = e.spmv_multi(BackendId::Cpu, &refs).unwrap();
         for (x, y) in xs.iter().zip(&ys) {
-            let y1 = e.spmv(DeviceKind::Cpu, x).unwrap();
+            let y1 = e.spmv(BackendId::Cpu, x).unwrap();
             for (u, v) in y.iter().zip(&y1) {
                 assert!((u - v).abs() < 1e-4 * v.abs().max(1.0), "{u} vs {v}");
             }
@@ -505,11 +543,11 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(6, 6);
         let e = reg.register("g", a).unwrap();
-        assert!(e.spmv_multi(DeviceKind::Cpu, &[]).unwrap().is_empty());
+        assert!(e.spmv_multi(BackendId::Cpu, &[]).unwrap().is_empty());
         let good = vec![1.0f32; 36];
         let bad = vec![1.0f32; 7];
-        let r = e.spmv_multi(DeviceKind::Cpu, &[&good, &bad]);
+        let r = e.spmv_multi(BackendId::Cpu, &[&good, &bad]);
         assert!(r.is_err(), "mixed-length batch must be rejected");
-        assert!(e.spmv_multi(DeviceKind::Pjrt, &[&good]).is_err(), "no PJRT binding");
+        assert!(e.spmv_multi(BackendId::Pjrt, &[&good]).is_err(), "no PJRT binding");
     }
 }

@@ -1,34 +1,49 @@
-//! The serving event loop: leader thread batches and routes; device
-//! workers execute each batch as one multi-RHS SpMM dispatch
-//! ([`crate::kernels::SpMv::spmv_multi`]) and scatter the per-request
-//! results back over channels.
+//! The serving event loop: leader thread batches and routes; one
+//! worker per registered backend executes each batch as a multi-RHS
+//! dispatch through the entry's [`ExecutionBinding`] and scatters the
+//! per-request results back over channels.
 //!
 //! Topology (std mpsc — no async runtime is available offline, and SpMV
-//! service latencies are µs-scale where a thread-per-device design is
+//! service latencies are µs-scale where a thread-per-backend design is
 //! the right call anyway):
 //!
 //! ```text
-//! clients ─▶ submit mpsc ─▶ leader (batcher) ─▶ per-device work mpsc
-//!                                                  │ CPU worker(s)
-//!                                                  │ PJRT worker
+//! clients ─▶ submit mpsc ─▶ leader (batcher) ─▶ per-backend work mpsc
+//!                                                  │ worker (Cpu)
+//!                                                  │ worker (Pjrt)
+//!                                                  │ worker (…)      one per registry backend
 //! clients ◀─────────── response mpsc ◀─────────────┘
 //! ```
+//!
+//! After executing a batch each worker closes the **online
+//! cost-correction loop**: the observed per-vector execution cost (the
+//! binding's own clock when it keeps one, the worker's wall clock
+//! otherwise) folds into the metrics-side `(matrix, backend)` EWMA, and
+//! the smoothed estimate is pushed back into the entry's routing table
+//! — so the *next* batch routes on what this hardware actually did, not
+//! on the plan's static prior. Corrections land before the responses
+//! are sent, so a client that has seen a response observes the
+//! corrected route.
+//!
+//! [`ExecutionBinding`]: crate::coordinator::backend::ExecutionBinding
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::backend::{Backend, BackendId};
 use super::batcher::{Batch, DynamicBatcher};
 use super::metrics::Metrics;
-use super::registry::{DeviceKind, MatrixRegistry};
+use super::registry::MatrixRegistry;
 use super::{Request, Response};
 
 /// Server tunables. Routing carries no knob here: each batch goes to
-/// the cheapest bound device by the matrix's registration-time cost
-/// estimates, and requests can pin a device explicitly
-/// ([`Server::submit_on`]).
+/// the cheapest bound backend by the matrix's routing table (static
+/// priors corrected by observed latencies), and requests can pin a
+/// backend explicitly ([`Server::submit_on`]).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Requests per batch before forced dispatch.
@@ -67,22 +82,27 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the leader and one worker per available device.
+    /// Start the leader and one worker per registered backend.
     pub fn start(registry: Arc<MatrixRegistry>, config: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
         let (submit_tx, submit_rx) = mpsc::channel::<LeaderMsg>();
-        let (cpu_tx, cpu_rx) = mpsc::channel::<Work>();
-        let (pjrt_tx, pjrt_rx) = mpsc::channel::<Work>();
 
+        let mut worker_txs: HashMap<BackendId, Sender<Work>> = HashMap::new();
         let mut workers = Vec::new();
-        for (rx, dev) in [(cpu_rx, DeviceKind::Cpu), (pjrt_rx, DeviceKind::Pjrt)] {
+        for b in registry.backends() {
+            let id = b.id();
+            if worker_txs.contains_key(&id) {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel::<Work>();
+            worker_txs.insert(id, tx);
             let reg = registry.clone();
             let met = metrics.clone();
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("csrk-worker-{dev:?}"))
-                    .spawn(move || device_worker(rx, reg, met, dev))
-                    .expect("spawn device worker"),
+                    .name(format!("csrk-worker-{id:?}"))
+                    .spawn(move || backend_worker(rx, reg, met, id))
+                    .expect("spawn backend worker"),
             );
         }
 
@@ -92,7 +112,7 @@ impl Server {
             std::thread::Builder::new()
                 .name("csrk-leader".into())
                 .spawn(move || {
-                    leader_loop(submit_rx, cpu_tx, pjrt_tx, reg, met, config);
+                    leader_loop(submit_rx, worker_txs, reg, met, config);
                 })
                 .expect("spawn leader")
         };
@@ -118,21 +138,21 @@ impl Server {
     }
 
     /// Submit asynchronously; the response arrives on the returned
-    /// channel. Returns the assigned request id. Routing is cost-based
-    /// (the registration plan's estimates); use [`Server::submit_on`]
-    /// to pin a device.
+    /// channel. Returns the assigned request id. Routing follows the
+    /// matrix's routing table; use [`Server::submit_on`] to pin a
+    /// backend.
     pub fn submit(&self, matrix: &str, x: Vec<f32>) -> (u64, Receiver<Response>) {
         self.submit_on(matrix, x, None)
     }
 
-    /// [`Server::submit`] with an explicit device override: `Some(d)`
+    /// [`Server::submit`] with an explicit backend override: `Some(d)`
     /// pins execution to `d` (the response carries an error if the
     /// matrix has no binding there); `None` routes by cost.
     pub fn submit_on(
         &self,
         matrix: &str,
         x: Vec<f32>,
-        device: Option<DeviceKind>,
+        device: Option<BackendId>,
     ) -> (u64, Receiver<Response>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -151,8 +171,8 @@ impl Server {
         rx.recv().expect("response")
     }
 
-    /// Submit with a device override and wait.
-    pub fn call_on(&self, matrix: &str, x: Vec<f32>, device: Option<DeviceKind>) -> Response {
+    /// Submit with a backend override and wait.
+    pub fn call_on(&self, matrix: &str, x: Vec<f32>, device: Option<BackendId>) -> Response {
         let (_, rx) = self.submit_on(matrix, x, device);
         rx.recv().expect("response")
     }
@@ -171,8 +191,7 @@ impl Server {
 
 fn leader_loop(
     submit_rx: Receiver<LeaderMsg>,
-    cpu_tx: Sender<Work>,
-    pjrt_tx: Sender<Work>,
+    worker_txs: HashMap<BackendId, Sender<Work>>,
     registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
     config: ServerConfig,
@@ -182,27 +201,43 @@ fn leader_loop(
         std::collections::HashMap::new();
     let route = |batch: Batch,
                  responders: &mut std::collections::HashMap<u64, Sender<Response>>| {
-        // Cost-based device selection off the registration plan; an
-        // explicit per-request override (shared by the whole batch —
+        // Table-based backend selection off the entry's routing table;
+        // an explicit per-request override (shared by the whole batch —
         // the override is part of the batching key) wins outright.
-        // Unknown matrices go to the CPU worker, which reports the
-        // lookup error per request.
-        let device = match registry.get(&batch.matrix) {
-            Ok(e) => e.route(batch.device),
-            Err(_) => DeviceKind::Cpu,
-        };
         let resp: Vec<Sender<Response>> = batch
             .requests
             .iter()
             .map(|(r, _)| responders.remove(&r.id).expect("responder"))
             .collect();
         metrics.record_batch();
-        let work = Work { batch, resp };
-        let tx = match device {
-            DeviceKind::Cpu => &cpu_tx,
-            DeviceKind::Pjrt => &pjrt_tx,
+        // Unknown matrices are answered right here with the lookup
+        // error — no worker can be presumed to exist for them (the
+        // backend set is open), and a guessed worker would only mask
+        // the real diagnostic.
+        let device = match registry.get(&batch.matrix) {
+            Ok(e) => e.route(batch.device),
+            Err(err) => {
+                let msg = err.to_string();
+                let nominal = batch.device.unwrap_or(BackendId::Cpu);
+                for (member, tx) in batch.requests.into_iter().zip(resp) {
+                    respond(member, tx, Err(msg.clone()), &metrics, nominal, 0.0);
+                }
+                return;
+            }
         };
-        let _ = tx.send(work);
+        match worker_txs.get(&device) {
+            Some(tx) => {
+                let _ = tx.send(Work { batch, resp });
+            }
+            None => {
+                // a pinned batch for an id no registered backend claims:
+                // answer here, loudly, per request
+                let msg = format!("no {device:?} backend registered");
+                for (member, tx) in batch.requests.into_iter().zip(resp) {
+                    respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
+                }
+            }
+        }
     };
     loop {
         let timeout = batcher
@@ -219,7 +254,7 @@ fn leader_loop(
                 for batch in batcher.drain() {
                     route(batch, &mut responders);
                 }
-                // closing cpu_tx / pjrt_tx stops the workers
+                // dropping worker_txs stops the workers
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -232,18 +267,20 @@ fn leader_loop(
     }
 }
 
-/// Executes batches: the whole batch runs as **one** multi-RHS dispatch
-/// (`MatrixEntry::spmv_multi`), so the matrix streams from memory once
-/// per batch rather than once per request; results scatter back to the
-/// per-request response channels afterwards. Requests whose vector
-/// length doesn't match the matrix are answered individually with an
-/// error and excluded from the block, so one malformed request cannot
-/// fail its batchmates.
-fn device_worker(
+/// Executes batches for one backend: the whole batch runs as **one**
+/// multi-RHS dispatch through the entry's binding, so the matrix
+/// streams from memory once per batch rather than once per request;
+/// results scatter back to the per-request response channels
+/// afterwards. Requests whose vector length doesn't match the matrix
+/// are answered individually with an error and excluded from the block,
+/// so one malformed request cannot fail its batchmates. Successful
+/// dispatches feed the observed per-vector cost back into routing
+/// (metrics EWMA → entry table) before the responses go out.
+fn backend_worker(
     rx: Receiver<Work>,
     registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
-    device: DeviceKind,
+    device: BackendId,
 ) {
     while let Ok(work) = rx.recv() {
         let entry = match registry.get(&work.batch.matrix) {
@@ -271,14 +308,28 @@ fn device_worker(
             }
         }
         let xs: Vec<&[f32]> = valid.iter().map(|((r, _), _)| r.x.as_slice()).collect();
-        match entry.spmv_multi(device, &xs).map_err(|e| e.to_string()) {
-            Ok(ys) => {
+        let t0 = Instant::now();
+        let dispatched = entry
+            .binding(device)
+            .and_then(|b| b.spmv_multi(&xs).map(|ys| (ys, b.self_timed_cost())));
+        match dispatched {
+            Ok((ys, self_cost)) => {
                 debug_assert_eq!(ys.len(), valid.len());
+                if !xs.is_empty() {
+                    // close the cost-correction loop before responding,
+                    // so the flip is visible once a client sees a reply
+                    let per_vec = self_cost
+                        .unwrap_or_else(|| t0.elapsed().as_secs_f64() / xs.len() as f64);
+                    let ewma =
+                        metrics.observe_device(&work.batch.matrix, entry.uid(), device, per_vec);
+                    entry.correct_route(device, ewma);
+                }
                 for (y, (member, tx)) in ys.into_iter().zip(valid) {
                     respond(member, tx, Ok(y), &metrics, device, entry.flops());
                 }
             }
-            Err(msg) => {
+            Err(e) => {
+                let msg = e.to_string();
                 for (member, tx) in valid {
                     respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
                 }
@@ -293,7 +344,7 @@ fn respond(
     tx: Sender<Response>,
     result: Result<Vec<f32>, String>,
     metrics: &Metrics,
-    device: DeviceKind,
+    device: BackendId,
     flops: f64,
 ) {
     let latency = enqueued.elapsed();
@@ -357,22 +408,47 @@ mod tests {
         let server = test_server();
         let resp = server.call("grid", vec![1.0; 256]);
         assert!(resp.result.is_ok());
-        assert_eq!(resp.device, DeviceKind::Cpu, "only bound device must win");
+        assert_eq!(resp.device, BackendId::Cpu, "only bound backend must win");
+        server.shutdown();
+    }
+
+    #[test]
+    fn served_batches_feed_the_routing_ewma() {
+        let server = test_server();
+        for _ in 0..3 {
+            assert!(server.call("grid", vec![1.0; 256]).result.is_ok());
+        }
+        let obs = server
+            .metrics()
+            .device_estimate("grid", BackendId::Cpu)
+            .expect("served batches must leave an observed estimate");
+        assert!(obs > 0.0 && obs.is_finite());
+        // ... and the entry's routing table received the correction
+        // (all responses are in, so no further batch can race the read)
+        let e = server.registry().get("grid").unwrap();
+        let est = e.routing().estimate(BackendId::Cpu).unwrap();
+        assert!(
+            (est - obs).abs() <= 1e-12 * obs.max(1e-12),
+            "routing estimate {est} must track the metrics EWMA {obs}"
+        );
+        assert!(e.describe().contains('*'), "{}", e.describe());
         server.shutdown();
     }
 
     #[test]
     fn explicit_override_pins_device_and_fails_loudly_when_unbound() {
         let server = test_server();
-        // pinning to the bound device works
-        let resp = server.call_on("grid", vec![1.0; 256], Some(DeviceKind::Cpu));
+        // pinning to the bound backend works
+        let resp = server.call_on("grid", vec![1.0; 256], Some(BackendId::Cpu));
         assert!(resp.result.is_ok());
-        assert_eq!(resp.device, DeviceKind::Cpu);
-        // pinning to an unbound device errors instead of downgrading
-        let resp = server.call_on("grid", vec![1.0; 256], Some(DeviceKind::Pjrt));
+        assert_eq!(resp.device, BackendId::Cpu);
+        // pinning to an id no backend claims errors instead of
+        // downgrading (the registry was built without a runtime, so
+        // there is no Pjrt backend at all)
+        let resp = server.call_on("grid", vec![1.0; 256], Some(BackendId::Pjrt));
         let err = resp.result.unwrap_err();
-        assert!(err.contains("no PJRT binding"), "{err}");
-        assert_eq!(resp.device, DeviceKind::Pjrt);
+        assert!(err.contains("no Pjrt backend"), "{err}");
+        assert_eq!(resp.device, BackendId::Pjrt);
         server.shutdown();
     }
 

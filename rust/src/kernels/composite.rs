@@ -29,13 +29,20 @@
 //! SpMM fast path: the body streams the block through the CSR-2
 //! blocked loop and the remainder through the blocked CSR5 sweep.
 
+use std::sync::Arc;
+
 use super::{pack_block, SpMv};
 use crate::reorder::Permutation;
 use crate::sparse::Scalar;
 
 /// One part of a composite execution: kernel + coordinate mapping.
+///
+/// The kernel is held behind an `Arc` so a device backend
+/// (`coordinator::backend`) can re-bind individual parts of the same
+/// build — e.g. keep the hybrid remainder on this host kernel while the
+/// body executes through PJRT — without re-running the build stage.
 pub struct CompositePart<T> {
-    kernel: Box<dyn SpMv<T>>,
+    kernel: Arc<dyn SpMv<T>>,
     /// Permutation of the shared input space applied to `x` before the
     /// kernel runs (`None` = identity).
     in_perm: Option<Permutation>,
@@ -49,7 +56,7 @@ impl<T: Scalar> CompositePart<T> {
     /// be one entry per kernel row; the input permutation must cover
     /// the kernel's column space.
     pub fn new(
-        kernel: Box<dyn SpMv<T>>,
+        kernel: Arc<dyn SpMv<T>>,
         in_perm: Option<Permutation>,
         rows: Option<Vec<u32>>,
     ) -> Self {
@@ -60,6 +67,22 @@ impl<T: Scalar> CompositePart<T> {
             assert_eq!(p.len(), kernel.ncols(), "in_perm must cover the columns");
         }
         CompositePart { kernel, in_perm, rows }
+    }
+
+    /// The part's kernel (shared — backends clone the `Arc` to re-bind
+    /// a part elsewhere).
+    pub fn kernel(&self) -> &Arc<dyn SpMv<T>> {
+        &self.kernel
+    }
+
+    /// Input permutation of the shared column space, if any.
+    pub fn in_perm(&self) -> Option<&Permutation> {
+        self.in_perm.as_ref()
+    }
+
+    /// Row scatter map (part-local row → original row), if any.
+    pub fn rows(&self) -> Option<&[u32]> {
+        self.rows.as_deref()
     }
 }
 
@@ -107,7 +130,7 @@ impl<T: Scalar> CompositeExec<T> {
     /// permutation); without one it is a passthrough.
     ///
     /// [`FormatPlan::Single`]: crate::tuning::planner::FormatPlan::Single
-    pub fn single(kernel: Box<dyn SpMv<T>>, perm: Option<Permutation>) -> Self {
+    pub fn single(kernel: Arc<dyn SpMv<T>>, perm: Option<Permutation>) -> Self {
         let (nrows, ncols) = (kernel.nrows(), kernel.ncols());
         let rows = perm.as_ref().map(|p| p.inverse().as_slice().to_vec());
         CompositeExec::new(vec![CompositePart::new(kernel, perm, rows)], nrows, ncols)
@@ -116,6 +139,14 @@ impl<T: Scalar> CompositeExec<T> {
     /// Number of composed parts (1 for single-kernel plans).
     pub fn num_parts(&self) -> usize {
         self.parts.len()
+    }
+
+    /// The composed parts, in part order (hybrid builds put the body
+    /// first, the remainder second). Backends walk these to bind parts
+    /// to different devices while reusing the same coordinate maps the
+    /// CPU composite scatters through.
+    pub fn parts(&self) -> &[CompositePart<T>] {
+        &self.parts
     }
 
     /// Kernel names per part, in part order.
@@ -280,7 +311,7 @@ mod tests {
     #[test]
     fn single_identity_part_is_a_passthrough() {
         let a = gen::grid2d_5pt::<f64>(10, 10);
-        let exec = CompositeExec::single(Box::new(CsrSerial::new(a.clone())), None);
+        let exec = CompositeExec::single(Arc::new(CsrSerial::new(a.clone())), None);
         assert_eq!(exec.num_parts(), 1);
         assert_eq!(exec.name(), "csr-serial");
         assert_kernel_matches(&a, &exec, 1e-12);
@@ -296,7 +327,7 @@ mod tests {
         rng.shuffle(&mut v);
         let p = Permutation::from_new_of_old(v);
         let pa = p.apply_sym(&a);
-        let exec = CompositeExec::single(Box::new(CsrSerial::new(pa)), Some(p));
+        let exec = CompositeExec::single(Arc::new(CsrSerial::new(pa)), Some(p));
         // the composite must behave as the ORIGINAL operator
         assert_kernel_matches(&a, &exec, 1e-12);
         for nvec in [2usize, 3, 8] {
@@ -312,12 +343,12 @@ mod tests {
         assert!(!s.remainder_rows.is_empty());
         let parts = vec![
             CompositePart::new(
-                Box::new(CsrParallel::new(s.body.clone(), pool.clone())),
+                Arc::new(CsrParallel::new(s.body.clone(), pool.clone())),
                 None,
                 Some(s.body_rows.clone()),
             ),
             CompositePart::new(
-                Box::new(CsrParallel::new(s.remainder.clone(), pool)),
+                Arc::new(CsrParallel::new(s.remainder.clone(), pool)),
                 None,
                 Some(s.remainder_rows.clone()),
             ),
@@ -346,12 +377,12 @@ mod tests {
         let (pbody, body_map) = s.permuted_body(p.as_slice());
         let parts = vec![
             CompositePart::new(
-                Box::new(CsrParallel::new(pbody, pool.clone())),
+                Arc::new(CsrParallel::new(pbody, pool.clone())),
                 Some(p),
                 Some(body_map),
             ),
             CompositePart::new(
-                Box::new(CsrParallel::new(s.remainder.clone(), pool)),
+                Arc::new(CsrParallel::new(s.remainder.clone(), pool)),
                 None,
                 Some(s.remainder_rows.clone()),
             ),
@@ -379,12 +410,12 @@ mod tests {
         let exec = CompositeExec::new(
             vec![
                 CompositePart::new(
-                    Box::new(CsrParallel::new(pbody, pool.clone())),
+                    Arc::new(CsrParallel::new(pbody, pool.clone())),
                     Some(p),
                     Some(body_map),
                 ),
                 CompositePart::new(
-                    Box::new(CsrParallel::new(s.remainder.clone(), pool)),
+                    Arc::new(CsrParallel::new(s.remainder.clone(), pool)),
                     None,
                     Some(s.remainder_rows.clone()),
                 ),
@@ -419,13 +450,13 @@ mod tests {
         let s = split_by_row_nnz(&a, a.max_row_nnz()); // remainder empty
         let parts = vec![
             CompositePart::new(
-                Box::new(CsrSerial::new(s.body.clone())),
+                Arc::new(CsrSerial::new(s.body.clone())),
                 None,
                 Some(s.body_rows.clone()),
             ),
             // same rows again → overlap
             CompositePart::new(
-                Box::new(CsrSerial::new(s.body.clone())),
+                Arc::new(CsrSerial::new(s.body.clone())),
                 None,
                 Some(s.body_rows.clone()),
             ),
@@ -439,7 +470,7 @@ mod tests {
         let a = gen::grid2d_5pt::<f64>(4, 4);
         let s = split_by_row_nnz(&a, 0); // body empty, remainder = all
         let parts = vec![CompositePart::new(
-            Box::new(CsrSerial::new(s.body.clone())),
+            Arc::new(CsrSerial::new(s.body.clone())),
             None,
             Some(s.body_rows.clone()),
         )];

@@ -16,6 +16,16 @@
 //!   so the body kernel's rows scatter straight to original rows),
 //!   build each part's kernel, and compose them.
 //!
+//! The build also produces the **per-part padded exports** the bind
+//! stage feeds to accelerator backends (`coordinator::backend`): one
+//! slot per composite part, filled at the plan's padded width in the
+//! part's row order. A `Single` plan exports its only part; a `Hybrid`
+//! plan exports the *body* only — the skewed remainder stays a host
+//! kernel, which is exactly the body→device / remainder→host placement
+//! the composite's row scatter maps make mergeable. Exports are built
+//! *before* kernel construction consumes the ordered matrix, so no CSR
+//! copy is ever made for bind's sake.
+//!
 //! Keeping construction behind one function means the registry never
 //! names a concrete kernel type — or a permutation — again: adding a
 //! format (or another part shape) to the serving stack is a planner
@@ -29,7 +39,7 @@ use std::sync::Arc;
 
 use super::composite::{CompositeExec, CompositePart};
 use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SpMv};
-use crate::reorder::{bandk, Permutation};
+use crate::reorder::bandk;
 use crate::sparse::csrk::PaddedCsr;
 use crate::sparse::{split_by_row_nnz, Csr, Csr5, CsrK, Scalar, SplitCsr};
 use crate::tuning::planner::{FormatPlan, PlannedKernel};
@@ -37,22 +47,19 @@ use crate::util::ThreadPool;
 
 /// What the build stage hands the bind stage.
 pub struct BuiltExecution<T> {
-    /// The composite execution, operating in original coordinates.
-    /// Concrete (not `Box<dyn SpMv>`) so the serving layer can reach
-    /// the fused batched entry point
-    /// ([`CompositeExec::spmv_multi_vecs`]); the leaf kernels inside
-    /// are still trait objects.
-    pub exec: CompositeExec<T>,
-    /// The single-kernel path's row order (`None` for hybrid plans and
-    /// the identity path) — the PJRT padded export is built and
-    /// marshaled in this order.
-    pub perm: Option<Permutation>,
-    /// The padded export at the plan's width, in `perm` order —
-    /// produced only when the caller asked for one (a runtime exists
-    /// and the plan sets a padded width), and built *before* kernel
-    /// construction consumes the ordered matrix, so no CSR copy is
-    /// ever made for bind's sake.
-    pub export: Option<PaddedCsr<T>>,
+    /// The composite execution, operating in original coordinates. The
+    /// `Arc` is what backends clone when they bind: the CPU backend
+    /// takes the whole composite (and its fused batched entry point
+    /// [`CompositeExec::spmv_multi_vecs`]); device backends walk
+    /// [`CompositeExec::parts`] to re-bind individual parts.
+    pub exec: Arc<CompositeExec<T>>,
+    /// Per-part padded exports, aligned with [`CompositeExec::parts`]:
+    /// `exports[i]` is part `i`'s padded layout at the plan's width, in
+    /// the part's row order, or `None` when that part stays host-only.
+    /// Empty of content unless the caller asked for exports and the
+    /// plan set a padded width. Hybrid builds export the body (part 0)
+    /// only.
+    pub exports: Vec<Option<PaddedCsr<T>>>,
 }
 
 /// Construct one leaf kernel over `a` — which must already be in the
@@ -62,26 +69,27 @@ pub fn build_part_kernel<T: Scalar>(
     kernel: &PlannedKernel,
     a: Csr<T>,
     pool: Arc<ThreadPool>,
-) -> Box<dyn SpMv<T>> {
+) -> Arc<dyn SpMv<T>> {
     match *kernel {
         PlannedKernel::Csr2 { srs } => {
-            Box::new(Csr2Kernel::new(CsrK::csr2_uniform(a, srs), pool))
+            Arc::new(Csr2Kernel::new(CsrK::csr2_uniform(a, srs), pool))
         }
         PlannedKernel::Csr3 { ssrs, srs } => {
-            Box::new(Csr3Kernel::new(CsrK::csr3_uniform(a, ssrs, srs), pool))
+            Arc::new(Csr3Kernel::new(CsrK::csr3_uniform(a, ssrs, srs), pool))
         }
         PlannedKernel::Csr5 { omega, sigma } => {
             let nnz = a.nnz();
-            Box::new(Csr5Kernel::new(Csr5::from_csr(&a, omega, sigma), nnz, pool))
+            Arc::new(Csr5Kernel::new(Csr5::from_csr(&a, omega, sigma), nnz, pool))
         }
-        PlannedKernel::CsrParallel => Box::new(CsrParallel::new(a, pool)),
+        PlannedKernel::CsrParallel => Arc::new(CsrParallel::new(a, pool)),
     }
 }
 
 /// Execute a plan's build stage over `a` (consumed): reorder, split,
-/// construct part kernels, compose. Set `want_export` when a padded
-/// PJRT export will follow — the ordered matrix is then cloned out
-/// before kernel construction consumes it.
+/// construct part kernels, compose. Set `want_export` when an
+/// accelerator backend will bind afterwards — exportable parts are then
+/// padded out at the plan's width before kernel construction consumes
+/// the ordered matrices.
 pub fn build_execution<T: Scalar>(
     plan: &FormatPlan,
     a: Csr<T>,
@@ -102,10 +110,10 @@ pub fn build_execution<T: Scalar>(
                 _ => None,
             };
             let kern = build_part_kernel(kernel, ordered, pool);
-            let exec = CompositeExec::single(kern, perm.clone());
-            BuiltExecution { exec, perm, export }
+            let exec = Arc::new(CompositeExec::single(kern, perm));
+            BuiltExecution { exec, exports: vec![export] }
         }
-        FormatPlan::Hybrid { threshold, body, remainder, .. } => {
+        FormatPlan::Hybrid { threshold, body, remainder, pjrt_width, .. } => {
             let (nrows, ncols) = (a.nrows(), a.ncols());
             let split = split_by_row_nnz(&a, *threshold);
             drop(a);
@@ -126,6 +134,12 @@ pub fn build_execution<T: Scalar>(
                 Some((pbody, perm, map)) => (pbody, Some(perm), map),
                 None => (raw_body, None, body_rows),
             };
+            // Body export at the plan's width, in the body's (possibly
+            // permuted) row order, before the kernel consumes the CSR.
+            let body_export = match (want_export, pjrt_width) {
+                (true, Some(w)) => Some(PaddedCsr::from_csr(&body_csr, *w)),
+                _ => None,
+            };
             let parts = vec![
                 CompositePart::new(
                     build_part_kernel(&body.kernel, body_csr, pool.clone()),
@@ -139,9 +153,8 @@ pub fn build_execution<T: Scalar>(
                 ),
             ];
             BuiltExecution {
-                exec: CompositeExec::new(parts, nrows, ncols),
-                perm: None,
-                export: None,
+                exec: Arc::new(CompositeExec::new(parts, nrows, ncols)),
+                exports: vec![body_export, None],
             }
         }
     }
@@ -160,22 +173,30 @@ mod tests {
         let reg = gen::grid2d_5pt::<f64>(20, 20);
         let b = build_execution(&planner::plan(&reg), reg.clone(), pool.clone(), false);
         assert!(b.exec.name().starts_with("csr2"), "{}", b.exec.name());
-        assert!(b.perm.is_some(), "regular plans reorder");
-        assert!(b.export.is_none(), "no export requested");
+        assert!(b.exec.parts()[0].in_perm().is_some(), "regular plans reorder");
+        assert!(b.exports.iter().all(|e| e.is_none()), "no export requested");
 
         let irr = gen::power_law::<f64>(600, 8, 1.0, 0x5EED);
         let b = build_execution(&planner::plan(&irr), irr.clone(), pool.clone(), false);
         assert!(b.exec.name().starts_with("csr5"), "{}", b.exec.name());
-        assert!(b.perm.is_none(), "irregular plans keep the labeling");
+        assert!(
+            b.exec.parts()[0].in_perm().is_none(),
+            "irregular plans keep the labeling"
+        );
 
         let hub = gen::circuit::<f64>(32, 32, 7);
         let plan = planner::plan(&hub);
         assert!(plan.is_hybrid(), "{}", plan.summary());
         let b = build_execution(&plan, hub.clone(), pool, false);
         assert_eq!(b.exec.num_parts(), 2);
+        assert_eq!(b.exports.len(), 2, "one export slot per part");
         assert!(b.exec.name().starts_with("hybrid(csr2"), "{}", b.exec.name());
-        assert!(b.perm.is_none(), "hybrid owns its permutations per part");
-        assert!(b.export.is_none(), "hybrid plans never export");
+        assert!(
+            b.exec.parts()[0].in_perm().is_some(),
+            "the hybrid body owns its Band-k permutation"
+        );
+        assert!(b.exec.parts()[1].in_perm().is_none(), "remainder keeps identity order");
+        assert!(b.exports.iter().all(|e| e.is_none()), "no export requested");
     }
 
     #[test]
@@ -188,8 +209,8 @@ mod tests {
         ] {
             let plan = planner::plan(&a);
             let b = build_execution(&plan, a.clone(), pool.clone(), false);
-            assert_kernel_matches(&a, &b.exec, 1e-9);
-            assert_spmm_matches(&b.exec, 4, 1e-9);
+            assert_kernel_matches(&a, b.exec.as_ref(), 1e-9);
+            assert_spmm_matches(b.exec.as_ref(), 4, 1e-9);
         }
     }
 
@@ -199,8 +220,8 @@ mod tests {
         let a = gen::grid2d_5pt::<f64>(12, 12);
         let plan = planner::plan(&a);
         let b = build_execution(&plan, a.clone(), pool, true);
-        let p = b.perm.expect("regular plans reorder");
-        let padded = b.export.expect("export requested on a pjrt-width plan");
+        let p = b.exec.parts()[0].in_perm().expect("regular plans reorder");
+        let padded = b.exports[0].as_ref().expect("export requested on a pjrt-width plan");
         assert_eq!(padded.width, plan.pjrt_width().unwrap());
         assert_eq!(padded.nrows, a.nrows());
         // the export is the padded layout of the Band-k-permuted matrix
@@ -208,6 +229,24 @@ mod tests {
         assert_eq!(padded.cols, expect.cols);
         assert_eq!(padded.vals, expect.vals);
         assert_eq!(padded.overflow.len(), expect.overflow.len());
+    }
+
+    #[test]
+    fn hybrid_build_exports_the_body_only() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let a = gen::circuit::<f64>(32, 32, 7);
+        let plan = planner::plan(&a);
+        assert!(plan.is_hybrid(), "{}", plan.summary());
+        let width = plan.pjrt_width().expect("hybrid plans price the body export");
+        let b = build_execution(&plan, a.clone(), pool, true);
+        let body = b.exports[0].as_ref().expect("body export present");
+        assert!(b.exports[1].is_none(), "remainder stays host-only");
+        assert_eq!(body.width, width);
+        assert_eq!(body.nrows, b.exec.parts()[0].kernel().nrows());
+        assert_eq!(body.ncols, a.ncols(), "body keeps the shared column space");
+        // the body rows all fit the split threshold, which the width
+        // covers (clamped): no overflow entries for this fixture
+        assert!(body.overflow.is_empty(), "{} overflow rows", body.overflow.len());
     }
 
     #[test]

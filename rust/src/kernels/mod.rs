@@ -15,7 +15,8 @@
 //! * [`factory`] — [`build_execution`]: the coordinator's *build*
 //!   stage; turns a [`FormatPlan`](crate::tuning::planner::FormatPlan)
 //!   plus raw CSR arrays into a ready composite (reorder, split, leaf
-//!   kernels via [`build_part_kernel`]).
+//!   kernels via [`build_part_kernel`]) plus the per-part padded
+//!   exports accelerator backends (`coordinator::backend`) bind.
 //!
 //! All parallel kernels share the crate's persistent
 //! [`ThreadPool`](crate::util::ThreadPool) and write disjoint row ranges,

@@ -2,12 +2,22 @@
 //! produced once at build time by `python/compile/aot.py`) and executes
 //! them on the request path. Python is never involved at run time.
 //!
+//! On the serving stack this layer sits *behind*
+//! [`crate::coordinator::backend::PjrtBackend`]: the backend consumes
+//! the build stage's per-part padded exports, binds each to a bucketed
+//! [`SpmvExecutor`] here, and presents the result through the uniform
+//! `ExecutionBinding` trait — the registry and server never touch an
+//! executor directly. Solvers and tests that want the raw bucketed
+//! executables (SpMV / CG steps) still use this module as a library.
+//!
 //! * [`manifest`] — parses `artifacts/manifest.txt` into typed artifact
 //!   descriptions and picks shape buckets.
 //! * [`client`] — PJRT CPU client wrapper: HLO-text → compile →
 //!   executable cache.
-//! * [`executor`] — binds a CSR-k matrix (in padded export form) to a
-//!   bucketed executable and runs SpMV / CG / power-iteration steps.
+//! * [`executor`] — binds one padded export to a bucketed executable
+//!   and runs SpMV / CG / power-iteration steps. Binding pads the
+//!   matrix arrays to the bucket shape **once** (device-ready
+//!   literals); per-request work is only input-vector marshaling.
 
 pub mod client;
 pub mod executor;

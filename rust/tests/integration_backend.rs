@@ -1,0 +1,223 @@
+//! Backend-API integration: the registry/server over an *injected*
+//! backend set, exercising exactly what the trait seam promises —
+//! a third-party `Backend` implementation plugs into registration,
+//! binding-map dispatch, per-request pinning, and the metrics-fed
+//! routing correction loop, with zero registry/server changes.
+//!
+//! The routing-feedback test is the acceptance row for online cost
+//! correction: a fake accelerator backend advertises a deliberately
+//! wrong (absurdly cheap) static cost, so cold routing prefers it; its
+//! bindings report a deterministic, fake self-timed latency (no
+//! wall-time sleeps — the binding just *claims* each dispatch cost
+//! 250 ms), and after the first served batch the EWMA correction must
+//! flip `route()` back to the CPU.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use csrk::coordinator::{
+    Backend, BackendId, CpuBackend, ExecutionBinding, MatrixRegistry, Server, ServerConfig,
+};
+use csrk::kernels::{BuiltExecution, CompositeExec, SpMv};
+use csrk::sparse::gen;
+use csrk::tuning::planner::FormatPlan;
+use csrk::util::ThreadPool;
+
+/// A fake accelerator: computes correct results on the host composite,
+/// but advertises a bogus static cost and reports a fixed fake latency
+/// from its own "clock".
+struct FakeGpu {
+    /// The deliberately wrong prior (seconds per vector).
+    claimed_cost: f64,
+    /// What every dispatch "costs" on the fake clock.
+    actual_cost: f64,
+    /// Dispatch counter so the test can assert the fake path really ran.
+    dispatches: Arc<AtomicU64>,
+}
+
+struct FakeGpuBinding {
+    exec: Arc<CompositeExec<f32>>,
+    actual_cost: f64,
+    dispatches: Arc<AtomicU64>,
+}
+
+impl Backend for FakeGpu {
+    fn id(&self) -> BackendId {
+        BackendId::Pjrt // claims the accelerator slot
+    }
+
+    fn describe(&self) -> String {
+        "fake-gpu".into()
+    }
+
+    fn supports_plan(&self, _plan: &FormatPlan) -> bool {
+        true
+    }
+
+    fn static_cost(&self, _plan: &FormatPlan) -> Option<f64> {
+        Some(self.claimed_cost)
+    }
+
+    fn bind(
+        &self,
+        built: &BuiltExecution<f32>,
+        _plan: &FormatPlan,
+    ) -> anyhow::Result<Box<dyn ExecutionBinding>> {
+        Ok(Box::new(FakeGpuBinding {
+            exec: built.exec.clone(),
+            actual_cost: self.actual_cost,
+            dispatches: self.dispatches.clone(),
+        }))
+    }
+}
+
+impl ExecutionBinding for FakeGpuBinding {
+    fn backend(&self) -> BackendId {
+        BackendId::Pjrt
+    }
+
+    fn describe(&self) -> String {
+        format!("fake-gpu[{}]", self.exec.name())
+    }
+
+    fn spmv(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let mut y = vec![0f32; self.exec.nrows()];
+        self.exec.spmv(x, &mut y);
+        Ok(y)
+    }
+
+    fn spmv_multi(&self, xs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        Ok(self.exec.spmv_multi_vecs(xs))
+    }
+
+    fn self_timed_cost(&self) -> Option<f64> {
+        Some(self.actual_cost)
+    }
+}
+
+fn fake_registry(claimed: f64, actual: f64) -> (Arc<MatrixRegistry>, Arc<AtomicU64>) {
+    let pool = Arc::new(ThreadPool::new(2));
+    let dispatches = Arc::new(AtomicU64::new(0));
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::new(pool.clone())),
+        Arc::new(FakeGpu {
+            claimed_cost: claimed,
+            actual_cost: actual,
+            dispatches: dispatches.clone(),
+        }),
+    ];
+    (Arc::new(MatrixRegistry::with_backends(pool, backends)), dispatches)
+}
+
+/// The satellite acceptance test: two backends, deliberately wrong
+/// static costs, enough served batches for the EWMA correction to flip
+/// `route()` — asserted with a deterministic fake-latency clock and no
+/// wall-time sleeps.
+#[test]
+fn ewma_correction_flips_routing_off_a_wrong_static_cost() {
+    // the fake claims 1 ns/vector (absurdly cheap prior) but its own
+    // clock reports 0.25 s/vector — any real CPU batch is far cheaper
+    let (registry, dispatches) = fake_registry(1e-9, 0.25);
+    let a = gen::grid2d_5pt::<f32>(16, 16);
+    let e = registry.register("grid", a.clone()).unwrap();
+    assert!(e.supports(BackendId::Cpu) && e.supports(BackendId::Pjrt), "{}", e.describe());
+    assert_eq!(
+        e.route(None),
+        BackendId::Pjrt,
+        "cold routing must trust the (wrong) static prior: {}",
+        e.describe()
+    );
+
+    let server = Server::start(registry.clone(), ServerConfig::default());
+    let x: Vec<f32> = (0..256).map(|i| ((i * 3 + 1) % 11) as f32 - 5.0).collect();
+
+    // batch 1 routes to the fake gpu, which computes correctly but
+    // reports its quarter-second dispatch cost; the worker folds that
+    // into the EWMA and corrects the table before responding
+    let r1 = server.call("grid", x.clone());
+    assert_eq!(r1.device, BackendId::Pjrt, "first batch follows the prior");
+    let y = r1.result.unwrap();
+    let mut y_ref = vec![0f32; 256];
+    a.spmv_ref(&x, &mut y_ref);
+    for (u, v) in y.iter().zip(&y_ref) {
+        assert!((u - v).abs() < 1e-3 * v.abs().max(1.0));
+    }
+    assert_eq!(dispatches.load(Ordering::Relaxed), 1);
+
+    // the flip: observed 0.25 s ≫ the CPU estimate (static roofline or
+    // the observed µs-scale EWMA), so route() now picks the CPU
+    assert_eq!(
+        server.metrics().device_estimate("grid", BackendId::Pjrt),
+        Some(0.25),
+        "the fake clock's latency must land in the metrics EWMA verbatim"
+    );
+    assert_eq!(e.route(None), BackendId::Cpu, "{}", e.describe());
+    assert_eq!(e.routing().estimate(BackendId::Pjrt), Some(0.25));
+    assert_eq!(
+        e.routing().static_cost(BackendId::Pjrt),
+        Some(1e-9),
+        "the wrong prior is kept for observability"
+    );
+
+    // every subsequent unpinned batch serves on the CPU; the fake gpu
+    // sees no more traffic
+    for _ in 0..5 {
+        let r = server.call("grid", x.clone());
+        assert_eq!(r.device, BackendId::Cpu);
+        assert!(r.result.is_ok());
+    }
+    assert_eq!(dispatches.load(Ordering::Relaxed), 1, "no further fake-gpu dispatches");
+
+    // pinning still reaches the corrected-away backend explicitly
+    let pinned = server.call_on("grid", x, Some(BackendId::Pjrt));
+    assert_eq!(pinned.device, BackendId::Pjrt);
+    assert!(pinned.result.is_ok());
+    assert_eq!(dispatches.load(Ordering::Relaxed), 2);
+
+    server.shutdown();
+}
+
+/// The mirror case: a correct prior is *confirmed* by observations and
+/// routing never flips — corrections are not churn.
+#[test]
+fn accurate_priors_survive_observation() {
+    // fake gpu claims 10 s and "measures" 10 s; CPU stays cheapest
+    let (registry, dispatches) = fake_registry(10.0, 10.0);
+    let e = registry.register("grid", gen::grid2d_5pt::<f32>(12, 12)).unwrap();
+    assert_eq!(e.route(None), BackendId::Cpu);
+    let server = Server::start(registry, ServerConfig::default());
+    let x = vec![1.0f32; 144];
+    for _ in 0..4 {
+        let r = server.call("grid", x.clone());
+        assert_eq!(r.device, BackendId::Cpu);
+        assert!(r.result.is_ok());
+    }
+    assert_eq!(dispatches.load(Ordering::Relaxed), 0, "fake gpu never routed");
+    server.shutdown();
+}
+
+/// An injected backend participates in describe() and the per-backend
+/// binding map exactly like the built-ins — the API seam the next
+/// device (SELL-C-σ, NUMA, remote) will use.
+#[test]
+fn injected_backend_is_a_first_class_citizen() {
+    let (registry, _) = fake_registry(1e-9, 0.5);
+    assert_eq!(registry.backends().len(), 2);
+    assert_eq!(registry.backends()[1].describe(), "fake-gpu");
+    let e = registry.register("hubs", gen::power_law::<f32>(500, 8, 1.0, 0xF00D)).unwrap();
+    // the fake claims support for every plan, including the irregular
+    // one the real PJRT backend would refuse
+    assert!(e.supports(BackendId::Pjrt));
+    let d = e.describe();
+    assert!(d.contains("fake-gpu["), "{d}");
+    assert!(d.contains("cpu["), "{d}");
+    // direct binding access runs the fake path
+    let x = vec![1.0f32; e.ncols];
+    let y = e.spmv(BackendId::Pjrt, &x).unwrap();
+    let y_cpu = e.spmv(BackendId::Cpu, &x).unwrap();
+    for (u, v) in y.iter().zip(&y_cpu) {
+        assert!((u - v).abs() < 1e-4 * v.abs().max(1.0));
+    }
+}

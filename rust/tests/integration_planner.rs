@@ -214,6 +214,7 @@ fn kkt_conformance_planned_and_forced_hybrid() {
             kernel: PlannedKernel::Csr5 { omega: 4, sigma: 8 },
         },
         gpu_params: csr3_params_multi(Device::Ampere, a.rdensity(), 1),
+        pjrt_width: None,
         costs: vec![(DeviceKind::Cpu, 1.0)],
         stats,
     };
@@ -381,7 +382,9 @@ fn per_request_override_survives_batching() {
     for rx in errs {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.device, DeviceKind::Pjrt);
-        assert!(resp.result.unwrap_err().contains("no PJRT binding"));
+        // the registry was built without a runtime, so no Pjrt backend
+        // exists at all and the pinned batch is refused at the leader
+        assert!(resp.result.unwrap_err().contains("no Pjrt backend"));
     }
     server.shutdown();
 }

@@ -9,9 +9,12 @@
 //! failures so PJRT regressions cannot hide behind a silent skip.
 
 use std::path::Path;
+use std::sync::Arc;
 
+use csrk::coordinator::{BackendId, MatrixRegistry};
 use csrk::runtime::{ArtifactKind, Manifest, Runtime, SpmvExecutor};
 use csrk::sparse::{gen, CsrK};
+use csrk::util::ThreadPool;
 
 fn pjrt_required() -> bool {
     std::env::var("CSRK_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty())
@@ -132,6 +135,53 @@ fn pjrt_cg_solves_poisson() {
     a.spmv_ref(&x, &mut ax);
     let resid: f32 = ax.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
     assert!(resid < 1e-4, "host residual {resid}");
+}
+
+/// The tentpole acceptance row: a hybrid-planned hub matrix with a
+/// live runtime binds **body→PJRT + remainder→CPU** — `describe()`
+/// names the per-part placement, and both `spmv` and the blocked
+/// `spmv_multi` on the PJRT binding match the dense reference in
+/// original coordinates. Skips (does not panic) when PJRT artifacts
+/// are absent; set `CSRK_REQUIRE_PJRT=1` to harden the skip.
+#[test]
+fn hybrid_entry_places_body_on_pjrt_and_remainder_on_cpu() {
+    let Some(rt) = runtime() else { return };
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = MatrixRegistry::new(pool, Some(Arc::new(rt)));
+    let a = gen::circuit::<f32>(32, 32, 7);
+    let e = registry.register("rails", a.clone()).unwrap();
+    assert!(e.plan().is_hybrid(), "{}", e.describe());
+    assert!(
+        e.supports(BackendId::Pjrt),
+        "hybrid body must bind an AOT bucket: {}",
+        e.describe()
+    );
+    let d = e.describe();
+    assert!(d.contains("body→pjrt["), "per-part placement missing: {d}");
+    assert!(d.contains("remainder→cpu["), "per-part placement missing: {d}");
+
+    // conformance through the mixed placement, single-vector ...
+    let n = a.nrows();
+    let xs: Vec<Vec<f32>> = (0..5)
+        .map(|j| (0..n).map(|i| ((i * 7 + j * 11 + 1) % 17) as f32 / 17.0 - 0.5).collect())
+        .collect();
+    for x in &xs {
+        let y = e.spmv(BackendId::Pjrt, x).unwrap();
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (i, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+            assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "row {i}: {u} vs {v}");
+        }
+    }
+    // ... and blocked, agreeing with the CPU binding on the same batch
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let ys = e.spmv_multi(BackendId::Pjrt, &refs).unwrap();
+    let ys_cpu = e.spmv_multi(BackendId::Cpu, &refs).unwrap();
+    for (yp, yc) in ys.iter().zip(&ys_cpu) {
+        for (u, v) in yp.iter().zip(yc) {
+            assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
 }
 
 #[test]
