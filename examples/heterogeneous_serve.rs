@@ -1,8 +1,10 @@
 //! Heterogeneous serving demo: the coordinator serving batched SpMV
 //! requests for several suite matrices across the registered execution
-//! backends (CPU kernels; PJRT/AOT when artifacts exist), reporting
-//! per-backend bindings — including the hybrid body→pjrt /
-//! remainder→cpu placement — plus latency and throughput.
+//! backends (CPU kernels; the simulated wide-SIMD SELL device; PJRT/AOT
+//! when artifacts exist), reporting per-backend bindings — including
+//! the hybrid body→pjrt / remainder→cpu placement and the SELL-planned
+//! entry's cpu + sell[sellcs(c32, …)] bindings — plus latency and
+//! throughput. The serving smoke job in CI runs exactly this binary.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example heterogeneous_serve
@@ -10,7 +12,10 @@
 
 use std::sync::Arc;
 
-use csrk::coordinator::{Backend, DeviceKind, MatrixRegistry, Server, ServerConfig};
+use csrk::coordinator::{
+    Backend, CpuBackend, DeviceKind, MatrixRegistry, PjrtBackend, SellBackend, Server,
+    ServerConfig,
+};
 use csrk::runtime::Runtime;
 use csrk::sparse::{gen, suite, SuiteScale};
 use csrk::util::table::{f, Table};
@@ -21,31 +26,45 @@ fn main() {
     let runtime = match Runtime::from_default_dir() {
         Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
-            eprintln!("PJRT disabled ({e}); CPU only");
+            eprintln!("PJRT disabled ({e}); CPU + simulated SELL device only");
             None
         }
     };
     let has_pjrt = runtime.is_some();
-    let registry = Arc::new(MatrixRegistry::new(pool, runtime));
+    // the explicit backend set: triad-calibrated CPU, the simulated
+    // wide-SIMD SELL device (the PR 4 extension point exercised with
+    // zero registry/server changes), and PJRT when artifacts loaded
+    let mut backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::new(pool.clone())),
+        Arc::new(SellBackend::new(pool.clone())),
+    ];
+    if let Some(rt) = runtime {
+        backends.push(Arc::new(PjrtBackend::new(rt)));
+    }
+    let registry = Arc::new(MatrixRegistry::with_backends(pool, backends));
     println!("backends:");
     for b in registry.backends() {
         println!("  {:?}: {}", b.id(), b.describe());
     }
 
     // Register a slice of the suite spanning the rdensity range, an
-    // irregular power-law matrix the planner routes around CSR-2, and
-    // a hub-pattern circuit matrix the planner splits into a hybrid
-    // body + remainder entry. Each describe() line below reports the
+    // irregular power-law matrix the planner routes around CSR-2, a
+    // hub-pattern circuit matrix the planner splits into a hybrid
+    // body + remainder entry, and an alternating-row matrix whose
+    // bounded fill lands on the SELL-C-σ rail (its describe() line
+    // shows the cpu[…] and sell[sellcs(c32, …)] bindings and routes to
+    // the simulated device). Each describe() line below reports the
     // per-part format/nnz breakdown, every backend binding (with a
     // live runtime the hybrid line shows body→pjrt[...] +
     // remainder→cpu[...]), and the routing estimates that observed
     // latencies will correct as traffic flows.
-    let names = ["roadNet-TX", "ecology1", "wave", "power-law", "circuit-hub"];
+    let names = ["roadNet-TX", "ecology1", "wave", "power-law", "circuit-hub", "alt-bands"];
     let mut ncols = std::collections::HashMap::new();
     for name in names {
         let a = match name {
             "power-law" => gen::power_law::<f32>(4096, 8, 1.0, 0xF00D),
             "circuit-hub" => gen::circuit::<f32>(32, 32, 0xC1BC),
+            "alt-bands" => gen::alternating_rows::<f32>(6000, 4, 12),
             _ => suite::by_name(name).unwrap().build::<f32>(SuiteScale::Tiny),
         };
         ncols.insert(name, a.ncols());

@@ -13,8 +13,8 @@
 use std::sync::Arc;
 
 use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
-use csrk::kernels::{build_execution, pack_block, Csr2Kernel, CsrParallel, SpMv};
-use csrk::sparse::{gen, suite, Csr, CsrK, SuiteScale};
+use csrk::kernels::{build_execution, pack_block, Csr2Kernel, CsrParallel, SellCsKernel, SpMv};
+use csrk::sparse::{gen, suite, Csr, CsrK, SellCs, SuiteScale};
 use csrk::tuning::cpu::FIXED_SRS;
 use csrk::tuning::planner;
 use csrk::util::table::{f, Table};
@@ -40,6 +40,13 @@ fn main() {
         .collect();
     cases.push(("power-law", gen::power_law::<f32>(50_000, 8, 1.0, 0xF00D)));
     cases.push(("circuit-hub", gen::circuit::<f32>(32, 32, 0xC1BC)));
+    // the SELL class: alternating short/long rows, irregular by §6 but
+    // with window-boundable fill — the planner's sellcs rail, so the
+    // "planned" row below is the planner-chosen SELL kernel
+    cases.push(("alt-bands", gen::alternating_rows::<f32>(20_000, 4, 12)));
+    const ALL_NVEC: &[usize] = &[1, 4, 8, 16];
+    // forced SELL rows compare at the batch extremes only
+    const SELL_NVEC: &[usize] = &[1, 8];
     for &(name, ref a) in &cases {
         let (n, m) = (a.nrows(), a.ncols());
         // the planned row reproduces registration exactly: the build
@@ -47,16 +54,26 @@ fn main() {
         // returned composite executes in original coordinates
         let planned: Arc<dyn SpMv<f32>> =
             build_execution(&planner::plan(a), a.clone(), pool.clone(), false).exec;
-        let kernels: Vec<Arc<dyn SpMv<f32>>> = vec![
-            Arc::new(CsrParallel::new(a.clone(), pool.clone())),
-            Arc::new(Csr2Kernel::new(
-                CsrK::csr2_uniform(a.clone(), FIXED_SRS),
-                pool.clone(),
-            )),
-            planned,
+        // forced SELL-C-σ at the autotuned window (full sort when no
+        // window bounds the fill), regardless of what the planner chose
+        let row_nnz: Vec<usize> = (0..n).map(|i| a.row_nnz(i)).collect();
+        let sigma = planner::sell_sigma_or_full(&row_nnz, 8);
+        let forced_sell: Arc<dyn SpMv<f32>> =
+            Arc::new(SellCsKernel::new(SellCs::from_csr(a, 8, sigma), pool.clone()));
+        let kernels: Vec<(Arc<dyn SpMv<f32>>, &[usize])> = vec![
+            (Arc::new(CsrParallel::new(a.clone(), pool.clone())), ALL_NVEC),
+            (
+                Arc::new(Csr2Kernel::new(
+                    CsrK::csr2_uniform(a.clone(), FIXED_SRS),
+                    pool.clone(),
+                )),
+                ALL_NVEC,
+            ),
+            (planned, ALL_NVEC),
+            (forced_sell, SELL_NVEC),
         ];
-        for k in &kernels {
-            for nvec in [1usize, 4, 8, 16] {
+        for (k, nvecs) in &kernels {
+            for &nvec in nvecs.iter() {
                 let xs: Vec<Vec<f32>> = (0..nvec)
                     .map(|j| {
                         (0..m)

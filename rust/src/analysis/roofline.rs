@@ -34,6 +34,25 @@ pub fn spmv_bytes(nrows: usize, ncols: usize, nnz: usize, elem: usize) -> usize 
     nnz * (elem + 4) + (nrows + 1) * 4 + ncols * elem + nrows * elem
 }
 
+/// Cold-cache SpMV byte traffic of a SELL-C-σ operand from raw
+/// dimensions — the dimension-wise extension of [`spmv_bytes`] that
+/// charges **padded** slots: a SELL sweep streams every stored slot
+/// (vals + 4-byte cols, padding included — that is exactly what the
+/// β fill-in costs), the chunk pointer table, the chunk permutation
+/// (the scatter indices), plus `x` and `y` once each. The planner's
+/// σ-autotune prices candidate windows with this accounting
+/// (`tuning::planner::sell_autotune` bounds β, `part_sell_cost`
+/// converts the stream to seconds).
+pub fn sellcs_bytes(
+    nrows: usize,
+    ncols: usize,
+    padded_nnz: usize,
+    nchunks: usize,
+    elem: usize,
+) -> usize {
+    padded_nnz * (elem + 4) + (nchunks + 1) * 4 + nrows * 4 + ncols * elem + nrows * elem
+}
+
 /// SpMV arithmetic intensity for a CSR matrix in the paper's cold-cache
 /// accounting: `2·NNZ` FLOPs over [`spmv_bytes`].
 pub fn spmv_arithmetic_intensity<T: Scalar>(a: &Csr<T>) -> f64 {
@@ -55,6 +74,18 @@ mod tests {
         let ai = spmv_arithmetic_intensity(&a);
         assert!(ai > 0.1 && ai < 0.3, "ai {ai}");
         assert!(ai < AMPERE_A100.ridge_flop_per_byte() / 10.0);
+    }
+
+    #[test]
+    fn sellcs_bytes_charge_the_padding() {
+        // every padded slot adds a full (val + col) load to the stream
+        let flat = sellcs_bytes(100, 100, 500, 13, 4);
+        let padded = sellcs_bytes(100, 100, 750, 13, 4);
+        assert_eq!(padded - flat, 250 * 8);
+        // at β = 1 the accounting tracks the CSR stream: same nnz charge,
+        // row_ptr swapped for chunk_ptr + perm
+        let csr = spmv_bytes(100, 100, 500, 4);
+        assert_eq!(flat as i64 - csr as i64, (13 + 1 + 100) as i64 * 4 - 101 * 4);
     }
 
     #[test]

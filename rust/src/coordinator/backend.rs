@@ -25,11 +25,18 @@
 //!   The static estimates only need to be relatively right; once
 //!   traffic flows, routing follows what the hardware actually does.
 //!
-//! Two backends ship:
+//! Three backends ship:
 //!
 //! * [`CpuBackend`] — wraps the built [`CompositeExec`] and the crate
 //!   thread pool; batches take the fused per-request entry point
-//!   ([`CompositeExec::spmv_multi_vecs`]).
+//!   ([`CompositeExec::spmv_multi_vecs`]). Its routing prior is priced
+//!   at the **measured** STREAM-triad bandwidth (one calibration per
+//!   process), not the planner's hard-coded roofline constant.
+//! * [`SellBackend`] — a simulated wide-SIMD SELL-C-σ device: rebinds
+//!   SELL-planned parts at its own chunk width (C = 32) and self-times
+//!   each dispatch with a `gpusim`-style memory model. It is injected
+//!   through [`MatrixRegistry::with_backends`] with zero registry or
+//!   server changes — the proof the extension point below holds.
 //! * [`PjrtBackend`] — absorbs the old registry-private PJRT plumbing:
 //!   it binds each **exported part** of the build to an AOT bucket
 //!   ([`crate::runtime::SpmvExecutor`]) and keeps unexported parts on
@@ -48,21 +55,32 @@
 //!                                                      y (original coords)
 //! ```
 //!
-//! Adding a device (SELL-C-σ GPU kernels, a second NUMA domain, a
-//! remote worker) is now one `Backend` impl handed to
+//! Adding a device (a second NUMA domain, a remote worker, real GPU
+//! kernels) is one `Backend` impl handed to
 //! [`MatrixRegistry::with_backends`] — no registry or server changes.
+//! [`SellBackend`] is the first proof: the SELL-C-σ device arrived as
+//! exactly one such impl.
 //!
 //! [`MatrixRegistry::with_backends`]: crate::coordinator::MatrixRegistry::with_backends
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::kernels::{pack_block, unpack_block, BuiltExecution, CompositeExec, SpMv};
+use crate::analysis::roofline::sellcs_bytes;
+use crate::gpusim::{DeviceSpec, MemSim};
+use crate::kernels::{
+    pack_block, unpack_block, BuiltExecution, CompositeExec, CompositePart, SellCsKernel, SpMv,
+};
 use crate::reorder::Permutation;
 use crate::runtime::{Runtime, SpmvExecutor};
-use crate::tuning::planner::FormatPlan;
+use crate::sparse::SellCs;
+use crate::tuning::cpu::stream_triad_gbps;
+use crate::tuning::planner::{
+    self, FormatPlan, PlannedKernel, CPU_ROOFLINE, SELL_DEVICE_C, SELL_ROOFLINE,
+};
 use crate::util::ThreadPool;
 
 /// Identity of an execution backend — the preferred name for the
@@ -140,15 +158,49 @@ pub trait ExecutionBinding: Send + Sync {
 // CPU backend
 // ---------------------------------------------------------------------
 
-/// The host backend: the built composite over the crate thread pool.
+/// Process-wide STREAM-triad results, keyed by pool width: achievable
+/// streaming bandwidth depends on how many participants drive the
+/// triad, so backends sharing a pool geometry share one measurement
+/// (instead of re-streaming 24 MiB per construction) while a
+/// differently-sized pool gets its own.
+static TRIAD_GBPS: OnceLock<Mutex<HashMap<usize, f64>>> = OnceLock::new();
+
+/// The cached-per-width triad measurement for `pool`.
+fn triad_gbps_for(pool: &Arc<ThreadPool>) -> f64 {
+    let cache = TRIAD_GBPS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    *map.entry(pool.threads()).or_insert_with(|| stream_triad_gbps(pool))
+}
+
+/// The host backend: the built composite over the crate thread pool,
+/// with its routing prior priced at the **measured** STREAM-triad
+/// bandwidth ([`stream_triad_gbps`], run once per process at first
+/// construction) instead of the planner's hard-coded
+/// [`CPU_ROOFLINE`] constant — the calibration half of the ROADMAP
+/// cost-model item.
 pub struct CpuBackend {
     pool: Arc<ThreadPool>,
+    mem_bw_gbps: f64,
 }
 
 impl CpuBackend {
-    /// A CPU backend executing on `pool`.
+    /// A CPU backend executing on `pool`, triad-calibrated (one
+    /// measurement per pool width per process, cached).
     pub fn new(pool: Arc<ThreadPool>) -> Self {
-        CpuBackend { pool }
+        let bw = triad_gbps_for(&pool);
+        CpuBackend { pool, mem_bw_gbps: bw }
+    }
+
+    /// A CPU backend with an explicit streaming bandwidth (GB/s) —
+    /// skips the measurement; for tests that need deterministic priors.
+    pub fn with_bandwidth(pool: Arc<ThreadPool>, mem_bw_gbps: f64) -> Self {
+        assert!(mem_bw_gbps > 0.0, "bandwidth must be positive");
+        CpuBackend { pool, mem_bw_gbps }
+    }
+
+    /// The streaming bandwidth this backend prices plans at.
+    pub fn mem_bw_gbps(&self) -> f64 {
+        self.mem_bw_gbps
     }
 }
 
@@ -158,11 +210,18 @@ impl Backend for CpuBackend {
     }
 
     fn describe(&self) -> String {
-        format!("cpu({} threads)", self.pool.threads())
+        format!("cpu({} threads, triad {:.1} GB/s)", self.pool.threads(), self.mem_bw_gbps)
     }
 
     fn supports_plan(&self, _plan: &FormatPlan) -> bool {
         true // every plan builds host kernels
+    }
+
+    /// The routing prior at the *measured* triad bandwidth — this is
+    /// where the calibration replaces the planner's
+    /// [`CPU_ROOFLINE`] constant on the serving path.
+    fn static_cost(&self, plan: &FormatPlan) -> Option<f64> {
+        Some(planner::plan_cpu_cost(plan, self.mem_bw_gbps))
     }
 
     fn bind(
@@ -305,17 +364,7 @@ impl BoundPart {
             PartExec::Device(exe) => format!("pjrt[{}]", exe.bucket().name),
             PartExec::Host(k) => format!("cpu[{}]", k.name()),
         };
-        if n == 1 {
-            place
-        } else {
-            // the factory orders hybrid parts body-first
-            let part = match (i, n) {
-                (0, 2) => "body".to_string(),
-                (1, 2) => "remainder".to_string(),
-                _ => format!("part{i}"),
-            };
-            format!("{part}→{place}")
-        }
+        place_label(i, n, place)
     }
 
     /// Scatter one part result into the full output vector.
@@ -419,6 +468,233 @@ impl ExecutionBinding for PjrtExecBinding {
             }
         }
         Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SELL wide-SIMD backend (simulated device)
+// ---------------------------------------------------------------------
+
+/// A simulated wide-SIMD SELL-C-σ device — the first third-party proof
+/// of the backend extension point: handed to
+/// [`MatrixRegistry::with_backends`] it joins registration, routing and
+/// serving with **zero registry or server changes**.
+///
+/// What it does at bind time, per composite part whose plan picked
+/// [`PlannedKernel::SellCs`]:
+///
+/// 1. downcast the built host kernel ([`SpMv::as_any`]), recover the
+///    SELL structure, and round-trip it through CSR
+///    ([`SellCs::to_csr`]);
+/// 2. rebuild at the **device chunk width** C = [`SELL_DEVICE_C`] with
+///    σ re-autotuned for that width — the Kreutzer et al. argument
+///    (one format, per-device C) made executable;
+/// 3. replay the rebuilt structure's access pattern through a
+///    `gpusim`-style memory model ([`MemSim`]: coalesced streams for
+///    the chunk storage, sector-grouped gathers for `x`) against the
+///    [`SELL_ROOFLINE`] spec, producing a deterministic modeled
+///    seconds-per-SpMV.
+///
+/// Non-SELL parts (a hybrid *body*) ride along on their shared host
+/// kernel `Arc`s, exactly like the PJRT backend's unexported parts.
+/// Results are bit-exact (the "device" executes the rebuilt kernel on
+/// the host pool); *time* is simulated: every binding reports the
+/// modeled cost through [`ExecutionBinding::self_timed_cost`], so the
+/// server's EWMA correction loop and tests see a deterministic device
+/// clock instead of host wall time.
+pub struct SellBackend {
+    pool: Arc<ThreadPool>,
+    c: usize,
+    spec: DeviceSpec,
+}
+
+impl SellBackend {
+    /// A simulated SELL device executing (and self-timing) on `pool`.
+    pub fn new(pool: Arc<ThreadPool>) -> Self {
+        SellBackend { pool, c: SELL_DEVICE_C, spec: SELL_ROOFLINE }
+    }
+}
+
+impl Backend for SellBackend {
+    fn id(&self) -> BackendId {
+        BackendId::Sell
+    }
+
+    fn describe(&self) -> String {
+        format!("sell-sim(c{}, {:.0} GB/s model)", self.c, self.spec.mem_bw_gbps)
+    }
+
+    fn supports_plan(&self, plan: &FormatPlan) -> bool {
+        plan.planned_kernels()
+            .iter()
+            .any(|k| matches!(k, PlannedKernel::SellCs { .. }))
+    }
+
+    fn bind(
+        &self,
+        built: &BuiltExecution<f32>,
+        plan: &FormatPlan,
+    ) -> Result<Box<dyn ExecutionBinding>> {
+        let src = built.exec.parts();
+        let plan_kernels = plan.planned_kernels();
+        if plan_kernels.len() != src.len() {
+            bail!(
+                "plan names {} parts but the build produced {}",
+                plan_kernels.len(),
+                src.len()
+            );
+        }
+        let n = src.len();
+        let mut parts = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut modeled = 0.0f64;
+        let mut device_parts = 0usize;
+        for (i, (part, planned)) in src.iter().zip(&plan_kernels).enumerate() {
+            let (kernel, place): (Arc<dyn SpMv<f32>>, String) =
+                if matches!(planned, PlannedKernel::SellCs { .. }) {
+                    let host = part
+                        .kernel()
+                        .as_any()
+                        .and_then(|any| any.downcast_ref::<SellCsKernel<f32>>())
+                        .with_context(|| {
+                            format!("SELL-planned part {i} did not build a sellcs kernel")
+                        })?;
+                    let csr = host.matrix().to_csr();
+                    let row_nnz: Vec<usize> =
+                        (0..csr.nrows()).map(|r| csr.row_nnz(r)).collect();
+                    // re-autotune σ for the device chunk width; an
+                    // unbounded fill still binds at the full-sort
+                    // fallback the cost row already priced
+                    let sigma = planner::sell_sigma_or_full(&row_nnz, self.c);
+                    let dev = SellCs::from_csr(&csr, self.c, sigma);
+                    modeled += modeled_sell_spmv_seconds(&dev, &self.spec);
+                    device_parts += 1;
+                    let kern = SellCsKernel::new(dev, self.pool.clone());
+                    let place = format!("sell[{}]", kern.name());
+                    (Arc::new(kern), place)
+                } else {
+                    // unplanned-for-SELL parts (the hybrid body) ride on
+                    // the shared host kernel, like PJRT's unexported parts
+                    let kern = part.kernel().clone();
+                    modeled += cpu_part_model_seconds(kern.as_ref());
+                    let place = format!("cpu[{}]", kern.name());
+                    (kern, place)
+                };
+            labels.push(place_label(i, n, place));
+            parts.push(CompositePart::new(
+                kernel,
+                part.in_perm().cloned(),
+                part.rows().map(|r| r.to_vec()),
+            ));
+        }
+        if device_parts == 0 {
+            bail!("plan has no SELL part for the sell device");
+        }
+        Ok(Box::new(SellBinding {
+            exec: CompositeExec::new(parts, built.exec.nrows(), built.exec.ncols()),
+            label: labels.join(" + "),
+            modeled_per_vec: modeled,
+        }))
+    }
+}
+
+/// Per-part placement label shared by the PJRT and SELL bindings: bare
+/// for single-part plans, `body→…` / `remainder→…` for hybrids (the
+/// factory orders hybrid parts body-first).
+fn place_label(i: usize, n: usize, place: String) -> String {
+    if n == 1 {
+        place
+    } else {
+        let part = match (i, n) {
+            (0, 2) => "body".to_string(),
+            (1, 2) => "remainder".to_string(),
+            _ => format!("part{i}"),
+        };
+        format!("{part}→{place}")
+    }
+}
+
+/// Modeled host seconds for a part that stays on its CPU kernel (the
+/// hybrid body's share of the simulated clock): the planner's CPU part
+/// roofline at the proxy bandwidth.
+fn cpu_part_model_seconds(k: &dyn SpMv<f32>) -> f64 {
+    let nnz = (k.flops() / 2.0) as usize;
+    planner::cpu_part_cost(k.nrows(), k.ncols(), nnz, 4, CPU_ROOFLINE.mem_bw_gbps)
+}
+
+/// `gpusim`-style memory accounting for one SELL-C-σ SpMV on the
+/// simulated device: the coalesced streams are the planner's
+/// [`sellcs_bytes`] accounting minus the `x` term (one formula owns the
+/// stream — `x` is gathered instead: replayed chunk by chunk, each slot
+/// one C-lane SIMD gather, sector-grouped through the per-SM L1 /
+/// shared L2 hierarchy, [`MemSim`]). The per-request vector marshaling
+/// pays the same [`planner::PCIE_GBPS`] transfer the plan-time Sell
+/// cost row charges, so the bind-time clock and the static prior model
+/// one device, not two. Runs once at bind; the resulting seconds are
+/// the binding's deterministic self-timed cost.
+fn modeled_sell_spmv_seconds(a: &SellCs<f32>, spec: &DeviceSpec) -> f64 {
+    const ELEM: usize = 4; // f32
+    let mut mem = MemSim::new(spec);
+    let streamed =
+        sellcs_bytes(a.nrows(), a.ncols(), a.padded_nnz(), a.nchunks(), ELEM) - a.ncols() * ELEM;
+    mem.stream(streamed as u64);
+    let mut addrs = Vec::with_capacity(a.c());
+    for k in 0..a.nchunks() {
+        let (base, lanes, width) = a.chunk_bounds(k);
+        for s in 0..width {
+            addrs.clear();
+            for lane in 0..lanes {
+                addrs.push(a.cols()[base + s * lanes + lane] as u64 * ELEM as u64);
+            }
+            mem.gather(k % spec.sm_count, &addrs);
+        }
+    }
+    let secs_bw = mem.stats.dram_bytes() as f64 / (spec.mem_bw_gbps * 1e9);
+    let secs_fp = 2.0 * a.nnz() as f64 / (spec.fp32_tflops * 1e12);
+    let transfer_s = ((a.ncols() + a.nrows()) * ELEM) as f64 / (planner::PCIE_GBPS * 1e9);
+    secs_bw.max(secs_fp) + transfer_s + spec.launch_overhead_s
+}
+
+/// A matrix bound on the simulated SELL device: a composite whose SELL
+/// parts were rebuilt at the device chunk width, with a deterministic
+/// modeled clock.
+struct SellBinding {
+    exec: CompositeExec<f32>,
+    label: String,
+    modeled_per_vec: f64,
+}
+
+impl ExecutionBinding for SellBinding {
+    fn backend(&self) -> BackendId {
+        BackendId::Sell
+    }
+
+    fn describe(&self) -> String {
+        self.label.clone()
+    }
+
+    fn spmv(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.exec.ncols() {
+            bail!("x length {} != ncols {}", x.len(), self.exec.ncols());
+        }
+        let mut y = vec![0f32; self.exec.nrows()];
+        self.exec.spmv(x, &mut y);
+        Ok(y)
+    }
+
+    fn spmv_multi(&self, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        for x in xs {
+            if x.len() != self.exec.ncols() {
+                bail!("x length {} != ncols {}", x.len(), self.exec.ncols());
+            }
+        }
+        Ok(self.exec.spmv_multi_vecs(xs))
+    }
+
+    /// The simulated device clock: the bind-time memory-model seconds,
+    /// constant per dispatch — deterministic input for the routing EWMA.
+    fn self_timed_cost(&self) -> Option<f64> {
+        Some(self.modeled_per_vec)
     }
 }
 
@@ -579,10 +855,61 @@ mod tests {
     }
 
     #[test]
-    fn cpu_static_cost_defaults_to_the_plan_estimate() {
+    fn cpu_static_cost_is_the_triad_calibrated_estimate() {
         let pool = Arc::new(ThreadPool::new(1));
-        let backend = CpuBackend::new(pool);
+        let backend = CpuBackend::new(pool.clone());
+        assert!(backend.mem_bw_gbps() > 0.0);
         let plan = planner::plan(&gen::grid2d_5pt::<f32>(10, 10));
-        assert_eq!(backend.static_cost(&plan), plan.cost(BackendId::Cpu));
+        let cost = backend.static_cost(&plan).unwrap();
+        assert!(cost.is_finite() && cost > 0.0);
+        assert_eq!(cost, planner::plan_cpu_cost(&plan, backend.mem_bw_gbps()));
+        // an explicit bandwidth pins the prior exactly; half the
+        // bandwidth must never price cheaper
+        let fixed = CpuBackend::with_bandwidth(pool.clone(), 50.0);
+        let slow = CpuBackend::with_bandwidth(pool, 25.0);
+        assert!(slow.static_cost(&plan).unwrap() >= fixed.static_cost(&plan).unwrap());
+        assert!(fixed.describe().contains("triad 50.0 GB/s"), "{}", fixed.describe());
+    }
+
+    #[test]
+    fn sell_backend_binds_sell_plans_only() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let sell = SellBackend::new(pool.clone());
+        assert_eq!(sell.id(), BackendId::Sell);
+        assert!(sell.describe().contains("sell-sim"), "{}", sell.describe());
+        // regular and CSR5 plans are out of scope
+        for a in [gen::grid2d_5pt::<f32>(12, 12), gen::power_law::<f32>(600, 8, 1.0, 0xBEEF)] {
+            assert!(!sell.supports_plan(&planner::plan(&a)));
+        }
+        // a SELL-planned matrix binds, matches the reference, and keeps
+        // a deterministic simulated clock
+        let a = gen::alternating_rows::<f32>(600, 4, 12);
+        let plan = planner::plan(&a);
+        assert!(sell.supports_plan(&plan), "{}", plan.summary());
+        let built = build_execution(&plan, a.clone(), pool, false);
+        let binding = sell.bind(&built, &plan).unwrap();
+        assert_eq!(binding.backend(), BackendId::Sell);
+        assert!(
+            binding.describe().contains(&format!("sell[sellcs(c{SELL_DEVICE_C}")),
+            "{}",
+            binding.describe()
+        );
+        let modeled = binding.self_timed_cost().expect("simulated clock");
+        assert!(modeled.is_finite() && modeled > 0.0);
+        assert_eq!(binding.self_timed_cost(), Some(modeled), "clock is constant");
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 5 + 2) % 11) as f32 - 5.0).collect();
+        let y = binding.spmv(&x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "{u} vs {v}");
+        }
+        let ys = binding.spmv_multi(&[&x, &x, &x]).unwrap();
+        for yj in &ys {
+            for (u, v) in yj.iter().zip(&y) {
+                assert!((u - v).abs() < 1e-4 * v.abs().max(1.0));
+            }
+        }
+        assert!(binding.spmv(&[1.0; 3]).is_err(), "length validation");
     }
 }

@@ -71,7 +71,8 @@
 //! batched-vs-looped throughput gap.
 //!
 //! * [`backend`] — the [`Backend`] / [`ExecutionBinding`] traits, the
-//!   CPU and PJRT implementations, and the [`RoutingTable`].
+//!   CPU (triad-calibrated prior), PJRT and simulated-SELL-device
+//!   implementations, and the [`RoutingTable`].
 //! * [`registry`] — per-matrix plan → build → bind, binding maps.
 //! * [`batcher`] — dynamic batching queue (max-batch / max-delay).
 //! * [`server`] — leader + per-backend workers, SpMM dispatch, routing
@@ -85,7 +86,9 @@ pub mod metrics;
 pub mod registry;
 pub mod server;
 
-pub use backend::{Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable};
+pub use backend::{
+    Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable, SellBackend,
+};
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::Metrics;
 pub use registry::{DeviceKind, MatrixEntry, MatrixRegistry};

@@ -38,10 +38,10 @@
 use std::sync::Arc;
 
 use super::composite::{CompositeExec, CompositePart};
-use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SpMv};
+use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SellCsKernel, SpMv};
 use crate::reorder::bandk;
 use crate::sparse::csrk::PaddedCsr;
-use crate::sparse::{split_by_row_nnz, Csr, Csr5, CsrK, Scalar, SplitCsr};
+use crate::sparse::{split_by_row_nnz, Csr, Csr5, CsrK, Scalar, SellCs, SplitCsr};
 use crate::tuning::planner::{FormatPlan, PlannedKernel};
 use crate::util::ThreadPool;
 
@@ -80,6 +80,9 @@ pub fn build_part_kernel<T: Scalar>(
         PlannedKernel::Csr5 { omega, sigma } => {
             let nnz = a.nnz();
             Arc::new(Csr5Kernel::new(Csr5::from_csr(&a, omega, sigma), nnz, pool))
+        }
+        PlannedKernel::SellCs { c, sigma } => {
+            Arc::new(SellCsKernel::new(SellCs::from_csr(&a, c, sigma), pool))
         }
         PlannedKernel::CsrParallel => Arc::new(CsrParallel::new(a, pool)),
     }
@@ -257,6 +260,7 @@ mod tests {
             PlannedKernel::Csr2 { srs: 17 },
             PlannedKernel::Csr3 { ssrs: 4, srs: 9 },
             PlannedKernel::Csr5 { omega: 4, sigma: 12 },
+            PlannedKernel::SellCs { c: 8, sigma: 32 },
             PlannedKernel::CsrParallel,
         ] {
             let k = build_part_kernel(&kernel, a.clone(), pool.clone());

@@ -8,6 +8,10 @@
 //! * [`csr5`] — CSR5 tile kernel with parallel segmented sum and
 //!   sequential carry calibration (blocked SpMM included: one tile
 //!   sweep per batch with `nvec`-wide carries).
+//! * [`sellcs`] — SELL-C-σ chunk kernel: slot-major SIMD-style sweeps
+//!   over C-row chunks, results scattered through the format's
+//!   σ-window-bounded permutation (blocked SpMM with `nvec`-wide
+//!   accumulators per chunk lane).
 //! * [`composite`] — [`CompositeExec`]: N part kernels (each with its
 //!   own input permutation and row scatter map) presented as one
 //!   [`SpMv`] in original coordinates — how hybrid body + remainder
@@ -42,9 +46,9 @@
 //! unit-stride multiply-add that LLVM vectorizes across the block.
 //! [`pack_block`]/[`unpack_block`] convert between this layout and
 //! per-request vectors. CSR-family kernels (`CsrSerial`, `CsrParallel`,
-//! `Csr2Kernel`, `Csr3Kernel`), `Csr5Kernel` and the composite
-//! implement the genuinely blocked loop; the baseline formats fall
-//! back to a correct per-vector loop.
+//! `Csr2Kernel`, `Csr3Kernel`), `Csr5Kernel`, `SellCsKernel` and the
+//! composite implement the genuinely blocked loop; the baseline formats
+//! fall back to a correct per-vector loop.
 
 pub mod bcsr;
 pub mod composite;
@@ -54,6 +58,7 @@ pub mod csr5;
 pub mod csrk;
 pub mod ell;
 pub mod factory;
+pub mod sellcs;
 
 pub use bcsr::BcsrKernel;
 pub use composite::{CompositeExec, CompositePart};
@@ -63,6 +68,7 @@ pub use csr5::Csr5Kernel;
 pub use csrk::{Csr2Kernel, Csr3Kernel};
 pub use ell::EllKernel;
 pub use factory::{build_execution, build_part_kernel, BuiltExecution};
+pub use sellcs::SellCsKernel;
 
 use crate::sparse::Scalar;
 
@@ -83,6 +89,17 @@ pub trait SpMv<T: Scalar>: Send + Sync {
 
     /// FLOPs per application (paper convention `2 · NNZ`).
     fn flops(&self) -> f64;
+
+    /// Concrete-type escape hatch for backends that re-bind a part on
+    /// specialized hardware: a kernel that wants to be re-bindable
+    /// returns `Some(self)` so the backend can downcast, recover the
+    /// underlying format, and rebuild it at the device's own geometry
+    /// (`coordinator::backend::SellBackend` rebuilds SELL-C-σ parts at
+    /// its chunk width this way). The default `None` keeps every other
+    /// kernel opaque.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 
     /// `Y = A · X` over a block of `nvec` right-hand sides (SpMM).
     ///

@@ -1,0 +1,241 @@
+//! SELL-C-σ SpMV kernel: chunk-parallel, slot-major sweeps with the
+//! chunk-local scatter fused in.
+//!
+//! Chunks are disjoint row groups, so the pool distributes them with
+//! static scheduling and every worker writes a disjoint set of `y`
+//! rows — the same no-synchronization contract the CSR-k kernels rely
+//! on. Within a chunk the inner loop runs *slot-major*: one pass per
+//! padded column position, accumulating all `lanes ≤ C` rows with
+//! unit-stride loads from the chunk storage (the access pattern the
+//! format exists for — on real wide-SIMD hardware this loop is one
+//! vector FMA per slot; here LLVM auto-vectorizes it). Padding slots
+//! carry `val = 0, col = 0`, so the sweep is branch-free: padding
+//! multiplies zero by `x[0]` and changes nothing.
+//!
+//! The blocked multi-RHS path ([`SpMv::spmv_multi`]) keeps `nvec`-wide
+//! accumulators per chunk lane: each slot's value is broadcast against
+//! the whole vector-interleaved RHS block (`x[col·nvec..]`), so the
+//! chunk storage streams from memory once per *batch* — the same
+//! amortization the CSR-family and CSR5 kernels implement.
+//!
+//! Results scatter through the format's σ-window-bounded permutation
+//! ([`SellCs::perm`]), so the kernel's outputs are in **source row
+//! order**: composed under `kernels::composite`, a SELL part needs no
+//! extra permutation bookkeeping beyond the row maps any part carries.
+
+use std::sync::Arc;
+
+use super::{SendPtr, SpMv};
+use crate::sparse::sellcs::SellCs;
+use crate::sparse::Scalar;
+use crate::util::{Schedule, ThreadPool};
+
+/// Parallel SELL-C-σ kernel.
+pub struct SellCsKernel<T> {
+    a: SellCs<T>,
+    pool: Arc<ThreadPool>,
+}
+
+impl<T: Scalar> SellCsKernel<T> {
+    /// Wrap a SELL-C-σ matrix.
+    pub fn new(a: SellCs<T>, pool: Arc<ThreadPool>) -> Self {
+        SellCsKernel { a, pool }
+    }
+
+    /// The wrapped matrix (backends re-bind it at their own chunk
+    /// width via the [`SellCs::to_csr`] round trip).
+    pub fn matrix(&self) -> &SellCs<T> {
+        &self.a
+    }
+}
+
+impl<T: Scalar> SpMv<T> for SellCsKernel<T> {
+    fn name(&self) -> String {
+        format!(
+            "sellcs(c{},s{},{}t)",
+            self.a.c(),
+            self.a.sigma(),
+            self.pool.threads()
+        )
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.ncols());
+        assert_eq!(y.len(), self.a.nrows());
+        let a = &self.a;
+        let nrows = a.nrows();
+        let yp = SendPtr(y.as_mut_ptr());
+        self.pool.parallel_for(a.nchunks(), Schedule::Static, |lo, hi| {
+            // SAFETY: chunks own disjoint row sets (perm is a bijection).
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), nrows) };
+            let mut acc = vec![T::zero(); a.c()];
+            let (cols, vals, perm) = (a.cols(), a.vals(), a.perm());
+            for k in lo..hi {
+                let (base, lanes, width) = a.chunk_bounds(k);
+                for q in acc.iter_mut().take(lanes) {
+                    *q = T::zero();
+                }
+                for s in 0..width {
+                    let slot = base + s * lanes;
+                    for lane in 0..lanes {
+                        acc[lane] += vals[slot + lane] * x[cols[slot + lane] as usize];
+                    }
+                }
+                for lane in 0..lanes {
+                    ys[perm[k * a.c() + lane] as usize] = acc[lane];
+                }
+            }
+        });
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        2.0 * self.a.nnz() as f64
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
+    /// Blocked SpMM: `nvec`-wide accumulators per chunk lane, one chunk
+    /// sweep per batch. The chunk storage (the dominant stream) is read
+    /// once for the whole RHS block instead of once per vector.
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        assert!(nvec > 0, "spmv_multi needs at least one vector");
+        assert_eq!(x.len(), self.a.ncols() * nvec);
+        assert_eq!(y.len(), self.a.nrows() * nvec);
+        if nvec == 1 {
+            return self.spmv(x, y);
+        }
+        let a = &self.a;
+        let ylen = y.len();
+        let yp = SendPtr(y.as_mut_ptr());
+        self.pool.parallel_for(a.nchunks(), Schedule::Static, |lo, hi| {
+            // SAFETY: chunks own disjoint row sets, hence disjoint
+            // `row·nvec` block slices.
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), ylen) };
+            let mut acc = vec![T::zero(); a.c() * nvec];
+            let (cols, vals, perm) = (a.cols(), a.vals(), a.perm());
+            for k in lo..hi {
+                let (base, lanes, width) = a.chunk_bounds(k);
+                for q in acc.iter_mut().take(lanes * nvec) {
+                    *q = T::zero();
+                }
+                for s in 0..width {
+                    let slot = base + s * lanes;
+                    for lane in 0..lanes {
+                        let v = vals[slot + lane];
+                        let col = cols[slot + lane] as usize;
+                        let xb = &x[col * nvec..col * nvec + nvec];
+                        let ab = &mut acc[lane * nvec..lane * nvec + nvec];
+                        for (q, &xv) in ab.iter_mut().zip(xb) {
+                            *q += v * xv;
+                        }
+                    }
+                }
+                for lane in 0..lanes {
+                    let row = perm[k * a.c() + lane] as usize;
+                    ys[row * nvec..(row + 1) * nvec]
+                        .copy_from_slice(&acc[lane * nvec..lane * nvec + nvec]);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{assert_kernel_matches, assert_spmm_matches};
+    use crate::sparse::{gen, suite, Coo, SuiteScale};
+
+    #[test]
+    fn matches_reference_parallel() {
+        let a = gen::grid3d_7pt::<f64>(8, 8, 8);
+        for t in [1, 2, 4] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let s = SellCs::from_csr(&a, 8, 32);
+            assert_kernel_matches(&a, &SellCsKernel::new(s, pool), 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_on_suite_extremes() {
+        let pool = Arc::new(ThreadPool::new(4));
+        for id in [1usize, 4, 16] {
+            let e = &suite::SUITE[id - 1];
+            let a = e.build::<f64>(SuiteScale::Tiny);
+            let s = SellCs::from_csr(&a, 8, 64);
+            assert_kernel_matches(&a, &SellCsKernel::new(s, pool.clone()), 1e-9);
+        }
+    }
+
+    #[test]
+    fn skewed_rows_and_empty_rows() {
+        // one long row, many empty rows, a narrow final chunk
+        let mut c = Coo::<f64>::new(11, 400);
+        for j in 0..300 {
+            c.push(3, j, 0.5 + (j % 7) as f64);
+        }
+        c.push(0, 1, 1.0);
+        c.push(10, 399, 2.0);
+        let a = c.to_csr();
+        let pool = Arc::new(ThreadPool::new(3));
+        for &(ch, sigma) in &[(4usize, 4usize), (4, 11), (8, 11)] {
+            let k = SellCsKernel::new(SellCs::from_csr(&a, ch, sigma), pool.clone());
+            assert_kernel_matches(&a, &k, 1e-12);
+        }
+    }
+
+    #[test]
+    fn blocked_spmm_matches_per_vector_spmv() {
+        let a = gen::power_law::<f64>(300, 8, 1.0, 0xBEEF);
+        for t in [1usize, 3] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let k = SellCsKernel::new(SellCs::from_csr(&a, 8, 32), pool);
+            // nvec = 1 takes the single-vector delegation path
+            for nvec in [1usize, 2, 3, 4, 8, 16] {
+                assert_spmm_matches(&k, nvec, 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn flops_count_source_nonzeros_not_padding() {
+        let a = gen::alternating_rows::<f64>(64, 4, 12);
+        let pool = Arc::new(ThreadPool::new(1));
+        let s = SellCs::from_csr(&a, 8, 8);
+        assert!(s.fill_ratio() > 1.0, "fixture must pad");
+        let k = SellCsKernel::new(s, pool);
+        assert_eq!(k.flops(), a.spmv_flops());
+    }
+
+    #[test]
+    fn zero_row_matrix() {
+        let a = Coo::<f64>::new(0, 0).to_csr();
+        let pool = Arc::new(ThreadPool::new(2));
+        let k = SellCsKernel::new(SellCs::from_csr(&a, 8, 16), pool);
+        k.spmv(&[], &mut []);
+        k.spmv_multi(&[], &mut [], 3);
+    }
+
+    #[test]
+    fn downcast_via_as_any() {
+        let a = gen::grid2d_5pt::<f64>(6, 6);
+        let pool = Arc::new(ThreadPool::new(1));
+        let k: Arc<dyn SpMv<f64>> =
+            Arc::new(SellCsKernel::new(SellCs::from_csr(&a, 4, 8), pool));
+        let concrete = k
+            .as_any()
+            .and_then(|any| any.downcast_ref::<SellCsKernel<f64>>())
+            .expect("sellcs kernels expose their concrete type");
+        assert_eq!(concrete.matrix().nnz(), a.nnz());
+    }
+}

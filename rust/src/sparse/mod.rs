@@ -12,6 +12,10 @@
 //! * [`bcsr`] — block CSR (§2.1 related work).
 //! * [`csr5`] — CSR5 (Liu & Vinter), the strongest heterogeneous
 //!   baseline the paper compares with on both CPU and GPU.
+//! * [`sellcs`] — SELL-C-σ (Kreutzer et al.), the SIMD-portable sliced
+//!   ELL format: σ-window row sorting, C-row chunks at per-chunk padded
+//!   width, chunk-local permutation — the planner's third irregular
+//!   option and its hybrid-remainder format.
 //! * [`mm`] — Matrix Market I/O.
 //! * [`gen`] — synthetic matrix generators per problem class, the
 //!   substitute for the SuiteSparse download (offline environment).
@@ -27,6 +31,7 @@ pub mod csrk;
 pub mod ell;
 pub mod gen;
 pub mod mm;
+pub mod sellcs;
 pub mod split;
 pub mod suite;
 
@@ -36,6 +41,7 @@ pub use csr::Csr;
 pub use csr5::Csr5;
 pub use csrk::CsrK;
 pub use ell::Ell;
+pub use sellcs::SellCs;
 pub use split::{split_by_row_nnz, RowPart, SplitCsr};
 pub use suite::{SuiteEntry, SuiteScale};
 

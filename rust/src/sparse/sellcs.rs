@@ -1,0 +1,400 @@
+//! SELL-C-σ (Kreutzer, Hager, Wellein, Fehske & Bishop, SIAM J. Sci.
+//! Comput. 2014) — the unified SIMD-portable sparse format the ROADMAP
+//! names as the third irregular option beside CSR5 and nnz-balanced
+//! parallel CSR.
+//!
+//! The format generalizes sliced ELLPACK: rows are sorted by length
+//! inside windows of σ consecutive rows (bounding how far any row moves
+//! from its source position), then grouped into *chunks* of `C` rows
+//! each. Every chunk is stored column-major ("slot-major") at its own
+//! padded width — the length of its longest row — so one SIMD unit of
+//! width `C` sweeps a chunk with unit-stride loads and no per-lane
+//! branching:
+//!
+//! ```text
+//!  sorted rows   chunk 0 (C = 4, width 3)        chunk 1 (width 2)
+//!  ───────────   col-major storage               storage
+//!  r₅ ▪ ▪ ▪      slot 0: r₅ r₂ r₇ r₀             r₁ r₄ …
+//!  r₂ ▪ ▪ ∅      slot 1: r₅ r₂ r₇ r₀   (∅ = padding: col 0, val 0)
+//!  r₇ ▪ ▪ ∅      slot 2: r₅ ∅  ∅  ∅
+//!  r₀ ▪ ∅ ∅
+//! ```
+//!
+//! Two tuning dials trade storage for structure:
+//!
+//! * **C** (chunk height) matches the target's SIMD width — 8 fp32
+//!   lanes for AVX2-class CPUs, 32 for GPU-/wide-SIMD-class devices.
+//!   One structure serves both by rebuilding at a different C, which is
+//!   exactly how the coordinator's `SellBackend` re-binds a CPU-built
+//!   part at its own width.
+//! * **σ** (sort window) bounds the fill-in β = padded / nnz: larger
+//!   windows group similar-length rows into the same chunk, at the
+//!   price of a permutation that may move rows up to σ positions. The
+//!   planner autotunes σ from the row-length histogram
+//!   (`tuning::planner::sell_autotune`: smallest σ ∈ {C, 4C, 16C, n}
+//!   with β ≤ 1.15).
+//!
+//! The **β fill model**: every chunk stores `width · lanes` slots where
+//! `width = max(row nnz in chunk)`; β is the total slot count over the
+//! true nonzero count (β ≥ 1, β = 1 iff every chunk is perfectly
+//! uniform). The final chunk is stored *narrow* — `lanes = n mod C`
+//! when the row count is not a multiple of C — so small operands (e.g.
+//! a 20-row hybrid remainder) never pay for phantom lanes. β is what
+//! the planner's cost model charges (`analysis::roofline::sellcs_bytes`
+//! prices the padded stream) and what gates the format choice.
+//!
+//! The chunk-local **permutation** (`perm`: sorted position → source
+//! row) stays inside the structure: kernels scatter each lane's result
+//! straight to its source row, so a [`SellCs`] operand computes in the
+//! caller's coordinates — as a hybrid remainder the composite's row
+//! maps compose on top unchanged (`kernels::composite`).
+//!
+//! [`SellCs::from_csr`] / [`SellCs::to_csr`] round-trip losslessly:
+//! the per-lane true lengths (`lane_nnz`) distinguish stored zeros from
+//! padding, so reconstruction is exact.
+
+use super::{Csr, Scalar};
+
+/// SELL-C-σ-format matrix.
+#[derive(Debug, Clone)]
+pub struct SellCs<T> {
+    nrows: usize,
+    ncols: usize,
+    /// Chunk height (SIMD lanes).
+    c: usize,
+    /// Effective sort-window size (clamped to the row count).
+    sigma: usize,
+    /// Chunk k's slots live at `chunk_ptr[k]..chunk_ptr[k+1]`.
+    chunk_ptr: Vec<u32>,
+    /// Slot-major per chunk: entry (slot `s`, lane `l`) of chunk `k` at
+    /// `chunk_ptr[k] + s·lanes(k) + l`. Padding slots hold col 0, val 0.
+    cols: Vec<u32>,
+    vals: Vec<T>,
+    /// Sorted position → source row (the σ-window-bounded permutation).
+    perm: Vec<u32>,
+    /// True nonzero count per sorted position (excludes padding).
+    lane_nnz: Vec<u32>,
+    /// Source nonzeros (FLOP accounting; `vals.len()` is the padded count).
+    nnz: usize,
+}
+
+impl<T: Scalar> SellCs<T> {
+    /// Convert from CSR with chunk height `c` and sort window `sigma`
+    /// (clamped to the row count). Rows are sorted by descending length
+    /// within each σ-window — stably, so equal-length rows keep their
+    /// source order and conversion is deterministic.
+    pub fn from_csr(a: &Csr<T>, c: usize, sigma: usize) -> Self {
+        assert!(c >= 1, "chunk height C must be positive");
+        assert!(sigma >= 1, "sort window sigma must be positive");
+        let n = a.nrows();
+        let sigma = sigma.clamp(1, n.max(1));
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        for window in perm.chunks_mut(sigma) {
+            // stable: ties stay in ascending source order
+            window.sort_by_key(|&r| std::cmp::Reverse(a.row_nnz(r as usize)));
+        }
+        let lane_nnz: Vec<u32> = perm.iter().map(|&r| a.row_nnz(r as usize) as u32).collect();
+
+        let nchunks = n.div_ceil(c);
+        let mut chunk_ptr = Vec::with_capacity(nchunks + 1);
+        chunk_ptr.push(0u32);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for k in 0..nchunks {
+            let lo = k * c;
+            // the final chunk is narrow, not phantom-padded
+            let lanes = c.min(n - lo);
+            let width = (lo..lo + lanes).map(|p| lane_nnz[p] as usize).max().unwrap_or(0);
+            let base = cols.len();
+            cols.resize(base + width * lanes, 0u32);
+            vals.resize(base + width * lanes, T::zero());
+            for lane in 0..lanes {
+                let row = perm[lo + lane] as usize;
+                let (rc, rv) = a.row(row);
+                for (s, (&ci, &v)) in rc.iter().zip(rv).enumerate() {
+                    cols[base + s * lanes + lane] = ci;
+                    vals[base + s * lanes + lane] = v;
+                }
+            }
+            chunk_ptr.push(cols.len() as u32);
+        }
+
+        SellCs {
+            nrows: n,
+            ncols: a.ncols(),
+            c,
+            sigma,
+            chunk_ptr,
+            cols,
+            vals,
+            perm,
+            lane_nnz,
+            nnz: a.nnz(),
+        }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Chunk height C.
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// Effective sort-window size σ (after clamping to the row count).
+    pub fn sigma(&self) -> usize {
+        self.sigma
+    }
+
+    /// Number of row chunks (`⌈nrows / C⌉`).
+    pub fn nchunks(&self) -> usize {
+        self.chunk_ptr.len() - 1
+    }
+
+    /// Source nonzeros (padding excluded).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Stored slots including padding (the β numerator).
+    pub fn padded_nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fill-in β = padded / nnz (1.0 for an empty matrix).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.nnz == 0 {
+            1.0
+        } else {
+            self.padded_nnz() as f64 / self.nnz as f64
+        }
+    }
+
+    /// The σ-window-bounded permutation: sorted position → source row.
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+
+    /// True nonzero count per sorted position.
+    pub fn lane_nnz(&self) -> &[u32] {
+        &self.lane_nnz
+    }
+
+    /// Slot-major column indices (padding slots hold 0).
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    /// Slot-major values (padding slots hold 0).
+    pub fn vals(&self) -> &[T] {
+        &self.vals
+    }
+
+    /// Chunk `k`'s `(base offset, lanes, padded width)`: its slots span
+    /// `base..base + width·lanes`, slot-major.
+    #[inline]
+    pub fn chunk_bounds(&self, k: usize) -> (usize, usize, usize) {
+        let base = self.chunk_ptr[k] as usize;
+        let lanes = self.c.min(self.nrows - k * self.c);
+        let len = self.chunk_ptr[k + 1] as usize - base;
+        let width = if lanes == 0 { 0 } else { len / lanes };
+        (base, lanes, width)
+    }
+
+    /// Reconstruct the source CSR exactly: per-row column order and
+    /// values are preserved (`lane_nnz` separates stored zeros from
+    /// padding, so the round trip is lossless).
+    pub fn to_csr(&self) -> Csr<T> {
+        let n = self.nrows;
+        let mut row_ptr = vec![0u32; n + 1];
+        for p in 0..n {
+            row_ptr[self.perm[p] as usize + 1] = self.lane_nnz[p];
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = vec![0u32; self.nnz];
+        let mut vals = vec![T::zero(); self.nnz];
+        for k in 0..self.nchunks() {
+            let (base, lanes, _) = self.chunk_bounds(k);
+            for lane in 0..lanes {
+                let p = k * self.c + lane;
+                let row = self.perm[p] as usize;
+                let dst = row_ptr[row] as usize;
+                for s in 0..self.lane_nnz[p] as usize {
+                    col_idx[dst + s] = self.cols[base + s * lanes + lane];
+                    vals[dst + s] = self.vals[base + s * lanes + lane];
+                }
+            }
+        }
+        Csr::from_parts(n, self.ncols, row_ptr, col_idx, vals)
+    }
+
+    /// Serial reference SpMV (oracle for the parallel kernel): sweep
+    /// each chunk slot-major, then scatter each lane's accumulator to
+    /// its source row. Every row lives in exactly one chunk lane, so
+    /// every `y` element is written exactly once (empty rows get 0).
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let mut acc = vec![T::zero(); self.c];
+        for k in 0..self.nchunks() {
+            let (base, lanes, width) = self.chunk_bounds(k);
+            for a in acc.iter_mut().take(lanes) {
+                *a = T::zero();
+            }
+            for s in 0..width {
+                let slot = base + s * lanes;
+                for lane in 0..lanes {
+                    // padding slots multiply 0 by x[0]: harmless
+                    acc[lane] += self.vals[slot + lane] * x[self.cols[slot + lane] as usize];
+                }
+            }
+            for lane in 0..lanes {
+                y[self.perm[k * self.c + lane] as usize] = acc[lane];
+            }
+        }
+    }
+
+    /// Storage bytes: padded slots (cols + vals) + chunk pointers +
+    /// permutation + per-lane lengths.
+    pub fn storage_bytes(&self) -> usize {
+        self.cols.len() * 4
+            + self.vals.len() * std::mem::size_of::<T>()
+            + self.chunk_ptr.len() * 4
+            + self.perm.len() * 4
+            + self.lane_nnz.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+    use crate::util::Rng;
+
+    fn random_csr(n: usize, avg: usize, seed: u64) -> Csr<f64> {
+        let mut rng = Rng::new(seed);
+        let mut a = Coo::new(n, n);
+        for i in 0..n {
+            let d = rng.usize_in(0, avg * 2 + 1);
+            for _ in 0..d {
+                a.push(i, rng.usize_in(0, n), rng.f64() - 0.5);
+            }
+        }
+        a.to_csr()
+    }
+
+    fn check_matches_csr(a: &Csr<f64>, c: usize, sigma: usize) {
+        let s = SellCs::from_csr(a, c, sigma);
+        let x: Vec<f64> = (0..a.ncols()).map(|i| ((i * 37) % 19) as f64 - 9.0).collect();
+        let mut y_ref = vec![0.0; a.nrows()];
+        let mut y = vec![f64::NAN; a.nrows()]; // poison: every row must be written
+        a.spmv_ref(&x, &mut y_ref);
+        s.spmv_ref(&x, &mut y);
+        for (i, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+            assert!((u - v).abs() < 1e-9, "row {i}: {u} vs {v} (C={c} σ={sigma})");
+        }
+    }
+
+    #[test]
+    fn matches_csr_many_shapes() {
+        for seed in 0..4 {
+            let a = random_csr(60, 4, seed);
+            for &(c, sigma) in &[(1usize, 1usize), (4, 4), (4, 16), (8, 32), (8, 60), (3, 7)] {
+                check_matches_csr(&a, c, sigma);
+            }
+        }
+        check_matches_csr(&gen::grid2d_5pt::<f64>(12, 9), 8, 16);
+    }
+
+    #[test]
+    fn round_trip_reconstructs_the_source_exactly() {
+        for (a, c, sigma) in [
+            (gen::grid2d_5pt::<f64>(10, 10), 8usize, 16usize),
+            (gen::power_law::<f64>(120, 6, 1.0, 0x5EED), 4, 32),
+            (random_csr(57, 3, 9), 8, 8),
+        ] {
+            let s = SellCs::from_csr(&a, c, sigma);
+            let back = s.to_csr();
+            assert_eq!(a.row_ptr(), back.row_ptr());
+            assert_eq!(a.col_idx(), back.col_idx());
+            assert_eq!(a.vals(), back.vals());
+        }
+    }
+
+    #[test]
+    fn permutation_is_sigma_window_bounded() {
+        let a = gen::power_law::<f64>(200, 6, 1.0, 0xB0B);
+        for sigma in [4usize, 16, 64, 200] {
+            let s = SellCs::from_csr(&a, 4, sigma);
+            let mut seen = vec![false; 200];
+            for (p, &r) in s.perm().iter().enumerate() {
+                assert_eq!(p / sigma, r as usize / sigma, "row {r} left its window");
+                assert!(!std::mem::replace(&mut seen[r as usize], true));
+            }
+            assert!(seen.iter().all(|&b| b), "perm must cover every row");
+        }
+    }
+
+    #[test]
+    fn fill_accounting_and_window_tradeoff() {
+        // alternating 4/12 rows: σ = C chunks mix both lengths (β = 1.5);
+        // σ = 4C windows separate them into uniform chunks (β = 1)
+        let a = gen::alternating_rows::<f64>(64, 4, 12);
+        let tight = SellCs::from_csr(&a, 8, 8);
+        let wide = SellCs::from_csr(&a, 8, 32);
+        assert!((tight.fill_ratio() - 1.5).abs() < 1e-12, "{}", tight.fill_ratio());
+        assert!((wide.fill_ratio() - 1.0).abs() < 1e-12, "{}", wide.fill_ratio());
+        assert_eq!(tight.nnz(), a.nnz());
+        assert_eq!(tight.padded_nnz(), tight.vals().len());
+        assert!(wide.storage_bytes() < tight.storage_bytes());
+    }
+
+    #[test]
+    fn last_chunk_is_narrow_not_phantom_padded() {
+        // 10 rows at C = 4 ⇒ chunks of 4, 4 and 2 lanes: the tail chunk
+        // must not charge two phantom lanes
+        let a = gen::alternating_rows::<f64>(10, 3, 3);
+        let s = SellCs::from_csr(&a, 4, 4);
+        assert_eq!(s.nchunks(), 3);
+        assert_eq!(s.chunk_bounds(0).1, 4);
+        assert_eq!(s.chunk_bounds(2).1, 2);
+        assert_eq!(s.padded_nnz(), a.nnz(), "uniform rows ⇒ zero fill");
+        assert!((s.fill_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        let mut c = Coo::<f64>::new(7, 7);
+        c.push(2, 3, 1.5);
+        c.push(5, 0, -2.0);
+        let a = c.to_csr();
+        check_matches_csr(&a, 4, 8);
+        let s = SellCs::from_csr(&a, 4, 8);
+        assert_eq!(s.to_csr().row_ptr(), a.row_ptr());
+
+        let e = Coo::<f64>::new(0, 0).to_csr();
+        let s = SellCs::from_csr(&e, 8, 16);
+        assert_eq!(s.nchunks(), 0);
+        assert_eq!(s.fill_ratio(), 1.0);
+        let mut y: Vec<f64> = vec![];
+        s.spmv_ref(&[], &mut y);
+    }
+
+    #[test]
+    fn equal_length_ties_keep_source_order() {
+        // all rows the same length ⇒ perm must be the identity
+        let a = gen::alternating_rows::<f64>(24, 5, 5);
+        let s = SellCs::from_csr(&a, 8, 24);
+        let id: Vec<u32> = (0..24).collect();
+        assert_eq!(s.perm(), &id[..]);
+    }
+}

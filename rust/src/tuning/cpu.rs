@@ -8,9 +8,9 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{Csr2Kernel, SpMv};
+use crate::kernels::{Csr2Kernel, SendPtr, SpMv};
 use crate::sparse::{Csr, CsrK, Scalar};
-use crate::util::{stats, Bencher, ThreadPool};
+use crate::util::{stats, Bencher, Schedule, ThreadPool};
 
 /// The §4.2 sweep set: `{2^i, 1.5·2^i}` for `i = 3..=11` →
 /// {8, 12, 16, 24, ..., 2048, 3072}.
@@ -26,6 +26,53 @@ pub fn cpu_sweep_values() -> Vec<usize> {
 
 /// The paper's constant-time CPU choice.
 pub const FIXED_SRS: usize = 96;
+
+/// One-time STREAM-triad bandwidth calibration: measure what this host
+/// actually streams, in GB/s, with the classic `a[i] = b[i] + s·c[i]`
+/// kernel over the crate thread pool (three 8 MiB f32 arrays — far past
+/// any LLC, so the timing is a memory measurement, not a cache one).
+/// STREAM's counting convention: 3 arrays × 4 bytes per element per
+/// pass (write-allocate traffic not charged). One warmup pass, then the
+/// best of three timed passes — bandwidth is a ceiling, so the fastest
+/// pass is the estimate least polluted by scheduling noise.
+///
+/// This is the remaining half of the ROADMAP cost-model item: the
+/// planner's [`CPU_ROOFLINE`](crate::tuning::planner::CPU_ROOFLINE)
+/// bandwidth constant stays only as the plan-time default, while
+/// `coordinator::backend::CpuBackend` measures once at construction
+/// (process-wide cache) and surfaces the measured value through
+/// `Backend::static_cost` — so routing priors reflect this machine, not
+/// a server-class guess. The result is clamped to a sane range so a
+/// degenerate measurement can never zero a cost estimate.
+pub fn stream_triad_gbps(pool: &Arc<ThreadPool>) -> f64 {
+    const LEN: usize = 2 << 20; // 2M f32 per array
+    let b = vec![1.0f32; LEN];
+    let c = vec![2.0f32; LEN];
+    let mut a = vec![0.0f32; LEN];
+    let scale = 3.0f32;
+    let ap = SendPtr(a.as_mut_ptr());
+    let (bs, cs) = (b.as_slice(), c.as_slice());
+    let mut best_s = f64::INFINITY;
+    for rep in 0..4 {
+        let t0 = std::time::Instant::now();
+        pool.parallel_for(LEN, Schedule::Static, |lo, hi| {
+            // SAFETY: static scheduling hands out disjoint index ranges.
+            let out = unsafe { std::slice::from_raw_parts_mut(ap.add(lo), hi - lo) };
+            for (i, o) in out.iter_mut().enumerate() {
+                let k = lo + i;
+                *o = bs[k] + scale * cs[k];
+            }
+        });
+        if rep > 0 {
+            // rep 0 is the warmup (faulting the pages in)
+            best_s = best_s.min(t0.elapsed().as_secs_f64());
+        }
+    }
+    // keep the triad writes observable so the loop cannot be elided
+    std::hint::black_box(a[0] + a[LEN - 1]);
+    let bytes = 3.0 * LEN as f64 * 4.0;
+    (bytes / best_s / 1e9).clamp(1.0, 2000.0)
+}
 
 /// Result of a CPU SRS sweep for one matrix.
 #[derive(Debug, Clone)]
@@ -95,6 +142,16 @@ mod tests {
     fn paper_geomean_example() {
         // "geometric mean ... is 81. We round this up to 96"
         assert_eq!(constant_time_srs(&[81]), 96);
+    }
+
+    #[test]
+    fn triad_measures_a_sane_bandwidth() {
+        for t in [1usize, 2] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let bw = stream_triad_gbps(&pool);
+            assert!(bw.is_finite());
+            assert!((1.0..=2000.0).contains(&bw), "triad {bw} GB/s out of range");
+        }
     }
 
     #[test]

@@ -18,15 +18,19 @@
 //! * [`model`] — the logarithmic-regression fit that turns sweep results
 //!   into formula constants (`SSRS = a + b·ln r`), reproducing how the
 //!   paper derived its Volta/Ampere numbers.
-//! * [`cpu`] — CPU-side tuning: per-matrix sweep and the constant-time
-//!   `SRS = 96` fallback (§4.2 / Fig 11).
+//! * [`cpu`] — CPU-side tuning: per-matrix sweep, the constant-time
+//!   `SRS = 96` fallback (§4.2 / Fig 11), and the one-time STREAM-triad
+//!   bandwidth calibration ([`cpu::stream_triad_gbps`]) that replaces
+//!   the planner's hard-coded CPU bandwidth on the serving path.
 //! * [`planner`] — the *plan* stage of the coordinator's
 //!   plan → build → bind pipeline: structure stats (row-nnz variance,
 //!   the §6 regularity criterion), the regular / hub-pattern /
 //!   irregular format decision (Band-k + CSR-k, a hybrid body +
-//!   remainder split, or CSR5 / parallel CSR), the padded PJRT export
-//!   width, and roofline-style per-device cost estimates the server
-//!   routes with (per-part sums for hybrid plans).
+//!   remainder split, or the three-way irregular rail: parallel CSR /
+//!   SELL-C-σ with σ autotuned from the row-length histogram / CSR5),
+//!   the padded PJRT export width, and roofline-style per-device cost
+//!   estimates the server routes with (per-part sums for hybrid
+//!   plans).
 
 pub mod autotune;
 pub mod cpu;

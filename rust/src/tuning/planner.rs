@@ -29,8 +29,38 @@
 //!    route wholesale to CSR5, forfeiting the fast path on 99 % of the
 //!    rows.
 //! 3. **Wholesale irregular** (heavy-tailed; no small hub set explains
-//!    the variance) → [`FormatPlan::Single`] with no reorder and CSR5
-//!    or nnz-balanced parallel CSR, as before.
+//!    the variance) → [`FormatPlan::Single`] with no reorder and a
+//!    **three-way** skew-tolerant kernel choice (shared with the hybrid
+//!    remainder — see below).
+//!
+//! # The irregular rail: parallel CSR vs SELL-C-σ vs CSR5
+//!
+//! Both the wholesale-irregular plan and the hybrid *remainder* pick
+//! from the same three skew-tolerant kernels, decided entirely from the
+//! row-length histogram:
+//!
+//! 1. **nnz < [`CSR5_MIN_NNZ`] → nnz-balanced parallel CSR.** Below a
+//!    couple thousand nonzeros any descriptor machinery (CSR5 tiles,
+//!    SELL chunks) costs more than the skew it fixes.
+//! 2. **Bounded fill → SELL-C-σ** ([`PlannedKernel::SellCs`]). σ is
+//!    autotuned from the histogram ([`sell_autotune`]): the smallest
+//!    window σ ∈ {C, 4C, 16C, n} whose *exact* fill-in β (padding
+//!    charged by the dimension-wise
+//!    [`sellcs_bytes`](crate::analysis::roofline::sellcs_bytes)
+//!    accounting) stays at or under [`SELL_MAX_FILL`] = 1.15. The CPU
+//!    kernel builds at C = [`SELL_CPU_C`] (AVX2 f32 lanes); the
+//!    simulated wide-SIMD device (`coordinator::backend::SellBackend`)
+//!    re-binds the same structure at C = [`SELL_DEVICE_C`] — one
+//!    format, per-device chunk widths, which is the Kreutzer et al.
+//!    portability argument made executable. SELL plans price a
+//!    [`DeviceKind::Sell`] cost row from [`SELL_ROOFLINE`] so routing
+//!    can send them to the device when one is registered.
+//! 3. **Unbounded fill → CSR5.** When even a full sort (σ = n) cannot
+//!    keep β ≤ 1.15 — the genuinely heavy-tailed power-law class, where
+//!    a few hub rows dwarf every chunkmate — padded layouts stream
+//!    mostly padding, and Liu & Vinter's segmented sum (which never
+//!    pads) is the right call. CSR5 keeps the fixed mid-sweep shape
+//!    ω = 8, σ = 16.
 //!
 //! Every plan carries a roofline-style cost estimate per backend id
 //! ([`DeviceKind`], reusing the Fig 1 machinery in
@@ -44,7 +74,7 @@
 //! corrected online by observed latencies, so they only need to rank
 //! the backends right, not predict wall-clock time.
 
-use crate::analysis::roofline::spmv_bytes;
+use crate::analysis::roofline::{sellcs_bytes, spmv_bytes};
 use crate::gpusim::device::{DeviceSpec, AMPERE_A100};
 use crate::sparse::{Csr, Scalar};
 use crate::tuning::cpu::FIXED_SRS;
@@ -64,17 +94,55 @@ pub enum DeviceKind {
     Cpu,
     /// AOT/XLA executables through PJRT (the accelerator path).
     Pjrt,
+    /// The simulated wide-SIMD SELL-C-σ device
+    /// (`coordinator::backend::SellBackend`): SELL-planned parts
+    /// re-bound at the device chunk width, self-timed by a
+    /// `gpusim`-style memory model.
+    Sell,
 }
 
 /// The §6 regularity criterion: CSR-k's performance claim holds for
 /// matrices whose row-nnz variance is at most this.
 pub const REGULARITY_VARIANCE_MAX: f64 = 10.0;
 
-/// Below this many nonzeros the CSR5 tile machinery (descriptors,
-/// per-tile carries, sequential calibration) costs more than the skew
-/// it fixes; irregular matrices (and hybrid remainders) this small plan
-/// nnz-balanced parallel CSR instead.
+/// Below this many nonzeros any descriptor machinery (CSR5 tiles and
+/// per-tile carries, SELL chunks and their padding) costs more than the
+/// skew it fixes; irregular matrices (and hybrid remainders) this small
+/// plan nnz-balanced parallel CSR instead.
 pub const CSR5_MIN_NNZ: usize = 2048;
+
+/// The σ-autotune acceptance bound: SELL-C-σ is planned only when some
+/// window σ ∈ {C, 4C, 16C, n} keeps the exact fill-in β = padded/nnz at
+/// or under this. Above it the padded stream (β·nnz slots of val+col)
+/// erases the SIMD win and CSR5's pad-free segmented sum takes over.
+pub const SELL_MAX_FILL: f64 = 1.15;
+
+/// SELL chunk height for the host kernel: 8 fp32 AVX2 lanes.
+pub const SELL_CPU_C: usize = 8;
+
+/// SELL chunk height the simulated wide-SIMD device binds at
+/// (`coordinator::backend::SellBackend` rebuilds SELL parts here).
+pub const SELL_DEVICE_C: usize = 32;
+
+/// Roofline stand-in for the simulated wide-SIMD SELL device: a
+/// GPU-class memory system (≈ 200 GB/s) behind C = 32 SIMD chunks,
+/// with a smaller launch cost than a full PJRT dispatch. Like
+/// [`CPU_ROOFLINE`] only `mem_bw_gbps`, `fp32_tflops` and
+/// `launch_overhead_s` enter the cost model; the cache fields feed the
+/// `gpusim`-style self-timing model the bound device runs.
+pub const SELL_ROOFLINE: DeviceSpec = DeviceSpec {
+    name: "wide-SIMD SELL device (simulated)",
+    sm_count: 16,
+    warp_size: 32,
+    max_threads_per_block: 1024,
+    l1_bytes: 64 * 1024,
+    l2_bytes: 8 * 1024 * 1024,
+    mem_bw_gbps: 200.0,
+    clock_ghz: 1.8,
+    ipc: 2.0,
+    fp32_tflops: 4.0,
+    launch_overhead_s: 1.5e-6,
+};
 
 /// Hub-detection cap: a hybrid plan may classify at most this fraction
 /// of the rows as hubs. If peeling that many of the longest rows still
@@ -126,9 +194,12 @@ pub const CPU_ROOFLINE: DeviceSpec = DeviceSpec {
     launch_overhead_s: 5e-6,
 };
 
-/// Host↔device transfer bandwidth charged on the PJRT path (PCIe 4 x16
-/// class) for the per-request vector marshaling.
-const PCIE_GBPS: f64 = 16.0;
+/// Host↔device transfer bandwidth charged on the accelerator paths
+/// (PCIe 4 x16 class) for the per-request vector marshaling — shared by
+/// the PJRT and SELL-device pricing AND by the SELL device's bind-time
+/// self-timing model (`coordinator::backend`), so the plan-time and
+/// bind-time models of the same device cannot disagree about transfer.
+pub const PCIE_GBPS: f64 = 16.0;
 
 /// Host-side cost per overflow nonzero (rows longer than the padded
 /// width are fixed up as a COO remainder after the padded kernel).
@@ -196,11 +267,20 @@ pub enum PlannedKernel {
         /// Rows per super-row.
         srs: usize,
     },
-    /// CSR5 tiles with parallel segmented sum (irregular structure).
+    /// CSR5 tiles with parallel segmented sum (irregular structure
+    /// whose fill-in no SELL window can bound).
     Csr5 {
         /// SIMD lanes per tile (ω).
         omega: usize,
         /// Slots per lane (σ ≤ 32).
+        sigma: usize,
+    },
+    /// SELL-C-σ chunks (irregular structure with β ≤
+    /// [`SELL_MAX_FILL`] at the autotuned window).
+    SellCs {
+        /// Chunk height (SIMD lanes).
+        c: usize,
+        /// Sort-window size from [`sell_autotune`].
         sigma: usize,
     },
     /// Row-parallel CSR with nnz-balanced chunks (small irregular
@@ -215,6 +295,7 @@ impl PlannedKernel {
             PlannedKernel::Csr2 { .. } => "csr2",
             PlannedKernel::Csr3 { .. } => "csr3",
             PlannedKernel::Csr5 { .. } => "csr5",
+            PlannedKernel::SellCs { .. } => "sellcs",
             PlannedKernel::CsrParallel => "csr-parallel",
         }
     }
@@ -365,6 +446,17 @@ impl FormatPlan {
         matches!(self, FormatPlan::Hybrid { .. })
     }
 
+    /// Per-part kernel choices, in composite part order: one entry for
+    /// `Single`, `[body, remainder]` for `Hybrid`. Aligned with
+    /// `CompositeExec::parts()` after the build stage — capability
+    /// queries (e.g. `SellBackend::supports_plan`) match on these.
+    pub fn planned_kernels(&self) -> Vec<&PlannedKernel> {
+        match self {
+            FormatPlan::Single { kernel, .. } => vec![kernel],
+            FormatPlan::Hybrid { body, remainder, .. } => vec![&body.kernel, &remainder.kernel],
+        }
+    }
+
     /// Short kernel label: the single kernel's, or
     /// `hybrid(body+remainder)`.
     pub fn kernel_label(&self) -> String {
@@ -475,11 +567,13 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             }),
             kernel: PlannedKernel::Csr2 { srs: FIXED_SRS },
         };
+        let rem_row_nnz: Vec<usize> =
+            (0..a.nrows()).map(|i| a.row_nnz(i)).filter(|&d| d > h.threshold).collect();
         let remainder = PartPlan {
             rows: h.hub_rows,
             nnz: h.hub_nnz,
             reorder: None,
-            kernel: irregular_kernel(h.hub_nnz),
+            kernel: irregular_kernel(&rem_row_nnz),
         };
         // body rows are all ≤ threshold; the clamp can still cut the
         // width below the threshold, leaving overflow nonzeros that the
@@ -491,10 +585,19 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             .map(|d| d.saturating_sub(width))
             .sum();
         let rem_cpu = part_cpu_cost::<T>(h.hub_rows, stats.ncols, h.hub_nnz);
-        let cpu = part_cpu_cost::<T>(h.body_rows, stats.ncols, h.body_nnz) + rem_cpu;
+        let body_cpu = part_cpu_cost::<T>(h.body_rows, stats.ncols, h.body_nnz);
+        let cpu = body_cpu + rem_cpu;
         let pjrt =
             part_pjrt_cost::<T>(h.body_rows, stats.ncols, h.body_nnz, width, body_overflow)
                 + rem_cpu;
+        let mut costs = vec![(DeviceKind::Cpu, cpu), (DeviceKind::Pjrt, pjrt)];
+        if matches!(remainder.kernel, PlannedKernel::SellCs { .. }) {
+            // the SELL device placement: body stays on its host kernel,
+            // the remainder rebinds at the device chunk width
+            let sell = body_cpu
+                + sell_device_cost::<T>(&rem_row_nnz, h.hub_rows, stats.ncols);
+            costs.push((DeviceKind::Sell, sell));
+        }
         return FormatPlan::Hybrid {
             stats,
             threshold: h.threshold,
@@ -502,7 +605,7 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             remainder,
             gpu_params,
             pjrt_width: Some(width),
-            costs: vec![(DeviceKind::Cpu, cpu), (DeviceKind::Pjrt, pjrt)],
+            costs,
         };
     }
 
@@ -513,12 +616,21 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
     }
 
     // Wholesale irregular: reordering for band structure does not fix
-    // row skew, and the padded export would stream mostly padding (or
-    // serialize the hubs through the host-side overflow fix-up) — skip
-    // both and pick a format built for skew.
+    // row skew, and the padded PJRT export would stream mostly padding
+    // (or serialize the hubs through the host-side overflow fix-up) —
+    // skip both and pick from the three-way skew rail. SELL plans gain
+    // a Sell-device cost row; CSR5 and parallel-CSR plans price CPU
+    // only, as before.
     let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
-    let kernel = irregular_kernel(stats.nnz);
-    let costs = vec![(DeviceKind::Cpu, cpu_cost(a))];
+    let row_nnz: Vec<usize> = (0..a.nrows()).map(|i| a.row_nnz(i)).collect();
+    let kernel = irregular_kernel(&row_nnz);
+    let mut costs = vec![(DeviceKind::Cpu, cpu_cost(a))];
+    if matches!(kernel, PlannedKernel::SellCs { .. }) {
+        costs.push((
+            DeviceKind::Sell,
+            sell_device_cost::<T>(&row_nnz, stats.nrows, stats.ncols),
+        ));
+    }
     FormatPlan::Single { stats, reorder: None, kernel, gpu_params, pjrt_width: None, costs }
 }
 
@@ -549,15 +661,90 @@ fn regular_plan<T: Scalar>(a: &Csr<T>, stats: MatrixStats, hint: usize) -> Forma
     }
 }
 
-/// The skew-tolerant kernel choice shared by the wholesale-irregular
-/// plan and the hybrid remainder: CSR5 (ω = 8 AVX2 f32 lanes, σ = 16 —
-/// the mid-sweep shape the CSR5 paper's CPU autotuner most often lands
-/// on) above [`CSR5_MIN_NNZ`], nnz-balanced parallel CSR below it.
-fn irregular_kernel(nnz: usize) -> PlannedKernel {
+/// The σ-autotune outcome for one chunk height: the chosen window and
+/// the exact fill-in it achieves.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SellChoice {
+    /// Chosen sort-window size.
+    pub sigma: usize,
+    /// Exact fill-in β = padded / nnz at that window.
+    pub fill: f64,
+}
+
+/// Exact SELL-C-σ fill-in β for one `(C, σ)` candidate, computed from
+/// the row-length histogram alone: sort each σ-window of lengths
+/// descending, chunk the concatenation into groups of `C` (the final
+/// chunk narrow, matching `SellCs::from_csr`), and charge every chunk
+/// `width·lanes` slots. β ≥ 1 always; an empty histogram reports 1.
+pub fn sell_fill(row_nnz: &[usize], c: usize, sigma: usize) -> f64 {
+    assert!(c >= 1 && sigma >= 1, "need positive C and sigma");
+    let n = row_nnz.len();
+    let nnz: usize = row_nnz.iter().sum();
+    if nnz == 0 {
+        return 1.0;
+    }
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    for w0 in (0..n).step_by(sigma) {
+        let mut window = row_nnz[w0..(w0 + sigma).min(n)].to_vec();
+        window.sort_unstable_by_key(|&d| std::cmp::Reverse(d));
+        order.extend(window);
+    }
+    let mut padded = 0usize;
+    for k0 in (0..n).step_by(c) {
+        let chunk = &order[k0..(k0 + c).min(n)];
+        padded += chunk.iter().copied().max().unwrap_or(0) * chunk.len();
+    }
+    padded as f64 / nnz as f64
+}
+
+/// The σ-autotune rule: the smallest window σ ∈ {C, 4C, 16C, n}
+/// (clamped to the row count, deduplicated) whose exact fill-in stays
+/// at or under [`SELL_MAX_FILL`]. `None` means no window bounds the
+/// fill — the heavy-tailed class that should stay on CSR5.
+pub fn sell_autotune(row_nnz: &[usize], c: usize) -> Option<SellChoice> {
+    let n = row_nnz.len();
+    if n == 0 {
+        return None;
+    }
+    let mut candidates: Vec<usize> =
+        [c, 4 * c, 16 * c, n].iter().map(|&s| s.clamp(1, n)).collect();
+    candidates.sort_unstable();
+    candidates.dedup();
+    for sigma in candidates {
+        let fill = sell_fill(row_nnz, c, sigma);
+        if fill <= SELL_MAX_FILL {
+            return Some(SellChoice { sigma, fill });
+        }
+    }
+    None
+}
+
+/// The σ everything downstream of the autotune uses: the chosen window
+/// when one bounds the fill, else a full sort (σ = n — the format's
+/// limit case; expensive, but the cost rows price exactly that
+/// fallback). Single-sources the policy for the device bind
+/// (`coordinator::backend::SellBackend`), the cost model
+/// ([`sell_device_cost`]'s fill) and the bench's forced rows.
+pub fn sell_sigma_or_full(row_nnz: &[usize], c: usize) -> usize {
+    sell_autotune(row_nnz, c)
+        .map(|ch| ch.sigma)
+        .unwrap_or_else(|| row_nnz.len().max(1))
+}
+
+/// The three-way skew-tolerant kernel choice shared by the
+/// wholesale-irregular plan and the hybrid remainder (see the module
+/// docs): nnz-balanced parallel CSR below [`CSR5_MIN_NNZ`]; SELL-C-σ at
+/// the autotuned window when some σ bounds the fill; CSR5 (ω = 8 AVX2
+/// f32 lanes, σ = 16 — the mid-sweep shape the CSR5 paper's CPU
+/// autotuner most often lands on) when none does.
+fn irregular_kernel(row_nnz: &[usize]) -> PlannedKernel {
+    let nnz: usize = row_nnz.iter().sum();
     if nnz < CSR5_MIN_NNZ {
-        PlannedKernel::CsrParallel
-    } else {
-        PlannedKernel::Csr5 { omega: 8, sigma: 16 }
+        return PlannedKernel::CsrParallel;
+    }
+    match sell_autotune(row_nnz, SELL_CPU_C) {
+        Some(choice) => PlannedKernel::SellCs { c: SELL_CPU_C, sigma: choice.sigma },
+        None => PlannedKernel::Csr5 { omega: 8, sigma: 16 },
     }
 }
 
@@ -642,13 +829,78 @@ fn cpu_cost<T: Scalar>(a: &Csr<T>) -> f64 {
 /// shared `x` itself — the split does not remap columns), plus one
 /// pool dispatch per part.
 fn part_cpu_cost<T: Scalar>(nrows: usize, ncols: usize, nnz: usize) -> f64 {
+    cpu_part_cost(
+        nrows,
+        ncols,
+        nnz,
+        std::mem::size_of::<T>(),
+        CPU_ROOFLINE.mem_bw_gbps,
+    )
+}
+
+/// The CPU part roofline with an explicit streaming bandwidth — the
+/// seam the one-time STREAM-triad calibration plugs into:
+/// `CpuBackend::static_cost` prices plans here with its *measured*
+/// triad GB/s instead of [`CPU_ROOFLINE`]'s hard-coded constant (which
+/// remains only the plan-time default). Peak-FLOP ceiling and dispatch
+/// overhead still come from the proxy spec; SpMV sits so deep in the
+/// bandwidth regime that the measured-bandwidth term is the one that
+/// had to be real.
+pub fn cpu_part_cost(
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    elem: usize,
+    mem_bw_gbps: f64,
+) -> f64 {
     let flops = 2.0 * nnz as f64;
     if flops == 0.0 {
         return CPU_ROOFLINE.launch_overhead_s;
     }
-    let bytes = spmv_bytes(nrows, ncols, nnz, std::mem::size_of::<T>());
+    let bytes = spmv_bytes(nrows, ncols, nnz, elem);
     let ai = flops / bytes as f64;
-    flops / (CPU_ROOFLINE.roofline_gflops(ai) * 1e9) + CPU_ROOFLINE.launch_overhead_s
+    let gflops = (CPU_ROOFLINE.fp32_tflops * 1e3).min(ai * mem_bw_gbps);
+    flops / (gflops * 1e9) + CPU_ROOFLINE.launch_overhead_s
+}
+
+/// Price a whole plan's CPU execution at an explicit streaming
+/// bandwidth: the per-part sum for hybrid plans, the single roofline
+/// otherwise. Element size is 4 bytes — the serving layer binds f32.
+pub fn plan_cpu_cost(plan: &FormatPlan, mem_bw_gbps: f64) -> f64 {
+    const ELEM: usize = 4;
+    match plan {
+        FormatPlan::Single { stats, .. } => {
+            cpu_part_cost(stats.nrows, stats.ncols, stats.nnz, ELEM, mem_bw_gbps)
+        }
+        FormatPlan::Hybrid { stats, body, remainder, .. } => {
+            cpu_part_cost(body.rows, stats.ncols, body.nnz, ELEM, mem_bw_gbps)
+                + cpu_part_cost(remainder.rows, stats.ncols, remainder.nnz, ELEM, mem_bw_gbps)
+        }
+    }
+}
+
+/// The SELL-device roofline priced from a part's row-length histogram:
+/// fill-in at the *device* chunk width [`SELL_DEVICE_C`] (autotuned σ,
+/// or a full sort when nothing passes — the device still binds, just
+/// expensively), the padded [`sellcs_bytes`] stream against
+/// [`SELL_ROOFLINE`], per-request vector marshaling, and the launch
+/// overhead.
+fn sell_device_cost<T: Scalar>(row_nnz: &[usize], nrows: usize, ncols: usize) -> f64 {
+    let nnz: usize = row_nnz.iter().sum();
+    let flops = 2.0 * nnz as f64;
+    if flops == 0.0 {
+        return SELL_ROOFLINE.launch_overhead_s;
+    }
+    let sigma = sell_sigma_or_full(row_nnz, SELL_DEVICE_C);
+    let fill = sell_fill(row_nnz, SELL_DEVICE_C, sigma);
+    let padded = (fill * nnz as f64).ceil() as usize;
+    let elem = std::mem::size_of::<T>();
+    let nchunks = nrows.div_ceil(SELL_DEVICE_C);
+    let bytes = sellcs_bytes(nrows, ncols, padded, nchunks, elem);
+    let ai = flops / bytes as f64;
+    let kernel_s = flops / (SELL_ROOFLINE.roofline_gflops(ai) * 1e9);
+    let transfer_s = ((ncols + nrows) * elem) as f64 / (PCIE_GBPS * 1e9);
+    kernel_s + transfer_s + SELL_ROOFLINE.launch_overhead_s
 }
 
 /// Roofline cost of one SpMV through the padded PJRT path over a whole
@@ -964,6 +1216,133 @@ mod tests {
         let p = plan(&grid);
         assert!(!p.is_hybrid());
         assert!(matches!(p, FormatPlan::Single { reorder: Some(_), .. }));
+    }
+
+    #[test]
+    fn sell_fill_and_autotune_follow_the_window_rule() {
+        // alternating 4/12 lengths: a σ = C window mixes both lengths in
+        // every chunk (β = 12·8 / 64 = 1.5); σ = 4C separates them into
+        // uniform chunks (β = 1) — the autotune must pick the smallest
+        // window that passes, not the global sort
+        let alt: Vec<usize> = (0..600).map(|i| if i % 2 == 0 { 4 } else { 12 }).collect();
+        assert!((sell_fill(&alt, 8, 8) - 1.5).abs() < 1e-12);
+        assert!((sell_fill(&alt, 8, 32) - 1.0).abs() < 1e-12);
+        let choice = sell_autotune(&alt, 8).expect("bounded fill");
+        assert_eq!(choice.sigma, 32);
+        assert!((choice.fill - 1.0).abs() < 1e-12);
+
+        // one dominant hub: even a full sort leaves the hub's chunkmates
+        // padded to its width — no window passes, CSR5 territory
+        let mut heavy = vec![2usize; 999];
+        heavy.push(1000);
+        assert!(sell_autotune(&heavy, 8).is_none());
+        assert!(sell_fill(&heavy, 8, heavy.len()) > SELL_MAX_FILL);
+
+        // degenerate inputs
+        assert!(sell_autotune(&[], 8).is_none());
+        assert_eq!(sell_fill(&[0, 0, 0], 4, 2), 1.0);
+        // β never drops below 1 and shrinks (weakly) with the window
+        let pl: Vec<usize> = (0..200).map(|i| (i * 37 + 11) % 23 + 1).collect();
+        let mut last = f64::INFINITY;
+        for sigma in [8usize, 32, 128, 200] {
+            let f = sell_fill(&pl, 8, sigma);
+            assert!(f >= 1.0 - 1e-12);
+            assert!(f <= last + 1e-9, "wider windows must not pad more");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn moderately_irregular_matrix_plans_sellcs_with_autotuned_sigma() {
+        // variance 16 > 10, no 1 %-bounded hub set (half the rows are
+        // long), nnz = 4800 ≥ the descriptor cutoff, and σ = 4C bounds
+        // the fill exactly — the three-way rail must land on SELL-C-σ
+        let a = gen::alternating_rows::<f32>(600, 4, 12);
+        let p = plan(&a);
+        assert!(!p.stats().is_regular());
+        assert!(!p.is_hybrid(), "{}", p.summary());
+        assert!(!p.reorders(), "SELL keeps the native labeling");
+        match &p {
+            FormatPlan::Single { kernel, .. } => {
+                assert_eq!(*kernel, PlannedKernel::SellCs { c: SELL_CPU_C, sigma: 32 })
+            }
+            FormatPlan::Hybrid { .. } => unreachable!(),
+        }
+        assert_eq!(p.pjrt_width(), None, "no padded PJRT export for SELL plans");
+        // both the host and the SELL device are priced
+        assert_eq!(p.costs().len(), 2);
+        let cpu = p.cost(DeviceKind::Cpu).unwrap();
+        let sell = p.cost(DeviceKind::Sell).unwrap();
+        assert!(cpu.is_finite() && cpu > 0.0);
+        assert!(sell.is_finite() && sell > 0.0);
+        assert!(
+            sell < cpu,
+            "the wide-SIMD device must out-price the host: {sell} vs {cpu}"
+        );
+        assert!(p.summary().contains("sellcs"), "{}", p.summary());
+        assert_eq!(p.planned_kernels().len(), 1);
+    }
+
+    #[test]
+    fn hub_matrix_with_uniform_rails_plans_a_sell_remainder() {
+        // 2976 band-5 rows plus 24 rails of distinct lengths 185..=208
+        // (0.8 % of rows, remainder nnz 4716 ≥ the cutoff): the hub walk
+        // peels exactly the rails, and their near-uniform lengths give
+        // β ≈ 1.02 at σ = C — the remainder plans SELL-C-σ and the plan
+        // gains a Sell cost row for the body→cpu + remainder→device
+        // placement
+        let n = 3000usize;
+        let mut c = Coo::<f32>::new(n, n);
+        for i in 0..n {
+            for j in 0..5 {
+                c.push(i, (i + j) % n, 1.0);
+            }
+        }
+        for idx in 0..24usize {
+            let r = idx * 97 + 50;
+            for j in 0..(180 + idx) {
+                c.push(r, (r + 7 + 13 * j) % n, 0.5);
+            }
+        }
+        let a = c.to_csr();
+        assert!(a.row_nnz_variance() > REGULARITY_VARIANCE_MAX);
+        let p = plan(&a);
+        match &p {
+            FormatPlan::Hybrid { threshold, body, remainder, .. } => {
+                assert_eq!(*threshold, 5);
+                assert_eq!(remainder.rows, 24, "exactly the rails peel");
+                assert!(matches!(body.kernel, PlannedKernel::Csr2 { .. }));
+                assert_eq!(
+                    remainder.kernel,
+                    PlannedKernel::SellCs { c: SELL_CPU_C, sigma: 8 },
+                    "{}",
+                    p.summary()
+                );
+            }
+            FormatPlan::Single { .. } => panic!("rails must plan hybrid: {}", p.summary()),
+        }
+        assert_eq!(p.costs().len(), 3, "Cpu + Pjrt + Sell rows: {}", p.summary());
+        assert!(p.cost(DeviceKind::Sell).unwrap() > 0.0);
+        assert_eq!(p.planned_kernels().len(), 2);
+        assert!(matches!(p.planned_kernels()[1], PlannedKernel::SellCs { .. }));
+    }
+
+    #[test]
+    fn plan_cpu_cost_tracks_the_bandwidth_seam() {
+        // at the proxy constant the seam reproduces the plan's own row;
+        // halving the measured bandwidth must raise the estimate
+        for a in [gen::grid2d_5pt::<f32>(20, 20), gen::alternating_rows::<f32>(600, 4, 12)] {
+            let p = plan(&a);
+            let at_const = plan_cpu_cost(&p, CPU_ROOFLINE.mem_bw_gbps);
+            let row = p.cost(DeviceKind::Cpu).unwrap();
+            assert!((at_const - row).abs() < 1e-15, "{at_const} vs {row}");
+            assert!(plan_cpu_cost(&p, CPU_ROOFLINE.mem_bw_gbps / 2.0) > at_const);
+        }
+        let hub = gen::circuit::<f32>(32, 32, 7);
+        let p = plan(&hub);
+        assert!(p.is_hybrid());
+        let at_const = plan_cpu_cost(&p, CPU_ROOFLINE.mem_bw_gbps);
+        assert!((at_const - p.cost(DeviceKind::Cpu).unwrap()).abs() < 1e-15);
     }
 
     #[test]

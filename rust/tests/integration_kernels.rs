@@ -1,17 +1,18 @@
 //! Kernel integration: every CPU kernel × every suite matrix (Tiny),
 //! f32 and f64, against the serial reference — plus the cross-format
 //! conformance harness: one table of generator matrices pushed through
-//! **every** kernel (COO, ELL, BCSR, CSR5, CSR-2, CSR-3, serial and
-//! parallel CSR), checking both `spmv` against `spmv_ref` and the
-//! multi-RHS `spmv_multi` against N independent `spmv` calls.
+//! **every** kernel (COO, ELL, BCSR, CSR5, SELL-C-σ at two chunk
+//! shapes, CSR-2, CSR-3, serial and parallel CSR), checking both `spmv`
+//! against `spmv_ref` and the multi-RHS `spmv_multi` against N
+//! independent `spmv` calls.
 
 use std::sync::Arc;
 
 use csrk::kernels::{
     pack_block, unpack_block, BcsrKernel, CooKernel, Csr2Kernel, Csr3Kernel, Csr5Kernel,
-    CsrParallel, CsrSerial, EllKernel, SpMv,
+    CsrParallel, CsrSerial, EllKernel, SellCsKernel, SpMv,
 };
-use csrk::sparse::{gen, suite, Bcsr, Coo, Csr, Csr5, CsrK, Ell, Scalar, SuiteScale};
+use csrk::sparse::{gen, suite, Bcsr, Coo, Csr, Csr5, CsrK, Ell, Scalar, SellCs, SuiteScale};
 use csrk::util::{Rng, ThreadPool};
 
 fn check<T: csrk::sparse::Scalar>(k: &dyn SpMv<T>, a: &csrk::sparse::Csr<T>, tol: f64, tag: &str) {
@@ -121,6 +122,10 @@ fn all_kernels<T: Scalar>(a: &Csr<T>, pool: &Arc<ThreadPool>) -> Vec<Box<dyn SpM
             pool.clone(),
         )),
         Box::new(Csr5Kernel::new(Csr5::from_csr(a, 4, 12), a.nnz(), pool.clone())),
+        // two SELL shapes: a chunk-sized window and a 4C window (the
+        // autotune's first two candidates)
+        Box::new(SellCsKernel::new(SellCs::from_csr(a, 8, 8), pool.clone())),
+        Box::new(SellCsKernel::new(SellCs::from_csr(a, 4, 16), pool.clone())),
         Box::new(CsrSerial::new(a.clone())),
         Box::new(CsrParallel::new(a.clone(), pool.clone())),
         Box::new(Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 48), pool.clone())),

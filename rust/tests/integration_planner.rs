@@ -4,7 +4,7 @@
 //! no-reorder (identity-permutation) path wholesale-irregular plans
 //! take, the hybrid body + remainder split for hub-pattern matrices
 //! (`gen::circuit`, plus a forced split over `gen::kkt` and a
-//! CSR5-remainder hub fixture) with the split round-trip invariant,
+//! SELL-remainder hub fixture) with the split round-trip invariant,
 //! conformance of every plan shape against the CSR reference through
 //! both `spmv` and `spmv_multi`, and the server's cost-based routing
 //! with the per-request device override.
@@ -248,11 +248,15 @@ fn kkt_conformance_planned_and_forced_hybrid() {
     }
 }
 
-/// A hub fixture big enough that the planner picks a CSR5 remainder:
-/// a 64×64 grid Laplacian with 20 rail rows of ~200 straps each
-/// (~0.5 % of rows, remainder nnz ≥ the CSR5 cutoff).
+/// A hub fixture big enough that the planner leaves parallel CSR for a
+/// descriptor format in the remainder: a 64×64 grid Laplacian with 20
+/// rail rows of ~200 straps each (~0.5 % of rows, remainder nnz ≥ the
+/// descriptor cutoff). The rails are near-uniform in length (~193–204
+/// nonzeros), so the σ-autotune bounds the fill at the smallest window
+/// and the remainder plans SELL-C-σ — the hybrid-remainder half of the
+/// SELL acceptance criterion.
 #[test]
-fn large_hub_fixture_plans_hybrid_with_csr5_remainder() {
+fn large_hub_fixture_plans_hybrid_with_sell_remainder() {
     let nx = 64usize;
     let n = nx * nx;
     let mut c = Coo::<f32>::new(n, n);
@@ -293,18 +297,22 @@ fn large_hub_fixture_plans_hybrid_with_csr5_remainder() {
         FormatPlan::Hybrid { body, remainder, .. } => {
             assert!(matches!(body.kernel, PlannedKernel::Csr2 { .. }));
             assert!(
-                matches!(remainder.kernel, PlannedKernel::Csr5 { .. }),
-                "remainder nnz {} should take CSR5",
-                remainder.nnz
+                matches!(remainder.kernel, PlannedKernel::SellCs { .. }),
+                "near-uniform rails (nnz {}) should take SELL-C-σ: {}",
+                remainder.nnz,
+                p.summary()
             );
             assert!(remainder.rows <= 20, "at most the injected hubs: {}", remainder.rows);
         }
         FormatPlan::Single { .. } => panic!("hub fixture must plan hybrid: {}", p.summary()),
     }
+    // the SELL remainder prices the device placement alongside CPU/PJRT
+    assert!(p.cost(DeviceKind::Sell).is_some(), "{}", p.summary());
     let pool = Arc::new(ThreadPool::new(4));
     let registry = MatrixRegistry::new(pool, None);
     let e = registry.register("hub20", a.clone()).unwrap();
-    assert!(e.kernel_name().contains("csr5"), "{}", e.kernel_name());
+    assert!(e.kernel_name().contains("sellcs"), "{}", e.kernel_name());
+    assert!(!e.supports(DeviceKind::Sell), "no sell backend in the default set");
     assert_entry_matches_reference(&e, &a, 4);
 }
 

@@ -1,0 +1,237 @@
+//! SELL-C-σ subsystem integration — the acceptance rows for the new
+//! format end to end:
+//!
+//! * the planner emits SELL-C-σ both as a `Single` irregular plan and
+//!   as a `Hybrid` remainder part, σ chosen by the autotune rule
+//!   (smallest σ ∈ {C, 4C, 16C, n} with β ≤ 1.15);
+//! * a registry built via `MatrixRegistry::with_backends(vec![CpuBackend,
+//!   SellBackend])` — zero registry/server changes — binds the
+//!   simulated wide-SIMD device, **routes an irregular matrix to it**,
+//!   and serves correct results through it;
+//! * the device's `gpusim`-modeled self-timed cost feeds the routing
+//!   EWMA deterministically.
+
+use std::sync::Arc;
+
+use csrk::coordinator::{
+    Backend, BackendId, CpuBackend, ExecutionBinding, MatrixRegistry, SellBackend, Server,
+    ServerConfig,
+};
+use csrk::sparse::{gen, Coo, Csr};
+use csrk::tuning::planner::{self, FormatPlan, PlannedKernel, SELL_CPU_C};
+use csrk::util::ThreadPool;
+
+/// The SELL-Single fixture: variance 16 > 10 (irregular), half the rows
+/// long (no 1 %-bounded hub set), nnz = 4800 ≥ the descriptor cutoff,
+/// and a 4C window separates the two row lengths into uniform chunks
+/// (β = 1) — fully deterministic, no RNG.
+fn sell_single_matrix() -> Csr<f32> {
+    gen::alternating_rows::<f32>(600, 4, 12)
+}
+
+/// The SELL-remainder fixture: a 64×64 grid Laplacian plus 20 rails of
+/// ~200 near-uniform straps (the `integration_planner` hub fixture).
+fn sell_hybrid_matrix() -> Csr<f32> {
+    let nx = 64usize;
+    let n = nx * nx;
+    let mut c = Coo::<f32>::new(n, n);
+    let id = |x: usize, y: usize| y * nx + x;
+    for y in 0..nx {
+        for x in 0..nx {
+            let i = id(x, y);
+            let mut deg = 0;
+            for (xx, yy) in [
+                (x.wrapping_sub(1), y),
+                (x + 1, y),
+                (x, y.wrapping_sub(1)),
+                (x, y + 1),
+            ] {
+                if xx < nx && yy < nx {
+                    c.push(i, id(xx, yy), -1.0);
+                    deg += 1;
+                }
+            }
+            c.push(i, i, deg as f32 + 1.0);
+        }
+    }
+    let mut rng = csrk::util::Rng::new(0xAB1E);
+    for h in 0..20 {
+        let hub = rng.usize_in(0, n);
+        for _ in 0..200 {
+            let t = rng.usize_in(0, n);
+            if t != hub {
+                c.push(hub, t, 0.5 + (h % 3) as f32);
+            }
+        }
+    }
+    c.to_csr()
+}
+
+fn sell_registry(pool: Arc<ThreadPool>) -> MatrixRegistry {
+    // deterministic CPU prior (no triad measurement noise in assertions)
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+        Arc::new(SellBackend::new(pool.clone())),
+    ];
+    MatrixRegistry::with_backends(pool, backends)
+}
+
+#[test]
+fn planner_emits_sell_in_both_roles() {
+    // Single irregular plan, σ by the autotune rule
+    let single = planner::plan(&sell_single_matrix());
+    match &single {
+        FormatPlan::Single { kernel, reorder, .. } => {
+            assert_eq!(*kernel, PlannedKernel::SellCs { c: SELL_CPU_C, sigma: 32 });
+            assert!(reorder.is_none());
+        }
+        FormatPlan::Hybrid { .. } => panic!("expected Single: {}", single.summary()),
+    }
+    assert!(single.cost(BackendId::Sell).is_some());
+
+    // Hybrid remainder part
+    let hybrid = planner::plan(&sell_hybrid_matrix());
+    match &hybrid {
+        FormatPlan::Hybrid { body, remainder, .. } => {
+            assert!(matches!(body.kernel, PlannedKernel::Csr2 { .. }));
+            assert!(
+                matches!(remainder.kernel, PlannedKernel::SellCs { c, .. } if c == SELL_CPU_C),
+                "{}",
+                hybrid.summary()
+            );
+        }
+        FormatPlan::Single { .. } => panic!("expected Hybrid: {}", hybrid.summary()),
+    }
+    assert!(hybrid.cost(BackendId::Sell).is_some());
+}
+
+/// The acceptance row: with `[CpuBackend, SellBackend]` injected
+/// through `with_backends`, an irregular SELL-planned matrix binds both
+/// backends and **routes to the SELL device** on the static priors
+/// (the wide-SIMD roofline out-prices the host).
+#[test]
+fn with_backends_routes_irregular_matrix_to_the_sell_device() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = sell_registry(pool);
+    let a = sell_single_matrix();
+    let e = registry.register("alt-bands", a.clone()).unwrap();
+    assert!(e.kernel_name().starts_with("sellcs"), "{}", e.kernel_name());
+    assert!(e.supports(BackendId::Cpu));
+    assert!(e.supports(BackendId::Sell));
+    assert_eq!(
+        e.route(None),
+        BackendId::Sell,
+        "the SELL device must win cold routing: {}",
+        e.describe()
+    );
+    let d = e.describe();
+    assert!(d.contains("sell[sellcs(c32"), "device binding at C = 32: {d}");
+
+    // and the routed path computes the right answer, spmv + batched
+    let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 7 + 1) % 13) as f32 - 6.0).collect();
+    let y = e.spmv(BackendId::Sell, &x).unwrap();
+    let mut y_ref = vec![0f32; a.nrows()];
+    a.spmv_ref(&x, &mut y_ref);
+    for (u, v) in y.iter().zip(&y_ref) {
+        assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "{u} vs {v}");
+    }
+    let ys = e.spmv_multi(BackendId::Sell, &[&x, &x, &x]).unwrap();
+    for yj in &ys {
+        for (u, v) in yj.iter().zip(&y) {
+            assert!((u - v).abs() < 1e-4 * v.abs().max(1.0));
+        }
+    }
+
+    // regular matrices stay CPU-only: the sell backend declines the plan
+    let grid = registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+    assert!(!grid.supports(BackendId::Sell), "{}", grid.describe());
+    assert_eq!(grid.route(None), BackendId::Cpu);
+}
+
+#[test]
+fn hybrid_sell_remainder_binds_body_to_cpu_and_remainder_to_device() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = sell_registry(pool);
+    let a = sell_hybrid_matrix();
+    let e = registry.register("rails", a.clone()).unwrap();
+    assert!(e.plan().is_hybrid(), "{}", e.describe());
+    assert!(e.supports(BackendId::Sell));
+    let d = e.describe();
+    assert!(d.contains("body→cpu["), "per-part placement: {d}");
+    assert!(d.contains("remainder→sell[sellcs(c32"), "per-part placement: {d}");
+
+    // conformance through the device binding, per vector and batched
+    let n = a.nrows();
+    let xs: Vec<Vec<f32>> = (0..4)
+        .map(|j| (0..n).map(|i| ((i * 11 + j * 3 + 2) % 17) as f32 - 8.0).collect())
+        .collect();
+    for x in &xs {
+        let y = e.spmv(BackendId::Sell, x).unwrap();
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let ys = e.spmv_multi(BackendId::Sell, &refs).unwrap();
+    for (x, y) in xs.iter().zip(&ys) {
+        let mut y_ref = vec![0f32; n];
+        a.spmv_ref(x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-2 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+}
+
+/// Serving end to end: the server spawns a worker for the injected SELL
+/// backend (zero server changes), batches route to it, responses carry
+/// its id, and the deterministic modeled clock — not host wall time —
+/// lands in the routing EWMA.
+#[test]
+fn server_serves_through_the_sell_backend_and_feeds_its_modeled_clock() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = Arc::new(sell_registry(pool));
+    let a = sell_single_matrix();
+    registry.register("alt-bands", a.clone()).unwrap();
+    let server = Server::start(
+        Arc::clone(&registry),
+        ServerConfig { max_batch: 4, ..Default::default() },
+    );
+    let xs: Vec<Vec<f32>> = (0..8)
+        .map(|j| (0..a.ncols()).map(|i| ((i * 3 + j * 5) % 11) as f32 - 5.0).collect())
+        .collect();
+    let rxs: Vec<_> = xs.iter().map(|x| server.submit("alt-bands", x.clone()).1).collect();
+    for (x, rx) in xs.iter().zip(rxs) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.device, BackendId::Sell, "batches must route to the device");
+        let y = resp.result.unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+    // the EWMA must hold the binding's modeled clock exactly: every
+    // observation is the same constant, so the smoothed value equals it
+    let e = registry.get("alt-bands").unwrap();
+    let modeled = e
+        .binding(BackendId::Sell)
+        .unwrap()
+        .self_timed_cost()
+        .expect("simulated device keeps a clock");
+    let observed = server
+        .metrics()
+        .device_estimate("alt-bands", BackendId::Sell)
+        .expect("served batches leave an estimate");
+    assert!(
+        (observed - modeled).abs() <= 1e-18_f64.max(1e-12 * modeled),
+        "EWMA {observed} must equal the modeled constant {modeled}"
+    );
+    assert_eq!(e.routing().estimate(BackendId::Sell), Some(observed));
+    // pinning to the host still works and fails loudly nowhere
+    let resp = server.call_on("alt-bands", xs[0].clone(), Some(BackendId::Cpu));
+    assert_eq!(resp.device, BackendId::Cpu);
+    assert!(resp.result.is_ok());
+    server.shutdown();
+}

@@ -228,6 +228,56 @@ fn prop_spmv_multi_matches_columnwise_spmv() {
 }
 
 #[test]
+fn prop_sellcs_partition_displacement_and_spmv_any_shape() {
+    // SELL-C-σ invariants for arbitrary (C, σ): the chunk partition
+    // covers every row exactly once (perm is a bijection, lane lengths
+    // sum to nnz, padding never loses a nonzero), the sort never moves
+    // a row out of its σ-window, and the product matches CSR.
+    forall("sellcs chunks", 40, |g| {
+        let a = random_square(g, 60);
+        let n = a.nrows();
+        let c = g.usize_in(1, 10);
+        let sigma = g.usize_in(1, 41);
+        let s = csrk::sparse::SellCs::from_csr(&a, c, sigma);
+        // chunk partition coverage: perm is a bijection over the rows…
+        let mut seen = vec![false; n];
+        for &r in s.perm() {
+            assert!(!std::mem::replace(&mut seen[r as usize], true), "row {r} twice");
+        }
+        assert!(seen.iter().all(|&b| b), "every row in exactly one chunk lane");
+        // …chunks tile the sorted positions, and true lengths partition nnz
+        assert_eq!(s.nchunks(), n.div_ceil(c));
+        let stored: usize = s.lane_nnz().iter().map(|&d| d as usize).sum();
+        assert_eq!(stored, a.nnz(), "padding must not add or drop nonzeros");
+        assert!(s.padded_nnz() >= a.nnz());
+        assert!(s.fill_ratio() >= 1.0 - 1e-12);
+        // σ-window-bounded displacement: row r sorts within its window
+        let sig = s.sigma().max(1);
+        for (p, &r) in s.perm().iter().enumerate() {
+            assert_eq!(p / sig, r as usize / sig, "row {r} escaped its σ-window");
+        }
+        // per-lane lengths agree with the source rows
+        for (p, &r) in s.perm().iter().enumerate() {
+            assert_eq!(s.lane_nnz()[p] as usize, a.row_nnz(r as usize));
+        }
+        // the product in source coordinates matches the CSR reference
+        let x = g.f64_vec(a.ncols());
+        let mut y = vec![f64::NAN; n];
+        let mut y_ref = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        s.spmv_ref(&x, &mut y);
+        for (i, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+            assert!((u - v).abs() < 1e-9, "row {i} (C={c} σ={sigma})");
+        }
+        // and the round trip is lossless
+        let back = s.to_csr();
+        assert_eq!(back.row_ptr(), a.row_ptr());
+        assert_eq!(back.col_idx(), a.col_idx());
+        assert_eq!(back.vals(), a.vals());
+    });
+}
+
+#[test]
 fn prop_csr5_matches_csr_any_tile_shape() {
     forall("csr5 tiles", 30, |g| {
         let a = random_square(g, 60);
