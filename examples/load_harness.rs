@@ -1,0 +1,216 @@
+//! Sustained-load serving harness: drives the server under two traffic
+//! mixes and writes `BENCH_serving.json` with p50/p99 latency and
+//! throughput per mix.
+//!
+//! ```text
+//! cargo run --release --example load_harness            # full (~3 s/mix)
+//! cargo run --release --example load_harness -- --smoke # CI (~0.5 s/mix)
+//! ```
+//!
+//! * **bursty_small** — four small matrices of different structural
+//!   classes registered on a CPU + simulated-SELL-device registry;
+//!   traffic arrives in bursts of 32 through the bounded
+//!   [`Server::try_submit`] path against a queue depth of 24, so the
+//!   harness also exercises (and reports) backpressure shedding.
+//! * **steady_large** — one large grid registered as a 4-way row-shard
+//!   ensemble ([`MatrixRegistry::register_sharded`], shards fanning out
+//!   across CPU and SELL backends concurrently) under a steady
+//!   closed-loop stream with 8 outstanding requests.
+//!
+//! [`Server::try_submit`]: csrk::coordinator::Server::try_submit
+//! [`MatrixRegistry::register_sharded`]: csrk::coordinator::MatrixRegistry::register_sharded
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use csrk::coordinator::{
+    Backend, CpuBackend, MatrixRegistry, Response, SellBackend, Server, ServerConfig, SubmitError,
+};
+use csrk::sparse::gen;
+use csrk::util::ThreadPool;
+
+struct MixStats {
+    name: &'static str,
+    requests: u64,
+    errors: u64,
+    rejected: u64,
+    p50_us: f64,
+    p99_us: f64,
+    mean_us: f64,
+    throughput_rps: f64,
+}
+
+fn two_backend_registry(pool: Arc<ThreadPool>) -> Arc<MatrixRegistry> {
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+        Arc::new(SellBackend::new(pool.clone())),
+    ];
+    Arc::new(MatrixRegistry::with_backends(pool, backends))
+}
+
+/// Mix A: many small matrices, bursty arrivals, bounded admission.
+fn bursty_small(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
+    let registry = two_backend_registry(pool);
+    let mats: Vec<(&str, usize)> = vec![
+        ("grid", registry.register("grid", gen::grid2d_5pt::<f32>(32, 32)).unwrap().ncols),
+        (
+            "hubs",
+            registry.register("hubs", gen::power_law::<f32>(1500, 8, 1.0, 0x10AD)).unwrap().ncols,
+        ),
+        ("alt", registry.register("alt", gen::alternating_rows::<f32>(600, 5, 11)).unwrap().ncols),
+        (
+            "circuit",
+            registry.register("circuit", gen::circuit::<f32>(24, 24, 0x10AD)).unwrap().ncols,
+        ),
+    ];
+    let server = Server::start(
+        registry,
+        ServerConfig { max_batch: 8, max_delay: Duration::from_micros(200), queue_depth: 24 },
+    );
+
+    let t0 = Instant::now();
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+    let mut rejected = 0u64;
+    let mut burst = 0usize;
+    while t0.elapsed() < duration {
+        // one burst: 32 submits round-robin over the matrices, then
+        // drain it fully and idle briefly before the next burst
+        let mut held: Vec<Receiver<Response>> = Vec::with_capacity(32);
+        for k in 0..32 {
+            let (name, n) = mats[(burst + k) % mats.len()];
+            let x: Vec<f32> = (0..n).map(|i| ((i + k) % 7) as f32 - 3.0).collect();
+            match server.try_submit(name, x) {
+                Ok((_, rx)) => held.push(rx),
+                Err(SubmitError::QueueFull { .. }) => rejected += 1,
+                Err(SubmitError::Closed) => panic!("server closed mid-run"),
+            }
+        }
+        for rx in held {
+            let resp = rx.recv().expect("response");
+            requests += 1;
+            if resp.result.is_err() {
+                errors += 1;
+            }
+        }
+        burst += 1;
+        std::thread::sleep(Duration::from_micros(300));
+    }
+
+    let m = server.metrics();
+    let stats = MixStats {
+        name: "bursty_small",
+        requests,
+        errors,
+        rejected,
+        p50_us: m.latency_us(50.0),
+        p99_us: m.latency_us(99.0),
+        mean_us: m.mean_latency_us(),
+        throughput_rps: m.throughput_rps(),
+    };
+    server.shutdown();
+    stats
+}
+
+/// Mix B: one large sharded matrix, steady closed-loop stream.
+fn steady_large(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
+    let registry = two_backend_registry(pool);
+    let entry = registry.register_sharded("big", gen::grid2d_5pt::<f32>(96, 96), 4).unwrap();
+    let n = entry.ncols;
+    println!("  sharded entry: {}", entry.describe());
+    let server = Server::start(
+        registry,
+        ServerConfig { max_batch: 8, max_delay: Duration::from_micros(200), queue_depth: 64 },
+    );
+
+    let t0 = Instant::now();
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+    let mut rejected = 0u64;
+    let mut seq = 0usize;
+    let mut outstanding: VecDeque<Receiver<Response>> = VecDeque::new();
+    let mut drain = |outstanding: &mut VecDeque<Receiver<Response>>| {
+        if let Some(rx) = outstanding.pop_front() {
+            let resp = rx.recv().expect("response");
+            requests += 1;
+            if resp.result.is_err() {
+                errors += 1;
+            }
+        }
+    };
+    while t0.elapsed() < duration {
+        if outstanding.len() < 8 {
+            let x: Vec<f32> = (0..n).map(|i| ((i + seq) % 13) as f32 / 13.0 - 0.5).collect();
+            seq += 1;
+            match server.try_submit("big", x) {
+                Ok((_, rx)) => outstanding.push_back(rx),
+                Err(SubmitError::QueueFull { .. }) => {
+                    rejected += 1;
+                    drain(&mut outstanding);
+                }
+                Err(SubmitError::Closed) => panic!("server closed mid-run"),
+            }
+        } else {
+            drain(&mut outstanding);
+        }
+    }
+    while !outstanding.is_empty() {
+        drain(&mut outstanding);
+    }
+
+    let m = server.metrics();
+    let stats = MixStats {
+        name: "steady_large",
+        requests,
+        errors,
+        rejected,
+        p50_us: m.latency_us(50.0),
+        p99_us: m.latency_us(99.0),
+        mean_us: m.mean_latency_us(),
+        throughput_rps: m.throughput_rps(),
+    };
+    server.shutdown();
+    stats
+}
+
+fn json_mix(s: &MixStats) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"requests\":{},\"errors\":{},\"rejected\":{},\
+         \"p50_us\":{:.3},\"p99_us\":{:.3},\"mean_us\":{:.3},\"throughput_rps\":{:.1}}}",
+        s.name, s.requests, s.errors, s.rejected, s.p50_us, s.p99_us, s.mean_us, s.throughput_rps
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let duration = if smoke { Duration::from_millis(500) } else { Duration::from_secs(3) };
+    let pool = Arc::new(ThreadPool::with_available_parallelism());
+
+    let mode = if smoke { "smoke" } else { "full" };
+    println!("load harness ({mode} mode, {duration:?} per mix)");
+    let mixes = [bursty_small(pool.clone(), duration), steady_large(pool, duration)];
+
+    println!(
+        "{:<14} {:>9} {:>7} {:>9} {:>10} {:>10} {:>10} {:>12}",
+        "mix", "requests", "errors", "rejected", "p50_us", "p99_us", "mean_us", "rps"
+    );
+    for s in &mixes {
+        println!(
+            "{:<14} {:>9} {:>7} {:>9} {:>10.1} {:>10.1} {:>10.1} {:>12.0}",
+            s.name, s.requests, s.errors, s.rejected, s.p50_us, s.p99_us, s.mean_us,
+            s.throughput_rps
+        );
+        assert_eq!(s.errors, 0, "{} served errors under well-formed load", s.name);
+    }
+
+    let body: Vec<String> = mixes.iter().map(json_mix).collect();
+    let json = format!(
+        "{{\"bench\":\"serving\",\"smoke\":{},\"mixes\":[{}]}}\n",
+        smoke,
+        body.join(",")
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
+}

@@ -55,6 +55,14 @@
 //!                                                      y (original coords)
 //! ```
 //!
+//! For N-way scale-out plans ([`FormatPlan::Sharded`]) the bind stage
+//! composes rather than picks: [`bind_sharded`] offers each shard of
+//! the build to the backend its plan placed it on (CPU shards to
+//! [`CpuBackend`], SELL shards to [`SellBackend`], with a host fallback
+//! when a device is absent) and returns one binding whose requests fan
+//! out to every shard concurrently — scoped threads behind a join
+//! barrier — before merging through the shards' row scatter maps.
+//!
 //! Adding a device (a second NUMA domain, a remote worker, real GPU
 //! kernels) is one `Backend` impl handed to
 //! [`MatrixRegistry::with_backends`] — no registry or server changes.
@@ -67,7 +75,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analysis::roofline::sellcs_bytes;
 use crate::gpusim::{DeviceSpec, MemSim};
@@ -79,8 +87,10 @@ use crate::runtime::{Runtime, SpmvExecutor};
 use crate::sparse::SellCs;
 use crate::tuning::cpu::stream_triad_gbps;
 use crate::tuning::planner::{
-    self, FormatPlan, PlannedKernel, CPU_ROOFLINE, SELL_DEVICE_C, SELL_ROOFLINE,
+    self, FormatPlan, MatrixStats, PlannedKernel, ShardPlan, CPU_ROOFLINE, SELL_DEVICE_C,
+    SELL_ROOFLINE,
 };
+use crate::tuning::{csr3_params_multi, Device};
 use crate::util::ThreadPool;
 
 /// Identity of an execution backend — the preferred name for the
@@ -699,6 +709,174 @@ impl ExecutionBinding for SellBinding {
 }
 
 // ---------------------------------------------------------------------
+// Sharded multi-backend binding
+// ---------------------------------------------------------------------
+
+/// Bind a [`FormatPlan::Sharded`] build across `backends`: each shard's
+/// composite part is wrapped as a standalone single-part execution and
+/// offered to the backend its [`ShardPlan`] placed it on; shards whose
+/// backend is absent (or declines the bind) degrade to a direct CPU
+/// binding of the same host kernel, so a sharded registration never
+/// fails for want of a device. The returned binding fans a request out
+/// to every shard concurrently and merges the partial results through
+/// the shards' row scatter maps — the scale-out analogue of the hybrid
+/// body/remainder merge.
+pub fn bind_sharded(
+    backends: &[Arc<dyn Backend>],
+    built: &BuiltExecution<f32>,
+    plan: &FormatPlan,
+) -> Result<Box<dyn ExecutionBinding>> {
+    let FormatPlan::Sharded { stats, shards, .. } = plan else {
+        bail!("bind_sharded needs a sharded plan, got {}", plan.kernel_label());
+    };
+    let parts = built.exec.parts();
+    if parts.len() != shards.len() {
+        bail!("plan names {} shards but the build produced {}", shards.len(), parts.len());
+    }
+    let mut bound = Vec::with_capacity(shards.len());
+    for (part, sp) in parts.iter().zip(shards) {
+        let kernel = part.kernel().clone();
+        let rows = match part.rows() {
+            Some(map) => map.to_vec(),
+            None => (0..kernel.nrows() as u32).collect(),
+        };
+        // the sub-execution is shard-local: a one-part identity
+        // composite over the shard's own row range. The fan-out below
+        // owns the scatter back to source coordinates, so sub-backends
+        // see an ordinary whole-matrix binding.
+        let sub_built = BuiltExecution {
+            exec: Arc::new(CompositeExec::single(kernel, None)),
+            exports: vec![None],
+        };
+        let sub_plan = shard_sub_plan(sp, stats.ncols);
+        let target = backends.iter().find(|b| b.id() == sp.backend);
+        let binding: Box<dyn ExecutionBinding> = match target {
+            Some(b) if b.supports_plan(&sub_plan) => b
+                .bind(&sub_built, &sub_plan)
+                // a declined bind degrades to the host kernel — the
+                // shard still serves, just not where the plan hoped
+                .unwrap_or_else(|_| Box::new(CpuBinding { exec: sub_built.exec.clone() })),
+            _ => Box::new(CpuBinding { exec: sub_built.exec.clone() }),
+        };
+        bound.push(ShardBound { binding, rows });
+    }
+    Ok(Box::new(ShardedBinding {
+        nrows: built.exec.nrows(),
+        ncols: built.exec.ncols(),
+        shards: bound,
+    }))
+}
+
+/// The bind-protocol vehicle for one shard: a synthesized
+/// [`FormatPlan::Single`] describing just that shard. Backends read the
+/// planned kernel (capability + rebind decisions) and the cost row; the
+/// fabricated stats only carry the shard's dimensions.
+fn shard_sub_plan(sp: &ShardPlan, ncols: usize) -> FormatPlan {
+    let rdensity = sp.nnz as f64 / sp.rows.max(1) as f64;
+    FormatPlan::Single {
+        stats: MatrixStats {
+            nrows: sp.rows,
+            ncols,
+            nnz: sp.nnz,
+            rdensity,
+            row_nnz_variance: 0.0,
+            max_row_nnz: 0,
+            bandwidth: 0,
+        },
+        reorder: None,
+        kernel: sp.kernel,
+        gpu_params: csr3_params_multi(Device::Ampere, rdensity, 1),
+        pjrt_width: None,
+        costs: vec![(sp.backend, sp.cost)],
+    }
+}
+
+/// One shard of a sharded binding: the placed sub-binding plus the
+/// shard's row scatter map (shard-local row → source row).
+struct ShardBound {
+    binding: Box<dyn ExecutionBinding>,
+    rows: Vec<u32>,
+}
+
+/// A matrix bound across N backends at once: every request fans out to
+/// all shard bindings concurrently (scoped threads, join barrier) and
+/// the partial results merge through the shards' row maps. Routed under
+/// [`BackendId::Cpu`] — the host coordinates the fan-out — and reports
+/// no self-timed clock: the wall time of the joined fan-out is the
+/// honest ensemble measure, even when individual shards keep simulated
+/// clocks.
+struct ShardedBinding {
+    nrows: usize,
+    ncols: usize,
+    shards: Vec<ShardBound>,
+}
+
+impl ExecutionBinding for ShardedBinding {
+    fn backend(&self) -> BackendId {
+        BackendId::Cpu
+    }
+
+    fn describe(&self) -> String {
+        let inner = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| format!("shard{i}→{}", sh.binding.describe()))
+            .collect::<Vec<_>>()
+            .join(" + ");
+        format!("sharded[{inner}]")
+    }
+
+    fn spmv(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let mut ys = self.spmv_multi(&[x])?;
+        Ok(ys.pop().expect("one result per operand"))
+    }
+
+    fn spmv_multi(&self, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let nvec = xs.len();
+        if nvec == 0 {
+            return Ok(Vec::new());
+        }
+        for x in xs {
+            if x.len() != self.ncols {
+                bail!("x length {} != ncols {}", x.len(), self.ncols);
+            }
+        }
+        // fan out: one worker per shard, joined before the merge. Any
+        // shard failure — an Err or a panic — fails the whole request
+        // after the join, so the caller gets a per-request error, never
+        // a hang or a partially-written result.
+        let partials: Vec<Result<Vec<Vec<f32>>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|sh| scope.spawn(move || sh.binding.spmv_multi(xs)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow!("shard worker panicked")),
+                })
+                .collect()
+        });
+        let mut out = vec![vec![0f32; self.nrows]; nvec];
+        for (i, (sh, partial)) in self.shards.iter().zip(partials).enumerate() {
+            let pys = match partial {
+                Ok(pys) => pys,
+                Err(e) => bail!("shard {i} on {:?} failed: {e}", sh.binding.backend()),
+            };
+            for (py, oj) in pys.iter().zip(out.iter_mut()) {
+                for (l, &o) in sh.rows.iter().enumerate() {
+                    oj[o as usize] = py[l];
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
 // Routing table
 // ---------------------------------------------------------------------
 
@@ -911,5 +1089,73 @@ mod tests {
             }
         }
         assert!(binding.spmv(&[1.0; 3]).is_err(), "length validation");
+    }
+
+    #[test]
+    fn sharded_binding_spans_backends_and_matches_reference_bitwise() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+            Arc::new(SellBackend::new(pool.clone())),
+        ];
+        let a = gen::grid2d_5pt::<f32>(64, 64);
+        let plan = planner::plan_sharded(&a, 4, &[BackendId::Cpu, BackendId::Sell]);
+        let built = build_execution(&plan, a.clone(), pool, false);
+        let binding = bind_sharded(&backends, &built, &plan).unwrap();
+        assert_eq!(binding.backend(), BackendId::Cpu, "the host coordinates the fan-out");
+        let d = binding.describe();
+        assert!(d.starts_with("sharded["), "{d}");
+        assert!(d.contains("shard0→cpu[") && d.contains("shard1→sell["), "{d}");
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|j| (0..a.ncols()).map(|i| ((i * 7 + j * 3 + 1) % 13) as f32 - 6.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let ys = binding.spmv_multi(&refs).unwrap();
+        for (x, y) in refs.iter().zip(&ys) {
+            let mut y_ref = vec![0f32; a.nrows()];
+            a.spmv_ref(x, &mut y_ref);
+            for (r, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "row {r}: {u} vs {v}");
+            }
+        }
+        let y0 = binding.spmv(refs[0]).unwrap();
+        assert_eq!(y0, ys[0], "single-vector path agrees with the batch path");
+        assert!(binding.spmv(&[1.0; 3]).is_err(), "length validation");
+        assert!(binding.spmv_multi(&[]).unwrap().is_empty());
+        assert!(binding.self_timed_cost().is_none(), "the ensemble clock is wall time");
+    }
+
+    #[test]
+    fn sharded_bind_degrades_to_cpu_when_a_backend_is_missing() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let a = gen::grid2d_5pt::<f32>(48, 48);
+        let plan = planner::plan_sharded(&a, 3, &[BackendId::Cpu, BackendId::Sell]);
+        assert!(plan.is_sharded());
+        let built = build_execution(&plan, a.clone(), pool.clone(), false);
+        // only the CPU backend shows up at bind time
+        let backends: Vec<Arc<dyn Backend>> =
+            vec![Arc::new(CpuBackend::with_bandwidth(pool, 60.0))];
+        let binding = bind_sharded(&backends, &built, &plan).unwrap();
+        let d = binding.describe();
+        assert!(!d.contains("sell["), "no sell backend bound: {d}");
+        assert!(d.contains("shard2→cpu["), "{d}");
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 5 + 2) % 11) as f32 - 5.0).collect();
+        let y = binding.spmv(&x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn bind_sharded_rejects_non_sharded_plans() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let a = gen::grid2d_5pt::<f32>(8, 8);
+        let plan = planner::plan(&a);
+        let built = build_execution(&plan, a, pool.clone(), false);
+        let backends: Vec<Arc<dyn Backend>> =
+            vec![Arc::new(CpuBackend::with_bandwidth(pool, 60.0))];
+        assert!(bind_sharded(&backends, &built, &plan).is_err());
     }
 }

@@ -24,9 +24,20 @@ use crate::util::stats;
 /// the route.
 pub const ROUTE_EWMA_ALPHA: f64 = 0.25;
 
+/// Retained latency samples. Percentiles are **exact** while total
+/// requests stay at or below this cap; beyond it the ring keeps a
+/// sliding window of the most recent `LATENCY_RING_CAP` samples, so
+/// long-running servers report recent tail latency at O(cap) memory
+/// instead of growing (and re-sorting) an unbounded history per call.
+pub const LATENCY_RING_CAP: usize = 4096;
+
 #[derive(Debug, Default)]
 struct Inner {
+    /// Latency ring (µs): grows to [`LATENCY_RING_CAP`], then
+    /// `latency_next` wraps and the oldest sample is overwritten.
     latencies_us: Vec<f64>,
+    /// Next overwrite position once the ring is full.
+    latency_next: usize,
     requests: u64,
     batches: u64,
     errors: u64,
@@ -51,10 +62,18 @@ impl Metrics {
         Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
 
-    /// Record one completed request.
+    /// Record one completed request. Latency lands in the bounded ring
+    /// (see [`LATENCY_RING_CAP`]); counters are unbounded.
     pub fn record(&self, latency: Duration, flops: f64, ok: bool) {
         let mut m = self.inner.lock().unwrap();
-        m.latencies_us.push(latency.as_secs_f64() * 1e6);
+        let us = latency.as_secs_f64() * 1e6;
+        if m.latencies_us.len() < LATENCY_RING_CAP {
+            m.latencies_us.push(us);
+        } else {
+            let slot = m.latency_next;
+            m.latencies_us[slot] = us;
+            m.latency_next = (slot + 1) % LATENCY_RING_CAP;
+        }
         m.requests += 1;
         m.flops += flops;
         if !ok {
@@ -117,7 +136,14 @@ impl Metrics {
         (m.requests, m.batches, m.errors)
     }
 
-    /// Latency percentile in microseconds (p in 0..=100).
+    /// Retained latency samples — `min(requests, LATENCY_RING_CAP)`.
+    pub fn latency_samples(&self) -> usize {
+        self.inner.lock().unwrap().latencies_us.len()
+    }
+
+    /// Latency percentile in microseconds (p in 0..=100), over the
+    /// retained window (exact until [`LATENCY_RING_CAP`] requests, the
+    /// most recent cap-many after).
     pub fn latency_us(&self, p: f64) -> f64 {
         let m = self.inner.lock().unwrap();
         if m.latencies_us.is_empty() {
@@ -126,7 +152,7 @@ impl Metrics {
         stats::percentile(&m.latencies_us, p)
     }
 
-    /// Mean latency in microseconds.
+    /// Mean latency in microseconds, over the retained window.
     pub fn mean_latency_us(&self) -> f64 {
         stats::mean(&self.inner.lock().unwrap().latencies_us)
     }
@@ -167,6 +193,36 @@ mod tests {
         assert!(m.latency_us(50.0) >= 50.0 && m.latency_us(50.0) <= 52.0);
         assert!(m.mean_latency_us() > 0.0);
         assert!(m.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn latency_ring_is_bounded_at_the_cap() {
+        // Regression: record() used to push every latency into an
+        // unbounded Vec (re-sorted per percentile call) — a memory and
+        // CPU leak on any long-running server.
+        let m = Metrics::new();
+        for _ in 0..LATENCY_RING_CAP + 1000 {
+            m.record(Duration::from_micros(10), 0.0, true);
+        }
+        assert_eq!(m.latency_samples(), LATENCY_RING_CAP);
+        let (req, _, _) = m.counts();
+        assert_eq!(req as usize, LATENCY_RING_CAP + 1000, "counters stay exact");
+    }
+
+    #[test]
+    fn latency_ring_slides_to_recent_samples() {
+        let m = Metrics::new();
+        for _ in 0..LATENCY_RING_CAP {
+            m.record(Duration::from_micros(1), 0.0, true);
+        }
+        // a full cap of newer, slower samples must displace the old
+        // window entirely: percentiles describe recent traffic
+        for _ in 0..LATENCY_RING_CAP {
+            m.record(Duration::from_micros(2), 0.0, true);
+        }
+        assert_eq!(m.latency_samples(), LATENCY_RING_CAP);
+        assert!((m.latency_us(50.0) - 2.0).abs() < 1e-9, "{}", m.latency_us(50.0));
+        assert!((m.latency_us(99.0) - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -32,6 +32,37 @@
 //!    ever `match`ed on the serving path: dispatch is a binding-map
 //!    lookup by [`BackendId`].
 //!
+//! # N-way sharded topology (scale-out)
+//!
+//! One matrix can also be served as an **N-way row shard ensemble**
+//! ([`MatrixRegistry::register_sharded`]): the planner partitions the
+//! rows at nnz-balanced boundaries (`sparse::split_n_by_rows`), plans a
+//! kernel per shard, and places each shard on its own backend —
+//! costing the plan at the **max** of the per-shard rooflines, because
+//! shards execute concurrently and the ensemble finishes with its
+//! slowest member. Binding produces one
+//! [`ExecutionBinding`] whose `spmv_multi` fans a batch out to every
+//! shard's sub-binding on scoped threads, joins them, and merges the
+//! partial results through the shards' row scatter maps — so a single
+//! batch genuinely runs on ≥ 2 backends at once (CPU + the simulated
+//! SELL device in the default offline build). A shard whose preferred
+//! backend is missing degrades to CPU at bind time; a shard that fails
+//! at dispatch fails the request with a per-request error, never a
+//! hang.
+//!
+//! # Admission, backpressure and the serving loop
+//!
+//! The submit path is bounded: [`Server::try_submit`] admits a request
+//! only while fewer than `ServerConfig::queue_depth` requests are in
+//! flight and rejects with [`SubmitError::QueueFull`] otherwise, so
+//! sustained overload sheds at the door instead of growing the queue
+//! without limit. The leader checks batch deadlines on **every**
+//! message, not just on receive timeouts — under sustained traffic the
+//! channel never drains, and a timeout-only check would starve partial
+//! batches past `max_delay`. Latency percentiles come from a bounded
+//! ring ([`metrics::LATENCY_RING_CAP`]): exact until the cap, a
+//! sliding recent window after.
+//!
 //! # The bind lifecycle
 //!
 //! ```text
@@ -92,7 +123,7 @@ pub use backend::{
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::Metrics;
 pub use registry::{DeviceKind, MatrixEntry, MatrixRegistry};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, SubmitError};
 
 /// A unit of work: multiply a registered matrix by `x`.
 #[derive(Debug)]

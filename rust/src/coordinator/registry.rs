@@ -26,6 +26,12 @@
 //! and is corrected online: after every served batch the server folds
 //! the observed per-vector latency into the metrics-side EWMA and
 //! pushes it back through [`MatrixEntry::correct_route`].
+//!
+//! [`MatrixRegistry::register_sharded`] runs the scale-out variant of
+//! the pipeline: the matrix is cut into N nnz-balanced row shards, each
+//! shard is planned and bound on its own backend, and the entry's
+//! single CPU-keyed binding fans every request out to all shard
+//! bindings concurrently before merging through the row scatter maps.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,7 +39,9 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable};
+use super::backend::{
+    bind_sharded, Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable,
+};
 use crate::kernels::{build_execution, SpMv};
 use crate::runtime::Runtime;
 use crate::sparse::Csr;
@@ -301,6 +309,53 @@ impl MatrixRegistry {
         Ok(entry)
     }
 
+    /// Register a matrix through the **scale-out** pipeline: an N-way
+    /// nnz-balanced row sharding
+    /// ([`planner::plan_sharded`](crate::tuning::planner::plan_sharded))
+    /// whose shards are placed across this registry's backends and
+    /// bound as one fan-out/merge binding
+    /// ([`bind_sharded`](super::backend::bind_sharded)). One request
+    /// then executes on every placed backend *simultaneously*. The
+    /// entry routes under [`BackendId::Cpu`] — the host coordinates the
+    /// fan-out — with its prior priced at the plan's slowest shard.
+    pub fn register_sharded(
+        &self,
+        name: &str,
+        a: Csr<f32>,
+        nshards: usize,
+    ) -> Result<Arc<MatrixEntry>> {
+        if a.nrows() != a.ncols() {
+            bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
+        }
+        if nshards == 0 {
+            bail!("sharded registration needs at least one shard");
+        }
+        let available: Vec<BackendId> = self.backends.iter().map(|b| b.id()).collect();
+        let plan = planner::plan_sharded(&a, nshards, &available);
+        // shard kernels never take the padded export (PJRT shard
+        // placement is a ROADMAP follow-up), so the build skips
+        // materializing exports
+        let built = build_execution(&plan, a, self.pool.clone(), false);
+        let binding = bind_sharded(&self.backends, &built, &plan)?;
+        let prior = plan.cost(BackendId::Cpu).unwrap_or(f64::INFINITY);
+        let entry = Arc::new(MatrixEntry {
+            name: name.to_string(),
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
+            nrows: plan.stats().nrows,
+            ncols: plan.stats().ncols,
+            nnz: plan.stats().nnz,
+            kernel_name: plan.kernel_label(),
+            routing: RoutingTable::new(vec![(BackendId::Cpu, prior)]),
+            plan,
+            bindings: vec![(BackendId::Cpu, binding)],
+        });
+        self.entries
+            .write()
+            .unwrap()
+            .insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
     /// Look up a registered matrix.
     pub fn get(&self, name: &str) -> Result<Arc<MatrixEntry>> {
         self.entries
@@ -535,6 +590,44 @@ mod tests {
                 assert!((u - v).abs() < 1e-4 * v.abs().max(1.0), "{u} vs {v}");
             }
         }
+    }
+
+    #[test]
+    fn sharded_registration_fans_out_across_backends() {
+        use crate::coordinator::backend::SellBackend;
+        let pool = Arc::new(ThreadPool::new(2));
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+            Arc::new(SellBackend::new(pool.clone())),
+        ];
+        let reg = MatrixRegistry::with_backends(pool, backends);
+        let a = gen::grid2d_5pt::<f32>(64, 64);
+        let e = reg.register_sharded("grid", a.clone(), 4).unwrap();
+        assert!(e.plan().is_sharded());
+        assert!(e.kernel_name().starts_with("sharded("), "{}", e.kernel_name());
+        // the ensemble is one CPU-keyed binding, not a per-backend map
+        assert!(e.supports(BackendId::Cpu) && !e.supports(BackendId::Sell));
+        assert_eq!(e.route(None), BackendId::Cpu);
+        let d = e.describe();
+        assert!(d.contains("shard0→cpu[") && d.contains("shard1→sell["), "{d}");
+        let prior = e.routing().estimate(BackendId::Cpu).unwrap();
+        assert!(prior.is_finite() && prior > 0.0);
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 3 + 1) % 7) as f32 - 3.0).collect();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_registration_validates_inputs() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        assert!(reg.register_sharded("z", gen::grid2d_5pt::<f32>(8, 8), 0).is_err());
+        let rect = Csr::<f32>::from_parts(2, 3, vec![0, 1, 2], vec![0, 2], vec![1.0, 2.0]);
+        assert!(reg.register_sharded("r", rect, 2).is_err());
     }
 
     #[test]

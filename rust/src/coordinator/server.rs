@@ -28,7 +28,7 @@
 //! [`ExecutionBinding`]: crate::coordinator::backend::ExecutionBinding
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -50,6 +50,14 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Max queueing delay before a partial batch dispatches.
     pub max_delay: Duration,
+    /// Bound on admitted-but-unanswered requests for the backpressure
+    /// submit path ([`Server::try_submit`]): once this many requests
+    /// are in flight, further try-submits are rejected with
+    /// [`SubmitError::QueueFull`] instead of growing the queue without
+    /// limit. The unbounded [`Server::submit`] path ignores the bound
+    /// (in-process callers pace themselves) but still counts against
+    /// it, so mixed traffic sees one consistent gauge.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -57,9 +65,36 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 8,
             max_delay: Duration::from_micros(200),
+            queue_depth: 1024,
         }
     }
 }
+
+/// Why a bounded submit ([`Server::try_submit`]) was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// `depth` requests are already admitted and unanswered —
+    /// backpressure: retry later or shed the request.
+    QueueFull {
+        /// The configured [`ServerConfig::queue_depth`] that was hit.
+        depth: usize,
+    },
+    /// The server's leader is gone (shut down).
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth } => {
+                write!(f, "submit queue full ({depth} requests in flight)")
+            }
+            SubmitError::Closed => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 enum LeaderMsg {
     Submit(Request, Sender<Response>),
@@ -77,6 +112,13 @@ pub struct Server {
     submit_tx: Sender<LeaderMsg>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Admitted-but-unanswered request count. Incremented at submit,
+    /// decremented by `respond` just before each response goes out. A
+    /// worker that panics mid-batch drops its responders without
+    /// running `respond`, leaking those slots — acceptable for a
+    /// crashed-worker state (see ROADMAP).
+    inflight: Arc<AtomicUsize>,
+    queue_depth: usize,
     leader: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -85,6 +127,7 @@ impl Server {
     /// Start the leader and one worker per registered backend.
     pub fn start(registry: Arc<MatrixRegistry>, config: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(AtomicUsize::new(0));
         let (submit_tx, submit_rx) = mpsc::channel::<LeaderMsg>();
 
         let mut worker_txs: HashMap<BackendId, Sender<Work>> = HashMap::new();
@@ -98,21 +141,24 @@ impl Server {
             worker_txs.insert(id, tx);
             let reg = registry.clone();
             let met = metrics.clone();
+            let inf = inflight.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("csrk-worker-{id:?}"))
-                    .spawn(move || backend_worker(rx, reg, met, id))
+                    .spawn(move || backend_worker(rx, reg, met, inf, id))
                     .expect("spawn backend worker"),
             );
         }
 
+        let queue_depth = config.queue_depth;
         let leader = {
             let reg = registry.clone();
             let met = metrics.clone();
+            let inf = inflight.clone();
             std::thread::Builder::new()
                 .name("csrk-leader".into())
                 .spawn(move || {
-                    leader_loop(submit_rx, worker_txs, reg, met, config);
+                    leader_loop(submit_rx, worker_txs, reg, met, inf, config);
                 })
                 .expect("spawn leader")
         };
@@ -122,6 +168,8 @@ impl Server {
             submit_tx,
             metrics,
             next_id: AtomicU64::new(1),
+            inflight,
+            queue_depth,
             leader: Some(leader),
             workers,
         }
@@ -137,10 +185,18 @@ impl Server {
         &self.metrics
     }
 
+    /// Admitted-but-unanswered request count — the gauge the bounded
+    /// [`Server::try_submit`] path checks against
+    /// [`ServerConfig::queue_depth`].
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
     /// Submit asynchronously; the response arrives on the returned
     /// channel. Returns the assigned request id. Routing follows the
     /// matrix's routing table; use [`Server::submit_on`] to pin a
-    /// backend.
+    /// backend. Admission is unbounded — external traffic should come
+    /// through [`Server::try_submit`] instead.
     pub fn submit(&self, matrix: &str, x: Vec<f32>) -> (u64, Receiver<Response>) {
         self.submit_on(matrix, x, None)
     }
@@ -154,27 +210,82 @@ impl Server {
         x: Vec<f32>,
         device: Option<BackendId>,
     ) -> (u64, Receiver<Response>) {
+        // unbounded admission, but the slot still counts against the
+        // gauge so bounded submitters see mixed traffic
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+        self.enqueue(matrix, x, device).expect("leader alive")
+    }
+
+    /// Bounded submit: admitted only while fewer than
+    /// [`ServerConfig::queue_depth`] requests are in flight, otherwise
+    /// rejected immediately with [`SubmitError::QueueFull`] —
+    /// backpressure for sustained external load.
+    pub fn try_submit(
+        &self,
+        matrix: &str,
+        x: Vec<f32>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        self.try_submit_on(matrix, x, None)
+    }
+
+    /// [`Server::try_submit`] with an explicit backend override.
+    pub fn try_submit_on(
+        &self,
+        matrix: &str,
+        x: Vec<f32>,
+        device: Option<BackendId>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.queue_depth {
+            // exact bound: return the slot this add claimed before
+            // anything treats the request as admitted
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::QueueFull { depth: self.queue_depth });
+        }
+        self.enqueue(matrix, x, device)
+    }
+
+    /// Hand one admitted request to the leader. The caller has already
+    /// claimed an inflight slot; a failed hand-off returns it.
+    fn enqueue(
+        &self,
+        matrix: &str,
+        x: Vec<f32>,
+        device: Option<BackendId>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        self.submit_tx
-            .send(LeaderMsg::Submit(
-                Request { id, matrix: matrix.to_string(), x, device },
-                tx,
-            ))
-            .expect("leader alive");
-        (id, rx)
+        let msg = LeaderMsg::Submit(Request { id, matrix: matrix.to_string(), x, device }, tx);
+        if self.submit_tx.send(msg).is_err() {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::Closed);
+        }
+        Ok((id, rx))
     }
 
-    /// Submit and wait.
+    /// Submit and wait. Never panics: if the responder is dropped
+    /// without a reply (a worker died mid-batch), the returned
+    /// [`Response`] carries the error.
     pub fn call(&self, matrix: &str, x: Vec<f32>) -> Response {
-        let (_, rx) = self.submit(matrix, x);
-        rx.recv().expect("response")
+        self.call_on(matrix, x, None)
     }
 
-    /// Submit with a backend override and wait.
+    /// Submit with a backend override and wait. Like [`Server::call`],
+    /// a dropped responder becomes an error `Response`, not a panic.
     pub fn call_on(&self, matrix: &str, x: Vec<f32>, device: Option<BackendId>) -> Response {
-        let (_, rx) = self.submit_on(matrix, x, device);
-        rx.recv().expect("response")
+        let (id, rx) = self.submit_on(matrix, x, device);
+        match rx.recv() {
+            Ok(resp) => resp,
+            // the responder was dropped without a reply — e.g. a worker
+            // panicked mid-batch. Surface a structured error instead of
+            // panicking the client.
+            Err(_) => Response {
+                id,
+                result: Err("response channel closed: worker failed before replying".into()),
+                device: device.unwrap_or(BackendId::Cpu),
+                latency: Duration::ZERO,
+            },
+        }
     }
 
     /// Stop the service, draining queued work.
@@ -194,6 +305,7 @@ fn leader_loop(
     worker_txs: HashMap<BackendId, Sender<Work>>,
     registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
     config: ServerConfig,
 ) {
     let mut batcher = DynamicBatcher::new(config.max_batch, config.max_delay);
@@ -220,21 +332,33 @@ fn leader_loop(
                 let msg = err.to_string();
                 let nominal = batch.device.unwrap_or(BackendId::Cpu);
                 for (member, tx) in batch.requests.into_iter().zip(resp) {
-                    respond(member, tx, Err(msg.clone()), &metrics, nominal, 0.0);
+                    respond(member, tx, Err(msg.clone()), &metrics, &inflight, nominal, 0.0);
                 }
                 return;
             }
         };
         match worker_txs.get(&device) {
             Some(tx) => {
-                let _ = tx.send(Work { batch, resp });
+                if let Err(send_err) = tx.send(Work { batch, resp }) {
+                    // The worker hung up (panicked or exited). The
+                    // unsent Work comes back inside the SendError —
+                    // recover it and answer every member with an error.
+                    // Silently dropping it would drop the responders
+                    // too, turning each client's recv into a channel
+                    // error instead of a served error Response.
+                    let Work { batch, resp } = send_err.0;
+                    let msg = format!("{device:?} worker unavailable");
+                    for (member, tx) in batch.requests.into_iter().zip(resp) {
+                        respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
+                    }
+                }
             }
             None => {
                 // a pinned batch for an id no registered backend claims:
                 // answer here, loudly, per request
                 let msg = format!("no {device:?} backend registered");
                 for (member, tx) in batch.requests.into_iter().zip(resp) {
-                    respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
+                    respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
                 }
             }
         }
@@ -247,6 +371,14 @@ fn leader_loop(
             Ok(LeaderMsg::Submit(req, tx)) => {
                 responders.insert(req.id, tx);
                 if let Some(batch) = batcher.push(req) {
+                    route(batch, &mut responders);
+                }
+                // Deadline check on the message path too: sustained
+                // traffic can keep the channel non-empty so the
+                // Timeout arm below never runs, and a partial batch
+                // for a quiet key would starve far past max_delay
+                // waiting for a size-cap release that never comes.
+                for batch in batcher.flush_expired() {
                     route(batch, &mut responders);
                 }
             }
@@ -280,6 +412,7 @@ fn backend_worker(
     rx: Receiver<Work>,
     registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
     device: BackendId,
 ) {
     while let Ok(work) = rx.recv() {
@@ -288,7 +421,7 @@ fn backend_worker(
             Err(e) => {
                 let msg = e.to_string();
                 for (member, tx) in work.batch.requests.into_iter().zip(work.resp) {
-                    respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
+                    respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
                 }
                 continue;
             }
@@ -304,7 +437,7 @@ fn backend_worker(
                 valid.push((member, tx));
             } else {
                 let msg = format!("x length {} != ncols {}", member.0.x.len(), entry.ncols);
-                respond(member, tx, Err(msg), &metrics, device, 0.0);
+                respond(member, tx, Err(msg), &metrics, &inflight, device, 0.0);
             }
         }
         let xs: Vec<&[f32]> = valid.iter().map(|((r, _), _)| r.x.as_slice()).collect();
@@ -325,30 +458,35 @@ fn backend_worker(
                     entry.correct_route(device, ewma);
                 }
                 for (y, (member, tx)) in ys.into_iter().zip(valid) {
-                    respond(member, tx, Ok(y), &metrics, device, entry.flops());
+                    respond(member, tx, Ok(y), &metrics, &inflight, device, entry.flops());
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
                 for (member, tx) in valid {
-                    respond(member, tx, Err(msg.clone()), &metrics, device, 0.0);
+                    respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
                 }
             }
         }
     }
 }
 
-/// Record metrics for one served request and send its response.
+/// Record metrics for one served request, release its inflight slot,
+/// and send its response. The slot is released *before* the send so a
+/// client that has received its response always observes the freed
+/// capacity in `Server::inflight` / `try_submit`.
 fn respond(
     (req, enqueued): (Request, Instant),
     tx: Sender<Response>,
     result: Result<Vec<f32>, String>,
     metrics: &Metrics,
+    inflight: &AtomicUsize,
     device: BackendId,
     flops: f64,
 ) {
     let latency = enqueued.elapsed();
     metrics.record(latency, if result.is_ok() { flops } else { 0.0 }, result.is_ok());
+    inflight.fetch_sub(1, Ordering::AcqRel);
     let _ = tx.send(Response { id: req.id, result, device, latency });
 }
 
@@ -369,6 +507,7 @@ mod tests {
             ServerConfig {
                 max_batch: 4,
                 max_delay: Duration::from_micros(100),
+                ..ServerConfig::default()
             },
         )
     }
@@ -531,6 +670,176 @@ mod tests {
         let (req, _, errors) = server.metrics().counts();
         assert_eq!(req, 4);
         assert_eq!(errors, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn partial_batch_dispatches_at_deadline_under_sustained_traffic() {
+        // Regression: the leader used to check batch deadlines only in
+        // the recv-*timeout* arm. Sustained traffic keeps the submit
+        // channel non-empty, so that arm never ran and a partial batch
+        // for a quiet key starved far past max_delay waiting for a
+        // size-cap release that never came.
+        let pool = Arc::new(ThreadPool::new(2));
+        let registry = Arc::new(MatrixRegistry::new(pool, None));
+        registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        let server = Server::start(
+            registry,
+            ServerConfig {
+                max_batch: 64,
+                max_delay: Duration::from_millis(25),
+                ..ServerConfig::default()
+            },
+        );
+        // the victim: a single unpinned request. Its batching key
+        // ("grid", None) never reaches max_batch, so only the deadline
+        // can release it.
+        let t0 = Instant::now();
+        let (_, victim) = server.submit("grid", vec![1.0; 256]);
+        std::thread::scope(|s| {
+            // hammer a *different* key (pinned Cpu) from four producers
+            // so the leader's channel stays non-empty while the victim
+            // waits; the malformed empty vectors are answered with
+            // per-request errors and their receivers dropped.
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50_000 {
+                        let _ = server.submit_on("grid", Vec::new(), Some(BackendId::Cpu));
+                    }
+                });
+            }
+            let resp = victim.recv().expect("victim must be answered");
+            let waited = t0.elapsed();
+            assert!(resp.result.is_ok(), "{:?}", resp.result);
+            assert!(
+                waited < Duration::from_millis(100),
+                "partial batch starved for {waited:?} under sustained traffic (max_delay 25ms)"
+            );
+        });
+        server.shutdown();
+    }
+
+    /// A backend whose bindings panic on dispatch — stands in for a
+    /// worker crashing mid-batch.
+    struct PanicBackend;
+
+    struct PanicBinding {
+        nrows: usize,
+        ncols: usize,
+    }
+
+    impl Backend for PanicBackend {
+        fn id(&self) -> BackendId {
+            BackendId::Pjrt
+        }
+        fn describe(&self) -> String {
+            "panic-backend (test)".into()
+        }
+        fn supports_plan(&self, _plan: &crate::tuning::planner::FormatPlan) -> bool {
+            true
+        }
+        fn bind(
+            &self,
+            built: &crate::kernels::BuiltExecution<f32>,
+            _plan: &crate::tuning::planner::FormatPlan,
+        ) -> anyhow::Result<Box<dyn crate::coordinator::backend::ExecutionBinding>> {
+            Ok(Box::new(PanicBinding { nrows: built.exec.nrows(), ncols: built.exec.ncols() }))
+        }
+    }
+
+    impl crate::coordinator::backend::ExecutionBinding for PanicBinding {
+        fn backend(&self) -> BackendId {
+            BackendId::Pjrt
+        }
+        fn describe(&self) -> String {
+            format!("panic[{}x{}]", self.nrows, self.ncols)
+        }
+        fn spmv(&self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            panic!("injected worker failure (test)");
+        }
+        fn spmv_multi(&self, _xs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+            panic!("injected worker failure (test)");
+        }
+    }
+
+    #[test]
+    fn dead_worker_yields_error_responses_not_client_panics() {
+        // Regression: `let _ = tx.send(Work { .. })` silently dropped a
+        // batch (and its responders) when a worker's channel was gone,
+        // and `call` then panicked on `rx.recv().expect(..)`. Both
+        // halves must instead surface structured error Responses.
+        use crate::coordinator::backend::CpuBackend;
+        let pool = Arc::new(ThreadPool::new(2));
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+            Arc::new(PanicBackend),
+        ];
+        let registry = Arc::new(MatrixRegistry::with_backends(pool, backends));
+        registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        let server = Server::start(
+            registry,
+            ServerConfig {
+                max_batch: 1,
+                max_delay: Duration::from_micros(100),
+                ..ServerConfig::default()
+            },
+        );
+        // first pinned call reaches the worker, which panics mid-batch:
+        // the responder is dropped without a reply and `call_on` must
+        // synthesize an error Response instead of panicking the client
+        let r1 = server.call_on("grid", vec![1.0; 256], Some(BackendId::Pjrt));
+        let e1 = r1.result.unwrap_err();
+        assert!(e1.contains("worker failed"), "{e1}");
+        // give the dead worker's thread time to unwind fully so its
+        // receiver is dropped and the leader's send observably fails
+        std::thread::sleep(Duration::from_millis(50));
+        let r2 = server.call_on("grid", vec![1.0; 256], Some(BackendId::Pjrt));
+        let e2 = r2.result.unwrap_err();
+        assert!(e2.contains("worker unavailable"), "{e2}");
+        assert_eq!(r2.device, BackendId::Pjrt);
+        // the rest of the service is unaffected: traffic still serves
+        // on the surviving Cpu worker
+        let r3 = server.call_on("grid", vec![1.0; 256], Some(BackendId::Cpu));
+        assert!(r3.result.is_ok(), "{:?}", r3.result);
+        assert_eq!(r3.device, BackendId::Cpu);
+        server.shutdown();
+    }
+
+    #[test]
+    fn try_submit_applies_backpressure_at_queue_depth() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let registry = Arc::new(MatrixRegistry::new(pool, None));
+        registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        let server = Server::start(
+            registry,
+            ServerConfig {
+                // batch cap high and delay long enough that the four
+                // admitted requests are still in flight at the fifth
+                max_batch: 1000,
+                max_delay: Duration::from_millis(20),
+                queue_depth: 4,
+            },
+        );
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            held.push(server.try_submit("grid", vec![1.0; 256]).expect("under depth").1);
+        }
+        let rejected = server.try_submit("grid", vec![1.0; 256]);
+        match rejected {
+            Err(SubmitError::QueueFull { depth }) => {
+                assert_eq!(depth, 4);
+                assert!(SubmitError::QueueFull { depth }.to_string().contains("full"));
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        for rx in held {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        // slots are released *before* responses go out, so a client
+        // that has its responses always sees the freed capacity
+        assert_eq!(server.inflight(), 0);
+        let again = server.try_submit("grid", vec![1.0; 256]).expect("capacity freed");
+        assert!(again.1.recv().unwrap().result.is_ok());
         server.shutdown();
     }
 }

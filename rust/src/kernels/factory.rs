@@ -15,6 +15,13 @@
 //!   over the square body graph, then composed against the split map
 //!   so the body kernel's rows scatter straight to original rows),
 //!   build each part's kernel, and compose them.
+//! * [`FormatPlan::Sharded`] — cut the matrix into N contiguous
+//!   nnz-balanced row shards (`sparse::split::split_n_by_rows`, the
+//!   same boundary rule the planner priced), build each shard's
+//!   bit-exact kernel in identity order, and compose them with plain
+//!   row scatter maps. The bind stage (`coordinator::backend`) then
+//!   re-binds individual shards onto their placed backends for the
+//!   concurrent fan-out.
 //!
 //! The build also produces the **per-part padded exports** the bind
 //! stage feeds to accelerator backends (`coordinator::backend`): one
@@ -41,7 +48,7 @@ use super::composite::{CompositeExec, CompositePart};
 use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SellCsKernel, SpMv};
 use crate::reorder::bandk;
 use crate::sparse::csrk::PaddedCsr;
-use crate::sparse::{split_by_row_nnz, Csr, Csr5, CsrK, Scalar, SellCs, SplitCsr};
+use crate::sparse::{split_by_row_nnz, split_n_by_rows, Csr, Csr5, CsrK, Scalar, SellCs, SplitCsr};
 use crate::tuning::planner::{FormatPlan, PlannedKernel};
 use crate::util::ThreadPool;
 
@@ -160,6 +167,33 @@ pub fn build_execution<T: Scalar>(
                 exports: vec![body_export, None],
             }
         }
+        FormatPlan::Sharded { shards, .. } => {
+            let (nrows, ncols) = (a.nrows(), a.ncols());
+            let cut = split_n_by_rows(&a, shards.len());
+            drop(a);
+            let parts = cut
+                .shards
+                .into_iter()
+                .zip(cut.shard_rows)
+                .zip(shards)
+                .map(|((csr, rows), sp)| {
+                    debug_assert_eq!(
+                        csr.nrows(),
+                        sp.rows,
+                        "plan and build disagree on shard bounds"
+                    );
+                    CompositePart::new(
+                        build_part_kernel(&sp.kernel, csr, pool.clone()),
+                        None,
+                        Some(rows),
+                    )
+                })
+                .collect();
+            BuiltExecution {
+                exec: Arc::new(CompositeExec::new(parts, nrows, ncols)),
+                exports: vec![None; shards.len()],
+            }
+        }
     }
 }
 
@@ -250,6 +284,32 @@ mod tests {
         // the body rows all fit the split threshold, which the width
         // covers (clamped): no overflow entries for this fixture
         assert!(body.overflow.is_empty(), "{} overflow rows", body.overflow.len());
+    }
+
+    #[test]
+    fn sharded_build_composes_shards_in_identity_order() {
+        let pool = Arc::new(ThreadPool::new(3));
+        for a in [
+            gen::grid2d_5pt::<f64>(32, 32),           // uniform → sellcs shards
+            gen::power_law::<f64>(600, 8, 1.0, 0xA1), // heavy tail → parallel-csr shards
+        ] {
+            let nshards = 4;
+            let plan = planner::plan_sharded(
+                &a,
+                nshards,
+                &[planner::DeviceKind::Cpu, planner::DeviceKind::Sell],
+            );
+            let b = build_execution(&plan, a.clone(), pool.clone(), false);
+            assert_eq!(b.exec.num_parts(), nshards);
+            assert_eq!(b.exports.len(), nshards, "one (empty) export slot per shard");
+            assert!(b.exports.iter().all(|e| e.is_none()));
+            for part in b.exec.parts() {
+                assert!(part.in_perm().is_none(), "shards keep identity order");
+                assert!(part.rows().is_some(), "shards scatter through row maps");
+            }
+            assert_kernel_matches(&a, b.exec.as_ref(), 0.0);
+            assert_spmm_matches(b.exec.as_ref(), 4, 1e-12);
+        }
     }
 
     #[test]

@@ -20,8 +20,9 @@
 //! * [`gen`] — synthetic matrix generators per problem class, the
 //!   substitute for the SuiteSparse download (offline environment).
 //! * [`suite`] — the paper's Table 2 sixteen-matrix test suite, scaled.
-//! * [`split`] — row-nnz-threshold partitioning (body + hub remainder),
-//!   the substrate for the planner's hybrid per-part execution plans.
+//! * [`split`] — row partitioning: row-nnz-threshold (body + hub
+//!   remainder) for hybrid plans, and N-way nnz-balanced contiguous
+//!   sharding for multi-backend scale-out plans.
 
 pub mod bcsr;
 pub mod coo;
@@ -42,7 +43,9 @@ pub use csr5::Csr5;
 pub use csrk::CsrK;
 pub use ell::Ell;
 pub use sellcs::SellCs;
-pub use split::{split_by_row_nnz, RowPart, SplitCsr};
+pub use split::{
+    nnz_balanced_bounds, split_by_row_nnz, split_n_by_rows, RowPart, ShardedCsr, SplitCsr,
+};
 pub use suite::{SuiteEntry, SuiteScale};
 
 /// Scalar element type bound used across formats and kernels.

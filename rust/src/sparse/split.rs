@@ -1,32 +1,45 @@
-//! Row-threshold matrix splitting — the substrate for hybrid (per-part)
+//! Row partitioning — the substrate for per-part (hybrid and sharded)
 //! execution plans.
 //!
-//! The §6 regularity criterion is all-or-nothing: one hub rail in an
-//! otherwise banded circuit matrix pushes the row-nnz variance past the
-//! threshold and (before hybrid plans) forfeited the Band-k + CSR-2
-//! fast path on 99 % of the rows. The standard remedy (Fukaya et al.'s
-//! partially-diagonal splitting; the hybrid ELL + COO lineage) is to
-//! partition the matrix by a row-length cutoff into a structured
-//! **body** and a skewed **remainder** and run each part with the
-//! kernel built for its structure.
+//! Two partitioning axes live here, both producing compact CSR parts
+//! that share the source column space (so every part reads the same
+//! `x` with no column remapping) plus row-index scatter maps the
+//! composite kernel merges through (`kernels::composite`):
 //!
-//! [`split_by_row_nnz`] produces that partition as two compact CSR
-//! matrices sharing the source column space (so the two parts read the
-//! same `x` with no column remapping) plus the row-index maps both
-//! ways: part-local → original ([`SplitCsr::body_rows`] /
-//! [`SplitCsr::remainder_rows`]) and original → (part, local)
-//! ([`SplitCsr::locate`]). Every source row lands in exactly one part
-//! and `body.nnz() + remainder.nnz() == source.nnz()` — the round-trip
-//! invariant the integration tests pin down.
+//! 1. **By row length** ([`split_by_row_nnz`]): the §6 regularity
+//!    criterion is all-or-nothing — one hub rail in an otherwise banded
+//!    circuit matrix pushes the row-nnz variance past the threshold and
+//!    (before hybrid plans) forfeited the Band-k + CSR-2 fast path on
+//!    99 % of the rows. The standard remedy (Fukaya et al.'s
+//!    partially-diagonal splitting; the hybrid ELL + COO lineage) is to
+//!    partition by a row-length cutoff into a structured **body** and a
+//!    skewed **remainder** and run each part with the kernel built for
+//!    its structure. Maps run both ways: part-local → original
+//!    ([`SplitCsr::body_rows`] / [`SplitCsr::remainder_rows`]) and
+//!    original → (part, local) ([`SplitCsr::locate`]). Every source row
+//!    lands in exactly one part and `body.nnz() + remainder.nnz() ==
+//!    source.nnz()` — the round-trip invariant the integration tests
+//!    pin down.
 //!
-//! Reordering support: Band-k needs a square operand, so
+//! 2. **By position, N ways** ([`split_n_by_rows`]): the scale-out
+//!    topology. N contiguous row ranges with nnz-balanced boundaries
+//!    ([`nnz_balanced_bounds`]), one shard per range, so the planner can
+//!    place each shard on its own backend and run them concurrently —
+//!    the heterogeneous decomposition of Liu & Vinter's segmented-sum
+//!    split, with CMRS-style scatter maps as the whole merge step.
+//!    Boundaries are a pure function of the row-nnz profile, so
+//!    plan-time pricing and build-time construction agree on shard
+//!    shapes without exchanging anything beyond the shard count.
+//!
+//! Reordering support (body/remainder splits only — shards stay in
+//! source order to keep per-row accumulation bit-identical to the
+//! serial reference): Band-k needs a square operand, so
 //! [`SplitCsr::body_square`] re-inflates the body to the source shape
 //! (remainder rows empty) for the ordering pass, and
 //! [`SplitCsr::permuted_body`] applies the resulting symmetric
 //! permutation back to the *compact* body — rows resorted into the
 //! band order, columns relabeled — returning the row map already
-//! composed with the permutation. The composite kernel scatters each
-//! part's result through these maps (`kernels::composite`).
+//! composed with the permutation.
 
 use super::{Coo, Csr, Scalar};
 
@@ -172,6 +185,96 @@ impl<T: Scalar> SplitCsr<T> {
     }
 }
 
+/// A matrix partitioned into N contiguous, nnz-balanced row shards.
+///
+/// Shard `k` covers source rows `bounds[k]..bounds[k + 1]`. Every shard
+/// is a compact CSR keeping the source column space, so one `x` feeds
+/// all shards verbatim and results merge by pure row scatter.
+#[derive(Debug, Clone)]
+pub struct ShardedCsr<T> {
+    /// Rows of the source matrix.
+    pub source_rows: usize,
+    /// Columns of the source matrix (and of every shard).
+    pub source_cols: usize,
+    /// `nshards + 1` shard boundaries, `bounds[0] = 0`,
+    /// `bounds[nshards] = source_rows`, non-decreasing.
+    pub bounds: Vec<usize>,
+    /// The shards, in source row order.
+    pub shards: Vec<Csr<T>>,
+    /// Per shard: shard-local row → source row (ascending; contiguous).
+    pub shard_rows: Vec<Vec<u32>>,
+}
+
+/// The shared boundary rule for N-way sharding: `nshards + 1`
+/// non-decreasing cut points over `row_nnz.len()` rows such that shard
+/// `k` holds roughly `1/nshards` of the total nonzeros.
+///
+/// Cut `k` is the smallest row index whose nnz prefix sum reaches
+/// `k/nshards` of the total, then clamped so every shard keeps at least
+/// one row whenever `rows ≥ nshards` (a single giant row cannot starve
+/// its neighbours into emptiness). Deterministic and computable from the
+/// row-nnz profile alone, so the planner prices exactly the shards the
+/// factory later builds.
+pub fn nnz_balanced_bounds(row_nnz: &[usize], nshards: usize) -> Vec<usize> {
+    assert!(nshards >= 1, "need at least one shard");
+    let n = row_nnz.len();
+    let mut prefix = Vec::with_capacity(n + 1);
+    prefix.push(0usize);
+    for &r in row_nnz {
+        prefix.push(prefix.last().unwrap() + r);
+    }
+    let total = *prefix.last().unwrap();
+    let mut bounds = Vec::with_capacity(nshards + 1);
+    bounds.push(0usize);
+    for k in 1..nshards {
+        let target =
+            ((total as u128 * k as u128 + nshards as u128 - 1) / nshards as u128) as usize;
+        let mut b = prefix.partition_point(|&p| p < target);
+        if n >= nshards {
+            // keep ≥ 1 row per shard: at least k rows consumed so far,
+            // at least (nshards - k) rows left for the shards after us
+            b = b.clamp(k, n - (nshards - k));
+        } else {
+            b = b.min(n);
+        }
+        b = b.max(*bounds.last().unwrap());
+        bounds.push(b);
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// Partition `a` into `nshards` contiguous row shards at the
+/// [`nnz_balanced_bounds`] cut points.
+pub fn split_n_by_rows<T: Scalar>(a: &Csr<T>, nshards: usize) -> ShardedCsr<T> {
+    let n = a.nrows();
+    let row_nnz: Vec<usize> = (0..n).map(|i| a.row_nnz(i)).collect();
+    let bounds = nnz_balanced_bounds(&row_nnz, nshards);
+    let mut shards = Vec::with_capacity(nshards);
+    let mut shard_rows = Vec::with_capacity(nshards);
+    for k in 0..nshards {
+        let (lo, hi) = (bounds[k], bounds[k + 1]);
+        let mut ptr = vec![0u32];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in lo..hi {
+            let (rc, rv) = a.row(i);
+            cols.extend_from_slice(rc);
+            vals.extend_from_slice(rv);
+            ptr.push(cols.len() as u32);
+        }
+        shards.push(Csr::from_parts(hi - lo, a.ncols(), ptr, cols, vals));
+        shard_rows.push((lo as u32..hi as u32).collect());
+    }
+    ShardedCsr {
+        source_rows: n,
+        source_cols: a.ncols(),
+        bounds,
+        shards,
+        shard_rows,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,6 +408,103 @@ mod tests {
                 py[l],
                 y_ref[o as usize]
             );
+        }
+    }
+
+    #[test]
+    fn n_way_split_partitions_rows_and_nnz() {
+        let a = gen::power_law::<f64>(512, 6, 1.1, 0xBEEF);
+        let nshards = 4;
+        let s = split_n_by_rows(&a, nshards);
+        assert_eq!(s.shards.len(), nshards);
+        assert_eq!(s.bounds.len(), nshards + 1);
+        assert_eq!(s.bounds[0], 0);
+        assert_eq!(s.bounds[nshards], a.nrows());
+        // contiguous partition: rows and nnz both sum back to the source
+        assert_eq!(s.shards.iter().map(|p| p.nrows()).sum::<usize>(), a.nrows());
+        assert_eq!(s.shards.iter().map(|p| p.nnz()).sum::<usize>(), a.nnz());
+        for k in 0..nshards {
+            assert_eq!(s.shard_rows[k].len(), s.shards[k].nrows());
+            for (l, &o) in s.shard_rows[k].iter().enumerate() {
+                assert_eq!(o as usize, s.bounds[k] + l, "maps are contiguous ranges");
+                let (ac, av) = a.row(o as usize);
+                let (sc, sv) = s.shards[k].row(l);
+                assert_eq!(ac, sc, "row {o} columns survive the shard split");
+                assert_eq!(av, sv, "row {o} values survive the shard split");
+            }
+        }
+    }
+
+    #[test]
+    fn n_way_split_balances_nnz() {
+        let a = gen::grid2d_5pt::<f64>(40, 40);
+        let nshards = 5;
+        let s = split_n_by_rows(&a, nshards);
+        let target = a.nnz() as f64 / nshards as f64;
+        for (k, p) in s.shards.iter().enumerate() {
+            let ratio = p.nnz() as f64 / target;
+            assert!(
+                (0.8..=1.2).contains(&ratio),
+                "shard {k} holds {} nnz, target {target:.0}",
+                p.nnz()
+            );
+        }
+    }
+
+    #[test]
+    fn n_way_split_spmv_reassembles_reference() {
+        let a = gen::circuit::<f64>(24, 24, 9);
+        let n = a.nrows();
+        let s = split_n_by_rows(&a, 3);
+        let x: Vec<f64> = (0..n).map(|i| ((i * 5 + 2) % 11) as f64 - 5.0).collect();
+        let mut y_ref = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        let mut y = vec![f64::NAN; n];
+        for (p, rows) in s.shards.iter().zip(&s.shard_rows) {
+            let mut py = vec![0.0; p.nrows()];
+            p.spmv_ref(&x, &mut py);
+            for (l, &o) in rows.iter().enumerate() {
+                y[o as usize] = py[l];
+            }
+        }
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "contiguous shards must be bit-identical to the reference"
+            );
+        }
+    }
+
+    #[test]
+    fn n_way_split_degenerate_shapes() {
+        // one shard: identity partition
+        let a = gen::grid2d_5pt::<f64>(6, 6);
+        let one = split_n_by_rows(&a, 1);
+        assert_eq!(one.shards.len(), 1);
+        assert_eq!(one.shards[0].nnz(), a.nnz());
+        assert_eq!(one.bounds, vec![0, a.nrows()]);
+        // more shards than rows: trailing shards are empty, still a partition
+        let tiny = gen::grid2d_5pt::<f64>(2, 2);
+        let s = split_n_by_rows(&tiny, 7);
+        assert_eq!(s.shards.len(), 7);
+        assert_eq!(s.shards.iter().map(|p| p.nrows()).sum::<usize>(), tiny.nrows());
+        assert_eq!(s.shards.iter().map(|p| p.nnz()).sum::<usize>(), tiny.nnz());
+        // empty matrix
+        let e = Coo::<f64>::new(0, 0).to_csr();
+        let se = split_n_by_rows(&e, 3);
+        assert!(se.shards.iter().all(|p| p.nrows() == 0));
+    }
+
+    #[test]
+    fn bounds_give_every_shard_a_row_when_rows_suffice() {
+        // one giant row up front must not starve later shards
+        let row_nnz = [10_000usize, 1, 1, 1, 1, 1, 1, 1];
+        let b = nnz_balanced_bounds(&row_nnz, 4);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[4], 8);
+        for w in b.windows(2) {
+            assert!(w[0] < w[1], "every shard keeps at least one row: {b:?}");
         }
     }
 

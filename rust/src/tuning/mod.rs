@@ -30,7 +30,9 @@
 //!   SELL-C-σ with σ autotuned from the row-length histogram / CSR5),
 //!   the padded PJRT export width, and roofline-style per-device cost
 //!   estimates the server routes with (per-part sums for hybrid
-//!   plans).
+//!   plans); plus the N-way scale-out shape
+//!   ([`planner::plan_sharded`]) that places nnz-balanced row shards
+//!   across backends and prices the ensemble at its slowest shard.
 
 pub mod autotune;
 pub mod cpu;
@@ -41,4 +43,7 @@ pub mod planner;
 pub use heuristic::{
     block_dims, csr3_params, csr3_params_multi, effective_rdensity, Device, TuneParams,
 };
-pub use planner::{DeviceKind, FormatPlan, MatrixStats, PartPlan, PlannedKernel, ReorderPlan};
+pub use planner::{
+    plan_sharded, DeviceKind, FormatPlan, MatrixStats, PartPlan, PlannedKernel, ReorderPlan,
+    ShardPlan,
+};

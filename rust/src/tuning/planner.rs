@@ -73,10 +73,21 @@
 //! each entry's `RoutingTable` (`coordinator::backend`) and are then
 //! corrected online by observed latencies, so they only need to rank
 //! the backends right, not predict wall-clock time.
+//!
+//! # Scale-out: the sharded plan shape
+//!
+//! Beyond the two structure-driven shapes, [`plan_sharded`] builds the
+//! explicit scale-out topology ([`FormatPlan::Sharded`]): N contiguous,
+//! nnz-balanced row shards (`sparse::split::nnz_balanced_bounds`), each
+//! placed on its own backend and executed *concurrently* — so the
+//! ensemble is priced by the **max** of the per-shard rooflines (the
+//! slowest shard), not their sum. Shard kernels are restricted to the
+//! bit-exact pair (parallel CSR, SELL-C-σ — see [`plan_sharded`]) so a
+//! sharded ensemble reproduces the serial reference bit for bit.
 
 use crate::analysis::roofline::{sellcs_bytes, spmv_bytes};
 use crate::gpusim::device::{DeviceSpec, AMPERE_A100};
-use crate::sparse::{Csr, Scalar};
+use crate::sparse::{nnz_balanced_bounds, Csr, Scalar};
 use crate::tuning::cpu::FIXED_SRS;
 use crate::tuning::{csr3_params_multi, Device, TuneParams};
 
@@ -340,6 +351,40 @@ impl PartPlan {
     }
 }
 
+/// One shard of an N-way sharded plan: a contiguous row range in
+/// identity order, the bit-exact kernel built for it, and the backend
+/// the planner placed it on — with that backend's roofline estimate
+/// for this shard alone.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Rows this shard covers (a contiguous source range).
+    pub rows: usize,
+    /// Nonzeros this shard covers.
+    pub nnz: usize,
+    /// Kernel the build stage constructs for this shard.
+    pub kernel: PlannedKernel,
+    /// Backend this shard is placed on (the bind stage falls back to
+    /// CPU if that backend is missing or declines).
+    pub backend: DeviceKind,
+    /// Roofline estimate of this shard on its placed backend, seconds
+    /// per single-vector SpMV.
+    pub cost: f64,
+}
+
+impl ShardPlan {
+    /// One-line shard description for summaries and `describe()`.
+    pub fn summary(&self) -> String {
+        format!(
+            "rows {} nnz {} {}→{:?} {:.1}us",
+            self.rows,
+            self.nnz,
+            self.kernel.label(),
+            self.backend,
+            self.cost * 1e6,
+        )
+    }
+}
+
 /// The complete per-matrix decision the registration path executes.
 ///
 /// `Single` is the one-kernel-covers-everything shape both original
@@ -394,6 +439,22 @@ pub enum FormatPlan {
         /// the host.
         costs: Vec<(DeviceKind, f64)>,
     },
+    /// N-way scale-out: contiguous nnz-balanced row shards, each placed
+    /// on its own backend, executed concurrently and merged by pure row
+    /// scatter. Built only by [`plan_sharded`].
+    Sharded {
+        /// Measured structure (of the whole matrix).
+        stats: MatrixStats,
+        /// Per-shard decisions, in source row order; shard `k` covers
+        /// the rows `nnz_balanced_bounds` cuts for index `k`.
+        shards: Vec<ShardPlan>,
+        /// Cost estimate of the ensemble. One [`DeviceKind::Cpu`] row —
+        /// the host coordinates the fan-out, so the ensemble routes as
+        /// a CPU-keyed binding — priced at the **max** of the per-shard
+        /// placed-backend rooflines: shards run concurrently, so the
+        /// ensemble finishes with its slowest shard.
+        costs: Vec<(DeviceKind, f64)>,
+    },
 }
 
 impl FormatPlan {
@@ -402,6 +463,7 @@ impl FormatPlan {
         match self {
             FormatPlan::Single { stats, .. } => stats,
             FormatPlan::Hybrid { stats, .. } => stats,
+            FormatPlan::Sharded { stats, .. } => stats,
         }
     }
 
@@ -410,6 +472,7 @@ impl FormatPlan {
         match self {
             FormatPlan::Single { costs, .. } => costs,
             FormatPlan::Hybrid { costs, .. } => costs,
+            FormatPlan::Sharded { costs, .. } => costs,
         }
     }
 
@@ -428,6 +491,9 @@ impl FormatPlan {
         match self {
             FormatPlan::Single { pjrt_width, .. } => *pjrt_width,
             FormatPlan::Hybrid { pjrt_width, .. } => *pjrt_width,
+            // shard kernels never take the padded export (PJRT shard
+            // placement is a ROADMAP follow-up)
+            FormatPlan::Sharded { .. } => None,
         }
     }
 
@@ -438,6 +504,8 @@ impl FormatPlan {
             FormatPlan::Hybrid { body, remainder, .. } => {
                 body.reorder.is_some() || remainder.reorder.is_some()
             }
+            // shards stay in identity order — the bit-for-bit promise
+            FormatPlan::Sharded { .. } => false,
         }
     }
 
@@ -446,24 +514,40 @@ impl FormatPlan {
         matches!(self, FormatPlan::Hybrid { .. })
     }
 
+    /// Is this an N-way scale-out sharding?
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, FormatPlan::Sharded { .. })
+    }
+
     /// Per-part kernel choices, in composite part order: one entry for
-    /// `Single`, `[body, remainder]` for `Hybrid`. Aligned with
-    /// `CompositeExec::parts()` after the build stage — capability
-    /// queries (e.g. `SellBackend::supports_plan`) match on these.
+    /// `Single`, `[body, remainder]` for `Hybrid`, one per shard for
+    /// `Sharded`. Aligned with `CompositeExec::parts()` after the build
+    /// stage — capability queries (e.g. `SellBackend::supports_plan`)
+    /// match on these.
     pub fn planned_kernels(&self) -> Vec<&PlannedKernel> {
         match self {
             FormatPlan::Single { kernel, .. } => vec![kernel],
             FormatPlan::Hybrid { body, remainder, .. } => vec![&body.kernel, &remainder.kernel],
+            FormatPlan::Sharded { shards, .. } => shards.iter().map(|sh| &sh.kernel).collect(),
         }
     }
 
-    /// Short kernel label: the single kernel's, or
-    /// `hybrid(body+remainder)`.
+    /// Short kernel label: the single kernel's, `hybrid(body+remainder)`,
+    /// or `sharded(NxK)` / `sharded(k0+k1+…)` for uniform / mixed shard
+    /// kernels.
     pub fn kernel_label(&self) -> String {
         match self {
             FormatPlan::Single { kernel, .. } => kernel.label().to_string(),
             FormatPlan::Hybrid { body, remainder, .. } => {
                 format!("hybrid({}+{})", body.kernel.label(), remainder.kernel.label())
+            }
+            FormatPlan::Sharded { shards, .. } => {
+                let labels: Vec<&str> = shards.iter().map(|sh| sh.kernel.label()).collect();
+                if labels.windows(2).all(|w| w[0] == w[1]) {
+                    format!("sharded({}x{})", labels.len(), labels.first().unwrap_or(&"empty"))
+                } else {
+                    format!("sharded({})", labels.join("+"))
+                }
             }
         }
     }
@@ -511,6 +595,12 @@ impl FormatPlan {
                 match pjrt_width {
                     Some(w) => s.push_str(&format!(" body-pjrt-width {w}")),
                     None => s.push_str(" no-pjrt"),
+                }
+            }
+            FormatPlan::Sharded { shards, .. } => {
+                s.push_str(&format!("sharded {}-way, cost = slowest shard;", shards.len()));
+                for (k, sh) in shards.iter().enumerate() {
+                    s.push_str(&format!(" shard{k}[{}]", sh.summary()));
                 }
             }
         }
@@ -632,6 +722,88 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
         ));
     }
     FormatPlan::Single { stats, reorder: None, kernel, gpu_params, pjrt_width: None, costs }
+}
+
+/// Plan an N-way scale-out sharding: contiguous nnz-balanced row
+/// shards ([`nnz_balanced_bounds`] — the same boundary rule the build
+/// stage's `split_n_by_rows` applies, so pricing and construction agree
+/// on shard shapes), each placed round-robin over the eligible backends
+/// in `available` and priced on its placed backend's roofline.
+///
+/// **Placement**: CPU is always eligible; the SELL device is eligible
+/// for shards planned as SELL-C-σ (it re-binds them at the device chunk
+/// width); PJRT shard placement needs per-shard padded exports and is
+/// deferred (ROADMAP follow-up). Rotating by shard index puts
+/// consecutive shards on different backends, so with a CPU + Sell
+/// registry the ensemble genuinely exercises both at once.
+///
+/// **Kernel rule (the bit-for-bit promise)**: sharded ensembles must
+/// reproduce the serial reference (`Csr::spmv_ref`) bit for bit, so
+/// only kernels preserving each row's accumulation order over the
+/// original column order qualify — nnz-balanced parallel CSR (rows in
+/// source order, `acc += v·x` per entry) and SELL-C-σ (each row's
+/// entries fill its chunk slots in CSR order; padding contributes
+/// `+0·x[0]` after the real entries). Band-k + CSR-2/3 permute columns
+/// and CSR5's segmented sum reassociates, so neither is offered here,
+/// whatever its throughput.
+///
+/// **Pricing**: shards run concurrently, so the ensemble cost is the
+/// **max** of the per-shard rooflines — the slowest shard — not their
+/// sum. The plan carries a single [`DeviceKind::Cpu`] cost row: the
+/// host coordinates the fan-out, and the ensemble binds and routes as
+/// one CPU-keyed `ExecutionBinding`.
+pub fn plan_sharded<T: Scalar>(
+    a: &Csr<T>,
+    nshards: usize,
+    available: &[DeviceKind],
+) -> FormatPlan {
+    assert!(nshards >= 1, "need at least one shard");
+    let stats = MatrixStats::of(a);
+    let row_nnz: Vec<usize> = (0..a.nrows()).map(|i| a.row_nnz(i)).collect();
+    let bounds = nnz_balanced_bounds(&row_nnz, nshards);
+    let mut shards = Vec::with_capacity(nshards);
+    let mut slowest = 0.0f64;
+    for k in 0..nshards {
+        let slice = &row_nnz[bounds[k]..bounds[k + 1]];
+        let rows = slice.len();
+        let nnz: usize = slice.iter().sum();
+        let kernel = sharded_kernel(slice);
+        let eligible: Vec<DeviceKind> = available
+            .iter()
+            .copied()
+            .filter(|d| match d {
+                DeviceKind::Cpu => true,
+                DeviceKind::Sell => matches!(kernel, PlannedKernel::SellCs { .. }),
+                DeviceKind::Pjrt => false,
+            })
+            .collect();
+        let backend =
+            if eligible.is_empty() { DeviceKind::Cpu } else { eligible[k % eligible.len()] };
+        let cost = match backend {
+            DeviceKind::Sell => sell_device_cost::<T>(slice, rows, stats.ncols),
+            _ => part_cpu_cost::<T>(rows, stats.ncols, nnz),
+        };
+        slowest = slowest.max(cost);
+        shards.push(ShardPlan { rows, nnz, kernel, backend, cost });
+    }
+    let costs = vec![(DeviceKind::Cpu, slowest)];
+    FormatPlan::Sharded { stats, shards, costs }
+}
+
+/// The shard kernel rule: the bit-exact subset of the irregular rail.
+/// Parallel CSR below [`CSR5_MIN_NNZ`] (descriptor machinery costs more
+/// than the skew it fixes) or when no σ window bounds the SELL fill;
+/// SELL-C-σ at the autotuned window otherwise. See [`plan_sharded`] for
+/// why CSR5 and the Band-k formats are excluded.
+fn sharded_kernel(row_nnz: &[usize]) -> PlannedKernel {
+    let nnz: usize = row_nnz.iter().sum();
+    if nnz < CSR5_MIN_NNZ {
+        return PlannedKernel::CsrParallel;
+    }
+    match sell_autotune(row_nnz, SELL_CPU_C) {
+        Some(choice) => PlannedKernel::SellCs { c: SELL_CPU_C, sigma: choice.sigma },
+        None => PlannedKernel::CsrParallel,
+    }
 }
 
 /// The paper's path, §4 heuristics unchanged: Band-k sized by the GPU
@@ -864,8 +1036,11 @@ pub fn cpu_part_cost(
 }
 
 /// Price a whole plan's CPU execution at an explicit streaming
-/// bandwidth: the per-part sum for hybrid plans, the single roofline
-/// otherwise. Element size is 4 bytes — the serving layer binds f32.
+/// bandwidth: the per-part sum for hybrid *and sharded* plans (a plain
+/// CPU binding runs composite parts serially — concurrent shard
+/// fan-out is the `ShardedBinding`'s own max-of-shards pricing, not
+/// this one), the single roofline otherwise. Element size is 4 bytes —
+/// the serving layer binds f32.
 pub fn plan_cpu_cost(plan: &FormatPlan, mem_bw_gbps: f64) -> f64 {
     const ELEM: usize = 4;
     match plan {
@@ -876,6 +1051,10 @@ pub fn plan_cpu_cost(plan: &FormatPlan, mem_bw_gbps: f64) -> f64 {
             cpu_part_cost(body.rows, stats.ncols, body.nnz, ELEM, mem_bw_gbps)
                 + cpu_part_cost(remainder.rows, stats.ncols, remainder.nnz, ELEM, mem_bw_gbps)
         }
+        FormatPlan::Sharded { stats, shards, .. } => shards
+            .iter()
+            .map(|sh| cpu_part_cost(sh.rows, stats.ncols, sh.nnz, ELEM, mem_bw_gbps))
+            .sum(),
     }
 }
 
@@ -1374,5 +1553,115 @@ mod tests {
         let p = plan(&small);
         assert!(!p.is_hybrid());
         assert!(!p.reorders());
+    }
+
+    #[test]
+    fn sharded_plan_alternates_backends_and_prices_the_slowest_shard() {
+        let a = gen::grid2d_5pt::<f32>(64, 64);
+        let nshards = 4;
+        let p = plan_sharded(&a, nshards, &[DeviceKind::Cpu, DeviceKind::Sell]);
+        assert!(p.is_sharded());
+        assert!(!p.is_hybrid());
+        assert!(!p.reorders(), "shards keep identity order");
+        assert_eq!(p.pjrt_width(), None);
+        assert_eq!(p.planned_kernels().len(), nshards);
+        let shards = match &p {
+            FormatPlan::Sharded { shards, .. } => shards,
+            _ => unreachable!(),
+        };
+        // grid shards are large and uniform ⇒ SELL-C-σ everywhere, so
+        // round-robin placement alternates Cpu / Sell
+        for (k, sh) in shards.iter().enumerate() {
+            assert!(
+                matches!(sh.kernel, PlannedKernel::SellCs { c: SELL_CPU_C, .. }),
+                "shard {k} kernel {:?}",
+                sh.kernel
+            );
+            let expect = if k % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Sell };
+            assert_eq!(sh.backend, expect, "shard {k}");
+            assert!(sh.cost > 0.0);
+        }
+        assert!(shards.iter().any(|sh| sh.backend == DeviceKind::Cpu));
+        assert!(shards.iter().any(|sh| sh.backend == DeviceKind::Sell));
+        // rows/nnz agree with the shared boundary rule and partition the matrix
+        assert_eq!(shards.iter().map(|sh| sh.rows).sum::<usize>(), a.nrows());
+        assert_eq!(shards.iter().map(|sh| sh.nnz).sum::<usize>(), a.nnz());
+        // the ensemble cost is the max of the per-shard costs, on one Cpu row
+        let slowest = shards.iter().map(|sh| sh.cost).fold(0.0f64, f64::max);
+        assert_eq!(p.costs().len(), 1);
+        assert!((p.cost(DeviceKind::Cpu).unwrap() - slowest).abs() < 1e-18);
+        // slower than the slowest shard is impossible; the serial sum is more
+        assert!(plan_cpu_cost(&p, CPU_ROOFLINE.mem_bw_gbps) > slowest);
+        // observability strings mention the topology
+        assert_eq!(p.kernel_label(), format!("sharded({nshards}xsellcs)"));
+        assert!(p.summary().contains("sharded 4-way"), "{}", p.summary());
+        assert!(p.summary().contains("shard0["), "{}", p.summary());
+    }
+
+    #[test]
+    fn sharded_plan_without_sell_backend_stays_on_cpu() {
+        let a = gen::grid2d_5pt::<f32>(48, 48);
+        let p = plan_sharded(&a, 3, &[DeviceKind::Cpu]);
+        match &p {
+            FormatPlan::Sharded { shards, .. } => {
+                assert!(shards.iter().all(|sh| sh.backend == DeviceKind::Cpu));
+            }
+            _ => panic!("expected sharded"),
+        }
+        // Pjrt is never offered shard placement (deferred)
+        let p2 = plan_sharded(&a, 3, &[DeviceKind::Cpu, DeviceKind::Pjrt]);
+        match &p2 {
+            FormatPlan::Sharded { shards, .. } => {
+                assert!(shards.iter().all(|sh| sh.backend == DeviceKind::Cpu));
+            }
+            _ => panic!("expected sharded"),
+        }
+    }
+
+    #[test]
+    fn sharded_kernel_rule_is_bit_exact_only() {
+        // heavy-tailed power law: the irregular rail would say CSR5, but
+        // the sharded rule must fall back to parallel CSR instead
+        let a = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
+        assert!(a.nnz() >= CSR5_MIN_NNZ);
+        let row_nnz: Vec<usize> = (0..a.nrows()).map(|i| a.row_nnz(i)).collect();
+        assert!(
+            sell_autotune(&row_nnz, SELL_CPU_C).is_none(),
+            "fixture must defeat the sell window rule"
+        );
+        let p = plan_sharded(&a, 2, &[DeviceKind::Cpu, DeviceKind::Sell]);
+        match &p {
+            FormatPlan::Sharded { shards, .. } => {
+                for sh in shards {
+                    let exact = matches!(
+                        sh.kernel,
+                        PlannedKernel::CsrParallel | PlannedKernel::SellCs { .. }
+                    );
+                    assert!(exact, "only bit-exact kernels may shard, got {:?}", sh.kernel);
+                }
+            }
+            _ => panic!("expected sharded"),
+        }
+        // tiny shards take parallel CSR below the descriptor floor
+        let tiny = gen::grid2d_5pt::<f32>(8, 8);
+        let p = plan_sharded(&tiny, 2, &[DeviceKind::Cpu, DeviceKind::Sell]);
+        match &p {
+            FormatPlan::Sharded { shards, .. } => {
+                assert!(shards.iter().all(|sh| sh.kernel == PlannedKernel::CsrParallel));
+                assert!(shards.iter().all(|sh| sh.backend == DeviceKind::Cpu));
+            }
+            _ => panic!("expected sharded"),
+        }
+    }
+
+    #[test]
+    fn sharded_plan_of_empty_matrix_does_not_panic() {
+        let a = Coo::<f32>::new(0, 0).to_csr();
+        let p = plan_sharded(&a, 3, &[DeviceKind::Cpu]);
+        assert!(p.is_sharded());
+        assert_eq!(p.planned_kernels().len(), 3);
+        assert!(p.cost(DeviceKind::Cpu).unwrap() > 0.0, "launch overhead floors the cost");
+        let _ = p.summary();
+        let _ = p.kernel_label();
     }
 }

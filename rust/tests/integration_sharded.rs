@@ -1,0 +1,153 @@
+//! N-way sharded serving conformance: a matrix registered as a row-
+//! shard ensemble — shards bound on *different* backends and executed
+//! concurrently — must be indistinguishable from the serial reference
+//! through the full server path, **bit for bit**. The sharded plan only
+//! ever places CSR-order kernels (parallel CSR, SELL-C-σ), both of
+//! which accumulate each row in exactly `spmv_ref`'s order, so equality
+//! here is `to_bits`, not a tolerance.
+//!
+//! The failure-path test pins a shard's backend to one whose bindings
+//! fail at dispatch: the ensemble must degrade to a per-request error
+//! response (and keep serving other traffic), never hang the client.
+
+use std::sync::Arc;
+
+use csrk::coordinator::{
+    Backend, BackendId, CpuBackend, ExecutionBinding, MatrixRegistry, SellBackend, Server,
+    ServerConfig,
+};
+use csrk::kernels::BuiltExecution;
+use csrk::sparse::{gen, Csr};
+use csrk::tuning::planner::FormatPlan;
+use csrk::util::ThreadPool;
+
+fn cpu_sell_registry(pool: Arc<ThreadPool>) -> Arc<MatrixRegistry> {
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+        Arc::new(SellBackend::new(pool.clone())),
+    ];
+    Arc::new(MatrixRegistry::with_backends(pool, backends))
+}
+
+/// Serve `count` distinct vectors through the server and require exact
+/// bit equality against `spmv_ref` per request.
+fn assert_serves_bitwise(server: &Server, name: &str, a: &Csr<f32>, count: usize) {
+    let n = a.ncols();
+    for r in 0..count {
+        let x: Vec<f32> = (0..n).map(|i| ((i * 3 + 7 * r) % 13) as f32 / 13.0 - 0.5).collect();
+        let resp = server.call(name, x.clone());
+        let y = resp.result.expect("sharded serve ok");
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        assert_eq!(y.len(), y_ref.len());
+        for (i, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "row {i} of request {r}: {u} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn sharded_grid_serves_bitwise_across_two_backends() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = cpu_sell_registry(pool);
+    let a = gen::grid2d_5pt::<f32>(64, 64);
+    let entry = registry.register_sharded("grid", a.clone(), 4).unwrap();
+    // the acceptance shape: one registered matrix, shards bound on two
+    // backends simultaneously in the default offline build
+    let d = entry.describe();
+    assert!(d.contains("cpu["), "no CPU shard in {d}");
+    assert!(d.contains("sell["), "no SELL shard in {d}");
+    let server = Server::start(registry, ServerConfig::default());
+    assert_serves_bitwise(&server, "grid", &a, 8);
+    let (req, _, errors) = server.metrics().counts();
+    assert_eq!(req, 8);
+    assert_eq!(errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn sharded_power_law_serves_bitwise() {
+    // wholesale-irregular structure: shards fall back to nnz-balanced
+    // parallel CSR where SELL padding is too costly — still CSR
+    // accumulation order, so still exact
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = cpu_sell_registry(pool);
+    let a = gen::power_law::<f32>(3000, 6, 1.0, 0x51AD);
+    let entry = registry.register_sharded("hubs", a.clone(), 4).unwrap();
+    assert!(entry.plan().is_sharded(), "{}", entry.describe());
+    let server = Server::start(registry, ServerConfig::default());
+    assert_serves_bitwise(&server, "hubs", &a, 8);
+    server.shutdown();
+}
+
+/// A backend claiming the SELL slot whose bindings always fail at
+/// dispatch — stands in for a device that died after registration.
+struct FlakyBackend;
+
+struct FlakyBinding {
+    nrows: usize,
+    ncols: usize,
+}
+
+impl Backend for FlakyBackend {
+    fn id(&self) -> BackendId {
+        BackendId::Sell
+    }
+    fn describe(&self) -> String {
+        "flaky-sell (test)".into()
+    }
+    fn supports_plan(&self, _plan: &FormatPlan) -> bool {
+        true
+    }
+    fn bind(
+        &self,
+        built: &BuiltExecution<f32>,
+        _plan: &FormatPlan,
+    ) -> anyhow::Result<Box<dyn ExecutionBinding>> {
+        Ok(Box::new(FlakyBinding { nrows: built.exec.nrows(), ncols: built.exec.ncols() }))
+    }
+}
+
+impl ExecutionBinding for FlakyBinding {
+    fn backend(&self) -> BackendId {
+        BackendId::Sell
+    }
+    fn describe(&self) -> String {
+        format!("flaky[{}x{}]", self.nrows, self.ncols)
+    }
+    fn spmv(&self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("injected shard failure (test)")
+    }
+    fn spmv_multi(&self, _xs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::bail!("injected shard failure (test)")
+    }
+}
+
+#[test]
+fn failing_shard_backend_degrades_to_per_request_errors() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+        Arc::new(FlakyBackend),
+    ];
+    let registry = Arc::new(MatrixRegistry::with_backends(pool, backends));
+    let a = gen::grid2d_5pt::<f32>(64, 64);
+    let entry = registry.register_sharded("grid", a.clone(), 4).unwrap();
+    assert!(entry.describe().contains("flaky["), "{}", entry.describe());
+    // a healthy unsharded neighbor proves the failure stays scoped
+    registry.register("small", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+    let server = Server::start(registry, ServerConfig::default());
+
+    let x: Vec<f32> = (0..a.ncols()).map(|i| (i % 5) as f32).collect();
+    for _ in 0..3 {
+        // each request completes with a structured error naming the
+        // failed shard — degrade, not hang, and not a poisoned server
+        let resp = server.call("grid", x.clone());
+        let err = resp.result.expect_err("flaky shard must fail the request");
+        assert!(err.contains("shard"), "{err}");
+        assert!(err.contains("injected shard failure"), "{err}");
+    }
+    let resp = server.call_on("small", vec![1.0; 256], Some(BackendId::Cpu));
+    assert!(resp.result.is_ok(), "{:?}", resp.result);
+    server.shutdown();
+}
