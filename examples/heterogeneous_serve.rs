@@ -50,21 +50,26 @@ fn main() {
     // Register a slice of the suite spanning the rdensity range, an
     // irregular power-law matrix the planner routes around CSR-2, a
     // hub-pattern circuit matrix the planner splits into a hybrid
-    // body + remainder entry, and an alternating-row matrix whose
+    // body + remainder entry, an alternating-row matrix whose
     // bounded fill lands on the SELL-C-σ rail (its describe() line
     // shows the cpu[…] and sell[sellcs(c32, …)] bindings and routes to
-    // the simulated device). Each describe() line below reports the
+    // the simulated device), and a 3D 7-point stencil the planner
+    // prices onto the zero-index-stream DIA rail (describe() shows the
+    // dia(k7, …) kernel). Each describe() line below reports the
     // per-part format/nnz breakdown, every backend binding (with a
     // live runtime the hybrid line shows body→pjrt[...] +
     // remainder→cpu[...]), and the routing estimates that observed
     // latencies will correct as traffic flows.
-    let names = ["roadNet-TX", "ecology1", "wave", "power-law", "circuit-hub", "alt-bands"];
+    let names = [
+        "roadNet-TX", "ecology1", "wave", "power-law", "circuit-hub", "alt-bands", "stencil-dia",
+    ];
     let mut ncols = std::collections::HashMap::new();
     for name in names {
         let a = match name {
             "power-law" => gen::power_law::<f32>(4096, 8, 1.0, 0xF00D),
             "circuit-hub" => gen::circuit::<f32>(32, 32, 0xC1BC),
             "alt-bands" => gen::alternating_rows::<f32>(6000, 4, 12),
+            "stencil-dia" => gen::grid3d_7pt::<f32>(14, 14, 14),
             _ => suite::by_name(name).unwrap().build::<f32>(SuiteScale::Tiny),
         };
         ncols.insert(name, a.ncols());

@@ -84,7 +84,7 @@ fn bursty_small(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
             let x: Vec<f32> = (0..n).map(|i| ((i + k) % 7) as f32 - 3.0).collect();
             match server.try_submit(name, x) {
                 Ok((_, rx)) => held.push(rx),
-                Err(SubmitError::QueueFull { .. }) => rejected += 1,
+                Err(SubmitError::QueueFull { .. } | SubmitError::Timeout { .. }) => rejected += 1,
                 Err(SubmitError::Closed) => panic!("server closed mid-run"),
             }
         }
@@ -146,7 +146,7 @@ fn steady_large(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
             seq += 1;
             match server.try_submit("big", x) {
                 Ok((_, rx)) => outstanding.push_back(rx),
-                Err(SubmitError::QueueFull { .. }) => {
+                Err(SubmitError::QueueFull { .. } | SubmitError::Timeout { .. }) => {
                     rejected += 1;
                     drain(&mut outstanding);
                 }

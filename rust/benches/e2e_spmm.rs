@@ -13,8 +13,10 @@
 use std::sync::Arc;
 
 use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
-use csrk::kernels::{build_execution, pack_block, Csr2Kernel, CsrParallel, SellCsKernel, SpMv};
-use csrk::sparse::{gen, suite, Csr, CsrK, SellCs, SuiteScale};
+use csrk::kernels::{
+    build_execution, pack_block, Csr2Kernel, CsrParallel, DiaKernel, SellCsKernel, SpMv,
+};
+use csrk::sparse::{gen, suite, Csr, CsrK, Dia, SellCs, SuiteScale};
 use csrk::tuning::cpu::FIXED_SRS;
 use csrk::tuning::planner;
 use csrk::util::table::{f, Table};
@@ -44,8 +46,12 @@ fn main() {
     // with window-boundable fill — the planner's sellcs rail, so the
     // "planned" row below is the planner-chosen SELL kernel
     cases.push(("alt-bands", gen::alternating_rows::<f32>(20_000, 4, 12)));
+    // the DIA class: a 3D 7-point stencil, where the planner's fourth
+    // rail drops the column-index stream entirely — the forced-DIA row
+    // below measures that against the index-carrying kernels directly
+    cases.push(("grid3d-7pt", gen::grid3d_7pt::<f32>(36, 36, 36)));
     const ALL_NVEC: &[usize] = &[1, 4, 8, 16];
-    // forced SELL rows compare at the batch extremes only
+    // forced SELL/DIA rows compare at the batch extremes only
     const SELL_NVEC: &[usize] = &[1, 8];
     for &(name, ref a) in &cases {
         let (n, m) = (a.nrows(), a.ncols());
@@ -60,7 +66,7 @@ fn main() {
         let sigma = planner::sell_sigma_or_full(&row_nnz, 8);
         let forced_sell: Arc<dyn SpMv<f32>> =
             Arc::new(SellCsKernel::new(SellCs::from_csr(a, 8, sigma), pool.clone()));
-        let kernels: Vec<(Arc<dyn SpMv<f32>>, &[usize])> = vec![
+        let mut kernels: Vec<(Arc<dyn SpMv<f32>>, &[usize])> = vec![
             (Arc::new(CsrParallel::new(a.clone(), pool.clone())), ALL_NVEC),
             (
                 Arc::new(Csr2Kernel::new(
@@ -72,6 +78,14 @@ fn main() {
             (planned, ALL_NVEC),
             (forced_sell, SELL_NVEC),
         ];
+        // forced DIA only where a bounded capture is lossless — the
+        // kernel computes the body alone, so a spilled remainder would
+        // make the row measure a different operator
+        let (d, rest) = Dia::from_csr(a, planner::DIA_MAX_DIAGS);
+        if rest.nnz() == 0 && d.ndiags() > 0 {
+            let forced_dia: Arc<dyn SpMv<f32>> = Arc::new(DiaKernel::new(d, pool.clone()));
+            kernels.push((forced_dia, SELL_NVEC));
+        }
         for (k, nvecs) in &kernels {
             for &nvec in nvecs.iter() {
                 let xs: Vec<Vec<f32>> = (0..nvec)

@@ -53,6 +53,19 @@ pub fn sellcs_bytes(
     padded_nnz * (elem + 4) + (nchunks + 1) * 4 + nrows * 4 + ncols * elem + nrows * elem
 }
 
+/// Cold-cache SpMV byte traffic of a partially-diagonal (DIA) operand
+/// from raw dimensions — the dimension-wise extension of [`spmv_bytes`]
+/// for the planner's fourth rail. A DIA sweep streams every stored
+/// diagonal slot (`ndiags · nrows` values, padding included — that is
+/// what partial diagonals cost), the 8-byte offset table, plus `x` and
+/// `y` once each. **No per-nonzero column index appears**: the 4-byte
+/// index stream that dominates CSR/SELL traffic at f32 vanishes, which
+/// is the entire bandwidth argument for the format (Fukaya et al.) and
+/// why the planner prices stencil operands here below Band-k + CSR-2.
+pub fn dia_bytes(nrows: usize, ncols: usize, ndiags: usize, elem: usize) -> usize {
+    ndiags * nrows * elem + ndiags * 8 + ncols * elem + nrows * elem
+}
+
 /// SpMV arithmetic intensity for a CSR matrix in the paper's cold-cache
 /// accounting: `2·NNZ` FLOPs over [`spmv_bytes`].
 pub fn spmv_arithmetic_intensity<T: Scalar>(a: &Csr<T>) -> f64 {
@@ -86,6 +99,24 @@ mod tests {
         // row_ptr swapped for chunk_ptr + perm
         let csr = spmv_bytes(100, 100, 500, 4);
         assert_eq!(flat as i64 - csr as i64, (13 + 1 + 100) as i64 * 4 - 101 * 4);
+    }
+
+    #[test]
+    fn dia_drops_the_index_stream_below_csr() {
+        // 5-point f32 grid, fully captured at k = 5: DIA streams
+        // 5n·4 (slots) + 40 (offsets) + 2n·4 (x, y) ≈ 28n bytes, while
+        // CSR streams ~5n·8 (vals + cols) + ~n·4 (row_ptr) + 2n·4
+        // ≈ 52n — the column-index stream and the row pointer vanish.
+        let n = 64 * 64;
+        let a = gen::grid2d_5pt::<f32>(64, 64);
+        let dia = dia_bytes(n, n, 5, 4);
+        let csr = spmv_bytes(n, n, a.nnz(), 4);
+        assert!(
+            (dia as f64) < 0.6 * csr as f64,
+            "dia {dia} vs csr {csr}: the index stream must vanish"
+        );
+        // each extra stored diagonal charges a full padded slot column
+        assert_eq!(dia_bytes(n, n, 6, 4) - dia, n * 4 + 8);
     }
 
     #[test]

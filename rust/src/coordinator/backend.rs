@@ -782,6 +782,8 @@ fn shard_sub_plan(sp: &ShardPlan, ncols: usize) -> FormatPlan {
             row_nnz_variance: 0.0,
             max_row_nnz: 0,
             bandwidth: 0,
+            dia_offsets: Vec::new(),
+            dia_coverage: 0.0,
         },
         reorder: None,
         kernel: sp.kernel,

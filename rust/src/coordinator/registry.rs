@@ -408,11 +408,32 @@ mod tests {
     fn regular_matrix_builds_reordered_csr2() {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
-        let e = reg.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        // regular but off the stencil diagonals → Band-k + CSR-2
+        let e = reg.register("alt", gen::alternating_rows::<f32>(64, 5, 11)).unwrap();
         assert!(e.plan().stats().is_regular());
         assert!(e.reordered(), "regular matrices take the Band-k path");
         assert!(e.kernel_name().starts_with("csr2"), "{}", e.kernel_name());
         assert_eq!(e.route(None), BackendId::Cpu, "no runtime ⇒ CPU");
+    }
+
+    #[test]
+    fn stencil_matrix_builds_identity_order_dia() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        let e = reg.register("grid", a.clone()).unwrap();
+        assert!(e.plan().stats().is_regular());
+        assert!(!e.reordered(), "the fourth rail keeps identity order");
+        assert!(e.kernel_name().starts_with("dia"), "{}", e.kernel_name());
+        assert_eq!(e.route(None), BackendId::Cpu, "no runtime ⇒ CPU");
+
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits(), "DIA is bit-exact on the stencil");
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -70,7 +70,8 @@ impl Default for ServerConfig {
     }
 }
 
-/// Why a bounded submit ([`Server::try_submit`]) was rejected.
+/// Why a bounded submit ([`Server::try_submit`] /
+/// [`Server::submit_wait`]) was rejected.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
     /// `depth` requests are already admitted and unanswered —
@@ -78,6 +79,12 @@ pub enum SubmitError {
     QueueFull {
         /// The configured [`ServerConfig::queue_depth`] that was hit.
         depth: usize,
+    },
+    /// A blocking submit ([`Server::submit_wait`]) waited out its
+    /// timeout without capacity freeing up.
+    Timeout {
+        /// How long the submit waited before giving up.
+        waited: Duration,
     },
     /// The server's leader is gone (shut down).
     Closed,
@@ -89,12 +96,129 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull { depth } => {
                 write!(f, "submit queue full ({depth} requests in flight)")
             }
+            SubmitError::Timeout { waited } => {
+                write!(f, "submit timed out after {waited:?} waiting for queue capacity")
+            }
             SubmitError::Closed => write!(f, "server is shut down"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// The admitted-but-unanswered gauge plus the capacity condvar blocking
+/// submitters wait on. The count stays a lock-free atomic on the hot
+/// paths (claim at submit, release at respond); the mutex/condvar pair
+/// is touched only when a [`Server::submit_wait`] caller is actually
+/// parked (`waiters > 0`), so the unbounded and try-submit paths pay
+/// one extra load per release and nothing else.
+struct InflightGauge {
+    count: AtomicUsize,
+    waiters: AtomicUsize,
+    lock: Mutex<()>,
+    freed: Condvar,
+}
+
+impl InflightGauge {
+    fn new() -> InflightGauge {
+        InflightGauge {
+            count: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            freed: Condvar::new(),
+        }
+    }
+
+    fn current(&self) -> usize {
+        self.count.load(Ordering::Acquire)
+    }
+
+    /// Claim a slot unconditionally (the unbounded submit path).
+    fn claim(&self) {
+        self.count.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Claim a slot only under `depth`: the add-then-check keeps the
+    /// bound exact under concurrent submitters — a failed claim returns
+    /// the slot before anything treats the request as admitted.
+    fn try_claim(&self, depth: usize) -> bool {
+        let prev = self.count.fetch_add(1, Ordering::AcqRel);
+        if prev >= depth {
+            self.release(1);
+            return false;
+        }
+        true
+    }
+
+    /// Claim a slot under `depth`, parking on the capacity condvar up
+    /// to `timeout` when the gauge is full.
+    fn claim_blocking(&self, depth: usize, timeout: Duration) -> Result<(), SubmitError> {
+        if self.try_claim(depth) {
+            return Ok(());
+        }
+        let deadline = Instant::now() + timeout;
+        self.waiters.fetch_add(1, Ordering::AcqRel);
+        let mut guard = self.lock.lock().unwrap();
+        let out = loop {
+            // re-check while holding the lock: a release between a
+            // failed claim and the wait cannot be lost, because its
+            // notify needs this lock
+            if self.try_claim(depth) {
+                break Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break Err(SubmitError::Timeout { waited: timeout });
+            }
+            let (g, _timed_out) = self.freed.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        };
+        drop(guard);
+        self.waiters.fetch_sub(1, Ordering::AcqRel);
+        out
+    }
+
+    /// Return `n` slots and wake blocked submitters if any are parked.
+    fn release(&self, n: usize) {
+        self.count.fetch_sub(n, Ordering::AcqRel);
+        if self.waiters.load(Ordering::Acquire) > 0 {
+            let _guard = self.lock.lock().unwrap();
+            self.freed.notify_all();
+        }
+    }
+}
+
+/// RAII reconciliation for one batch's admitted slots. The worker
+/// settles a slot here each time it answers a request through
+/// [`respond`]; any slots still held when the guard drops were never
+/// answered — the dispatch panicked mid-batch and the worker is
+/// unwinding — and go back to the gauge, so a crashed worker cannot
+/// leak queue capacity (and wedge every bounded submitter) forever.
+/// The clients' ends still surface as channel-closed errors; only the
+/// *accounting* is reconciled here.
+struct BatchSlots<'a> {
+    gauge: &'a InflightGauge,
+    held: usize,
+}
+
+impl<'a> BatchSlots<'a> {
+    fn new(gauge: &'a InflightGauge, held: usize) -> BatchSlots<'a> {
+        BatchSlots { gauge, held }
+    }
+
+    /// Mark one slot as answered (released by [`respond`], not here).
+    fn settle(&mut self) {
+        self.held -= 1;
+    }
+}
+
+impl Drop for BatchSlots<'_> {
+    fn drop(&mut self) {
+        if self.held > 0 {
+            self.gauge.release(self.held);
+        }
+    }
+}
 
 enum LeaderMsg {
     Submit(Request, Sender<Response>),
@@ -112,12 +236,12 @@ pub struct Server {
     submit_tx: Sender<LeaderMsg>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    /// Admitted-but-unanswered request count. Incremented at submit,
-    /// decremented by `respond` just before each response goes out. A
-    /// worker that panics mid-batch drops its responders without
-    /// running `respond`, leaking those slots — acceptable for a
-    /// crashed-worker state (see ROADMAP).
-    inflight: Arc<AtomicUsize>,
+    /// Admitted-but-unanswered request gauge. Claimed at submit,
+    /// released by `respond` just before each response goes out; a
+    /// worker that panics mid-batch returns its unanswered slots
+    /// through the [`BatchSlots`] drop guard, so the gauge reconciles
+    /// even across crashed workers.
+    inflight: Arc<InflightGauge>,
     queue_depth: usize,
     leader: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -127,7 +251,7 @@ impl Server {
     /// Start the leader and one worker per registered backend.
     pub fn start(registry: Arc<MatrixRegistry>, config: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
-        let inflight = Arc::new(AtomicUsize::new(0));
+        let inflight = Arc::new(InflightGauge::new());
         let (submit_tx, submit_rx) = mpsc::channel::<LeaderMsg>();
 
         let mut worker_txs: HashMap<BackendId, Sender<Work>> = HashMap::new();
@@ -189,7 +313,7 @@ impl Server {
     /// [`Server::try_submit`] path checks against
     /// [`ServerConfig::queue_depth`].
     pub fn inflight(&self) -> usize {
-        self.inflight.load(Ordering::Acquire)
+        self.inflight.current()
     }
 
     /// Submit asynchronously; the response arrives on the returned
@@ -212,7 +336,7 @@ impl Server {
     ) -> (u64, Receiver<Response>) {
         // unbounded admission, but the slot still counts against the
         // gauge so bounded submitters see mixed traffic
-        self.inflight.fetch_add(1, Ordering::AcqRel);
+        self.inflight.claim();
         self.enqueue(matrix, x, device).expect("leader alive")
     }
 
@@ -235,13 +359,36 @@ impl Server {
         x: Vec<f32>,
         device: Option<BackendId>,
     ) -> Result<(u64, Receiver<Response>), SubmitError> {
-        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
-        if prev >= self.queue_depth {
-            // exact bound: return the slot this add claimed before
-            // anything treats the request as admitted
-            self.inflight.fetch_sub(1, Ordering::AcqRel);
+        if !self.inflight.try_claim(self.queue_depth) {
             return Err(SubmitError::QueueFull { depth: self.queue_depth });
         }
+        self.enqueue(matrix, x, device)
+    }
+
+    /// Blocking bounded submit: like [`Server::try_submit`], but a full
+    /// queue *parks the caller* on the capacity condvar instead of
+    /// rejecting — admission happens as soon as a slot frees up, or the
+    /// call fails with [`SubmitError::Timeout`] after `timeout`. This
+    /// is the paced-producer path: sustained load that should throttle
+    /// to service rate rather than shed or spin on `try_submit`.
+    pub fn submit_wait(
+        &self,
+        matrix: &str,
+        x: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        self.submit_wait_on(matrix, x, None, timeout)
+    }
+
+    /// [`Server::submit_wait`] with an explicit backend override.
+    pub fn submit_wait_on(
+        &self,
+        matrix: &str,
+        x: Vec<f32>,
+        device: Option<BackendId>,
+        timeout: Duration,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        self.inflight.claim_blocking(self.queue_depth, timeout)?;
         self.enqueue(matrix, x, device)
     }
 
@@ -257,7 +404,7 @@ impl Server {
         let (tx, rx) = mpsc::channel();
         let msg = LeaderMsg::Submit(Request { id, matrix: matrix.to_string(), x, device }, tx);
         if self.submit_tx.send(msg).is_err() {
-            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.inflight.release(1);
             return Err(SubmitError::Closed);
         }
         Ok((id, rx))
@@ -305,7 +452,7 @@ fn leader_loop(
     worker_txs: HashMap<BackendId, Sender<Work>>,
     registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
-    inflight: Arc<AtomicUsize>,
+    inflight: Arc<InflightGauge>,
     config: ServerConfig,
 ) {
     let mut batcher = DynamicBatcher::new(config.max_batch, config.max_delay);
@@ -412,16 +559,21 @@ fn backend_worker(
     rx: Receiver<Work>,
     registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
-    inflight: Arc<AtomicUsize>,
+    inflight: Arc<InflightGauge>,
     device: BackendId,
 ) {
     while let Ok(work) = rx.recv() {
+        // every admitted slot in this batch is either settled by a
+        // respond below or returned by the guard if a panicking
+        // dispatch unwinds the worker mid-batch
+        let mut slots = BatchSlots::new(&inflight, work.batch.requests.len());
         let entry = match registry.get(&work.batch.matrix) {
             Ok(e) => e,
             Err(e) => {
                 let msg = e.to_string();
                 for (member, tx) in work.batch.requests.into_iter().zip(work.resp) {
                     respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
+                    slots.settle();
                 }
                 continue;
             }
@@ -438,6 +590,7 @@ fn backend_worker(
             } else {
                 let msg = format!("x length {} != ncols {}", member.0.x.len(), entry.ncols);
                 respond(member, tx, Err(msg), &metrics, &inflight, device, 0.0);
+                slots.settle();
             }
         }
         let xs: Vec<&[f32]> = valid.iter().map(|((r, _), _)| r.x.as_slice()).collect();
@@ -459,12 +612,14 @@ fn backend_worker(
                 }
                 for (y, (member, tx)) in ys.into_iter().zip(valid) {
                     respond(member, tx, Ok(y), &metrics, &inflight, device, entry.flops());
+                    slots.settle();
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
                 for (member, tx) in valid {
                     respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
+                    slots.settle();
                 }
             }
         }
@@ -480,13 +635,13 @@ fn respond(
     tx: Sender<Response>,
     result: Result<Vec<f32>, String>,
     metrics: &Metrics,
-    inflight: &AtomicUsize,
+    inflight: &InflightGauge,
     device: BackendId,
     flops: f64,
 ) {
     let latency = enqueued.elapsed();
     metrics.record(latency, if result.is_ok() { flops } else { 0.0 }, result.is_ok());
-    inflight.fetch_sub(1, Ordering::AcqRel);
+    inflight.release(1);
     let _ = tx.send(Response { id: req.id, result, device, latency });
 }
 
@@ -840,6 +995,109 @@ mod tests {
         assert_eq!(server.inflight(), 0);
         let again = server.try_submit("grid", vec![1.0; 256]).expect("capacity freed");
         assert!(again.1.recv().unwrap().result.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_returns_inflight_slots() {
+        // Regression: a worker that panicked mid-batch dropped its
+        // responders without running `respond`, leaking the batch's
+        // inflight slots — the gauge never drained, so every bounded
+        // submitter was wedged at QueueFull forever. The BatchSlots
+        // drop guard must return the unanswered slots during unwind.
+        use crate::coordinator::backend::CpuBackend;
+        let pool = Arc::new(ThreadPool::new(2));
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+            Arc::new(PanicBackend),
+        ];
+        let registry = Arc::new(MatrixRegistry::with_backends(pool, backends));
+        registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        let server = Server::start(
+            registry,
+            ServerConfig {
+                max_batch: 3,
+                max_delay: Duration::from_micros(100),
+                queue_depth: 4,
+            },
+        );
+        // three requests land in one batch on the panicking backend;
+        // the worker dies mid-dispatch, so the clients observe dropped
+        // channels rather than responses
+        let rxs: Vec<_> = (0..3)
+            .map(|_| server.submit_on("grid", vec![1.0; 256], Some(BackendId::Pjrt)).1)
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().is_err(), "responder dropped during unwind");
+        }
+        // ... but the unwind must settle the gauge (the guard's release
+        // races the clients' recv by a hair, so poll briefly)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.inflight() != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(server.inflight(), 0, "panicked batch must return its slots");
+        // and the freed capacity is genuinely usable on the surviving
+        // CPU worker
+        let again = server.try_submit("grid", vec![1.0; 256]).expect("capacity reconciled");
+        assert!(again.1.recv().unwrap().result.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_times_out_when_the_queue_stays_full() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let registry = Arc::new(MatrixRegistry::new(pool, None));
+        registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        let server = Server::start(
+            registry,
+            ServerConfig {
+                // a huge batch cap and a long delay keep the two
+                // admitted requests parked in the batcher well past
+                // the wait timeout
+                max_batch: 1000,
+                max_delay: Duration::from_secs(5),
+                queue_depth: 2,
+            },
+        );
+        for _ in 0..2 {
+            server.try_submit("grid", vec![1.0; 256]).expect("under depth");
+        }
+        let t0 = Instant::now();
+        let err = server
+            .submit_wait("grid", vec![1.0; 256], Duration::from_millis(40))
+            .expect_err("no capacity frees for 5s");
+        assert_eq!(err, SubmitError::Timeout { waited: Duration::from_millis(40) });
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(40), "must actually park");
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_blocks_until_capacity_frees_then_admits() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let registry = Arc::new(MatrixRegistry::new(pool, None));
+        registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+        let server = Server::start(
+            registry,
+            ServerConfig {
+                max_batch: 2,
+                max_delay: Duration::from_millis(10),
+                queue_depth: 2,
+            },
+        );
+        // fill the queue; the full batch dispatches and frees its
+        // slots while the blocking submit is parked
+        let held: Vec<_> = (0..2)
+            .map(|_| server.try_submit("grid", vec![1.0; 256]).expect("under depth").1)
+            .collect();
+        let (_, rx) = server
+            .submit_wait("grid", vec![1.0; 256], Duration::from_secs(10))
+            .expect("capacity frees as the first batch completes");
+        for h in held {
+            assert!(h.recv().unwrap().result.is_ok());
+        }
+        assert!(rx.recv().unwrap().result.is_ok());
         server.shutdown();
     }
 }

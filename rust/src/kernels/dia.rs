@@ -1,0 +1,246 @@
+//! Partially-diagonal (DIA) SpMV kernel: row-block-parallel contiguous
+//! diagonal streams — no per-nonzero column index, no gather.
+//!
+//! The pool distributes contiguous row blocks with static scheduling;
+//! each worker zeroes its block of `y` and then sweeps the stored
+//! diagonals in ascending-offset order, adding the clipped intersection
+//! of each diagonal with its row block:
+//!
+//! ```text
+//! for d in diagonals:            // offsets ascending
+//!     for i in clip(d) ∩ block:  y[i] += vals[d·nrows + i] · x[i + off]
+//! ```
+//!
+//! Every stream in the inner loop — the diagonal slots, `x`, and `y` —
+//! advances unit-stride, which is the whole point of the format: the
+//! 4-byte-per-nonzero column-index stream of CSR vanishes and the `x`
+//! gather becomes a sequential read (`analysis::roofline::dia_bytes`
+//! prices exactly this). Padding slots hold `val = 0`, so the sweep is
+//! branch-free inside the clip.
+//!
+//! Each `y[i]` accumulates its diagonals in ascending-offset order —
+//! the identical per-element order [`Dia::spmv_ref`] uses — so the
+//! parallel kernel is **bit-equal to the serial oracle at any thread
+//! count** (row blocks only partition `i`; they never reorder the adds
+//! any single `y[i]` sees).
+//!
+//! The blocked multi-RHS path ([`SpMv::spmv_multi`]) keeps the
+//! diagonal sweep but broadcasts each slot value against the
+//! vector-interleaved RHS block (`x[col·nvec..]`), streaming the
+//! matrix once per *batch* — the same amortization the CSR-family and
+//! SELL kernels implement.
+
+use std::sync::Arc;
+
+use super::{SendPtr, SpMv};
+use crate::sparse::dia::Dia;
+use crate::sparse::Scalar;
+use crate::util::{Schedule, ThreadPool};
+
+/// Parallel partially-diagonal kernel.
+pub struct DiaKernel<T> {
+    a: Dia<T>,
+    pool: Arc<ThreadPool>,
+}
+
+impl<T: Scalar> DiaKernel<T> {
+    /// Wrap a DIA matrix.
+    pub fn new(a: Dia<T>, pool: Arc<ThreadPool>) -> Self {
+        DiaKernel { a, pool }
+    }
+
+    /// The wrapped matrix (offsets, coverage, storage accounting).
+    pub fn matrix(&self) -> &Dia<T> {
+        &self.a
+    }
+}
+
+impl<T: Scalar> SpMv<T> for DiaKernel<T> {
+    fn name(&self) -> String {
+        format!("dia(k{},{}t)", self.a.ndiags(), self.pool.threads())
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.a.ncols());
+        assert_eq!(y.len(), self.a.nrows());
+        let a = &self.a;
+        let nrows = a.nrows();
+        let yp = SendPtr(y.as_mut_ptr());
+        self.pool.parallel_for(nrows, Schedule::Static, |lo, hi| {
+            // SAFETY: row blocks are disjoint; each worker writes only
+            // its own `lo..hi` slice of y.
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), nrows) };
+            for v in ys[lo..hi].iter_mut() {
+                *v = T::zero();
+            }
+            let vals = a.vals();
+            for d in 0..a.ndiags() {
+                let off = a.offsets()[d];
+                let (clo, chi) = a.clip(d);
+                let diag = &vals[d * nrows..(d + 1) * nrows];
+                for i in clo.max(lo)..chi.min(hi) {
+                    ys[i] += diag[i] * x[(i as i64 + off) as usize];
+                }
+            }
+        });
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        2.0 * self.a.nnz() as f64
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
+    /// Blocked SpMM: the diagonal streams are read once per batch and
+    /// each slot value broadcasts against the `nvec`-wide RHS block.
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        assert!(nvec > 0, "spmv_multi needs at least one vector");
+        assert_eq!(x.len(), self.a.ncols() * nvec);
+        assert_eq!(y.len(), self.a.nrows() * nvec);
+        if nvec == 1 {
+            return self.spmv(x, y);
+        }
+        let a = &self.a;
+        let nrows = a.nrows();
+        let ylen = y.len();
+        let yp = SendPtr(y.as_mut_ptr());
+        self.pool.parallel_for(nrows, Schedule::Static, |lo, hi| {
+            // SAFETY: disjoint row blocks ⇒ disjoint `row·nvec` slices.
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.add(0), ylen) };
+            for v in ys[lo * nvec..hi * nvec].iter_mut() {
+                *v = T::zero();
+            }
+            let vals = a.vals();
+            for d in 0..a.ndiags() {
+                let off = a.offsets()[d];
+                let (clo, chi) = a.clip(d);
+                let diag = &vals[d * nrows..(d + 1) * nrows];
+                for i in clo.max(lo)..chi.min(hi) {
+                    let v = diag[i];
+                    let col = (i as i64 + off) as usize;
+                    let xb = &x[col * nvec..col * nvec + nvec];
+                    let yb = &mut ys[i * nvec..i * nvec + nvec];
+                    for (q, &xv) in yb.iter_mut().zip(xb) {
+                        *q += v * xv;
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{assert_kernel_matches, assert_spmm_matches};
+    use crate::sparse::{gen, Coo};
+
+    #[test]
+    fn matches_reference_parallel_and_bit_equals_the_oracle() {
+        let a = gen::grid3d_7pt::<f64>(7, 6, 5);
+        let (d, rest) = Dia::from_csr(&a, 7);
+        assert_eq!(rest.nnz(), 0);
+        let x: Vec<f64> = (0..a.ncols()).map(|i| ((i * 13 + 5) % 19) as f64 / 19.0 - 0.5).collect();
+        let mut y_oracle = vec![f64::NAN; a.nrows()];
+        d.spmv_ref(&x, &mut y_oracle);
+        for t in [1usize, 2, 4] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let k = DiaKernel::new(d.clone(), pool);
+            assert_kernel_matches(&a, &k, 1e-12);
+            // bit-exact against the serial oracle at every thread count
+            let mut y = vec![f64::NAN; a.nrows()];
+            k.spmv(&x, &mut y);
+            for (i, (u, v)) in y.iter().zip(&y_oracle).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "row {i} ({t} threads)");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_spmm_matches_per_vector_spmv() {
+        let a = gen::grid2d_5pt::<f64>(13, 11);
+        for t in [1usize, 3] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let (d, _) = Dia::from_csr(&a, 5);
+            let k = DiaKernel::new(d, pool);
+            // nvec = 1 takes the single-vector delegation path
+            for nvec in [1usize, 2, 3, 4, 8, 16] {
+                assert_spmm_matches(&k, nvec, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_capture_computes_the_diagonal_part_only() {
+        let a = gen::grid2d_5pt::<f64>(8, 8);
+        let (d, rest) = Dia::from_csr(&a, 3); // 0, ±1 — spills ±8
+        assert!(rest.nnz() > 0);
+        let pool = Arc::new(ThreadPool::new(2));
+        let k = DiaKernel::new(d.clone(), pool);
+        assert_eq!(k.flops(), 2.0 * d.nnz() as f64, "flops count captured nnz");
+        // kernel(A_dia) + ref(A_rest) == ref(A): the Fukaya decomposition
+        let x: Vec<f64> = (0..64).map(|i| ((i * 5 + 2) % 11) as f64 - 5.0).collect();
+        let mut y = vec![f64::NAN; 64];
+        k.spmv(&x, &mut y);
+        let mut y_rest = vec![0.0; 64];
+        rest.spmv_ref(&x, &mut y_rest);
+        let mut y_full = vec![0.0; 64];
+        a.spmv_ref(&x, &mut y_full);
+        for i in 0..64 {
+            assert!((y[i] + y_rest[i] - y_full[i]).abs() < 1e-12, "row {i}");
+        }
+    }
+
+    #[test]
+    fn overwrites_poisoned_output() {
+        // rows outside every clip must still be zeroed, not left stale
+        let mut c = Coo::<f64>::new(5, 5);
+        c.push(0, 4, 2.0);
+        let a = c.to_csr();
+        let (d, _) = Dia::from_csr(&a, 1);
+        let pool = Arc::new(ThreadPool::new(2));
+        let k = DiaKernel::new(d, pool);
+        let x = vec![1.0; 5];
+        let mut y = vec![9999.0; 5];
+        k.spmv(&x, &mut y);
+        assert_eq!(y, vec![2.0, 0.0, 0.0, 0.0, 0.0]);
+        let mut yb = vec![9999.0; 10];
+        k.spmv_multi(&vec![1.0; 10], &mut yb, 2);
+        assert_eq!(&yb[..2], &[2.0, 2.0]);
+        assert!(yb[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_row_matrix() {
+        let a = Coo::<f64>::new(0, 0).to_csr();
+        let (d, _) = Dia::from_csr(&a, 4);
+        let pool = Arc::new(ThreadPool::new(2));
+        let k = DiaKernel::new(d, pool);
+        k.spmv(&[], &mut []);
+        k.spmv_multi(&[], &mut [], 3);
+    }
+
+    #[test]
+    fn downcast_via_as_any() {
+        let a = gen::grid2d_5pt::<f64>(6, 6);
+        let pool = Arc::new(ThreadPool::new(1));
+        let (d, _) = Dia::from_csr(&a, 5);
+        let k: Arc<dyn SpMv<f64>> = Arc::new(DiaKernel::new(d, pool));
+        let concrete = k
+            .as_any()
+            .and_then(|any| any.downcast_ref::<DiaKernel<f64>>())
+            .expect("dia kernels expose their concrete type");
+        assert_eq!(concrete.matrix().ndiags(), 5);
+        assert!(k.name().starts_with("dia(k5,"), "{}", k.name());
+    }
+}

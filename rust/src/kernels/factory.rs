@@ -10,11 +10,14 @@
 //!   the planned kernel over the (possibly permuted) matrix, and wrap
 //!   it in a one-part [`CompositeExec`] that owns the coordinate
 //!   round-trip.
-//! * [`FormatPlan::Hybrid`] — split the matrix at the plan's row-nnz
-//!   threshold (`sparse::split`), run Band-k on the *body* (ordering
-//!   over the square body graph, then composed against the split map
-//!   so the body kernel's rows scatter straight to original rows),
-//!   build each part's kernel, and compose them.
+//! * [`FormatPlan::Hybrid`] — cut the matrix as the plan's
+//!   `HybridSplit` says (`sparse::split`): a row-nnz threshold for hub
+//!   splits — Band-k then runs on the *body* (ordering over the square
+//!   body graph, then composed against the split map so the body
+//!   kernel's rows scatter straight to original rows) — or diagonal
+//!   membership for the fourth rail's Fukaya splits (DIA body in
+//!   identity order, off-diagonal rows to the remainder kernel); build
+//!   each part's kernel and compose them.
 //! * [`FormatPlan::Sharded`] — cut the matrix into N contiguous
 //!   nnz-balanced row shards (`sparse::split::split_n_by_rows`, the
 //!   same boundary rule the planner priced), build each shard's
@@ -45,11 +48,14 @@
 use std::sync::Arc;
 
 use super::composite::{CompositeExec, CompositePart};
-use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, SellCsKernel, SpMv};
+use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, DiaKernel, SellCsKernel, SpMv};
 use crate::reorder::bandk;
 use crate::sparse::csrk::PaddedCsr;
-use crate::sparse::{split_by_row_nnz, split_n_by_rows, Csr, Csr5, CsrK, Scalar, SellCs, SplitCsr};
-use crate::tuning::planner::{FormatPlan, PlannedKernel};
+use crate::sparse::{
+    split_by_dia_rows, split_by_row_nnz, split_n_by_rows, Csr, Csr5, CsrK, Dia, Scalar, SellCs,
+    SplitCsr,
+};
+use crate::tuning::planner::{FormatPlan, HybridSplit, PlannedKernel};
 use crate::util::ThreadPool;
 
 /// What the build stage hands the bind stage.
@@ -92,6 +98,16 @@ pub fn build_part_kernel<T: Scalar>(
             Arc::new(SellCsKernel::new(SellCs::from_csr(&a, c, sigma), pool))
         }
         PlannedKernel::CsrParallel => Arc::new(CsrParallel::new(a, pool)),
+        PlannedKernel::Dia { .. } => {
+            // Lossless capture of every diagonal the part actually has:
+            // the planner's row-wise cut guarantees the part is
+            // diagonal-representable, but compacting the body's rows
+            // can shift entries off the source offsets, so the leaf
+            // takes the part's own diagonals rather than the plan's.
+            let (d, rest) = Dia::from_csr(&a, usize::MAX);
+            assert_eq!(rest.nnz(), 0, "unbounded DIA capture cannot spill");
+            Arc::new(DiaKernel::new(d, pool))
+        }
     }
 }
 
@@ -123,9 +139,12 @@ pub fn build_execution<T: Scalar>(
             let exec = Arc::new(CompositeExec::single(kern, perm));
             BuiltExecution { exec, exports: vec![export] }
         }
-        FormatPlan::Hybrid { threshold, body, remainder, pjrt_width, .. } => {
+        FormatPlan::Hybrid { split: how, body, remainder, pjrt_width, .. } => {
             let (nrows, ncols) = (a.nrows(), a.ncols());
-            let split = split_by_row_nnz(&a, *threshold);
+            let split = match how {
+                HybridSplit::RowNnz { threshold } => split_by_row_nnz(&a, *threshold),
+                HybridSplit::DiaRows { offsets } => split_by_dia_rows(&a, offsets),
+            };
             drop(a);
             // Body ordering runs over the square body graph (hub rows
             // empty, hub columns still present), and the resulting
@@ -201,16 +220,22 @@ pub fn build_execution<T: Scalar>(
 mod tests {
     use super::*;
     use crate::kernels::testutil::{assert_kernel_matches, assert_spmm_matches};
-    use crate::sparse::gen;
+    use crate::sparse::{gen, Coo};
     use crate::tuning::planner;
 
     #[test]
     fn factory_builds_what_the_plan_says() {
         let pool = Arc::new(ThreadPool::new(2));
-        let reg = gen::grid2d_5pt::<f64>(20, 20);
+        let sten = gen::grid2d_5pt::<f64>(20, 20);
+        let b = build_execution(&planner::plan(&sten), sten.clone(), pool.clone(), false);
+        assert!(b.exec.name().starts_with("dia"), "{}", b.exec.name());
+        assert!(b.exec.parts()[0].in_perm().is_none(), "DIA keeps identity order");
+        assert!(b.exports.iter().all(|e| e.is_none()), "no export requested");
+
+        let reg = gen::alternating_rows::<f64>(64, 5, 11);
         let b = build_execution(&planner::plan(&reg), reg.clone(), pool.clone(), false);
         assert!(b.exec.name().starts_with("csr2"), "{}", b.exec.name());
-        assert!(b.exec.parts()[0].in_perm().is_some(), "regular plans reorder");
+        assert!(b.exec.parts()[0].in_perm().is_some(), "Band-k plans reorder");
         assert!(b.exports.iter().all(|e| e.is_none()), "no export requested");
 
         let irr = gen::power_law::<f64>(600, 8, 1.0, 0x5EED);
@@ -240,7 +265,8 @@ mod tests {
     fn built_executions_match_reference_in_original_coordinates() {
         let pool = Arc::new(ThreadPool::new(3));
         for a in [
-            gen::grid2d_5pt::<f64>(16, 16),            // regular → bandk + csr2
+            gen::grid2d_5pt::<f64>(16, 16),            // stencil → dia
+            gen::alternating_rows::<f64>(64, 5, 11),   // regular → bandk + csr2
             gen::power_law::<f64>(600, 8, 1.0, 0xA1),  // irregular → csr5
             gen::circuit::<f64>(32, 32, 7),            // hub pattern → hybrid
         ] {
@@ -254,10 +280,11 @@ mod tests {
     #[test]
     fn export_is_padded_at_plan_width_in_plan_order() {
         let pool = Arc::new(ThreadPool::new(2));
-        let a = gen::grid2d_5pt::<f64>(12, 12);
+        // Band-k fixture — stencils now ride the export-free DIA rail
+        let a = gen::alternating_rows::<f64>(64, 5, 11);
         let plan = planner::plan(&a);
         let b = build_execution(&plan, a.clone(), pool, true);
-        let p = b.exec.parts()[0].in_perm().expect("regular plans reorder");
+        let p = b.exec.parts()[0].in_perm().expect("Band-k plans reorder");
         let padded = b.exports[0].as_ref().expect("export requested on a pjrt-width plan");
         assert_eq!(padded.width, plan.pjrt_width().unwrap());
         assert_eq!(padded.nrows, a.nrows());
@@ -322,10 +349,48 @@ mod tests {
             PlannedKernel::Csr5 { omega: 4, sigma: 12 },
             PlannedKernel::SellCs { c: 8, sigma: 32 },
             PlannedKernel::CsrParallel,
+            PlannedKernel::Dia { ndiags: 7 },
         ] {
             let k = build_part_kernel(&kernel, a.clone(), pool.clone());
             assert_kernel_matches(&a, k.as_ref(), 1e-12);
             assert_spmm_matches(k.as_ref(), 4, 1e-12);
         }
+    }
+
+    #[test]
+    fn dia_hybrid_build_splits_by_diagonal_membership() {
+        // Poison two rows of a 12×12 grid off the stencil diagonals:
+        // the planner's fourth rail keeps the Fukaya split (DIA body +
+        // parallel-CSR remainder), and the factory must cut by diagonal
+        // membership — not row nnz — and compose back losslessly.
+        let pool = Arc::new(ThreadPool::new(2));
+        let g = gen::grid2d_5pt::<f64>(12, 12);
+        let mut c = Coo::<f64>::new(144, 144);
+        for i in 0..144 {
+            let (cols, vals) = g.row(i);
+            for (&cc, &v) in cols.iter().zip(vals) {
+                c.push(i, cc as usize, v);
+            }
+        }
+        c.push(5, 120, 1.5);
+        c.push(90, 2, -0.5);
+        let a = c.to_csr();
+        let plan = planner::plan(&a);
+        match &plan {
+            FormatPlan::Hybrid { split: HybridSplit::DiaRows { offsets }, .. } => {
+                assert_eq!(offsets.as_slice(), &[-12, -1, 0, 1, 12]);
+            }
+            other => panic!("expected a Fukaya split, got {}", other.summary()),
+        }
+        let b = build_execution(&plan, a.clone(), pool, true);
+        assert_eq!(b.exec.num_parts(), 2);
+        assert!(b.exec.name().starts_with("hybrid(dia"), "{}", b.exec.name());
+        assert!(b.exec.parts()[0].in_perm().is_none(), "DIA body keeps identity order");
+        assert!(
+            b.exports.iter().all(|e| e.is_none()),
+            "no padded export on the fourth rail"
+        );
+        assert_kernel_matches(&a, b.exec.as_ref(), 1e-12);
+        assert_spmm_matches(b.exec.as_ref(), 3, 1e-12);
     }
 }

@@ -12,6 +12,10 @@
 //!   over C-row chunks, results scattered through the format's
 //!   σ-window-bounded permutation (blocked SpMM with `nvec`-wide
 //!   accumulators per chunk lane).
+//! * [`dia`] — partially-diagonal kernel: row-block-parallel contiguous
+//!   diagonal streams with no per-nonzero column index (the planner's
+//!   regular-rail choice for stencil/FEM operands), bit-equal to its
+//!   serial oracle at any thread count.
 //! * [`composite`] — [`CompositeExec`]: N part kernels (each with its
 //!   own input permutation and row scatter map) presented as one
 //!   [`SpMv`] in original coordinates — how hybrid body + remainder
@@ -56,6 +60,7 @@ pub mod coo;
 pub mod csr;
 pub mod csr5;
 pub mod csrk;
+pub mod dia;
 pub mod ell;
 pub mod factory;
 pub mod sellcs;
@@ -66,6 +71,7 @@ pub use coo::CooKernel;
 pub use csr::{CsrParallel, CsrSerial};
 pub use csr5::Csr5Kernel;
 pub use csrk::{Csr2Kernel, Csr3Kernel};
+pub use dia::DiaKernel;
 pub use ell::EllKernel;
 pub use factory::{build_execution, build_part_kernel, BuiltExecution};
 pub use sellcs::SellCsKernel;

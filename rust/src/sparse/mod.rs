@@ -16,6 +16,10 @@
 //!   ELL format: σ-window row sorting, C-row chunks at per-chunk padded
 //!   width, chunk-local permutation — the planner's third irregular
 //!   option and its hybrid-remainder format.
+//! * [`dia`] — partially-diagonal format (Fukaya et al.): the k densest
+//!   diagonals stored slot-major with per-diagonal offsets (no
+//!   per-nonzero column index), the spill returned as a remainder CSR —
+//!   the planner's **fourth rail** for stencil/FEM operands.
 //! * [`mm`] — Matrix Market I/O.
 //! * [`gen`] — synthetic matrix generators per problem class, the
 //!   substitute for the SuiteSparse download (offline environment).
@@ -29,6 +33,7 @@ pub mod coo;
 pub mod csr;
 pub mod csr5;
 pub mod csrk;
+pub mod dia;
 pub mod ell;
 pub mod gen;
 pub mod mm;
@@ -41,10 +46,12 @@ pub use coo::Coo;
 pub use csr::Csr;
 pub use csr5::Csr5;
 pub use csrk::CsrK;
+pub use dia::Dia;
 pub use ell::Ell;
 pub use sellcs::SellCs;
 pub use split::{
-    nnz_balanced_bounds, split_by_row_nnz, split_n_by_rows, RowPart, ShardedCsr, SplitCsr,
+    nnz_balanced_bounds, split_by_dia_rows, split_by_row_nnz, split_n_by_rows, RowPart,
+    ShardedCsr, SplitCsr,
 };
 pub use suite::{SuiteEntry, SuiteScale};
 

@@ -19,7 +19,10 @@
 //!    original → (part, local) ([`SplitCsr::locate`]). Every source row
 //!    lands in exactly one part and `body.nnz() + remainder.nnz() ==
 //!    source.nnz()` — the round-trip invariant the integration tests
-//!    pin down.
+//!    pin down. The same struct also carries the **diagonal-membership**
+//!    cut ([`split_by_dia_rows`]): rows wholly on a chosen diagonal set
+//!    become a DIA-representable body, the off-diagonal rows the
+//!    remainder — the fourth rail's hybrid substrate.
 //!
 //! 2. **By position, N ways** ([`split_n_by_rows`]): the scale-out
 //!    topology. N contiguous row ranges with nnz-balanced boundaries
@@ -104,6 +107,61 @@ pub fn split_by_row_nnz<T: Scalar>(a: &Csr<T>, threshold: usize) -> SplitCsr<T> 
         source_rows: n,
         source_cols: a.ncols(),
         threshold,
+        body: Csr::from_parts(body_rows.len(), a.ncols(), body_ptr, body_cols, body_vals),
+        remainder: Csr::from_parts(rem_rows.len(), a.ncols(), rem_ptr, rem_cols, rem_vals),
+        body_rows,
+        remainder_rows: rem_rows,
+    }
+}
+
+/// Partition `a` by diagonal membership — the row-wise form of Fukaya
+/// et al.'s partially-diagonal decomposition `A = A_dia + A_rest`:
+/// rows whose **every** nonzero sits on one of the listed diagonals
+/// (`col − row ∈ offsets`) become the body, rows with any entry off
+/// the diagonal set become the remainder.
+///
+/// The cut is per-row rather than per-entry because the composite
+/// kernel's merge step is a row *scatter* (each part owns its rows
+/// outright, `kernels::composite` overwrites — it never accumulates
+/// two parts into one row), so a DIA-body hybrid plan must hand each
+/// source row wholly to one part. The body is then exactly
+/// representable by `Dia::from_offsets` with an empty spill, which the
+/// factory debug-asserts when it builds the plan.
+///
+/// The returned [`SplitCsr::threshold`] is set to `usize::MAX`: this
+/// partition is not a row-nnz cut, and no row-length threshold
+/// reproduces it.
+pub fn split_by_dia_rows<T: Scalar>(a: &Csr<T>, offsets: &[i64]) -> SplitCsr<T> {
+    let n = a.nrows();
+    let mut body_ptr = vec![0u32];
+    let mut body_cols = Vec::new();
+    let mut body_vals = Vec::new();
+    let mut body_rows = Vec::new();
+    let mut rem_ptr = vec![0u32];
+    let mut rem_cols = Vec::new();
+    let mut rem_vals = Vec::new();
+    let mut rem_rows = Vec::new();
+    for i in 0..n {
+        let (cols, vals) = a.row(i);
+        let on_diagonals = cols
+            .iter()
+            .all(|&c| offsets.contains(&(c as i64 - i as i64)));
+        if on_diagonals {
+            body_rows.push(i as u32);
+            body_cols.extend_from_slice(cols);
+            body_vals.extend_from_slice(vals);
+            body_ptr.push(body_cols.len() as u32);
+        } else {
+            rem_rows.push(i as u32);
+            rem_cols.extend_from_slice(cols);
+            rem_vals.extend_from_slice(vals);
+            rem_ptr.push(rem_cols.len() as u32);
+        }
+    }
+    SplitCsr {
+        source_rows: n,
+        source_cols: a.ncols(),
+        threshold: usize::MAX,
         body: Csr::from_parts(body_rows.len(), a.ncols(), body_ptr, body_cols, body_vals),
         remainder: Csr::from_parts(rem_rows.len(), a.ncols(), rem_ptr, rem_cols, rem_vals),
         body_rows,
@@ -409,6 +467,57 @@ mod tests {
                 y_ref[o as usize]
             );
         }
+    }
+
+    #[test]
+    fn dia_row_split_partitions_by_diagonal_membership() {
+        use crate::sparse::Dia;
+        // a grid with hub rows spliced in: grid rows are wholly on the
+        // five stencil diagonals, hub rows are not
+        let g = gen::grid2d_5pt::<f64>(10, 10);
+        let n = g.nrows();
+        let mut c = Coo::new(n, n);
+        for i in 0..n {
+            let (cols, vals) = g.row(i);
+            for (&cc, &v) in cols.iter().zip(vals) {
+                c.push(i, cc as usize, v);
+            }
+        }
+        c.push(7, 93, 0.25); // off-diagonal entry poisons row 7
+        let a = c.to_csr();
+        let offsets = [-10i64, -1, 0, 1, 10];
+        let s = split_by_dia_rows(&a, &offsets);
+        assert_eq!(s.body.nnz() + s.remainder.nnz(), a.nnz());
+        assert_eq!(s.body_rows.len() + s.remainder_rows.len(), n);
+        assert_eq!(s.remainder_rows, vec![7u32]);
+        assert!(!s.body_rows.contains(&7));
+        // the body re-inflated to source shape is exactly representable
+        // on the chosen diagonals: from_offsets spills nothing
+        let (d, rest) = Dia::from_offsets(&s.body_square(), &offsets);
+        assert_eq!(rest.nnz(), 0, "body must be wholly on the diagonal set");
+        assert_eq!(d.nnz(), s.body.nnz());
+        // rows survive the cut verbatim
+        for (l, &o) in s.body_rows.iter().enumerate() {
+            assert_eq!(s.body.row(l), a.row(o as usize));
+        }
+        for (l, &o) in s.remainder_rows.iter().enumerate() {
+            assert_eq!(s.remainder.row(l), a.row(o as usize));
+        }
+    }
+
+    #[test]
+    fn dia_row_split_extremes() {
+        let a = gen::grid2d_5pt::<f64>(6, 6);
+        // all stencil offsets: remainder empty
+        let all = split_by_dia_rows(&a, &[-6, -1, 0, 1, 6]);
+        assert_eq!(all.remainder.nnz(), 0);
+        assert_eq!(all.body.nnz(), a.nnz());
+        // main diagonal only: every grid row has neighbour entries, so
+        // no row is wholly on {0} — everything spills
+        let none = split_by_dia_rows(&a, &[0]);
+        assert_eq!(none.body.nnz(), 0);
+        assert_eq!(none.remainder.nnz(), a.nnz());
+        assert_eq!(none.threshold, usize::MAX);
     }
 
     #[test]

@@ -10,9 +10,9 @@ use std::sync::Arc;
 
 use csrk::kernels::{
     pack_block, unpack_block, BcsrKernel, CooKernel, Csr2Kernel, Csr3Kernel, Csr5Kernel,
-    CsrParallel, CsrSerial, EllKernel, SellCsKernel, SpMv,
+    CsrParallel, CsrSerial, DiaKernel, EllKernel, SellCsKernel, SpMv,
 };
-use csrk::sparse::{gen, suite, Bcsr, Coo, Csr, Csr5, CsrK, Ell, Scalar, SellCs, SuiteScale};
+use csrk::sparse::{gen, suite, Bcsr, Coo, Csr, Csr5, CsrK, Dia, Ell, Scalar, SellCs, SuiteScale};
 use csrk::util::{Rng, ThreadPool};
 
 fn check<T: csrk::sparse::Scalar>(k: &dyn SpMv<T>, a: &csrk::sparse::Csr<T>, tol: f64, tag: &str) {
@@ -130,6 +130,10 @@ fn all_kernels<T: Scalar>(a: &Csr<T>, pool: &Arc<ThreadPool>) -> Vec<Box<dyn SpM
         Box::new(CsrParallel::new(a.clone(), pool.clone())),
         Box::new(Csr2Kernel::new(CsrK::csr2_uniform(a.clone(), 48), pool.clone())),
         Box::new(Csr3Kernel::new(CsrK::csr3_uniform(a.clone(), 6, 9), pool.clone())),
+        // unbounded capture: every case (grid, FEM, random, power-law)
+        // is representable losslessly, so the harness's flops check
+        // (2·nnz) and the reference comparison both apply verbatim
+        Box::new(DiaKernel::new(Dia::from_csr(a, usize::MAX).0, pool.clone())),
     ]
 }
 

@@ -14,8 +14,9 @@ use std::sync::Arc;
 use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::kernels::{build_execution, SpMv};
 use csrk::sparse::{gen, split_by_row_nnz, Coo, Csr};
+use csrk::analysis::roofline::{dia_bytes, spmv_bytes};
 use csrk::tuning::planner::{
-    self, FormatPlan, MatrixStats, PartPlan, PlannedKernel, ReorderPlan,
+    self, FormatPlan, HybridSplit, MatrixStats, PartPlan, PlannedKernel, ReorderPlan,
     REGULARITY_VARIANCE_MAX,
 };
 use csrk::tuning::{csr3_params_multi, Device};
@@ -51,7 +52,9 @@ fn plans_straddling_the_variance_boundary_diverge() {
 
 #[test]
 fn regular_plan_keeps_the_paper_heuristic_parameters() {
-    let a = gen::grid2d_5pt::<f32>(24, 24);
+    // regular but off the stencil diagonals, so the Band-k arm (not
+    // the fourth rail) carries the paper's §4 heuristics
+    let a = gen::alternating_rows::<f32>(64, 5, 11);
     for hint in [1usize, 8, 16] {
         let p = planner::plan_hinted(&a, hint);
         let expect = csr3_params_multi(Device::Ampere, a.rdensity(), hint);
@@ -64,7 +67,7 @@ fn regular_plan_keeps_the_paper_heuristic_parameters() {
                     "hint {hint}: Band-k targets must be the unchanged §4.1 values"
                 );
             }
-            FormatPlan::Hybrid { .. } => panic!("regular matrices plan Single"),
+            _ => panic!("regular matrices plan Single"),
         }
     }
 }
@@ -154,8 +157,8 @@ fn hybrid_planned_circuit_matches_reference() {
 fn hybrid_split_round_trip_invariant() {
     let a = gen::circuit::<f32>(32, 32, 7);
     let threshold = match planner::plan(&a) {
-        FormatPlan::Hybrid { threshold, .. } => threshold,
-        FormatPlan::Single { .. } => panic!("expected a hybrid plan"),
+        FormatPlan::Hybrid { split: HybridSplit::RowNnz { threshold }, .. } => threshold,
+        other => panic!("expected a row-nnz hybrid plan: {}", other.summary()),
     };
     let s = split_by_row_nnz(&a, threshold);
     assert_eq!(s.body.nnz() + s.remainder.nnz(), a.nnz());
@@ -200,7 +203,7 @@ fn kkt_conformance_planned_and_forced_hybrid() {
     assert!(!s.body_rows.is_empty() && !s.remainder_rows.is_empty());
     let stats = MatrixStats::of(&a);
     let plan = FormatPlan::Hybrid {
-        threshold,
+        split: HybridSplit::RowNnz { threshold },
         body: PartPlan {
             rows: s.body_rows.len(),
             nnz: s.body.nnz(),
@@ -304,7 +307,7 @@ fn large_hub_fixture_plans_hybrid_with_sell_remainder() {
             );
             assert!(remainder.rows <= 20, "at most the injected hubs: {}", remainder.rows);
         }
-        FormatPlan::Single { .. } => panic!("hub fixture must plan hybrid: {}", p.summary()),
+        _ => panic!("hub fixture must plan hybrid: {}", p.summary()),
     }
     // the SELL remainder prices the device placement alongside CPU/PJRT
     assert!(p.cost(DeviceKind::Sell).is_some(), "{}", p.summary());
@@ -314,6 +317,50 @@ fn large_hub_fixture_plans_hybrid_with_sell_remainder() {
     assert!(e.kernel_name().contains("sellcs"), "{}", e.kernel_name());
     assert!(!e.supports(DeviceKind::Sell), "no sell backend in the default set");
     assert_entry_matches_reference(&e, &a, 4);
+}
+
+/// The fourth-rail acceptance row: the whole FD stencil family —
+/// 3-point chain, 5-point plane, 7-point volume — plans DIA with
+/// exactly the stencil's diagonal count, the modeled DIA stream
+/// undercuts the Band-k + CSR-2 (index-carrying) stream, the built
+/// entry serves bit-compatible answers, and a scale-free matrix is
+/// untouched by the new arm.
+#[test]
+fn stencil_family_plans_dia_and_scale_free_does_not() {
+    let family: Vec<(Csr<f32>, usize)> = vec![
+        (gen::grid2d_5pt::<f32>(48, 1), 3), // 1D chain: 3-point stencil
+        (gen::grid2d_5pt::<f32>(16, 16), 5),
+        (gen::grid3d_7pt::<f32>(6, 6, 6), 7),
+    ];
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = MatrixRegistry::new(pool, None);
+    for (idx, (a, k)) in family.iter().enumerate() {
+        let p = planner::plan(a);
+        match &p {
+            FormatPlan::Single { kernel: PlannedKernel::Dia { ndiags }, reorder, .. } => {
+                assert_eq!(ndiags, k, "stencil {idx} diagonal count: {}", p.summary());
+                assert!(reorder.is_none(), "the fourth rail keeps identity order");
+            }
+            other => panic!("stencil {idx} must plan DIA: {}", other.summary()),
+        }
+        // the acceptance inequality: no index stream → fewer bytes than
+        // the CSR accounting Band-k + CSR-2 would stream
+        assert!(
+            dia_bytes(a.nrows(), a.ncols(), *k, 4) < spmv_bytes(a.nrows(), a.ncols(), a.nnz(), 4),
+            "stencil {idx}: DIA must price below the CSR stream"
+        );
+        let e = registry.register(&format!("stencil{idx}"), a.clone()).unwrap();
+        assert!(e.kernel_name().starts_with("dia"), "{}", e.kernel_name());
+        assert_entry_matches_reference(&e, a, 4);
+    }
+    // scale-free stays on the irregular rail: no dense diagonals exist
+    let p = planner::plan(&gen::power_law::<f32>(600, 8, 1.0, 0x5EED));
+    assert!(
+        !matches!(p, FormatPlan::Single { kernel: PlannedKernel::Dia { .. }, .. }),
+        "power law must not plan DIA: {}",
+        p.summary()
+    );
+    assert!(p.stats().dia_offsets.is_empty(), "no qualifying diagonals: {}", p.summary());
 }
 
 /// The acceptance path: a regular, a hybrid and an irregular matrix
@@ -330,7 +377,7 @@ fn cost_based_routing_serves_all_structure_classes() {
     let e_reg = registry.register("grid", reg_mat.clone()).unwrap();
     let e_hub = registry.register("circuit", hub_mat.clone()).unwrap();
     let e_irr = registry.register("hubs", irr_mat.clone()).unwrap();
-    assert!(e_reg.kernel_name().starts_with("csr2"), "{}", e_reg.describe());
+    assert!(e_reg.kernel_name().starts_with("dia"), "{}", e_reg.describe());
     assert!(e_hub.kernel_name().starts_with("hybrid("), "{}", e_hub.describe());
     assert!(!e_irr.kernel_name().starts_with("csr2"), "{}", e_irr.describe());
 

@@ -85,7 +85,7 @@ fn planner_emits_sell_in_both_roles() {
             assert_eq!(*kernel, PlannedKernel::SellCs { c: SELL_CPU_C, sigma: 32 });
             assert!(reorder.is_none());
         }
-        FormatPlan::Hybrid { .. } => panic!("expected Single: {}", single.summary()),
+        _ => panic!("expected Single: {}", single.summary()),
     }
     assert!(single.cost(BackendId::Sell).is_some());
 
@@ -100,7 +100,7 @@ fn planner_emits_sell_in_both_roles() {
                 hybrid.summary()
             );
         }
-        FormatPlan::Single { .. } => panic!("expected Hybrid: {}", hybrid.summary()),
+        _ => panic!("expected Hybrid: {}", hybrid.summary()),
     }
     assert!(hybrid.cost(BackendId::Sell).is_some());
 }

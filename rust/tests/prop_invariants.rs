@@ -278,6 +278,61 @@ fn prop_sellcs_partition_displacement_and_spmv_any_shape() {
 }
 
 #[test]
+fn prop_dia_capture_partitions_round_trips_and_matches_bitwise() {
+    // Partially-diagonal invariants for arbitrary capture width k: the
+    // k densest diagonals plus the remainder CSR partition the
+    // nonzeros exactly, coverage accounting is exact, the slot-major
+    // store merges back to the source CSR losslessly, and the pooled
+    // kernel is bit-equal to the serial DIA oracle.
+    use std::sync::Arc;
+
+    use csrk::kernels::{DiaKernel, SpMv};
+    use csrk::sparse::Dia;
+    use csrk::util::ThreadPool;
+
+    let pool = Arc::new(ThreadPool::new(3));
+    forall("dia capture", 40, |g| {
+        let a = random_square(g, 60);
+        let max_diags = if g.chance(0.3) { usize::MAX } else { g.usize_in(0, 12) };
+        let (d, rest) = Dia::from_csr(&a, max_diags);
+        assert_eq!(d.nnz() + rest.nnz(), a.nnz(), "capture must partition the nonzeros");
+        if max_diags == usize::MAX {
+            assert_eq!(rest.nnz(), 0, "unbounded capture spills nothing");
+        }
+        let cov = d.nnz() as f64 / a.nnz() as f64;
+        assert!((d.coverage() - cov).abs() < 1e-12, "coverage must be exact");
+        assert!(d.offsets().windows(2).all(|w| w[0] < w[1]), "offsets ascend, unique");
+        // lossless round trip: body CSR + remainder merge back to the
+        // source exactly (the parts are disjoint, so plain union works)
+        let body = d.to_csr();
+        let mut merged = Coo::new(a.nrows(), a.ncols());
+        for src in [&body, &rest] {
+            for i in 0..src.nrows() {
+                let (cols, vals) = src.row(i);
+                for (&cc, &v) in cols.iter().zip(vals) {
+                    merged.push(i, cc as usize, v);
+                }
+            }
+        }
+        let merged = merged.to_csr();
+        assert_eq!(merged.row_ptr(), a.row_ptr());
+        assert_eq!(merged.col_idx(), a.col_idx());
+        assert_eq!(merged.vals(), a.vals());
+        // pooled kernel vs serial oracle: same diagonal-outer order on
+        // a row partition ⇒ bit-equal, not merely close
+        let x = g.f64_vec(a.ncols());
+        let mut y_oracle = vec![f64::NAN; a.nrows()];
+        d.spmv_ref(&x, &mut y_oracle);
+        let k = DiaKernel::new(d, pool.clone());
+        let mut y = vec![f64::NAN; a.nrows()];
+        k.spmv(&x, &mut y);
+        for (i, (u, v)) in y.iter().zip(&y_oracle).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "row {i}: {u} vs {v}");
+        }
+    });
+}
+
+#[test]
 fn prop_csr5_matches_csr_any_tile_shape() {
     forall("csr5 tiles", 30, |g| {
         let a = random_square(g, 60);
