@@ -15,9 +15,12 @@
 //! * **steady_large** — one large grid registered as a 4-way row-shard
 //!   ensemble ([`MatrixRegistry::register_sharded`], shards fanning out
 //!   across CPU and SELL backends concurrently) under a steady
-//!   closed-loop stream with 8 outstanding requests.
+//!   closed-loop stream with 8 outstanding requests, submitted through
+//!   the blocking [`Server::submit_wait`] path (a waited-out submit
+//!   counts as rejected).
 //!
 //! [`Server::try_submit`]: csrk::coordinator::Server::try_submit
+//! [`Server::submit_wait`]: csrk::coordinator::Server::submit_wait
 //! [`MatrixRegistry::register_sharded`]: csrk::coordinator::MatrixRegistry::register_sharded
 
 use std::collections::VecDeque;
@@ -84,8 +87,8 @@ fn bursty_small(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
             let x: Vec<f32> = (0..n).map(|i| ((i + k) % 7) as f32 - 3.0).collect();
             match server.try_submit(name, x) {
                 Ok((_, rx)) => held.push(rx),
-                Err(SubmitError::QueueFull { .. } | SubmitError::Timeout { .. }) => rejected += 1,
-                Err(SubmitError::Closed) => panic!("server closed mid-run"),
+                Err(SubmitError::QueueFull { .. }) => rejected += 1,
+                Err(e) => panic!("try_submit cannot fail with {e}"),
             }
         }
         for rx in held {
@@ -144,13 +147,15 @@ fn steady_large(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
         if outstanding.len() < 8 {
             let x: Vec<f32> = (0..n).map(|i| ((i + seq) % 13) as f32 / 13.0 - 0.5).collect();
             seq += 1;
-            match server.try_submit("big", x) {
+            // the paced-producer path: park on freed capacity instead of
+            // shedding, count a waited-out submit as rejected
+            match server.submit_wait("big", x, Duration::from_millis(5)) {
                 Ok((_, rx)) => outstanding.push_back(rx),
-                Err(SubmitError::QueueFull { .. } | SubmitError::Timeout { .. }) => {
+                Err(SubmitError::Timeout { .. }) => {
                     rejected += 1;
                     drain(&mut outstanding);
                 }
-                Err(SubmitError::Closed) => panic!("server closed mid-run"),
+                Err(e) => panic!("submit_wait cannot fail with {e}"),
             }
         } else {
             drain(&mut outstanding);

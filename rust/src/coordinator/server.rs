@@ -138,16 +138,29 @@ impl InflightGauge {
         self.count.fetch_add(1, Ordering::AcqRel);
     }
 
-    /// Claim a slot only under `depth`: the add-then-check keeps the
-    /// bound exact under concurrent submitters — a failed claim returns
-    /// the slot before anything treats the request as admitted.
+    /// Claim a slot only under `depth`: a CAS loop that increments only
+    /// while `count < depth`, keeping the bound exact under concurrent
+    /// submitters. A failed claim touches nothing — in particular it
+    /// never calls [`InflightGauge::release`], whose notify path takes
+    /// `self.lock`; `claim_blocking` retries this while *holding* that
+    /// lock, and a release-on-failure would self-deadlock there (std
+    /// mutexes are non-reentrant).
     fn try_claim(&self, depth: usize) -> bool {
-        let prev = self.count.fetch_add(1, Ordering::AcqRel);
-        if prev >= depth {
-            self.release(1);
-            return false;
+        let mut cur = self.count.load(Ordering::Relaxed);
+        loop {
+            if cur >= depth {
+                return false;
+            }
+            match self.count.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
         }
-        true
     }
 
     /// Claim a slot under `depth`, parking on the capacity condvar up

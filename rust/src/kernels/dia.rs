@@ -7,8 +7,9 @@
 //! of each diagonal with its row block:
 //!
 //! ```text
-//! for d in diagonals:            // offsets ascending
-//!     for i in clip(d) ∩ block:  y[i] += vals[d·nrows + i] · x[i + off]
+//! for d in diagonals:                 // offsets ascending
+//!   for span in spans(d):             // one per row-labeling run
+//!     for i in span ∩ block:  y[i] += vals[d·nrows + i] · x[i + shift]
 //! ```
 //!
 //! Every stream in the inner loop — the diagonal slots, `x`, and `y` —
@@ -16,7 +17,10 @@
 //! 4-byte-per-nonzero column-index stream of CSR vanishes and the `x`
 //! gather becomes a sequential read (`analysis::roofline::dia_bytes`
 //! prices exactly this). Padding slots hold `val = 0`, so the sweep is
-//! branch-free inside the clip.
+//! branch-free inside each span. An identity-labeled matrix has one
+//! span per diagonal (the classic DIA clip); a row-compacted hybrid
+//! body ([`Dia::from_offsets_labeled`]) has one per contiguous body
+//! segment.
 //!
 //! Each `y[i]` accumulates its diagonals in ascending-offset order —
 //! the identical per-element order [`Dia::spmv_ref`] uses — so the
@@ -75,11 +79,11 @@ impl<T: Scalar> SpMv<T> for DiaKernel<T> {
             }
             let vals = a.vals();
             for d in 0..a.ndiags() {
-                let off = a.offsets()[d];
-                let (clo, chi) = a.clip(d);
                 let diag = &vals[d * nrows..(d + 1) * nrows];
-                for i in clo.max(lo)..chi.min(hi) {
-                    ys[i] += diag[i] * x[(i as i64 + off) as usize];
+                for (clo, chi, shift) in a.spans(d) {
+                    for i in clo.max(lo)..chi.min(hi) {
+                        ys[i] += diag[i] * x[(i as i64 + shift) as usize];
+                    }
                 }
             }
         });
@@ -122,16 +126,16 @@ impl<T: Scalar> SpMv<T> for DiaKernel<T> {
             }
             let vals = a.vals();
             for d in 0..a.ndiags() {
-                let off = a.offsets()[d];
-                let (clo, chi) = a.clip(d);
                 let diag = &vals[d * nrows..(d + 1) * nrows];
-                for i in clo.max(lo)..chi.min(hi) {
-                    let v = diag[i];
-                    let col = (i as i64 + off) as usize;
-                    let xb = &x[col * nvec..col * nvec + nvec];
-                    let yb = &mut ys[i * nvec..i * nvec + nvec];
-                    for (q, &xv) in yb.iter_mut().zip(xb) {
-                        *q += v * xv;
+                for (clo, chi, shift) in a.spans(d) {
+                    for i in clo.max(lo)..chi.min(hi) {
+                        let v = diag[i];
+                        let col = (i as i64 + shift) as usize;
+                        let xb = &x[col * nvec..col * nvec + nvec];
+                        let yb = &mut ys[i * nvec..i * nvec + nvec];
+                        for (q, &xv) in yb.iter_mut().zip(xb) {
+                            *q += v * xv;
+                        }
                     }
                 }
             }

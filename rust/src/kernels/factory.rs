@@ -99,11 +99,13 @@ pub fn build_part_kernel<T: Scalar>(
         }
         PlannedKernel::CsrParallel => Arc::new(CsrParallel::new(a, pool)),
         PlannedKernel::Dia { .. } => {
-            // Lossless capture of every diagonal the part actually has:
-            // the planner's row-wise cut guarantees the part is
-            // diagonal-representable, but compacting the body's rows
-            // can shift entries off the source offsets, so the leaf
-            // takes the part's own diagonals rather than the plan's.
+            // Single plans (identity order, the whole matrix) and
+            // forced constructions: lossless capture of every diagonal
+            // the operand has. Hybrid DIA bodies do NOT come through
+            // here — they are row-compacted, so [`build_execution`]
+            // captures them against the split's source-row labels
+            // instead (an identity capture would fracture each planned
+            // diagonal into one copy per removed-row segment).
             let (d, rest) = Dia::from_csr(&a, usize::MAX);
             assert_eq!(rest.nnz(), 0, "unbounded DIA capture cannot spill");
             Arc::new(DiaKernel::new(d, pool))
@@ -169,12 +171,29 @@ pub fn build_execution<T: Scalar>(
                 (true, Some(w)) => Some(PaddedCsr::from_csr(&body_csr, *w)),
                 _ => None,
             };
+            // A DIA body must be captured against its source-row
+            // labels: the compact body renumbers rows, which shifts
+            // each contiguous segment onto different diagonal offsets —
+            // an identity capture would fracture every planned diagonal
+            // into one copy per removed-row segment, blowing the stored
+            // slots (and the streamed bytes) far past the plan's
+            // `dia_bytes` pricing. The labeled capture keeps exactly
+            // the plan's offsets over `body_rows` storage rows.
+            let body_kernel: Arc<dyn SpMv<T>> = match (how, &body.kernel) {
+                (HybridSplit::DiaRows { offsets }, PlannedKernel::Dia { ndiags }) => {
+                    let (d, rest) = Dia::from_offsets_labeled(&body_csr, offsets, &body_map);
+                    assert_eq!(
+                        rest.nnz(),
+                        0,
+                        "dia-row split body must sit wholly on the plan's diagonals"
+                    );
+                    debug_assert_eq!(d.ndiags(), *ndiags, "built diagonals must match the plan");
+                    Arc::new(DiaKernel::new(d, pool.clone()))
+                }
+                _ => build_part_kernel(&body.kernel, body_csr, pool.clone()),
+            };
             let parts = vec![
-                CompositePart::new(
-                    build_part_kernel(&body.kernel, body_csr, pool.clone()),
-                    body_perm,
-                    Some(body_map),
-                ),
+                CompositePart::new(body_kernel, body_perm, Some(body_map)),
                 CompositePart::new(
                     build_part_kernel(&remainder.kernel, rem, pool),
                     None,
@@ -386,6 +405,18 @@ mod tests {
         assert_eq!(b.exec.num_parts(), 2);
         assert!(b.exec.name().starts_with("hybrid(dia"), "{}", b.exec.name());
         assert!(b.exec.parts()[0].in_perm().is_none(), "DIA body keeps identity order");
+        // the body is captured against source-row labels: compaction
+        // (two poisoned rows removed) must NOT fracture the five
+        // planned diagonals, and storage stays ndiags × body_rows —
+        // exactly what the plan's dia_bytes row priced
+        let body = b.exec.parts()[0]
+            .kernel()
+            .as_any()
+            .and_then(|any| any.downcast_ref::<DiaKernel<f64>>())
+            .expect("dia body kernel");
+        assert_eq!(body.matrix().ndiags(), 5, "planned diagonals must survive compaction");
+        assert_eq!(body.matrix().nrows(), 142, "body is compact (144 − 2 poisoned rows)");
+        assert_eq!(body.matrix().vals().len(), 5 * 142, "slots = ndiags × body_rows");
         assert!(
             b.exports.iter().all(|e| e.is_none()),
             "no padded export on the fourth rail"

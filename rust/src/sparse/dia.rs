@@ -31,8 +31,30 @@
 //! the bitmap distinguishes stored-zero entries from structural
 //! padding, so [`Dia::to_csr`] reconstructs the captured entries
 //! exactly and the round trip is lossless.
+//!
+//! **Row labeling**: a hybrid body arrives here row-*compacted*
+//! (`sparse::split::split_by_dia_rows` removes the off-diagonal rows),
+//! and renumbering rows shifts every contiguous body segment onto
+//! different offsets — an identity capture would fracture each planned
+//! diagonal into one copy per removed-row segment and blow the stored
+//! slots toward `O(n²)`. [`Dia::from_offsets_labeled`] instead judges
+//! membership against each storage row's **source label** (`col −
+//! label ∈ offsets`), keeping exactly the planner's diagonals over the
+//! compact row space. Labels are held as contiguous runs ([`RowRun`],
+//! one per removed-row segment), so every per-diagonal sweep
+//! ([`Dia::spans`]) remains unit-stride within a run.
 
 use super::{Coo, Csr, Scalar};
+
+/// One contiguous stretch of a [`Dia`] row labeling: storage rows
+/// `local .. local + len` stand for source rows `source .. source +
+/// len`. An identity labeling is the single run `(0, 0, nrows)`.
+#[derive(Debug, Clone, Copy)]
+struct RowRun {
+    local: u32,
+    source: u32,
+    len: u32,
+}
 
 /// Partially-diagonal-format matrix: the captured diagonals of a
 /// sparse operand, slot-major with per-diagonal offsets.
@@ -54,6 +76,10 @@ pub struct Dia<T> {
     nnz: usize,
     /// Source nonzeros (captured + spilled; the coverage denominator).
     source_nnz: usize,
+    /// Row labeling in contiguous runs, covering storage rows
+    /// `0..nrows` in order. Identity unless built through
+    /// [`Dia::from_offsets_labeled`].
+    runs: Vec<RowRun>,
 }
 
 impl<T: Scalar> Dia<T> {
@@ -89,14 +115,54 @@ impl<T: Scalar> Dia<T> {
     /// (deduplicated, stored ascending). Entries off every listed
     /// diagonal spill to the remainder CSR.
     pub fn from_offsets(a: &Csr<T>, offsets: &[i64]) -> (Self, Csr<T>) {
+        let runs = if a.nrows() == 0 {
+            Vec::new()
+        } else {
+            vec![RowRun { local: 0, source: 0, len: a.nrows() as u32 }]
+        };
+        Self::capture(a, offsets, runs)
+    }
+
+    /// [`Dia::from_offsets`] with an explicit row labeling: storage row
+    /// `i` of `a` stands for source row `labels[i]`, and diagonal
+    /// membership is judged against the label (`col − labels[i] ∈
+    /// offsets`), not the storage index. This is how a row-compacted
+    /// hybrid body (`sparse::split::split_by_dia_rows`) keeps the
+    /// planner's source-space diagonals: compaction renumbers rows,
+    /// which would otherwise shift each contiguous body segment onto
+    /// different offsets and fracture every planned diagonal into one
+    /// copy per removed-row segment. Labels need not be contiguous (or
+    /// even monotone); they are run-compressed, and each per-diagonal
+    /// sweep stays unit-stride within a run.
+    pub fn from_offsets_labeled(a: &Csr<T>, offsets: &[i64], labels: &[u32]) -> (Self, Csr<T>) {
+        assert_eq!(labels.len(), a.nrows(), "one source label per storage row");
+        let mut runs: Vec<RowRun> = Vec::new();
+        for (i, &src) in labels.iter().enumerate() {
+            match runs.last_mut() {
+                Some(r) if r.source as usize + r.len as usize == src as usize => r.len += 1,
+                _ => runs.push(RowRun { local: i as u32, source: src, len: 1 }),
+            }
+        }
+        Self::capture(a, offsets, runs)
+    }
+
+    /// Shared capture body: store entries whose offset (`col − label`)
+    /// is listed, spill the rest. `runs` covers storage rows
+    /// `0..a.nrows()` contiguously in order.
+    fn capture(a: &Csr<T>, offsets: &[i64], runs: Vec<RowRun>) -> (Self, Csr<T>) {
         let (nrows, ncols) = (a.nrows(), a.ncols());
         let mut offs = offsets.to_vec();
         offs.sort_unstable();
         offs.dedup();
-        // offset → stored diagonal index, O(1) per entry
-        let base = nrows as i64 - 1;
-        let span = (nrows + ncols).saturating_sub(1);
-        let mut slot_of = vec![usize::MAX; span];
+        // offset → stored diagonal index, O(1) per entry: with labels
+        // up to max_label, offsets live in [-max_label, ncols - 1]
+        let max_label = runs
+            .iter()
+            .map(|r| r.source as usize + r.len as usize - 1)
+            .max()
+            .unwrap_or(0);
+        let base = max_label as i64;
+        let mut slot_of = vec![usize::MAX; max_label + ncols];
         for (d, &o) in offs.iter().enumerate() {
             if -base <= o && o < ncols as i64 {
                 slot_of[(o + base) as usize] = d;
@@ -107,16 +173,20 @@ impl<T: Scalar> Dia<T> {
         let mut mask = vec![0u64; offs.len() * words];
         let mut rest = Coo::new(nrows, ncols);
         let mut nnz = 0usize;
-        for i in 0..nrows {
-            let (cols, rv) = a.row(i);
-            for (&c, &v) in cols.iter().zip(rv) {
-                let d = slot_of[(c as i64 - i as i64 + base) as usize];
-                if d != usize::MAX {
-                    vals[d * nrows + i] = v;
-                    mask[d * words + i / 64] |= 1u64 << (i % 64);
-                    nnz += 1;
-                } else {
-                    rest.push(i, c as usize, v);
+        for run in &runs {
+            for k in 0..run.len as usize {
+                let i = run.local as usize + k;
+                let label = run.source as i64 + k as i64;
+                let (cols, rv) = a.row(i);
+                for (&c, &v) in cols.iter().zip(rv) {
+                    let d = slot_of[(c as i64 - label + base) as usize];
+                    if d != usize::MAX {
+                        vals[d * nrows + i] = v;
+                        mask[d * words + i / 64] |= 1u64 << (i % 64);
+                        nnz += 1;
+                    } else {
+                        rest.push(i, c as usize, v);
+                    }
                 }
             }
         }
@@ -128,6 +198,7 @@ impl<T: Scalar> Dia<T> {
             mask,
             nnz,
             source_nnz: a.nnz(),
+            runs,
         };
         (dia, rest.to_csr())
     }
@@ -188,28 +259,45 @@ impl<T: Scalar> Dia<T> {
         self.mask[d * self.mask_words() + i / 64] >> (i % 64) & 1 == 1
     }
 
-    /// The row range `[lo, hi)` diagonal `d` intersects: rows whose
-    /// column `i + offset` lands inside the matrix.
+    /// The unit-stride sweeps of diagonal `d`: each `(lo, hi, shift)`
+    /// is a storage-row range `lo..hi` whose slots read `x[i + shift]`
+    /// — one span per row-labeling run, clipped to the columns the
+    /// diagonal intersects. An identity labeling yields at most one
+    /// span with `shift = offsets[d]` (the classic DIA clip).
     #[inline]
-    pub fn clip(&self, d: usize) -> (usize, usize) {
+    pub fn spans(&self, d: usize) -> impl Iterator<Item = (usize, usize, i64)> + '_ {
         let off = self.offsets[d];
-        let lo = (-off).max(0) as usize;
-        let hi = (self.ncols as i64 - off).clamp(0, self.nrows as i64) as usize;
-        (lo, hi.max(lo))
+        let ncols = self.ncols as i64;
+        self.runs.iter().filter_map(move |r| {
+            // source rows s with 0 ≤ s + off < ncols, cut to the run
+            let s0 = r.source as i64;
+            let lo_s = s0.max(-off);
+            let hi_s = (s0 + r.len as i64).min(ncols - off);
+            if lo_s >= hi_s {
+                return None;
+            }
+            let shift = s0 - r.local as i64 + off;
+            let lo = (lo_s - s0 + r.local as i64) as usize;
+            let hi = (hi_s - s0 + r.local as i64) as usize;
+            Some((lo, hi, shift))
+        })
     }
 
-    /// Reconstruct the **captured** entries as CSR exactly: offsets
-    /// ascend, so per-row column order is ascending and the occupancy
-    /// bitmap separates stored zeros from padding — re-splitting the
-    /// result captures identical diagonals (lossless round trip).
+    /// Reconstruct the **captured** entries as CSR exactly (in storage
+    /// rows, source columns): offsets ascend, so per-row column order
+    /// (`label + offset`) is ascending, and the occupancy bitmap
+    /// separates stored zeros from padding — re-splitting the result
+    /// with the same labeling captures identical diagonals (lossless
+    /// round trip).
     pub fn to_csr(&self) -> Csr<T> {
         let n = self.nrows;
         let mut row_ptr = vec![0u32; n + 1];
         for d in 0..self.ndiags() {
-            let (lo, hi) = self.clip(d);
-            for i in lo..hi {
-                if self.occupied(d, i) {
-                    row_ptr[i + 1] += 1;
+            for (lo, hi, _) in self.spans(d) {
+                for i in lo..hi {
+                    if self.occupied(d, i) {
+                        row_ptr[i + 1] += 1;
+                    }
                 }
             }
         }
@@ -220,14 +308,14 @@ impl<T: Scalar> Dia<T> {
         let mut vals = vec![T::zero(); self.nnz];
         let mut cursor: Vec<u32> = row_ptr[..n].to_vec();
         for d in 0..self.ndiags() {
-            let off = self.offsets[d];
-            let (lo, hi) = self.clip(d);
-            for i in lo..hi {
-                if self.occupied(d, i) {
-                    let dst = cursor[i] as usize;
-                    col_idx[dst] = (i as i64 + off) as u32;
-                    vals[dst] = self.vals[d * n + i];
-                    cursor[i] += 1;
+            for (lo, hi, shift) in self.spans(d) {
+                for i in lo..hi {
+                    if self.occupied(d, i) {
+                        let dst = cursor[i] as usize;
+                        col_idx[dst] = (i as i64 + shift) as u32;
+                        vals[dst] = self.vals[d * n + i];
+                        cursor[i] += 1;
+                    }
                 }
             }
         }
@@ -247,24 +335,26 @@ impl<T: Scalar> Dia<T> {
             *v = T::zero();
         }
         for d in 0..self.ndiags() {
-            let off = self.offsets[d];
-            let (lo, hi) = self.clip(d);
             let diag = &self.vals[d * self.nrows..(d + 1) * self.nrows];
-            for i in lo..hi {
-                // padding slots add 0 · x — harmless, branch-free
-                y[i] += diag[i] * x[(i as i64 + off) as usize];
+            for (lo, hi, shift) in self.spans(d) {
+                for i in lo..hi {
+                    // padding slots add 0 · x — harmless, branch-free
+                    y[i] += diag[i] * x[(i as i64 + shift) as usize];
+                }
             }
         }
     }
 
     /// Storage bytes: diagonal slots + 8-byte offsets + the occupancy
-    /// bitmap. There is **no per-nonzero index stream** — the term
-    /// `analysis::roofline::dia_bytes` omits (the bitmap is metadata
-    /// the SpMV hot loop never touches).
+    /// bitmap + the row-run table. There is **no per-nonzero index
+    /// stream** — the term `analysis::roofline::dia_bytes` omits the
+    /// bitmap (metadata the SpMV hot loop never touches) and the runs
+    /// (`O(segments)`, not `O(nnz)`).
     pub fn storage_bytes(&self) -> usize {
         self.vals.len() * std::mem::size_of::<T>()
             + self.offsets.len() * 8
             + self.mask.len() * 8
+            + self.runs.len() * std::mem::size_of::<RowRun>()
     }
 }
 
@@ -395,6 +485,88 @@ mod tests {
         d.spmv_ref(&x, &mut y);
         assert_eq!(y, vec![5.0, 12.0, 25.0]);
         assert!(d.storage_bytes() >= 2 * 3 * 8 + 2 * 8);
+    }
+
+    #[test]
+    fn labeled_capture_preserves_source_offsets_across_removed_rows() {
+        use crate::sparse::split_by_dia_rows;
+        // poison two grid rows off the stencil diagonals and cut them
+        // away: the compact body's rows renumber, so an identity
+        // capture fractures each stencil diagonal into one copy per
+        // contiguous segment — the labeled capture must keep exactly
+        // the five source-space diagonals
+        let g = gen::grid2d_5pt::<f64>(10, 10);
+        let n = g.nrows();
+        let mut c = Coo::new(n, n);
+        for i in 0..n {
+            let (cols, vals) = g.row(i);
+            for (&cc, &v) in cols.iter().zip(vals) {
+                c.push(i, cc as usize, v);
+            }
+        }
+        c.push(7, 93, 0.25);
+        c.push(50, 2, -1.0);
+        let a = c.to_csr();
+        let offsets = [-10i64, -1, 0, 1, 10];
+        let s = split_by_dia_rows(&a, &offsets);
+        assert_eq!(s.remainder_rows, vec![7u32, 50]);
+        let (d, rest) = Dia::from_offsets_labeled(&s.body, &offsets, &s.body_rows);
+        assert_eq!(rest.nnz(), 0, "every body entry sits on a labeled diagonal");
+        assert_eq!(d.ndiags(), 5, "diagonals must not fracture");
+        assert_eq!(d.offsets(), &offsets);
+        assert_eq!(d.nrows(), n - 2);
+        assert_eq!(d.vals().len(), 5 * (n - 2), "slots = ndiags × body rows");
+        assert_eq!(d.nnz(), s.body.nnz());
+        // ... while the identity capture of the same compact body
+        // fractures (three segments → up to three copies per diagonal)
+        let (frac, frac_rest) = Dia::from_csr(&s.body, usize::MAX);
+        assert_eq!(frac_rest.nnz(), 0);
+        assert!(frac.ndiags() > 5, "identity capture fractures to {}", frac.ndiags());
+        // bit-correct against the source reference on the body rows
+        let x: Vec<f64> = (0..n).map(|i| ((i * 37) % 19) as f64 - 9.0).collect();
+        let mut y_ref = vec![0.0; n];
+        a.spmv_ref(&x, &mut y_ref);
+        let mut y = vec![f64::NAN; d.nrows()];
+        d.spmv_ref(&x, &mut y);
+        for (l, &o) in s.body_rows.iter().enumerate() {
+            assert!(
+                (y[l] - y_ref[o as usize]).abs() < 1e-12,
+                "body row {l} (source {o}): {} vs {}",
+                y[l],
+                y_ref[o as usize]
+            );
+        }
+        // lossless: the captured entries reconstruct the compact body
+        let back = d.to_csr();
+        assert_eq!(back.row_ptr(), s.body.row_ptr());
+        assert_eq!(back.col_idx(), s.body.col_idx());
+        assert_eq!(back.vals(), s.body.vals());
+    }
+
+    #[test]
+    fn labeled_capture_handles_single_row_runs() {
+        // non-contiguous labels degrade to one run per row and stay
+        // correct (each slot reads x[label + offset])
+        let mut c = Coo::<f64>::new(3, 12);
+        // storage rows stand for source rows 1, 5, 9; entries on the
+        // source main diagonal and superdiagonal
+        for (i, src) in [(0usize, 1usize), (1, 5), (2, 9)] {
+            c.push(i, src, 2.0 + i as f64);
+            c.push(i, src + 1, -1.0);
+        }
+        let a = c.to_csr();
+        let (d, rest) = Dia::from_offsets_labeled(&a, &[0, 1], &[1, 5, 9]);
+        assert_eq!(rest.nnz(), 0);
+        assert_eq!(d.ndiags(), 2);
+        let x: Vec<f64> = (0..12).map(|i| i as f64 + 1.0).collect();
+        let mut y = vec![f64::NAN; 3];
+        d.spmv_ref(&x, &mut y);
+        // row i: val·x[src] − x[src + 1]
+        assert_eq!(y, vec![2.0 * 2.0 - 3.0, 3.0 * 6.0 - 7.0, 4.0 * 10.0 - 11.0]);
+        let back = d.to_csr();
+        assert_eq!(back.row_ptr(), a.row_ptr());
+        assert_eq!(back.col_idx(), a.col_idx());
+        assert_eq!(back.vals(), a.vals());
     }
 
     #[test]
