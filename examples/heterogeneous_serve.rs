@@ -2,8 +2,10 @@
 //! requests for several suite matrices across the registered execution
 //! backends (CPU kernels; the simulated wide-SIMD SELL device; PJRT/AOT
 //! when artifacts exist), reporting per-backend bindings — including
-//! the hybrid body→pjrt / remainder→cpu placement and the SELL-planned
-//! entry's cpu + sell[sellcs(c32, …)] bindings — plus latency and
+//! the hybrid body→pjrt / remainder→cpu placement, the SELL-planned
+//! entry's cpu + sell[sellcs(c32, …)] bindings, and the mixed-precision
+//! stencil entry whose plan narrows its value storage to f16 (`vals
+//! f16` in describe, `,f16` in the kernel name) — plus latency and
 //! throughput. The serving smoke job in CI runs exactly this binary.
 //!
 //! ```bash
@@ -80,6 +82,14 @@ fn main() {
     for line in registry.describe() {
         println!("  {line}");
     }
+    // the mixed-precision rail, live on the serving path: the 7-point
+    // stencil's values are f16-exact, so the planner's bit-exact gate
+    // narrows its value storage — the describe line carries the
+    // `vals f16` plan tag and the built kernel the `,f16` name suffix
+    // (the CI serving-smoke job greps for exactly this)
+    let e = registry.get("stencil-dia").unwrap();
+    assert!(e.describe().contains("vals f16"), "{}", e.describe());
+    assert!(e.kernel_name().contains(",f16)"), "{}", e.kernel_name());
 
     let mut table = Table::new(&["route", "matrix", "requests", "p50 us", "p99 us", "req/s"]).numeric();
     // First pass: cost-based routing (the default). Second pass: every

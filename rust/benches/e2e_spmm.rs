@@ -9,6 +9,16 @@
 //! Expectation (the PR acceptance bar): batched SpMM beats the SpMV
 //! loop at batch size ≥ 4 on at least one suite matrix — the effect is
 //! strongest once the matrix no longer fits in cache.
+//!
+//! The third section is the **value-precision sweep**: the same
+//! operands built at forced f32 / f16 / bf16 value storage (f32
+//! accumulation throughout), at nvec {1, 8}, printing the measured
+//! throughput next to the planner's priced cost so the half-value
+//! speedup can be checked against the roofline that chose it. The
+//! sweep rows land in `BENCH_precision.json` (uploaded as a CI
+//! artifact); expectation: the grid3d-7pt f16 row beats f32
+//! single-vector throughput ≥ 1.4× with the priced ratio within 25%
+//! of measured.
 
 use std::sync::Arc;
 
@@ -16,7 +26,7 @@ use csrk::coordinator::{MatrixRegistry, Server, ServerConfig};
 use csrk::kernels::{
     build_execution, pack_block, Csr2Kernel, CsrParallel, DiaKernel, SellCsKernel, SpMv,
 };
-use csrk::sparse::{gen, suite, Csr, CsrK, Dia, SellCs, SuiteScale};
+use csrk::sparse::{gen, suite, Csr, CsrK, Dia, SellCs, SuiteScale, ValuePrecision};
 use csrk::tuning::cpu::FIXED_SRS;
 use csrk::tuning::planner;
 use csrk::util::table::{f, Table};
@@ -119,6 +129,94 @@ fn main() {
         }
     }
     t.print();
+
+    println!("\n== value-precision sweep: f32 vs f16/bf16 value storage (f32 accumulate) ==\n");
+    let mut tp = Table::new(&[
+        "matrix", "vals", "kernel", "nvec", "GF/s", "x vs f32", "priced us", "priced x",
+    ])
+    .numeric();
+    let mut json_rows: Vec<String> = Vec::new();
+    // acceptance-bar readout: (precision label, measured speedup,
+    // priced speedup) on the grid3d-7pt single-vector rows
+    let mut gate: Vec<(&str, f64, f64)> = Vec::new();
+    // the stencil is the strongest half-storage case (the DIA rail's
+    // stream is almost pure values, so halving them halves the
+    // traffic); alt-bands shows the index-carrying SELL rail where the
+    // column stream dilutes the win
+    let sweep: Vec<(&str, Csr<f32>)> = vec![
+        ("grid3d-7pt", gen::grid3d_7pt::<f32>(36, 36, 36)),
+        ("alt-bands", gen::alternating_rows::<f32>(20_000, 4, 12)),
+    ];
+    for (name, a) in &sweep {
+        let (n, m) = (a.nrows(), a.ncols());
+        for &nvec in SELL_NVEC.iter() {
+            // (measured gflops, priced seconds) of the f32 row, the
+            // per-batch baseline the half rows are normalized against
+            let mut base: Option<(f64, f64)> = None;
+            for prec in [ValuePrecision::F32, ValuePrecision::F16, ValuePrecision::Bf16] {
+                // forced precision: these fixtures are half-exact, so
+                // the auto gate would narrow anyway — forcing keeps the
+                // f32 baseline honest and the sweep explicit
+                let plan = planner::plan_hinted_prec(a, nvec, Some(prec));
+                let priced = planner::plan_cpu_cost(&plan, planner::CPU_ROOFLINE.mem_bw_gbps);
+                let k = build_execution(&plan, a.clone(), pool.clone(), false).exec;
+                let xs: Vec<Vec<f32>> = (0..nvec)
+                    .map(|j| {
+                        (0..m)
+                            .map(|i| ((i * 7 + j * 13 + 1) % 23) as f32 / 23.0 - 0.5)
+                            .collect()
+                    })
+                    .collect();
+                let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+                let xb = pack_block(&refs);
+                let mut yb = vec![0f32; n * nvec];
+                let bench = Bencher::new().warmups(2).runs(7);
+                let timing = bench.run("spmm", || k.spmv_multi(&xb, &mut yb, nvec));
+                let gflops = timing.gflops(k.flops() * nvec as f64);
+                let (base_gf, base_priced) = *base.get_or_insert((gflops, priced));
+                let speedup = gflops / base_gf;
+                let priced_speedup = base_priced / priced;
+                if *name == "grid3d-7pt" && nvec == 1 && prec != ValuePrecision::F32 {
+                    gate.push((prec.label(), speedup, priced_speedup));
+                }
+                tp.row(&[
+                    (*name).into(),
+                    prec.label().into(),
+                    k.name(),
+                    nvec.to_string(),
+                    f(gflops, 2),
+                    f(speedup, 2),
+                    f(priced * 1e6, 1),
+                    f(priced_speedup, 2),
+                ]);
+                json_rows.push(format!(
+                    "{{\"matrix\":\"{}\",\"vals\":\"{}\",\"kernel\":\"{}\",\"nvec\":{},\
+                     \"gflops\":{:.3},\"speedup_vs_f32\":{:.3},\
+                     \"priced_us\":{:.3},\"priced_speedup_vs_f32\":{:.3}}}",
+                    name,
+                    prec.label(),
+                    k.name(),
+                    nvec,
+                    gflops,
+                    speedup,
+                    priced * 1e6,
+                    priced_speedup,
+                ));
+            }
+        }
+    }
+    tp.print();
+    for (label, measured, priced) in &gate {
+        let agree = (measured / priced - 1.0).abs() <= 0.25;
+        println!(
+            "grid3d-7pt {label} nvec 1: measured x{measured:.2} vs priced x{priced:.2} \
+             ({}; bar: f16 >= 1.40x, priced within 25%)",
+            if agree { "agree" } else { "DISAGREE" },
+        );
+    }
+    let json = format!("{{\"bench\":\"precision\",\"rows\":[{}]}}\n", json_rows.join(","));
+    std::fs::write("BENCH_precision.json", &json).expect("write BENCH_precision.json");
+    println!("wrote BENCH_precision.json");
 
     println!("\n== serving stack: max_batch 1 vs 16 (same request load) ==\n");
     let mut t2 = Table::new(&["max_batch", "requests", "batches", "p50 us", "req/s", "GFlop/s"])

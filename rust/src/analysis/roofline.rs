@@ -31,7 +31,22 @@ pub fn roofline_curve(device: &DeviceSpec, points: usize) -> Vec<RooflinePoint> 
 /// (`tuning::planner::part_cpu_cost`) with the same accounting used
 /// here.
 pub fn spmv_bytes(nrows: usize, ncols: usize, nnz: usize, elem: usize) -> usize {
-    nnz * (elem + 4) + (nrows + 1) * 4 + ncols * elem + nrows * elem
+    spmv_bytes_val(nrows, ncols, nnz, elem, elem)
+}
+
+/// [`spmv_bytes`] with the value stream and the vector streams priced
+/// at different element sizes — the mixed-precision accounting. A
+/// half-value plan stores `val_elem = 2` bytes per nonzero while `x`
+/// and `y` stay at the native `vec_elem`; the 4-byte index streams are
+/// unchanged. `spmv_bytes(…, e) ≡ spmv_bytes_val(…, e, e)`.
+pub fn spmv_bytes_val(
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    val_elem: usize,
+    vec_elem: usize,
+) -> usize {
+    nnz * (val_elem + 4) + (nrows + 1) * 4 + ncols * vec_elem + nrows * vec_elem
 }
 
 /// Cold-cache SpMV byte traffic of a SELL-C-σ operand from raw
@@ -50,7 +65,23 @@ pub fn sellcs_bytes(
     nchunks: usize,
     elem: usize,
 ) -> usize {
-    padded_nnz * (elem + 4) + (nchunks + 1) * 4 + nrows * 4 + ncols * elem + nrows * elem
+    sellcs_bytes_val(nrows, ncols, padded_nnz, nchunks, elem, elem)
+}
+
+/// [`sellcs_bytes`] with value slots and vector streams priced at
+/// different element sizes (see [`spmv_bytes_val`]): padded value slots
+/// cost `val_elem` each, `x`/`y` cost `vec_elem`, index streams are
+/// unchanged.
+pub fn sellcs_bytes_val(
+    nrows: usize,
+    ncols: usize,
+    padded_nnz: usize,
+    nchunks: usize,
+    val_elem: usize,
+    vec_elem: usize,
+) -> usize {
+    padded_nnz * (val_elem + 4) + (nchunks + 1) * 4 + nrows * 4 + ncols * vec_elem
+        + nrows * vec_elem
 }
 
 /// Cold-cache SpMV byte traffic of a partially-diagonal (DIA) operand
@@ -63,7 +94,21 @@ pub fn sellcs_bytes(
 /// is the entire bandwidth argument for the format (Fukaya et al.) and
 /// why the planner prices stencil operands here below Band-k + CSR-2.
 pub fn dia_bytes(nrows: usize, ncols: usize, ndiags: usize, elem: usize) -> usize {
-    ndiags * nrows * elem + ndiags * 8 + ncols * elem + nrows * elem
+    dia_bytes_val(nrows, ncols, ndiags, elem, elem)
+}
+
+/// [`dia_bytes`] with diagonal slots and vector streams priced at
+/// different element sizes (see [`spmv_bytes_val`]). DIA has no index
+/// stream at all, so halving `val_elem` cuts nearly the whole matrix
+/// stream — the strongest case for mixed precision among the rails.
+pub fn dia_bytes_val(
+    nrows: usize,
+    ncols: usize,
+    ndiags: usize,
+    val_elem: usize,
+    vec_elem: usize,
+) -> usize {
+    ndiags * nrows * val_elem + ndiags * 8 + ncols * vec_elem + nrows * vec_elem
 }
 
 /// SpMV arithmetic intensity for a CSR matrix in the paper's cold-cache
@@ -117,6 +162,32 @@ mod tests {
         );
         // each extra stored diagonal charges a full padded slot column
         assert_eq!(dia_bytes(n, n, 6, 4) - dia, n * 4 + 8);
+    }
+
+    #[test]
+    fn val_split_variants_delegate_and_halve_only_the_value_stream() {
+        // native calls are exactly the val = vec case
+        assert_eq!(spmv_bytes(100, 100, 500, 4), spmv_bytes_val(100, 100, 500, 4, 4));
+        assert_eq!(
+            sellcs_bytes(100, 100, 750, 13, 4),
+            sellcs_bytes_val(100, 100, 750, 13, 4, 4)
+        );
+        assert_eq!(dia_bytes(100, 100, 5, 4), dia_bytes_val(100, 100, 5, 4, 4));
+        // halving the value element removes exactly 2 bytes per stored
+        // slot — the index and vector streams are untouched
+        assert_eq!(
+            spmv_bytes_val(100, 100, 500, 4, 4) - spmv_bytes_val(100, 100, 500, 2, 4),
+            500 * 2
+        );
+        assert_eq!(
+            sellcs_bytes_val(100, 100, 750, 13, 4, 4)
+                - sellcs_bytes_val(100, 100, 750, 13, 2, 4),
+            750 * 2
+        );
+        assert_eq!(
+            dia_bytes_val(100, 100, 5, 4, 4) - dia_bytes_val(100, 100, 5, 2, 4),
+            5 * 100 * 2
+        );
     }
 
     #[test]

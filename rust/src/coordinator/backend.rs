@@ -77,15 +77,15 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::analysis::roofline::sellcs_bytes;
+use crate::analysis::roofline::sellcs_bytes_val;
 use crate::gpusim::{DeviceSpec, MemSim};
 use crate::kernels::{
     pack_block, unpack_block, BuiltExecution, CompositeExec, CompositePart, SellCsKernel, SpMv,
 };
 use crate::reorder::Permutation;
 use crate::runtime::{Runtime, SpmvExecutor};
-use crate::sparse::SellCs;
-use crate::tuning::cpu::stream_triad_gbps;
+use crate::sparse::{Bf16, SellCs, Storage, ValuePrecision, ValueStorage, F16};
+use crate::tuning::cpu::{pool_launch_overhead_s, stream_triad_gbps};
 use crate::tuning::planner::{
     self, FormatPlan, MatrixStats, PlannedKernel, ShardPlan, CPU_ROOFLINE, SELL_DEVICE_C,
     SELL_ROOFLINE,
@@ -182,35 +182,55 @@ fn triad_gbps_for(pool: &Arc<ThreadPool>) -> f64 {
     *map.entry(pool.threads()).or_insert_with(|| stream_triad_gbps(pool))
 }
 
+/// Process-wide fork/join launch-overhead measurements, keyed by pool
+/// width like [`TRIAD_GBPS`] — the second measured constant of the cost
+/// model (dispatch floor beside the bandwidth ceiling).
+static LAUNCH_S: OnceLock<Mutex<HashMap<usize, f64>>> = OnceLock::new();
+
+/// The cached-per-width launch-overhead measurement for `pool`.
+fn launch_s_for(pool: &Arc<ThreadPool>) -> f64 {
+    let cache = LAUNCH_S.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    *map.entry(pool.threads()).or_insert_with(|| pool_launch_overhead_s(pool))
+}
+
 /// The host backend: the built composite over the crate thread pool,
 /// with its routing prior priced at the **measured** STREAM-triad
-/// bandwidth ([`stream_triad_gbps`], run once per process at first
-/// construction) instead of the planner's hard-coded
-/// [`CPU_ROOFLINE`] constant — the calibration half of the ROADMAP
-/// cost-model item.
+/// bandwidth ([`stream_triad_gbps`]) and the **measured** pool dispatch
+/// overhead ([`pool_launch_overhead_s`]) — each run once per pool width
+/// per process — instead of the planner's hard-coded [`CPU_ROOFLINE`]
+/// constants: the calibration half of the ROADMAP cost-model item.
 pub struct CpuBackend {
     pool: Arc<ThreadPool>,
     mem_bw_gbps: f64,
+    launch_s: f64,
 }
 
 impl CpuBackend {
-    /// A CPU backend executing on `pool`, triad-calibrated (one
-    /// measurement per pool width per process, cached).
+    /// A CPU backend executing on `pool`, triad- and launch-calibrated
+    /// (one measurement of each per pool width per process, cached).
     pub fn new(pool: Arc<ThreadPool>) -> Self {
         let bw = triad_gbps_for(&pool);
-        CpuBackend { pool, mem_bw_gbps: bw }
+        let launch = launch_s_for(&pool);
+        CpuBackend { pool, mem_bw_gbps: bw, launch_s: launch }
     }
 
     /// A CPU backend with an explicit streaming bandwidth (GB/s) —
-    /// skips the measurement; for tests that need deterministic priors.
+    /// skips both measurements (the launch term pins to the planner's
+    /// proxy constant); for tests that need deterministic priors.
     pub fn with_bandwidth(pool: Arc<ThreadPool>, mem_bw_gbps: f64) -> Self {
         assert!(mem_bw_gbps > 0.0, "bandwidth must be positive");
-        CpuBackend { pool, mem_bw_gbps }
+        CpuBackend { pool, mem_bw_gbps, launch_s: CPU_ROOFLINE.launch_overhead_s }
     }
 
     /// The streaming bandwidth this backend prices plans at.
     pub fn mem_bw_gbps(&self) -> f64 {
         self.mem_bw_gbps
+    }
+
+    /// The per-dispatch fork/join overhead this backend prices plans at.
+    pub fn launch_overhead_s(&self) -> f64 {
+        self.launch_s
     }
 }
 
@@ -220,18 +240,26 @@ impl Backend for CpuBackend {
     }
 
     fn describe(&self) -> String {
-        format!("cpu({} threads, triad {:.1} GB/s)", self.pool.threads(), self.mem_bw_gbps)
+        format!(
+            "cpu({} threads, triad {:.1} GB/s, launch {:.1} us)",
+            self.pool.threads(),
+            self.mem_bw_gbps,
+            self.launch_s * 1e6
+        )
     }
 
     fn supports_plan(&self, _plan: &FormatPlan) -> bool {
         true // every plan builds host kernels
     }
 
-    /// The routing prior at the *measured* triad bandwidth — this is
-    /// where the calibration replaces the planner's
-    /// [`CPU_ROOFLINE`] constant on the serving path.
+    /// The routing prior at the *measured* triad bandwidth and the
+    /// *measured* dispatch overhead — this is where the calibration
+    /// replaces the planner's [`CPU_ROOFLINE`] constants on the serving
+    /// path. The plan's value precision flows through
+    /// [`planner::plan_cpu_cost_with_launch`], so a half-value plan
+    /// prices its thinner value stream here too.
     fn static_cost(&self, plan: &FormatPlan) -> Option<f64> {
-        Some(planner::plan_cpu_cost(plan, self.mem_bw_gbps))
+        Some(planner::plan_cpu_cost_with_launch(plan, self.mem_bw_gbps, self.launch_s))
     }
 
     fn bind(
@@ -523,6 +551,32 @@ impl SellBackend {
     pub fn new(pool: Arc<ThreadPool>) -> Self {
         SellBackend { pool, c: SELL_DEVICE_C, spec: SELL_ROOFLINE }
     }
+
+    /// Rebuild one SELL-planned host kernel at the device chunk width,
+    /// generic over its value storage `V` (f32 or a half twin — the
+    /// device keeps whatever the plan's precision chose):
+    ///
+    /// 1. round-trip the host structure through CSR
+    ///    ([`SellCs::to_csr`], structural, storage-preserving);
+    /// 2. rebuild at C = [`SELL_DEVICE_C`] with σ re-autotuned for that
+    ///    width — an unbounded fill still binds at the full-sort
+    ///    fallback the cost row already priced;
+    /// 3. replay the rebuilt structure through the memory model
+    ///    ([`modeled_sell_spmv_seconds`], which streams `V::BYTES` per
+    ///    value slot).
+    fn rebind_sell_part<V: ValueStorage<f32>>(
+        &self,
+        host: &SellCsKernel<f32, V>,
+    ) -> (Arc<dyn SpMv<f32>>, f64, String) {
+        let csr = host.matrix().to_csr();
+        let row_nnz: Vec<usize> = (0..csr.nrows()).map(|r| csr.row_nnz(r)).collect();
+        let sigma = planner::sell_sigma_or_full(&row_nnz, self.c);
+        let dev = SellCs::from_csr(&csr, self.c, sigma);
+        let secs = modeled_sell_spmv_seconds(&dev, &self.spec);
+        let kern = SellCsKernel::<f32, V>::new(dev, self.pool.clone());
+        let place = format!("sell[{}]", kern.name());
+        (Arc::new(kern), secs, place)
+    }
 }
 
 impl Backend for SellBackend {
@@ -562,31 +616,31 @@ impl Backend for SellBackend {
         for (i, (part, planned)) in src.iter().zip(&plan_kernels).enumerate() {
             let (kernel, place): (Arc<dyn SpMv<f32>>, String) =
                 if matches!(planned, PlannedKernel::SellCs { .. }) {
-                    let host = part
-                        .kernel()
-                        .as_any()
-                        .and_then(|any| any.downcast_ref::<SellCsKernel<f32>>())
-                        .with_context(|| {
-                            format!("SELL-planned part {i} did not build a sellcs kernel")
-                        })?;
-                    let csr = host.matrix().to_csr();
-                    let row_nnz: Vec<usize> =
-                        (0..csr.nrows()).map(|r| csr.row_nnz(r)).collect();
-                    // re-autotune σ for the device chunk width; an
-                    // unbounded fill still binds at the full-sort
-                    // fallback the cost row already priced
-                    let sigma = planner::sell_sigma_or_full(&row_nnz, self.c);
-                    let dev = SellCs::from_csr(&csr, self.c, sigma);
-                    modeled += modeled_sell_spmv_seconds(&dev, &self.spec);
+                    // the built kernel carries whichever value storage
+                    // the plan's precision picked — try each twin; the
+                    // rebuild preserves that storage on the device
+                    let any = part.kernel().as_any().with_context(|| {
+                        format!("SELL-planned part {i} did not build a sellcs kernel")
+                    })?;
+                    let (kern, secs, place) = if let Some(h) =
+                        any.downcast_ref::<SellCsKernel<f32>>()
+                    {
+                        self.rebind_sell_part(h)
+                    } else if let Some(h) = any.downcast_ref::<SellCsKernel<f32, F16>>() {
+                        self.rebind_sell_part(h)
+                    } else if let Some(h) = any.downcast_ref::<SellCsKernel<f32, Bf16>>() {
+                        self.rebind_sell_part(h)
+                    } else {
+                        bail!("SELL-planned part {i} did not build a sellcs kernel")
+                    };
+                    modeled += secs;
                     device_parts += 1;
-                    let kern = SellCsKernel::new(dev, self.pool.clone());
-                    let place = format!("sell[{}]", kern.name());
-                    (Arc::new(kern), place)
+                    (kern, place)
                 } else {
                     // unplanned-for-SELL parts (the hybrid body) ride on
                     // the shared host kernel, like PJRT's unexported parts
                     let kern = part.kernel().clone();
-                    modeled += cpu_part_model_seconds(kern.as_ref());
+                    modeled += cpu_part_model_seconds(kern.as_ref(), plan.precision());
                     let place = format!("cpu[{}]", kern.name());
                     (kern, place)
                 };
@@ -626,27 +680,40 @@ fn place_label(i: usize, n: usize, place: String) -> String {
 
 /// Modeled host seconds for a part that stays on its CPU kernel (the
 /// hybrid body's share of the simulated clock): the planner's CPU part
-/// roofline at the proxy bandwidth.
-fn cpu_part_model_seconds(k: &dyn SpMv<f32>) -> f64 {
+/// roofline at the proxy bandwidth, with the value stream priced at the
+/// plan's precision (a half-value body streams 2-byte values while its
+/// index and vector streams stay 4-byte).
+fn cpu_part_model_seconds(k: &dyn SpMv<f32>, prec: ValuePrecision) -> f64 {
     let nnz = (k.flops() / 2.0) as usize;
-    planner::cpu_part_cost(k.nrows(), k.ncols(), nnz, 4, CPU_ROOFLINE.mem_bw_gbps)
+    planner::cpu_part_cost_val(
+        k.nrows(),
+        k.ncols(),
+        nnz,
+        prec.val_bytes(),
+        4,
+        CPU_ROOFLINE.mem_bw_gbps,
+    )
 }
 
 /// `gpusim`-style memory accounting for one SELL-C-σ SpMV on the
 /// simulated device: the coalesced streams are the planner's
-/// [`sellcs_bytes`] accounting minus the `x` term (one formula owns the
-/// stream — `x` is gathered instead: replayed chunk by chunk, each slot
-/// one C-lane SIMD gather, sector-grouped through the per-SM L1 /
-/// shared L2 hierarchy, [`MemSim`]). The per-request vector marshaling
+/// [`sellcs_bytes_val`] accounting minus the `x` term (one formula owns
+/// the stream — `x` is gathered instead: replayed chunk by chunk, each
+/// slot one C-lane SIMD gather, sector-grouped through the per-SM L1 /
+/// shared L2 hierarchy, [`MemSim`]). Generic over the chunk storage
+/// `S`: half-value devices stream `S::BYTES = 2` per padded slot while
+/// the gathered `x`, the scattered `y` and the index streams stay at
+/// the 4-byte accumulator width. The per-request vector marshaling
 /// pays the same [`planner::PCIE_GBPS`] transfer the plan-time Sell
 /// cost row charges, so the bind-time clock and the static prior model
 /// one device, not two. Runs once at bind; the resulting seconds are
 /// the binding's deterministic self-timed cost.
-fn modeled_sell_spmv_seconds(a: &SellCs<f32>, spec: &DeviceSpec) -> f64 {
-    const ELEM: usize = 4; // f32
+fn modeled_sell_spmv_seconds<S: Storage>(a: &SellCs<S>, spec: &DeviceSpec) -> f64 {
+    const VEC: usize = 4; // the f32 accumulator width: x, y, marshaling
     let mut mem = MemSim::new(spec);
     let streamed =
-        sellcs_bytes(a.nrows(), a.ncols(), a.padded_nnz(), a.nchunks(), ELEM) - a.ncols() * ELEM;
+        sellcs_bytes_val(a.nrows(), a.ncols(), a.padded_nnz(), a.nchunks(), S::BYTES, VEC)
+            - a.ncols() * VEC;
     mem.stream(streamed as u64);
     let mut addrs = Vec::with_capacity(a.c());
     for k in 0..a.nchunks() {
@@ -654,14 +721,14 @@ fn modeled_sell_spmv_seconds(a: &SellCs<f32>, spec: &DeviceSpec) -> f64 {
         for s in 0..width {
             addrs.clear();
             for lane in 0..lanes {
-                addrs.push(a.cols()[base + s * lanes + lane] as u64 * ELEM as u64);
+                addrs.push(a.cols()[base + s * lanes + lane] as u64 * VEC as u64);
             }
             mem.gather(k % spec.sm_count, &addrs);
         }
     }
     let secs_bw = mem.stats.dram_bytes() as f64 / (spec.mem_bw_gbps * 1e9);
     let secs_fp = 2.0 * a.nnz() as f64 / (spec.fp32_tflops * 1e12);
-    let transfer_s = ((a.ncols() + a.nrows()) * ELEM) as f64 / (planner::PCIE_GBPS * 1e9);
+    let transfer_s = ((a.ncols() + a.nrows()) * VEC) as f64 / (planner::PCIE_GBPS * 1e9);
     secs_bw.max(secs_fp) + transfer_s + spec.launch_overhead_s
 }
 
@@ -789,6 +856,9 @@ fn shard_sub_plan(sp: &ShardPlan, ncols: usize) -> FormatPlan {
         kernel: sp.kernel,
         gpu_params: csr3_params_multi(Device::Ampere, rdensity, 1),
         pjrt_width: None,
+        // sharded plans keep their bit-for-bit promise: every shard
+        // serves native f32 values
+        precision: ValuePrecision::F32,
         costs: vec![(sp.backend, sp.cost)],
     }
 }
@@ -1035,20 +1105,30 @@ mod tests {
     }
 
     #[test]
-    fn cpu_static_cost_is_the_triad_calibrated_estimate() {
+    fn cpu_static_cost_is_the_triad_and_launch_calibrated_estimate() {
         let pool = Arc::new(ThreadPool::new(1));
         let backend = CpuBackend::new(pool.clone());
         assert!(backend.mem_bw_gbps() > 0.0);
+        let launch = backend.launch_overhead_s();
+        assert!((1e-7..=1e-3).contains(&launch), "measured launch {launch} s");
         let plan = planner::plan(&gen::grid2d_5pt::<f32>(10, 10));
         let cost = backend.static_cost(&plan).unwrap();
         assert!(cost.is_finite() && cost > 0.0);
-        assert_eq!(cost, planner::plan_cpu_cost(&plan, backend.mem_bw_gbps()));
-        // an explicit bandwidth pins the prior exactly; half the
-        // bandwidth must never price cheaper
+        assert_eq!(
+            cost,
+            planner::plan_cpu_cost_with_launch(&plan, backend.mem_bw_gbps(), launch)
+        );
+        // an explicit bandwidth pins the prior exactly (the launch term
+        // falls back to the planner's proxy constant, so the prior
+        // equals the plan-time estimate); half the bandwidth must never
+        // price cheaper
         let fixed = CpuBackend::with_bandwidth(pool.clone(), 50.0);
+        assert_eq!(fixed.launch_overhead_s(), CPU_ROOFLINE.launch_overhead_s);
+        assert_eq!(fixed.static_cost(&plan).unwrap(), planner::plan_cpu_cost(&plan, 50.0));
         let slow = CpuBackend::with_bandwidth(pool, 25.0);
         assert!(slow.static_cost(&plan).unwrap() >= fixed.static_cost(&plan).unwrap());
         assert!(fixed.describe().contains("triad 50.0 GB/s"), "{}", fixed.describe());
+        assert!(fixed.describe().contains("launch 5.0 us"), "{}", fixed.describe());
     }
 
     #[test]
@@ -1062,10 +1142,13 @@ mod tests {
             assert!(!sell.supports_plan(&planner::plan(&a)));
         }
         // a SELL-planned matrix binds, matches the reference, and keeps
-        // a deterministic simulated clock
+        // a deterministic simulated clock. The fixture's values are
+        // f16-exact, so the plan auto-gates half storage and the rebind
+        // must carry it onto the device.
         let a = gen::alternating_rows::<f32>(600, 4, 12);
         let plan = planner::plan(&a);
         assert!(sell.supports_plan(&plan), "{}", plan.summary());
+        assert_eq!(plan.precision(), ValuePrecision::F16, "{}", plan.summary());
         let built = build_execution(&plan, a.clone(), pool, false);
         let binding = sell.bind(&built, &plan).unwrap();
         assert_eq!(binding.backend(), BackendId::Sell);
@@ -1074,6 +1157,7 @@ mod tests {
             "{}",
             binding.describe()
         );
+        assert!(binding.describe().contains(",f16)"), "{}", binding.describe());
         let modeled = binding.self_timed_cost().expect("simulated clock");
         assert!(modeled.is_finite() && modeled > 0.0);
         assert_eq!(binding.self_timed_cost(), Some(modeled), "clock is constant");

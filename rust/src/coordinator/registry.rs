@@ -44,7 +44,7 @@ use super::backend::{
 };
 use crate::kernels::{build_execution, SpMv};
 use crate::runtime::Runtime;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, ValuePrecision};
 use crate::tuning::planner::{self, FormatPlan};
 use crate::util::ThreadPool;
 
@@ -133,6 +133,16 @@ impl MatrixEntry {
     /// The plan registration executed.
     pub fn plan(&self) -> &FormatPlan {
         &self.plan
+    }
+
+    /// The value-storage precision the plan chose (and the build
+    /// applied): [`ValuePrecision::F32`] unless the planner's bit-exact
+    /// gate narrowed the value arrays to a half format. Surfaces in
+    /// [`MatrixEntry::describe`] via the plan summary's `vals f16` /
+    /// `vals bf16` tag and in the kernel name's `,f16` / `,bf16`
+    /// suffix.
+    pub fn precision(&self) -> ValuePrecision {
+        self.plan.precision()
     }
 
     /// Name of the execution the build stage constructed (e.g.
@@ -516,6 +526,32 @@ mod tests {
         assert!(lines[1].contains("regular"), "{}", lines[1]);
         assert!(lines[1].contains("Cpu"), "{}", lines[1]);
         assert!(lines[1].contains("bound [cpu["), "{}", lines[1]);
+    }
+
+    #[test]
+    fn precision_gate_surfaces_through_the_entry() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        // stencil values are f16-exact → the plan narrows, the build
+        // applies it, and every observability surface says so
+        let a = gen::grid3d_7pt::<f32>(8, 8, 8);
+        let e = reg.register("grid", a.clone()).unwrap();
+        assert_eq!(e.precision(), ValuePrecision::F16, "{}", e.describe());
+        assert!(e.kernel_name().contains(",f16)"), "{}", e.kernel_name());
+        assert!(e.describe().contains("vals f16"), "{}", e.describe());
+        // widening those exact values back is lossless: the half-value
+        // entry answers bit-identically to the reference
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; a.nrows()];
+        a.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // rng-valued operands fail the bit-exact gate and stay native
+        let p = reg.register("hubs", gen::power_law::<f32>(600, 8, 1.0, 0x5EED)).unwrap();
+        assert_eq!(p.precision(), ValuePrecision::F32);
+        assert!(!p.describe().contains("vals "), "{}", p.describe());
     }
 
     #[test]

@@ -6,10 +6,11 @@
 //! across the pool with static chunking by *nonzero count* (not row
 //! count), which is what makes it robust to skewed row lengths.
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
-use super::{SendPtr, SpMv};
-use crate::sparse::{Csr, Scalar};
+use super::{precision_suffixed, SendPtr, SpMv};
+use crate::sparse::{Csr, Scalar, Storage, ValueStorage};
 use crate::util::ThreadPool;
 
 /// Serial CSR kernel (also the single-thread baseline of Fig 10).
@@ -55,9 +56,17 @@ impl<T: Scalar> SpMv<T> for CsrSerial<T> {
 
 /// Row range `[lo, hi)` of plain CSR SpMV; the shared inner loop of the
 /// CSR-family kernels. Slices are taken per row so LLVM can elide bounds
-/// checks and vectorize the multiply-add reduction.
+/// checks and vectorize the multiply-add reduction. Values are stored as
+/// `V` and widened to the accumulator scalar `T` on load; with `V = T`
+/// the widen is the identity.
 #[inline]
-pub(crate) fn spmv_rows<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], lo: usize, hi: usize) {
+pub(crate) fn spmv_rows<T: Scalar, V: ValueStorage<T>>(
+    a: &Csr<V>,
+    x: &[T],
+    y: &mut [T],
+    lo: usize,
+    hi: usize,
+) {
     let row_ptr = a.row_ptr();
     let col_idx = a.col_idx();
     let vals = a.vals();
@@ -66,7 +75,7 @@ pub(crate) fn spmv_rows<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], lo: usize, 
         let e = row_ptr[i + 1] as usize;
         let mut acc = T::zero();
         for (&c, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
-            acc += v * x[c as usize];
+            acc += v.widen() * x[c as usize];
         }
         y[i] = acc;
     }
@@ -80,8 +89,8 @@ pub(crate) fn spmv_rows<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], lo: usize, 
 /// so the per-nonzero multiply-add runs over a fixed-size register
 /// block LLVM can vectorize.
 #[inline]
-pub(crate) fn spmm_rows<T: Scalar>(
-    a: &Csr<T>,
+pub(crate) fn spmm_rows<T: Scalar, V: ValueStorage<T>>(
+    a: &Csr<V>,
     x: &[T],
     y: &mut [T],
     nvec: usize,
@@ -90,17 +99,24 @@ pub(crate) fn spmm_rows<T: Scalar>(
 ) {
     match nvec {
         1 => spmv_rows(a, x, y, lo, hi),
-        2 => spmm_rows_w::<T, 2>(a, x, y, lo, hi),
-        4 => spmm_rows_w::<T, 4>(a, x, y, lo, hi),
-        8 => spmm_rows_w::<T, 8>(a, x, y, lo, hi),
-        16 => spmm_rows_w::<T, 16>(a, x, y, lo, hi),
+        2 => spmm_rows_w::<T, V, 2>(a, x, y, lo, hi),
+        4 => spmm_rows_w::<T, V, 4>(a, x, y, lo, hi),
+        8 => spmm_rows_w::<T, V, 8>(a, x, y, lo, hi),
+        16 => spmm_rows_w::<T, V, 16>(a, x, y, lo, hi),
         _ => spmm_rows_dyn(a, x, y, nvec, lo, hi),
     }
 }
 
 /// Const-width SpMM inner loop: the accumulator is a `[T; W]` register
-/// block, written back once per row.
-fn spmm_rows_w<T: Scalar, const W: usize>(a: &Csr<T>, x: &[T], y: &mut [T], lo: usize, hi: usize) {
+/// block, written back once per row. Each stored value is widened once
+/// and streamed against all `W` operands.
+fn spmm_rows_w<T: Scalar, V: ValueStorage<T>, const W: usize>(
+    a: &Csr<V>,
+    x: &[T],
+    y: &mut [T],
+    lo: usize,
+    hi: usize,
+) {
     let row_ptr = a.row_ptr();
     let col_idx = a.col_idx();
     let vals = a.vals();
@@ -109,6 +125,7 @@ fn spmm_rows_w<T: Scalar, const W: usize>(a: &Csr<T>, x: &[T], y: &mut [T], lo: 
         let e = row_ptr[i + 1] as usize;
         let mut acc = [T::zero(); W];
         for (&c, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+            let v = v.widen();
             let xb = &x[c as usize * W..c as usize * W + W];
             for k in 0..W {
                 acc[k] += v * xb[k];
@@ -120,7 +137,14 @@ fn spmm_rows_w<T: Scalar, const W: usize>(a: &Csr<T>, x: &[T], y: &mut [T], lo: 
 
 /// Arbitrary-width SpMM inner loop: accumulates directly into the `y`
 /// row slice (no per-row allocation).
-fn spmm_rows_dyn<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], nvec: usize, lo: usize, hi: usize) {
+fn spmm_rows_dyn<T: Scalar, V: ValueStorage<T>>(
+    a: &Csr<V>,
+    x: &[T],
+    y: &mut [T],
+    nvec: usize,
+    lo: usize,
+    hi: usize,
+) {
     let row_ptr = a.row_ptr();
     let col_idx = a.col_idx();
     let vals = a.vals();
@@ -132,6 +156,7 @@ fn spmm_rows_dyn<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], nvec: usize, lo: u
             *q = T::zero();
         }
         for (&c, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+            let v = v.widen();
             let xb = &x[c as usize * nvec..c as usize * nvec + nvec];
             for (q, &xv) in yrow.iter_mut().zip(xb) {
                 *q += v * xv;
@@ -143,30 +168,34 @@ fn spmm_rows_dyn<T: Scalar>(a: &Csr<T>, x: &[T], y: &mut [T], nvec: usize, lo: u
 /// Parallel CSR over a persistent pool — the MKL stand-in.
 ///
 /// Work is split into one contiguous row chunk per thread, balanced by
-/// nonzero count (each chunk covers ≈ NNZ/threads nonzeros).
-pub struct CsrParallel<T> {
-    a: Csr<T>,
+/// nonzero count (each chunk covers ≈ NNZ/threads nonzeros). Values are
+/// stored as `V` (default: the accumulator scalar itself) and widened
+/// to `T` in the inner loop.
+pub struct CsrParallel<T, V = T> {
+    a: Csr<V>,
     pool: Arc<ThreadPool>,
     /// Row boundaries per thread chunk (length `threads + 1`).
     chunks: Vec<u32>,
+    _acc: PhantomData<T>,
 }
 
-impl<T: Scalar> CsrParallel<T> {
+impl<T: Scalar, V: ValueStorage<T>> CsrParallel<T, V> {
     /// Wrap a CSR matrix, precomputing nnz-balanced row chunks.
-    pub fn new(a: Csr<T>, pool: Arc<ThreadPool>) -> Self {
+    pub fn new(a: Csr<V>, pool: Arc<ThreadPool>) -> Self {
         let chunks = nnz_balanced_chunks(&a, pool.threads());
-        CsrParallel { a, pool, chunks }
+        CsrParallel { a, pool, chunks, _acc: PhantomData }
     }
 
     /// The underlying matrix.
-    pub fn matrix(&self) -> &Csr<T> {
+    pub fn matrix(&self) -> &Csr<V> {
         &self.a
     }
 }
 
 /// Split `0..nrows` into `parts` contiguous chunks of ≈ equal nonzero
-/// count. Returns `parts + 1` boundaries.
-pub(crate) fn nnz_balanced_chunks<T: Scalar>(a: &Csr<T>, parts: usize) -> Vec<u32> {
+/// count. Returns `parts + 1` boundaries. Only reads `row_ptr`, so it
+/// works for any value-storage element.
+pub(crate) fn nnz_balanced_chunks<S: Storage>(a: &Csr<S>, parts: usize) -> Vec<u32> {
     let nnz = a.nnz();
     let n = a.nrows();
     let mut bounds = Vec::with_capacity(parts + 1);
@@ -191,9 +220,9 @@ pub(crate) fn nnz_balanced_chunks<T: Scalar>(a: &Csr<T>, parts: usize) -> Vec<u3
     bounds
 }
 
-impl<T: Scalar> SpMv<T> for CsrParallel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SpMv<T> for CsrParallel<T, V> {
     fn name(&self) -> String {
-        format!("csr-parallel({}t)", self.pool.threads())
+        precision_suffixed(format!("csr-parallel({}t)", self.pool.threads()), V::PRECISION)
     }
 
     fn spmv(&self, x: &[T], y: &mut [T]) {
@@ -276,6 +305,21 @@ mod tests {
             let a = e.build::<f32>(SuiteScale::Tiny);
             assert_kernel_matches(&a, &CsrParallel::new(a.clone(), pool.clone()), 1e-3);
         }
+    }
+
+    #[test]
+    fn parallel_half_values_match_reference() {
+        use crate::sparse::{Bf16, F16};
+        // stencil values are small integers: exactly representable in
+        // f16/bf16, so the half-value kernel is bit-identical to f32
+        let a = gen::grid2d_5pt::<f32>(20, 20);
+        let pool = Arc::new(ThreadPool::new(4));
+        let kh = CsrParallel::<f32, F16>::new(a.narrow::<F16>(), pool.clone());
+        assert_eq!(kh.name(), "csr-parallel(4t,f16)");
+        assert_kernel_matches(&a, &kh, 1e-12);
+        let kb = CsrParallel::<f32, Bf16>::new(a.narrow::<Bf16>(), pool);
+        assert_eq!(kb.name(), "csr-parallel(4t,bf16)");
+        assert_kernel_matches(&a, &kb, 1e-12);
     }
 
     #[test]

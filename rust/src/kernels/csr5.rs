@@ -6,23 +6,27 @@
 //! from earlier tiles are emitted as carries. Carries are applied in a
 //! short sequential pass (one per tile at most), then the scalar tail.
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
-use super::{SendPtr, SpMv};
-use crate::sparse::{Csr5, Scalar};
+use super::{precision_suffixed, SendPtr, SpMv};
+use crate::sparse::{Csr5, Scalar, ValueStorage};
 use crate::util::{Schedule, ThreadPool};
 
-/// Parallel CSR5 kernel.
-pub struct Csr5Kernel<T> {
-    a: Csr5<T>,
+/// Parallel CSR5 kernel. Tile storage holds `V` values (default: the
+/// accumulator scalar); the segmented sums widen each entry to `T` on
+/// load, so carries and partial sums are always full precision.
+pub struct Csr5Kernel<T, V = T> {
+    a: Csr5<V>,
     pool: Arc<ThreadPool>,
     nnz: usize,
+    _acc: PhantomData<T>,
 }
 
-impl<T: Scalar> Csr5Kernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> Csr5Kernel<T, V> {
     /// Wrap a CSR5 matrix (`nnz` = source nonzeros for FLOP accounting).
-    pub fn new(a: Csr5<T>, nnz: usize, pool: Arc<ThreadPool>) -> Self {
-        Csr5Kernel { a, pool, nnz }
+    pub fn new(a: Csr5<V>, nnz: usize, pool: Arc<ThreadPool>) -> Self {
+        Csr5Kernel { a, pool, nnz, _acc: PhantomData }
     }
 
     /// Tile shape `(ω, σ)`.
@@ -31,13 +35,16 @@ impl<T: Scalar> Csr5Kernel<T> {
     }
 }
 
-impl<T: Scalar> SpMv<T> for Csr5Kernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SpMv<T> for Csr5Kernel<T, V> {
     fn name(&self) -> String {
-        format!(
-            "csr5(w{},s{},{}t)",
-            self.a.omega,
-            self.a.sigma,
-            self.pool.threads()
+        precision_suffixed(
+            format!(
+                "csr5(w{},s{},{}t)",
+                self.a.omega,
+                self.a.sigma,
+                self.pool.threads()
+            ),
+            V::PRECISION,
         )
     }
 
@@ -177,6 +184,19 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(4));
         let c5 = Csr5::from_csr(&a, 4, 8);
         assert_kernel_matches(&a, &Csr5Kernel::new(c5, a.nnz(), pool), 1e-12);
+    }
+
+    #[test]
+    fn half_values_match_reference() {
+        use crate::kernels::testutil::assert_spmm_matches;
+        use crate::sparse::F16;
+        let a = gen::grid3d_7pt::<f32>(8, 8, 8); // f16-exact stencil values
+        let pool = Arc::new(ThreadPool::new(4));
+        let c5 = Csr5::from_csr(&a.narrow::<F16>(), 4, 16);
+        let k = Csr5Kernel::<f32, F16>::new(c5, a.nnz(), pool);
+        assert_eq!(k.name(), "csr5(w4,s16,4t,f16)");
+        assert_kernel_matches(&a, &k, 1e-12);
+        assert_spmm_matches(&k, 4, 1e-12);
     }
 
     #[test]

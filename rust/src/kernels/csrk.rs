@@ -12,35 +12,38 @@
 //! block while the Band-k ordering keeps the gathered `x` block slices
 //! cache-resident across the group.
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
 use super::csr::{spmm_rows, spmv_rows};
-use super::{SendPtr, SpMv};
-use crate::sparse::{CsrK, Scalar};
+use super::{precision_suffixed, SendPtr, SpMv};
+use crate::sparse::{CsrK, Scalar, ValueStorage};
 use crate::util::{Schedule, ThreadPool};
 
 /// CSR-2 kernel: `parallel for` over super-rows, serial rows inside
-/// (the §4.2 / §7 CPU configuration).
-pub struct Csr2Kernel<T> {
-    a: CsrK<T>,
+/// (the §4.2 / §7 CPU configuration). Values stored as `V`, accumulated
+/// in `T` (identity when `V = T`).
+pub struct Csr2Kernel<T, V = T> {
+    a: CsrK<V>,
     pool: Arc<ThreadPool>,
+    _acc: PhantomData<T>,
 }
 
-impl<T: Scalar> Csr2Kernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> Csr2Kernel<T, V> {
     /// Wrap a CSR-k matrix (uses its super-row structure; `k = 2` view).
-    pub fn new(a: CsrK<T>, pool: Arc<ThreadPool>) -> Self {
-        Csr2Kernel { a, pool }
+    pub fn new(a: CsrK<V>, pool: Arc<ThreadPool>) -> Self {
+        Csr2Kernel { a, pool, _acc: PhantomData }
     }
 
     /// The wrapped matrix.
-    pub fn matrix(&self) -> &CsrK<T> {
+    pub fn matrix(&self) -> &CsrK<V> {
         &self.a
     }
 }
 
-impl<T: Scalar> SpMv<T> for Csr2Kernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SpMv<T> for Csr2Kernel<T, V> {
     fn name(&self) -> String {
-        format!("csr2({}t)", self.pool.threads())
+        precision_suffixed(format!("csr2({}t)", self.pool.threads()), V::PRECISION)
     }
 
     fn spmv(&self, x: &[T], y: &mut [T]) {
@@ -96,27 +99,29 @@ impl<T: Scalar> SpMv<T> for Csr2Kernel<T> {
 
 /// CSR-3 kernel: `parallel for` over super-super-rows; serial loops over
 /// super-rows, rows and nonzeros inside (paper Listing 1 verbatim).
-pub struct Csr3Kernel<T> {
-    a: CsrK<T>,
+/// Values stored as `V`, accumulated in `T` (identity when `V = T`).
+pub struct Csr3Kernel<T, V = T> {
+    a: CsrK<V>,
     pool: Arc<ThreadPool>,
+    _acc: PhantomData<T>,
 }
 
-impl<T: Scalar> Csr3Kernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> Csr3Kernel<T, V> {
     /// Wrap a CSR-3 matrix. Panics if the matrix has no SSR level.
-    pub fn new(a: CsrK<T>, pool: Arc<ThreadPool>) -> Self {
+    pub fn new(a: CsrK<V>, pool: Arc<ThreadPool>) -> Self {
         assert_eq!(a.k(), 3, "Csr3Kernel needs a k = 3 matrix");
-        Csr3Kernel { a, pool }
+        Csr3Kernel { a, pool, _acc: PhantomData }
     }
 
     /// The wrapped matrix.
-    pub fn matrix(&self) -> &CsrK<T> {
+    pub fn matrix(&self) -> &CsrK<V> {
         &self.a
     }
 }
 
-impl<T: Scalar> SpMv<T> for Csr3Kernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SpMv<T> for Csr3Kernel<T, V> {
     fn name(&self) -> String {
-        format!("csr3({}t)", self.pool.threads())
+        precision_suffixed(format!("csr3({}t)", self.pool.threads()), V::PRECISION)
     }
 
     fn spmv(&self, x: &[T], y: &mut [T]) {
@@ -215,6 +220,28 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(4));
         let k = CsrK::csr2_uniform(a.clone(), 16);
         assert_kernel_matches(&a, &Csr2Kernel::new(k, pool), 1e-4);
+    }
+
+    #[test]
+    fn csr2_half_values_match_reference() {
+        use crate::sparse::F16;
+        let a = gen::grid2d_5pt::<f32>(24, 24); // f16-exact stencil values
+        let pool = Arc::new(ThreadPool::new(4));
+        let k = CsrK::csr2_uniform(a.narrow::<F16>(), 96);
+        let kern = Csr2Kernel::<f32, F16>::new(k, pool);
+        assert_eq!(kern.name(), "csr2(4t,f16)");
+        assert_kernel_matches(&a, &kern, 1e-12);
+    }
+
+    #[test]
+    fn csr3_half_values_match_reference() {
+        use crate::sparse::Bf16;
+        let a = gen::grid3d_7pt::<f32>(8, 8, 8);
+        let pool = Arc::new(ThreadPool::new(3));
+        let k = CsrK::csr3_uniform(a.narrow::<Bf16>(), 4, 8);
+        let kern = Csr3Kernel::<f32, Bf16>::new(k, pool);
+        assert_eq!(kern.name(), "csr3(3t,bf16)");
+        assert_kernel_matches(&a, &kern, 1e-12);
     }
 
     #[test]

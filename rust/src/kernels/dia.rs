@@ -34,34 +34,43 @@
 //! matrix once per *batch* — the same amortization the CSR-family and
 //! SELL kernels implement.
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
-use super::{SendPtr, SpMv};
+use super::{precision_suffixed, SendPtr, SpMv};
 use crate::sparse::dia::Dia;
-use crate::sparse::Scalar;
+use crate::sparse::{Scalar, ValueStorage};
 use crate::util::{Schedule, ThreadPool};
 
-/// Parallel partially-diagonal kernel.
-pub struct DiaKernel<T> {
-    a: Dia<T>,
+/// Parallel partially-diagonal kernel. Diagonal slots hold `V` values
+/// (default: the accumulator scalar), widened to `T` in the sweep. The
+/// bit-equality contract vs [`Dia::spmv_ref`] holds per storage type:
+/// widening is exact, so only the value *rounding* (done once, at
+/// narrow time) differs from the native kernel, never the add order.
+pub struct DiaKernel<T, V = T> {
+    a: Dia<V>,
     pool: Arc<ThreadPool>,
+    _acc: PhantomData<T>,
 }
 
-impl<T: Scalar> DiaKernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> DiaKernel<T, V> {
     /// Wrap a DIA matrix.
-    pub fn new(a: Dia<T>, pool: Arc<ThreadPool>) -> Self {
-        DiaKernel { a, pool }
+    pub fn new(a: Dia<V>, pool: Arc<ThreadPool>) -> Self {
+        DiaKernel { a, pool, _acc: PhantomData }
     }
 
     /// The wrapped matrix (offsets, coverage, storage accounting).
-    pub fn matrix(&self) -> &Dia<T> {
+    pub fn matrix(&self) -> &Dia<V> {
         &self.a
     }
 }
 
-impl<T: Scalar> SpMv<T> for DiaKernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SpMv<T> for DiaKernel<T, V> {
     fn name(&self) -> String {
-        format!("dia(k{},{}t)", self.a.ndiags(), self.pool.threads())
+        precision_suffixed(
+            format!("dia(k{},{}t)", self.a.ndiags(), self.pool.threads()),
+            V::PRECISION,
+        )
     }
 
     fn spmv(&self, x: &[T], y: &mut [T]) {
@@ -82,7 +91,7 @@ impl<T: Scalar> SpMv<T> for DiaKernel<T> {
                 let diag = &vals[d * nrows..(d + 1) * nrows];
                 for (clo, chi, shift) in a.spans(d) {
                     for i in clo.max(lo)..chi.min(hi) {
-                        ys[i] += diag[i] * x[(i as i64 + shift) as usize];
+                        ys[i] += diag[i].widen() * x[(i as i64 + shift) as usize];
                     }
                 }
             }
@@ -129,7 +138,7 @@ impl<T: Scalar> SpMv<T> for DiaKernel<T> {
                 let diag = &vals[d * nrows..(d + 1) * nrows];
                 for (clo, chi, shift) in a.spans(d) {
                     for i in clo.max(lo)..chi.min(hi) {
-                        let v = diag[i];
+                        let v = diag[i].widen();
                         let col = (i as i64 + shift) as usize;
                         let xb = &x[col * nvec..col * nvec + nvec];
                         let yb = &mut ys[i * nvec..i * nvec + nvec];
@@ -203,6 +212,19 @@ mod tests {
         for i in 0..64 {
             assert!((y[i] + y_rest[i] - y_full[i]).abs() < 1e-12, "row {i}");
         }
+    }
+
+    #[test]
+    fn half_values_match_reference() {
+        use crate::sparse::F16;
+        let a = gen::grid3d_7pt::<f32>(7, 6, 5); // f16-exact stencil values
+        let (d, rest) = Dia::from_csr(&a, 7);
+        assert_eq!(rest.nnz(), 0);
+        let pool = Arc::new(ThreadPool::new(3));
+        let k = DiaKernel::<f32, F16>::new(d.narrow::<F16>(), pool);
+        assert_eq!(k.name(), "dia(k7,3t,f16)");
+        assert_kernel_matches(&a, &k, 1e-12);
+        assert_spmm_matches(&k, 4, 1e-12);
     }
 
     #[test]

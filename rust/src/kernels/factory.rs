@@ -45,6 +45,7 @@
 //! [`FormatPlan::Single`]: crate::tuning::planner::FormatPlan::Single
 //! [`FormatPlan::Hybrid`]: crate::tuning::planner::FormatPlan::Hybrid
 
+use std::any::Any;
 use std::sync::Arc;
 
 use super::composite::{CompositeExec, CompositePart};
@@ -52,8 +53,8 @@ use super::{Csr2Kernel, Csr3Kernel, Csr5Kernel, CsrParallel, DiaKernel, SellCsKe
 use crate::reorder::bandk;
 use crate::sparse::csrk::PaddedCsr;
 use crate::sparse::{
-    split_by_dia_rows, split_by_row_nnz, split_n_by_rows, Csr, Csr5, CsrK, Dia, Scalar, SellCs,
-    SplitCsr,
+    split_by_dia_rows, split_by_row_nnz, split_n_by_rows, Bf16, Csr, Csr5, CsrK, Dia, Scalar,
+    SellCs, SplitCsr, ValuePrecision, ValueStorage, F16,
 };
 use crate::tuning::planner::{FormatPlan, HybridSplit, PlannedKernel};
 use crate::util::ThreadPool;
@@ -113,6 +114,124 @@ pub fn build_part_kernel<T: Scalar>(
     }
 }
 
+/// [`build_part_kernel`] with the plan's value precision applied: `F32`
+/// builds the native kernel; a half precision narrows the value array
+/// during construction (indices and structure are shared verbatim) and
+/// builds the same kernel shape with `f32` accumulation. Half storage
+/// only exists for `f32` matrices — any other scalar falls back to
+/// native storage, mirroring the planner's gate.
+pub fn build_part_kernel_prec<T: Scalar>(
+    kernel: &PlannedKernel,
+    precision: ValuePrecision,
+    a: Csr<T>,
+    pool: Arc<ThreadPool>,
+) -> Arc<dyn SpMv<T>> {
+    match precision {
+        ValuePrecision::F32 => build_part_kernel(kernel, a, pool),
+        ValuePrecision::F16 => build_half_kernel::<T, F16>(kernel, a, pool),
+        ValuePrecision::Bf16 => build_half_kernel::<T, Bf16>(kernel, a, pool),
+    }
+}
+
+/// Monomorphization bridge: the planner's precision is a runtime value
+/// but the kernels are compile-time generic, and half storage is only
+/// defined against an `f32` accumulator. A `Box<dyn Any>` round trip
+/// proves (or refutes) `T == f32` without specialization; the mismatch
+/// arm recovers the matrix untouched and builds the native kernel.
+fn build_half_kernel<T: Scalar, V: ValueStorage<f32>>(
+    kernel: &PlannedKernel,
+    a: Csr<T>,
+    pool: Arc<ThreadPool>,
+) -> Arc<dyn SpMv<T>> {
+    let boxed: Box<dyn Any> = Box::new(a);
+    match boxed.downcast::<Csr<f32>>() {
+        Ok(a32) => {
+            let k = build_part_kernel_half::<V>(kernel, *a32, pool);
+            let back: Box<dyn Any> = Box::new(k);
+            *back.downcast::<Arc<dyn SpMv<T>>>().expect("T is f32 on this arm")
+        }
+        Err(boxed) => {
+            let a = *boxed.downcast::<Csr<T>>().expect("downcast back to the source type");
+            build_part_kernel(kernel, a, pool)
+        }
+    }
+}
+
+/// Construct one leaf kernel with `V`-stored values over an `f32`
+/// matrix: narrow the value array, then build the planned shape exactly
+/// as [`build_part_kernel`] does.
+fn build_part_kernel_half<V: ValueStorage<f32>>(
+    kernel: &PlannedKernel,
+    a: Csr<f32>,
+    pool: Arc<ThreadPool>,
+) -> Arc<dyn SpMv<f32>> {
+    match *kernel {
+        PlannedKernel::Csr2 { srs } => Arc::new(Csr2Kernel::<f32, V>::new(
+            CsrK::csr2_uniform(a.narrow::<V>(), srs),
+            pool,
+        )),
+        PlannedKernel::Csr3 { ssrs, srs } => Arc::new(Csr3Kernel::<f32, V>::new(
+            CsrK::csr3_uniform(a.narrow::<V>(), ssrs, srs),
+            pool,
+        )),
+        PlannedKernel::Csr5 { omega, sigma } => {
+            let nnz = a.nnz();
+            Arc::new(Csr5Kernel::<f32, V>::new(
+                Csr5::from_csr(&a.narrow::<V>(), omega, sigma),
+                nnz,
+                pool,
+            ))
+        }
+        PlannedKernel::SellCs { c, sigma } => Arc::new(SellCsKernel::<f32, V>::new(
+            SellCs::from_csr(&a.narrow::<V>(), c, sigma),
+            pool,
+        )),
+        PlannedKernel::CsrParallel => {
+            Arc::new(CsrParallel::<f32, V>::new(a.narrow::<V>(), pool))
+        }
+        PlannedKernel::Dia { .. } => {
+            // capture in native precision (diagonal discovery is
+            // structural), then narrow the slot array
+            let (d, rest) = Dia::from_csr(&a, usize::MAX);
+            assert_eq!(rest.nnz(), 0, "unbounded DIA capture cannot spill");
+            Arc::new(DiaKernel::<f32, V>::new(d.narrow::<V>(), pool))
+        }
+    }
+}
+
+/// Wrap an already-captured DIA matrix at the plan's precision — the
+/// Hybrid DiaRows body path, which captures against source-row labels
+/// and so cannot go through [`build_part_kernel_prec`].
+fn dia_kernel_prec<T: Scalar>(
+    d: Dia<T>,
+    precision: ValuePrecision,
+    pool: Arc<ThreadPool>,
+) -> Arc<dyn SpMv<T>> {
+    fn half<T: Scalar, V: ValueStorage<f32>>(
+        d: Dia<T>,
+        pool: Arc<ThreadPool>,
+    ) -> Arc<dyn SpMv<T>> {
+        let boxed: Box<dyn Any> = Box::new(d);
+        match boxed.downcast::<Dia<f32>>() {
+            Ok(d32) => {
+                let k: Arc<dyn SpMv<f32>> =
+                    Arc::new(DiaKernel::<f32, V>::new(d32.narrow::<V>(), pool));
+                let back: Box<dyn Any> = Box::new(k);
+                *back.downcast::<Arc<dyn SpMv<T>>>().expect("T is f32 on this arm")
+            }
+            Err(boxed) => {
+                let d = *boxed.downcast::<Dia<T>>().expect("downcast back to the source type");
+                Arc::new(DiaKernel::new(d, pool))
+            }
+        }
+    }
+    match precision {
+        ValuePrecision::F32 => Arc::new(DiaKernel::new(d, pool)),
+        ValuePrecision::F16 => half::<T, F16>(d, pool),
+        ValuePrecision::Bf16 => half::<T, Bf16>(d, pool),
+    }
+}
+
 /// Execute a plan's build stage over `a` (consumed): reorder, split,
 /// construct part kernels, compose. Set `want_export` when an
 /// accelerator backend will bind afterwards — exportable parts are then
@@ -125,7 +244,7 @@ pub fn build_execution<T: Scalar>(
     want_export: bool,
 ) -> BuiltExecution<T> {
     match plan {
-        FormatPlan::Single { reorder, kernel, pjrt_width, .. } => {
+        FormatPlan::Single { reorder, kernel, pjrt_width, precision, .. } => {
             let (ordered, perm) = match reorder {
                 Some(r) => {
                     let ord = bandk(&a, r.k, r.srs, r.ssrs, r.seed);
@@ -133,15 +252,17 @@ pub fn build_execution<T: Scalar>(
                 }
                 None => (a, None),
             };
+            // the padded export stays native: device bindings re-narrow
+            // (or keep f32) under their own roofline, after placement
             let export = match (want_export, pjrt_width) {
                 (true, Some(w)) => Some(PaddedCsr::from_csr(&ordered, *w)),
                 _ => None,
             };
-            let kern = build_part_kernel(kernel, ordered, pool);
+            let kern = build_part_kernel_prec(kernel, *precision, ordered, pool);
             let exec = Arc::new(CompositeExec::single(kern, perm));
             BuiltExecution { exec, exports: vec![export] }
         }
-        FormatPlan::Hybrid { split: how, body, remainder, pjrt_width, .. } => {
+        FormatPlan::Hybrid { split: how, body, remainder, pjrt_width, precision, .. } => {
             let (nrows, ncols) = (a.nrows(), a.ncols());
             let split = match how {
                 HybridSplit::RowNnz { threshold } => split_by_row_nnz(&a, *threshold),
@@ -188,14 +309,14 @@ pub fn build_execution<T: Scalar>(
                         "dia-row split body must sit wholly on the plan's diagonals"
                     );
                     debug_assert_eq!(d.ndiags(), *ndiags, "built diagonals must match the plan");
-                    Arc::new(DiaKernel::new(d, pool.clone()))
+                    dia_kernel_prec(d, *precision, pool.clone())
                 }
-                _ => build_part_kernel(&body.kernel, body_csr, pool.clone()),
+                _ => build_part_kernel_prec(&body.kernel, *precision, body_csr, pool.clone()),
             };
             let parts = vec![
                 CompositePart::new(body_kernel, body_perm, Some(body_map)),
                 CompositePart::new(
-                    build_part_kernel(&remainder.kernel, rem, pool),
+                    build_part_kernel_prec(&remainder.kernel, *precision, rem, pool),
                     None,
                     Some(remainder_rows),
                 ),
@@ -374,6 +495,39 @@ mod tests {
             assert_kernel_matches(&a, k.as_ref(), 1e-12);
             assert_spmm_matches(k.as_ref(), 4, 1e-12);
         }
+    }
+
+    #[test]
+    fn forced_half_kernels_build_and_match() {
+        let pool = Arc::new(ThreadPool::new(2));
+        // stencil values are small integers: exact in f16 and bf16, so
+        // the half kernels are bit-compatible with the f32 reference
+        let a = gen::grid3d_7pt::<f32>(6, 6, 6);
+        for kernel in [
+            PlannedKernel::Csr2 { srs: 17 },
+            PlannedKernel::Csr3 { ssrs: 4, srs: 9 },
+            PlannedKernel::Csr5 { omega: 4, sigma: 12 },
+            PlannedKernel::SellCs { c: 8, sigma: 32 },
+            PlannedKernel::CsrParallel,
+            PlannedKernel::Dia { ndiags: 7 },
+        ] {
+            for prec in [ValuePrecision::F16, ValuePrecision::Bf16] {
+                let k = build_part_kernel_prec(&kernel, prec, a.clone(), pool.clone());
+                assert!(k.name().contains(prec.label()), "{}", k.name());
+                assert_kernel_matches(&a, k.as_ref(), 1e-12);
+                assert_spmm_matches(k.as_ref(), 4, 1e-12);
+            }
+        }
+        // non-f32 scalars fall back to native storage, untagged
+        let d = gen::grid2d_5pt::<f64>(8, 8);
+        let k = build_part_kernel_prec(
+            &PlannedKernel::CsrParallel,
+            ValuePrecision::F16,
+            d.clone(),
+            pool,
+        );
+        assert!(!k.name().contains("f16"), "{}", k.name());
+        assert_kernel_matches(&d, k.as_ref(), 1e-12);
     }
 
     #[test]

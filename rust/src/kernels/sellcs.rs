@@ -23,39 +23,45 @@
 //! order**: composed under `kernels::composite`, a SELL part needs no
 //! extra permutation bookkeeping beyond the row maps any part carries.
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
-use super::{SendPtr, SpMv};
+use super::{precision_suffixed, SendPtr, SpMv};
 use crate::sparse::sellcs::SellCs;
-use crate::sparse::Scalar;
+use crate::sparse::{Scalar, ValueStorage};
 use crate::util::{Schedule, ThreadPool};
 
-/// Parallel SELL-C-σ kernel.
-pub struct SellCsKernel<T> {
-    a: SellCs<T>,
+/// Parallel SELL-C-σ kernel. Chunk storage holds `V` values (default:
+/// the accumulator scalar), widened to `T` per slot in the sweep.
+pub struct SellCsKernel<T, V = T> {
+    a: SellCs<V>,
     pool: Arc<ThreadPool>,
+    _acc: PhantomData<T>,
 }
 
-impl<T: Scalar> SellCsKernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SellCsKernel<T, V> {
     /// Wrap a SELL-C-σ matrix.
-    pub fn new(a: SellCs<T>, pool: Arc<ThreadPool>) -> Self {
-        SellCsKernel { a, pool }
+    pub fn new(a: SellCs<V>, pool: Arc<ThreadPool>) -> Self {
+        SellCsKernel { a, pool, _acc: PhantomData }
     }
 
     /// The wrapped matrix (backends re-bind it at their own chunk
     /// width via the [`SellCs::to_csr`] round trip).
-    pub fn matrix(&self) -> &SellCs<T> {
+    pub fn matrix(&self) -> &SellCs<V> {
         &self.a
     }
 }
 
-impl<T: Scalar> SpMv<T> for SellCsKernel<T> {
+impl<T: Scalar, V: ValueStorage<T>> SpMv<T> for SellCsKernel<T, V> {
     fn name(&self) -> String {
-        format!(
-            "sellcs(c{},s{},{}t)",
-            self.a.c(),
-            self.a.sigma(),
-            self.pool.threads()
+        precision_suffixed(
+            format!(
+                "sellcs(c{},s{},{}t)",
+                self.a.c(),
+                self.a.sigma(),
+                self.pool.threads()
+            ),
+            V::PRECISION,
         )
     }
 
@@ -78,7 +84,7 @@ impl<T: Scalar> SpMv<T> for SellCsKernel<T> {
                 for s in 0..width {
                     let slot = base + s * lanes;
                     for lane in 0..lanes {
-                        acc[lane] += vals[slot + lane] * x[cols[slot + lane] as usize];
+                        acc[lane] += vals[slot + lane].widen() * x[cols[slot + lane] as usize];
                     }
                 }
                 for lane in 0..lanes {
@@ -131,7 +137,7 @@ impl<T: Scalar> SpMv<T> for SellCsKernel<T> {
                 for s in 0..width {
                     let slot = base + s * lanes;
                     for lane in 0..lanes {
-                        let v = vals[slot + lane];
+                        let v = vals[slot + lane].widen();
                         let col = cols[slot + lane] as usize;
                         let xb = &x[col * nvec..col * nvec + nvec];
                         let ab = &mut acc[lane * nvec..lane * nvec + nvec];
@@ -215,6 +221,18 @@ mod tests {
         assert!(s.fill_ratio() > 1.0, "fixture must pad");
         let k = SellCsKernel::new(s, pool);
         assert_eq!(k.flops(), a.spmv_flops());
+    }
+
+    #[test]
+    fn half_values_match_reference() {
+        use crate::sparse::F16;
+        let a = gen::grid3d_7pt::<f32>(8, 8, 8); // f16-exact stencil values
+        let pool = Arc::new(ThreadPool::new(4));
+        let s = SellCs::from_csr(&a.narrow::<F16>(), 8, 32);
+        let k = SellCsKernel::<f32, F16>::new(s, pool);
+        assert_eq!(k.name(), "sellcs(c8,s32,4t,f16)");
+        assert_kernel_matches(&a, &k, 1e-12);
+        assert_spmm_matches(&k, 4, 1e-12);
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! `m + 1`), `col_idx` and `vals` (length NNZ each), for a total of
 //! `(2·NNZ + m + 1) × 32` bits at 32-bit indices / single precision.
 
-use super::Scalar;
+use super::{Scalar, Storage, ValueStorage};
 
-/// CSR sparse matrix with `u32` indices.
+/// CSR sparse matrix with `u32` indices. Generic over the value
+/// *storage* type: natively a scalar (`f32`/`f64`), or a half-precision
+/// storage type ([`super::F16`]/[`super::Bf16`]) produced by
+/// [`Csr::narrow`] for mixed-precision kernels.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr<T> {
     nrows: usize,
@@ -16,7 +19,7 @@ pub struct Csr<T> {
     vals: Vec<T>,
 }
 
-impl<T: Scalar> Csr<T> {
+impl<T: Storage> Csr<T> {
     /// Assemble from raw arrays, validating the invariants:
     /// `row_ptr` monotone from 0 to NNZ, all column indices in range.
     pub fn from_parts(
@@ -154,7 +157,7 @@ impl<T: Scalar> Csr<T> {
         }
         let row_ptr = cnt.clone();
         let mut col_idx = vec![0u32; self.nnz()];
-        let mut vals = vec![T::zero(); self.nnz()];
+        let mut vals = vec![T::ZERO; self.nnz()];
         let mut next = cnt;
         for i in 0..self.nrows {
             let (cols, vs) = self.row(i);
@@ -187,6 +190,20 @@ impl<T: Scalar> Csr<T> {
         (0..self.nrows).all(|i| self.row(i).0.windows(2).all(|w| w[0] < w[1]))
     }
 
+    /// Storage footprint in bytes: `(2·NNZ + m + 1) × 4` for f32
+    /// (paper §2.1 accounting); half-value storage charges 2 bytes per
+    /// value.
+    pub fn storage_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * T::BYTES
+    }
+
+    /// SpMV FLOP count under the paper's convention (`2 · NNZ`).
+    pub fn spmv_flops(&self) -> f64 {
+        2.0 * self.nnz() as f64
+    }
+}
+
+impl<T: Scalar> Csr<T> {
     /// Dense `nrows × ncols` expansion (tests / tiny matrices only).
     pub fn to_dense(&self) -> Vec<Vec<T>> {
         let mut d = vec![vec![T::zero(); self.ncols]; self.nrows];
@@ -214,15 +231,18 @@ impl<T: Scalar> Csr<T> {
         }
     }
 
-    /// Storage footprint in bytes: `(2·NNZ + m + 1) × 4` for f32
-    /// (paper §2.1 accounting).
-    pub fn storage_bytes(&self) -> usize {
-        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * std::mem::size_of::<T>()
-    }
-
-    /// SpMV FLOP count under the paper's convention (`2 · NNZ`).
-    pub fn spmv_flops(&self) -> f64 {
-        2.0 * self.nnz() as f64
+    /// Narrow the value array into storage type `V`, keeping structure.
+    /// The mixed-precision factory calls this right before kernel
+    /// construction; for exact-roundtrip values (the planner's gate)
+    /// the narrowed matrix computes bit-identical SpMV results.
+    pub fn narrow<V: ValueStorage<T>>(&self) -> Csr<V> {
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            vals: self.vals.iter().map(|&v| V::narrow(v)).collect(),
+        }
     }
 
     /// Map values elementwise, keeping structure.

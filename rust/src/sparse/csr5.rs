@@ -16,7 +16,7 @@
 //! * the tail (NNZ mod ωσ) is processed as a scalar CSR remainder
 //!   rather than a padded tile, as several production ports do.
 
-use super::{Csr, Scalar};
+use super::{Csr, Scalar, Storage, ValueStorage};
 
 /// CSR5-format matrix.
 #[derive(Debug, Clone)]
@@ -52,7 +52,7 @@ pub struct Csr5<T> {
 
 const DIRTY: u32 = 1 << 31;
 
-impl<T: Scalar> Csr5<T> {
+impl<T: Storage> Csr5<T> {
     /// Convert from CSR with tile shape `ω × σ`.
     ///
     /// Typical CPU choices: `ω = 8` (AVX2 f32 lanes) or 4 (f64),
@@ -79,7 +79,7 @@ impl<T: Scalar> Csr5<T> {
             csr.row_ptr()[r] as usize == k
         };
 
-        let mut tile_vals = vec![T::zero(); tail_start];
+        let mut tile_vals = vec![T::ZERO; tail_start];
         let mut tile_cols = vec![0u32; tail_start];
         let mut tile_ptr = Vec::with_capacity(ntiles);
         let mut bit_flag = vec![0u32; ntiles * omega];
@@ -178,16 +178,21 @@ impl<T: Scalar> Csr5<T> {
     /// that *start* inside the tile and returning the carry
     /// `(row, partial)` when the tile's first segment continues an
     /// earlier row. Used by both the serial reference and the parallel
-    /// kernel (carries are applied after the tile sweep).
+    /// kernel (carries are applied after the tile sweep). Generic over
+    /// the accumulator scalar `A`: half-value tiles widen each entry on
+    /// load and accumulate in `A`.
     #[inline]
-    pub fn tile_segmented_sum(&self, t: usize, x: &[T], y: &mut [T]) -> Option<(u32, T)> {
+    pub fn tile_segmented_sum<A: Scalar>(&self, t: usize, x: &[A], y: &mut [A]) -> Option<(u32, A)>
+    where
+        T: ValueStorage<A>,
+    {
         let per_tile = self.omega * self.sigma;
         let base = t * per_tile;
         let seg_base = self.seg_ptr[t] as usize;
         let dirty = self.is_dirty(t);
         let mut seg = 0usize; // segment index within tile
-        let mut acc = T::zero();
-        let mut carry: Option<(u32, T)> = None;
+        let mut acc = A::zero();
+        let mut carry: Option<(u32, A)> = None;
         // Traverse in CSR order (lane-major); entries live s-major.
         for lane in 0..self.omega {
             let flags = self.bit_flag[t * self.omega + lane];
@@ -216,11 +221,11 @@ impl<T: Scalar> Csr5<T> {
                     if !(lane == 0 && s == 0) {
                         seg += 1;
                     }
-                    acc = T::zero();
+                    acc = A::zero();
                 }
                 let pos = base + s * self.omega + lane;
                 let c = self.tile_cols[pos] as usize;
-                acc += self.tile_vals[pos] * x[c];
+                acc += self.tile_vals[pos].widen() * x[c];
             }
         }
         // close the trailing segment
@@ -244,15 +249,18 @@ impl<T: Scalar> Csr5<T> {
     /// `acc` is caller-provided scratch of length `nvec`, reused across
     /// tiles so the sweep allocates nothing per tile.
     #[inline]
-    pub fn tile_segmented_sum_multi(
+    pub fn tile_segmented_sum_multi<A: Scalar>(
         &self,
         t: usize,
-        x: &[T],
-        y: &mut [T],
+        x: &[A],
+        y: &mut [A],
         nvec: usize,
-        acc: &mut [T],
-        carry_val: &mut [T],
-    ) -> Option<u32> {
+        acc: &mut [A],
+        carry_val: &mut [A],
+    ) -> Option<u32>
+    where
+        T: ValueStorage<A>,
+    {
         debug_assert_eq!(acc.len(), nvec);
         debug_assert_eq!(carry_val.len(), nvec);
         let per_tile = self.omega * self.sigma;
@@ -262,7 +270,7 @@ impl<T: Scalar> Csr5<T> {
         let mut seg = 0usize; // segment index within tile
         let mut carry_row: Option<u32> = None;
         for q in acc.iter_mut() {
-            *q = T::zero();
+            *q = A::zero();
         }
         // Traverse in CSR order (lane-major); entries live s-major —
         // the same walk as the single-vector sweep.
@@ -282,12 +290,12 @@ impl<T: Scalar> Csr5<T> {
                         seg += 1;
                     }
                     for q in acc.iter_mut() {
-                        *q = T::zero();
+                        *q = A::zero();
                     }
                 }
                 let pos = base + s * self.omega + lane;
                 let c = self.tile_cols[pos] as usize;
-                let v = self.tile_vals[pos];
+                let v = self.tile_vals[pos].widen();
                 let xb = &x[c * nvec..c * nvec + nvec];
                 for (q, &xv) in acc.iter_mut().zip(xb) {
                     *q += v * xv;
@@ -310,10 +318,14 @@ impl<T: Scalar> Csr5<T> {
     /// [`Csr5::apply_tail`] it must run after the tile sweep (tail rows
     /// may continue rows begun in the last tile) and accumulates with
     /// `+=`.
-    pub fn apply_tail_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+    pub fn apply_tail_multi<A: Scalar>(&self, x: &[A], y: &mut [A], nvec: usize)
+    where
+        T: ValueStorage<A>,
+    {
         for ((&r, &c), &v) in self.tail_rows.iter().zip(&self.tail_cols).zip(&self.tail_vals) {
             let xb = &x[c as usize * nvec..c as usize * nvec + nvec];
             let yb = &mut y[r as usize * nvec..(r as usize + 1) * nvec];
+            let v = v.widen();
             for (q, &xv) in yb.iter_mut().zip(xb) {
                 *q += v * xv;
             }
@@ -323,15 +335,34 @@ impl<T: Scalar> Csr5<T> {
     /// Add the scalar tail (`NNZ mod ωσ` trailing entries) into `y`.
     /// Rows in the tail may continue rows begun in the last tile, so this
     /// must run after the tile sweep; it accumulates with `+=`.
-    pub fn apply_tail(&self, x: &[T], y: &mut [T]) {
+    pub fn apply_tail<A: Scalar>(&self, x: &[A], y: &mut [A])
+    where
+        T: ValueStorage<A>,
+    {
         for ((&r, &c), &v) in self.tail_rows.iter().zip(&self.tail_cols).zip(&self.tail_vals) {
-            y[r as usize] += v * x[c as usize];
+            y[r as usize] += v.widen() * x[c as usize];
         }
     }
 
+    /// Descriptor + tile storage bytes (for overhead comparisons).
+    pub fn storage_bytes(&self) -> usize {
+        self.tile_vals.len() * T::BYTES
+            + self.tile_cols.len() * 4
+            + self.tile_ptr.len() * 4
+            + self.bit_flag.len() * 4
+            + self.y_offset.len() * 2
+            + self.seg_ptr.len() * 4
+            + self.seg_rows.len() * 4
+            + self.tail_rows.len() * 8
+            + self.tail_vals.len() * T::BYTES
+    }
+}
+
+impl<T: Scalar + ValueStorage<T>> Csr5<T> {
     /// Rows whose first entry lies in the tail begin at zero there, but
     /// [`Csr5::apply_tail`] accumulates — so the serial reference zeroes
-    /// `y` first. Reference SpMV (oracle for the parallel kernel).
+    /// `y` first. Reference SpMV (oracle for the parallel kernel),
+    /// native storage only.
     pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
@@ -348,19 +379,6 @@ impl<T: Scalar> Csr5<T> {
             y[row as usize] += partial;
         }
         self.apply_tail(x, y);
-    }
-
-    /// Descriptor + tile storage bytes (for overhead comparisons).
-    pub fn storage_bytes(&self) -> usize {
-        self.tile_vals.len() * std::mem::size_of::<T>()
-            + self.tile_cols.len() * 4
-            + self.tile_ptr.len() * 4
-            + self.bit_flag.len() * 4
-            + self.y_offset.len() * 2
-            + self.seg_ptr.len() * 4
-            + self.seg_rows.len() * 4
-            + self.tail_rows.len() * 8
-            + self.tail_vals.len() * std::mem::size_of::<T>()
     }
 }
 

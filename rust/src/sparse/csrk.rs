@@ -16,7 +16,7 @@
 //! overhead is the pointer arrays (< 2.5 % in the paper's suite; see
 //! [`CsrK::overhead_ratio`] and the Fig 12 bench).
 
-use super::{Csr, Scalar};
+use super::{Csr, Scalar, Storage};
 
 /// CSR-k matrix: CSR plus super-row (and optional super-super-row)
 /// pointers. `k = 2` has only `sr_ptr`; `k = 3` adds `ssr_ptr`.
@@ -27,7 +27,7 @@ pub struct CsrK<T> {
     ssr_ptr: Option<Vec<u32>>,
 }
 
-impl<T: Scalar> CsrK<T> {
+impl<T: Storage> CsrK<T> {
     /// Build CSR-2 with a uniform super-row size `srs` (the last
     /// super-row may be short). This is the §4.2 CPU configuration.
     pub fn csr2_uniform(csr: Csr<T>, srs: usize) -> Self {
@@ -126,7 +126,9 @@ impl<T: Scalar> CsrK<T> {
     pub fn overhead_ratio(&self) -> f64 {
         self.overhead_bytes() as f64 / self.csr.storage_bytes() as f64
     }
+}
 
+impl<T: Scalar> CsrK<T> {
     /// Export the padded layout consumed by the L1 Pallas kernel: every
     /// row padded to `width` entries; padding entries carry column index
     /// `ncols` (callers append one zero slot to `x`) and value 0, so the

@@ -44,7 +44,7 @@
 //! one per removed-row segment), so every per-diagonal sweep
 //! ([`Dia::spans`]) remains unit-stride within a run.
 
-use super::{Coo, Csr, Scalar};
+use super::{Coo, Csr, Scalar, Storage, ValueStorage};
 
 /// One contiguous stretch of a [`Dia`] row labeling: storage rows
 /// `local .. local + len` stand for source rows `source .. source +
@@ -203,6 +203,25 @@ impl<T: Scalar> Dia<T> {
         (dia, rest.to_csr())
     }
 
+    /// Narrow the slot values into storage type `V`, keeping every
+    /// structural array (offsets, occupancy bitmap, row runs) intact.
+    /// The mixed-precision factory calls this on a fully-captured DIA
+    /// right before kernel construction.
+    pub fn narrow<V: ValueStorage<T>>(&self) -> Dia<V> {
+        Dia {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            offsets: self.offsets.clone(),
+            vals: self.vals.iter().map(|&v| V::narrow(v)).collect(),
+            mask: self.mask.clone(),
+            nnz: self.nnz,
+            source_nnz: self.source_nnz,
+            runs: self.runs.clone(),
+        }
+    }
+}
+
+impl<T: Storage> Dia<T> {
     /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
@@ -305,7 +324,7 @@ impl<T: Scalar> Dia<T> {
             row_ptr[i + 1] += row_ptr[i];
         }
         let mut col_idx = vec![0u32; self.nnz];
-        let mut vals = vec![T::zero(); self.nnz];
+        let mut vals = vec![T::ZERO; self.nnz];
         let mut cursor: Vec<u32> = row_ptr[..n].to_vec();
         for d in 0..self.ndiags() {
             for (lo, hi, shift) in self.spans(d) {
@@ -322,6 +341,20 @@ impl<T: Scalar> Dia<T> {
         Csr::from_parts(n, self.ncols, row_ptr, col_idx, vals)
     }
 
+    /// Storage bytes: diagonal slots + 8-byte offsets + the occupancy
+    /// bitmap + the row-run table. There is **no per-nonzero index
+    /// stream** — the term `analysis::roofline::dia_bytes` omits the
+    /// bitmap (metadata the SpMV hot loop never touches) and the runs
+    /// (`O(segments)`, not `O(nnz)`).
+    pub fn storage_bytes(&self) -> usize {
+        self.vals.len() * T::BYTES
+            + self.offsets.len() * 8
+            + self.mask.len() * 8
+            + self.runs.len() * std::mem::size_of::<RowRun>()
+    }
+}
+
+impl<T: Scalar> Dia<T> {
     /// Serial reference SpMV over the captured diagonals (oracle for
     /// the parallel kernel): zero `y`, then one contiguous
     /// `y[i] += vals · x[i + off]` stream per diagonal, offsets
@@ -343,18 +376,6 @@ impl<T: Scalar> Dia<T> {
                 }
             }
         }
-    }
-
-    /// Storage bytes: diagonal slots + 8-byte offsets + the occupancy
-    /// bitmap + the row-run table. There is **no per-nonzero index
-    /// stream** — the term `analysis::roofline::dia_bytes` omits the
-    /// bitmap (metadata the SpMV hot loop never touches) and the runs
-    /// (`O(segments)`, not `O(nnz)`).
-    pub fn storage_bytes(&self) -> usize {
-        self.vals.len() * std::mem::size_of::<T>()
-            + self.offsets.len() * 8
-            + self.mask.len() * 8
-            + self.runs.len() * std::mem::size_of::<RowRun>()
     }
 }
 

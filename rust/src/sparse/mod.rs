@@ -27,6 +27,16 @@
 //! * [`split`] — row partitioning: row-nnz-threshold (body + hub
 //!   remainder) for hybrid plans, and N-way nnz-balanced contiguous
 //!   sharding for multi-backend scale-out plans.
+//! * [`value`] — the value-storage layer: [`Storage`] /
+//!   [`ValueStorage`] traits and the in-tree [`F16`] / [`Bf16`]
+//!   half-precision shims that let any format's value array shrink to
+//!   16 bits while kernels accumulate in f32.
+//!
+//! Every format is generic over its **value storage** `S: Storage`
+//! (structural code: construction, transposes, chunk packing) with its
+//! numeric methods (`spmv_ref`, dense conversion) kept on `S: Scalar`.
+//! The `narrow()` constructors on [`Csr`] and [`Dia`] produce the
+//! half-value twins the mixed-precision kernels consume.
 
 pub mod bcsr;
 pub mod coo;
@@ -40,6 +50,7 @@ pub mod mm;
 pub mod sellcs;
 pub mod split;
 pub mod suite;
+pub mod value;
 
 pub use bcsr::Bcsr;
 pub use coo::Coo;
@@ -54,8 +65,15 @@ pub use split::{
     ShardedCsr, SplitCsr,
 };
 pub use suite::{SuiteEntry, SuiteScale};
+pub use value::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, Bf16, Storage,
+    ValuePrecision, ValueStorage, F16,
+};
 
-/// Scalar element type bound used across formats and kernels.
+/// Scalar element type bound used across formats and kernels — the
+/// *accumulator* type. Every `Scalar` is also a [`Storage`] (a matrix
+/// can always store its values natively); the converse is false
+/// ([`F16`]/[`Bf16`] store but never accumulate).
 ///
 /// The paper's GPU tests and its CPU tests use 32-bit floats ("we utilize
 /// 32-bit floats in our CPU tests as this is more likely for an
@@ -63,16 +81,13 @@ pub use suite::{SuiteEntry, SuiteScale};
 /// here is nonetheless generic over `f32`/`f64` and the test suite
 /// exercises both.
 pub trait Scalar:
-    num_traits::Float
+    Storage
+    + ValueStorage<Self>
+    + num_traits::Float
     + num_traits::NumAssign
     + num_traits::FromPrimitive
     + num_traits::ToPrimitive
-    + Copy
-    + Send
-    + Sync
-    + std::fmt::Debug
     + std::fmt::Display
-    + 'static
 {
 }
 

@@ -53,7 +53,7 @@
 //! the per-lane true lengths (`lane_nnz`) distinguish stored zeros from
 //! padding, so reconstruction is exact.
 
-use super::{Csr, Scalar};
+use super::{Csr, Scalar, Storage};
 
 /// SELL-C-σ-format matrix.
 #[derive(Debug, Clone)]
@@ -78,7 +78,7 @@ pub struct SellCs<T> {
     nnz: usize,
 }
 
-impl<T: Scalar> SellCs<T> {
+impl<T: Storage> SellCs<T> {
     /// Convert from CSR with chunk height `c` and sort window `sigma`
     /// (clamped to the row count). Rows are sorted by descending length
     /// within each σ-window — stably, so equal-length rows keep their
@@ -107,7 +107,7 @@ impl<T: Scalar> SellCs<T> {
             let width = (lo..lo + lanes).map(|p| lane_nnz[p] as usize).max().unwrap_or(0);
             let base = cols.len();
             cols.resize(base + width * lanes, 0u32);
-            vals.resize(base + width * lanes, T::zero());
+            vals.resize(base + width * lanes, T::ZERO);
             for lane in 0..lanes {
                 let row = perm[lo + lane] as usize;
                 let (rc, rv) = a.row(row);
@@ -221,7 +221,7 @@ impl<T: Scalar> SellCs<T> {
             row_ptr[i + 1] += row_ptr[i];
         }
         let mut col_idx = vec![0u32; self.nnz];
-        let mut vals = vec![T::zero(); self.nnz];
+        let mut vals = vec![T::ZERO; self.nnz];
         for k in 0..self.nchunks() {
             let (base, lanes, _) = self.chunk_bounds(k);
             for lane in 0..lanes {
@@ -237,6 +237,18 @@ impl<T: Scalar> SellCs<T> {
         Csr::from_parts(n, self.ncols, row_ptr, col_idx, vals)
     }
 
+    /// Storage bytes: padded slots (cols + vals) + chunk pointers +
+    /// permutation + per-lane lengths.
+    pub fn storage_bytes(&self) -> usize {
+        self.cols.len() * 4
+            + self.vals.len() * T::BYTES
+            + self.chunk_ptr.len() * 4
+            + self.perm.len() * 4
+            + self.lane_nnz.len() * 4
+    }
+}
+
+impl<T: Scalar> SellCs<T> {
     /// Serial reference SpMV (oracle for the parallel kernel): sweep
     /// each chunk slot-major, then scatter each lane's accumulator to
     /// its source row. Every row lives in exactly one chunk lane, so
@@ -261,16 +273,6 @@ impl<T: Scalar> SellCs<T> {
                 y[self.perm[k * self.c + lane] as usize] = acc[lane];
             }
         }
-    }
-
-    /// Storage bytes: padded slots (cols + vals) + chunk pointers +
-    /// permutation + per-lane lengths.
-    pub fn storage_bytes(&self) -> usize {
-        self.cols.len() * 4
-            + self.vals.len() * std::mem::size_of::<T>()
-            + self.chunk_ptr.len() * 4
-            + self.perm.len() * 4
-            + self.lane_nnz.len() * 4
     }
 }
 

@@ -1,0 +1,421 @@
+//! Value-storage layer: native floats plus in-tree half-precision
+//! storage types (`f16` / `bf16`) for mixed-precision SpMV.
+//!
+//! SpMV is bandwidth-bound everywhere the planner looks, and the value
+//! array is the single largest byte stream (4 bytes/nnz vs 4 for the
+//! column index and amortized row-pointer traffic). Storing values in a
+//! 16-bit format halves that stream; kernels keep their accumulators in
+//! the native scalar (`f32`), widening each value on load, so the
+//! *shape* of every kernel (CSR-k fork/join, SELL-C-σ chunks, DIA
+//! diagonal walks, CSR5 segmented sums) is unchanged.
+//!
+//! Three pieces:
+//!
+//! * [`Storage`] — the minimal bound a format needs to *hold* a value
+//!   array: `Copy`, a `ZERO` fill constant, and a byte size. Structural
+//!   format code (`row_ptr` walks, transposes, SELL chunk packing) is
+//!   generic over `Storage` and never does arithmetic.
+//! * [`ValueStorage<T>`] — a storage type that can be widened to the
+//!   accumulator scalar `T` and narrowed back. Exactly one impl exists
+//!   per storage type (`f32→f32`, `f64→f64`, [`F16`]`→f32`,
+//!   [`Bf16`]`→f32`), so kernel constructors infer the accumulator from
+//!   the matrix they are handed.
+//! * [`ValuePrecision`] — the *plan-level* name for the choice, carried
+//!   by `FormatPlan` and priced by the planner's byte formulas.
+//!
+//! The conversions are small in-tree shims (no external half crate):
+//! round-to-nearest-even narrowing, exact widening. IEEE binary16
+//! subnormals are handled on both sides so the exact-roundtrip gate in
+//! the planner (`choose_precision`) can rely on `widen(narrow(v)) == v`
+//! being a faithful test of representability.
+
+/// Plan-level value-precision decision: how a registered matrix's value
+/// arrays are stored. Accumulation is always in the native scalar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ValuePrecision {
+    /// Native storage (no narrowing) — the default and the only choice
+    /// for non-f32 matrices.
+    #[default]
+    F32,
+    /// IEEE binary16 values, f32 accumulate.
+    F16,
+    /// bfloat16 values, f32 accumulate.
+    Bf16,
+}
+
+impl ValuePrecision {
+    /// Bytes per stored value under this precision, assuming an f32
+    /// native scalar (the serving path). Use [`ValuePrecision::val_bytes_or`]
+    /// when the native element size is known.
+    pub fn val_bytes(self) -> usize {
+        match self {
+            ValuePrecision::F32 => 4,
+            ValuePrecision::F16 | ValuePrecision::Bf16 => 2,
+        }
+    }
+
+    /// Bytes per stored value, given the native element size: `F32`
+    /// means "native" (4 for f32 matrices, 8 for f64), halves are 2.
+    pub fn val_bytes_or(self, native_elem: usize) -> usize {
+        match self {
+            ValuePrecision::F32 => native_elem,
+            ValuePrecision::F16 | ValuePrecision::Bf16 => 2,
+        }
+    }
+
+    /// Short tag used in plan summaries and kernel names.
+    pub fn label(self) -> &'static str {
+        match self {
+            ValuePrecision::F32 => "f32",
+            ValuePrecision::F16 => "f16",
+            ValuePrecision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// What a sparse format needs from its value element type: a `Copy`
+/// plain-old-data scalar with a zero fill constant and a known byte
+/// size. No arithmetic — structural format code only moves values.
+pub trait Storage: Copy + Send + Sync + std::fmt::Debug + PartialEq + 'static {
+    /// Bytes per stored element (the roofline's value-stream term).
+    const BYTES: usize;
+    /// Zero fill for padding slots (SELL padding, DIA empty slots).
+    const ZERO: Self;
+}
+
+impl Storage for f32 {
+    const BYTES: usize = 4;
+    const ZERO: Self = 0.0;
+}
+
+impl Storage for f64 {
+    const BYTES: usize = 8;
+    const ZERO: Self = 0.0;
+}
+
+/// A storage type usable as the value array of a kernel accumulating in
+/// `T`. Exactly one impl exists per storage type; that uniqueness is
+/// what lets `CsrParallel::new(a, pool)` infer the accumulator type
+/// from the matrix alone.
+pub trait ValueStorage<T>: Storage {
+    /// The plan-level name of this storage choice (`F32` for native).
+    const PRECISION: ValuePrecision;
+    /// Load: storage → accumulator (exact for every storable value).
+    fn widen(self) -> T;
+    /// Store: accumulator → storage (round-to-nearest-even).
+    fn narrow(v: T) -> Self;
+}
+
+impl ValueStorage<f32> for f32 {
+    const PRECISION: ValuePrecision = ValuePrecision::F32;
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        self
+    }
+    #[inline(always)]
+    fn narrow(v: f32) -> Self {
+        v
+    }
+}
+
+impl ValueStorage<f64> for f64 {
+    const PRECISION: ValuePrecision = ValuePrecision::F32;
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn narrow(v: f64) -> Self {
+        v
+    }
+}
+
+/// IEEE binary16 storage (1 sign + 5 exponent + 10 mantissa bits),
+/// held as its raw bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    /// Narrow an f32 with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        F16(f32_to_f16_bits(v))
+    }
+
+    /// Exact widening back to f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+}
+
+impl Storage for F16 {
+    const BYTES: usize = 2;
+    const ZERO: Self = F16(0);
+}
+
+impl ValueStorage<f32> for F16 {
+    const PRECISION: ValuePrecision = ValuePrecision::F16;
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+    #[inline(always)]
+    fn narrow(v: f32) -> Self {
+        F16(f32_to_f16_bits(v))
+    }
+}
+
+/// bfloat16 storage (1 sign + 8 exponent + 7 mantissa bits — an f32
+/// with the low 16 mantissa bits dropped), held as its raw bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Narrow an f32 with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        Bf16(f32_to_bf16_bits(v))
+    }
+
+    /// Exact widening back to f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        bf16_bits_to_f32(self.0)
+    }
+}
+
+impl Storage for Bf16 {
+    const BYTES: usize = 2;
+    const ZERO: Self = Bf16(0);
+}
+
+impl ValueStorage<f32> for Bf16 {
+    const PRECISION: ValuePrecision = ValuePrecision::Bf16;
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        bf16_bits_to_f32(self.0)
+    }
+    #[inline(always)]
+    fn narrow(v: f32) -> Self {
+        Bf16(f32_to_bf16_bits(v))
+    }
+}
+
+/// f32 → binary16 bit pattern, round-to-nearest-even, with subnormal
+/// and overflow-to-infinity handling.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // NaN keeps a quiet payload; infinity maps to infinity.
+        return if abs > 0x7f80_0000 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+    let exp16 = ((abs >> 23) as i32) - 112; // f32 bias 127 → f16 bias 15
+    if exp16 >= 31 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp16 <= 0 {
+        // target is subnormal (or underflows to zero): shift the full
+        // 24-bit significand right and round to nearest-even
+        let shift = 14 - exp16;
+        if shift >= 25 {
+            return sign; // too small for even the nearest-even tie
+        }
+        let mant = (abs & 0x7f_ffff) | 0x80_0000;
+        let shift = shift as u32;
+        let lsb = 1u32 << shift;
+        let round = lsb >> 1;
+        let rem = mant & (lsb - 1);
+        let mut m = mant >> shift;
+        if rem > round || (rem == round && (m & 1) != 0) {
+            m += 1; // may carry to 0x400 = smallest normal, correctly
+        }
+        return sign | m as u16;
+    }
+    // normal range: truncate 23→10 mantissa bits with round-to-nearest-even
+    let mant = abs & 0x7f_ffff;
+    let mut half = ((exp16 as u32) << 10) | (mant >> 13);
+    if (mant & 0x1000) != 0 && ((mant & 0xfff) != 0 || (mant & 0x2000) != 0) {
+        half += 1; // carry into the exponent is exactly right
+    }
+    if half >= 0x7c00 {
+        return sign | 0x7c00; // rounded up into ±inf
+    }
+    sign | half as u16
+}
+
+/// binary16 bit pattern → f32 (exact for every f16 value).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits as u32) & 0x8000) << 16;
+    let exp = (bits >> 10) & 0x1f;
+    let man = (bits & 0x3ff) as u32;
+    if exp == 0x1f {
+        // inf / NaN: shift the payload into the f32 mantissa
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // subnormal: normalize into an f32 normal
+        let mut m = man;
+        let mut e = 113u32; // exponent of 2^-14 in f32 bias, pre-shift
+        while m & 0x400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        return f32::from_bits(sign | (e << 23) | ((m & 0x3ff) << 13));
+    }
+    f32::from_bits(sign | ((exp as u32 + 112) << 23) | (man << 13))
+}
+
+/// f32 → bfloat16 bit pattern, round-to-nearest-even.
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if (bits & 0x7fff_ffff) > 0x7f80_0000 {
+        // NaN: truncate but force a quiet payload bit so it stays NaN
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 bit pattern → f32 (exact: bf16 is a truncated f32).
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_accessors() {
+        assert_eq!(ValuePrecision::default(), ValuePrecision::F32);
+        assert_eq!(ValuePrecision::F32.val_bytes(), 4);
+        assert_eq!(ValuePrecision::F16.val_bytes(), 2);
+        assert_eq!(ValuePrecision::Bf16.val_bytes(), 2);
+        assert_eq!(ValuePrecision::F32.val_bytes_or(8), 8);
+        assert_eq!(ValuePrecision::F16.val_bytes_or(8), 2);
+        assert_eq!(ValuePrecision::F32.label(), "f32");
+        assert_eq!(ValuePrecision::F16.label(), "f16");
+        assert_eq!(ValuePrecision::Bf16.label(), "bf16");
+        assert_eq!(<F16 as ValueStorage<f32>>::PRECISION, ValuePrecision::F16);
+        assert_eq!(<Bf16 as ValueStorage<f32>>::PRECISION, ValuePrecision::Bf16);
+        assert_eq!(<f32 as ValueStorage<f32>>::PRECISION, ValuePrecision::F32);
+        assert_eq!(<f32 as Storage>::BYTES, 4);
+        assert_eq!(<f64 as Storage>::BYTES, 8);
+        assert_eq!(<F16 as Storage>::BYTES, 2);
+    }
+
+    #[test]
+    fn f16_exact_values_roundtrip_bitwise() {
+        // stencil/Laplacian-style values the planner's gate admits
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, -0.25, 2.0, 4.0, 7.0, -6.0, 100.0, 1024.0, 65504.0,
+            -65504.0, 0.1238556f32, // not exact, but still roundtrips through *its own* f16
+        ] {
+            let h = F16::from_f32(v);
+            let w = h.to_f32();
+            let h2 = F16::from_f32(w);
+            assert_eq!(h.0, h2.0, "{v} not idempotent through f16");
+        }
+        // and the exact ones come back bit-identical
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 7.0, 100.0, 65504.0] {
+            assert_eq!(F16::from_f32(v).to_f32().to_bits(), v.to_bits(), "{v}");
+        }
+        // 0.1 is NOT f16-exact — the gate must see that
+        assert_ne!(F16::from_f32(0.1).to_f32().to_bits(), 0.1f32.to_bits());
+    }
+
+    #[test]
+    fn f16_all_patterns_widen_then_narrow_identically() {
+        for bits in 0..=0xffffu16 {
+            let v = f16_bits_to_f32(bits);
+            if v.is_nan() {
+                let back = f32_to_f16_bits(v);
+                assert_eq!(back & 0x7c00, 0x7c00, "{bits:#06x}");
+                assert_ne!(back & 0x3ff, 0, "{bits:#06x} NaN must stay NaN");
+            } else {
+                assert_eq!(f32_to_f16_bits(v), bits, "{bits:#06x} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2^-11 is halfway between f16(1.0)=0x3c00 and 0x3c01 → even
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3c00);
+        // 1 + 3·2^-11 is halfway between 0x3c01 and 0x3c02 → even (0x3c02)
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // just above the tie rounds up
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3c01);
+    }
+
+    #[test]
+    fn f16_overflow_and_subnormals() {
+        assert_eq!(f32_to_f16_bits(70000.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-70000.0), 0xfc00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        // 65520 is the tie between 65504 (max finite) and 2^16 → inf (even)
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7bff);
+        // smallest f16 subnormal is 2^-24
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
+        // halfway below underflows to zero on the even side
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(1.5 * 2f32.powi(-25)), 0x0001);
+        // smallest normal boundary: 2^-14
+        assert_eq!(f32_to_f16_bits(2f32.powi(-15)), 0x0200);
+        assert_eq!(f16_bits_to_f32(0x0200), 2f32.powi(-15));
+        assert_eq!(f32_to_f16_bits(2f32.powi(-14)), 0x0400);
+        // f32 subnormals (shift would exceed any u32 lsb) flush safely
+        assert_eq!(f32_to_f16_bits(f32::from_bits(1)), 0x0000);
+        assert_eq!(f32_to_f16_bits(-f32::from_bits(1)), 0x8000);
+    }
+
+    #[test]
+    fn bf16_all_patterns_widen_then_narrow_identically() {
+        for bits in 0..=0xffffu16 {
+            let v = bf16_bits_to_f32(bits);
+            if v.is_nan() {
+                let back = f32_to_bf16_bits(v);
+                assert!(bf16_bits_to_f32(back).is_nan(), "{bits:#06x}");
+            } else {
+                assert_eq!(f32_to_bf16_bits(v), bits, "{bits:#06x} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even_ties() {
+        // 1 + 2^-8 is halfway between bf16(1.0)=0x3f80 and 0x3f81 → even
+        assert_eq!(f32_to_bf16_bits(1.0 + 2f32.powi(-8)), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(1.0 + 3.0 * 2f32.powi(-8)), 0x3f82);
+        assert_eq!(f32_to_bf16_bits(1.0 + 2f32.powi(-8) + 2f32.powi(-16)), 0x3f81);
+        // bf16 keeps the f32 exponent range: no overflow at f16's limit
+        let w = bf16_bits_to_f32(f32_to_bf16_bits(1e30));
+        assert!(w.is_finite() && ((w - 1e30) / 1e30).abs() <= 2f32.powi(-8), "{w}");
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::MAX)).is_infinite());
+    }
+
+    #[test]
+    fn narrowing_error_is_bounded_for_generic_values() {
+        // relative error ≤ 2^-11 for f16, ≤ 2^-8 for bf16 on normals
+        let mut x = 1.0001f32;
+        for _ in 0..200 {
+            x = (x * 1.37).fract() + 0.01 + x.floor().min(100.0) * 0.003;
+            let v = x * 3.7 - 1.8;
+            if v.abs() < 1e-3 {
+                continue;
+            }
+            let f = F16::from_f32(v).to_f32();
+            assert!(((f - v) / v).abs() <= 2f32.powi(-11), "f16 {v} -> {f}");
+            let b = Bf16::from_f32(v).to_f32();
+            assert!(((b - v) / v).abs() <= 2f32.powi(-8), "bf16 {v} -> {b}");
+        }
+    }
+}

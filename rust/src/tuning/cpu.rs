@@ -74,6 +74,44 @@ pub fn stream_triad_gbps(pool: &Arc<ThreadPool>) -> f64 {
     (bytes / best_s / 1e9).clamp(1.0, 2000.0)
 }
 
+/// One-time pool fork/join launch-overhead calibration — the second
+/// measured constant of the cost model, beside [`stream_triad_gbps`].
+/// Every per-part roofline adds one dispatch overhead
+/// (`CPU_ROOFLINE.launch_overhead_s`, a 5 µs server-class guess); this
+/// measures what *this* pool at *this* width actually pays to fork and
+/// join an empty `parallel_for`. Same protocol as the triad: one warmup
+/// rep, then best-of-3 timed reps — overhead is a floor, so the fastest
+/// rep is the estimate least polluted by scheduling noise. Each rep
+/// amortizes over 64 dispatches so the `Instant` granularity never
+/// dominates. Clamped to [0.1 µs, 1 ms]: a degenerate measurement can
+/// neither zero the per-part floor (which would make empty parts free
+/// and break cost-row positivity) nor blow it up past any real pool.
+///
+/// `coordinator::backend::CpuBackend` runs this once per pool width
+/// (process-wide cache, mirroring the triad's) and substitutes the
+/// result through `planner::plan_cpu_cost_with_launch`, so the static
+/// estimate's two physical constants — bandwidth and dispatch — are
+/// both measured, not guessed.
+pub fn pool_launch_overhead_s(pool: &Arc<ThreadPool>) -> f64 {
+    const DISPATCHES: usize = 64;
+    let mut best_s = f64::INFINITY;
+    for rep in 0..4 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..DISPATCHES {
+            // an empty body over exactly one index per worker: all fork
+            // and join, no work — the overhead is the whole timing
+            pool.parallel_for(pool.threads(), Schedule::Static, |lo, hi| {
+                std::hint::black_box(hi - lo);
+            });
+        }
+        if rep > 0 {
+            // rep 0 warms the worker wake path
+            best_s = best_s.min(t0.elapsed().as_secs_f64());
+        }
+    }
+    (best_s / DISPATCHES as f64).clamp(1e-7, 1e-3)
+}
+
 /// Result of a CPU SRS sweep for one matrix.
 #[derive(Debug, Clone)]
 pub struct CpuSweep {
@@ -151,6 +189,16 @@ mod tests {
             let bw = stream_triad_gbps(&pool);
             assert!(bw.is_finite());
             assert!((1.0..=2000.0).contains(&bw), "triad {bw} GB/s out of range");
+        }
+    }
+
+    #[test]
+    fn launch_overhead_measures_a_sane_dispatch_cost() {
+        for t in [1usize, 3] {
+            let pool = Arc::new(ThreadPool::new(t));
+            let s = pool_launch_overhead_s(&pool);
+            assert!(s.is_finite());
+            assert!((1e-7..=1e-3).contains(&s), "launch {s} s out of range");
         }
     }
 

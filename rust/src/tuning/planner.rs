@@ -75,6 +75,28 @@
 //!    pads) is the right call. CSR5 keeps the fixed mid-sweep shape
 //!    ω = 8, σ = 16.
 //!
+//! # Mixed precision: the value-storage decision
+//!
+//! Orthogonal to the format rails, every `Single`/`Hybrid` plan carries
+//! a [`ValuePrecision`]: the storage width of the matrix **values**
+//! (f32, f16 or bf16 — [`crate::sparse::F16`]/[`crate::sparse::Bf16`]).
+//! Kernels always *accumulate* in the native scalar, widening each
+//! stored value on load, so precision only changes the value stream's
+//! bytes — exactly what SpMV, deep in the bandwidth regime, is billed
+//! for. [`choose_precision`] gates the decision conservatively: a
+//! half-width plan is auto-chosen **only when every value round-trips
+//! bit-exactly** through the half format (FD/FEM stencils with small
+//! integer or dyadic coefficients), so an auto-gated plan's output is
+//! bit-identical to the f32 plan's and ill-conditioned operands stay
+//! f32. Lossy narrowing is available, but only on request
+//! ([`plan_hinted_prec`] with `Some(...)`). The pricing sees the
+//! decision end to end: the `*_val` roofline splits
+//! ([`spmv_bytes_val`](crate::analysis::roofline::spmv_bytes_val) and
+//! siblings) charge `val_elem` bytes per stored slot while `x`/`y` and
+//! the 4-byte index streams stay native, so a half-value DIA plan —
+//! which has no index stream at all — prices at nearly half the f32
+//! stream and the routing EWMA starts from an honest estimate.
+//!
 //! Every plan carries a roofline-style cost estimate per backend id
 //! ([`DeviceKind`], reusing the Fig 1 machinery in
 //! [`crate::analysis::roofline`]); a hybrid plan's CPU estimate **sums
@@ -98,9 +120,16 @@
 //! bit-exact pair (parallel CSR, SELL-C-σ — see [`plan_sharded`]) so a
 //! sharded ensemble reproduces the serial reference bit for bit.
 
-use crate::analysis::roofline::{dia_bytes, sellcs_bytes, spmv_bytes};
+use std::any::TypeId;
+
+use crate::analysis::roofline::{
+    dia_bytes, dia_bytes_val, sellcs_bytes_val, spmv_bytes, spmv_bytes_val,
+};
 use crate::gpusim::device::{DeviceSpec, AMPERE_A100};
-use crate::sparse::{nnz_balanced_bounds, Csr, Scalar};
+use crate::sparse::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, nnz_balanced_bounds,
+    Csr, Scalar, ValuePrecision,
+};
 use crate::tuning::cpu::FIXED_SRS;
 use crate::tuning::{csr3_params_multi, Device, TuneParams};
 
@@ -483,6 +512,10 @@ pub enum FormatPlan {
         /// Padded-export width for the PJRT binding, or `None` to skip
         /// the accelerator path for this matrix.
         pjrt_width: Option<usize>,
+        /// Storage width of the matrix values ([`choose_precision`], or
+        /// the forced override). The build stage narrows the kernel's
+        /// value arrays to this; the cost rows already price it.
+        precision: ValuePrecision,
         /// Estimated seconds per single-vector SpMV, one entry per
         /// device the plan considers viable. Relative numbers for
         /// routing.
@@ -510,6 +543,9 @@ pub enum FormatPlan {
         /// remainder→host). `None` only for hand-built plans that skip
         /// the accelerator path.
         pjrt_width: Option<usize>,
+        /// Storage width of the matrix values, applied to **both**
+        /// parts (per-part mixed precision is a ROADMAP follow-up).
+        precision: ValuePrecision,
         /// Per-backend cost estimates. The CPU entry sums the per-part
         /// CPU rooflines; the PJRT entry prices the mixed placement —
         /// body through the padded accelerator roofline, remainder on
@@ -583,6 +619,19 @@ impl FormatPlan {
             }
             // shards stay in identity order — the bit-for-bit promise
             FormatPlan::Sharded { .. } => false,
+        }
+    }
+
+    /// Storage width of the matrix values. Sharded plans are pinned to
+    /// native f32 storage — the bit-for-bit promise forbids even the
+    /// exact-roundtrip narrowing (re-widened loads are bit-equal, but
+    /// keeping the shard rail trivially identical to `spmv_ref` is the
+    /// whole point of that shape).
+    pub fn precision(&self) -> ValuePrecision {
+        match self {
+            FormatPlan::Single { precision, .. } => *precision,
+            FormatPlan::Hybrid { precision, .. } => *precision,
+            FormatPlan::Sharded { .. } => ValuePrecision::F32,
         }
     }
 
@@ -685,6 +734,9 @@ impl FormatPlan {
                 }
             }
         }
+        if self.precision() != ValuePrecision::F32 {
+            s.push_str(&format!(" vals {}", self.precision().label()));
+        }
         for &(d, c) in self.costs() {
             s.push_str(&format!(" {d:?} {:.1}us", c * 1e6));
         }
@@ -697,15 +749,76 @@ pub fn plan<T: Scalar>(a: &Csr<T>) -> FormatPlan {
     plan_hinted(a, 1)
 }
 
+/// The value-storage gate: pick the narrowest half format **every**
+/// value of `a` round-trips through bit-exactly, or stay f32.
+///
+/// Only f32 matrices are eligible (f64 operands asked for the wide
+/// accumulator precisely because their values need it; the half
+/// formats cannot even represent f64's exponent range), and f16 is
+/// preferred over bf16 when both are exact (they tie on bytes; f16's
+/// 10 fraction bits make it exact for a strictly larger set of the
+/// small-integer stencil coefficients this gate exists for). The
+/// exactness requirement is the conservatism: an auto-gated half plan
+/// widens every load back to the identical f32 bit pattern, so its
+/// output is **bit-identical** to the f32 plan's — ill-conditioned or
+/// rng-valued operands always stay f32, and the only way to get lossy
+/// narrowing is to force it through [`plan_hinted_prec`].
+pub fn choose_precision<T: Scalar>(a: &Csr<T>) -> ValuePrecision {
+    if TypeId::of::<T>() != TypeId::of::<f32>() || a.nnz() == 0 {
+        return ValuePrecision::F32;
+    }
+    let mut f16_ok = true;
+    let mut bf16_ok = true;
+    for i in 0..a.nrows() {
+        let (_, vals) = a.row(i);
+        for v in vals {
+            // T is f32 on this path, so to_f32 is the identity
+            let x = v.to_f32().unwrap_or(f32::NAN);
+            let bits = x.to_bits();
+            f16_ok = f16_ok && f16_bits_to_f32(f32_to_f16_bits(x)).to_bits() == bits;
+            bf16_ok = bf16_ok && bf16_bits_to_f32(f32_to_bf16_bits(x)).to_bits() == bits;
+            if !f16_ok && !bf16_ok {
+                return ValuePrecision::F32;
+            }
+        }
+    }
+    if f16_ok {
+        ValuePrecision::F16
+    } else {
+        ValuePrecision::Bf16
+    }
+}
+
 /// Plan a matrix for traffic batched ≈ `block_hint` requests deep: the
 /// Band-k group targets come from the §4.1 heuristic at the
 /// block-width-scaled effective density
 /// ([`crate::tuning::csr3_params_multi`]), exactly as
 /// `register_hinted` always chose them. For hybrid plans the heuristic
 /// runs at the *body* density — the body is what Band-k reorders.
+/// Value precision comes from [`choose_precision`] (the bit-exact
+/// auto-gate).
 pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
+    plan_hinted_prec(a, block_hint, None)
+}
+
+/// [`plan_hinted`] with an explicit value-precision override. `None`
+/// runs the [`choose_precision`] auto-gate; `Some(p)` forces `p`, which
+/// is how callers opt into **lossy** narrowing (the auto-gate never
+/// does). A forced half precision on a non-f32 matrix degrades to
+/// [`ValuePrecision::F32`] — the build stage would fall back to the
+/// native kernel there anyway, and the plan must price what runs.
+pub fn plan_hinted_prec<T: Scalar>(
+    a: &Csr<T>,
+    block_hint: usize,
+    forced: Option<ValuePrecision>,
+) -> FormatPlan {
     let stats = MatrixStats::of(a);
     let hint = block_hint.max(1);
+    let prec = match forced {
+        Some(p) if TypeId::of::<T>() == TypeId::of::<f32>() => p,
+        Some(_) => ValuePrecision::F32,
+        None => choose_precision(a),
+    };
 
     // The §6 variance criterion, hardened by the absolute hub trigger:
     // a few rails on a large matrix dilute the variance below 10, but a
@@ -713,7 +826,7 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
     // regular path every rail nonzero beyond the clamped padded width
     // serializes through the host-side overflow fix-up.
     if stats.is_regular() && !stats.has_disproportionate_row() {
-        return regular_plan(a, stats, hint);
+        return regular_plan(a, stats, hint, prec);
     }
 
     if let Some(h) = detect_hub_split(a) {
@@ -755,9 +868,12 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             .filter(|&d| d <= h.threshold)
             .map(|d| d.saturating_sub(width))
             .sum();
-        let rem_cpu = part_cpu_cost::<T>(h.hub_rows, stats.ncols, h.hub_nnz);
-        let body_cpu = part_cpu_cost::<T>(h.body_rows, stats.ncols, h.body_nnz);
+        let rem_cpu = part_cpu_cost_prec::<T>(h.hub_rows, stats.ncols, h.hub_nnz, prec);
+        let body_cpu = part_cpu_cost_prec::<T>(h.body_rows, stats.ncols, h.body_nnz, prec);
         let cpu = body_cpu + rem_cpu;
+        // the padded export streams native values (the device binding
+        // owns its own layout), so the PJRT body term ignores `prec`;
+        // the host-side remainder term keeps the narrowed stream
         let pjrt =
             part_pjrt_cost::<T>(h.body_rows, stats.ncols, h.body_nnz, width, body_overflow)
                 + rem_cpu;
@@ -766,7 +882,7 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             // the SELL device placement: body stays on its host kernel,
             // the remainder rebinds at the device chunk width
             let sell = body_cpu
-                + sell_device_cost::<T>(&rem_row_nnz, h.hub_rows, stats.ncols);
+                + sell_device_cost_prec::<T>(&rem_row_nnz, h.hub_rows, stats.ncols, prec);
             costs.push((DeviceKind::Sell, sell));
         }
         return FormatPlan::Hybrid {
@@ -776,6 +892,7 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
             remainder,
             gpu_params,
             pjrt_width: Some(width),
+            precision: prec,
             costs,
         };
     }
@@ -783,7 +900,7 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
     if stats.is_regular() {
         // The absolute trigger fired but no cap-bounded split explains
         // the long rows — the regular path is still the best plan.
-        return regular_plan(a, stats, hint);
+        return regular_plan(a, stats, hint, prec);
     }
 
     // Wholesale irregular: reordering for band structure does not fix
@@ -795,14 +912,25 @@ pub fn plan_hinted<T: Scalar>(a: &Csr<T>, block_hint: usize) -> FormatPlan {
     let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
     let row_nnz: Vec<usize> = (0..a.nrows()).map(|i| a.row_nnz(i)).collect();
     let kernel = irregular_kernel(&row_nnz);
-    let mut costs = vec![(DeviceKind::Cpu, cpu_cost(a))];
+    let mut costs = vec![(
+        DeviceKind::Cpu,
+        part_cpu_cost_prec::<T>(stats.nrows, stats.ncols, stats.nnz, prec),
+    )];
     if matches!(kernel, PlannedKernel::SellCs { .. }) {
         costs.push((
             DeviceKind::Sell,
-            sell_device_cost::<T>(&row_nnz, stats.nrows, stats.ncols),
+            sell_device_cost_prec::<T>(&row_nnz, stats.nrows, stats.ncols, prec),
         ));
     }
-    FormatPlan::Single { stats, reorder: None, kernel, gpu_params, pjrt_width: None, costs }
+    FormatPlan::Single {
+        stats,
+        reorder: None,
+        kernel,
+        gpu_params,
+        pjrt_width: None,
+        precision: prec,
+        costs,
+    }
 }
 
 /// Plan an N-way scale-out sharding: contiguous nnz-balanced row
@@ -935,13 +1063,19 @@ fn dia_candidates<T: Scalar>(a: &Csr<T>) -> (Vec<i64>, f64) {
 /// irregular rail through [`HybridSplit::DiaRows`]. Either way the
 /// modeled [`dia_bytes`] stream must strictly undercut the CSR stream
 /// it replaces, or Band-k + CSR-2 keeps the rail (`None`).
-fn dia_plan<T: Scalar>(a: &Csr<T>, stats: &MatrixStats, hint: usize) -> Option<FormatPlan> {
+fn dia_plan<T: Scalar>(
+    a: &Csr<T>,
+    stats: &MatrixStats,
+    hint: usize,
+    prec: ValuePrecision,
+) -> Option<FormatPlan> {
     let offsets = &stats.dia_offsets;
     if offsets.is_empty() {
         return None;
     }
     let ndiags = offsets.len();
     let elem = std::mem::size_of::<T>();
+    let val_elem = prec.val_bytes_or(elem);
     // the row-wise Fukaya cut: a row joins the DIA body only when every
     // entry sits on a nominated diagonal — the composite merge is a row
     // scatter (overwrite, never accumulate), so rows cannot split
@@ -972,14 +1106,22 @@ fn dia_plan<T: Scalar>(a: &Csr<T>, stats: &MatrixStats, hint: usize) -> Option<F
     if rem_row_nnz.is_empty() {
         // full capture: one kernel, identity order, no padded export —
         // the accelerator side of this rail is the CMRS follow-up
-        let cpu =
-            dia_part_cost(n, stats.ncols, ndiags, stats.nnz, elem, CPU_ROOFLINE.mem_bw_gbps);
+        let cpu = dia_part_cost_val(
+            n,
+            stats.ncols,
+            ndiags,
+            stats.nnz,
+            val_elem,
+            elem,
+            CPU_ROOFLINE.mem_bw_gbps,
+        );
         return Some(FormatPlan::Single {
             stats: stats.clone(),
             reorder: None,
             kernel,
             gpu_params,
             pjrt_width: None,
+            precision: prec,
             costs: vec![(DeviceKind::Cpu, cpu)],
         });
     }
@@ -992,20 +1134,21 @@ fn dia_plan<T: Scalar>(a: &Csr<T>, stats: &MatrixStats, hint: usize) -> Option<F
         reorder: None,
         kernel: irregular_kernel(&rem_row_nnz),
     };
-    let body_cpu = dia_part_cost(
+    let body_cpu = dia_part_cost_val(
         body_rows,
         stats.ncols,
         ndiags,
         body_nnz,
+        val_elem,
         elem,
         CPU_ROOFLINE.mem_bw_gbps,
     );
-    let rem_cpu = part_cpu_cost::<T>(rem_rows, stats.ncols, rem_nnz);
+    let rem_cpu = part_cpu_cost_prec::<T>(rem_rows, stats.ncols, rem_nnz, prec);
     let mut costs = vec![(DeviceKind::Cpu, body_cpu + rem_cpu)];
     if matches!(remainder.kernel, PlannedKernel::SellCs { .. }) {
         costs.push((
             DeviceKind::Sell,
-            body_cpu + sell_device_cost::<T>(&rem_row_nnz, rem_rows, stats.ncols),
+            body_cpu + sell_device_cost_prec::<T>(&rem_row_nnz, rem_rows, stats.ncols, prec),
         ));
     }
     Some(FormatPlan::Hybrid {
@@ -1015,6 +1158,7 @@ fn dia_plan<T: Scalar>(a: &Csr<T>, stats: &MatrixStats, hint: usize) -> Option<F
         remainder,
         gpu_params,
         pjrt_width: None,
+        precision: prec,
         costs,
     })
 }
@@ -1024,8 +1168,13 @@ fn dia_plan<T: Scalar>(a: &Csr<T>, stats: &MatrixStats, hint: usize) -> Option<F
 /// group targets, CSR-2 at the constant-time CPU SRS, padded export at
 /// the next power of two ≥ the longest row (clamped to the AOT bucket
 /// widths).
-fn regular_plan<T: Scalar>(a: &Csr<T>, stats: MatrixStats, hint: usize) -> FormatPlan {
-    if let Some(p) = dia_plan(a, &stats, hint) {
+fn regular_plan<T: Scalar>(
+    a: &Csr<T>,
+    stats: MatrixStats,
+    hint: usize,
+    prec: ValuePrecision,
+) -> FormatPlan {
+    if let Some(p) = dia_plan(a, &stats, hint, prec) {
         return p;
     }
     let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
@@ -1037,7 +1186,11 @@ fn regular_plan<T: Scalar>(a: &Csr<T>, stats: MatrixStats, hint: usize) -> Forma
     };
     let width = stats.max_row_nnz.next_power_of_two().clamp(PJRT_MIN_WIDTH, PJRT_MAX_WIDTH);
     let costs = vec![
-        (DeviceKind::Cpu, cpu_cost(a)),
+        (
+            DeviceKind::Cpu,
+            part_cpu_cost_prec::<T>(stats.nrows, stats.ncols, stats.nnz, prec),
+        ),
+        // the padded export streams native values — see `plan_hinted_prec`
         (DeviceKind::Pjrt, pjrt_cost(a, width)),
     ];
     FormatPlan::Single {
@@ -1046,6 +1199,7 @@ fn regular_plan<T: Scalar>(a: &Csr<T>, stats: MatrixStats, hint: usize) -> Forma
         kernel: PlannedKernel::Csr2 { srs: FIXED_SRS },
         gpu_params,
         pjrt_width: Some(width),
+        precision: prec,
         costs,
     }
 }
@@ -1205,24 +1359,32 @@ fn detect_hub_split<T: Scalar>(a: &Csr<T>) -> Option<HubSplit> {
     None
 }
 
-/// Roofline cost of one SpMV on the host CPU: the Fig 1 cold-cache
-/// arithmetic intensity against the CPU proxy roofline, plus the pool
-/// dispatch overhead.
-fn cpu_cost<T: Scalar>(a: &Csr<T>) -> f64 {
-    part_cpu_cost::<T>(a.nrows(), a.ncols(), a.nnz())
+/// The CSR roofline priced from raw part dimensions at native element
+/// width, so hybrid plans can sum per-part estimates without
+/// materializing the split: `2·nnz` FLOPs over the part's
+/// [`spmv_bytes`] stream (each part reads the shared `x` itself — the
+/// split does not remap columns), plus one pool dispatch per part.
+fn part_cpu_cost<T: Scalar>(nrows: usize, ncols: usize, nnz: usize) -> f64 {
+    part_cpu_cost_prec::<T>(nrows, ncols, nnz, ValuePrecision::F32)
 }
 
-/// The same roofline priced from raw part dimensions, so hybrid plans
-/// can sum per-part estimates without materializing the split: `2·nnz`
-/// FLOPs over the part's [`spmv_bytes`] stream (each part reads the
-/// shared `x` itself — the split does not remap columns), plus one
-/// pool dispatch per part.
-fn part_cpu_cost<T: Scalar>(nrows: usize, ncols: usize, nnz: usize) -> f64 {
-    cpu_part_cost(
+/// [`part_cpu_cost`] with the plan's value precision: the value stream
+/// is priced at `prec`'s byte width while indices and the `x`/`y`
+/// streams stay native. [`ValuePrecision::F32`] is the identity (the
+/// native width, whatever `T` is).
+fn part_cpu_cost_prec<T: Scalar>(
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    prec: ValuePrecision,
+) -> f64 {
+    let elem = std::mem::size_of::<T>();
+    cpu_part_cost_val(
         nrows,
         ncols,
         nnz,
-        std::mem::size_of::<T>(),
+        prec.val_bytes_or(elem),
+        elem,
         CPU_ROOFLINE.mem_bw_gbps,
     )
 }
@@ -1242,14 +1404,51 @@ pub fn cpu_part_cost(
     elem: usize,
     mem_bw_gbps: f64,
 ) -> f64 {
+    cpu_part_cost_val(nrows, ncols, nnz, elem, elem, mem_bw_gbps)
+}
+
+/// [`cpu_part_cost`] with the value and vector streams priced at
+/// different element sizes — the mixed-precision seam
+/// ([`spmv_bytes_val`] does the byte split).
+pub fn cpu_part_cost_val(
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    val_elem: usize,
+    vec_elem: usize,
+    mem_bw_gbps: f64,
+) -> f64 {
+    cpu_part_seconds(
+        nrows,
+        ncols,
+        nnz,
+        val_elem,
+        vec_elem,
+        mem_bw_gbps,
+        CPU_ROOFLINE.launch_overhead_s,
+    )
+}
+
+/// The fully-parameterized CPU part roofline: bandwidth *and* the pool
+/// dispatch overhead are explicit, so the backend can substitute both
+/// of its measured constants (`plan_cpu_cost_with_launch`).
+fn cpu_part_seconds(
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    val_elem: usize,
+    vec_elem: usize,
+    mem_bw_gbps: f64,
+    launch_s: f64,
+) -> f64 {
     let flops = 2.0 * nnz as f64;
     if flops == 0.0 {
-        return CPU_ROOFLINE.launch_overhead_s;
+        return launch_s;
     }
-    let bytes = spmv_bytes(nrows, ncols, nnz, elem);
+    let bytes = spmv_bytes_val(nrows, ncols, nnz, val_elem, vec_elem);
     let ai = flops / bytes as f64;
     let gflops = (CPU_ROOFLINE.fp32_tflops * 1e3).min(ai * mem_bw_gbps);
-    flops / (gflops * 1e9) + CPU_ROOFLINE.launch_overhead_s
+    flops / (gflops * 1e9) + launch_s
 }
 
 /// The DIA part roofline with an explicit streaming bandwidth — the
@@ -1264,14 +1463,52 @@ pub fn dia_part_cost(
     elem: usize,
     mem_bw_gbps: f64,
 ) -> f64 {
+    dia_part_cost_val(nrows, ncols, ndiags, nnz, elem, elem, mem_bw_gbps)
+}
+
+/// [`dia_part_cost`] with the diagonal-slot and vector streams priced
+/// at different element sizes ([`dia_bytes_val`]). DIA carries no index
+/// stream, so this is where halving the value width pays the most.
+pub fn dia_part_cost_val(
+    nrows: usize,
+    ncols: usize,
+    ndiags: usize,
+    nnz: usize,
+    val_elem: usize,
+    vec_elem: usize,
+    mem_bw_gbps: f64,
+) -> f64 {
+    dia_part_seconds(
+        nrows,
+        ncols,
+        ndiags,
+        nnz,
+        val_elem,
+        vec_elem,
+        mem_bw_gbps,
+        CPU_ROOFLINE.launch_overhead_s,
+    )
+}
+
+/// The fully-parameterized DIA part roofline (see [`cpu_part_seconds`]).
+fn dia_part_seconds(
+    nrows: usize,
+    ncols: usize,
+    ndiags: usize,
+    nnz: usize,
+    val_elem: usize,
+    vec_elem: usize,
+    mem_bw_gbps: f64,
+    launch_s: f64,
+) -> f64 {
     let flops = 2.0 * nnz as f64;
     if flops == 0.0 {
-        return CPU_ROOFLINE.launch_overhead_s;
+        return launch_s;
     }
-    let bytes = dia_bytes(nrows, ncols, ndiags, elem);
+    let bytes = dia_bytes_val(nrows, ncols, ndiags, val_elem, vec_elem);
     let ai = flops / bytes as f64;
     let gflops = (CPU_ROOFLINE.fp32_tflops * 1e3).min(ai * mem_bw_gbps);
-    flops / (gflops * 1e9) + CPU_ROOFLINE.launch_overhead_s
+    flops / (gflops * 1e9) + launch_s
 }
 
 /// Price a whole plan's CPU execution at an explicit streaming
@@ -1281,15 +1518,32 @@ pub fn dia_part_cost(
 /// this one), the single roofline otherwise. Kernel-aware: DIA parts
 /// price their padded [`dia_bytes`] slot stream, everything else the
 /// CSR stream — the same functions that seeded the plan's own Cpu cost
-/// row, so the seam and the row agree. Element size is 4 bytes — the
-/// serving layer binds f32.
+/// row, so the seam and the row agree. Precision-aware: the value
+/// stream is priced at the plan's [`ValuePrecision`] byte width; the
+/// vector streams are 4 bytes — the serving layer binds f32.
 pub fn plan_cpu_cost(plan: &FormatPlan, mem_bw_gbps: f64) -> f64 {
-    const ELEM: usize = 4;
+    plan_cpu_cost_with_launch(plan, mem_bw_gbps, CPU_ROOFLINE.launch_overhead_s)
+}
+
+/// [`plan_cpu_cost`] with an explicit per-part dispatch overhead — the
+/// second calibration seam: `CpuBackend::static_cost` substitutes both
+/// its measured STREAM-triad bandwidth *and* its measured pool
+/// fork/join launch cost (`tuning::cpu::pool_launch_overhead_s`) here,
+/// so the static estimate's two physical constants are both real. At
+/// `launch_s = CPU_ROOFLINE.launch_overhead_s` this reproduces
+/// [`plan_cpu_cost`] exactly.
+pub fn plan_cpu_cost_with_launch(
+    plan: &FormatPlan,
+    mem_bw_gbps: f64,
+    launch_s: f64,
+) -> f64 {
+    const VEC_ELEM: usize = 4;
+    let val_elem = plan.precision().val_bytes();
     let part = |kernel: &PlannedKernel, rows: usize, ncols: usize, nnz: usize| match *kernel {
-        PlannedKernel::Dia { ndiags } => {
-            dia_part_cost(rows, ncols, ndiags, nnz, ELEM, mem_bw_gbps)
-        }
-        _ => cpu_part_cost(rows, ncols, nnz, ELEM, mem_bw_gbps),
+        PlannedKernel::Dia { ndiags } => dia_part_seconds(
+            rows, ncols, ndiags, nnz, val_elem, VEC_ELEM, mem_bw_gbps, launch_s,
+        ),
+        _ => cpu_part_seconds(rows, ncols, nnz, val_elem, VEC_ELEM, mem_bw_gbps, launch_s),
     };
     match plan {
         FormatPlan::Single { stats, kernel, .. } => {
@@ -1301,7 +1555,11 @@ pub fn plan_cpu_cost(plan: &FormatPlan, mem_bw_gbps: f64) -> f64 {
         }
         FormatPlan::Sharded { stats, shards, .. } => shards
             .iter()
-            .map(|sh| cpu_part_cost(sh.rows, stats.ncols, sh.nnz, ELEM, mem_bw_gbps))
+            .map(|sh| {
+                cpu_part_seconds(
+                    sh.rows, stats.ncols, sh.nnz, VEC_ELEM, VEC_ELEM, mem_bw_gbps, launch_s,
+                )
+            })
             .sum(),
     }
 }
@@ -1313,6 +1571,19 @@ pub fn plan_cpu_cost(plan: &FormatPlan, mem_bw_gbps: f64) -> f64 {
 /// [`SELL_ROOFLINE`], per-request vector marshaling, and the launch
 /// overhead.
 fn sell_device_cost<T: Scalar>(row_nnz: &[usize], nrows: usize, ncols: usize) -> f64 {
+    sell_device_cost_prec::<T>(row_nnz, nrows, ncols, ValuePrecision::F32)
+}
+
+/// [`sell_device_cost`] at the plan's value precision: the padded value
+/// slots shrink to `prec`'s byte width ([`sellcs_bytes_val`]); the
+/// column slots, chunk tables and transferred vectors stay native —
+/// the device re-binds the narrowed structure at its own chunk width.
+fn sell_device_cost_prec<T: Scalar>(
+    row_nnz: &[usize],
+    nrows: usize,
+    ncols: usize,
+    prec: ValuePrecision,
+) -> f64 {
     let nnz: usize = row_nnz.iter().sum();
     let flops = 2.0 * nnz as f64;
     if flops == 0.0 {
@@ -1323,7 +1594,7 @@ fn sell_device_cost<T: Scalar>(row_nnz: &[usize], nrows: usize, ncols: usize) ->
     let padded = (fill * nnz as f64).ceil() as usize;
     let elem = std::mem::size_of::<T>();
     let nchunks = nrows.div_ceil(SELL_DEVICE_C);
-    let bytes = sellcs_bytes(nrows, ncols, padded, nchunks, elem);
+    let bytes = sellcs_bytes_val(nrows, ncols, padded, nchunks, prec.val_bytes_or(elem), elem);
     let ai = flops / bytes as f64;
     let kernel_s = flops / (SELL_ROOFLINE.roofline_gflops(ai) * 1e9);
     let transfer_s = ((ncols + nrows) * elem) as f64 / (PCIE_GBPS * 1e9);
@@ -1505,17 +1776,27 @@ mod tests {
     fn hybrid_cost_sums_per_part_rooflines() {
         let a = gen::circuit::<f32>(32, 32, 7);
         let p = plan(&a);
+        // the circuit fixture's values are small integers and halves —
+        // every one f16-exact, so the auto-gate narrows the plan
+        assert_eq!(p.precision(), ValuePrecision::F16, "{}", p.summary());
         let (body, remainder) = match &p {
             FormatPlan::Hybrid { body, remainder, .. } => (body, remainder),
             _ => panic!("expected hybrid"),
         };
-        let expect = part_cpu_cost::<f32>(body.rows, a.ncols(), body.nnz)
-            + part_cpu_cost::<f32>(remainder.rows, a.ncols(), remainder.nnz);
+        let expect = part_cpu_cost_prec::<f32>(body.rows, a.ncols(), body.nnz, p.precision())
+            + part_cpu_cost_prec::<f32>(
+                remainder.rows,
+                a.ncols(),
+                remainder.nnz,
+                p.precision(),
+            );
         let got = p.cost(DeviceKind::Cpu).unwrap();
         assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
         // two dispatch overheads + double-counted x stream ⇒ the sum
         // exceeds pricing the same matrix as one part
-        assert!(got > part_cpu_cost::<f32>(a.nrows(), a.ncols(), a.nnz()));
+        assert!(
+            got > part_cpu_cost_prec::<f32>(a.nrows(), a.ncols(), a.nnz(), p.precision())
+        );
     }
 
     #[test]
@@ -1809,11 +2090,15 @@ mod tests {
             _ => panic!("stencils plan Single DIA: {}", p.summary()),
         }
         assert_eq!(p.kernel_label(), "dia");
-        // the plan's own cost row is the dia_bytes roofline, and the
-        // kernel-aware seam reproduces it at the proxy constant
+        // stencil coefficients are f16-exact ⇒ the auto-gate narrows the
+        // value stream; the cost row is the val-split dia_bytes roofline
+        // and the kernel-aware seam reproduces it at the proxy constant
+        assert_eq!(p.precision(), ValuePrecision::F16, "{}", p.summary());
         let row = p.cost(DeviceKind::Cpu).unwrap();
-        let expect = dia_part_cost(256, 256, 5, a.nnz(), 4, CPU_ROOFLINE.mem_bw_gbps);
+        let expect = dia_part_cost_val(256, 256, 5, a.nnz(), 2, 4, CPU_ROOFLINE.mem_bw_gbps);
         assert!((row - expect).abs() < 1e-15, "{row} vs {expect}");
+        // and the half-value stream strictly undercuts the native row
+        assert!(row < dia_part_cost(256, 256, 5, a.nnz(), 4, CPU_ROOFLINE.mem_bw_gbps));
         assert!((plan_cpu_cost(&p, CPU_ROOFLINE.mem_bw_gbps) - row).abs() < 1e-15);
         // the whole point: the modeled stream undercuts the CSR stream
         assert!(dia_bytes(256, 256, 5, 4) < spmv_bytes(256, 256, a.nnz(), 4));
@@ -2005,5 +2290,125 @@ mod tests {
         assert!(p.cost(DeviceKind::Cpu).unwrap() > 0.0, "launch overhead floors the cost");
         let _ = p.summary();
         let _ = p.kernel_label();
+    }
+
+    #[test]
+    fn precision_gate_narrows_only_bit_exact_f32_values() {
+        // stencil coefficients (−1, d+1) are all f16-exact
+        assert_eq!(
+            choose_precision(&gen::grid3d_7pt::<f32>(6, 6, 6)),
+            ValuePrecision::F16
+        );
+        // f64 operands never narrow, whatever the values
+        assert_eq!(choose_precision(&gen::grid3d_7pt::<f64>(6, 6, 6)), ValuePrecision::F32);
+        // empty matrices stay native
+        assert_eq!(
+            choose_precision(&Coo::<f32>::new(0, 0).to_csr()),
+            ValuePrecision::F32
+        );
+        // 0.1 has no finite binary expansion: its f32 rounding is not
+        // an f16 (or bf16) value, so the gate must refuse
+        let mut c = Coo::<f32>::new(4, 4);
+        for i in 0..4 {
+            c.push(i, i, 0.1);
+        }
+        assert_eq!(choose_precision(&c.to_csr()), ValuePrecision::F32);
+        // 2^20 overflows f16 (max ~65504) but is exactly a bf16 value —
+        // the wide-exponent format wins the tiebreak-less second slot
+        let mut c = Coo::<f32>::new(4, 4);
+        for i in 0..4 {
+            c.push(i, i, 1048576.0);
+        }
+        assert_eq!(choose_precision(&c.to_csr()), ValuePrecision::Bf16);
+        // rng-valued operands keep full precision
+        assert_eq!(
+            choose_precision(&gen::power_law::<f32>(200, 4, 1.0, 7)),
+            ValuePrecision::F32
+        );
+    }
+
+    #[test]
+    fn auto_gated_half_plans_price_below_the_forced_f32_plan() {
+        // large enough that the value stream, not the 5 µs dispatch
+        // floor, dominates the modeled time (≈ 190k nonzeros)
+        let a = gen::grid3d_7pt::<f32>(30, 30, 30);
+        let auto = plan(&a);
+        assert_eq!(auto.precision(), ValuePrecision::F16, "{}", auto.summary());
+        assert!(auto.summary().contains("vals f16"), "{}", auto.summary());
+        let native = plan_hinted_prec(&a, 1, Some(ValuePrecision::F32));
+        assert_eq!(native.precision(), ValuePrecision::F32);
+        assert!(!native.summary().contains("vals"), "{}", native.summary());
+        // same structural decision, cheaper value stream
+        assert_eq!(auto.kernel_label(), native.kernel_label());
+        let (c_half, c_full) = (
+            auto.cost(DeviceKind::Cpu).unwrap(),
+            native.cost(DeviceKind::Cpu).unwrap(),
+        );
+        assert!(c_half < c_full, "{c_half} vs {c_full}");
+        // DIA has no index stream: the modeled win must be substantial
+        // (launch overhead keeps it short of a clean 2×)
+        assert!(c_half < 0.75 * c_full, "{c_half} vs {c_full}");
+    }
+
+    #[test]
+    fn forced_precision_overrides_the_gate_and_degrades_off_f32() {
+        // power-law values are not half-exact, but a forced bf16 plan
+        // narrows (lossily) anyway — the caller asked
+        let a = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
+        let p = plan_hinted_prec(&a, 1, Some(ValuePrecision::Bf16));
+        assert_eq!(p.precision(), ValuePrecision::Bf16);
+        assert!(p.summary().contains("vals bf16"), "{}", p.summary());
+        // a forced half on an f64 matrix degrades to native: the build
+        // stage would fall back there, so the plan must price native
+        let d = gen::grid2d_5pt::<f64>(10, 10);
+        let p = plan_hinted_prec(&d, 1, Some(ValuePrecision::F16));
+        assert_eq!(p.precision(), ValuePrecision::F32);
+    }
+
+    #[test]
+    fn hybrid_and_sell_rows_follow_the_plan_precision() {
+        // the circuit hybrid narrows to f16: both the Cpu row and the
+        // seam agree on the narrowed pricing (the seam test covers the
+        // equality; here we pin the direction vs a forced-native plan)
+        let a = gen::circuit::<f32>(32, 32, 7);
+        let half = plan(&a);
+        let full = plan_hinted_prec(&a, 1, Some(ValuePrecision::F32));
+        assert!(half.is_hybrid() && full.is_hybrid());
+        assert!(
+            half.cost(DeviceKind::Cpu).unwrap() < full.cost(DeviceKind::Cpu).unwrap()
+        );
+        // alternating_rows (halves 0.5..4.5, all f16-exact) plans SELL
+        // with a device row — narrowed value slots must undercut native
+        let s = gen::alternating_rows::<f32>(600, 4, 12);
+        let half = plan(&s);
+        assert_eq!(half.precision(), ValuePrecision::F16, "{}", half.summary());
+        let full = plan_hinted_prec(&s, 1, Some(ValuePrecision::F32));
+        assert!(
+            half.cost(DeviceKind::Sell).unwrap() < full.cost(DeviceKind::Sell).unwrap()
+        );
+        // sharded plans stay native storage, whatever the gate says
+        let p = plan_sharded(&s, 2, &[DeviceKind::Cpu]);
+        assert_eq!(p.precision(), ValuePrecision::F32);
+    }
+
+    #[test]
+    fn plan_cpu_cost_with_launch_reduces_to_plan_cpu_cost_at_the_proxy_constant() {
+        for a in [gen::grid2d_5pt::<f32>(20, 20), gen::circuit::<f32>(16, 16, 5)] {
+            let p = plan(&a);
+            let base = plan_cpu_cost(&p, CPU_ROOFLINE.mem_bw_gbps);
+            let same = plan_cpu_cost_with_launch(
+                &p,
+                CPU_ROOFLINE.mem_bw_gbps,
+                CPU_ROOFLINE.launch_overhead_s,
+            );
+            assert!((base - same).abs() < 1e-18, "{base} vs {same}");
+            // a larger measured launch cost raises every part's price
+            let slower = plan_cpu_cost_with_launch(
+                &p,
+                CPU_ROOFLINE.mem_bw_gbps,
+                CPU_ROOFLINE.launch_overhead_s * 4.0,
+            );
+            assert!(slower > base);
+        }
     }
 }

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::kernels::{build_execution, SpMv};
-use csrk::sparse::{gen, split_by_row_nnz, Coo, Csr};
+use csrk::sparse::{gen, split_by_row_nnz, Coo, Csr, ValuePrecision};
 use csrk::analysis::roofline::{dia_bytes, spmv_bytes};
 use csrk::tuning::planner::{
     self, FormatPlan, HybridSplit, MatrixStats, PartPlan, PlannedKernel, ReorderPlan,
@@ -218,6 +218,7 @@ fn kkt_conformance_planned_and_forced_hybrid() {
         },
         gpu_params: csr3_params_multi(Device::Ampere, a.rdensity(), 1),
         pjrt_width: None,
+        precision: ValuePrecision::F32,
         costs: vec![(DeviceKind::Cpu, 1.0)],
         stats,
     };

@@ -1,0 +1,204 @@
+//! Mixed-precision integration: the numeric-generic kernel layer and
+//! the planner's value-storage decision, end to end.
+//!
+//! * **Conformance rows** — every kernel shape built with f16- and
+//!   bf16-stored values against the f64 reference, with per-element
+//!   error bounds derived from the storage format's rounding unit
+//!   (f16: 2⁻¹¹ relative per value; bf16: 2⁻⁸), scaled by the row's
+//!   absolute sum so cancellation cannot manufacture false failures.
+//! * **Bit-identity** — the planner's auto gate narrows only when every
+//!   value round-trips the half format exactly, so auto-gated plans
+//!   must answer bit-for-bit like a forced-f32 build; and forced-f32
+//!   plans must answer bit-for-bit across plan shapes and fixtures
+//!   (the "today's output is unchanged" promise).
+//! * **CG guardrail** — the solver module over a genuinely lossy
+//!   half-value SPD operator: convergence must survive with bounded
+//!   iteration inflation over f32.
+
+use std::sync::Arc;
+
+use csrk::kernels::{build_execution, build_part_kernel_prec, SpMv};
+use csrk::solver::cg_solve;
+use csrk::sparse::{gen, Csr, ValuePrecision};
+use csrk::tuning::planner::{self, PlannedKernel};
+use csrk::util::ThreadPool;
+
+/// Every leaf shape the factory can build.
+const SHAPES: [PlannedKernel; 6] = [
+    PlannedKernel::Csr2 { srs: 17 },
+    PlannedKernel::Csr3 { ssrs: 4, srs: 9 },
+    PlannedKernel::Csr5 { omega: 4, sigma: 12 },
+    PlannedKernel::SellCs { c: 8, sigma: 32 },
+    PlannedKernel::CsrParallel,
+    PlannedKernel::Dia { ndiags: 7 },
+];
+
+/// A stencil operand whose values are pushed off the half-exact
+/// lattice (×0.1), as f32 and as the f64 twin with identical values.
+fn lossy_stencil(nx: usize) -> (Csr<f32>, Csr<f64>) {
+    let mut a = gen::grid3d_7pt::<f32>(nx, nx, nx);
+    for v in a.vals_mut() {
+        *v *= 0.1;
+    }
+    let d = Csr::<f64>::from_parts(
+        a.nrows(),
+        a.ncols(),
+        a.row_ptr().to_vec(),
+        a.cols().to_vec(),
+        a.vals().iter().map(|&v| v as f64).collect(),
+    );
+    (a, d)
+}
+
+/// Per-element conformance of one kernel against the f64 reference:
+/// `|y_i − y_i^ref| ≤ tol · Σ_j |a_ij x_j| + floor`, the row-scaled
+/// absolute bound that survives cancellation.
+fn assert_conforms(k: &dyn SpMv<f32>, a64: &Csr<f64>, tol: f64, label: &str) {
+    let n = a64.ncols();
+    let x32: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 13) as f32 / 13.0 - 0.5).collect();
+    let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+    let mut y = vec![0f32; a64.nrows()];
+    k.spmv(&x32, &mut y);
+    let mut y_ref = vec![0f64; a64.nrows()];
+    a64.spmv_ref(&x64, &mut y_ref);
+    for i in 0..a64.nrows() {
+        let (cols, vals) = a64.row(i);
+        let row_abs: f64 =
+            cols.iter().zip(vals).map(|(&c, &v)| (v * x64[c as usize]).abs()).sum();
+        let err = (y[i] as f64 - y_ref[i]).abs();
+        assert!(
+            err <= tol * row_abs + 1e-7,
+            "{label} row {i}: err {err:.3e} > {tol:.1e} × {row_abs:.3e}"
+        );
+    }
+}
+
+#[test]
+fn half_value_kernels_conform_to_the_f64_reference() {
+    let pool = Arc::new(ThreadPool::new(3));
+    let (a32, a64) = lossy_stencil(6);
+    // bounds: one narrowing per value (f16 half-ulp 2⁻¹¹, bf16 2⁻⁸)
+    // plus f32 accumulation slack, with margin
+    for (prec, tol) in [(ValuePrecision::F16, 2e-3), (ValuePrecision::Bf16, 1.2e-2)] {
+        for shape in &SHAPES {
+            let k = build_part_kernel_prec(shape, prec, a32.clone(), pool.clone());
+            assert!(
+                k.name().contains(prec.label()),
+                "kernel must carry the precision tag: {}",
+                k.name()
+            );
+            assert_conforms(k.as_ref(), &a64, tol, &k.name());
+        }
+    }
+    // and the f32 build of the same shapes sits far inside both bounds
+    for shape in &SHAPES {
+        let k = build_part_kernel_prec(shape, ValuePrecision::F32, a32.clone(), pool.clone());
+        assert_conforms(k.as_ref(), &a64, 1e-6, &k.name());
+    }
+}
+
+#[test]
+fn auto_gated_plans_answer_bit_identically_to_forced_f32() {
+    let pool = Arc::new(ThreadPool::new(2));
+    // three plan shapes whose fixture values are half-exact: the gate
+    // narrows (cheaper plan) but the answers cannot move a bit
+    let fixtures: Vec<(&str, Csr<f32>)> = vec![
+        ("stencil/dia", gen::grid3d_7pt::<f32>(8, 8, 8)),
+        ("hub/hybrid", gen::circuit::<f32>(32, 32, 7)),
+        ("skewed/sell", gen::alternating_rows::<f32>(600, 4, 12)),
+    ];
+    for (label, a) in fixtures {
+        let auto = planner::plan(&a);
+        assert_ne!(
+            auto.precision(),
+            ValuePrecision::F32,
+            "{label}: exact values must auto-gate a half format: {}",
+            auto.summary()
+        );
+        let full = planner::plan_hinted_prec(&a, 1, Some(ValuePrecision::F32));
+        assert_eq!(auto.kernel_label(), full.kernel_label(), "{label}: same shape");
+        let b_auto = build_execution(&auto, a.clone(), pool.clone(), false);
+        let b_full = build_execution(&full, a.clone(), pool.clone(), false);
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 5 + 2) % 11) as f32 - 5.0).collect();
+        let mut y_auto = vec![0f32; a.nrows()];
+        let mut y_full = vec![0f32; a.nrows()];
+        b_auto.exec.spmv(&x, &mut y_auto);
+        b_full.exec.spmv(&x, &mut y_full);
+        for (r, (u, v)) in y_auto.iter().zip(&y_full).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{label} row {r}: exact narrowing must be invisible ({u} vs {v})"
+            );
+        }
+    }
+    // a lossy operand fails the gate: the plan stays f32 outright
+    let (lossy, _) = lossy_stencil(6);
+    assert_eq!(planner::plan(&lossy).precision(), ValuePrecision::F32);
+}
+
+#[test]
+fn f32_mode_plans_are_unchanged_across_random_operands() {
+    // property over a spread of generated operands: with the gate
+    // forced off (F32), the planned shape and the built answers are
+    // exactly what the pre-precision pipeline produced — which today
+    // means bit-identity between two independent f32 builds and a
+    // summary with no precision tag
+    let pool = Arc::new(ThreadPool::new(2));
+    for seed in [0xBEEFu64, 0x5EED, 0xF00D, 0xA1] {
+        let a = gen::power_law::<f32>(400, 6, 1.0, seed);
+        let auto = planner::plan(&a);
+        assert_eq!(auto.precision(), ValuePrecision::F32, "rng values stay native");
+        assert!(!auto.summary().contains("vals "), "{}", auto.summary());
+        let forced = planner::plan_hinted_prec(&a, 1, Some(ValuePrecision::F32));
+        assert_eq!(auto.summary(), forced.summary());
+        let b1 = build_execution(&auto, a.clone(), pool.clone(), false);
+        let b2 = build_execution(&forced, a.clone(), pool.clone(), false);
+        assert_eq!(b1.exec.name(), b2.exec.name());
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 3 + 1) % 7) as f32 - 3.0).collect();
+        let mut y1 = vec![0f32; a.nrows()];
+        let mut y2 = vec![0f32; a.nrows()];
+        b1.exec.spmv(&x, &mut y1);
+        b2.exec.spmv(&x, &mut y2);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+}
+
+#[test]
+fn cg_converges_on_half_values_with_bounded_iteration_inflation() {
+    // SPD guardrail: grid Laplacian + I, values ×0.1 so the narrowing
+    // is genuinely lossy; the solve targets the perturbed operator Ã
+    // (still SPD — the diagonal dominance slack dwarfs the rounding)
+    let pool = Arc::new(ThreadPool::new(2));
+    let mut a = gen::grid2d_5pt::<f32>(40, 40);
+    for v in a.vals_mut() {
+        *v *= 0.1;
+    }
+    let n = a.nrows();
+    let b: Vec<f32> = (0..n).map(|i| ((i * 11 + 3) % 17) as f32 / 17.0 - 0.4).collect();
+    let mut iters = Vec::new();
+    for prec in [ValuePrecision::F32, ValuePrecision::F16, ValuePrecision::Bf16] {
+        let plan = planner::plan_hinted_prec(&a, 1, Some(prec));
+        assert_eq!(plan.precision(), prec, "{}", plan.summary());
+        let built = build_execution(&plan, a.clone(), pool.clone(), false);
+        let mut x = vec![0f32; n];
+        let rep = cg_solve(built.exec.as_ref(), &b, &mut x, 1e-5, 2000);
+        assert!(
+            rep.converged,
+            "{} CG must converge (iters {}, |r|² {:e})",
+            prec.label(),
+            rep.iterations,
+            rep.residual_sq
+        );
+        iters.push(rep.iterations);
+    }
+    let f32_iters = iters[0].max(1);
+    for (prec, &it) in ["f16", "bf16"].iter().zip(&iters[1..]) {
+        assert!(
+            it <= 2 * f32_iters,
+            "{prec} inflated CG iterations: {it} vs f32's {f32_iters}"
+        );
+    }
+}
