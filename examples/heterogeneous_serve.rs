@@ -19,7 +19,7 @@ use csrk::coordinator::{
     ServerConfig,
 };
 use csrk::runtime::Runtime;
-use csrk::sparse::{gen, suite, SuiteScale};
+use csrk::sparse::{gen, suite, DeltaBatch, SuiteScale};
 use csrk::util::table::{f, Table};
 use csrk::util::{Rng, ThreadPool};
 
@@ -139,5 +139,63 @@ fn main() {
         server.shutdown();
     }
     table.print();
+
+    // ---- live drift → zero-downtime online replan --------------------
+    // Stream a delta burst onto the stencil entry while a server keeps
+    // serving it: > 5 % of its nonzeros land in the delta overlay, the
+    // drift monitor trips the overlay-fraction signal, and the
+    // background replan swaps in plan version 2 without dropping a
+    // request. The CI serving-smoke job greps the bumped-epoch
+    // `stencil-dia v2:` describe line printed below.
+    let e = registry.get("stencil-dia").unwrap();
+    let n = ncols["stencil-dia"];
+    let burst = (e.nnz() / 16 + 1).min(n);
+    let mut batch = DeltaBatch::new();
+    for r in 0..burst {
+        // overwrite diagonal values (8.0 is f16-exact, so the replan's
+        // precision gate keeps the `vals f16` narrowed storage)
+        batch.set(r, r, 8.0);
+    }
+    let server = Server::start(registry.clone(), ServerConfig::default());
+    let mut rng = Rng::new(11);
+    let mut submit_burst = |count: usize| {
+        let mut v = Vec::new();
+        for _ in 0..count {
+            let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            v.push(server.submit("stencil-dia", x).1);
+        }
+        v
+    };
+    let mut pending = submit_burst(60);
+    let report = registry.update("stencil-dia", &batch).unwrap();
+    println!(
+        "drift burst: {} overlay cells ({:.1} % of nnz), tripped: {}, replan queued: {}",
+        report.overlay_cells,
+        report.overlay_frac * 100.0,
+        report.tripped(),
+        report.replan_queued
+    );
+    pending.extend(submit_burst(60));
+    for rx in pending {
+        rx.recv().unwrap().result.expect("spmv ok across the drift burst");
+    }
+    let t0 = std::time::Instant::now();
+    while e.epoch() < 2 {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "background replan never landed"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    // post-swap traffic lands on the rebased entry; the overlay is gone
+    for rx in submit_burst(30) {
+        rx.recv().unwrap().result.expect("spmv ok after the swap");
+    }
+    let (req, _, errors) = server.metrics().counts();
+    println!("replanned online: {req} requests served across the swap, {errors} errors");
+    println!("  {}", e.describe());
+    assert_eq!(errors, 0);
+    assert_eq!(e.overlay_cells(), 0, "replan must absorb the overlay");
+    server.shutdown();
     println!("heterogeneous_serve OK");
 }

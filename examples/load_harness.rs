@@ -56,17 +56,15 @@ fn two_backend_registry(pool: Arc<ThreadPool>) -> Arc<MatrixRegistry> {
 /// Mix A: many small matrices, bursty arrivals, bounded admission.
 fn bursty_small(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
     let registry = two_backend_registry(pool);
+    let mut reg_ncols = |name: &'static str, a| {
+        let id = registry.register(name, a).unwrap();
+        (name, registry.get_id(id).unwrap().ncols)
+    };
     let mats: Vec<(&str, usize)> = vec![
-        ("grid", registry.register("grid", gen::grid2d_5pt::<f32>(32, 32)).unwrap().ncols),
-        (
-            "hubs",
-            registry.register("hubs", gen::power_law::<f32>(1500, 8, 1.0, 0x10AD)).unwrap().ncols,
-        ),
-        ("alt", registry.register("alt", gen::alternating_rows::<f32>(600, 5, 11)).unwrap().ncols),
-        (
-            "circuit",
-            registry.register("circuit", gen::circuit::<f32>(24, 24, 0x10AD)).unwrap().ncols,
-        ),
+        reg_ncols("grid", gen::grid2d_5pt::<f32>(32, 32)),
+        reg_ncols("hubs", gen::power_law::<f32>(1500, 8, 1.0, 0x10AD)),
+        reg_ncols("alt", gen::alternating_rows::<f32>(600, 5, 11)),
+        reg_ncols("circuit", gen::circuit::<f32>(24, 24, 0x10AD)),
     ];
     let server = Server::start(
         registry,
@@ -120,7 +118,8 @@ fn bursty_small(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
 /// Mix B: one large sharded matrix, steady closed-loop stream.
 fn steady_large(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
     let registry = two_backend_registry(pool);
-    let entry = registry.register_sharded("big", gen::grid2d_5pt::<f32>(96, 96), 4).unwrap();
+    let id = registry.register_sharded("big", gen::grid2d_5pt::<f32>(96, 96), 4).unwrap();
+    let entry = registry.get_id(id).unwrap();
     let n = entry.ncols;
     println!("  sharded entry: {}", entry.describe());
     let server = Server::start(

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use csrk::coordinator::{DeviceKind, MatrixRegistry, Server, ServerConfig};
 use csrk::runtime::Runtime;
-use csrk::sparse::{suite, SuiteScale};
+use csrk::sparse::{suite, DeltaBatch, SuiteScale};
 use csrk::util::table::{f, Table};
 use csrk::util::ThreadPool;
 
@@ -52,6 +52,51 @@ fn main() {
         let m = server.metrics();
         t.row(&[
             if pinned.is_some() { "pinned-pjrt".into() } else { "cost-based".into() },
+            requests.to_string(),
+            f(m.latency_us(50.0), 0),
+            f(m.latency_us(99.0), 0),
+            f(requests as f64 / dt, 0),
+            f(2.0 * nnz as f64 * requests as f64 / dt / 1e9, 2),
+        ]);
+        server.shutdown();
+    }
+
+    // row 3: serving across a live drift burst + zero-downtime replan —
+    // a quarter of the way into the stream, > 5 % of the nonzeros land
+    // in the delta overlay, the drift trip queues a background replan,
+    // and the versioned swap retires the old binding under the same
+    // traffic; the row prices what the overlay walk + swap cost the
+    // request path relative to the cost-based row above
+    {
+        let server = Server::start(registry.clone(), ServerConfig::default());
+        let entry = registry.get(name).unwrap();
+        let n = entry.ncols;
+        let mut batch = DeltaBatch::new();
+        for r in 0..(nnz / 16 + 1).min(n) {
+            batch.set(r, r, 8.0);
+        }
+        let requests = 2000usize;
+        let x = vec![0.5f32; ncols];
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::with_capacity(requests);
+        for i in 0..requests {
+            rxs.push(server.submit(name, x.clone()).1);
+            if i == requests / 4 {
+                registry.update(name, &batch).expect("delta update");
+            }
+        }
+        for rx in rxs {
+            rx.recv().unwrap().result.expect("ok across the swap");
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while entry.epoch() < 2 {
+            assert!(std::time::Instant::now() < deadline, "background replan never landed");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        t.row(&[
+            "drift-replan".into(),
             requests.to_string(),
             f(m.latency_us(50.0), 0),
             f(m.latency_us(99.0), 0),

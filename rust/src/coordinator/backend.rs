@@ -1023,6 +1023,21 @@ impl RoutingTable {
             .map(|(id, _)| id)
     }
 
+    /// Snapshot of every routing row: `(backend, static prior,
+    /// observed EWMA if any traffic has flowed)`. The live-matrix
+    /// drift detector (`coordinator::live`) compares the observed
+    /// column against the prior to catch plans whose roofline model
+    /// has diverged from what the hardware actually does.
+    pub fn rows(&self) -> Vec<(BackendId, f64, Option<f64>)> {
+        self.rows
+            .iter()
+            .map(|r| {
+                let obs = f64::from_bits(r.observed.load(Ordering::Relaxed));
+                (r.id, r.stat, if obs.is_nan() { None } else { Some(obs) })
+            })
+            .collect()
+    }
+
     /// One observability fragment: `Cpu 1.2us, Pjrt 3.4us*` (`*` marks
     /// observation-corrected estimates).
     pub fn summary(&self) -> String {

@@ -1,0 +1,368 @@
+//! The live-matrix subsystem: drift detection over delta-updated
+//! entries and the background replan engine behind the zero-downtime
+//! plan swap.
+//!
+//! Every plan in the registry is frozen at registration — correct, but
+//! a matrix that drifts (dynamic graphs, refined meshes, incremental
+//! circuit edits) would keep a stale format, permutation, σ and
+//! precision forever. The live path closes that gap in three stages:
+//!
+//! 1. **Absorb** — `MatrixRegistry::update` applies a
+//!    [`DeltaBatch`](crate::sparse::DeltaBatch) to the entry's
+//!    copy-on-write [`DeltaOverlay`](crate::sparse::DeltaOverlay);
+//!    serving keeps running against the *base* plan with dirty rows
+//!    patched per request (bit-exact on the bit-exact rails — see
+//!    `sparse::delta`).
+//! 2. **Detect** — after every batch the detector ([`LiveConfig`]
+//!    thresholds) re-measures the merged profile and reports
+//!    [`DriftSignal`]s: overlay-size fraction, SELL fill-ratio decay
+//!    (Kreutzer et al.'s β re-measured on the merged row-nnz profile),
+//!    hub/regularity violations of the plan's structural premise, and
+//!    routing-EWMA divergence from the static roofline prior.
+//! 3. **Replan** — a tripped threshold queues the entry on the
+//!    registry's [`LiveEngine`]: a background thread merges base +
+//!    overlay, re-runs the full registration pipeline
+//!    ([`planner::replan`] → build → bind — `MatrixStats`,
+//!    `sell_autotune`, `choose_precision` all re-evaluated on the
+//!    merged matrix), and swaps the new [`PlanVersion`] in under the
+//!    entry's epoch counter. In-flight batches finish on the version
+//!    they pinned; new batches route to the new version; the old
+//!    version retires once its inflight count drains. Zero downtime.
+//!
+//! [`planner::replan`]: crate::tuning::planner::replan
+//! [`PlanVersion`]: crate::coordinator::registry::PlanVersion
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::backend::{Backend, RoutingTable};
+use super::metrics::{DriftSignal, Metrics};
+use super::registry::MatrixEntry;
+use crate::sparse::{Csr, DeltaOverlay};
+use crate::tuning::planner::{self, FormatPlan, MatrixStats, PlannedKernel};
+use crate::util::ThreadPool;
+
+/// Drift thresholds and replan policy for a registry's live path.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Trip when overlaid cells exceed this fraction of the base
+    /// nonzeros — every dirty row pays the per-request patch walk, and
+    /// past a few percent the merged rebuild is cheaper than serving
+    /// through the overlay.
+    pub max_overlay_frac: f64,
+    /// Trip a SELL-C-σ plan when its exact fill ratio β, re-measured
+    /// at the planned (C, σ) on the **merged** row-nnz profile,
+    /// exceeds this multiple of its registration-time value (or the
+    /// planner's absolute acceptance bound
+    /// [`planner::SELL_MAX_FILL`](crate::tuning::planner::SELL_MAX_FILL)).
+    pub sell_fill_slack: f64,
+    /// Trip when a bound backend's observed routing EWMA and the
+    /// plan's static roofline prior disagree by more than this ratio
+    /// in either direction.
+    pub routing_divergence: f64,
+    /// Queue a background replan automatically when any signal trips
+    /// (`true`, the default). `false` leaves replanning to explicit
+    /// `MatrixRegistry::replan_now` calls — deterministic for tests.
+    pub auto_replan: bool,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            max_overlay_frac: 0.05,
+            sell_fill_slack: 1.25,
+            routing_divergence: 8.0,
+            auto_replan: true,
+        }
+    }
+}
+
+/// What one drift assessment (after an update, or on demand via
+/// `MatrixRegistry::check_drift`) found.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// The plan epoch the assessment ran against.
+    pub epoch: u64,
+    /// Overlaid cells at assessment time.
+    pub overlay_cells: usize,
+    /// Overlaid cells as a fraction of the base nonzeros.
+    pub overlay_frac: f64,
+    /// Every threshold that tripped (empty = no drift).
+    pub signals: Vec<DriftSignal>,
+    /// Was a background replan queued by this assessment?
+    pub replan_queued: bool,
+}
+
+impl DriftReport {
+    /// Did any threshold trip?
+    pub fn tripped(&self) -> bool {
+        !self.signals.is_empty()
+    }
+}
+
+/// Evaluate every drift signal for one entry's current (plan, base,
+/// overlay, routing) snapshot. Pure — recording and replan queueing
+/// happen in the registry.
+pub(crate) fn assess(
+    plan: &FormatPlan,
+    base: &Csr<f32>,
+    patch: &DeltaOverlay<f32>,
+    routing: &RoutingTable,
+    cfg: &LiveConfig,
+) -> Vec<DriftSignal> {
+    let mut signals = Vec::new();
+
+    // 1. overlay size: how much of the serving path runs through the
+    //    patch walk instead of the planned kernel
+    let frac = patch.fraction_of(base.nnz());
+    if !patch.is_empty() && frac > cfg.max_overlay_frac {
+        signals.push(DriftSignal::OverlayFraction { frac, limit: cfg.max_overlay_frac });
+    }
+
+    // the merged row-nnz profile feeds both structural signals; only
+    // worth computing when the structure actually changed
+    if !patch.is_empty() {
+        let merged_row_nnz = patch.merged_row_nnz(base);
+
+        // 2. SELL fill decay, re-measured at the *planned* (C, σ) on
+        //    the merged profile (single-part SELL plans only: hybrid
+        //    parts cover row subsets the whole-matrix profile doesn't
+        //    describe)
+        if let FormatPlan::Single { kernel: PlannedKernel::SellCs { c, sigma }, .. } = plan {
+            let base_row_nnz: Vec<usize> = (0..base.nrows()).map(|i| base.row_nnz(i)).collect();
+            let planned = planner::sell_fill(&base_row_nnz, *c, *sigma);
+            let now = planner::sell_fill(&merged_row_nnz, *c, *sigma);
+            let limit = (cfg.sell_fill_slack * planned).max(planner::SELL_MAX_FILL);
+            if now > limit {
+                signals.push(DriftSignal::SellFillDecay { planned, now, limit });
+            }
+        }
+
+        // 3. structural-premise violation: re-derive the planner
+        //    predicates from the merged profile (bandwidth/diagonal
+        //    fields are irrelevant to both predicates, so the stale
+        //    base values are fine)
+        let n = merged_row_nnz.len();
+        let merged_nnz: usize = merged_row_nnz.iter().sum();
+        let mean = merged_nnz as f64 / n.max(1) as f64;
+        let variance = merged_row_nnz
+            .iter()
+            .map(|&k| (k as f64 - mean) * (k as f64 - mean))
+            .sum::<f64>()
+            / n.max(1) as f64;
+        let max_row_nnz = merged_row_nnz.iter().copied().max().unwrap_or(0);
+        let merged = MatrixStats {
+            nrows: n,
+            ncols: base.ncols(),
+            nnz: merged_nnz,
+            rdensity: mean,
+            row_nnz_variance: variance,
+            max_row_nnz,
+            bandwidth: plan.stats().bandwidth,
+            dia_offsets: Vec::new(),
+            dia_coverage: 0.0,
+        };
+        let regular_premise_broken = plan.stats().is_regular() && !merged.is_regular();
+        let grew_a_hub = !plan.is_hybrid()
+            && !plan.is_sharded()
+            && merged.has_disproportionate_row()
+            && !plan.stats().has_disproportionate_row();
+        if regular_premise_broken || grew_a_hub {
+            signals.push(DriftSignal::HubViolation { max_row_nnz, variance });
+        }
+    }
+
+    // 4. routing-EWMA divergence from the static prior — the cost
+    //    model stopped describing this matrix on this hardware (this
+    //    one fires even with an empty overlay: the *matrix* need not
+    //    drift for the model to be wrong)
+    for (backend, prior, observed) in routing.rows() {
+        let (Some(obs), true) = (observed, prior.is_finite() && prior > 0.0) else {
+            continue;
+        };
+        if obs <= 0.0 {
+            continue;
+        }
+        let ratio = (obs / prior).max(prior / obs);
+        if ratio > cfg.routing_divergence {
+            signals.push(DriftSignal::RoutingDivergence { backend, observed: obs, prior, ratio });
+        }
+    }
+
+    signals
+}
+
+/// One queued background replan: everything the engine thread needs,
+/// with no reference back to the registry (the entry `Arc` alone keeps
+/// the work alive — no cycles).
+pub(crate) struct ReplanJob {
+    pub(crate) entry: Arc<MatrixEntry>,
+    pub(crate) pool: Arc<ThreadPool>,
+    pub(crate) backends: Vec<Arc<dyn Backend>>,
+    pub(crate) metrics: Option<Arc<Metrics>>,
+}
+
+/// The background replanner: one lazily-spawned worker thread draining
+/// a job queue. Replans are serialized — plan/build is CPU-heavy and
+/// runs on the shared pool anyway, and serializing keeps the swap
+/// ordering trivial to reason about. Owned by the registry; dropped
+/// registries shut it down (queue closed, thread joined).
+pub(crate) struct LiveEngine {
+    inner: Mutex<EngineInner>,
+}
+
+#[derive(Default)]
+struct EngineInner {
+    tx: Option<Sender<ReplanJob>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl LiveEngine {
+    pub(crate) fn new() -> Self {
+        LiveEngine { inner: Mutex::new(EngineInner::default()) }
+    }
+
+    /// Queue one replan, spawning the worker on first use. The caller
+    /// has already set the entry's replan-pending flag; if the queue
+    /// is gone (worker died), the flag is cleared so the entry can be
+    /// retried rather than wedged.
+    pub(crate) fn submit(&self, job: ReplanJob) {
+        let mut g = self.inner.lock().unwrap();
+        if g.tx.is_none() {
+            let (tx, rx) = mpsc::channel::<ReplanJob>();
+            match std::thread::Builder::new()
+                .name("csrk-replan".into())
+                .spawn(move || replan_worker(rx))
+            {
+                Ok(h) => {
+                    g.tx = Some(tx);
+                    g.worker = Some(h);
+                }
+                Err(e) => {
+                    log::warn!("could not spawn replan worker ({e})");
+                    job.entry.clear_replan_pending();
+                    return;
+                }
+            }
+        }
+        if let Some(tx) = &g.tx {
+            if let Err(mpsc::SendError(job)) = tx.send(job) {
+                log::warn!("{}: replan queue closed; dropping job", job.entry.name);
+                job.entry.clear_replan_pending();
+            }
+        }
+    }
+
+    /// Close the queue and join the worker (drains queued jobs first).
+    pub(crate) fn shutdown(&self) {
+        let (tx, worker) = {
+            let mut g = self.inner.lock().unwrap();
+            (g.tx.take(), g.worker.take())
+        };
+        drop(tx);
+        if let Some(h) = worker {
+            let _ = h.join();
+        }
+    }
+}
+
+fn replan_worker(rx: Receiver<ReplanJob>) {
+    while let Ok(job) = rx.recv() {
+        match job.entry.replan(&job.pool, &job.backends) {
+            Ok(epoch) => {
+                if let Some(m) = &job.metrics {
+                    m.record_replan(&job.entry.name, epoch);
+                }
+                log::info!("{}: replanned to v{epoch}", job.entry.name);
+            }
+            // replan() clears the pending flag on both paths; a failed
+            // replan keeps serving the old version + overlay, which is
+            // still correct
+            Err(e) => log::warn!("{}: background replan failed ({e})", job.entry.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::BackendId;
+    use crate::sparse::{gen, DeltaBatch};
+
+    #[test]
+    fn overlay_fraction_trips_past_the_threshold() {
+        let a = gen::grid2d_5pt::<f32>(12, 12);
+        let plan = planner::plan_hinted(&a, 1);
+        let routing = RoutingTable::new(vec![(BackendId::Cpu, 1e-6)]);
+        let cfg = LiveConfig::default();
+        let n = a.nrows();
+        let mut patch = DeltaOverlay::new(n, n);
+        // one edited cell on a ~676-nnz stencil: well under 5%
+        let mut small = DeltaBatch::new();
+        small.set(0, 0, 9.0);
+        patch.apply(&small).unwrap();
+        assert!(assess(&plan, &a, &patch, &routing, &cfg).is_empty());
+        // push past the threshold: edit an existing cell in >5% of rows
+        let mut big = DeltaBatch::new();
+        for r in 0..n {
+            b_set_diag(&mut big, r);
+        }
+        patch.apply(&big).unwrap();
+        let signals = assess(&plan, &a, &patch, &routing, &cfg);
+        assert!(
+            signals.iter().any(|s| matches!(s, DriftSignal::OverlayFraction { .. })),
+            "{signals:?}"
+        );
+    }
+
+    fn b_set_diag(b: &mut DeltaBatch<f32>, r: usize) {
+        b.set(r, r, 5.0);
+    }
+
+    #[test]
+    fn hub_growth_trips_the_structural_signal() {
+        // a regular stencil that drifts a single enormous row
+        let a = gen::grid2d_5pt::<f32>(12, 12);
+        let plan = planner::plan_hinted(&a, 1);
+        assert!(plan.stats().is_regular());
+        let routing = RoutingTable::new(vec![(BackendId::Cpu, 1e-6)]);
+        let cfg = LiveConfig { max_overlay_frac: 1e9, ..LiveConfig::default() };
+        let n = a.nrows();
+        let mut patch = DeltaOverlay::new(n, n);
+        let mut b = DeltaBatch::new();
+        for c in 0..n {
+            b.set(7, c, 1.0); // row 7 becomes dense: a hub appears
+        }
+        patch.apply(&b).unwrap();
+        let signals = assess(&plan, &a, &patch, &routing, &cfg);
+        assert!(
+            signals.iter().any(|s| matches!(s, DriftSignal::HubViolation { .. })),
+            "{signals:?}"
+        );
+    }
+
+    #[test]
+    fn routing_divergence_trips_without_any_deltas() {
+        let a = gen::grid2d_5pt::<f32>(12, 12);
+        let plan = planner::plan_hinted(&a, 1);
+        let routing = RoutingTable::new(vec![(BackendId::Cpu, 1e-6)]);
+        let cfg = LiveConfig::default();
+        let n = a.nrows();
+        let patch = DeltaOverlay::new(n, n);
+        assert!(assess(&plan, &a, &patch, &routing, &cfg).is_empty());
+        // observed latency 100x the prior: the model is wrong here
+        routing.correct(BackendId::Cpu, 1e-4);
+        let signals = assess(&plan, &a, &patch, &routing, &cfg);
+        match signals.as_slice() {
+            [DriftSignal::RoutingDivergence { backend, ratio, .. }] => {
+                assert_eq!(*backend, BackendId::Cpu);
+                assert!((*ratio - 100.0).abs() < 1e-6, "{ratio}");
+            }
+            other => panic!("expected one RoutingDivergence, got {other:?}"),
+        }
+        // ... and a divergence inside the configured ratio stays quiet
+        routing.correct(BackendId::Cpu, 4e-6);
+        assert!(assess(&plan, &a, &patch, &routing, &cfg).is_empty());
+    }
+}

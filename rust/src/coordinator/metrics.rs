@@ -1,5 +1,7 @@
-//! Serving metrics: latency percentiles, throughput counters, and the
-//! per-(matrix, backend) execution-latency EWMAs that feed routing.
+//! Serving metrics: latency percentiles, throughput counters, the
+//! per-(matrix, backend) execution-latency EWMAs that feed routing,
+//! and the per-matrix **drift** record the live-matrix subsystem
+//! writes.
 //!
 //! The EWMAs are the observation side of the online cost-correction
 //! loop: after every served batch the device worker reports the
@@ -10,6 +12,14 @@
 //! *relatively* right for routing — the EWMA over served batches is
 //! exactly that: it tracks what the hardware does for this matrix
 //! without chasing single-batch noise.
+//!
+//! Drift signals ([`DriftSignal`]) are the replan triggers
+//! `coordinator::live` evaluates after every delta batch: overlay-size
+//! fraction, SELL fill decay, hub-threshold violations, and
+//! routing-EWMA divergence from the static prior. The detector records
+//! each assessment here ([`Metrics::record_drift`]) and each completed
+//! replan with its new epoch ([`Metrics::record_replan`]), so serving
+//! dashboards see *why* a plan version changed, not just that it did.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -23,6 +33,88 @@ use crate::util::stats;
 /// within a handful of batches without single-batch noise whipsawing
 /// the route.
 pub const ROUTE_EWMA_ALPHA: f64 = 0.25;
+
+/// One tripped drift threshold — why the live path wants (or wanted)
+/// to replan a matrix. Produced by `coordinator::live`'s detector,
+/// recorded here per matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriftSignal {
+    /// The delta overlay holds too many cells relative to the base
+    /// nonzeros: every dirty row pays the patch walk on every request.
+    OverlayFraction {
+        /// Overlaid cells / base nnz.
+        frac: f64,
+        /// The configured trip threshold.
+        limit: f64,
+    },
+    /// A SELL-C-σ plan's exact fill ratio β re-measured on the merged
+    /// row-nnz profile has decayed past the planner's acceptance bound
+    /// or the configured slack over its registration-time value — the
+    /// chunked layout has rotted (Kreutzer et al.'s β observable).
+    SellFillDecay {
+        /// Fill ratio at registration (planned σ on the base profile).
+        planned: f64,
+        /// Fill ratio now (planned σ on the merged profile).
+        now: f64,
+        /// The bound that tripped.
+        limit: f64,
+    },
+    /// The merged matrix violates the structural premise its plan was
+    /// chosen under: a regular plan's row-nnz variance crossed the §6
+    /// bound, or a non-hybrid plan grew a disproportionate (hub) row.
+    HubViolation {
+        /// Longest merged row.
+        max_row_nnz: usize,
+        /// Merged row-nnz variance.
+        variance: f64,
+    },
+    /// A bound backend's observed routing EWMA has diverged from the
+    /// plan's static roofline prior by more than the configured ratio
+    /// in either direction — the cost model no longer describes this
+    /// matrix on this hardware.
+    RoutingDivergence {
+        /// The diverging backend.
+        backend: BackendId,
+        /// Observed seconds-per-vector EWMA.
+        observed: f64,
+        /// The plan's static prior.
+        prior: f64,
+        /// max(observed/prior, prior/observed) at assessment time.
+        ratio: f64,
+    },
+}
+
+impl std::fmt::Display for DriftSignal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DriftSignal::OverlayFraction { frac, limit } => {
+                write!(f, "overlay {:.1}% of base nnz (limit {:.1}%)", frac * 1e2, limit * 1e2)
+            }
+            DriftSignal::SellFillDecay { planned, now, limit } => {
+                write!(f, "sell fill {now:.3} (planned {planned:.3}, limit {limit:.3})")
+            }
+            DriftSignal::HubViolation { max_row_nnz, variance } => {
+                write!(f, "structure violation (maxrow {max_row_nnz}, var {variance:.1})")
+            }
+            DriftSignal::RoutingDivergence { backend, observed, prior, ratio } => write!(
+                f,
+                "{backend:?} EWMA {:.1}us vs prior {:.1}us ({ratio:.1}x)",
+                observed * 1e6,
+                prior * 1e6
+            ),
+        }
+    }
+}
+
+/// Per-matrix drift bookkeeping: the latest assessment and lifetime
+/// trip/replan counters.
+#[derive(Debug, Default, Clone)]
+struct DriftState {
+    last: Vec<DriftSignal>,
+    trips: u64,
+    replans: u64,
+    epoch: u64,
+}
 
 /// Retained latency samples. Percentiles are **exact** while total
 /// requests stay at or below this cap; beyond it the ring keeps a
@@ -47,6 +139,8 @@ struct Inner {
     /// can be re-registered with a different matrix, and stale
     /// estimates must not blend into the fresh entry's routing.
     device_ewma: HashMap<(String, BackendId), (u64, f64)>,
+    /// Per-matrix drift record written by `coordinator::live`.
+    drift: HashMap<String, DriftState>,
 }
 
 /// Thread-safe metrics sink shared by the server workers.
@@ -128,6 +222,56 @@ impl Metrics {
             .device_ewma
             .get(&(matrix.to_string(), backend))
             .map(|&(_, e)| e)
+    }
+
+    /// Record one drift assessment for `matrix`: `signals` is what
+    /// tripped (empty = assessed clean). Counts a trip only when at
+    /// least one signal fired.
+    pub fn record_drift(&self, matrix: &str, signals: &[DriftSignal]) {
+        let mut m = self.inner.lock().unwrap();
+        let st = m.drift.entry(matrix.to_string()).or_default();
+        if !signals.is_empty() {
+            st.trips += 1;
+        }
+        st.last = signals.to_vec();
+    }
+
+    /// Record one completed replan of `matrix`, now serving plan
+    /// version `epoch`.
+    pub fn record_replan(&self, matrix: &str, epoch: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let st = m.drift.entry(matrix.to_string()).or_default();
+        st.replans += 1;
+        st.epoch = epoch;
+    }
+
+    /// The latest drift assessment recorded for `matrix` (empty if
+    /// never assessed or assessed clean).
+    pub fn drift_signals(&self, matrix: &str) -> Vec<DriftSignal> {
+        self.inner
+            .lock()
+            .unwrap()
+            .drift
+            .get(matrix)
+            .map(|st| st.last.clone())
+            .unwrap_or_default()
+    }
+
+    /// Lifetime `(threshold trips, completed replans)` for `matrix`.
+    pub fn drift_counts(&self, matrix: &str) -> (u64, u64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .drift
+            .get(matrix)
+            .map(|st| (st.trips, st.replans))
+            .unwrap_or((0, 0))
+    }
+
+    /// The plan epoch the most recent recorded replan produced (0 if
+    /// no replan has been recorded).
+    pub fn plan_epoch(&self, matrix: &str) -> u64 {
+        self.inner.lock().unwrap().drift.get(matrix).map(|st| st.epoch).unwrap_or(0)
     }
 
     /// Snapshot: `(requests, batches, errors)`.
@@ -245,6 +389,27 @@ mod tests {
             last = m.observe_device("a", 1, BackendId::Cpu, 4e-6);
         }
         assert!((last - 4e-6).abs() < 1e-8, "{last}");
+    }
+
+    #[test]
+    fn drift_record_tracks_trips_and_replans() {
+        let m = Metrics::new();
+        assert_eq!(m.drift_counts("a"), (0, 0));
+        assert!(m.drift_signals("a").is_empty());
+        // a clean assessment records but does not count as a trip
+        m.record_drift("a", &[]);
+        assert_eq!(m.drift_counts("a"), (0, 0));
+        let sig = DriftSignal::OverlayFraction { frac: 0.08, limit: 0.05 };
+        m.record_drift("a", std::slice::from_ref(&sig));
+        assert_eq!(m.drift_counts("a"), (1, 0));
+        assert_eq!(m.drift_signals("a"), vec![sig.clone()]);
+        assert!(sig.to_string().contains("overlay"), "{sig}");
+        m.record_replan("a", 2);
+        assert_eq!(m.drift_counts("a"), (1, 1));
+        assert_eq!(m.plan_epoch("a"), 2);
+        // other matrices are untouched
+        assert_eq!(m.drift_counts("b"), (0, 0));
+        assert_eq!(m.plan_epoch("b"), 0);
     }
 
     #[test]

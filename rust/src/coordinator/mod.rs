@@ -63,27 +63,56 @@
 //! ring ([`metrics::LATENCY_RING_CAP`]): exact until the cap, a
 //! sliding recent window after.
 //!
-//! # The bind lifecycle
+//! # The versioned plan lifecycle
+//!
+//! Registration is not a one-shot event: every entry's execution state
+//! is a [`PlanVersion`](registry::PlanVersion) with an epoch counter,
+//! and a *live* path keeps the version honest as the matrix and the
+//! hardware drift.
 //!
 //! ```text
-//! register(A)                                      serve(x₁ … xₖ)
-//!   plan ──▶ build ──▶ for each Backend:             batch ──▶ route()
-//!                        supports_plan? ──▶ bind()     │   RoutingTable:
-//!                        static_cost  ───▶ routing row │   static prior,
-//!                                                      ▼   EWMA-corrected
-//!                                            ExecutionBinding::spmv_multi
-//!                                                      │
-//!                        Metrics::observe_device ◀─────┘ observed s/vec
-//!                        entry.correct_route  ◀── EWMA
+//!        register(A)                 v1
+//!   plan ──▶ build ──▶ bind ──▶ [PlanVersion epoch=1] ◀────────────┐
+//!                                     │                            │
+//!        serve(x₁ … xₖ)               ▼                            │
+//!   batch ──▶ route() ──▶ pin() ──▶ LiveGuard ─▶ spmv_multi        │ pinned
+//!                  │   RoutingTable:     │       (+ overlay patch)  │ batches
+//!                  │   prior → EWMA      └─▶ Metrics EWMA ─▶ correct│ drain
+//!                  │                                                │
+//!        update(name, DeltaBatch)                                   │
+//!   DeltaOverlay (COO, copy-on-write) ─▶ drift detector:            │
+//!     overlay-nnz fraction │ SELL fill decay │ hub violation        │
+//!     │ routing-EWMA divergence from the static prior               │
+//!                  │ tripped                                        │
+//!                  ▼                                                │
+//!        replan (background thread)                                 │
+//!   merge(base + overlay) ─▶ plan ─▶ build ─▶ bind ─▶ v2 ──swap──▶ [retire v1]
+//!                                                                   │
+//!                                              drop when inflight──▶0
 //! ```
+//!
+//! **register → serve → drift → replan → swap → retire.** The serving
+//! path never blocks on any of it: workers pin a
+//! [`LiveGuard`](registry::LiveGuard) — an `Arc` snapshot of (version,
+//! base CSR, overlay) — per batch, so a replan swap retires the old
+//! version under in-flight batches instead of tearing it down, and
+//! every response is exact for the merged matrix as of its pin.
+//! Replans re-run the *entire* registration pipeline on the merged
+//! matrix — structure stats, SELL σ re-autotune, precision gate,
+//! per-backend rooflines — so a drifted matrix gets a genuinely
+//! re-tuned plan, not a patched one. Each version carries a fresh uid,
+//! which keys the metrics EWMAs: observations of the new plan reseed
+//! rather than blend into the replaced plan's estimates.
 //!
 //! Routing starts from the plan's static roofline costs and is
 //! **corrected online**: after each served batch the worker folds the
 //! observed per-vector execution cost into the metrics-side
 //! `(matrix, backend)` EWMA and pushes the estimate back into the
-//! entry's [`RoutingTable`](backend::RoutingTable) — the ROADMAP's
+//! version's [`RoutingTable`](backend::RoutingTable) — the ROADMAP's
 //! online cost correction. Estimates need only rank backends
-//! correctly; once traffic flows, ranking follows the hardware.
+//! correctly; once traffic flows, ranking follows the hardware. When
+//! observation and prior disagree by a large ratio, that is itself a
+//! drift signal ([`DriftSignal::RoutingDivergence`]).
 //!
 //! # Batches execute as SpMM
 //!
@@ -104,15 +133,19 @@
 //! * [`backend`] — the [`Backend`] / [`ExecutionBinding`] traits, the
 //!   CPU (triad-calibrated prior), PJRT and simulated-SELL-device
 //!   implementations, and the [`RoutingTable`].
-//! * [`registry`] — per-matrix plan → build → bind, binding maps.
+//! * [`registry`] — per-matrix plan → build → bind, plan versions,
+//!   delta absorption and the zero-downtime swap.
+//! * [`live`] — drift thresholds ([`LiveConfig`]), the drift detector,
+//!   and the background replan engine.
 //! * [`batcher`] — dynamic batching queue (max-batch / max-delay).
-//! * [`server`] — leader + per-backend workers, SpMM dispatch, routing
-//!   feedback, lifecycle.
-//! * [`metrics`] — latency/throughput accounting and the per-(matrix,
-//!   backend) EWMAs that feed routing.
+//! * [`server`] — leader + per-backend workers, SpMM dispatch through
+//!   pinned guards, routing feedback, lifecycle.
+//! * [`metrics`] — latency/throughput accounting, the per-(matrix,
+//!   backend) EWMAs that feed routing, and drift/replan counters.
 
 pub mod backend;
 pub mod batcher;
+pub mod live;
 pub mod metrics;
 pub mod registry;
 pub mod server;
@@ -121,8 +154,9 @@ pub use backend::{
     Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable, SellBackend,
 };
 pub use batcher::{Batch, DynamicBatcher};
-pub use metrics::Metrics;
-pub use registry::{DeviceKind, MatrixEntry, MatrixRegistry};
+pub use live::{DriftReport, LiveConfig};
+pub use metrics::{DriftSignal, Metrics};
+pub use registry::{DeviceKind, LiveGuard, MatrixEntry, MatrixId, MatrixRegistry, PlanVersion};
 pub use server::{Server, ServerConfig, SubmitError};
 
 /// A unit of work: multiply a registered matrix by `x`.

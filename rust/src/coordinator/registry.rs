@@ -1,5 +1,9 @@
-//! Matrix registry: one-time registration runs the **plan → build →
-//! bind** pipeline so the request path only executes.
+//! Matrix registry: registration runs the **plan → build → bind**
+//! pipeline so the request path only executes — and keeps running it,
+//! because entries are *versioned*: delta updates absorb into a
+//! copy-on-write overlay, drift detection watches the merged profile,
+//! and a background replan swaps in a fresh [`PlanVersion`] without
+//! ever stalling the serving path.
 //!
 //! * **Plan** — [`tuning::planner`](crate::tuning::planner) measures
 //!   the matrix (row-nnz variance, density, longest row) and decides
@@ -15,7 +19,7 @@
 //!   backends consume.
 //! * **Bind** — every registered [`Backend`] that supports the plan is
 //!   offered the build ([`Backend::bind`]); each successful bind
-//!   becomes one [`ExecutionBinding`] in the entry's per-backend map.
+//!   becomes one [`ExecutionBinding`] in the version's per-backend map.
 //!   The PJRT backend binds exported parts to AOT buckets — for hybrid
 //!   plans that is the body→device / remainder→host placement. Nothing
 //!   in this module dispatches on a concrete device: the entry routes
@@ -27,44 +31,86 @@
 //! the observed per-vector latency into the metrics-side EWMA and
 //! pushes it back through [`MatrixEntry::correct_route`].
 //!
+//! # Plan versions and the live path
+//!
+//! Everything execution needs — plan, kernel, bindings, routing — lives
+//! in one immutable [`PlanVersion`] behind the entry's `live` lock,
+//! stamped with a monotonically increasing **epoch** (v1 at
+//! registration). The serving path never executes through the entry's
+//! mutable state: it [`pin`](MatrixEntry::pin)s a [`LiveGuard`] — an
+//! `Arc` snapshot of (version, base CSR, delta overlay) plus an
+//! inflight count on the version — and dispatches through that. A
+//! concurrent replan builds the next version off to the side, swaps it
+//! in under a brief write lock, and parks the old version on a retired
+//! list until its inflight count drains. In-flight batches finish on
+//! the version they pinned; nothing blocks, nothing is torn down under
+//! a live dispatch.
+//!
+//! [`MatrixRegistry::update`] feeds a [`DeltaBatch`] into the entry's
+//! overlay (serving stays bit-exact through the per-request patch walk
+//! — see [`sparse::delta`](crate::sparse::delta)), then runs the drift
+//! detector ([`coordinator::live`](super::live)); a tripped threshold
+//! queues a background replan on the registry's engine.
+//!
 //! [`MatrixRegistry::register_sharded`] runs the scale-out variant of
 //! the pipeline: the matrix is cut into N nnz-balanced row shards, each
-//! shard is planned and bound on its own backend, and the entry's
+//! shard is planned and bound on its own backend, and the version's
 //! single CPU-keyed binding fans every request out to all shard
 //! bindings concurrently before merging through the row scatter maps.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
 use super::backend::{
     bind_sharded, Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable,
 };
+use super::live::{self, DriftReport, LiveConfig, LiveEngine, ReplanJob};
+use super::metrics::Metrics;
 use crate::kernels::{build_execution, SpMv};
 use crate::runtime::Runtime;
-use crate::sparse::{Csr, ValuePrecision};
+use crate::sparse::{Csr, DeltaBatch, DeltaOverlay, ValuePrecision};
 use crate::tuning::planner::{self, FormatPlan};
 use crate::util::ThreadPool;
 
 pub use crate::tuning::planner::DeviceKind;
 
-/// Process-wide registration counter backing [`MatrixEntry::uid`].
+/// Process-wide registration counter backing [`PlanVersion::uid`].
 static NEXT_UID: AtomicU64 = AtomicU64::new(1);
+/// Process-wide id counter backing [`MatrixId`].
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// A registered matrix: the chosen plan, the per-backend execution
-/// bindings, and the routing table that picks between them.
-pub struct MatrixEntry {
-    /// Registered name.
-    pub name: String,
-    /// Unique id of this *registration* — re-registering the same name
-    /// produces a fresh uid, so observation stores keyed by name (the
-    /// metrics latency EWMAs) can detect the swap and drop estimates
-    /// that belong to the matrix this entry replaced.
+/// Cheap, copyable handle to a registered matrix — what `register*`
+/// returns. The serving hot path resolves it through
+/// [`MatrixRegistry::get_id`] with a single integer hash instead of a
+/// string hash + compare; name lookup ([`MatrixRegistry::get`]) stays
+/// for wire protocols and observability. Re-registering a name mints a
+/// fresh id and invalidates the old one (a held stale id errors on
+/// lookup instead of silently reaching the replacement matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatrixId(u64);
+
+impl std::fmt::Display for MatrixId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// One immutable epoch of a matrix's execution state: the plan that was
+/// chosen, what the build constructed, every backend binding, and the
+/// routing table over them. Swapped wholesale by a replan; never
+/// mutated in place (the routing table's interior atomics are the one
+/// deliberate exception — estimates are observability, not structure).
+pub struct PlanVersion {
+    /// 1 at registration, +1 per replan swap.
+    epoch: u64,
+    /// Unique id of this version. Fresh per version, so observation
+    /// stores keyed by name (the metrics latency EWMAs) detect the swap
+    /// and reseed instead of blending estimates across plans.
     uid: u64,
-    /// The plan registration executed (exposed for observability and
-    /// routing; see [`MatrixEntry::plan`]).
+    /// The plan this version executed.
     plan: FormatPlan,
     /// What the build stage constructed (composite kernel label).
     kernel_name: String,
@@ -73,25 +119,171 @@ pub struct MatrixEntry {
     /// deterministic for `describe()`).
     bindings: Vec<(BackendId, Box<dyn ExecutionBinding>)>,
     /// Static-prior + observed-EWMA cost rows, one per bound backend.
-    routing: RoutingTable,
-    /// Logical shape.
-    pub nrows: usize,
-    /// Logical column count.
-    pub ncols: usize,
-    /// Nonzeros (FLOP accounting).
-    pub nnz: usize,
+    routing: Arc<RoutingTable>,
+    /// Batches currently executing on this version ([`LiveGuard`]s
+    /// alive). A retired version is dropped once this drains to zero.
+    inflight: AtomicUsize,
 }
 
-impl MatrixEntry {
-    /// The binding for one backend id, or an error naming what is
-    /// missing (pinned requests surface this instead of silently
-    /// downgrading).
-    pub fn binding(&self, backend: BackendId) -> Result<&dyn ExecutionBinding> {
+impl PlanVersion {
+    /// This version's epoch (1 = the registration plan).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Batches currently pinned to this version.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    fn route(&self) -> BackendId {
+        self.routing
+            .pick(|id| self.bindings.iter().any(|(d, _)| *d == id))
+            .unwrap_or(BackendId::Cpu)
+    }
+
+    fn binding(&self, backend: BackendId, name: &str) -> Result<&dyn ExecutionBinding> {
         self.bindings
             .iter()
             .find(|(id, _)| *id == backend)
             .map(|(_, b)| b.as_ref())
-            .with_context(|| format!("matrix {} has no {backend:?} binding", self.name))
+            .with_context(|| format!("matrix {name} has no {backend:?} binding"))
+    }
+}
+
+/// The entry's swappable state: the current version, the base CSR it
+/// was built from, the delta overlay accumulated since, and versions
+/// retired by a swap but still serving pinned batches.
+struct LiveState {
+    version: Arc<PlanVersion>,
+    base: Arc<Csr<f32>>,
+    patch: Arc<DeltaOverlay<f32>>,
+    retired: Vec<Arc<PlanVersion>>,
+}
+
+/// A pinned snapshot of one entry's serving state: the plan version
+/// (with its inflight count held up for the guard's lifetime), the base
+/// matrix, and the delta overlay *as of the pin*. Everything a batch
+/// dispatch touches comes through the guard, so a concurrent replan
+/// swap cannot change the matrix a batch computes against — each
+/// response is exact for the merged matrix at pin time.
+pub struct LiveGuard<'a> {
+    entry: &'a MatrixEntry,
+    version: Arc<PlanVersion>,
+    base: Arc<Csr<f32>>,
+    patch: Arc<DeltaOverlay<f32>>,
+}
+
+impl LiveGuard<'_> {
+    /// The pinned version's epoch.
+    pub fn epoch(&self) -> u64 {
+        self.version.epoch
+    }
+
+    /// The pinned version's uid (keys the metrics EWMAs, so estimates
+    /// reseed when a swap changes what is being measured).
+    pub fn uid(&self) -> u64 {
+        self.version.uid
+    }
+
+    /// The pinned version's binding for one backend id, or an error
+    /// naming what is missing (pinned requests surface this instead of
+    /// silently downgrading).
+    pub fn binding(&self, backend: BackendId) -> Result<&dyn ExecutionBinding> {
+        self.version.binding(backend, &self.entry.name)
+    }
+
+    /// Execute one SpMV on the pinned version, overlay included.
+    pub fn dispatch(&self, backend: BackendId, x: &[f32]) -> Result<Vec<f32>> {
+        let mut y = self.binding(backend)?.spmv(x)?;
+        if !self.patch.is_empty() {
+            self.patch.patch_y(&self.base, x, &mut y);
+        }
+        Ok(y)
+    }
+
+    /// Execute a whole batch on the pinned version, overlay included;
+    /// also returns the binding's self-timed cost when it has one (the
+    /// server prefers it over wall-clock for the routing EWMA).
+    pub fn dispatch_multi(
+        &self,
+        backend: BackendId,
+        xs: &[&[f32]],
+    ) -> Result<(Vec<Vec<f32>>, Option<f64>)> {
+        let b = self.binding(backend)?;
+        let mut ys = b.spmv_multi(xs)?;
+        let cost = b.self_timed_cost();
+        if !self.patch.is_empty() {
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                self.patch.patch_y(&self.base, x, y);
+            }
+        }
+        Ok((ys, cost))
+    }
+
+    /// Feed back an observed per-vector latency to the pinned version's
+    /// routing table.
+    pub fn correct_route(&self, backend: BackendId, secs_per_vec: f64) {
+        self.version.routing.correct(backend, secs_per_vec);
+    }
+}
+
+impl Drop for LiveGuard<'_> {
+    fn drop(&mut self) {
+        self.version.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A registered matrix: immutable identity plus the versioned live
+/// state the replan path swaps under.
+pub struct MatrixEntry {
+    /// Registered name.
+    pub name: String,
+    /// This entry's copyable handle (see [`MatrixId`]).
+    id: MatrixId,
+    /// Logical shape.
+    pub nrows: usize,
+    /// Logical column count.
+    pub ncols: usize,
+    /// The SpMM block-width hint registration planned with; replans
+    /// reuse it so re-tuned plans price the same traffic shape.
+    block_hint: usize,
+    /// `Some(n)` when this entry registered through the sharded
+    /// pipeline — replans then re-run `plan_sharded` at the same N.
+    nshards: Option<usize>,
+    /// Nonzeros of the *merged* matrix (base + overlay); FLOP
+    /// accounting tracks updates.
+    nnz_now: AtomicUsize,
+    /// The swappable serving state. Lock order: `mutate` before `live`;
+    /// the serving path takes only a brief `live` read to pin a guard.
+    live: RwLock<LiveState>,
+    /// Serializes mutations (delta application, replan swap) so the
+    /// overlay clone-apply-swap and the version swap never interleave.
+    mutate: Mutex<()>,
+    /// Set while a replan for this entry is queued or running —
+    /// repeated drift trips fold into the one pending replan instead of
+    /// queueing duplicates.
+    replan_pending: AtomicBool,
+}
+
+impl MatrixEntry {
+    /// This entry's copyable handle.
+    pub fn id(&self) -> MatrixId {
+        self.id
+    }
+
+    /// Pin the current serving state. The returned guard holds the
+    /// version's inflight count up, so a replan swap retires — never
+    /// tears down — the version under any live dispatch.
+    pub fn pin(&self) -> LiveGuard<'_> {
+        let live = self.live.read().unwrap();
+        live.version.inflight.fetch_add(1, Ordering::AcqRel);
+        LiveGuard {
+            entry: self,
+            version: live.version.clone(),
+            base: live.base.clone(),
+            patch: live.patch.clone(),
+        }
     }
 
     /// Execute on the chosen backend. `x` is in original coordinates —
@@ -101,7 +293,7 @@ impl MatrixEntry {
         if x.len() != self.ncols {
             bail!("x length {} != ncols {}", x.len(), self.ncols);
         }
-        self.binding(backend)?.spmv(x)
+        self.pin().dispatch(backend, x)
     }
 
     /// Execute a whole batch on the chosen backend: `out[j] = A · xs[j]`,
@@ -117,58 +309,67 @@ impl MatrixEntry {
                 bail!("x length {} != ncols {}", x.len(), self.ncols);
             }
         }
-        self.binding(backend)?.spmv_multi(xs)
+        self.pin().dispatch_multi(backend, xs).map(|(ys, _)| ys)
     }
 
-    /// Does this entry have a binding on the backend?
+    /// Does the current version have a binding on the backend?
     pub fn supports(&self, backend: BackendId) -> bool {
-        self.bindings.iter().any(|(id, _)| *id == backend)
+        let live = self.live.read().unwrap();
+        live.version.bindings.iter().any(|(id, _)| *id == backend)
     }
 
-    /// Unique id of this registration (see the field doc).
+    /// Unique id of the current plan version (see [`PlanVersion::uid`]).
     pub fn uid(&self) -> u64 {
-        self.uid
+        self.live.read().unwrap().version.uid
     }
 
-    /// The plan registration executed.
-    pub fn plan(&self) -> &FormatPlan {
-        &self.plan
+    /// The current version's epoch: 1 at registration, bumped by every
+    /// replan swap.
+    pub fn epoch(&self) -> u64 {
+        self.live.read().unwrap().version.epoch
     }
 
-    /// The value-storage precision the plan chose (and the build
-    /// applied): [`ValuePrecision::F32`] unless the planner's bit-exact
-    /// gate narrowed the value arrays to a half format. Surfaces in
-    /// [`MatrixEntry::describe`] via the plan summary's `vals f16` /
-    /// `vals bf16` tag and in the kernel name's `,f16` / `,bf16`
-    /// suffix.
+    /// The plan the current version executes (a clone — the version may
+    /// be swapped the moment the lock drops, so no reference escapes).
+    pub fn plan(&self) -> FormatPlan {
+        self.live.read().unwrap().version.plan.clone()
+    }
+
+    /// The value-storage precision the current plan chose (and the
+    /// build applied): [`ValuePrecision::F32`] unless the planner's
+    /// bit-exact gate narrowed the value arrays to a half format.
+    /// Surfaces in [`MatrixEntry::describe`] via the plan summary's
+    /// `vals f16` / `vals bf16` tag and in the kernel name's `,f16` /
+    /// `,bf16` suffix.
     pub fn precision(&self) -> ValuePrecision {
-        self.plan.precision()
+        self.live.read().unwrap().version.plan.precision()
     }
 
-    /// Name of the execution the build stage constructed (e.g.
-    /// `csr2(4t)`, `csr5(w8,s16,4t)`, or
+    /// Name of the execution the current version's build constructed
+    /// (e.g. `csr2(4t)`, `csr5(w8,s16,4t)`, or
     /// `hybrid(csr2(4t)+csr-parallel(4t))`).
     pub fn kernel_name(&self) -> String {
-        self.kernel_name.clone()
+        self.live.read().unwrap().version.kernel_name.clone()
     }
 
-    /// Did registration reorder any part of the matrix? `false` is the
-    /// identity (no-reorder) path wholesale-irregular plans take; for
-    /// hybrid entries the *body* part reorders.
+    /// Did the current version's build reorder any part of the matrix?
+    /// `false` is the identity (no-reorder) path wholesale-irregular
+    /// plans take; for hybrid entries the *body* part reorders.
     pub fn reordered(&self) -> bool {
-        self.plan.reorders()
+        self.live.read().unwrap().version.plan.reorders()
     }
 
-    /// This entry's routing table (static priors + observed EWMAs).
-    pub fn routing(&self) -> &RoutingTable {
-        &self.routing
+    /// The current version's routing table (static priors + observed
+    /// EWMAs).
+    pub fn routing(&self) -> Arc<RoutingTable> {
+        self.live.read().unwrap().version.routing.clone()
     }
 
     /// Feed back an observed per-vector latency estimate for one
     /// backend — the server calls this after every served batch with
     /// the metrics-side EWMA, closing the online cost-correction loop.
     pub fn correct_route(&self, backend: BackendId, secs_per_vec: f64) {
-        self.routing.correct(backend, secs_per_vec);
+        self.routing().correct(backend, secs_per_vec);
     }
 
     /// Pick the execution backend for a request. An explicit override
@@ -181,40 +382,244 @@ impl MatrixEntry {
         if let Some(d) = requested {
             return d;
         }
-        self.routing
-            .pick(|id| self.supports(id))
-            .unwrap_or(BackendId::Cpu)
+        self.live.read().unwrap().version.route()
     }
 
-    /// One observability line: the plan (with the per-part format/nnz
-    /// breakdown for hybrid entries), what was built, every binding's
-    /// own describe line (for PJRT-bound hybrids that names the
-    /// body→pjrt / remainder→cpu placement), the routing estimates and
-    /// where unrouted requests execute now.
+    /// Cells currently in the delta overlay (0 = serving the base plan
+    /// unpatched).
+    pub fn overlay_cells(&self) -> usize {
+        self.live.read().unwrap().patch.len()
+    }
+
+    /// Versions retired by replan swaps that still have batches pinned
+    /// (drained versions are pruned on the way). 0 once traffic from
+    /// before the last swap has fully drained.
+    pub fn retired_count(&self) -> usize {
+        let mut live = self.live.write().unwrap();
+        live.retired.retain(|v| v.inflight() > 0);
+        live.retired.len()
+    }
+
+    /// One observability line: `name v<epoch>:` then the plan (with the
+    /// per-part format/nnz breakdown for hybrid entries), what was
+    /// built, every binding's own describe line (for PJRT-bound hybrids
+    /// that names the body→pjrt / remainder→cpu placement), the routing
+    /// estimates, where unrouted requests execute now, and — when
+    /// deltas have accumulated — the overlay size.
     pub fn describe(&self) -> String {
-        let bound: Vec<String> = self.bindings.iter().map(|(_, b)| b.describe()).collect();
+        let live = self.live.read().unwrap();
+        let v = &live.version;
+        let bound: Vec<String> = v.bindings.iter().map(|(_, b)| b.describe()).collect();
+        let overlay = if live.patch.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " | overlay {} cells ({:.1}%)",
+                live.patch.len(),
+                100.0 * live.patch.fraction_of(live.base.nnz())
+            )
+        };
         format!(
-            "{}: {} | built {} | bound [{}] | est {} | routes to {:?}",
+            "{} v{}: {} | built {} | bound [{}] | est {} | routes to {:?}{}",
             self.name,
-            self.plan.summary(),
-            self.kernel_name,
+            v.epoch,
+            v.plan.summary(),
+            v.kernel_name,
             bound.join(", "),
-            self.routing.summary(),
-            self.route(None),
+            v.routing.summary(),
+            v.route(),
+            overlay,
         )
     }
 
-    /// SpMV FLOPs (2·NNZ).
+    /// Nonzeros of the merged matrix (base + overlay) as of the latest
+    /// update.
+    pub fn nnz(&self) -> usize {
+        self.nnz_now.load(Ordering::Relaxed)
+    }
+
+    /// SpMV FLOPs (2·NNZ) on the merged matrix.
     pub fn flops(&self) -> f64 {
-        2.0 * self.nnz as f64
+        2.0 * self.nnz() as f64
+    }
+
+    /// Absorb one delta batch into the overlay (copy-on-write: clone,
+    /// apply, swap — pinned guards keep serving the overlay they
+    /// snapshotted). Returns (overlay cells, overlay fraction) after
+    /// the apply. Validation is atomic: an out-of-bounds op refuses the
+    /// whole batch and leaves the entry untouched.
+    pub(crate) fn apply_delta(&self, batch: &DeltaBatch<f32>) -> Result<(usize, f64)> {
+        let _m = self.mutate.lock().unwrap();
+        let (base, mut patch) = {
+            let live = self.live.read().unwrap();
+            (live.base.clone(), (*live.patch).clone())
+        };
+        patch.apply(batch)?;
+        let cells = patch.len();
+        let frac = patch.fraction_of(base.nnz());
+        let merged_nnz = patch.merged_nnz(&base);
+        self.live.write().unwrap().patch = Arc::new(patch);
+        self.nnz_now.store(merged_nnz, Ordering::Relaxed);
+        Ok((cells, frac))
+    }
+
+    /// Snapshot (version, base, overlay) for the drift detector.
+    pub(crate) fn live_parts(&self) -> (Arc<PlanVersion>, Arc<Csr<f32>>, Arc<DeltaOverlay<f32>>) {
+        let live = self.live.read().unwrap();
+        (live.version.clone(), live.base.clone(), live.patch.clone())
+    }
+
+    pub(crate) fn replan_pending(&self) -> &AtomicBool {
+        &self.replan_pending
+    }
+
+    pub(crate) fn clear_replan_pending(&self) {
+        self.replan_pending.store(false, Ordering::Release);
+    }
+
+    /// Re-run the full plan → build → bind pipeline on the merged
+    /// matrix (base + overlay) and swap the result in as the next
+    /// version. The swap is the zero-downtime handoff: the new version
+    /// becomes `live.version` under a brief write lock, the merged
+    /// matrix becomes the new base with an empty overlay, and the old
+    /// version retires until its pinned batches drain. On *any* exit —
+    /// success or error — the entry's replan-pending flag clears, so a
+    /// failed replan (which keeps serving the old version + overlay,
+    /// still correct) can be retried by the next drift trip.
+    pub(crate) fn replan(
+        &self,
+        pool: &Arc<ThreadPool>,
+        backends: &[Arc<dyn Backend>],
+    ) -> Result<u64> {
+        let out = self.replan_inner(pool, backends);
+        self.clear_replan_pending();
+        out
+    }
+
+    fn replan_inner(
+        &self,
+        pool: &Arc<ThreadPool>,
+        backends: &[Arc<dyn Backend>],
+    ) -> Result<u64> {
+        let _m = self.mutate.lock().unwrap();
+        let (old, base, patch) = {
+            let live = self.live.read().unwrap();
+            (live.version.clone(), live.base.clone(), live.patch.clone())
+        };
+        // merge once; the merged matrix is both what gets replanned and
+        // the next version's base
+        let merged: Csr<f32> =
+            if patch.is_empty() { (*base).clone() } else { patch.merge_into(&base) };
+        let next_base = Arc::new(merged.clone());
+        let available: Vec<BackendId> = backends.iter().map(|b| b.id()).collect();
+        let plan = match self.nshards {
+            Some(n) => planner::plan_sharded(&merged, n.max(1), &available),
+            None => planner::replan(&merged, &old.plan, self.block_hint, &available),
+        };
+        let (plan, kernel_name, bindings, routing) =
+            plan_build_bind(backends, pool, plan, merged, &self.name)?;
+        let version = Arc::new(PlanVersion {
+            epoch: old.epoch + 1,
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
+            plan,
+            kernel_name,
+            bindings,
+            routing: Arc::new(routing),
+            inflight: AtomicUsize::new(0),
+        });
+        let epoch = version.epoch;
+        self.nnz_now.store(next_base.nnz(), Ordering::Relaxed);
+        {
+            let mut live = self.live.write().unwrap();
+            let prev = std::mem::replace(&mut live.version, version);
+            live.base = next_base;
+            live.patch = Arc::new(DeltaOverlay::new(self.nrows, self.ncols));
+            live.retired.retain(|v| v.inflight() > 0);
+            // a pin() increments inflight under the read lock, which
+            // this write lock excludes — so 0 here really means no
+            // batch is (or can still get) pinned to prev
+            if prev.inflight() > 0 {
+                live.retired.push(prev);
+            }
+        }
+        Ok(epoch)
     }
 }
 
-/// Thread-safe name → entry map over a set of execution backends.
+/// Build + bind one plan: the shared back half of registration and
+/// replan. Returns the (possibly refined) plan, the composite kernel
+/// label, the per-backend bindings, and the routing table seeded from
+/// static priors.
+fn plan_build_bind(
+    backends: &[Arc<dyn Backend>],
+    pool: &Arc<ThreadPool>,
+    plan: FormatPlan,
+    a: Csr<f32>,
+    name: &str,
+) -> Result<(FormatPlan, String, Vec<(BackendId, Box<dyn ExecutionBinding>)>, RoutingTable)> {
+    if plan.is_sharded() {
+        // shard kernels never take the padded export (PJRT shard
+        // placement is a ROADMAP follow-up), so the build skips
+        // materializing exports
+        let built = build_execution(&plan, a, pool.clone(), false);
+        let binding = bind_sharded(backends, &built, &plan)?;
+        let prior = plan.cost(BackendId::Cpu).unwrap_or(f64::INFINITY);
+        let kernel_name = plan.kernel_label();
+        let routing = RoutingTable::new(vec![(BackendId::Cpu, prior)]);
+        return Ok((plan, kernel_name, vec![(BackendId::Cpu, binding)], routing));
+    }
+
+    // -- build: reorder / split / kernels, composed in original
+    //    coordinates; part exports come back alongside only when a
+    //    registered backend will actually bind them -------------------
+    let want_export =
+        plan.pjrt_width().is_some() && backends.iter().any(|b| b.needs_padded_export());
+    let built = build_execution(&plan, a, pool.clone(), want_export);
+
+    // -- bind: offer the build to every backend that supports the
+    //    plan; collect the bindings and the routing priors ------------
+    let mut bindings: Vec<(BackendId, Box<dyn ExecutionBinding>)> = Vec::new();
+    let mut priors: Vec<(BackendId, f64)> = Vec::new();
+    for b in backends {
+        let id = b.id();
+        if bindings.iter().any(|(d, _)| *d == id) || !b.supports_plan(&plan) {
+            continue;
+        }
+        match b.bind(&built, &plan) {
+            Ok(binding) => {
+                priors.push((id, b.static_cost(&plan).unwrap_or(f64::INFINITY)));
+                bindings.push((id, binding));
+            }
+            Err(e) => {
+                log::warn!("{name}: {id:?} backend did not bind ({e})");
+            }
+        }
+    }
+    if bindings.is_empty() {
+        bail!("no backend bound matrix {name}");
+    }
+    let kernel_name = built.exec.name();
+    Ok((plan, kernel_name, bindings, RoutingTable::new(priors)))
+}
+
+/// Entry maps: by name (wire protocols, observability) and by
+/// [`MatrixId`] (the serving hot path). Both point at the same `Arc`s.
+#[derive(Default)]
+struct Entries {
+    by_name: HashMap<String, Arc<MatrixEntry>>,
+    by_id: HashMap<MatrixId, Arc<MatrixEntry>>,
+}
+
+/// Thread-safe matrix map over a set of execution backends, plus the
+/// live-path machinery: drift thresholds, the background replan
+/// engine, and an optional metrics sink for drift/replan counters.
 pub struct MatrixRegistry {
     pool: Arc<ThreadPool>,
     backends: Vec<Arc<dyn Backend>>,
-    entries: RwLock<HashMap<String, Arc<MatrixEntry>>>,
+    entries: RwLock<Entries>,
+    live_cfg: LiveConfig,
+    engine: LiveEngine,
+    live_metrics: Mutex<Option<Arc<Metrics>>>,
 }
 
 impl MatrixRegistry {
@@ -233,8 +638,26 @@ impl MatrixRegistry {
     /// for new devices (and for tests that inject fake backends). The
     /// build stage still runs on `pool`.
     pub fn with_backends(pool: Arc<ThreadPool>, backends: Vec<Arc<dyn Backend>>) -> Self {
+        Self::with_live_config(pool, backends, LiveConfig::default())
+    }
+
+    /// [`MatrixRegistry::with_backends`] with explicit drift thresholds
+    /// and replan policy (tests typically disable
+    /// [`LiveConfig::auto_replan`] for determinism).
+    pub fn with_live_config(
+        pool: Arc<ThreadPool>,
+        backends: Vec<Arc<dyn Backend>>,
+        live_cfg: LiveConfig,
+    ) -> Self {
         assert!(!backends.is_empty(), "registry needs at least one backend");
-        MatrixRegistry { pool, backends, entries: RwLock::new(HashMap::new()) }
+        MatrixRegistry {
+            pool,
+            backends,
+            entries: RwLock::new(Entries::default()),
+            live_cfg,
+            engine: LiveEngine::new(),
+            live_metrics: Mutex::new(None),
+        }
     }
 
     /// The registered backends, in registration order.
@@ -242,11 +665,23 @@ impl MatrixRegistry {
         &self.backends
     }
 
+    /// The drift thresholds and replan policy this registry runs.
+    pub fn live_config(&self) -> &LiveConfig {
+        &self.live_cfg
+    }
+
+    /// Point the live path at a metrics sink: drift trips and replan
+    /// swaps are recorded there (the server wires its own metrics in at
+    /// start).
+    pub fn attach_live_metrics(&self, metrics: &Arc<Metrics>) {
+        *self.live_metrics.lock().unwrap() = Some(metrics.clone());
+    }
+
     /// Register a matrix through the plan → build → bind pipeline,
     /// planned for single-vector requests; use
     /// [`MatrixRegistry::register_hinted`] when the expected traffic is
-    /// batched.
-    pub fn register(&self, name: &str, a: Csr<f32>) -> Result<Arc<MatrixEntry>> {
+    /// batched. Returns the entry's copyable [`MatrixId`] handle.
+    pub fn register(&self, name: &str, a: Csr<f32>) -> Result<MatrixId> {
         self.register_hinted(name, a, 1)
     }
 
@@ -258,65 +693,12 @@ impl MatrixRegistry {
     /// (`tuning::csr3_params_multi`) — for hybrid plans, at the *body*
     /// density — so matrices registered for batched traffic get the
     /// smaller groups their larger per-group working set wants.
-    pub fn register_hinted(
-        &self,
-        name: &str,
-        a: Csr<f32>,
-        block_hint: usize,
-    ) -> Result<Arc<MatrixEntry>> {
+    pub fn register_hinted(&self, name: &str, a: Csr<f32>, block_hint: usize) -> Result<MatrixId> {
         if a.nrows() != a.ncols() {
             bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
         }
-
-        // -- plan: structure stats → shape / format / export / costs ----
         let plan = planner::plan_hinted(&a, block_hint);
-
-        // -- build: reorder / split / kernels, composed in original
-        //    coordinates; part exports come back alongside only when a
-        //    registered backend will actually bind them ---------------
-        let want_export = plan.pjrt_width().is_some()
-            && self.backends.iter().any(|b| b.needs_padded_export());
-        let built = build_execution(&plan, a, self.pool.clone(), want_export);
-
-        // -- bind: offer the build to every backend that supports the
-        //    plan; collect the bindings and the routing priors --------
-        let mut bindings: Vec<(BackendId, Box<dyn ExecutionBinding>)> = Vec::new();
-        let mut priors: Vec<(BackendId, f64)> = Vec::new();
-        for b in &self.backends {
-            let id = b.id();
-            if bindings.iter().any(|(d, _)| *d == id) || !b.supports_plan(&plan) {
-                continue;
-            }
-            match b.bind(&built, &plan) {
-                Ok(binding) => {
-                    priors.push((id, b.static_cost(&plan).unwrap_or(f64::INFINITY)));
-                    bindings.push((id, binding));
-                }
-                Err(e) => {
-                    log::warn!("{name}: {id:?} backend did not bind ({e})");
-                }
-            }
-        }
-        if bindings.is_empty() {
-            bail!("no backend bound matrix {name}");
-        }
-
-        let entry = Arc::new(MatrixEntry {
-            name: name.to_string(),
-            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
-            nrows: plan.stats().nrows,
-            ncols: plan.stats().ncols,
-            nnz: plan.stats().nnz,
-            kernel_name: built.exec.name(),
-            routing: RoutingTable::new(priors),
-            plan,
-            bindings,
-        });
-        self.entries
-            .write()
-            .unwrap()
-            .insert(name.to_string(), entry.clone());
-        Ok(entry)
+        self.insert(name, a, plan, block_hint, None)
     }
 
     /// Register a matrix through the **scale-out** pipeline: an N-way
@@ -328,12 +710,7 @@ impl MatrixRegistry {
     /// then executes on every placed backend *simultaneously*. The
     /// entry routes under [`BackendId::Cpu`] — the host coordinates the
     /// fan-out — with its prior priced at the plan's slowest shard.
-    pub fn register_sharded(
-        &self,
-        name: &str,
-        a: Csr<f32>,
-        nshards: usize,
-    ) -> Result<Arc<MatrixEntry>> {
+    pub fn register_sharded(&self, name: &str, a: Csr<f32>, nshards: usize) -> Result<MatrixId> {
         if a.nrows() != a.ncols() {
             bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
         }
@@ -342,52 +719,197 @@ impl MatrixRegistry {
         }
         let available: Vec<BackendId> = self.backends.iter().map(|b| b.id()).collect();
         let plan = planner::plan_sharded(&a, nshards, &available);
-        // shard kernels never take the padded export (PJRT shard
-        // placement is a ROADMAP follow-up), so the build skips
-        // materializing exports
-        let built = build_execution(&plan, a, self.pool.clone(), false);
-        let binding = bind_sharded(&self.backends, &built, &plan)?;
-        let prior = plan.cost(BackendId::Cpu).unwrap_or(f64::INFINITY);
-        let entry = Arc::new(MatrixEntry {
-            name: name.to_string(),
-            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
-            nrows: plan.stats().nrows,
-            ncols: plan.stats().ncols,
-            nnz: plan.stats().nnz,
-            kernel_name: plan.kernel_label(),
-            routing: RoutingTable::new(vec![(BackendId::Cpu, prior)]),
-            plan,
-            bindings: vec![(BackendId::Cpu, binding)],
-        });
-        self.entries
-            .write()
-            .unwrap()
-            .insert(name.to_string(), entry.clone());
-        Ok(entry)
+        self.insert(name, a, plan, 1, Some(nshards))
     }
 
-    /// Look up a registered matrix.
+    /// The shared back half of registration: retain the base, build +
+    /// bind the plan, mint version 1, and publish the entry under both
+    /// maps.
+    fn insert(
+        &self,
+        name: &str,
+        a: Csr<f32>,
+        plan: FormatPlan,
+        block_hint: usize,
+        nshards: Option<usize>,
+    ) -> Result<MatrixId> {
+        // the live path needs the base CSR retained for overlay
+        // patching and replan merges — one extra copy per entry, paid
+        // at registration, never on the request path
+        let base = Arc::new(a.clone());
+        let (plan, kernel_name, bindings, routing) =
+            plan_build_bind(&self.backends, &self.pool, plan, a, name)?;
+        let (nrows, ncols, nnz) =
+            (plan.stats().nrows, plan.stats().ncols, plan.stats().nnz);
+        let version = Arc::new(PlanVersion {
+            epoch: 1,
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
+            plan,
+            kernel_name,
+            bindings,
+            routing: Arc::new(routing),
+            inflight: AtomicUsize::new(0),
+        });
+        let id = MatrixId(NEXT_ID.fetch_add(1, Ordering::Relaxed));
+        let entry = Arc::new(MatrixEntry {
+            name: name.to_string(),
+            id,
+            nrows,
+            ncols,
+            block_hint,
+            nshards,
+            nnz_now: AtomicUsize::new(nnz),
+            live: RwLock::new(LiveState {
+                version,
+                base,
+                patch: Arc::new(DeltaOverlay::new(nrows, ncols)),
+                retired: Vec::new(),
+            }),
+            mutate: Mutex::new(()),
+            replan_pending: AtomicBool::new(false),
+        });
+        let mut entries = self.entries.write().unwrap();
+        if let Some(old) = entries.by_name.insert(name.to_string(), entry.clone()) {
+            // a held stale id now errors instead of reaching the
+            // replacement matrix
+            entries.by_id.remove(&old.id);
+        }
+        entries.by_id.insert(id, entry);
+        Ok(id)
+    }
+
+    /// Look up a registered matrix by name.
     pub fn get(&self, name: &str) -> Result<Arc<MatrixEntry>> {
         self.entries
             .read()
             .unwrap()
+            .by_name
             .get(name)
             .cloned()
             .with_context(|| format!("matrix {name:?} not registered"))
     }
 
+    /// Look up a registered matrix by its [`MatrixId`] — the serving
+    /// hot path (integer hash, no string compare). Errors on ids
+    /// invalidated by re-registration.
+    pub fn get_id(&self, id: MatrixId) -> Result<Arc<MatrixEntry>> {
+        self.entries
+            .read()
+            .unwrap()
+            .by_id
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("matrix {id} not registered (stale id?)"))
+    }
+
+    /// The current [`MatrixId`] for a name.
+    pub fn id_of(&self, name: &str) -> Result<MatrixId> {
+        self.get(name).map(|e| e.id)
+    }
+
     /// Registered names.
     pub fn names(&self) -> Vec<String> {
-        self.entries.read().unwrap().keys().cloned().collect()
+        self.entries.read().unwrap().by_name.keys().cloned().collect()
     }
 
     /// Observability: one [`MatrixEntry::describe`] line per registered
     /// matrix, sorted by name.
     pub fn describe(&self) -> Vec<String> {
         let entries = self.entries.read().unwrap();
-        let mut names: Vec<&String> = entries.keys().collect();
+        let mut names: Vec<&String> = entries.by_name.keys().collect();
         names.sort();
-        names.iter().map(|n| entries[*n].describe()).collect()
+        names.iter().map(|n| entries.by_name[*n].describe()).collect()
+    }
+
+    /// Absorb a delta batch into a registered matrix's overlay, then
+    /// run the drift detector on the merged profile. Serving continues
+    /// uninterrupted throughout — requests in flight keep the overlay
+    /// they pinned; requests after this call see the updated matrix. A
+    /// tripped threshold (with [`LiveConfig::auto_replan`] on) queues a
+    /// background replan; the returned [`DriftReport`] says what
+    /// tripped and whether a replan was queued.
+    pub fn update(&self, name: &str, batch: &DeltaBatch<f32>) -> Result<DriftReport> {
+        let entry = self.get(name)?;
+        self.update_entry(entry, batch)
+    }
+
+    /// [`MatrixRegistry::update`] by [`MatrixId`].
+    pub fn update_id(&self, id: MatrixId, batch: &DeltaBatch<f32>) -> Result<DriftReport> {
+        let entry = self.get_id(id)?;
+        self.update_entry(entry, batch)
+    }
+
+    fn update_entry(
+        &self,
+        entry: Arc<MatrixEntry>,
+        batch: &DeltaBatch<f32>,
+    ) -> Result<DriftReport> {
+        entry.apply_delta(batch)?;
+        let (version, base, patch) = entry.live_parts();
+        let signals = live::assess(&version.plan, &base, &patch, &version.routing, &self.live_cfg);
+        if let Some(m) = &*self.live_metrics.lock().unwrap() {
+            m.record_drift(&entry.name, &signals);
+        }
+        let mut queued = false;
+        if !signals.is_empty()
+            && self.live_cfg.auto_replan
+            && entry
+                .replan_pending()
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            self.engine.submit(ReplanJob {
+                entry: entry.clone(),
+                pool: self.pool.clone(),
+                backends: self.backends.clone(),
+                metrics: self.live_metrics.lock().unwrap().clone(),
+            });
+            queued = true;
+        }
+        Ok(DriftReport {
+            epoch: version.epoch(),
+            overlay_cells: patch.len(),
+            overlay_frac: patch.fraction_of(base.nnz()),
+            signals,
+            replan_queued: queued,
+        })
+    }
+
+    /// Run the drift detector on a matrix's current state without
+    /// applying any deltas (never queues a replan — observability only).
+    pub fn check_drift(&self, name: &str) -> Result<DriftReport> {
+        let entry = self.get(name)?;
+        let (version, base, patch) = entry.live_parts();
+        let signals = live::assess(&version.plan, &base, &patch, &version.routing, &self.live_cfg);
+        Ok(DriftReport {
+            epoch: version.epoch(),
+            overlay_cells: patch.len(),
+            overlay_frac: patch.fraction_of(base.nnz()),
+            signals,
+            replan_queued: false,
+        })
+    }
+
+    /// Replan a matrix synchronously on the calling thread (the
+    /// background path is [`MatrixRegistry::update`] + drift). Returns
+    /// the new epoch after the swap.
+    pub fn replan_now(&self, name: &str) -> Result<u64> {
+        let entry = self.get(name)?;
+        // folds any queued background replan into this one
+        entry.replan_pending().store(true, Ordering::Release);
+        let epoch = entry.replan(&self.pool, &self.backends)?;
+        if let Some(m) = &*self.live_metrics.lock().unwrap() {
+            m.record_replan(&entry.name, epoch);
+        }
+        Ok(epoch)
+    }
+}
+
+impl Drop for MatrixRegistry {
+    fn drop(&mut self) {
+        // close the replan queue and join the worker — queued jobs hold
+        // entry Arcs, not the registry, so this cannot cycle
+        self.engine.shutdown();
     }
 }
 
@@ -401,9 +923,12 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(20, 20);
-        let e = reg.register("grid", a.clone()).unwrap();
+        let id = reg.register("grid", a.clone()).unwrap();
+        let e = reg.get_id(id).unwrap();
         assert!(e.supports(BackendId::Cpu));
         assert!(!e.supports(BackendId::Pjrt));
+        assert_eq!(e.id(), id);
+        assert_eq!(reg.id_of("grid").unwrap(), id);
 
         let x: Vec<f32> = (0..400).map(|i| (i % 7) as f32).collect();
         let y = e.spmv(BackendId::Cpu, &x).unwrap();
@@ -415,11 +940,24 @@ mod tests {
     }
 
     #[test]
+    fn reregistration_invalidates_the_old_id() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        let id1 = reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        let id2 = reg.register("g", gen::grid2d_5pt::<f32>(10, 10)).unwrap();
+        assert_ne!(id1, id2);
+        assert!(reg.get_id(id1).is_err(), "stale id must not resolve");
+        assert_eq!(reg.get_id(id2).unwrap().nrows, 100);
+        assert_eq!(reg.id_of("g").unwrap(), id2);
+    }
+
+    #[test]
     fn regular_matrix_builds_reordered_csr2() {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
         // regular but off the stencil diagonals → Band-k + CSR-2
-        let e = reg.register("alt", gen::alternating_rows::<f32>(64, 5, 11)).unwrap();
+        reg.register("alt", gen::alternating_rows::<f32>(64, 5, 11)).unwrap();
+        let e = reg.get("alt").unwrap();
         assert!(e.plan().stats().is_regular());
         assert!(e.reordered(), "regular matrices take the Band-k path");
         assert!(e.kernel_name().starts_with("csr2"), "{}", e.kernel_name());
@@ -431,7 +969,8 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(16, 16);
-        let e = reg.register("grid", a.clone()).unwrap();
+        reg.register("grid", a.clone()).unwrap();
+        let e = reg.get("grid").unwrap();
         assert!(e.plan().stats().is_regular());
         assert!(!e.reordered(), "the fourth rail keeps identity order");
         assert!(e.kernel_name().starts_with("dia"), "{}", e.kernel_name());
@@ -451,7 +990,8 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
-        let e = reg.register("hubs", a.clone()).unwrap();
+        reg.register("hubs", a.clone()).unwrap();
+        let e = reg.get("hubs").unwrap();
         assert!(!e.plan().stats().is_regular());
         assert!(!e.plan().is_hybrid(), "heavy tail must not split");
         assert!(!e.reordered(), "irregular plans keep the identity order");
@@ -478,7 +1018,8 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::circuit::<f32>(32, 32, 7);
-        let e = reg.register("rails", a.clone()).unwrap();
+        reg.register("rails", a.clone()).unwrap();
+        let e = reg.get("rails").unwrap();
         assert!(e.plan().is_hybrid(), "{}", e.describe());
         assert!(e.reordered(), "the hybrid body reorders");
         assert!(e.kernel_name().starts_with("hybrid("), "{}", e.kernel_name());
@@ -504,7 +1045,8 @@ mod tests {
     fn explicit_route_override_wins_even_when_unbound() {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
-        let e = reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        let e = reg.get("g").unwrap();
         assert_eq!(e.route(Some(BackendId::Pjrt)), BackendId::Pjrt);
         // ... and the pinned backend then fails loudly instead of
         // silently running elsewhere
@@ -520,9 +1062,9 @@ mod tests {
         reg.register("alpha", gen::power_law::<f32>(600, 8, 1.0, 3)).unwrap();
         let lines = reg.describe();
         assert_eq!(lines.len(), 2);
-        assert!(lines[0].starts_with("alpha:"), "{}", lines[0]);
+        assert!(lines[0].starts_with("alpha v1:"), "{}", lines[0]);
         assert!(lines[0].contains("irregular"), "{}", lines[0]);
-        assert!(lines[1].starts_with("zeta:"), "{}", lines[1]);
+        assert!(lines[1].starts_with("zeta v1:"), "{}", lines[1]);
         assert!(lines[1].contains("regular"), "{}", lines[1]);
         assert!(lines[1].contains("Cpu"), "{}", lines[1]);
         assert!(lines[1].contains("bound [cpu["), "{}", lines[1]);
@@ -535,7 +1077,8 @@ mod tests {
         // stencil values are f16-exact → the plan narrows, the build
         // applies it, and every observability surface says so
         let a = gen::grid3d_7pt::<f32>(8, 8, 8);
-        let e = reg.register("grid", a.clone()).unwrap();
+        reg.register("grid", a.clone()).unwrap();
+        let e = reg.get("grid").unwrap();
         assert_eq!(e.precision(), ValuePrecision::F16, "{}", e.describe());
         assert!(e.kernel_name().contains(",f16)"), "{}", e.kernel_name());
         assert!(e.describe().contains("vals f16"), "{}", e.describe());
@@ -549,7 +1092,8 @@ mod tests {
             assert_eq!(u.to_bits(), v.to_bits());
         }
         // rng-valued operands fail the bit-exact gate and stay native
-        let p = reg.register("hubs", gen::power_law::<f32>(600, 8, 1.0, 0x5EED)).unwrap();
+        reg.register("hubs", gen::power_law::<f32>(600, 8, 1.0, 0x5EED)).unwrap();
+        let p = reg.get("hubs").unwrap();
         assert_eq!(p.precision(), ValuePrecision::F32);
         assert!(!p.describe().contains("vals "), "{}", p.describe());
     }
@@ -558,7 +1102,8 @@ mod tests {
     fn routing_follows_observed_corrections() {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
-        let e = reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        let e = reg.get("g").unwrap();
         // cold: static prior, CPU is the only bound backend
         let prior = e.routing().estimate(BackendId::Cpu).unwrap();
         assert!(prior.is_finite() && prior > 0.0);
@@ -575,6 +1120,7 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
         assert!(reg.get("nope").is_err());
+        assert!(reg.id_of("nope").is_err());
     }
 
     #[test]
@@ -582,7 +1128,8 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(8, 8);
-        let e = reg.register("g", a).unwrap();
+        reg.register("g", a).unwrap();
+        let e = reg.get("g").unwrap();
         assert!(e.spmv(BackendId::Cpu, &[1.0; 3]).is_err());
     }
 
@@ -592,7 +1139,8 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::triangular_grid::<f32>(12, 12);
         let n = a.ncols();
-        let e = reg.register_hinted("t", a, 8).unwrap();
+        reg.register_hinted("t", a, 8).unwrap();
+        let e = reg.get("t").unwrap();
         let xs: Vec<Vec<f32>> = (0..5)
             .map(|j| (0..n).map(|i| ((i * 3 + j * 11) % 13) as f32 - 6.0).collect())
             .collect();
@@ -613,7 +1161,8 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::power_law::<f32>(300, 8, 1.0, 0xABCD);
         let n = a.ncols();
-        let e = reg.register("p", a).unwrap();
+        reg.register("p", a).unwrap();
+        let e = reg.get("p").unwrap();
         assert!(!e.reordered());
         let xs: Vec<Vec<f32>> = (0..4)
             .map(|j| (0..n).map(|i| ((i * 5 + j * 7) % 17) as f32 - 8.0).collect())
@@ -634,7 +1183,8 @@ mod tests {
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::circuit::<f32>(32, 32, 11);
         let n = a.ncols();
-        let e = reg.register_hinted("rails", a, 4).unwrap();
+        reg.register_hinted("rails", a, 4).unwrap();
+        let e = reg.get("rails").unwrap();
         assert!(e.plan().is_hybrid(), "{}", e.describe());
         let xs: Vec<Vec<f32>> = (0..6)
             .map(|j| (0..n).map(|i| ((i * 13 + j * 3 + 2) % 19) as f32 - 9.0).collect())
@@ -659,7 +1209,8 @@ mod tests {
         ];
         let reg = MatrixRegistry::with_backends(pool, backends);
         let a = gen::grid2d_5pt::<f32>(64, 64);
-        let e = reg.register_sharded("grid", a.clone(), 4).unwrap();
+        reg.register_sharded("grid", a.clone(), 4).unwrap();
+        let e = reg.get("grid").unwrap();
         assert!(e.plan().is_sharded());
         assert!(e.kernel_name().starts_with("sharded("), "{}", e.kernel_name());
         // the ensemble is one CPU-keyed binding, not a per-backend map
@@ -692,12 +1243,203 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(1));
         let reg = MatrixRegistry::new(pool, None);
         let a = gen::grid2d_5pt::<f32>(6, 6);
-        let e = reg.register("g", a).unwrap();
+        reg.register("g", a).unwrap();
+        let e = reg.get("g").unwrap();
         assert!(e.spmv_multi(BackendId::Cpu, &[]).unwrap().is_empty());
         let good = vec![1.0f32; 36];
         let bad = vec![1.0f32; 7];
         let r = e.spmv_multi(BackendId::Cpu, &[&good, &bad]);
         assert!(r.is_err(), "mixed-length batch must be rejected");
         assert!(e.spmv_multi(BackendId::Pjrt, &[&good]).is_err(), "no PJRT binding");
+    }
+
+    // ----------------------------------------------------------------
+    // live path: deltas, drift, replan, versioning
+    // ----------------------------------------------------------------
+
+    #[test]
+    fn delta_update_serves_bit_exactly_through_the_overlay() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        reg.register("grid", a.clone()).unwrap();
+        let e = reg.get("grid").unwrap();
+        assert_eq!(e.epoch(), 1);
+        let nnz0 = e.nnz();
+
+        let mut b = DeltaBatch::new();
+        b.set(3, 3, 7.5); // overwrite the diagonal
+        b.set(0, 200, 1.25); // brand-new fill-in off the stencil
+        b.remove(100, 100); // delete a diagonal entry
+        let report = reg.update("grid", &b).unwrap();
+        assert_eq!(report.overlay_cells, 3);
+        assert!(!report.tripped(), "3 cells on a 1216-nnz stencil is tiny");
+        assert_eq!(e.overlay_cells(), 3);
+        assert_eq!(e.nnz(), nnz0, "+1 insert −1 remove nets zero");
+        assert!(e.describe().contains("overlay 3 cells"), "{}", e.describe());
+
+        // the overlay-patched answer is bit-identical to a from-scratch
+        // rebuild of the merged matrix
+        let merged = {
+            let mut patch = DeltaOverlay::new(256, 256);
+            patch.apply(&b).unwrap();
+            patch.merge_into(&a)
+        };
+        let x: Vec<f32> = (0..256).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; 256];
+        merged.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn dimension_growth_is_refused_atomically() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let reg = MatrixRegistry::new(pool, None);
+        reg.register("g", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+        let e = reg.get("g").unwrap();
+        let mut b = DeltaBatch::new();
+        b.set(0, 0, 1.0); // in bounds...
+        b.set(64, 0, 1.0); // ...but this row does not exist
+        let err = reg.update("g", &b).unwrap_err().to_string();
+        assert!(err.contains("growth is refused"), "{err}");
+        assert_eq!(e.overlay_cells(), 0, "refusal leaves the entry untouched");
+    }
+
+    #[test]
+    fn replan_now_absorbs_the_overlay_and_bumps_the_epoch() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        reg.register("grid", a.clone()).unwrap();
+        let e = reg.get("grid").unwrap();
+        let uid1 = e.uid();
+
+        // rescale part of the diagonal: values change, structure does
+        // not, so the replanned matrix stays on the bit-exact DIA rail
+        let mut b = DeltaBatch::new();
+        for r in 0..64 {
+            b.set(r, r, 9.0);
+        }
+        reg.update("grid", &b).unwrap();
+        let merged = {
+            let mut patch = DeltaOverlay::new(256, 256);
+            patch.apply(&b).unwrap();
+            patch.merge_into(&a)
+        };
+
+        let epoch = reg.replan_now("grid").unwrap();
+        assert_eq!(epoch, 2);
+        assert_eq!(e.epoch(), 2);
+        assert_ne!(e.uid(), uid1, "each version gets a fresh uid");
+        assert_eq!(e.overlay_cells(), 0, "the swap absorbed the overlay");
+        assert!(e.describe().starts_with("grid v2:"), "{}", e.describe());
+        assert!(e.kernel_name().starts_with("dia"), "{}", e.kernel_name());
+        assert_eq!(e.retired_count(), 0, "no batch was pinned across the swap");
+
+        let x: Vec<f32> = (0..256).map(|i| ((i * 5 + 1) % 9) as f32 - 4.0).collect();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; 256];
+        merged.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn drift_trip_reports_without_queueing_when_auto_replan_is_off() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let backends: Vec<Arc<dyn Backend>> = vec![Arc::new(CpuBackend::new(pool.clone()))];
+        let cfg = LiveConfig { auto_replan: false, ..LiveConfig::default() };
+        let reg = MatrixRegistry::with_live_config(pool, backends, cfg);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        reg.register("grid", a).unwrap();
+
+        // 6%+ of the base nnz lands in the overlay → OverlayFraction
+        let mut b = DeltaBatch::new();
+        for r in 0..80 {
+            b.set(r, r, 3.0);
+        }
+        let report = reg.update("grid", &b).unwrap();
+        assert!(report.tripped(), "{report:?}");
+        assert!(!report.replan_queued, "auto replan is off");
+        assert_eq!(reg.get("grid").unwrap().epoch(), 1, "nothing replanned");
+
+        // explicit replan clears the drift state
+        assert_eq!(reg.replan_now("grid").unwrap(), 2);
+        let after = reg.check_drift("grid").unwrap();
+        assert_eq!(after.epoch, 2);
+        assert!(!after.tripped(), "{after:?}");
+    }
+
+    #[test]
+    fn pinned_guard_survives_a_replan_swap() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(16, 16);
+        reg.register("grid", a.clone()).unwrap();
+        let e = reg.get("grid").unwrap();
+
+        let mut b = DeltaBatch::new();
+        for r in 0..32 {
+            b.set(r, r, 4.0);
+        }
+        reg.update("grid", &b).unwrap();
+
+        // pin v1 (with its overlay), then swap v2 in under it
+        let guard = e.pin();
+        assert_eq!(guard.epoch(), 1);
+        assert_eq!(reg.replan_now("grid").unwrap(), 2);
+        assert_eq!(e.retired_count(), 1, "v1 is retired, not torn down");
+
+        // the pinned guard still answers — for the matrix as of its pin
+        let merged = {
+            let mut patch = DeltaOverlay::new(256, 256);
+            patch.apply(&b).unwrap();
+            patch.merge_into(&a)
+        };
+        let x: Vec<f32> = (0..256).map(|i| ((i * 3 + 2) % 13) as f32 - 6.0).collect();
+        let y_old = guard.dispatch(BackendId::Cpu, &x).unwrap();
+        let y_new = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; 256];
+        merged.spmv_ref(&x, &mut y_ref);
+        for ((u, v), w) in y_old.iter().zip(&y_new).zip(&y_ref) {
+            assert_eq!(u.to_bits(), w.to_bits(), "old version + overlay is exact");
+            assert_eq!(v.to_bits(), w.to_bits(), "new version is exact");
+        }
+
+        drop(guard);
+        assert_eq!(e.retired_count(), 0, "drained versions are pruned");
+    }
+
+    #[test]
+    fn sharded_entries_replan_at_the_same_shard_count() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let reg = MatrixRegistry::new(pool, None);
+        let a = gen::grid2d_5pt::<f32>(32, 32);
+        reg.register_sharded("grid", a.clone(), 3).unwrap();
+        let e = reg.get("grid").unwrap();
+        let mut b = DeltaBatch::new();
+        for r in 0..100 {
+            b.set(r, r, 2.5);
+        }
+        reg.update("grid", &b).unwrap();
+        let merged = {
+            let mut patch = DeltaOverlay::new(1024, 1024);
+            patch.apply(&b).unwrap();
+            patch.merge_into(&a)
+        };
+        assert_eq!(reg.replan_now("grid").unwrap(), 2);
+        assert!(e.plan().is_sharded());
+        assert!(e.kernel_name().starts_with("sharded(3"), "{}", e.kernel_name());
+        let x: Vec<f32> = (0..1024).map(|i| ((i * 3 + 1) % 7) as f32 - 3.0).collect();
+        let y = e.spmv(BackendId::Cpu, &x).unwrap();
+        let mut y_ref = vec![0f32; 1024];
+        merged.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 }

@@ -37,7 +37,7 @@ use std::time::{Duration, Instant};
 use super::backend::{Backend, BackendId};
 use super::batcher::{Batch, DynamicBatcher};
 use super::metrics::Metrics;
-use super::registry::MatrixRegistry;
+use super::registry::{MatrixEntry, MatrixRegistry};
 use super::{Request, Response};
 
 /// Server tunables. Routing carries no knob here: each batch goes to
@@ -239,6 +239,11 @@ enum LeaderMsg {
 }
 
 struct Work {
+    /// The entry the leader routed this batch against — shipped with
+    /// the batch so the worker never repeats the name lookup on the
+    /// hot path (and so routing and execution agree on *which* entry,
+    /// even if the name is re-registered mid-flight).
+    entry: Arc<MatrixEntry>,
     batch: Batch,
     resp: Vec<Sender<Response>>,
 }
@@ -264,6 +269,10 @@ impl Server {
     /// Start the leader and one worker per registered backend.
     pub fn start(registry: Arc<MatrixRegistry>, config: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
+        // wire the live path into the serving metrics: drift trips and
+        // replan swaps on this registry surface alongside the latency
+        // and throughput counters
+        registry.attach_live_metrics(&metrics);
         let inflight = Arc::new(InflightGauge::new());
         let (submit_tx, submit_rx) = mpsc::channel::<LeaderMsg>();
 
@@ -276,13 +285,12 @@ impl Server {
             }
             let (tx, rx) = mpsc::channel::<Work>();
             worker_txs.insert(id, tx);
-            let reg = registry.clone();
             let met = metrics.clone();
             let inf = inflight.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("csrk-worker-{id:?}"))
-                    .spawn(move || backend_worker(rx, reg, met, inf, id))
+                    .spawn(move || backend_worker(rx, met, inf, id))
                     .expect("spawn backend worker"),
             );
         }
@@ -486,8 +494,8 @@ fn leader_loop(
         // error — no worker can be presumed to exist for them (the
         // backend set is open), and a guessed worker would only mask
         // the real diagnostic.
-        let device = match registry.get(&batch.matrix) {
-            Ok(e) => e.route(batch.device),
+        let entry = match registry.get(&batch.matrix) {
+            Ok(e) => e,
             Err(err) => {
                 let msg = err.to_string();
                 let nominal = batch.device.unwrap_or(BackendId::Cpu);
@@ -497,16 +505,17 @@ fn leader_loop(
                 return;
             }
         };
+        let device = entry.route(batch.device);
         match worker_txs.get(&device) {
             Some(tx) => {
-                if let Err(send_err) = tx.send(Work { batch, resp }) {
+                if let Err(send_err) = tx.send(Work { entry, batch, resp }) {
                     // The worker hung up (panicked or exited). The
                     // unsent Work comes back inside the SendError —
                     // recover it and answer every member with an error.
                     // Silently dropping it would drop the responders
                     // too, turning each client's recv into a channel
                     // error instead of a served error Response.
-                    let Work { batch, resp } = send_err.0;
+                    let Work { batch, resp, .. } = send_err.0;
                     let msg = format!("{device:?} worker unavailable");
                     for (member, tx) in batch.requests.into_iter().zip(resp) {
                         respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
@@ -560,17 +569,22 @@ fn leader_loop(
 }
 
 /// Executes batches for one backend: the whole batch runs as **one**
-/// multi-RHS dispatch through the entry's binding, so the matrix
-/// streams from memory once per batch rather than once per request;
-/// results scatter back to the per-request response channels
-/// afterwards. Requests whose vector length doesn't match the matrix
-/// are answered individually with an error and excluded from the block,
-/// so one malformed request cannot fail its batchmates. Successful
-/// dispatches feed the observed per-vector cost back into routing
-/// (metrics EWMA → entry table) before the responses go out.
+/// multi-RHS dispatch through a pinned [`LiveGuard`] snapshot of the
+/// entry, so the matrix streams from memory once per batch rather than
+/// once per request; results scatter back to the per-request response
+/// channels afterwards. The pin is the zero-downtime contract with the
+/// live path: a replan swap mid-batch retires — never tears down — the
+/// plan version this batch executes on, and the whole batch answers
+/// for the merged matrix as of the pin. Requests whose vector length
+/// doesn't match the matrix are answered individually with an error
+/// and excluded from the block, so one malformed request cannot fail
+/// its batchmates. Successful dispatches feed the observed per-vector
+/// cost back into routing (metrics EWMA → entry table) before the
+/// responses go out.
+///
+/// [`LiveGuard`]: crate::coordinator::registry::LiveGuard
 fn backend_worker(
     rx: Receiver<Work>,
-    registry: Arc<MatrixRegistry>,
     metrics: Arc<Metrics>,
     inflight: Arc<InflightGauge>,
     device: BackendId,
@@ -580,24 +594,14 @@ fn backend_worker(
         // respond below or returned by the guard if a panicking
         // dispatch unwinds the worker mid-batch
         let mut slots = BatchSlots::new(&inflight, work.batch.requests.len());
-        let entry = match registry.get(&work.batch.matrix) {
-            Ok(e) => e,
-            Err(e) => {
-                let msg = e.to_string();
-                for (member, tx) in work.batch.requests.into_iter().zip(work.resp) {
-                    respond(member, tx, Err(msg.clone()), &metrics, &inflight, device, 0.0);
-                    slots.settle();
-                }
-                continue;
-            }
-        };
+        let Work { entry, batch, resp } = work;
         // Partition exactly once on the well-formedness predicate:
         // malformed requests are answered immediately with their own
         // diagnostic, and the block dispatch (plus the result zip
         // below) sees only the well-formed remainder — results can
         // never pair up with the wrong request.
         let mut valid: Vec<((Request, Instant), Sender<Response>)> = Vec::new();
-        for (member, tx) in work.batch.requests.into_iter().zip(work.resp) {
+        for (member, tx) in batch.requests.into_iter().zip(resp) {
             if member.0.x.len() == entry.ncols {
                 valid.push((member, tx));
             } else {
@@ -608,20 +612,25 @@ fn backend_worker(
         }
         let xs: Vec<&[f32]> = valid.iter().map(|((r, _), _)| r.x.as_slice()).collect();
         let t0 = Instant::now();
-        let dispatched = entry
-            .binding(device)
-            .and_then(|b| b.spmv_multi(&xs).map(|ys| (ys, b.self_timed_cost())));
+        // pin the serving state once for the whole batch: version
+        // (bindings + routing), base matrix, and delta overlay all
+        // snapshot together, and the version's inflight count holds it
+        // alive across any concurrent replan swap
+        let guard = entry.pin();
+        let dispatched = guard.dispatch_multi(device, &xs);
         match dispatched {
             Ok((ys, self_cost)) => {
                 debug_assert_eq!(ys.len(), valid.len());
                 if !xs.is_empty() {
                     // close the cost-correction loop before responding,
-                    // so the flip is visible once a client sees a reply
+                    // so the flip is visible once a client sees a reply.
+                    // The EWMA keys on the pinned version's uid: after a
+                    // swap, observations of the new plan reseed instead
+                    // of blending into the old plan's estimate.
                     let per_vec = self_cost
                         .unwrap_or_else(|| t0.elapsed().as_secs_f64() / xs.len() as f64);
-                    let ewma =
-                        metrics.observe_device(&work.batch.matrix, entry.uid(), device, per_vec);
-                    entry.correct_route(device, ewma);
+                    let ewma = metrics.observe_device(&batch.matrix, guard.uid(), device, per_vec);
+                    guard.correct_route(device, ewma);
                 }
                 for (y, (member, tx)) in ys.into_iter().zip(valid) {
                     respond(member, tx, Ok(y), &metrics, &inflight, device, entry.flops());
@@ -764,7 +773,8 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let registry = Arc::new(MatrixRegistry::new(pool, None));
         let a = gen::power_law::<f32>(400, 8, 1.0, 0x1D);
-        let entry = registry.register("hubs", a.clone()).unwrap();
+        let id = registry.register("hubs", a.clone()).unwrap();
+        let entry = registry.get_id(id).unwrap();
         assert!(
             !entry.kernel_name().starts_with("csr2"),
             "planner must not pick CSR-2 for {}",

@@ -25,6 +25,10 @@
 //!   plus raw CSR arrays into a ready composite (reorder, split, leaf
 //!   kernels via [`build_part_kernel`]) plus the per-part padded
 //!   exports accelerator backends (`coordinator::backend`) bind.
+//! * [`overlay`] — [`OverlayExec`]: an inner kernel composed with a
+//!   live-matrix delta overlay (`sparse::delta`) — clean rows run the
+//!   inner kernel, dirty rows are re-resolved from the merged view,
+//!   bit-exact vs. a from-scratch rebuild on the bit-exact rails.
 //!
 //! All parallel kernels share the crate's persistent
 //! [`ThreadPool`](crate::util::ThreadPool) and write disjoint row ranges,
@@ -81,6 +85,7 @@ pub mod csrk;
 pub mod dia;
 pub mod ell;
 pub mod factory;
+pub mod overlay;
 pub mod sellcs;
 
 pub use bcsr::BcsrKernel;
@@ -92,6 +97,7 @@ pub use csrk::{Csr2Kernel, Csr3Kernel};
 pub use dia::DiaKernel;
 pub use ell::EllKernel;
 pub use factory::{build_execution, build_part_kernel, build_part_kernel_prec, BuiltExecution};
+pub use overlay::OverlayExec;
 pub use sellcs::SellCsKernel;
 
 use crate::sparse::{Scalar, ValuePrecision};

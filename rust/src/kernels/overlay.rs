@@ -1,0 +1,151 @@
+//! Overlay-aware execution: an [`SpMv`] wrapper that runs an inner
+//! kernel built from a **base** matrix, then re-resolves the dirty rows
+//! from a [`DeltaOverlay`] — the execution half of the live-matrix
+//! path (`coordinator::live`).
+//!
+//! The wrapper is correct for *any* inner kernel (clean rows carry the
+//! inner kernel's own accuracy; dirty rows are recomputed exactly from
+//! the merged data), and **bit-identical** to a from-scratch rebuild of
+//! the merged CSR whenever the inner kernel's row outputs match
+//! [`Csr::spmv_ref`] bit-for-bit (CsrParallel, DIA, the unreordered
+//! rails — see the contract in [`crate::sparse::delta`]).
+
+use std::sync::Arc;
+
+use crate::sparse::{Csr, DeltaOverlay, Scalar};
+
+use super::SpMv;
+
+/// An inner kernel (built from `base`) composed with a delta overlay:
+/// `spmv` runs the inner kernel, then patches every dirty row from the
+/// merged row data. Holds its own `Arc` snapshots, so a served batch
+/// keeps a consistent (base, patch) pair even while the live path swaps
+/// in new versions.
+pub struct OverlayExec<T: Scalar> {
+    inner: Arc<dyn SpMv<T>>,
+    base: Arc<Csr<T>>,
+    patch: Arc<DeltaOverlay<T>>,
+    flops: f64,
+}
+
+impl<T: Scalar> OverlayExec<T> {
+    /// Wrap `inner` (built from `base`) with `patch`. Panics on
+    /// dimension mismatch — the overlay addresses base coordinates.
+    pub fn new(inner: Arc<dyn SpMv<T>>, base: Arc<Csr<T>>, patch: Arc<DeltaOverlay<T>>) -> Self {
+        assert_eq!(inner.nrows(), base.nrows(), "inner/base row mismatch");
+        assert_eq!(inner.ncols(), base.ncols(), "inner/base col mismatch");
+        assert_eq!(patch.nrows(), base.nrows(), "patch/base row mismatch");
+        assert_eq!(patch.ncols(), base.ncols(), "patch/base col mismatch");
+        let flops = 2.0 * patch.merged_nnz(&base) as f64;
+        OverlayExec { inner, base, patch, flops }
+    }
+
+    /// The number of overlaid cells this wrapper patches.
+    pub fn overlay_cells(&self) -> usize {
+        self.patch.len()
+    }
+}
+
+impl<T: Scalar> SpMv<T> for OverlayExec<T> {
+    fn name(&self) -> String {
+        format!("overlay({}, +{} cells)", self.inner.name(), self.patch.len())
+    }
+
+    fn spmv(&self, x: &[T], y: &mut [T]) {
+        self.inner.spmv(x, y);
+        self.patch.patch_y(&self.base, x, y);
+    }
+
+    fn spmv_multi(&self, x: &[T], y: &mut [T], nvec: usize) {
+        self.inner.spmv_multi(x, y, nvec);
+        self.patch.patch_block(&self.base, x, y, nvec);
+    }
+
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.inner.ncols()
+    }
+
+    fn flops(&self) -> f64 {
+        self.flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{pack_block, unpack_block, CsrParallel};
+    use crate::sparse::{gen, DeltaBatch};
+    use crate::util::ThreadPool;
+
+    #[test]
+    fn overlay_exec_is_bit_exact_vs_merged_rebuild() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let base = Arc::new(gen::grid2d_5pt::<f32>(8, 8));
+        let n = base.nrows();
+        let mut patch = DeltaOverlay::new(n, n);
+        let mut b = DeltaBatch::new();
+        for r in (0..n).step_by(5) {
+            b.set(r, (r * 7 + 2) % n, 1.5).remove(r, r);
+        }
+        patch.apply(&b).unwrap();
+        let merged = patch.merge_into(&base);
+
+        let inner: Arc<dyn SpMv<f32>> =
+            Arc::new(CsrParallel::new((*base).clone(), pool.clone()));
+        let exec = OverlayExec::new(inner, base.clone(), Arc::new(patch));
+        assert!(exec.name().starts_with("overlay(csr-parallel"), "{}", exec.name());
+        assert_eq!(exec.flops(), 2.0 * merged.nnz() as f64);
+
+        let x: Vec<f32> = (0..n).map(|i| ((i * 11 + 3) % 13) as f32 - 6.0).collect();
+        let mut y = vec![0f32; n];
+        exec.spmv(&x, &mut y);
+        let mut y_ref = vec![0f32; n];
+        merged.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits(), "CsrParallel + patch ≡ merged spmv_ref");
+        }
+
+        // blocked path, same contract per vector
+        let nvec = 4;
+        let xs: Vec<Vec<f32>> = (0..nvec)
+            .map(|j| (0..n).map(|i| ((i * 3 + j * 7 + 1) % 9) as f32 - 4.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xb = pack_block(&refs);
+        let mut yb = vec![0f32; n * nvec];
+        exec.spmv_multi(&xb, &mut yb, nvec);
+        for (j, yj) in unpack_block(&yb, nvec).iter().enumerate() {
+            let mut yr = vec![0f32; n];
+            merged.spmv_ref(&xs[j], &mut yr);
+            for (u, v) in yj.iter().zip(&yr) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_overlay_is_the_inner_kernel() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let base = Arc::new(gen::grid2d_5pt::<f32>(5, 5));
+        let n = base.nrows();
+        let inner: Arc<dyn SpMv<f32>> =
+            Arc::new(CsrParallel::new((*base).clone(), pool));
+        let exec = OverlayExec::new(
+            inner.clone(),
+            base.clone(),
+            Arc::new(DeltaOverlay::new(n, n)),
+        );
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let mut y = vec![0f32; n];
+        let mut y0 = vec![0f32; n];
+        exec.spmv(&x, &mut y);
+        inner.spmv(&x, &mut y0);
+        for (u, v) in y.iter().zip(&y0) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+}

@@ -137,7 +137,8 @@ fn cmd_serve(args: &Args) {
     let registry = Arc::new(MatrixRegistry::new(pool, runtime));
     let (name, a) = load(args);
     let ncols = a.ncols();
-    let entry = registry.register(&name, a).expect("register");
+    let id = registry.register(&name, a).expect("register");
+    let entry = registry.get_id(id).expect("registered entry");
     println!("{}", entry.describe());
     let server = Server::start(registry, ServerConfig::default());
     // `--pjrt` pins every request to the PJRT path; the default routes

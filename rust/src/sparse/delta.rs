@@ -1,0 +1,450 @@
+//! Structural delta overlay for **live matrices**: a COO-style patch
+//! over an immutable base [`Csr`] that absorbs append / remove /
+//! set-value nonzero edits without rebuilding the format.
+//!
+//! The live-matrix path (`coordinator::live`) keeps every registered
+//! plan immutable and layers a [`DeltaOverlay`] on top: serving reads
+//! the base through whatever kernel the plan built, then re-resolves
+//! the **dirty rows** (rows with at least one overlaid cell) from the
+//! merged view. When drift trips a replan, [`DeltaOverlay::merge_into`]
+//! materializes the merged CSR once and the overlay resets to empty.
+//!
+//! Semantics are **cell-wise last-write-wins**: a [`DeltaOp::Set`] is
+//! insert-or-overwrite (appending a new nonzero and editing an existing
+//! value are the same operation), a [`DeltaOp::Remove`] guarantees the
+//! cell is absent from the merged matrix regardless of whether the base
+//! holds it. **Dimension growth is refused**: every op must address a
+//! cell inside the base's `nrows × ncols`, and a batch containing any
+//! out-of-bounds op is rejected *atomically* — the overlay is
+//! unchanged. (Growing a matrix changes every plan invariant at once —
+//! vector lengths in flight, padded-export widths, shard bounds — so
+//! the policy is re-register, not update; the prop test in
+//! `tests/integration_live.rs` pins this.)
+//!
+//! # Bit-exactness contract
+//!
+//! [`DeltaOverlay::patch_y`] recomputes each dirty row serially, in
+//! ascending column order, accumulating left-to-right from zero —
+//! exactly [`Csr::spmv_ref`]'s per-row order on the merged matrix. A
+//! kernel whose clean-row output is bit-identical to `spmv_ref`
+//! (CsrParallel, DIA, the unreordered CSR-k rails) therefore stays
+//! bit-identical to the merged rebuild *through the overlay*, which is
+//! what lets the zero-downtime swap test demand bit-equal responses on
+//! both sides of a replan.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use super::{Csr, Scalar};
+
+/// One nonzero edit addressed at a base-matrix cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeltaOp<T> {
+    /// Insert-or-overwrite: the merged matrix holds `val` at
+    /// `(row, col)` whether or not the base does.
+    Set {
+        /// Row index (original coordinates).
+        row: u32,
+        /// Column index (original coordinates).
+        col: u32,
+        /// New value.
+        val: T,
+    },
+    /// Ensure-absent: the merged matrix holds no entry at `(row, col)`.
+    /// Removing a cell the base never held is a no-op (recorded as a
+    /// tombstone so later `Set`s in the same batch still win).
+    Remove {
+        /// Row index (original coordinates).
+        row: u32,
+        /// Column index (original coordinates).
+        col: u32,
+    },
+}
+
+impl<T> DeltaOp<T> {
+    fn cell(&self) -> (u32, u32) {
+        match *self {
+            DeltaOp::Set { row, col, .. } => (row, col),
+            DeltaOp::Remove { row, col } => (row, col),
+        }
+    }
+}
+
+/// An ordered batch of nonzero edits, applied atomically by
+/// [`DeltaOverlay::apply`] (and by `MatrixRegistry::update` on the
+/// serving path). Later ops in one batch override earlier ops on the
+/// same cell.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaBatch<T> {
+    ops: Vec<DeltaOp<T>>,
+}
+
+impl<T: Scalar> DeltaBatch<T> {
+    /// An empty batch.
+    pub fn new() -> Self {
+        DeltaBatch { ops: Vec::new() }
+    }
+
+    /// Append an insert-or-overwrite of `(row, col) = val`.
+    pub fn set(&mut self, row: usize, col: usize, val: T) -> &mut Self {
+        self.ops.push(DeltaOp::Set { row: row as u32, col: col as u32, val });
+        self
+    }
+
+    /// Append an ensure-absent of `(row, col)`.
+    pub fn remove(&mut self, row: usize, col: usize) -> &mut Self {
+        self.ops.push(DeltaOp::Remove { row: row as u32, col: col as u32 });
+        self
+    }
+
+    /// Number of ops in the batch.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Is the batch empty?
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The ops, in application order.
+    pub fn ops(&self) -> &[DeltaOp<T>] {
+        &self.ops
+    }
+}
+
+/// The COO-style overlay: a sorted map of overlaid cells —
+/// `Some(v)` = the merged matrix holds `v` here, `None` = the merged
+/// matrix holds nothing here (a remove tombstone) — plus the set of
+/// dirty rows for the patch/merge walks. Cloning is how the live path
+/// takes copy-on-write snapshots: the serving side pins an
+/// `Arc<DeltaOverlay>`, the mutate side clones, applies, and swaps.
+#[derive(Debug, Clone)]
+pub struct DeltaOverlay<T> {
+    nrows: usize,
+    ncols: usize,
+    cells: BTreeMap<(u32, u32), Option<T>>,
+    dirty: BTreeSet<u32>,
+}
+
+impl<T: Scalar> DeltaOverlay<T> {
+    /// An empty overlay over a `nrows × ncols` base.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        DeltaOverlay { nrows, ncols, cells: BTreeMap::new(), dirty: BTreeSet::new() }
+    }
+
+    /// Rows of the base this overlay patches.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Columns of the base this overlay patches.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of overlaid cells (sets + tombstones).
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Is the overlay empty (serving reads the base untouched)?
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Number of rows with at least one overlaid cell.
+    pub fn dirty_rows(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Overlay-size drift observable: overlaid cells as a fraction of
+    /// the base's nonzeros.
+    pub fn fraction_of(&self, base_nnz: usize) -> f64 {
+        self.cells.len() as f64 / base_nnz.max(1) as f64
+    }
+
+    /// Absorb one batch **atomically**: every op is bounds-checked
+    /// against the base dimensions first, and a batch containing any
+    /// out-of-bounds op (dimension growth) is refused with the overlay
+    /// unchanged.
+    pub fn apply(&mut self, batch: &DeltaBatch<T>) -> Result<()> {
+        for op in batch.ops() {
+            let (r, c) = op.cell();
+            if (r as usize) < self.nrows && (c as usize) < self.ncols {
+                continue;
+            }
+            bail!(
+                "delta op at ({r}, {c}) is outside the {}x{} base: \
+                 dimension growth is refused — re-register the matrix instead",
+                self.nrows,
+                self.ncols
+            );
+        }
+        for op in batch.ops() {
+            let (r, c) = op.cell();
+            let v = match *op {
+                DeltaOp::Set { val, .. } => Some(val),
+                DeltaOp::Remove { .. } => None,
+            };
+            self.cells.insert((r, c), v);
+            self.dirty.insert(r);
+        }
+        Ok(())
+    }
+
+    /// The merged row `r`: the base row with this overlay's cells
+    /// spliced in, columns ascending — sets overwrite or insert,
+    /// tombstones delete. Debug-asserts the base row is column-sorted
+    /// (every in-tree constructor produces sorted rows; the merge walk
+    /// requires it).
+    pub fn merged_row(&self, base: &Csr<T>, r: usize) -> (Vec<u32>, Vec<T>) {
+        let (bcols, bvals) = base.row(r);
+        debug_assert!(bcols.windows(2).all(|w| w[0] < w[1]), "base row {r} must be sorted");
+        let row = r as u32;
+        let mut cols = Vec::with_capacity(bcols.len() + 4);
+        let mut vals = Vec::with_capacity(bcols.len() + 4);
+        let mut over = self.cells.range((row, 0)..=(row, u32::MAX)).peekable();
+        let mut i = 0usize;
+        loop {
+            let oc = over.peek().map(|(k, _)| k.1);
+            let bc = bcols.get(i).copied();
+            match (bc, oc) {
+                (None, None) => break,
+                (Some(b), None) => {
+                    cols.push(b);
+                    vals.push(bvals[i]);
+                    i += 1;
+                }
+                (Some(b), Some(o)) if b < o => {
+                    cols.push(b);
+                    vals.push(bvals[i]);
+                    i += 1;
+                }
+                (Some(b), Some(o)) => {
+                    // o <= b: the overlay cell lands here; on a column
+                    // collision it shadows the base entry
+                    if b == o {
+                        i += 1;
+                    }
+                    if let Some((_, v)) = over.next() {
+                        if let Some(v) = v {
+                            cols.push(o);
+                            vals.push(*v);
+                        }
+                    }
+                }
+                (None, Some(o)) => {
+                    if let Some((_, v)) = over.next() {
+                        if let Some(v) = v {
+                            cols.push(o);
+                            vals.push(*v);
+                        }
+                    }
+                }
+            }
+        }
+        (cols, vals)
+    }
+
+    /// Materialize the merged matrix: base rows verbatim except dirty
+    /// rows, which take the overlay-spliced version. This is the
+    /// replan path's from-scratch rebuild (and the overlay-correctness
+    /// oracle).
+    pub fn merge_into(&self, base: &Csr<T>) -> Csr<T> {
+        assert_eq!(base.nrows(), self.nrows, "overlay/base row mismatch");
+        assert_eq!(base.ncols(), self.ncols, "overlay/base col mismatch");
+        let n = base.nrows();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::with_capacity(base.nnz());
+        let mut vals = Vec::with_capacity(base.nnz());
+        for r in 0..n {
+            if self.dirty.contains(&(r as u32)) {
+                let (cs, vs) = self.merged_row(base, r);
+                col_idx.extend_from_slice(&cs);
+                vals.extend_from_slice(&vs);
+            } else {
+                let (cs, vs) = base.row(r);
+                col_idx.extend_from_slice(cs);
+                vals.extend_from_slice(vs);
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr::from_parts(n, self.ncols, row_ptr, col_idx, vals)
+    }
+
+    /// Per-row nonzero counts of the merged matrix — what the drift
+    /// detector feeds back into `MatrixStats` / `sell_fill` without
+    /// materializing the merge.
+    pub fn merged_row_nnz(&self, base: &Csr<T>) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..base.nrows()).map(|i| base.row_nnz(i)).collect();
+        for &r in &self.dirty {
+            let (cs, _) = self.merged_row(base, r as usize);
+            out[r as usize] = cs.len();
+        }
+        out
+    }
+
+    /// Nonzeros of the merged matrix.
+    pub fn merged_nnz(&self, base: &Csr<T>) -> usize {
+        if self.dirty.is_empty() {
+            return base.nnz();
+        }
+        self.merged_row_nnz(base).iter().sum()
+    }
+
+    /// Patch a kernel's output in place: every dirty row of `y` is
+    /// recomputed from the merged row data, serially, in ascending
+    /// column order — [`Csr::spmv_ref`]'s exact accumulation order, so
+    /// the patched output is **bit-identical** to `spmv_ref` on the
+    /// merged matrix wherever the inner kernel was (see the module
+    /// docs' bit-exactness contract). Clean rows are untouched.
+    pub fn patch_y(&self, base: &Csr<T>, x: &[T], y: &mut [T]) {
+        for &r in &self.dirty {
+            let r = r as usize;
+            let (cs, vs) = self.merged_row(base, r);
+            let mut acc = T::zero();
+            for (c, v) in cs.iter().zip(&vs) {
+                acc += *v * x[*c as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// [`DeltaOverlay::patch_y`] for the vector-interleaved SpMM block
+    /// layout (`x[c * nvec + j]`, `y[r * nvec + j]` — see
+    /// `kernels::SpMv::spmv_multi`).
+    pub fn patch_block(&self, base: &Csr<T>, x: &[T], y: &mut [T], nvec: usize) {
+        for &r in &self.dirty {
+            let r = r as usize;
+            let (cs, vs) = self.merged_row(base, r);
+            for j in 0..nvec {
+                let mut acc = T::zero();
+                for (c, v) in cs.iter().zip(&vs) {
+                    acc += *v * x[*c as usize * nvec + j];
+                }
+                y[r * nvec + j] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn base3() -> Csr<f32> {
+        // 3x3: [ 1 . 2 ; . 3 . ; 4 . . ]
+        Csr::from_parts(3, 3, vec![0, 2, 3, 4], vec![0, 2, 1, 0], vec![1.0, 2.0, 3.0, 4.0])
+    }
+
+    #[test]
+    fn set_inserts_overwrites_and_remove_deletes() {
+        let base = base3();
+        let mut ov = DeltaOverlay::new(3, 3);
+        let mut b = DeltaBatch::new();
+        b.set(0, 1, 9.0) // insert between the two base entries
+            .set(1, 1, 5.0) // overwrite
+            .remove(2, 0) // delete a base entry
+            .remove(2, 2); // tombstone on a cell the base never held
+        ov.apply(&b).unwrap();
+        assert_eq!(ov.len(), 4);
+        assert_eq!(ov.dirty_rows(), 3);
+
+        let (c0, v0) = ov.merged_row(&base, 0);
+        assert_eq!(c0, vec![0, 1, 2]);
+        assert_eq!(v0, vec![1.0, 9.0, 2.0]);
+        let (c1, v1) = ov.merged_row(&base, 1);
+        assert_eq!(c1, vec![1]);
+        assert_eq!(v1, vec![5.0]);
+        let (c2, v2) = ov.merged_row(&base, 2);
+        assert!(c2.is_empty() && v2.is_empty());
+        assert_eq!(ov.merged_nnz(&base), 4);
+        assert_eq!(ov.merged_row_nnz(&base), vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn last_write_wins_within_and_across_batches() {
+        let base = base3();
+        let mut ov = DeltaOverlay::new(3, 3);
+        let mut b = DeltaBatch::new();
+        b.set(0, 1, 1.0).remove(0, 1).set(0, 1, 7.0);
+        ov.apply(&b).unwrap();
+        let (_, v) = ov.merged_row(&base, 0);
+        assert_eq!(v, vec![1.0, 7.0, 2.0]);
+        let mut b2 = DeltaBatch::new();
+        b2.remove(0, 1);
+        ov.apply(&b2).unwrap();
+        let (c, _) = ov.merged_row(&base, 0);
+        assert_eq!(c, vec![0, 2]);
+    }
+
+    #[test]
+    fn out_of_bounds_batch_is_refused_atomically() {
+        let mut ov = DeltaOverlay::<f32>::new(3, 3);
+        let mut b = DeltaBatch::new();
+        b.set(0, 0, 1.0).set(3, 0, 2.0); // second op grows the rows
+        let err = ov.apply(&b).unwrap_err().to_string();
+        assert!(err.contains("dimension growth is refused"), "{err}");
+        assert!(ov.is_empty(), "a refused batch must leave the overlay unchanged");
+        let mut b2 = DeltaBatch::new();
+        b2.remove(0, 5);
+        assert!(ov.apply(&b2).is_err(), "column growth refused too");
+        assert!(ov.is_empty());
+    }
+
+    #[test]
+    fn merge_matches_patched_reference_bit_exactly() {
+        let base = gen::grid2d_5pt::<f32>(9, 9);
+        let n = base.nrows();
+        let mut ov = DeltaOverlay::new(n, n);
+        let mut b = DeltaBatch::new();
+        for r in (0..n).step_by(7) {
+            b.set(r, (r * 3 + 1) % n, 0.5 + r as f32);
+            b.remove(r, r);
+        }
+        ov.apply(&b).unwrap();
+        let merged = ov.merge_into(&base);
+        assert_eq!(merged.nnz(), ov.merged_nnz(&base));
+
+        let x: Vec<f32> = (0..n).map(|i| ((i * 13 + 5) % 17) as f32 - 8.0).collect();
+        // base spmv + patch ≡ merged spmv_ref, bit for bit
+        let mut y = vec![0f32; n];
+        base.spmv_ref(&x, &mut y);
+        ov.patch_y(&base, &x, &mut y);
+        let mut y_ref = vec![0f32; n];
+        merged.spmv_ref(&x, &mut y_ref);
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn patch_block_matches_per_vector_patch() {
+        let base = gen::grid2d_5pt::<f32>(6, 6);
+        let n = base.nrows();
+        let mut ov = DeltaOverlay::new(n, n);
+        let mut b = DeltaBatch::new();
+        b.set(0, 5, 2.5).set(17, 0, -1.0).remove(17, 17);
+        ov.apply(&b).unwrap();
+        let nvec = 3;
+        let xs: Vec<Vec<f32>> = (0..nvec)
+            .map(|j| (0..n).map(|i| ((i * 7 + j * 5 + 1) % 11) as f32 - 5.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xb = crate::kernels::pack_block(&refs);
+        let mut yb = vec![0f32; n * nvec];
+        ov.patch_block(&base, &xb, &mut yb, nvec);
+        let ys = crate::kernels::unpack_block(&yb, nvec);
+        for (j, x) in xs.iter().enumerate() {
+            let mut y = vec![0f32; n];
+            ov.patch_y(&base, x, &mut y);
+            for (u, v) in ys[j].iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+}

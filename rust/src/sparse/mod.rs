@@ -27,6 +27,11 @@
 //! * [`split`] — row partitioning: row-nnz-threshold (body + hub
 //!   remainder) for hybrid plans, and N-way nnz-balanced contiguous
 //!   sharding for multi-backend scale-out plans.
+//! * [`delta`] — the live-matrix structural-update overlay: a COO-style
+//!   [`DeltaBatch`] of append/remove/set-value edits absorbed into a
+//!   [`DeltaOverlay`] that patches dirty rows over an immutable base
+//!   CSR (bit-exact vs. the merged rebuild), until drift triggers a
+//!   replan that materializes the merge.
 //! * [`value`] — the value-storage layer: [`Storage`] /
 //!   [`ValueStorage`] traits and the in-tree [`F16`] / [`Bf16`]
 //!   half-precision shims that let any format's value array shrink to
@@ -43,6 +48,7 @@ pub mod coo;
 pub mod csr;
 pub mod csr5;
 pub mod csrk;
+pub mod delta;
 pub mod dia;
 pub mod ell;
 pub mod gen;
@@ -57,6 +63,7 @@ pub use coo::Coo;
 pub use csr::Csr;
 pub use csr5::Csr5;
 pub use csrk::CsrK;
+pub use delta::{DeltaBatch, DeltaOp, DeltaOverlay};
 pub use dia::Dia;
 pub use ell::Ell;
 pub use sellcs::SellCs;

@@ -999,6 +999,35 @@ pub fn plan_sharded<T: Scalar>(
     FormatPlan::Sharded { stats, shards, costs }
 }
 
+/// Re-plan a **merged** live matrix against its prior plan — the
+/// planner half of the online replan path (`coordinator::live`).
+///
+/// The paper's selling point is that the CSR-k hierarchy is cheap to
+/// re-tune ("a model can be tuned for a device and used to select
+/// super-row and super-super-row sizes in constant time", §5), so a
+/// replan is simply a fresh run of the registration pipeline over the
+/// merged matrix: [`MatrixStats`] re-measured, `sell_autotune` re-run
+/// against the *current* row-nnz profile (the ROADMAP's online σ
+/// re-autotune — drift can flip the chosen σ, or flip SELL to CSR5 /
+/// parallel CSR entirely), [`choose_precision`]'s bit-exact gate
+/// re-evaluated over the merged values. Only the plan *topology* is
+/// carried over from `prior`: a sharded ensemble re-plans as a sharded
+/// ensemble at the same shard count (shard boundaries re-balance to
+/// the merged nnz profile), everything else re-plans through
+/// [`plan_hinted`] at the registration block hint and may change shape
+/// freely (Single ↔ Hybrid, format, σ, precision, reorder).
+pub fn replan<T: Scalar>(
+    a: &Csr<T>,
+    prior: &FormatPlan,
+    block_hint: usize,
+    available: &[DeviceKind],
+) -> FormatPlan {
+    match prior {
+        FormatPlan::Sharded { shards, .. } => plan_sharded(a, shards.len().max(1), available),
+        _ => plan_hinted(a, block_hint),
+    }
+}
+
 /// The shard kernel rule: the bit-exact subset of the irregular rail.
 /// Parallel CSR below [`CSR5_MIN_NNZ`] (descriptor machinery costs more
 /// than the skew it fixes) or when no σ window bounds the SELL fill;

@@ -121,7 +121,8 @@ fn ewma_correction_flips_routing_off_a_wrong_static_cost() {
     // clock reports 0.25 s/vector — any real CPU batch is far cheaper
     let (registry, dispatches) = fake_registry(1e-9, 0.25);
     let a = gen::grid2d_5pt::<f32>(16, 16);
-    let e = registry.register("grid", a.clone()).unwrap();
+    let id = registry.register("grid", a.clone()).unwrap();
+    let e = registry.get_id(id).unwrap();
     assert!(e.supports(BackendId::Cpu) && e.supports(BackendId::Pjrt), "{}", e.describe());
     assert_eq!(
         e.route(None),
@@ -185,7 +186,8 @@ fn ewma_correction_flips_routing_off_a_wrong_static_cost() {
 fn accurate_priors_survive_observation() {
     // fake gpu claims 10 s and "measures" 10 s; CPU stays cheapest
     let (registry, dispatches) = fake_registry(10.0, 10.0);
-    let e = registry.register("grid", gen::grid2d_5pt::<f32>(12, 12)).unwrap();
+    registry.register("grid", gen::grid2d_5pt::<f32>(12, 12)).unwrap();
+    let e = registry.get("grid").unwrap();
     assert_eq!(e.route(None), BackendId::Cpu);
     let server = Server::start(registry, ServerConfig::default());
     let x = vec![1.0f32; 144];
@@ -206,7 +208,8 @@ fn injected_backend_is_a_first_class_citizen() {
     let (registry, _) = fake_registry(1e-9, 0.5);
     assert_eq!(registry.backends().len(), 2);
     assert_eq!(registry.backends()[1].describe(), "fake-gpu");
-    let e = registry.register("hubs", gen::power_law::<f32>(500, 8, 1.0, 0xF00D)).unwrap();
+    registry.register("hubs", gen::power_law::<f32>(500, 8, 1.0, 0xF00D)).unwrap();
+    let e = registry.get("hubs").unwrap();
     // the fake claims support for every plan, including the irregular
     // one the real PJRT backend would refuse
     assert!(e.supports(BackendId::Pjrt));

@@ -24,7 +24,8 @@ fn serves_mixed_matrices_correctly() {
         mats.push(a);
     }
     let p = gen::power_law::<f32>(500, 8, 1.0, 0xF00D);
-    let e = registry.register("power-law", p.clone()).unwrap();
+    let id = registry.register("power-law", p.clone()).unwrap();
+    let e = registry.get_id(id).unwrap();
     assert!(!e.kernel_name().starts_with("csr2"), "{}", e.describe());
     mats.push(p);
     let server = Server::start(registry, ServerConfig::default());
@@ -63,7 +64,8 @@ fn pjrt_path_serves_when_artifacts_present() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = Arc::new(MatrixRegistry::new(pool, Some(Arc::new(rt))));
     let a = gen::grid2d_5pt::<f32>(30, 30);
-    let e = registry.register("g", a.clone()).unwrap();
+    registry.register("g", a.clone()).unwrap();
+    let e = registry.get("g").unwrap();
     assert!(e.supports(DeviceKind::Pjrt), "grid must bind a PJRT bucket");
 
     let server = Server::start(registry, ServerConfig::default());
@@ -97,7 +99,8 @@ fn cpu_and_pjrt_agree_through_registry() {
     let pool = Arc::new(ThreadPool::new(1));
     let registry = MatrixRegistry::new(pool, Some(Arc::new(rt)));
     let a = gen::triangular_grid::<f32>(20, 20);
-    let e = registry.register("t", a).unwrap();
+    registry.register("t", a).unwrap();
+    let e = registry.get("t").unwrap();
     let x: Vec<f32> = (0..e.ncols).map(|i| (i as f32 * 0.01).cos()).collect();
     let y_cpu = e.spmv(DeviceKind::Cpu, &x).unwrap();
     let y_pjrt = e.spmv(DeviceKind::Pjrt, &x).unwrap();

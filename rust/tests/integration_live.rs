@@ -1,0 +1,442 @@
+//! Live-matrix subsystem integration — delta updates, drift detection,
+//! and zero-downtime online replanning end to end:
+//!
+//! * the acceptance row: a server hammered with requests while delta
+//!   batches stream in; the overlay-fraction signal trips, a background
+//!   replan swaps the plan version (epoch bump) **while requests are in
+//!   flight**, and every response across the swap is bit-identical to
+//!   the reference on one of the successively-merged matrices — zero
+//!   downtime, zero errors, zero approximations;
+//! * drift-driven re-autotune: a SELL-C-σ matrix whose row-length
+//!   profile drifts until the planner's σ choice flips on replan, then
+//!   drifts regular until the *format* flips off SELL entirely;
+//! * a property test pinning the overlay contract: base CSR + any
+//!   `DeltaBatch` sequence through the overlay wrapper ≡ a bit-identical
+//!   from-scratch CSR rebuild, for `spmv` and blocked `spmv_multi`,
+//!   with dimension growth refused atomically.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use csrk::coordinator::{
+    Backend, BackendId, CpuBackend, DriftSignal, LiveConfig, MatrixRegistry, Server, ServerConfig,
+};
+use csrk::kernels::{pack_block, unpack_block, CsrParallel, OverlayExec, SpMv};
+use csrk::sparse::{Coo, Csr, DeltaBatch, DeltaOverlay};
+use csrk::tuning::planner::{FormatPlan, PlannedKernel, SELL_CPU_C};
+use csrk::util::{propcheck, ThreadPool};
+
+fn bits_of(y: &[f32]) -> Vec<u32> {
+    y.iter().map(|v| v.to_bits()).collect()
+}
+
+fn spmv_ref_bits(a: &Csr<f32>, x: &[f32]) -> Vec<u32> {
+    let mut y = vec![0f32; a.nrows()];
+    a.spmv_ref(x, &mut y);
+    bits_of(&y)
+}
+
+/// The hammer fixture: 64 rows, row `i` holds `(i % 13) + 1` entries —
+/// variance ≈ 13.8 > the §6 bound (irregular), nnz = 442 < the CSR5
+/// cutoff, too small for a hub split — so the plan is parallel CSR,
+/// which accumulates each row in exactly `spmv_ref`'s order (bit-exact
+/// serving). The `0.001` offset keeps values off the f16/bf16 grids so
+/// the precision auto-gate stays at f32.
+fn hammer_matrix() -> Csr<f32> {
+    let n = 64usize;
+    let mut c = Coo::<f32>::new(n, n);
+    for i in 0..n {
+        let k = (i % 13) + 1;
+        for j in 0..k {
+            c.push(i, (i + 7 * j) % n, 0.001 + (1 + ((i * 3 + j) % 5)) as f32);
+        }
+    }
+    c.to_csr()
+}
+
+/// The acceptance row (tentpole): requests continuously in flight while
+/// delta batches stream in from another thread; the overlay-fraction
+/// threshold trips mid-stream, the background replan swaps in a new
+/// plan version, and **every** response across the swap bit-equals
+/// `spmv_ref` on one of the nine successively-merged snapshots. After
+/// the dust settles the epoch is exactly 2, the overlay is absorbed,
+/// the metrics carry the trip + replan, and no retired version leaks.
+#[test]
+fn serving_stays_bit_exact_across_a_live_replan_swap() {
+    let pool = Arc::new(ThreadPool::new(3));
+    let backends: Vec<Arc<dyn Backend>> =
+        vec![Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0))];
+    // isolate the overlay-fraction signal: the routing-divergence
+    // signal compares real wall time against the roofline prior, which
+    // is nondeterministic on a matrix this small
+    let cfg = LiveConfig { routing_divergence: 1e18, ..LiveConfig::default() };
+    let registry = Arc::new(MatrixRegistry::with_live_config(pool, backends, cfg));
+
+    let a = hammer_matrix();
+    registry.register("live", a.clone()).unwrap();
+    let entry = registry.get("live").unwrap();
+    assert_eq!(entry.epoch(), 1);
+    assert!(entry.kernel_name().starts_with("csr-parallel"), "{}", entry.kernel_name());
+
+    // eight 4-op batches; cells (2g mod 64, 5g+1 mod 64) land each on a
+    // distinct row, so the overlay holds 4k cells after batch k and the
+    // 5 % fraction threshold trips at batch 6 (24/442 ≈ 5.4 %)
+    let mut batches: Vec<DeltaBatch<f32>> = Vec::new();
+    for s in 0..8 {
+        let mut b = DeltaBatch::new();
+        for t in 0..4usize {
+            let g = s * 4 + t;
+            b.set((g * 2) % 64, (g * 5 + 1) % 64, 2.001 + g as f32 * 0.25);
+        }
+        batches.push(b);
+    }
+
+    // the nine model snapshots: base, then base ⊕ batches[..=k]
+    let x: Vec<f32> = (0..64).map(|i| ((i * 5 + 3) % 11) as f32 / 11.0 - 0.5).collect();
+    let mut model = a.clone();
+    let mut snapshots: Vec<Vec<u32>> = vec![spmv_ref_bits(&model, &x)];
+    for b in &batches {
+        let mut ov = DeltaOverlay::<f32>::new(64, 64);
+        ov.apply(b).unwrap();
+        model = ov.merge_into(&model);
+        snapshots.push(spmv_ref_bits(&model, &x));
+    }
+    let final_bits = snapshots.last().unwrap().clone();
+    let snapshots: HashSet<Vec<u32>> = snapshots.into_iter().collect();
+
+    let server =
+        Server::start(Arc::clone(&registry), ServerConfig { max_batch: 4, ..Default::default() });
+
+    // updater thread: stream the batches in, then wait for the
+    // background replan to land (the server keeps its own handle on the
+    // registry; `Arc<MatrixRegistry>` is the shared mutation surface)
+    let done = Arc::new(AtomicBool::new(false));
+    let updater = {
+        let reg = Arc::clone(&registry);
+        let ent = Arc::clone(&entry);
+        let done = Arc::clone(&done);
+        let batches = batches.clone();
+        thread::spawn(move || {
+            for b in &batches {
+                reg.update("live", b).expect("delta update");
+                thread::sleep(Duration::from_millis(2));
+            }
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while ent.epoch() < 2 && Instant::now() < deadline {
+                thread::sleep(Duration::from_millis(2));
+            }
+            done.store(true, Ordering::Release);
+        })
+    };
+
+    // main thread: keep four requests in flight the whole time; every
+    // response must be Ok and bit-equal one of the merged snapshots
+    // (which snapshot depends on where the batch interleaved — the
+    // replan itself rebases base+overlay without changing the merged
+    // view, so the swap is invisible in the numerics)
+    let mut outstanding = VecDeque::new();
+    let mut served = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let check = |resp: csrk::coordinator::Response| {
+        let y = resp.result.expect("zero errors across the swap");
+        assert!(
+            snapshots.contains(&bits_of(&y)),
+            "response must bit-equal a merged snapshot (epoch swap leaked a torn state)"
+        );
+    };
+    while !done.load(Ordering::Acquire) {
+        assert!(Instant::now() < deadline, "updater never finished — replan stuck?");
+        while outstanding.len() < 4 {
+            outstanding.push_back(server.submit("live", x.clone()).1);
+        }
+        check(outstanding.pop_front().unwrap().recv().expect("server alive"));
+        served += 1;
+    }
+    for rx in outstanding {
+        check(rx.recv().expect("server alive"));
+        served += 1;
+    }
+    updater.join().unwrap();
+    assert!(served >= 8, "hammer must overlap the update stream: served {served}");
+
+    // exactly one replan: the trip at batch 6 queues it; later batches
+    // see the pending flag (or the already-absorbed overlay) and don't
+    assert_eq!(entry.epoch(), 2, "{}", entry.describe());
+    assert!(entry.describe().starts_with("live v2:"), "{}", entry.describe());
+    assert_eq!(entry.overlay_cells(), 0, "replan must absorb the overlay into the base");
+
+    // post-swap serving lands on the fully-merged matrix, still exact
+    let resp = server.call("live", x.clone());
+    assert_eq!(bits_of(&resp.result.expect("post-swap serve")), final_bits);
+
+    // the lifecycle reached the metrics (the worker records the replan
+    // just after the epoch bump — poll briefly for the ordering)
+    let metrics = server.metrics();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while metrics.plan_epoch("live") < 2 {
+        assert!(Instant::now() < deadline, "replan epoch never reached the metrics");
+        thread::sleep(Duration::from_millis(2));
+    }
+    let (trips, replans) = metrics.drift_counts("live");
+    assert!(trips >= 1, "the overlay-fraction trip must be recorded");
+    assert_eq!(replans, 1, "exactly one background replan");
+
+    // retired versions drain once every in-flight guard is dropped
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while entry.retired_count() > 0 {
+        assert!(Instant::now() < deadline, "retired plan version leaked (inflight never drained)");
+        thread::sleep(Duration::from_millis(1));
+    }
+    server.shutdown();
+}
+
+fn sell_val(r: usize, j: usize) -> f32 {
+    // off the f16/bf16 grids → the precision auto-gate stays f32
+    0.201 + ((r * 3 + j * 7) % 5) as f32
+}
+
+/// The σ-drift fixture: 512 rows in 32-row windows, 12 long rows (20
+/// entries) then 20 short rows (4 entries) per window. Exact SELL fill
+/// ratios at C = 8: β(σ=8) = β(σ=32) = 1.2 > 1.15 but β(σ=128) = 1.0,
+/// so the registration-time autotune must pick σ = 128. Columns are
+/// `(5r + 23j) mod 512` — scattered, so no diagonal ever fills and the
+/// DIA rail provably cannot capture the drifted-regular phase.
+fn graded_sell_matrix() -> Csr<f32> {
+    let n = 512usize;
+    let mut c = Coo::<f32>::new(n, n);
+    for r in 0..n {
+        let k = if r % 32 < 12 { 20 } else { 4 };
+        for j in 0..k {
+            c.push(r, (5 * r + 23 * j) % n, sell_val(r, j));
+        }
+    }
+    c.to_csr()
+}
+
+/// Satellite: online σ re-autotune. Phase 1 grows four short rows per
+/// window to the long profile — the merged layout is uniform inside
+/// 8-row windows, so replan flips σ 128 → 8 (still SELL). Phase 2
+/// shrinks every long row to the short profile — the merged matrix is
+/// perfectly regular and the *format* flips off SELL to the CSR-2 rail.
+/// Serving is checked against the merged reference at every stage,
+/// bit-exact while the kernel accumulates in `spmv_ref` order.
+#[test]
+fn drift_reautotunes_sigma_then_flips_format_on_replan() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let backends: Vec<Arc<dyn Backend>> =
+        vec![Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0))];
+    // drive replans by hand so each phase's plan can be inspected
+    let cfg = LiveConfig { auto_replan: false, ..LiveConfig::default() };
+    let registry = MatrixRegistry::with_live_config(pool, backends, cfg);
+
+    let a = graded_sell_matrix();
+    registry.register("graded", a.clone()).unwrap();
+    let e = registry.get("graded").unwrap();
+    match e.plan() {
+        FormatPlan::Single { kernel, .. } => {
+            assert_eq!(
+                kernel,
+                PlannedKernel::SellCs { c: SELL_CPU_C, sigma: 128 },
+                "12/32 long rows per window need the 16C sort window"
+            );
+        }
+        other => panic!("expected a SELL single plan: {}", other.summary()),
+    }
+
+    let x: Vec<f32> = (0..512).map(|i| ((i * 7 + 3) % 13) as f32 / 13.0 - 0.5).collect();
+
+    // ---- phase 1: four short rows per window grow to the long profile
+    let mut grow = DeltaBatch::new();
+    for w in 0..16usize {
+        for p in 12..16usize {
+            let r = w * 32 + p;
+            for j in 4..20usize {
+                grow.set(r, (5 * r + 23 * j) % 512, sell_val(r, j));
+            }
+        }
+    }
+    let report = registry.update("graded", &grow).unwrap();
+    assert!(report.tripped(), "20 % overlay must trip the fraction signal");
+    assert!(report.signals.iter().any(|s| matches!(s, DriftSignal::OverlayFraction { .. })));
+    assert!(!report.replan_queued, "auto_replan off must leave the queue alone");
+    assert_eq!(e.epoch(), 1, "no silent replan with auto_replan off");
+
+    // serving through the overlay is already exact *before* the replan
+    let merged1 = {
+        let mut ov = DeltaOverlay::<f32>::new(512, 512);
+        ov.apply(&grow).unwrap();
+        ov.merge_into(&a)
+    };
+    let y = e.spmv(BackendId::Cpu, &x).unwrap();
+    assert_eq!(bits_of(&y), spmv_ref_bits(&merged1, &x), "overlay-patched SELL serve");
+
+    assert_eq!(registry.replan_now("graded").unwrap(), 2);
+    match e.plan() {
+        FormatPlan::Single { kernel, .. } => {
+            assert_eq!(
+                kernel,
+                PlannedKernel::SellCs { c: SELL_CPU_C, sigma: SELL_CPU_C },
+                "uniform 8-row windows re-autotune to the minimal sort window"
+            );
+        }
+        other => panic!("replan must stay on the SELL rail: {}", other.summary()),
+    }
+    assert_eq!(e.overlay_cells(), 0);
+    let y = e.spmv(BackendId::Cpu, &x).unwrap();
+    assert_eq!(bits_of(&y), spmv_ref_bits(&merged1, &x), "post-replan SELL serve");
+
+    // ---- phase 2: every long row shrinks back to the short profile
+    let mut shrink = DeltaBatch::new();
+    for r in 0..512usize {
+        if r % 32 < 16 {
+            for j in 4..20usize {
+                shrink.remove(r, (5 * r + 23 * j) % 512);
+            }
+        }
+    }
+    let report = registry.update("graded", &shrink).unwrap();
+    assert!(report.tripped());
+    let merged2 = {
+        let mut ov = DeltaOverlay::<f32>::new(512, 512);
+        ov.apply(&shrink).unwrap();
+        ov.merge_into(&merged1)
+    };
+    assert_eq!(registry.replan_now("graded").unwrap(), 3);
+    assert!(
+        e.kernel_name().starts_with("csr2"),
+        "a uniform 4-entry profile must leave SELL for the regular rail: {}",
+        e.describe()
+    );
+    // CSR-2 repacks rows, so compare with a tolerance, not bits
+    let y = e.spmv(BackendId::Cpu, &x).unwrap();
+    let mut y_ref = vec![0f32; 512];
+    merged2.spmv_ref(&x, &mut y_ref);
+    for (i, (u, v)) in y.iter().zip(&y_ref).enumerate() {
+        assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "row {i}: {u} vs {v}");
+    }
+}
+
+/// Satellite: the pinned growth policy at the registry surface — a
+/// batch reaching outside the registered shape is refused atomically,
+/// leaving the overlay, the epoch, and the served numerics untouched.
+#[test]
+fn registry_update_refuses_dimension_growth() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let registry = MatrixRegistry::new(pool, None);
+    let a = hammer_matrix();
+    registry.register("pinned", a.clone()).unwrap();
+    let e = registry.get("pinned").unwrap();
+
+    let mut bad = DeltaBatch::new();
+    bad.set(1, 1, 3.5).set(64, 0, 1.0); // row 64 of a 64-row base
+    let err = registry.update("pinned", &bad).unwrap_err().to_string();
+    assert!(err.contains("dimension growth is refused"), "{err}");
+    assert_eq!(e.overlay_cells(), 0, "refused batch must not half-apply");
+    assert_eq!(e.epoch(), 1);
+
+    let x: Vec<f32> = (0..64).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect();
+    let y = e.spmv(BackendId::Cpu, &x).unwrap();
+    assert_eq!(bits_of(&y), spmv_ref_bits(&a, &x), "entry still serves the pristine matrix");
+}
+
+fn csr_of(model: &BTreeMap<(usize, usize), f32>, nrows: usize, ncols: usize) -> Csr<f32> {
+    let mut coo = Coo::<f32>::new(nrows, ncols);
+    for (&(r, c), &v) in model {
+        coo.push(r, c, v);
+    }
+    coo.to_csr()
+}
+
+/// Satellite: the overlay contract, property-tested. A random base CSR
+/// plus any sequence of random `DeltaBatch`es through `DeltaOverlay` +
+/// `OverlayExec` must be **bit-identical** to a from-scratch CSR rebuilt
+/// from a `BTreeMap` model — merged structure, merged values, `spmv`,
+/// and blocked `spmv_multi` — and out-of-bounds batches are refused
+/// without applying any of their ops.
+#[test]
+fn overlay_pipeline_matches_from_scratch_rebuild() {
+    let pool = Arc::new(ThreadPool::new(2));
+    propcheck::forall("delta-overlay-vs-rebuild", 40, |g| {
+        let nrows = g.usize_in(2, 20);
+        let ncols = g.usize_in(2, 20);
+        // deduped random base: `Coo::to_csr` sums duplicates, the model
+        // map overwrites them, so only feed the Coo unique cells
+        let mut model: BTreeMap<(usize, usize), f32> = BTreeMap::new();
+        for _ in 0..g.usize_in(1, nrows * ncols) {
+            let (r, c) = (g.usize_in(0, nrows), g.usize_in(0, ncols));
+            model.insert((r, c), g.f64_in(-4.0, 4.0) as f32);
+        }
+        let base = Arc::new(csr_of(&model, nrows, ncols));
+        let inner: Arc<dyn SpMv<f32>> =
+            Arc::new(CsrParallel::<f32>::new((*base).clone(), pool.clone()));
+        let mut ov = DeltaOverlay::<f32>::new(nrows, ncols);
+
+        for _ in 0..g.usize_in(1, 5) {
+            if g.chance(0.2) {
+                // growth refusal is atomic even when the batch leads
+                // with in-bounds ops
+                let mut bad = DeltaBatch::new();
+                bad.set(0, 0, 1.0);
+                if g.chance(0.5) {
+                    bad.set(nrows + g.usize_in(0, 3), 0, 2.0);
+                } else {
+                    bad.set(0, ncols + g.usize_in(0, 3), 2.0);
+                }
+                let before = ov.len();
+                let err = ov.apply(&bad).unwrap_err().to_string();
+                assert!(err.contains("dimension growth is refused"), "{err}");
+                assert_eq!(ov.len(), before, "refused batch must not half-apply");
+                continue;
+            }
+
+            let mut batch = DeltaBatch::new();
+            for _ in 0..g.usize_in(1, 10) {
+                let (r, c) = (g.usize_in(0, nrows), g.usize_in(0, ncols));
+                if g.chance(0.3) {
+                    batch.remove(r, c);
+                    model.remove(&(r, c));
+                } else {
+                    let v = g.f64_in(-4.0, 4.0) as f32;
+                    batch.set(r, c, v);
+                    model.insert((r, c), v);
+                }
+            }
+            ov.apply(&batch).unwrap();
+
+            // merged CSR ≡ from-scratch rebuild, structurally exact
+            let rebuilt = csr_of(&model, nrows, ncols);
+            let merged = ov.merge_into(&base);
+            assert_eq!(merged.nnz(), rebuilt.nnz());
+            for i in 0..nrows {
+                let (mc, mv) = merged.row(i);
+                let (rc, rv) = rebuilt.row(i);
+                assert_eq!(mc, rc, "row {i} structure diverged");
+                for (u, v) in mv.iter().zip(rv) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "row {i} values diverged");
+                }
+            }
+
+            // the serving wrapper is bit-identical to the rebuild
+            let exec = OverlayExec::new(inner.clone(), base.clone(), Arc::new(ov.clone()));
+            let xs: Vec<Vec<f32>> = (0..3).map(|_| g.f32_vec(ncols)).collect();
+            let mut y_ref = vec![0f32; nrows];
+            rebuilt.spmv_ref(&xs[0], &mut y_ref);
+            let mut y = vec![0f32; nrows];
+            exec.spmv(&xs[0], &mut y);
+            assert_eq!(bits_of(&y), bits_of(&y_ref), "overlay spmv vs rebuild");
+
+            let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let packed = pack_block(&refs);
+            let mut yb = vec![0f32; nrows * 3];
+            exec.spmv_multi(&packed, &mut yb, 3);
+            for (j, yj) in unpack_block(&yb, 3).into_iter().enumerate() {
+                let mut yr = vec![0f32; nrows];
+                rebuilt.spmv_ref(&xs[j], &mut yr);
+                assert_eq!(bits_of(&yj), bits_of(&yr), "overlay spmv_multi vector {j}");
+            }
+        }
+    });
+}

@@ -77,7 +77,8 @@ fn irregular_registration_takes_the_identity_path() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = MatrixRegistry::new(pool, None);
     let a = gen::power_law::<f32>(700, 8, 1.0, 0xD1CE);
-    let e = registry.register("hubs", a).unwrap();
+    registry.register("hubs", a).unwrap();
+    let e = registry.get("hubs").unwrap();
     assert!(!e.reordered(), "irregular plans must keep the native labeling");
     assert!(!e.plan().reorders());
     assert!(!e.plan().is_hybrid(), "heavy tails must not be split");
@@ -93,7 +94,8 @@ fn csr5_planned_entry_matches_reference_spmv_and_spmv_multi() {
     let pool = Arc::new(ThreadPool::new(4));
     let registry = MatrixRegistry::new(pool, None);
     let a = gen::power_law::<f32>(700, 8, 1.0, 0x5EED);
-    let e = registry.register("hubs", a.clone()).unwrap();
+    registry.register("hubs", a.clone()).unwrap();
+    let e = registry.get("hubs").unwrap();
     assert!(e.kernel_name().starts_with("csr5"), "{}", e.kernel_name());
     assert_entry_matches_reference(&e, &a, 6);
 }
@@ -141,7 +143,8 @@ fn hybrid_planned_circuit_matches_reference() {
 
     let pool = Arc::new(ThreadPool::new(3));
     let registry = MatrixRegistry::new(pool, None);
-    let e = registry.register("circuit", a.clone()).unwrap();
+    registry.register("circuit", a.clone()).unwrap();
+    let e = registry.get("circuit").unwrap();
     assert!(e.kernel_name().starts_with("hybrid("), "{}", e.kernel_name());
     let d = e.describe();
     assert!(d.contains("split@"), "{d}");
@@ -193,7 +196,8 @@ fn kkt_conformance_planned_and_forced_hybrid() {
     );
     let pool = Arc::new(ThreadPool::new(3));
     let registry = MatrixRegistry::new(pool.clone(), None);
-    let e = registry.register("kkt", a.clone()).unwrap();
+    registry.register("kkt", a.clone()).unwrap();
+    let e = registry.get("kkt").unwrap();
     assert_entry_matches_reference(&e, &a, 5);
 
     // forced split: H-block rows (Laplacian + constraint couplings)
@@ -314,7 +318,8 @@ fn large_hub_fixture_plans_hybrid_with_sell_remainder() {
     assert!(p.cost(DeviceKind::Sell).is_some(), "{}", p.summary());
     let pool = Arc::new(ThreadPool::new(4));
     let registry = MatrixRegistry::new(pool, None);
-    let e = registry.register("hub20", a.clone()).unwrap();
+    registry.register("hub20", a.clone()).unwrap();
+    let e = registry.get("hub20").unwrap();
     assert!(e.kernel_name().contains("sellcs"), "{}", e.kernel_name());
     assert!(!e.supports(DeviceKind::Sell), "no sell backend in the default set");
     assert_entry_matches_reference(&e, &a, 4);
@@ -350,7 +355,8 @@ fn stencil_family_plans_dia_and_scale_free_does_not() {
             dia_bytes(a.nrows(), a.ncols(), *k, 4) < spmv_bytes(a.nrows(), a.ncols(), a.nnz(), 4),
             "stencil {idx}: DIA must price below the CSR stream"
         );
-        let e = registry.register(&format!("stencil{idx}"), a.clone()).unwrap();
+        let id = registry.register(&format!("stencil{idx}"), a.clone()).unwrap();
+        let e = registry.get_id(id).unwrap();
         assert!(e.kernel_name().starts_with("dia"), "{}", e.kernel_name());
         assert_entry_matches_reference(&e, a, 4);
     }
@@ -375,9 +381,12 @@ fn cost_based_routing_serves_all_structure_classes() {
     let reg_mat = gen::grid2d_5pt::<f32>(20, 20);
     let hub_mat = gen::circuit::<f32>(32, 32, 7);
     let irr_mat = gen::power_law::<f32>(500, 8, 1.0, 0xF00D);
-    let e_reg = registry.register("grid", reg_mat.clone()).unwrap();
-    let e_hub = registry.register("circuit", hub_mat.clone()).unwrap();
-    let e_irr = registry.register("hubs", irr_mat.clone()).unwrap();
+    registry.register("grid", reg_mat.clone()).unwrap();
+    registry.register("circuit", hub_mat.clone()).unwrap();
+    registry.register("hubs", irr_mat.clone()).unwrap();
+    let e_reg = registry.get("grid").unwrap();
+    let e_hub = registry.get("circuit").unwrap();
+    let e_irr = registry.get("hubs").unwrap();
     assert!(e_reg.kernel_name().starts_with("dia"), "{}", e_reg.describe());
     assert!(e_hub.kernel_name().starts_with("hybrid("), "{}", e_hub.describe());
     assert!(!e_irr.kernel_name().starts_with("csr2"), "{}", e_irr.describe());

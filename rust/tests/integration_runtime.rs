@@ -149,7 +149,8 @@ fn hybrid_entry_places_body_on_pjrt_and_remainder_on_cpu() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = MatrixRegistry::new(pool, Some(Arc::new(rt)));
     let a = gen::circuit::<f32>(32, 32, 7);
-    let e = registry.register("rails", a.clone()).unwrap();
+    registry.register("rails", a.clone()).unwrap();
+    let e = registry.get("rails").unwrap();
     assert!(e.plan().is_hybrid(), "{}", e.describe());
     assert!(
         e.supports(BackendId::Pjrt),

@@ -114,7 +114,8 @@ fn with_backends_routes_irregular_matrix_to_the_sell_device() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = sell_registry(pool);
     let a = sell_single_matrix();
-    let e = registry.register("alt-bands", a.clone()).unwrap();
+    registry.register("alt-bands", a.clone()).unwrap();
+    let e = registry.get("alt-bands").unwrap();
     assert!(e.kernel_name().starts_with("sellcs"), "{}", e.kernel_name());
     assert!(e.supports(BackendId::Cpu));
     assert!(e.supports(BackendId::Sell));
@@ -143,7 +144,8 @@ fn with_backends_routes_irregular_matrix_to_the_sell_device() {
     }
 
     // regular matrices stay CPU-only: the sell backend declines the plan
-    let grid = registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+    registry.register("grid", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
+    let grid = registry.get("grid").unwrap();
     assert!(!grid.supports(BackendId::Sell), "{}", grid.describe());
     assert_eq!(grid.route(None), BackendId::Cpu);
 }
@@ -153,7 +155,8 @@ fn hybrid_sell_remainder_binds_body_to_cpu_and_remainder_to_device() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = sell_registry(pool);
     let a = sell_hybrid_matrix();
-    let e = registry.register("rails", a.clone()).unwrap();
+    registry.register("rails", a.clone()).unwrap();
+    let e = registry.get("rails").unwrap();
     assert!(e.plan().is_hybrid(), "{}", e.describe());
     assert!(e.supports(BackendId::Sell));
     let d = e.describe();
@@ -215,11 +218,13 @@ fn server_serves_through_the_sell_backend_and_feeds_its_modeled_clock() {
     // the EWMA must hold the binding's modeled clock exactly: every
     // observation is the same constant, so the smoothed value equals it
     let e = registry.get("alt-bands").unwrap();
-    let modeled = e
+    let guard = e.pin();
+    let modeled = guard
         .binding(BackendId::Sell)
         .unwrap()
         .self_timed_cost()
         .expect("simulated device keeps a clock");
+    drop(guard);
     let observed = server
         .metrics()
         .device_estimate("alt-bands", BackendId::Sell)

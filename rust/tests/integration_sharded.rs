@@ -51,7 +51,8 @@ fn sharded_grid_serves_bitwise_across_two_backends() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = cpu_sell_registry(pool);
     let a = gen::grid2d_5pt::<f32>(64, 64);
-    let entry = registry.register_sharded("grid", a.clone(), 4).unwrap();
+    let id = registry.register_sharded("grid", a.clone(), 4).unwrap();
+    let entry = registry.get_id(id).unwrap();
     // the acceptance shape: one registered matrix, shards bound on two
     // backends simultaneously in the default offline build
     let d = entry.describe();
@@ -73,7 +74,8 @@ fn sharded_power_law_serves_bitwise() {
     let pool = Arc::new(ThreadPool::new(2));
     let registry = cpu_sell_registry(pool);
     let a = gen::power_law::<f32>(3000, 6, 1.0, 0x51AD);
-    let entry = registry.register_sharded("hubs", a.clone(), 4).unwrap();
+    let id = registry.register_sharded("hubs", a.clone(), 4).unwrap();
+    let entry = registry.get_id(id).unwrap();
     assert!(entry.plan().is_sharded(), "{}", entry.describe());
     let server = Server::start(registry, ServerConfig::default());
     assert_serves_bitwise(&server, "hubs", &a, 8);
@@ -132,7 +134,8 @@ fn failing_shard_backend_degrades_to_per_request_errors() {
     ];
     let registry = Arc::new(MatrixRegistry::with_backends(pool, backends));
     let a = gen::grid2d_5pt::<f32>(64, 64);
-    let entry = registry.register_sharded("grid", a.clone(), 4).unwrap();
+    let id = registry.register_sharded("grid", a.clone(), 4).unwrap();
+    let entry = registry.get_id(id).unwrap();
     assert!(entry.describe().contains("flaky["), "{}", entry.describe());
     // a healthy unsharded neighbor proves the failure stays scoped
     registry.register("small", gen::grid2d_5pt::<f32>(16, 16)).unwrap();
