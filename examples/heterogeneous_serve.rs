@@ -196,6 +196,26 @@ fn main() {
     println!("  {}", e.describe());
     assert_eq!(errors, 0);
     assert_eq!(e.overlay_cells(), 0, "replan must absorb the overlay");
+
+    // ---- flight recorder: exposition + planner decision audit --------
+    // The Prometheus-style snapshot and the per-epoch plan audit: stage
+    // histograms and model-error gauges from the traffic above, and the
+    // audited cost table behind both plan epochs. The CI serving-smoke
+    // job greps the two exposition lines asserted here.
+    let prom = server.metrics().render_text();
+    assert!(prom.contains("csrk_requests_total"), "{prom}");
+    assert!(
+        prom.contains("csrk_plan_epoch{matrix=\"stencil-dia\"} 2"),
+        "replanned epoch gauge missing:\n{prom}"
+    );
+    println!("--- metrics exposition ---");
+    print!("{prom}");
+    println!("--- plan audit: stencil-dia ---");
+    print!("{}", e.explain());
+    if let Some(t) = server.metrics().recent_traces().last() {
+        println!("--- last trace ---");
+        println!("{}", t.render());
+    }
     server.shutdown();
     println!("heterogeneous_serve OK");
 }

@@ -1,6 +1,8 @@
 //! Sustained-load serving harness: drives the server under two traffic
 //! mixes and writes `BENCH_serving.json` with p50/p99 latency and
-//! throughput per mix.
+//! throughput per mix, plus `BENCH_serving.prom` — each mix's
+//! Prometheus-style metrics exposition (`Metrics::render_text`) as a
+//! raw-text sidecar.
 //!
 //! ```text
 //! cargo run --release --example load_harness            # full (~3 s/mix)
@@ -43,6 +45,10 @@ struct MixStats {
     p99_us: f64,
     mean_us: f64,
     throughput_rps: f64,
+    /// The mix's full Prometheus-style exposition snapshot
+    /// (`Metrics::render_text`), captured before server shutdown and
+    /// written as `BENCH_serving.prom` beside the JSON.
+    exposition: String,
 }
 
 fn two_backend_registry(pool: Arc<ThreadPool>) -> Arc<MatrixRegistry> {
@@ -110,6 +116,7 @@ fn bursty_small(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
         p99_us: m.latency_us(99.0),
         mean_us: m.mean_latency_us(),
         throughput_rps: m.throughput_rps(),
+        exposition: m.render_text(),
     };
     server.shutdown();
     stats
@@ -174,6 +181,7 @@ fn steady_large(pool: Arc<ThreadPool>, duration: Duration) -> MixStats {
         p99_us: m.latency_us(99.0),
         mean_us: m.mean_latency_us(),
         throughput_rps: m.throughput_rps(),
+        exposition: m.render_text(),
     };
     server.shutdown();
     stats
@@ -217,4 +225,15 @@ fn main() {
     );
     std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
     println!("wrote BENCH_serving.json");
+
+    // the exposition sidecar: every mix's Prometheus-style snapshot,
+    // delimited per mix so CI can archive the raw text beside the JSON
+    let mut prom = String::new();
+    for s in &mixes {
+        prom.push_str(&format!("# mix: {}\n", s.name));
+        prom.push_str(&s.exposition);
+        assert!(s.exposition.contains("csrk_requests_total"), "{}", s.name);
+    }
+    std::fs::write("BENCH_serving.prom", &prom).expect("write BENCH_serving.prom");
+    println!("wrote BENCH_serving.prom");
 }

@@ -162,6 +162,17 @@ pub trait ExecutionBinding: Send + Sync {
     fn self_timed_cost(&self) -> Option<f64> {
         None
     }
+
+    /// Per-shard service-time EWMAs (seconds per single-vector SpMV, in
+    /// shard order), for bindings that fan one request out across
+    /// several sub-bindings. Unobserved shards report NaN; `None` for
+    /// single-placement bindings. This is the per-shard half of the
+    /// observability story: the ensemble's routing EWMA only sees the
+    /// slowest shard, these rows show *which* shard that is — the
+    /// signal an online shard rebalancer needs.
+    fn shard_costs(&self) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -825,7 +836,11 @@ pub fn bind_sharded(
                 .unwrap_or_else(|_| Box::new(CpuBinding { exec: sub_built.exec.clone() })),
             _ => Box::new(CpuBinding { exec: sub_built.exec.clone() }),
         };
-        bound.push(ShardBound { binding, rows });
+        bound.push(ShardBound {
+            binding,
+            rows,
+            ewma_bits: AtomicU64::new(f64::NAN.to_bits()),
+        });
     }
     Ok(Box::new(ShardedBinding {
         nrows: built.exec.nrows(),
@@ -863,11 +878,37 @@ fn shard_sub_plan(sp: &ShardPlan, ncols: usize) -> FormatPlan {
     }
 }
 
-/// One shard of a sharded binding: the placed sub-binding plus the
-/// shard's row scatter map (shard-local row → source row).
+/// One shard of a sharded binding: the placed sub-binding, the shard's
+/// row scatter map (shard-local row → source row), and a lock-free
+/// service-time EWMA over this shard's observed fan-out legs (f64 bits;
+/// NaN until the first observation).
 struct ShardBound {
     binding: Box<dyn ExecutionBinding>,
     rows: Vec<u32>,
+    ewma_bits: AtomicU64,
+}
+
+impl ShardBound {
+    /// Fold one observed per-vector service time (seconds) into the
+    /// shard's EWMA at the routing smoothing factor.
+    fn observe(&self, secs_per_vec: f64) {
+        use super::metrics::ROUTE_EWMA_ALPHA;
+        let _ = self.ewma_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+            let prev = f64::from_bits(old);
+            let next = if prev.is_finite() {
+                (1.0 - ROUTE_EWMA_ALPHA) * prev + ROUTE_EWMA_ALPHA * secs_per_vec
+            } else {
+                secs_per_vec
+            };
+            Some(next.to_bits())
+        });
+    }
+
+    /// The shard's observed EWMA (seconds per vector; NaN before the
+    /// first observation).
+    fn ewma(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
 }
 
 /// A matrix bound across N backends at once: every request fans out to
@@ -893,7 +934,14 @@ impl ExecutionBinding for ShardedBinding {
             .shards
             .iter()
             .enumerate()
-            .map(|(i, sh)| format!("shard{i}→{}", sh.binding.describe()))
+            .map(|(i, sh)| {
+                let e = sh.ewma();
+                if e.is_finite() {
+                    format!("shard{i}→{} ~{:.1}us", sh.binding.describe(), e * 1e6)
+                } else {
+                    format!("shard{i}→{}", sh.binding.describe())
+                }
+            })
             .collect::<Vec<_>>()
             .join(" + ");
         format!("sharded[{inner}]")
@@ -917,12 +965,23 @@ impl ExecutionBinding for ShardedBinding {
         // fan out: one worker per shard, joined before the merge. Any
         // shard failure — an Err or a panic — fails the whole request
         // after the join, so the caller gets a per-request error, never
-        // a hang or a partially-written result.
+        // a hang or a partially-written result. Each leg is wall-timed
+        // and folded into its shard's service-time EWMA, so the slowest
+        // shard (what the ensemble cost models) is identifiable.
         let partials: Vec<Result<Vec<Vec<f32>>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .shards
                 .iter()
-                .map(|sh| scope.spawn(move || sh.binding.spmv_multi(xs)))
+                .map(|sh| {
+                    scope.spawn(move || {
+                        let t0 = std::time::Instant::now();
+                        let r = sh.binding.spmv_multi(xs);
+                        if r.is_ok() {
+                            sh.observe(t0.elapsed().as_secs_f64() / xs.len().max(1) as f64);
+                        }
+                        r
+                    })
+                })
                 .collect();
             handles
                 .into_iter()
@@ -945,6 +1004,10 @@ impl ExecutionBinding for ShardedBinding {
             }
         }
         Ok(out)
+    }
+
+    fn shard_costs(&self) -> Option<Vec<f64>> {
+        Some(self.shards.iter().map(|sh| sh.ewma()).collect())
     }
 }
 
@@ -1224,6 +1287,36 @@ mod tests {
         assert!(binding.spmv(&[1.0; 3]).is_err(), "length validation");
         assert!(binding.spmv_multi(&[]).unwrap().is_empty());
         assert!(binding.self_timed_cost().is_none(), "the ensemble clock is wall time");
+    }
+
+    #[test]
+    fn sharded_binding_keeps_per_shard_service_time_ewmas() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let backends: Vec<Arc<dyn Backend>> =
+            vec![Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0))];
+        let a = gen::grid2d_5pt::<f32>(48, 48);
+        let plan = planner::plan_sharded(&a, 3, &[BackendId::Cpu]);
+        let built = build_execution(&plan, a.clone(), pool, false);
+        let binding = bind_sharded(&backends, &built, &plan).unwrap();
+        // before any traffic: one NaN row per shard
+        let cold = binding.shard_costs().expect("fan-out bindings expose shard rows");
+        assert_eq!(cold.len(), 3);
+        assert!(cold.iter().all(|c| c.is_nan()), "{cold:?}");
+        let x: Vec<f32> = (0..a.ncols()).map(|i| ((i * 5 + 2) % 11) as f32 - 5.0).collect();
+        for _ in 0..3 {
+            binding.spmv_multi(&[&x, &x]).unwrap();
+        }
+        let warm = binding.shard_costs().unwrap();
+        assert_eq!(warm.len(), 3);
+        assert!(
+            warm.iter().all(|c| c.is_finite() && *c >= 0.0),
+            "every shard observed: {warm:?}"
+        );
+        // the observed rows surface in the describe line
+        assert!(binding.describe().contains("us"), "{}", binding.describe());
+        // single-placement bindings expose nothing
+        let single = CpuBinding { exec: built.exec.clone() };
+        assert!(single.shard_costs().is_none());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::registry::DeviceKind;
+use super::trace::Stage;
 use super::Request;
 
 /// A group of requests sharing one matrix **and** one device override;
@@ -65,6 +66,7 @@ impl DynamicBatcher {
     /// matrix names must not leave empty shells growing the map.
     pub fn push(&mut self, req: Request) -> Option<Batch> {
         let now = Instant::now();
+        req.trace.stamp(Stage::Enqueue);
         let q = self
             .queues
             .entry((req.matrix.clone(), req.device))
@@ -75,6 +77,9 @@ impl DynamicBatcher {
             let key = (q[0].0.matrix.clone(), q[0].0.device);
             let ((matrix, device), requests) =
                 self.queues.remove_entry(&key).expect("queue just filled");
+            for (r, _) in &requests {
+                r.trace.stamp(Stage::BatchClose);
+            }
             Some(Batch { matrix, device, requests })
         } else {
             None
@@ -97,6 +102,11 @@ impl DynamicBatcher {
             }
             !q.is_empty()
         });
+        for b in &out {
+            for (r, _) in &b.requests {
+                r.trace.stamp(Stage::BatchClose);
+            }
+        }
         out.sort_by_key(|b| b.requests[0].1);
         out
     }
@@ -106,6 +116,9 @@ impl DynamicBatcher {
         let mut out = Vec::new();
         for ((name, device), q) in self.queues.drain() {
             if !q.is_empty() {
+                for (r, _) in &q {
+                    r.trace.stamp(Stage::BatchClose);
+                }
                 out.push(Batch { matrix: name, device, requests: q });
             }
         }
@@ -135,11 +148,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64, m: &str) -> Request {
-        Request { id, matrix: m.to_string(), x: vec![], device: None }
+        Request::new(id, m, vec![], None)
     }
 
     fn req_on(id: u64, m: &str, device: Option<DeviceKind>) -> Request {
-        Request { id, matrix: m.to_string(), x: vec![], device }
+        Request::new(id, m, vec![], device)
     }
 
     #[test]
@@ -249,12 +262,30 @@ mod tests {
     }
 
     #[test]
+    fn push_and_release_stamp_the_trace() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        assert!(b.push(req(1, "a")).is_none());
+        let batch = b.push(req(2, "a")).unwrap();
+        for (r, _) in &batch.requests {
+            assert!(r.trace.stage_ns(Stage::Enqueue).is_some());
+            assert!(r.trace.stage_ns(Stage::BatchClose).is_some());
+        }
+        // deadline and drain releases stamp batch-close too
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(1));
+        b.push(req(3, "a"));
+        std::thread::sleep(Duration::from_millis(3));
+        let out = b.flush_expired();
+        assert!(out[0].requests[0].0.trace.stage_ns(Stage::BatchClose).is_some());
+        b.push(req(4, "a"));
+        let out = b.drain();
+        assert!(out[0].requests[0].0.trace.stage_ns(Stage::BatchClose).is_some());
+    }
+
+    #[test]
     fn x_block_borrows_in_request_order() {
         let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
-        b.push(Request { id: 1, matrix: "a".into(), x: vec![1.0, 2.0], device: None });
-        let batch = b
-            .push(Request { id: 2, matrix: "a".into(), x: vec![3.0, 4.0], device: None })
-            .unwrap();
+        b.push(Request::new(1, "a", vec![1.0, 2.0], None));
+        let batch = b.push(Request::new(2, "a", vec![3.0, 4.0], None)).unwrap();
         let xs = batch.x_block();
         assert_eq!(xs, vec![&[1.0f32, 2.0][..], &[3.0, 4.0][..]]);
         assert_eq!(batch.len(), 2);

@@ -20,12 +20,23 @@
 //! each assessment here ([`Metrics::record_drift`]) and each completed
 //! replan with its new epoch ([`Metrics::record_replan`]), so serving
 //! dashboards see *why* a plan version changed, not just that it did.
+//!
+//! This module is also the **flight recorder**: finished request
+//! traces ([`crate::coordinator::trace`]) land in a bounded ring
+//! ([`Metrics::recent_traces`]) with their stage-to-stage deltas folded
+//! into log₂ histograms, every served batch folds
+//! `|observed − predicted| / predicted` into per-(matrix, backend)
+//! **model-error** gauges ([`Metrics::observe_model_error`]) beside the
+//! routing EWMA, and [`Metrics::render_text`] emits the whole state as
+//! a Prometheus-style text snapshot (`csrk_*` families) for the load
+//! harness sidecar and the CI serving smoke.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::backend::BackendId;
+use super::trace::{Trace, TraceSnapshot, STAGES, STAGE_COUNT};
 use crate::util::stats;
 
 /// EWMA smoothing factor for observed per-backend latencies: each new
@@ -123,12 +134,24 @@ struct DriftState {
 /// instead of growing (and re-sorting) an unbounded history per call.
 pub const LATENCY_RING_CAP: usize = 4096;
 
+/// Retained finished-request traces: the flight recorder keeps the
+/// most recent this-many [`TraceSnapshot`]s.
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Finite log₂ buckets in the per-stage delta histograms: upper bounds
+/// 1, 2, 4, … 2¹⁵ µs, plus one +Inf overflow bucket.
+pub const STAGE_HIST_BUCKETS: usize = 16;
+
 #[derive(Debug, Default)]
 struct Inner {
     /// Latency ring (µs): grows to [`LATENCY_RING_CAP`], then
     /// `latency_next` wraps and the oldest sample is overwritten.
     latencies_us: Vec<f64>,
-    /// Next overwrite position once the ring is full.
+    /// Arrival stamp + flop count per retained latency sample — the
+    /// same ring positions as `latencies_us`, so throughput can be
+    /// computed over the *observed window* instead of process uptime.
+    window: Vec<(Instant, f64)>,
+    /// Next overwrite position once the rings are full.
     latency_next: usize,
     requests: u64,
     batches: u64,
@@ -139,8 +162,20 @@ struct Inner {
     /// can be re-registered with a different matrix, and stale
     /// estimates must not blend into the fresh entry's routing.
     device_ewma: HashMap<(String, BackendId), (u64, f64)>,
+    /// `|observed − predicted| / predicted` EWMA per (matrix, backend),
+    /// uid-tagged like `device_ewma` — how well the plan's static
+    /// roofline prior describes what the hardware actually did.
+    model_err: HashMap<(String, BackendId), (u64, f64)>,
     /// Per-matrix drift record written by `coordinator::live`.
     drift: HashMap<String, DriftState>,
+    /// Flight-recorder ring of finished request traces.
+    traces: Vec<TraceSnapshot>,
+    /// Next overwrite position once the trace ring is full.
+    trace_next: usize,
+    /// Cumulative log₂ histograms of stage-to-stage deltas (µs),
+    /// indexed `[stage][bucket]`; the stage index labels the stage that
+    /// *completed* the hop.
+    stage_hist: [[u64; STAGE_HIST_BUCKETS + 1]; STAGE_COUNT],
 }
 
 /// Thread-safe metrics sink shared by the server workers.
@@ -161,11 +196,14 @@ impl Metrics {
     pub fn record(&self, latency: Duration, flops: f64, ok: bool) {
         let mut m = self.inner.lock().unwrap();
         let us = latency.as_secs_f64() * 1e6;
+        let now = Instant::now();
         if m.latencies_us.len() < LATENCY_RING_CAP {
             m.latencies_us.push(us);
+            m.window.push((now, flops));
         } else {
             let slot = m.latency_next;
             m.latencies_us[slot] = us;
+            m.window[slot] = (now, flops);
             m.latency_next = (slot + 1) % LATENCY_RING_CAP;
         }
         m.requests += 1;
@@ -222,6 +260,90 @@ impl Metrics {
             .device_ewma
             .get(&(matrix.to_string(), backend))
             .map(|&(_, e)| e)
+    }
+
+    /// Fold one batch's model-vs-measured relative error
+    /// `|observed − predicted| / predicted` into the `(matrix, backend)`
+    /// gauge and return the smoothed value. `predicted` is the plan's
+    /// static roofline prior for the backend (seconds per vector),
+    /// `observed` the per-vector cost the worker just measured; samples
+    /// with a non-finite or non-positive prediction are ignored
+    /// (`None`) — an unpriced binding has no model to hold to account.
+    /// uid semantics match [`Metrics::observe_device`]: a re-registered
+    /// name reseeds instead of blending.
+    pub fn observe_model_error(
+        &self,
+        matrix: &str,
+        uid: u64,
+        backend: BackendId,
+        observed: f64,
+        predicted: f64,
+    ) -> Option<f64> {
+        if !predicted.is_finite() || predicted <= 0.0 || !observed.is_finite() || observed < 0.0 {
+            return None;
+        }
+        let rel = (observed - predicted).abs() / predicted;
+        let mut m = self.inner.lock().unwrap();
+        let v = match m.model_err.entry((matrix.to_string(), backend)) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let slot = o.get_mut();
+                if slot.0 == uid {
+                    slot.1 = (1.0 - ROUTE_EWMA_ALPHA) * slot.1 + ROUTE_EWMA_ALPHA * rel;
+                } else {
+                    *slot = (uid, rel);
+                }
+                slot.1
+            }
+            std::collections::hash_map::Entry::Vacant(v) => v.insert((uid, rel)).1,
+        };
+        Some(v)
+    }
+
+    /// Current model-error EWMA for a `(matrix, backend)` pair, if any
+    /// priced batch has been served there.
+    pub fn model_error(&self, matrix: &str, backend: BackendId) -> Option<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .model_err
+            .get(&(matrix.to_string(), backend))
+            .map(|&(_, e)| e)
+    }
+
+    /// Retain a finished request trace in the flight-recorder ring and
+    /// fold its stage-to-stage deltas into the log₂ stage histograms.
+    pub fn record_trace(&self, trace: &Trace) {
+        let snap = trace.snapshot();
+        let mut m = self.inner.lock().unwrap();
+        for (stage, delta_us) in snap.deltas_us() {
+            m.stage_hist[stage as usize][stage_bucket(delta_us)] += 1;
+        }
+        if m.traces.len() < TRACE_RING_CAP {
+            m.traces.push(snap);
+        } else {
+            let slot = m.trace_next;
+            m.traces[slot] = snap;
+            m.trace_next = (slot + 1) % TRACE_RING_CAP;
+        }
+    }
+
+    /// The flight recorder's retained traces, oldest first (at most
+    /// [`TRACE_RING_CAP`]).
+    pub fn recent_traces(&self) -> Vec<TraceSnapshot> {
+        let m = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(m.traces.len());
+        if m.traces.len() < TRACE_RING_CAP {
+            out.extend(m.traces.iter().cloned());
+        } else {
+            out.extend(m.traces[m.trace_next..].iter().cloned());
+            out.extend(m.traces[..m.trace_next].iter().cloned());
+        }
+        out
+    }
+
+    /// Total stage-delta samples folded into one stage's histogram.
+    pub fn stage_delta_count(&self, stage: super::trace::Stage) -> u64 {
+        self.inner.lock().unwrap().stage_hist[stage as usize].iter().sum()
     }
 
     /// Record one drift assessment for `matrix`: `signals` is what
@@ -301,23 +423,198 @@ impl Metrics {
         stats::mean(&self.inner.lock().unwrap().latencies_us)
     }
 
-    /// Requests per second since creation.
+    /// Requests per second over the latency ring's **observed window**
+    /// (oldest to newest retained sample) — the recent-traffic rate,
+    /// which an idle gap before the window does not dilute. Until two
+    /// samples exist (or when they share one instant) this falls back
+    /// to lifetime requests over uptime.
     pub fn throughput_rps(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if let Some((span, n, _)) = window_span(&m) {
+            return (n - 1) as f64 / span;
+        }
+        let requests = m.requests;
+        drop(m);
         let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         if elapsed == 0.0 {
             return 0.0;
         }
-        self.inner.lock().unwrap().requests as f64 / elapsed
+        requests as f64 / elapsed
     }
 
-    /// Aggregate GFlop/s since creation.
+    /// Aggregate GFlop/s over the latency ring's observed window (same
+    /// basis as [`Metrics::throughput_rps`]), falling back to lifetime
+    /// flops over uptime until the window exists.
     pub fn gflops(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if let Some((span, _, flops)) = window_span(&m) {
+            return flops / span / 1e9;
+        }
+        let flops = m.flops;
+        drop(m);
         let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         if elapsed == 0.0 {
             return 0.0;
         }
-        self.inner.lock().unwrap().flops / elapsed / 1e9
+        flops / elapsed / 1e9
     }
+
+    /// Render the whole metrics state as a Prometheus-style text
+    /// snapshot: `csrk_*` counters, latency quantiles, the log₂ stage
+    /// histograms (cumulative `le` buckets), route EWMAs, model-error
+    /// gauges, and the drift/replan/epoch record. Label sets are sorted
+    /// so the output is deterministic for a given state — the load
+    /// harness writes it as `BENCH_serving.json`'s sidecar and the CI
+    /// serving smoke greps it.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let (requests, batches, errors) = self.counts();
+        let mut out = String::new();
+        let _ = writeln!(out, "# TYPE csrk_requests_total counter");
+        let _ = writeln!(out, "csrk_requests_total {requests}");
+        let _ = writeln!(out, "# TYPE csrk_batches_total counter");
+        let _ = writeln!(out, "csrk_batches_total {batches}");
+        let _ = writeln!(out, "# TYPE csrk_errors_total counter");
+        let _ = writeln!(out, "csrk_errors_total {errors}");
+        if self.latency_samples() > 0 {
+            let _ = writeln!(out, "# TYPE csrk_latency_us summary");
+            for q in [50.0, 90.0, 99.0] {
+                let _ = writeln!(
+                    out,
+                    "csrk_latency_us{{quantile=\"{}\"}} {:.3}",
+                    q / 100.0,
+                    self.latency_us(q)
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE csrk_throughput_rps gauge");
+        let _ = writeln!(out, "csrk_throughput_rps {:.3}", self.throughput_rps());
+        let _ = writeln!(out, "# TYPE csrk_gflops gauge");
+        let _ = writeln!(out, "csrk_gflops {:.6}", self.gflops());
+
+        let m = self.inner.lock().unwrap();
+        // stage histograms: cumulative buckets, only stages with samples
+        let stage_counts: Vec<u64> =
+            m.stage_hist.iter().map(|h| h.iter().sum()).collect();
+        if stage_counts.iter().any(|&c| c > 0) {
+            let _ = writeln!(out, "# TYPE csrk_stage_us histogram");
+            for (k, stage) in STAGES.iter().enumerate() {
+                if stage_counts[k] == 0 {
+                    continue;
+                }
+                let mut cum = 0u64;
+                for (b, n) in m.stage_hist[k].iter().enumerate() {
+                    cum += n;
+                    let le = if b < STAGE_HIST_BUCKETS {
+                        format!("{}", 1u64 << b)
+                    } else {
+                        "+Inf".to_string()
+                    };
+                    let _ = writeln!(
+                        out,
+                        "csrk_stage_us_bucket{{stage=\"{}\",le=\"{le}\"}} {cum}",
+                        stage.name()
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "csrk_stage_us_count{{stage=\"{}\"}} {}",
+                    stage.name(),
+                    stage_counts[k]
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE csrk_traces_retained gauge");
+        let _ = writeln!(out, "csrk_traces_retained {}", m.traces.len());
+
+        // labeled gauge families, keys sorted for deterministic output
+        let mut ewma: Vec<(&(String, BackendId), &(u64, f64))> = m.device_ewma.iter().collect();
+        ewma.sort_by(|a, b| a.0.cmp(b.0));
+        if !ewma.is_empty() {
+            let _ = writeln!(out, "# TYPE csrk_route_ewma_us gauge");
+            for ((matrix, backend), (_, secs)) in ewma {
+                let _ = writeln!(
+                    out,
+                    "csrk_route_ewma_us{{matrix=\"{matrix}\",backend=\"{}\"}} {:.3}",
+                    backend_label(*backend),
+                    secs * 1e6
+                );
+            }
+        }
+        let mut errs: Vec<(&(String, BackendId), &(u64, f64))> = m.model_err.iter().collect();
+        errs.sort_by(|a, b| a.0.cmp(b.0));
+        if !errs.is_empty() {
+            let _ = writeln!(out, "# TYPE csrk_model_error gauge");
+            for ((matrix, backend), (_, rel)) in errs {
+                let _ = writeln!(
+                    out,
+                    "csrk_model_error{{matrix=\"{matrix}\",backend=\"{}\"}} {rel:.6}",
+                    backend_label(*backend)
+                );
+            }
+        }
+        let mut drift: Vec<(&String, &DriftState)> = m.drift.iter().collect();
+        drift.sort_by(|a, b| a.0.cmp(b.0));
+        if !drift.is_empty() {
+            let _ = writeln!(out, "# TYPE csrk_drift_trips_total counter");
+            for (matrix, st) in &drift {
+                let _ = writeln!(out, "csrk_drift_trips_total{{matrix=\"{matrix}\"}} {}", st.trips);
+            }
+            let _ = writeln!(out, "# TYPE csrk_replans_total counter");
+            for (matrix, st) in &drift {
+                let _ = writeln!(out, "csrk_replans_total{{matrix=\"{matrix}\"}} {}", st.replans);
+            }
+            let _ = writeln!(out, "# TYPE csrk_plan_epoch gauge");
+            for (matrix, st) in &drift {
+                let _ = writeln!(out, "csrk_plan_epoch{{matrix=\"{matrix}\"}} {}", st.epoch);
+            }
+        }
+        out
+    }
+}
+
+/// Exposition label for a backend (`BackendId` lowercased).
+fn backend_label(b: BackendId) -> &'static str {
+    match b {
+        BackendId::Cpu => "cpu",
+        BackendId::Pjrt => "pjrt",
+        BackendId::Sell => "sell",
+    }
+}
+
+/// Log₂ bucket index for a stage delta in µs: the smallest bucket whose
+/// upper bound `2^b` contains it, or the +Inf overflow slot.
+fn stage_bucket(delta_us: f64) -> usize {
+    let mut bound = 1.0f64;
+    for b in 0..STAGE_HIST_BUCKETS {
+        if delta_us <= bound {
+            return b;
+        }
+        bound *= 2.0;
+    }
+    STAGE_HIST_BUCKETS
+}
+
+/// The latency ring's observed span: `(seconds, samples, flops)` where
+/// `flops` covers the `samples − 1` requests after the oldest retained
+/// one. `None` until two samples spanning a positive interval exist.
+fn window_span(m: &Inner) -> Option<(f64, usize, f64)> {
+    let n = m.window.len();
+    if n < 2 {
+        return None;
+    }
+    let (oldest, newest) = if n < LATENCY_RING_CAP {
+        (m.window[0], m.window[n - 1])
+    } else {
+        let last = (m.latency_next + LATENCY_RING_CAP - 1) % LATENCY_RING_CAP;
+        (m.window[m.latency_next], m.window[last])
+    };
+    let span = newest.0.duration_since(oldest.0).as_secs_f64();
+    if span <= 0.0 {
+        return None;
+    }
+    let flops: f64 = m.window.iter().map(|(_, f)| f).sum::<f64>() - oldest.1;
+    Some((span, n, flops))
 }
 
 #[cfg(test)]
@@ -410,6 +707,110 @@ mod tests {
         // other matrices are untouched
         assert_eq!(m.drift_counts("b"), (0, 0));
         assert_eq!(m.plan_epoch("b"), 0);
+    }
+
+    #[test]
+    fn model_error_gauges_track_relative_error() {
+        let m = Metrics::new();
+        assert_eq!(m.model_error("a", BackendId::Cpu), None);
+        // unpriced predictions carry no model to hold to account
+        assert_eq!(m.observe_model_error("a", 1, BackendId::Cpu, 1e-6, f64::INFINITY), None);
+        assert_eq!(m.observe_model_error("a", 1, BackendId::Cpu, 1e-6, 0.0), None);
+        assert_eq!(m.model_error("a", BackendId::Cpu), None);
+        // |2e-6 - 1e-6| / 1e-6 = 1.0 seeds directly
+        assert_eq!(m.observe_model_error("a", 1, BackendId::Cpu, 2e-6, 1e-6), Some(1.0));
+        // a perfect prediction blends toward zero at alpha
+        let e = m.observe_model_error("a", 1, BackendId::Cpu, 1e-6, 1e-6).unwrap();
+        assert!((e - (1.0 - ROUTE_EWMA_ALPHA)).abs() < 1e-12, "{e}");
+        // a re-registered uid reseeds instead of blending
+        assert_eq!(m.observe_model_error("a", 2, BackendId::Cpu, 3e-6, 2e-6), Some(0.5));
+        assert_eq!(m.model_error("a", BackendId::Cpu), Some(0.5));
+    }
+
+    #[test]
+    fn trace_ring_is_bounded_and_oldest_first() {
+        use super::super::trace::{Stage, Trace, TraceId};
+        let m = Metrics::new();
+        for i in 0..(TRACE_RING_CAP as u64 + 50) {
+            let t = Trace::start(TraceId(i), "a");
+            t.stamp(Stage::Respond);
+            m.record_trace(&t);
+        }
+        let traces = m.recent_traces();
+        assert_eq!(traces.len(), TRACE_RING_CAP);
+        // the 50 oldest were displaced; order is oldest→newest
+        assert_eq!(traces[0].id, TraceId(50));
+        assert_eq!(traces[TRACE_RING_CAP - 1].id, TraceId(TRACE_RING_CAP as u64 + 49));
+        // every trace contributed one submit→respond hop
+        assert_eq!(m.stage_delta_count(Stage::Respond), TRACE_RING_CAP as u64 + 50);
+    }
+
+    #[test]
+    fn throughput_uses_the_observed_window_not_uptime() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(5), 1e6, true);
+        std::thread::sleep(Duration::from_millis(20));
+        m.record(Duration::from_micros(5), 1e6, true);
+        // 1 inter-arrival over ≥ 20 ms ⇒ at most 50 rps; an idle sleep
+        // after the burst must NOT decay the reported rate
+        let rps = m.throughput_rps();
+        assert!(rps > 0.0 && rps <= 55.0, "{rps}");
+        std::thread::sleep(Duration::from_millis(40));
+        let after_idle = m.throughput_rps();
+        assert!((after_idle - rps).abs() < 1.0, "{after_idle} vs {rps}");
+        // gflops over the same window: 1e6 flops (post-oldest) / span
+        let g = m.gflops();
+        assert!(g > 0.0 && g * 1e9 <= 1e6 / 0.020 * 1.1, "{g}");
+    }
+
+    #[test]
+    fn render_text_exposes_every_family_in_shape() {
+        use super::super::trace::{Stage, Trace, TraceId};
+        let m = Metrics::new();
+        m.record(Duration::from_micros(100), 2.0e6, true);
+        m.record(Duration::from_micros(140), 2.0e6, true);
+        m.record_batch();
+        m.observe_device("a", 1, BackendId::Cpu, 8e-6);
+        m.observe_model_error("a", 1, BackendId::Cpu, 8e-6, 4e-6);
+        let sig = DriftSignal::OverlayFraction { frac: 0.08, limit: 0.05 };
+        m.record_drift("a", std::slice::from_ref(&sig));
+        m.record_replan("a", 2);
+        let t = Trace::start(TraceId(1), "a");
+        t.stamp(Stage::Enqueue);
+        t.stamp(Stage::Respond);
+        m.record_trace(&t);
+
+        let text = m.render_text();
+        for needle in [
+            "csrk_requests_total 2",
+            "csrk_batches_total 1",
+            "csrk_errors_total 0",
+            "csrk_latency_us{quantile=\"0.5\"}",
+            "csrk_throughput_rps ",
+            "csrk_gflops ",
+            "csrk_stage_us_bucket{stage=\"respond\",le=\"+Inf\"} 1",
+            "csrk_stage_us_count{stage=\"enqueue\"} 1",
+            "csrk_traces_retained 1",
+            "csrk_route_ewma_us{matrix=\"a\",backend=\"cpu\"} 8.000",
+            "csrk_model_error{matrix=\"a\",backend=\"cpu\"} 1.000000",
+            "csrk_drift_trips_total{matrix=\"a\"} 1",
+            "csrk_replans_total{matrix=\"a\"} 1",
+            "csrk_plan_epoch{matrix=\"a\"} 2",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // golden shape: every non-comment line is `name[{labels}] value`
+        // with a parseable numeric value
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect(line);
+            assert!(name.starts_with("csrk_"), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+        // deterministic: same state renders identically
+        assert_eq!(text, m.render_text());
     }
 
     #[test]

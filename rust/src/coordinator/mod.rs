@@ -91,6 +91,34 @@
 //!                                              drop when inflight──▶0
 //! ```
 //!
+//! # The request trace lifecycle (flight recorder)
+//!
+//! Every request carries an `Arc<`[`Trace`]`>` from the moment it is
+//! minted; each actor on the serve path stamps the stage it completes
+//! (lock-free, first-write-wins), and the finished trace is retained in
+//! a bounded flight-recorder ring:
+//!
+//! ```text
+//!  submit ─▶ enqueue ─▶ batch-close ─▶ route ─▶ dispatch ─▶ kernel ─▶ merge ─▶ respond
+//!    │          │            │           │          │          │        │         │
+//!  Server::  batcher     size cap /   leader picks  worker  spmv_multi overlay  metrics
+//!  submit*   queue       deadline     backend +    hands    returned   patch    recorded,
+//!  mints     entry       released     stamps       block to            walk     reply sent,
+//!  Trace                 the batch    backend      binding             done     ring push
+//!    └────────────── queue_us ──────────────────────┤├────── service_us ────────┘
+//!                 (submit → dispatch)                  (dispatch → respond)
+//! ```
+//!
+//! [`Metrics::recent_traces`](metrics::Metrics::recent_traces) returns
+//! the ring's snapshots ([`TraceSnapshot`]), so queue-wait vs
+//! service-time is separable per (matrix, backend) after the fact, and
+//! stage-to-stage deltas feed the log₂ stage histograms in
+//! [`Metrics::render_text`](metrics::Metrics::render_text). The audit
+//! trail on the *decision* side is the planner's
+//! [`PlanReport`](crate::tuning::planner::PlanReport), kept per epoch
+//! on the entry and printable via
+//! [`MatrixEntry::explain`](registry::MatrixEntry::explain).
+//!
 //! **register → serve → drift → replan → swap → retire.** The serving
 //! path never blocks on any of it: workers pin a
 //! [`LiveGuard`](registry::LiveGuard) — an `Arc` snapshot of (version,
@@ -141,7 +169,11 @@
 //! * [`server`] — leader + per-backend workers, SpMM dispatch through
 //!   pinned guards, routing feedback, lifecycle.
 //! * [`metrics`] — latency/throughput accounting, the per-(matrix,
-//!   backend) EWMAs that feed routing, and drift/replan counters.
+//!   backend) EWMAs that feed routing, drift/replan counters, model-
+//!   error gauges, the flight-recorder trace ring, and the Prometheus-
+//!   style text exposition.
+//! * [`trace`] — the lock-free per-request stage record the flight
+//!   recorder retains.
 
 pub mod backend;
 pub mod batcher;
@@ -149,6 +181,7 @@ pub mod live;
 pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod trace;
 
 pub use backend::{
     Backend, BackendId, CpuBackend, ExecutionBinding, PjrtBackend, RoutingTable, SellBackend,
@@ -158,6 +191,7 @@ pub use live::{DriftReport, LiveConfig};
 pub use metrics::{DriftSignal, Metrics};
 pub use registry::{DeviceKind, LiveGuard, MatrixEntry, MatrixId, MatrixRegistry, PlanVersion};
 pub use server::{Server, ServerConfig, SubmitError};
+pub use trace::{Stage, Trace, TraceId, TraceSnapshot};
 
 /// A unit of work: multiply a registered matrix by `x`.
 #[derive(Debug)]
@@ -174,6 +208,20 @@ pub struct Request {
     /// no binding there. Part of the batching key: requests pinned to
     /// different backends never share a batch.
     pub device: Option<BackendId>,
+    /// The flight-recorder stage record every actor on the serve path
+    /// stamps; minted (with the submit stage stamped) by
+    /// [`Request::new`].
+    pub trace: std::sync::Arc<Trace>,
+}
+
+impl Request {
+    /// Mint a request with a fresh [`Trace`] whose submit stage is
+    /// stamped "now".
+    pub fn new(id: u64, matrix: impl Into<String>, x: Vec<f32>, device: Option<BackendId>) -> Self {
+        let matrix = matrix.into();
+        let trace = Trace::start(TraceId(id), &matrix);
+        Request { id, matrix, x, device, trace }
+    }
 }
 
 /// The result of one request.

@@ -69,10 +69,11 @@ use super::backend::{
 };
 use super::live::{self, DriftReport, LiveConfig, LiveEngine, ReplanJob};
 use super::metrics::Metrics;
+use super::trace::{Stage, Trace};
 use crate::kernels::{build_execution, SpMv};
 use crate::runtime::Runtime;
 use crate::sparse::{Csr, DeltaBatch, DeltaOverlay, ValuePrecision};
-use crate::tuning::planner::{self, FormatPlan};
+use crate::tuning::planner::{self, FormatPlan, PlanReport};
 use crate::util::ThreadPool;
 
 pub use crate::tuning::planner::DeviceKind;
@@ -210,15 +211,43 @@ impl LiveGuard<'_> {
         backend: BackendId,
         xs: &[&[f32]],
     ) -> Result<(Vec<Vec<f32>>, Option<f64>)> {
+        self.dispatch_multi_traced(backend, xs, &[])
+    }
+
+    /// [`LiveGuard::dispatch_multi`] with flight-recorder traces: the
+    /// kernel stage is stamped when the binding's `spmv_multi` returns
+    /// and the merge stage after the overlay patch walk, on every trace
+    /// in `traces` (the batch members, in any order — the stamps are
+    /// per-request but the work is per-batch).
+    pub fn dispatch_multi_traced(
+        &self,
+        backend: BackendId,
+        xs: &[&[f32]],
+        traces: &[&Trace],
+    ) -> Result<(Vec<Vec<f32>>, Option<f64>)> {
         let b = self.binding(backend)?;
         let mut ys = b.spmv_multi(xs)?;
+        for t in traces {
+            t.stamp(Stage::Kernel);
+        }
         let cost = b.self_timed_cost();
         if !self.patch.is_empty() {
             for (x, y) in xs.iter().zip(ys.iter_mut()) {
                 self.patch.patch_y(&self.base, x, y);
             }
         }
+        for t in traces {
+            t.stamp(Stage::Merge);
+        }
         Ok((ys, cost))
+    }
+
+    /// The plan's static roofline prior for one backend (seconds per
+    /// vector) as seeded into the pinned version's routing table — the
+    /// "predicted" side of the model-vs-measured accounting. `None`
+    /// when the backend isn't in the table or was bound unpriced.
+    pub fn static_prior(&self, backend: BackendId) -> Option<f64> {
+        self.version.routing.static_cost(backend)
     }
 
     /// Feed back an observed per-vector latency to the pinned version's
@@ -264,6 +293,11 @@ pub struct MatrixEntry {
     /// repeated drift trips fold into the one pending replan instead of
     /// queueing duplicates.
     replan_pending: AtomicBool,
+    /// The planner's decision audit per epoch: `(epoch, report)` in
+    /// swap order, registration first. Appended by replans, never
+    /// replaced — "why did this matrix get this plan" stays answerable
+    /// across live-replan epochs ([`MatrixEntry::explain`]).
+    audits: Mutex<Vec<(u64, PlanReport)>>,
 }
 
 impl MatrixEntry {
@@ -432,6 +466,40 @@ impl MatrixEntry {
         )
     }
 
+    /// The planner's decision audit for the current (latest) epoch.
+    pub fn plan_report(&self) -> PlanReport {
+        let audits = self.audits.lock().unwrap();
+        audits.last().map(|(_, r)| r.clone()).unwrap_or_default()
+    }
+
+    /// The decision audit for one specific epoch, if that epoch was
+    /// planned in this process (epoch 1 = registration).
+    pub fn plan_report_at(&self, epoch: u64) -> Option<PlanReport> {
+        let audits = self.audits.lock().unwrap();
+        audits.iter().find(|(e, _)| *e == epoch).map(|(_, r)| r.clone())
+    }
+
+    /// The full planner decision audit: the current describe line, then
+    /// every epoch's [`PlanReport`] — each gate that fired (variance,
+    /// hub walk, DIA coverage, σ fill, precision round-trip) and every
+    /// priced cost row per candidate rail/device — so "why did this
+    /// matrix get this plan" is answerable after the fact, including
+    /// across live-replan epochs.
+    pub fn explain(&self) -> String {
+        let mut out = self.describe();
+        out.push('\n');
+        let audits = self.audits.lock().unwrap();
+        for (epoch, report) in audits.iter() {
+            out.push_str(&format!("epoch {epoch}:\n"));
+            for line in report.render().lines() {
+                out.push_str("  ");
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
     /// Nonzeros of the merged matrix (base + overlay) as of the latest
     /// update.
     pub fn nnz(&self) -> usize {
@@ -512,9 +580,9 @@ impl MatrixEntry {
             if patch.is_empty() { (*base).clone() } else { patch.merge_into(&base) };
         let next_base = Arc::new(merged.clone());
         let available: Vec<BackendId> = backends.iter().map(|b| b.id()).collect();
-        let plan = match self.nshards {
-            Some(n) => planner::plan_sharded(&merged, n.max(1), &available),
-            None => planner::replan(&merged, &old.plan, self.block_hint, &available),
+        let (plan, report) = match self.nshards {
+            Some(n) => planner::plan_sharded_audited(&merged, n.max(1), &available),
+            None => planner::replan_audited(&merged, &old.plan, self.block_hint, &available),
         };
         let (plan, kernel_name, bindings, routing) =
             plan_build_bind(backends, pool, plan, merged, &self.name)?;
@@ -528,6 +596,7 @@ impl MatrixEntry {
             inflight: AtomicUsize::new(0),
         });
         let epoch = version.epoch;
+        self.audits.lock().unwrap().push((epoch, report));
         self.nnz_now.store(next_base.nnz(), Ordering::Relaxed);
         {
             let mut live = self.live.write().unwrap();
@@ -697,8 +766,8 @@ impl MatrixRegistry {
         if a.nrows() != a.ncols() {
             bail!("registry requires square matrices (got {}x{})", a.nrows(), a.ncols());
         }
-        let plan = planner::plan_hinted(&a, block_hint);
-        self.insert(name, a, plan, block_hint, None)
+        let (plan, report) = planner::plan_hinted_audited(&a, block_hint);
+        self.insert(name, a, plan, report, block_hint, None)
     }
 
     /// Register a matrix through the **scale-out** pipeline: an N-way
@@ -718,8 +787,8 @@ impl MatrixRegistry {
             bail!("sharded registration needs at least one shard");
         }
         let available: Vec<BackendId> = self.backends.iter().map(|b| b.id()).collect();
-        let plan = planner::plan_sharded(&a, nshards, &available);
-        self.insert(name, a, plan, 1, Some(nshards))
+        let (plan, report) = planner::plan_sharded_audited(&a, nshards, &available);
+        self.insert(name, a, plan, report, 1, Some(nshards))
     }
 
     /// The shared back half of registration: retain the base, build +
@@ -730,6 +799,7 @@ impl MatrixRegistry {
         name: &str,
         a: Csr<f32>,
         plan: FormatPlan,
+        report: PlanReport,
         block_hint: usize,
         nshards: Option<usize>,
     ) -> Result<MatrixId> {
@@ -767,6 +837,7 @@ impl MatrixRegistry {
             }),
             mutate: Mutex::new(()),
             replan_pending: AtomicBool::new(false),
+            audits: Mutex::new(vec![(1, report)]),
         });
         let mut entries = self.entries.write().unwrap();
         if let Some(old) = entries.by_name.insert(name.to_string(), entry.clone()) {

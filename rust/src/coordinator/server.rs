@@ -38,6 +38,7 @@ use super::backend::{Backend, BackendId};
 use super::batcher::{Batch, DynamicBatcher};
 use super::metrics::Metrics;
 use super::registry::{MatrixEntry, MatrixRegistry};
+use super::trace::{Stage, Trace};
 use super::{Request, Response};
 
 /// Server tunables. Routing carries no knob here: each batch goes to
@@ -423,7 +424,9 @@ impl Server {
     ) -> Result<(u64, Receiver<Response>), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let msg = LeaderMsg::Submit(Request { id, matrix: matrix.to_string(), x, device }, tx);
+        // Request::new mints the flight-recorder trace with the submit
+        // stage stamped here, before the leader hand-off
+        let msg = LeaderMsg::Submit(Request::new(id, matrix, x, device), tx);
         if self.submit_tx.send(msg).is_err() {
             self.inflight.release(1);
             return Err(SubmitError::Closed);
@@ -506,6 +509,10 @@ fn leader_loop(
             }
         };
         let device = entry.route(batch.device);
+        for (r, _) in &batch.requests {
+            r.trace.set_backend(device);
+            r.trace.stamp(Stage::Route);
+        }
         match worker_txs.get(&device) {
             Some(tx) => {
                 if let Err(send_err) = tx.send(Work { entry, batch, resp }) {
@@ -611,13 +618,17 @@ fn backend_worker(
             }
         }
         let xs: Vec<&[f32]> = valid.iter().map(|((r, _), _)| r.x.as_slice()).collect();
+        let traces: Vec<&Trace> = valid.iter().map(|((r, _), _)| r.trace.as_ref()).collect();
+        for t in &traces {
+            t.stamp(Stage::Dispatch);
+        }
         let t0 = Instant::now();
         // pin the serving state once for the whole batch: version
         // (bindings + routing), base matrix, and delta overlay all
         // snapshot together, and the version's inflight count holds it
         // alive across any concurrent replan swap
         let guard = entry.pin();
-        let dispatched = guard.dispatch_multi(device, &xs);
+        let dispatched = guard.dispatch_multi_traced(device, &xs, &traces);
         match dispatched {
             Ok((ys, self_cost)) => {
                 debug_assert_eq!(ys.len(), valid.len());
@@ -631,6 +642,19 @@ fn backend_worker(
                         .unwrap_or_else(|| t0.elapsed().as_secs_f64() / xs.len() as f64);
                     let ewma = metrics.observe_device(&batch.matrix, guard.uid(), device, per_vec);
                     guard.correct_route(device, ewma);
+                    // model-vs-measured accounting: hold the plan's
+                    // static roofline prior to account against what the
+                    // hardware just did (skipped when the binding was
+                    // never priced — there is no model to audit)
+                    if let Some(prior) = guard.static_prior(device) {
+                        metrics.observe_model_error(
+                            &batch.matrix,
+                            guard.uid(),
+                            device,
+                            per_vec,
+                            prior,
+                        );
+                    }
                 }
                 for (y, (member, tx)) in ys.into_iter().zip(valid) {
                     respond(member, tx, Ok(y), &metrics, &inflight, device, entry.flops());
@@ -651,7 +675,9 @@ fn backend_worker(
 /// Record metrics for one served request, release its inflight slot,
 /// and send its response. The slot is released *before* the send so a
 /// client that has received its response always observes the freed
-/// capacity in `Server::inflight` / `try_submit`.
+/// capacity in `Server::inflight` / `try_submit`. This is also where
+/// the flight recorder closes the trace: the respond stage and outcome
+/// are stamped and the snapshot lands in the metrics trace ring.
 fn respond(
     (req, enqueued): (Request, Instant),
     tx: Sender<Response>,
@@ -663,6 +689,9 @@ fn respond(
 ) {
     let latency = enqueued.elapsed();
     metrics.record(latency, if result.is_ok() { flops } else { 0.0 }, result.is_ok());
+    req.trace.set_ok(result.is_ok());
+    req.trace.stamp(Stage::Respond);
+    metrics.record_trace(&req.trace);
     inflight.release(1);
     let _ = tx.send(Response { id: req.id, result, device, latency });
 }
@@ -748,6 +777,35 @@ mod tests {
             "routing estimate {est} must track the metrics EWMA {obs}"
         );
         assert!(e.describe().contains('*'), "{}", e.describe());
+        server.shutdown();
+    }
+
+    #[test]
+    fn served_requests_leave_full_traces_and_model_error() {
+        let server = test_server();
+        for _ in 0..3 {
+            assert!(server.call("grid", vec![1.0; 256]).result.is_ok());
+        }
+        let traces = server.metrics().recent_traces();
+        assert_eq!(traces.len(), 3);
+        let t = traces.last().unwrap();
+        assert_eq!(t.matrix, "grid");
+        assert_eq!(t.backend, Some(BackendId::Cpu));
+        assert!(t.ok);
+        // every stage reached; offsets monotone; hop deltas sum to e2e
+        let offs: Vec<f64> =
+            t.stages_us.iter().map(|o| o.expect("all stages stamped")).collect();
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]), "{offs:?}");
+        let sum: f64 = t.deltas_us().iter().map(|(_, d)| d).sum();
+        assert!((sum - t.total_us().unwrap()).abs() < 1e-6, "{sum}");
+        assert!(t.queue_us().unwrap() >= 0.0);
+        assert!(t.service_us().unwrap() >= 0.0);
+        // the CPU binding is priced, so the model-error gauge must exist
+        let err = server
+            .metrics()
+            .model_error("grid", BackendId::Cpu)
+            .expect("priced batches must leave a model-error gauge");
+        assert!(err.is_finite() && err >= 0.0, "{err}");
         server.shutdown();
     }
 

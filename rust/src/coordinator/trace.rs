@@ -1,0 +1,333 @@
+//! Request-stage tracing: the flight recorder's per-request record.
+//!
+//! Every [`Request`](super::Request) carries an `Arc<Trace>` from the
+//! moment it is created. Each actor on the serve path stamps the stage
+//! it completes — submit (request minted), enqueue (batcher queue),
+//! batch-close (size cap or deadline released the batch), route (the
+//! leader picked a backend), dispatch (the worker hands the block to
+//! the binding), kernel (the binding's `spmv_multi` returned), merge
+//! (the overlay patch walk finished), respond (metrics recorded, reply
+//! sent) — as a nanosecond offset from the trace's origin instant.
+//!
+//! Stamps are lock-free: one atomic store per stage, first-write-wins,
+//! so a trace can be stamped from the submitting thread, the leader,
+//! and a worker without coordination. The finished trace is snapshotted
+//! into the metrics flight-recorder ring
+//! ([`Metrics::recent_traces`](super::Metrics::recent_traces)), which
+//! is what makes queue-wait vs service-time separable per (matrix,
+//! backend) after the fact: `queue_us` is submit→dispatch, `service_us`
+//! is dispatch→respond, and every intermediate hop has its own delta.
+//!
+//! A stage a request never reaches (an error answered at the leader,
+//! say) simply stays unstamped; snapshot consumers see `None` and the
+//! stage histograms skip the gap.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::backend::BackendId;
+
+/// Copyable identity of one traced request — the server's request id,
+/// so a client holding the id returned by `submit` can find its trace
+/// in the flight recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// The serve-path stages, in pipeline order. The numeric value indexes
+/// the trace's stamp array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// The request was minted (`Server::submit*`).
+    Submit = 0,
+    /// The request entered its batching queue.
+    Enqueue = 1,
+    /// The batch released — size cap hit or deadline expired.
+    BatchClose = 2,
+    /// The leader picked the execution backend.
+    Route = 3,
+    /// The worker handed the block to the binding.
+    Dispatch = 4,
+    /// The binding's kernel returned.
+    Kernel = 5,
+    /// The overlay patch walk (live entries) finished.
+    Merge = 6,
+    /// Metrics recorded; the reply went out.
+    Respond = 7,
+}
+
+/// Number of stages a trace records.
+pub const STAGE_COUNT: usize = 8;
+
+/// All stages in pipeline order (for iteration).
+pub const STAGES: [Stage; STAGE_COUNT] = [
+    Stage::Submit,
+    Stage::Enqueue,
+    Stage::BatchClose,
+    Stage::Route,
+    Stage::Dispatch,
+    Stage::Kernel,
+    Stage::Merge,
+    Stage::Respond,
+];
+
+impl Stage {
+    /// Exposition label (`csrk_stage_us_bucket{stage="..."}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Enqueue => "enqueue",
+            Stage::BatchClose => "batch_close",
+            Stage::Route => "route",
+            Stage::Dispatch => "dispatch",
+            Stage::Kernel => "kernel",
+            Stage::Merge => "merge",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+fn encode_backend(b: BackendId) -> u8 {
+    match b {
+        BackendId::Cpu => 1,
+        BackendId::Pjrt => 2,
+        BackendId::Sell => 3,
+    }
+}
+
+fn decode_backend(v: u8) -> Option<BackendId> {
+    match v {
+        1 => Some(BackendId::Cpu),
+        2 => Some(BackendId::Pjrt),
+        3 => Some(BackendId::Sell),
+        _ => None,
+    }
+}
+
+/// The lock-free per-request stage record. Stamps are nanosecond
+/// offsets from the trace's origin, stored `+1` so zero can mean "never
+/// stamped"; first write wins, so re-routed or retried paths keep their
+/// original stamp.
+#[derive(Debug)]
+pub struct Trace {
+    id: TraceId,
+    matrix: String,
+    t0: Instant,
+    stamps: [AtomicU64; STAGE_COUNT],
+    /// Routed backend, `encode_backend + 0`; 0 until routed.
+    backend: AtomicU8,
+    ok: AtomicBool,
+}
+
+impl Trace {
+    /// Mint a trace with the submit stage stamped now.
+    pub fn start(id: TraceId, matrix: &str) -> Arc<Trace> {
+        let t = Trace {
+            id,
+            matrix: matrix.to_string(),
+            t0: Instant::now(),
+            stamps: Default::default(),
+            backend: AtomicU8::new(0),
+            ok: AtomicBool::new(false),
+        };
+        t.stamp(Stage::Submit);
+        Arc::new(t)
+    }
+
+    /// This trace's id (the server request id).
+    pub fn id(&self) -> TraceId {
+        self.id
+    }
+
+    /// The matrix this request targets.
+    pub fn matrix(&self) -> &str {
+        &self.matrix
+    }
+
+    /// Stamp one stage at "now". First write wins; later stamps of the
+    /// same stage are ignored.
+    pub fn stamp(&self, stage: Stage) {
+        let ns = self.t0.elapsed().as_nanos().min((u64::MAX - 1) as u128) as u64;
+        let _ = self.stamps[stage as usize].compare_exchange(
+            0,
+            ns + 1,
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Record the backend the leader routed this request to.
+    pub fn set_backend(&self, backend: BackendId) {
+        self.backend.store(encode_backend(backend), Ordering::Relaxed);
+    }
+
+    /// Record whether the request was ultimately answered OK.
+    pub fn set_ok(&self, ok: bool) {
+        self.ok.store(ok, Ordering::Relaxed);
+    }
+
+    /// Offset of one stage from the submit origin, in nanoseconds;
+    /// `None` if the request never reached it.
+    pub fn stage_ns(&self, stage: Stage) -> Option<u64> {
+        match self.stamps[stage as usize].load(Ordering::Acquire) {
+            0 => None,
+            v => Some(v - 1),
+        }
+    }
+
+    /// A point-in-time copy for the flight-recorder ring.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut stages_us = [None; STAGE_COUNT];
+        for (k, s) in STAGES.iter().enumerate() {
+            stages_us[k] = self.stage_ns(*s).map(|ns| ns as f64 / 1e3);
+        }
+        TraceSnapshot {
+            id: self.id,
+            matrix: self.matrix.clone(),
+            backend: decode_backend(self.backend.load(Ordering::Relaxed)),
+            ok: self.ok.load(Ordering::Relaxed),
+            stages_us,
+        }
+    }
+}
+
+/// A finished (or abandoned) trace as retained by the flight recorder:
+/// per-stage offsets from submit in microseconds, the routed backend,
+/// and the outcome.
+#[derive(Debug, Clone)]
+pub struct TraceSnapshot {
+    /// The request id.
+    pub id: TraceId,
+    /// The matrix the request targeted.
+    pub matrix: String,
+    /// The backend the leader routed to (`None` when the request was
+    /// answered before routing — e.g. an unknown matrix).
+    pub backend: Option<BackendId>,
+    /// Did the request get an `Ok` result?
+    pub ok: bool,
+    /// Offset of each stage from submit, µs, indexed by
+    /// [`Stage`]`as usize`; `None` = never reached.
+    pub stages_us: [Option<f64>; STAGE_COUNT],
+}
+
+impl TraceSnapshot {
+    /// Offset of one stage from submit, µs.
+    pub fn stage_us(&self, stage: Stage) -> Option<f64> {
+        self.stages_us[stage as usize]
+    }
+
+    /// End-to-end time (submit→respond), µs.
+    pub fn total_us(&self) -> Option<f64> {
+        self.stage_us(Stage::Respond)
+    }
+
+    /// Time spent before execution started (submit→dispatch): the
+    /// batching queue-wait plus routing.
+    pub fn queue_us(&self) -> Option<f64> {
+        self.stage_us(Stage::Dispatch)
+    }
+
+    /// Time spent in execution and response (dispatch→respond).
+    pub fn service_us(&self) -> Option<f64> {
+        match (self.stage_us(Stage::Dispatch), self.stage_us(Stage::Respond)) {
+            (Some(d), Some(r)) => Some(r - d),
+            _ => None,
+        }
+    }
+
+    /// `(stage, delta µs)` between each consecutive pair of *reached*
+    /// stages — the per-hop latency split, labeled by the stage that
+    /// completed. The deltas sum to [`TraceSnapshot::total_us`] when
+    /// every stage was reached.
+    pub fn deltas_us(&self) -> Vec<(Stage, f64)> {
+        let mut out = Vec::new();
+        let mut prev: Option<f64> = None;
+        for (k, s) in STAGES.iter().enumerate() {
+            if let Some(us) = self.stages_us[k] {
+                if let Some(p) = prev {
+                    out.push((*s, us - p));
+                }
+                prev = Some(us);
+            }
+        }
+        out
+    }
+
+    /// One human-readable line: id, matrix, backend, outcome, and the
+    /// per-hop split.
+    pub fn render(&self) -> String {
+        let hops: Vec<String> = self
+            .deltas_us()
+            .iter()
+            .map(|(s, d)| format!("{} {:.1}us", s.name(), d))
+            .collect();
+        format!(
+            "{} {} on {} [{}]: {}",
+            self.id,
+            self.matrix,
+            match self.backend {
+                Some(b) => format!("{b:?}"),
+                None => "unrouted".into(),
+            },
+            if self.ok { "ok" } else { "err" },
+            hops.join(" → "),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamps_are_monotone_and_first_write_wins() {
+        let t = Trace::start(TraceId(7), "m");
+        assert_eq!(t.id(), TraceId(7));
+        assert_eq!(t.matrix(), "m");
+        for s in [Stage::Enqueue, Stage::BatchClose, Stage::Route, Stage::Dispatch] {
+            t.stamp(s);
+        }
+        let first = t.stage_ns(Stage::Enqueue).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.stamp(Stage::Enqueue); // a re-stamp must not move the record
+        assert_eq!(t.stage_ns(Stage::Enqueue).unwrap(), first);
+        // pipeline order implies non-decreasing offsets
+        let offs: Vec<u64> = [Stage::Submit, Stage::Enqueue, Stage::BatchClose, Stage::Route]
+            .iter()
+            .map(|&s| t.stage_ns(s).unwrap())
+            .collect();
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]), "{offs:?}");
+    }
+
+    #[test]
+    fn snapshot_reports_gaps_and_splits() {
+        let t = Trace::start(TraceId(1), "m");
+        t.set_backend(BackendId::Sell);
+        t.stamp(Stage::Enqueue);
+        // skip batch-close/route: an error path answered early
+        t.stamp(Stage::Respond);
+        t.set_ok(true);
+        let snap = t.snapshot();
+        assert_eq!(snap.backend, Some(BackendId::Sell));
+        assert!(snap.ok);
+        assert!(snap.stage_us(Stage::BatchClose).is_none());
+        assert!(snap.stage_us(Stage::Dispatch).is_none());
+        assert!(snap.queue_us().is_none());
+        assert!(snap.service_us().is_none());
+        let deltas = snap.deltas_us();
+        // submit→enqueue and enqueue→respond: gaps are skipped, not zeroed
+        assert_eq!(deltas.len(), 2, "{deltas:?}");
+        assert_eq!(deltas[0].0, Stage::Enqueue);
+        assert_eq!(deltas[1].0, Stage::Respond);
+        let sum: f64 = deltas.iter().map(|(_, d)| d).sum();
+        let total = snap.total_us().unwrap();
+        assert!((sum - total).abs() < 1e-9, "{sum} vs {total}");
+        assert!(snap.render().contains("respond"), "{}", snap.render());
+    }
+}

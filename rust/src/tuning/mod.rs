@@ -44,6 +44,6 @@ pub use heuristic::{
     block_dims, csr3_params, csr3_params_multi, effective_rdensity, Device, TuneParams,
 };
 pub use planner::{
-    plan_sharded, DeviceKind, FormatPlan, MatrixStats, PartPlan, PlannedKernel, ReorderPlan,
-    ShardPlan,
+    plan_sharded, CostRow, DeviceKind, FormatPlan, GateDecision, MatrixStats, PartPlan,
+    PlanReport, PlannedKernel, ReorderPlan, ShardPlan,
 };

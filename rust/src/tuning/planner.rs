@@ -744,6 +744,161 @@ impl FormatPlan {
     }
 }
 
+/// One recorded gate evaluation on the decision path: the named
+/// predicate, the measured value it compared against its threshold, and
+/// whether it held. `fired = true` means the predicate held (the
+/// variance was regular, the DIA stream undercut CSR, the σ window
+/// bounded the fill, …); the note says what that implied for the plan.
+#[derive(Debug, Clone)]
+pub struct GateDecision {
+    /// Stable gate name (e.g. `"variance"`, `"dia-coverage"`,
+    /// `"sell-fill"`).
+    pub gate: &'static str,
+    /// The measured quantity the gate compared.
+    pub value: f64,
+    /// The threshold it compared against.
+    pub threshold: f64,
+    /// Did the predicate hold?
+    pub fired: bool,
+    /// What holding (or not) implied for the plan.
+    pub note: String,
+}
+
+/// One priced candidate row: a candidate plan shape (by its
+/// [`FormatPlan::kernel_label`]-style label), the backend it was priced
+/// on, and the roofline estimate. `chosen` is set by the audit once the
+/// final plan is known.
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    /// Candidate label — matches [`FormatPlan::kernel_label`] for the
+    /// whole-plan rows; sharded plans additionally carry per-shard rows
+    /// labeled `shard{k}:{kernel}`.
+    pub candidate: String,
+    /// Backend the estimate is for.
+    pub device: DeviceKind,
+    /// Estimated seconds per single-vector SpMV.
+    pub cost: f64,
+    /// True on the rows belonging to the plan that won.
+    pub chosen: bool,
+}
+
+/// The planner's decision audit: every gate evaluated and every cost
+/// row priced on the way to a [`FormatPlan`], in decision order. Built
+/// by the `*_audited` entry points ([`plan_hinted_audited`],
+/// [`plan_sharded_audited`], [`replan_audited`]) — the same code path
+/// the un-audited functions run, with the recorder threaded through —
+/// and retained per plan epoch by the registry
+/// (`coordinator::registry::MatrixEntry::explain`).
+#[derive(Debug, Clone, Default)]
+pub struct PlanReport {
+    /// Gate evaluations, in the order the planner took them.
+    pub gates: Vec<GateDecision>,
+    /// Priced candidate rows, in pricing order.
+    pub candidates: Vec<CostRow>,
+    /// The winning plan's [`FormatPlan::kernel_label`].
+    pub chosen: String,
+}
+
+impl PlanReport {
+    fn gate(
+        &mut self,
+        gate: &'static str,
+        value: f64,
+        threshold: f64,
+        fired: bool,
+        note: impl Into<String>,
+    ) {
+        self.gates.push(GateDecision { gate, value, threshold, fired, note: note.into() });
+    }
+
+    fn price(&mut self, candidate: impl Into<String>, device: DeviceKind, cost: f64) {
+        self.candidates
+            .push(CostRow { candidate: candidate.into(), device, cost, chosen: false });
+    }
+
+    fn finish(&mut self, plan: &FormatPlan) {
+        self.chosen = plan.kernel_label();
+        for row in &mut self.candidates {
+            row.chosen = row.candidate == self.chosen;
+        }
+    }
+
+    /// Multi-line human-readable audit: the chosen label, each gate in
+    /// decision order, each cost row (`*` marks the winner's rows).
+    pub fn render(&self) -> String {
+        let chosen = if self.chosen.is_empty() { "(unfinished)" } else { self.chosen.as_str() };
+        let mut s = format!("chosen: {chosen}\n");
+        for g in &self.gates {
+            s.push_str(&format!(
+                "gate {}: {} (value {:.4} vs threshold {:.4}) — {}\n",
+                g.gate,
+                if g.fired { "held" } else { "rejected" },
+                g.value,
+                g.threshold,
+                g.note,
+            ));
+        }
+        for c in &self.candidates {
+            s.push_str(&format!(
+                "cost {}{} @ {:?}: {:.3}us\n",
+                if c.chosen { "* " } else { "  " },
+                c.candidate,
+                c.device,
+                c.cost * 1e6,
+            ));
+        }
+        s
+    }
+}
+
+/// [`plan_hinted`] with the decision audit attached: the identical
+/// plan, plus the [`PlanReport`] recording every gate and cost row that
+/// produced it.
+pub fn plan_hinted_audited<T: Scalar>(a: &Csr<T>, block_hint: usize) -> (FormatPlan, PlanReport) {
+    let mut rep = PlanReport::default();
+    let plan = plan_hinted_prec_rep(a, block_hint, None, &mut rep);
+    rep.finish(&plan);
+    (plan, rep)
+}
+
+/// [`plan_sharded`] with the decision audit attached.
+pub fn plan_sharded_audited<T: Scalar>(
+    a: &Csr<T>,
+    nshards: usize,
+    available: &[DeviceKind],
+) -> (FormatPlan, PlanReport) {
+    let mut rep = PlanReport::default();
+    let plan = plan_sharded_rep(a, nshards, available, &mut rep);
+    rep.finish(&plan);
+    (plan, rep)
+}
+
+/// [`replan`] with the decision audit attached — what the live-replan
+/// path stores per epoch.
+pub fn replan_audited<T: Scalar>(
+    a: &Csr<T>,
+    prior: &FormatPlan,
+    block_hint: usize,
+    available: &[DeviceKind],
+) -> (FormatPlan, PlanReport) {
+    let mut rep = PlanReport::default();
+    let plan = match prior {
+        FormatPlan::Sharded { shards, .. } => {
+            rep.gate(
+                "topology",
+                shards.len() as f64,
+                0.0,
+                true,
+                "prior is sharded; replan keeps the shard count",
+            );
+            plan_sharded_rep(a, shards.len().max(1), available, &mut rep)
+        }
+        _ => plan_hinted_prec_rep(a, block_hint, None, &mut rep),
+    };
+    rep.finish(&plan);
+    (plan, rep)
+}
+
 /// Plan a matrix for single-vector traffic.
 pub fn plan<T: Scalar>(a: &Csr<T>) -> FormatPlan {
     plan_hinted(a, 1)
@@ -812,6 +967,18 @@ pub fn plan_hinted_prec<T: Scalar>(
     block_hint: usize,
     forced: Option<ValuePrecision>,
 ) -> FormatPlan {
+    plan_hinted_prec_rep(a, block_hint, forced, &mut PlanReport::default())
+}
+
+/// The single source of truth behind [`plan_hinted_prec`] and
+/// [`plan_hinted_audited`]: the decision path with the audit recorder
+/// threaded through (the un-audited callers pass a throwaway report).
+fn plan_hinted_prec_rep<T: Scalar>(
+    a: &Csr<T>,
+    block_hint: usize,
+    forced: Option<ValuePrecision>,
+    rep: &mut PlanReport,
+) -> FormatPlan {
     let stats = MatrixStats::of(a);
     let hint = block_hint.max(1);
     let prec = match forced {
@@ -819,17 +986,64 @@ pub fn plan_hinted_prec<T: Scalar>(
         Some(_) => ValuePrecision::F32,
         None => choose_precision(a),
     };
+    let elem = std::mem::size_of::<T>();
+    rep.gate(
+        "precision",
+        prec.val_bytes_or(elem) as f64,
+        elem as f64,
+        prec != ValuePrecision::F32,
+        match forced {
+            Some(_) => format!("forced override: values stored {}", prec.label()),
+            None => format!("bit-exact auto-gate: values stored {}", prec.label()),
+        },
+    );
 
     // The §6 variance criterion, hardened by the absolute hub trigger:
     // a few rails on a large matrix dilute the variance below 10, but a
     // disproportionate longest row still deserves the hub walk — on the
     // regular path every rail nonzero beyond the clamped padded width
     // serializes through the host-side overflow fix-up.
-    if stats.is_regular() && !stats.has_disproportionate_row() {
-        return regular_plan(a, stats, hint, prec);
+    let regular = stats.is_regular();
+    let disproportionate = stats.has_disproportionate_row();
+    rep.gate(
+        "variance",
+        stats.row_nnz_variance,
+        REGULARITY_VARIANCE_MAX,
+        regular,
+        "§6 row-nnz variance criterion",
+    );
+    rep.gate(
+        "disproportionate-row",
+        stats.max_row_nnz as f64,
+        HUB_ROW_RATIO * stats.rdensity.max(1.0),
+        disproportionate,
+        "absolute hub trigger (longest row vs mean)",
+    );
+    if regular && !disproportionate {
+        return regular_plan(a, stats, hint, prec, rep);
     }
 
-    if let Some(h) = detect_hub_split(a) {
+    let hub = detect_hub_split(a);
+    match &hub {
+        Some(h) => rep.gate(
+            "hub-walk",
+            h.hub_rows as f64 / stats.nrows.max(1) as f64,
+            MAX_HUB_ROW_FRACTION,
+            true,
+            format!(
+                "peeling {} rows above nnz {} restores body regularity",
+                h.hub_rows, h.threshold,
+            ),
+        ),
+        None => rep.gate(
+            "hub-walk",
+            1.0,
+            MAX_HUB_ROW_FRACTION,
+            false,
+            "no cap-bounded hub set restores body regularity",
+        ),
+    }
+    if let Some(h) = hub {
         // Hub pattern: a small set of rail rows explains the skew. The
         // body earns the full regular treatment (Band-k targets at the
         // body's density); the hubs go to a skew-tolerant kernel in
@@ -857,7 +1071,7 @@ pub fn plan_hinted_prec<T: Scalar>(
             rows: h.hub_rows,
             nnz: h.hub_nnz,
             reorder: None,
-            kernel: irregular_kernel(&rem_row_nnz),
+            kernel: irregular_kernel_rep(&rem_row_nnz, rep, "hub remainder"),
         };
         // body rows are all ≤ threshold; the clamp can still cut the
         // width below the threshold, leaving overflow nonzeros that the
@@ -877,12 +1091,16 @@ pub fn plan_hinted_prec<T: Scalar>(
         let pjrt =
             part_pjrt_cost::<T>(h.body_rows, stats.ncols, h.body_nnz, width, body_overflow)
                 + rem_cpu;
+        let label = format!("hybrid({}+{})", body.kernel.label(), remainder.kernel.label());
+        rep.price(&label, DeviceKind::Cpu, cpu);
+        rep.price(&label, DeviceKind::Pjrt, pjrt);
         let mut costs = vec![(DeviceKind::Cpu, cpu), (DeviceKind::Pjrt, pjrt)];
         if matches!(remainder.kernel, PlannedKernel::SellCs { .. }) {
             // the SELL device placement: body stays on its host kernel,
             // the remainder rebinds at the device chunk width
             let sell = body_cpu
                 + sell_device_cost_prec::<T>(&rem_row_nnz, h.hub_rows, stats.ncols, prec);
+            rep.price(&label, DeviceKind::Sell, sell);
             costs.push((DeviceKind::Sell, sell));
         }
         return FormatPlan::Hybrid {
@@ -900,7 +1118,14 @@ pub fn plan_hinted_prec<T: Scalar>(
     if stats.is_regular() {
         // The absolute trigger fired but no cap-bounded split explains
         // the long rows — the regular path is still the best plan.
-        return regular_plan(a, stats, hint, prec);
+        rep.gate(
+            "variance-post-hub",
+            stats.row_nnz_variance,
+            REGULARITY_VARIANCE_MAX,
+            true,
+            "absolute trigger fired but no hub split; the regular rail keeps the plan",
+        );
+        return regular_plan(a, stats, hint, prec, rep);
     }
 
     // Wholesale irregular: reordering for band structure does not fix
@@ -911,16 +1136,14 @@ pub fn plan_hinted_prec<T: Scalar>(
     // only, as before.
     let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
     let row_nnz: Vec<usize> = (0..a.nrows()).map(|i| a.row_nnz(i)).collect();
-    let kernel = irregular_kernel(&row_nnz);
-    let mut costs = vec![(
-        DeviceKind::Cpu,
-        part_cpu_cost_prec::<T>(stats.nrows, stats.ncols, stats.nnz, prec),
-    )];
+    let kernel = irregular_kernel_rep(&row_nnz, rep, "wholesale irregular");
+    let cpu = part_cpu_cost_prec::<T>(stats.nrows, stats.ncols, stats.nnz, prec);
+    rep.price(kernel.label(), DeviceKind::Cpu, cpu);
+    let mut costs = vec![(DeviceKind::Cpu, cpu)];
     if matches!(kernel, PlannedKernel::SellCs { .. }) {
-        costs.push((
-            DeviceKind::Sell,
-            sell_device_cost_prec::<T>(&row_nnz, stats.nrows, stats.ncols, prec),
-        ));
+        let sell = sell_device_cost_prec::<T>(&row_nnz, stats.nrows, stats.ncols, prec);
+        rep.price(kernel.label(), DeviceKind::Sell, sell);
+        costs.push((DeviceKind::Sell, sell));
     }
     FormatPlan::Single {
         stats,
@@ -966,6 +1189,20 @@ pub fn plan_sharded<T: Scalar>(
     nshards: usize,
     available: &[DeviceKind],
 ) -> FormatPlan {
+    plan_sharded_rep(a, nshards, available, &mut PlanReport::default())
+}
+
+/// The single source of truth behind [`plan_sharded`] and
+/// [`plan_sharded_audited`]: shard planning with the audit recorder
+/// threaded through. Each shard contributes a `shard{k}:{kernel}` cost
+/// row on its placed backend; the ensemble row (at the plan's own
+/// label) prices the slowest shard.
+fn plan_sharded_rep<T: Scalar>(
+    a: &Csr<T>,
+    nshards: usize,
+    available: &[DeviceKind],
+    rep: &mut PlanReport,
+) -> FormatPlan {
     assert!(nshards >= 1, "need at least one shard");
     let stats = MatrixStats::of(a);
     let row_nnz: Vec<usize> = (0..a.nrows()).map(|i| a.row_nnz(i)).collect();
@@ -992,11 +1229,16 @@ pub fn plan_sharded<T: Scalar>(
             DeviceKind::Sell => sell_device_cost::<T>(slice, rows, stats.ncols),
             _ => part_cpu_cost::<T>(rows, stats.ncols, nnz),
         };
+        rep.price(format!("shard{k}:{}", kernel.label()), backend, cost);
         slowest = slowest.max(cost);
         shards.push(ShardPlan { rows, nnz, kernel, backend, cost });
     }
     let costs = vec![(DeviceKind::Cpu, slowest)];
-    FormatPlan::Sharded { stats, shards, costs }
+    let plan = FormatPlan::Sharded { stats, shards, costs };
+    // the ensemble row: the host coordinates the fan-out, priced at the
+    // slowest shard (shards run concurrently)
+    rep.price(plan.kernel_label(), DeviceKind::Cpu, slowest);
+    plan
 }
 
 /// Re-plan a **merged** live matrix against its prior plan — the
@@ -1097,12 +1339,21 @@ fn dia_plan<T: Scalar>(
     stats: &MatrixStats,
     hint: usize,
     prec: ValuePrecision,
+    rep: &mut PlanReport,
 ) -> Option<FormatPlan> {
     let offsets = &stats.dia_offsets;
     if offsets.is_empty() {
+        rep.gate("dia-offsets", 0.0, 1.0, false, "no diagonal qualifies; DIA declined");
         return None;
     }
     let ndiags = offsets.len();
+    rep.gate(
+        "dia-offsets",
+        ndiags as f64,
+        1.0,
+        true,
+        format!("{ndiags} qualifying diagonals nominated"),
+    );
     let elem = std::mem::size_of::<T>();
     let val_elem = prec.val_bytes_or(elem);
     // the row-wise Fukaya cut: a row joins the DIA body only when every
@@ -1124,12 +1375,43 @@ fn dia_plan<T: Scalar>(
             rem_row_nnz.push(cols.len());
         }
     }
+    let capture = body_nnz as f64 / stats.nnz.max(1) as f64;
     if (body_nnz as f64) < DIA_MIN_COVERAGE * stats.nnz as f64 {
+        rep.gate(
+            "dia-coverage",
+            capture,
+            DIA_MIN_COVERAGE,
+            false,
+            "row-wise capture under the Fukaya gate; DIA declined",
+        );
         return None;
     }
-    if dia_bytes(n, stats.ncols, ndiags, elem) >= spmv_bytes(n, stats.ncols, stats.nnz, elem) {
+    rep.gate(
+        "dia-coverage",
+        capture,
+        DIA_MIN_COVERAGE,
+        true,
+        format!("{body_rows} of {n} rows wholly on the diagonal set"),
+    );
+    let dia_stream = dia_bytes(n, stats.ncols, ndiags, elem) as f64;
+    let csr_stream = spmv_bytes(n, stats.ncols, stats.nnz, elem) as f64;
+    if dia_stream >= csr_stream {
+        rep.gate(
+            "dia-bytes",
+            dia_stream,
+            csr_stream,
+            false,
+            "padded slot stream does not undercut the CSR stream; DIA declined",
+        );
         return None;
     }
+    rep.gate(
+        "dia-bytes",
+        dia_stream,
+        csr_stream,
+        true,
+        "zero-index slot stream undercuts the CSR stream",
+    );
     let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
     let kernel = PlannedKernel::Dia { ndiags };
     if rem_row_nnz.is_empty() {
@@ -1144,6 +1426,7 @@ fn dia_plan<T: Scalar>(
             elem,
             CPU_ROOFLINE.mem_bw_gbps,
         );
+        rep.price("dia", DeviceKind::Cpu, cpu);
         return Some(FormatPlan::Single {
             stats: stats.clone(),
             reorder: None,
@@ -1161,7 +1444,7 @@ fn dia_plan<T: Scalar>(
         rows: rem_rows,
         nnz: rem_nnz,
         reorder: None,
-        kernel: irregular_kernel(&rem_row_nnz),
+        kernel: irregular_kernel_rep(&rem_row_nnz, rep, "dia remainder"),
     };
     let body_cpu = dia_part_cost_val(
         body_rows,
@@ -1173,12 +1456,14 @@ fn dia_plan<T: Scalar>(
         CPU_ROOFLINE.mem_bw_gbps,
     );
     let rem_cpu = part_cpu_cost_prec::<T>(rem_rows, stats.ncols, rem_nnz, prec);
+    let label = format!("hybrid(dia+{})", remainder.kernel.label());
+    rep.price(&label, DeviceKind::Cpu, body_cpu + rem_cpu);
     let mut costs = vec![(DeviceKind::Cpu, body_cpu + rem_cpu)];
     if matches!(remainder.kernel, PlannedKernel::SellCs { .. }) {
-        costs.push((
-            DeviceKind::Sell,
-            body_cpu + sell_device_cost_prec::<T>(&rem_row_nnz, rem_rows, stats.ncols, prec),
-        ));
+        let sell =
+            body_cpu + sell_device_cost_prec::<T>(&rem_row_nnz, rem_rows, stats.ncols, prec);
+        rep.price(&label, DeviceKind::Sell, sell);
+        costs.push((DeviceKind::Sell, sell));
     }
     Some(FormatPlan::Hybrid {
         stats: stats.clone(),
@@ -1202,8 +1487,9 @@ fn regular_plan<T: Scalar>(
     stats: MatrixStats,
     hint: usize,
     prec: ValuePrecision,
+    rep: &mut PlanReport,
 ) -> FormatPlan {
-    if let Some(p) = dia_plan(a, &stats, hint, prec) {
+    if let Some(p) = dia_plan(a, &stats, hint, prec, rep) {
         return p;
     }
     let gpu_params = csr3_params_multi(Device::Ampere, stats.rdensity, hint);
@@ -1214,14 +1500,12 @@ fn regular_plan<T: Scalar>(
         seed: BANDK_SEED,
     };
     let width = stats.max_row_nnz.next_power_of_two().clamp(PJRT_MIN_WIDTH, PJRT_MAX_WIDTH);
-    let costs = vec![
-        (
-            DeviceKind::Cpu,
-            part_cpu_cost_prec::<T>(stats.nrows, stats.ncols, stats.nnz, prec),
-        ),
-        // the padded export streams native values — see `plan_hinted_prec`
-        (DeviceKind::Pjrt, pjrt_cost(a, width)),
-    ];
+    let cpu = part_cpu_cost_prec::<T>(stats.nrows, stats.ncols, stats.nnz, prec);
+    // the padded export streams native values — see `plan_hinted_prec`
+    let pjrt = pjrt_cost(a, width);
+    rep.price("csr2", DeviceKind::Cpu, cpu);
+    rep.price("csr2", DeviceKind::Pjrt, pjrt);
+    let costs = vec![(DeviceKind::Cpu, cpu), (DeviceKind::Pjrt, pjrt)];
     FormatPlan::Single {
         stats,
         reorder: Some(reorder),
@@ -1310,13 +1594,58 @@ pub fn sell_sigma_or_full(row_nnz: &[usize], c: usize) -> usize {
 /// f32 lanes, σ = 16 — the mid-sweep shape the CSR5 paper's CPU
 /// autotuner most often lands on) when none does.
 fn irregular_kernel(row_nnz: &[usize]) -> PlannedKernel {
+    irregular_kernel_rep(row_nnz, &mut PlanReport::default(), "irregular")
+}
+
+/// [`irregular_kernel`] with the audit recorder threaded through: the
+/// same three-way choice, recording the nnz floor and the σ-autotune
+/// fill outcome. `ctx` names which part of the plan is choosing (the
+/// wholesale matrix, a hub remainder, a DIA remainder).
+fn irregular_kernel_rep(
+    row_nnz: &[usize],
+    rep: &mut PlanReport,
+    ctx: &'static str,
+) -> PlannedKernel {
     let nnz: usize = row_nnz.iter().sum();
     if nnz < CSR5_MIN_NNZ {
+        rep.gate(
+            "nnz-floor",
+            nnz as f64,
+            CSR5_MIN_NNZ as f64,
+            true,
+            format!("{ctx}: below the descriptor floor, nnz-balanced parallel CSR"),
+        );
         return PlannedKernel::CsrParallel;
     }
+    rep.gate(
+        "nnz-floor",
+        nnz as f64,
+        CSR5_MIN_NNZ as f64,
+        false,
+        format!("{ctx}: descriptor formats in play"),
+    );
     match sell_autotune(row_nnz, SELL_CPU_C) {
-        Some(choice) => PlannedKernel::SellCs { c: SELL_CPU_C, sigma: choice.sigma },
-        None => PlannedKernel::Csr5 { omega: 8, sigma: 16 },
+        Some(choice) => {
+            rep.gate(
+                "sell-fill",
+                choice.fill,
+                SELL_MAX_FILL,
+                true,
+                format!("{ctx}: sigma {} bounds the fill", choice.sigma),
+            );
+            PlannedKernel::SellCs { c: SELL_CPU_C, sigma: choice.sigma }
+        }
+        None => {
+            let fill = sell_fill(row_nnz, SELL_CPU_C, row_nnz.len().max(1));
+            rep.gate(
+                "sell-fill",
+                fill,
+                SELL_MAX_FILL,
+                false,
+                format!("{ctx}: no sigma window bounds the fill, CSR5 segmented sum"),
+            );
+            PlannedKernel::Csr5 { omega: 8, sigma: 16 }
+        }
     }
 }
 
@@ -1699,6 +2028,47 @@ mod tests {
         }
         assert!(p.cost(DeviceKind::Cpu).is_some());
         assert!(p.cost(DeviceKind::Pjrt).is_some());
+    }
+
+    #[test]
+    fn audited_plan_matches_unaudited_and_records_the_decision() {
+        // regular non-stencil → csr2 rail: the audit carries the
+        // variance gate and the winner's cost rows
+        let a = gen::alternating_rows::<f32>(64, 5, 11);
+        let (p, rep) = plan_hinted_audited(&a, 8);
+        assert_eq!(p.kernel_label(), plan_hinted(&a, 8).kernel_label());
+        assert_eq!(rep.chosen, p.kernel_label());
+        let var = rep.gates.iter().find(|g| g.gate == "variance").expect("variance gate");
+        assert!(var.fired && var.threshold == REGULARITY_VARIANCE_MAX);
+        // every cost row the plan carries appears as a chosen audit row
+        for &(d, c) in p.costs() {
+            assert!(
+                rep.candidates.iter().any(|r| r.chosen && r.device == d && r.cost == c),
+                "missing audited row for {d:?}"
+            );
+        }
+        let text = rep.render();
+        assert!(text.contains("chosen: csr2"), "{text}");
+        assert!(text.contains("gate variance"), "{text}");
+
+        // irregular → csr5: the sell-fill rejection is on the record
+        let b = gen::power_law::<f32>(600, 8, 1.0, 0x5EED);
+        let (p2, rep2) = plan_hinted_audited(&b, 1);
+        assert_eq!(rep2.chosen, p2.kernel_label());
+        assert!(rep2.gates.iter().any(|g| g.gate == "sell-fill" && !g.fired));
+
+        // sharded: per-shard placement rows plus the chosen ensemble row
+        let (p3, rep3) = plan_sharded_audited(&b, 3, &[DeviceKind::Cpu]);
+        assert_eq!(rep3.chosen, p3.kernel_label());
+        let shard_rows =
+            rep3.candidates.iter().filter(|r| r.candidate.starts_with("shard")).count();
+        assert_eq!(shard_rows, 3);
+        assert!(rep3.candidates.iter().any(|r| r.chosen));
+
+        // a replan over a sharded prior keeps the topology and says so
+        let (p4, rep4) = replan_audited(&b, &p3, 1, &[DeviceKind::Cpu]);
+        assert!(p4.is_sharded());
+        assert!(rep4.gates.iter().any(|g| g.gate == "topology" && g.fired));
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Flight-recorder integration: the observability acceptance path.
+//!
+//! Serves real traffic through [`Server`] and then reconstructs, from
+//! the metrics surface alone, everything the flight recorder promises:
+//! the per-stage latency split of individual requests (the trace ring),
+//! the planner's audited cost table behind every live plan epoch
+//! ([`MatrixEntry::explain`]), and a finite model-vs-measured error
+//! gauge for every (matrix, backend) pair that served a batch — across
+//! a live replan swap, so the audit trail spans epochs.
+//!
+//! [`MatrixEntry::explain`]: csrk::coordinator::MatrixEntry::explain
+
+use std::sync::Arc;
+
+use csrk::coordinator::metrics::TRACE_RING_CAP;
+use csrk::coordinator::trace::STAGES;
+use csrk::coordinator::{
+    Backend, BackendId, CpuBackend, LiveConfig, MatrixRegistry, SellBackend, Server, ServerConfig,
+    Stage,
+};
+use csrk::sparse::{gen, DeltaBatch};
+use csrk::util::ThreadPool;
+
+fn cpu_registry(cfg: LiveConfig) -> Arc<MatrixRegistry> {
+    let pool = Arc::new(ThreadPool::new(2));
+    let backends: Vec<Arc<dyn Backend>> =
+        vec![Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0))];
+    Arc::new(MatrixRegistry::with_live_config(pool, backends, cfg))
+}
+
+/// Submit `count` requests against `name` and wait every one out.
+fn serve(server: &Server, name: &str, ncols: usize, count: usize) {
+    let mut held = Vec::with_capacity(count);
+    for k in 0..count {
+        let x: Vec<f32> = (0..ncols).map(|i| ((i + k) % 7) as f32 - 3.0).collect();
+        held.push(server.submit(name, x).1);
+    }
+    for rx in held {
+        rx.recv().expect("response").result.expect("spmv ok");
+    }
+}
+
+#[test]
+fn served_traffic_leaves_stage_complete_monotone_traces() {
+    let registry = cpu_registry(LiveConfig::default());
+    registry.register("grid", gen::grid2d_5pt::<f32>(24, 24)).unwrap();
+    let server =
+        Server::start(registry, ServerConfig { max_batch: 4, ..ServerConfig::default() });
+    serve(&server, "grid", 576, 24);
+
+    let metrics = server.metrics();
+    let traces = metrics.recent_traces();
+    assert_eq!(traces.len(), 24);
+    for t in &traces {
+        assert_eq!(t.matrix, "grid");
+        assert!(t.ok, "{}", t.render());
+        assert_eq!(t.backend, Some(BackendId::Cpu));
+        // every stage reached, offsets non-decreasing in pipeline order
+        let mut prev = -1.0f64;
+        for s in STAGES {
+            let us = t
+                .stage_us(s)
+                .unwrap_or_else(|| panic!("stage {} unreached: {}", s.name(), t.render()));
+            assert!(us >= prev, "stage {} regressed: {}", s.name(), t.render());
+            prev = us;
+        }
+        // the per-hop split reconstructs the end-to-end latency exactly
+        let sum: f64 = t.deltas_us().iter().map(|(_, d)| d).sum();
+        let total = t.total_us().unwrap();
+        assert!((sum - total).abs() < 1e-6, "{sum} vs {total}");
+        let split = t.queue_us().unwrap() + t.service_us().unwrap();
+        assert!((split - total).abs() < 1e-6, "{split} vs {total}");
+    }
+    // every post-submit hop landed in the stage histograms, once per trace
+    for s in STAGES {
+        if s == Stage::Submit {
+            continue;
+        }
+        assert_eq!(metrics.stage_delta_count(s), 24, "stage {}", s.name());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn flight_recorder_ring_is_bounded_and_keeps_the_newest() {
+    let registry = cpu_registry(LiveConfig::default());
+    registry.register("tiny", gen::grid2d_5pt::<f32>(8, 8)).unwrap();
+    let server = Server::start(registry, ServerConfig::default());
+    // sequential round trips so respond order (= ring order) is the
+    // submit order, then the ring must hold exactly the newest CAP
+    let total = TRACE_RING_CAP + 32;
+    let mut ids = Vec::with_capacity(total);
+    for k in 0..total {
+        let x: Vec<f32> = (0..64).map(|i| ((i + k) % 5) as f32).collect();
+        let (id, rx) = server.submit("tiny", x);
+        rx.recv().unwrap().result.expect("spmv ok");
+        ids.push(id);
+    }
+    let traces = server.metrics().recent_traces();
+    assert_eq!(traces.len(), TRACE_RING_CAP);
+    let kept: Vec<u64> = traces.iter().map(|t| t.id.0).collect();
+    let expect: Vec<u64> = ids[total - TRACE_RING_CAP..].to_vec();
+    assert_eq!(kept, expect, "ring must be oldest-first over the newest {TRACE_RING_CAP}");
+    server.shutdown();
+}
+
+#[test]
+fn every_rail_keeps_a_plan_audit_with_a_priced_winner() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(CpuBackend::with_bandwidth(pool.clone(), 60.0)),
+        Arc::new(SellBackend::new(pool.clone())),
+    ];
+    let registry = Arc::new(MatrixRegistry::with_backends(pool, backends));
+    // one entry per planner rail: DIA stencil, irregular power-law,
+    // hub-split hybrid, SELL-C-σ bands, and a row-shard ensemble
+    registry.register("stencil", gen::grid3d_7pt::<f32>(10, 10, 10)).unwrap();
+    registry.register("power", gen::power_law::<f32>(600, 8, 1.0, 0x5EED)).unwrap();
+    registry.register("hub", gen::circuit::<f32>(24, 24, 0x10AD)).unwrap();
+    registry.register("alt", gen::alternating_rows::<f32>(600, 5, 11)).unwrap();
+    registry.register_sharded("big", gen::grid2d_5pt::<f32>(64, 64), 3).unwrap();
+
+    for name in ["stencil", "power", "hub", "alt", "big"] {
+        let e = registry.get(name).unwrap();
+        let rep = e.plan_report();
+        assert!(!rep.chosen.is_empty(), "{name}: unfinished audit");
+        assert!(!rep.candidates.is_empty(), "{name}: no cost rows");
+        for c in &rep.candidates {
+            assert!(c.cost.is_finite() && c.cost > 0.0, "{name}: bad cost\n{}", rep.render());
+        }
+        assert!(
+            rep.candidates.iter().any(|c| c.chosen),
+            "{name}: no winner row\n{}",
+            rep.render()
+        );
+        if name != "big" {
+            // sharded plans price rows without gate decisions; every
+            // single/hybrid rail passes at least the precision gate
+            assert!(!rep.gates.is_empty(), "{name}: no gates recorded");
+        }
+        assert!(e.explain().contains("epoch 1:"), "{name}: {}", e.explain());
+    }
+    let rep = registry.get("big").unwrap().plan_report();
+    let shard_rows = rep.candidates.iter().filter(|c| c.candidate.starts_with("shard")).count();
+    assert_eq!(shard_rows, 3, "one priced row per shard\n{}", rep.render());
+    assert!(rep.chosen.starts_with("sharded("), "{}", rep.chosen);
+}
+
+#[test]
+fn replan_preserves_the_audit_trail_per_epoch() {
+    let registry = cpu_registry(LiveConfig { auto_replan: false, ..LiveConfig::default() });
+    registry.register("grid", gen::grid2d_5pt::<f32>(24, 24)).unwrap();
+    let e = registry.get("grid").unwrap();
+    let first = e.plan_report();
+    assert!(!first.chosen.is_empty());
+
+    let mut batch = DeltaBatch::new();
+    for r in 0..60 {
+        batch.set(r, r, 9.0);
+    }
+    registry.update("grid", &batch).unwrap();
+    assert_eq!(registry.replan_now("grid").unwrap(), 2);
+    assert_eq!(e.epoch(), 2);
+
+    // both epochs' audits survive the swap, newest is the default
+    let r1 = e.plan_report_at(1).expect("epoch-1 audit retained");
+    assert_eq!(r1.chosen, first.chosen);
+    let r2 = e.plan_report_at(2).expect("epoch-2 audit recorded");
+    assert!(!r2.chosen.is_empty());
+    assert!(r2.candidates.iter().any(|c| c.chosen), "{}", r2.render());
+    assert_eq!(e.plan_report().chosen, r2.chosen);
+
+    let text = e.explain();
+    assert!(text.contains("epoch 1:"), "{text}");
+    assert!(text.contains("epoch 2:"), "{text}");
+    assert!(text.contains("chosen: "), "{text}");
+    assert!(text.contains("gate "), "{text}");
+}
+
+/// The ISSUE acceptance test: serve traffic (including one live-replan
+/// swap), then from the metrics surface alone reconstruct a request's
+/// per-stage latency split, the audited cost table behind both plan
+/// epochs, and a finite model-error gauge for every served (matrix,
+/// backend) pair.
+#[test]
+fn metrics_alone_reconstruct_latency_split_plan_audit_and_model_error() {
+    let registry = cpu_registry(LiveConfig {
+        auto_replan: false,
+        routing_divergence: 1e18,
+        ..LiveConfig::default()
+    });
+    registry.register("stencil", gen::grid2d_5pt::<f32>(24, 24)).unwrap();
+    registry.register("power", gen::power_law::<f32>(600, 8, 1.0, 0x5EED)).unwrap();
+    let server = Server::start(
+        registry.clone(),
+        ServerConfig { max_batch: 4, ..ServerConfig::default() },
+    );
+    let metrics = server.metrics().clone();
+
+    serve(&server, "stencil", 576, 12);
+    serve(&server, "power", 600, 12);
+
+    // the live swap, with the server up: drift the stencil entry and
+    // replan in place, then keep serving on the new epoch
+    let mut batch = DeltaBatch::new();
+    for r in 0..60 {
+        batch.set(r, r, 9.0);
+    }
+    registry.update("stencil", &batch).unwrap();
+    assert_eq!(registry.replan_now("stencil").unwrap(), 2);
+    serve(&server, "stencil", 576, 12);
+
+    // (1) a recent request's full latency split, from the ring alone
+    let traces = metrics.recent_traces();
+    let t = traces
+        .iter()
+        .rev()
+        .find(|t| t.matrix == "stencil")
+        .expect("stencil trace retained");
+    assert!(t.ok, "{}", t.render());
+    assert_eq!(t.backend, Some(BackendId::Cpu));
+    let deltas = t.deltas_us();
+    assert_eq!(deltas.len(), STAGES.len() - 1, "a hop per stage: {}", t.render());
+    let sum: f64 = deltas.iter().map(|(_, d)| d).sum();
+    let total = t.total_us().unwrap();
+    assert!((sum - total).abs() < 1e-6, "{sum} vs {total}");
+
+    // (2) the audited cost table behind both epochs, via explain()
+    let e = registry.get("stencil").unwrap();
+    let text = e.explain();
+    assert!(text.contains("epoch 1:"), "{text}");
+    assert!(text.contains("epoch 2:"), "{text}");
+    assert!(text.contains("chosen: "), "{text}");
+    assert!(text.contains("cost * "), "winner rows must be marked: {text}");
+    let r2 = e.plan_report_at(2).expect("replanned epoch audited");
+    assert!(r2.candidates.iter().any(|c| c.chosen && c.cost.is_finite()), "{}", r2.render());
+
+    // (3) a finite model-error gauge for every served (matrix, backend)
+    for name in ["stencil", "power"] {
+        let err = metrics
+            .model_error(name, BackendId::Cpu)
+            .unwrap_or_else(|| panic!("no model-error gauge for {name}"));
+        assert!(err.is_finite() && err >= 0.0, "{name}: {err}");
+    }
+
+    // (4) the exposition snapshot carries the whole story
+    let prom = metrics.render_text();
+    for needle in [
+        "csrk_requests_total 36\n",
+        "csrk_traces_retained 36\n",
+        "csrk_stage_us_count{stage=\"kernel\"} 36\n",
+        "csrk_stage_us_bucket{stage=\"respond\",le=\"+Inf\"} 36\n",
+        "csrk_model_error{matrix=\"power\",backend=\"cpu\"}",
+        "csrk_model_error{matrix=\"stencil\",backend=\"cpu\"}",
+        "csrk_replans_total{matrix=\"stencil\"} 1\n",
+        "csrk_plan_epoch{matrix=\"stencil\"} 2\n",
+    ] {
+        assert!(prom.contains(needle), "missing {needle:?} in:\n{prom}");
+    }
+    server.shutdown();
+}
